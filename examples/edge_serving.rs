@@ -1,0 +1,127 @@
+//! END-TO-END DRIVER: serve batched requests against the *real* tiny
+//! transformer through the PJRT runtime, with DFTSP admission/batching, and
+//! report latency/throughput. This is the whole stack composing:
+//!
+//!   clients → epoch server (L3, Rust) → DFTSP schedule → PJRT engine
+//!     → AOT HLO (L2 JAX graphs) → Pallas attention (L1) → tokens back
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md.
+//!
+//!   cargo run --release --example edge_serving [-- --epochs 12 --rate 6]
+
+use edgellm::coordinator::Dftsp;
+use edgellm::runtime::{artifacts_available, Engine};
+use edgellm::serving::{EpochServer, ServeOutcome, ServeRequest, ServerConfig};
+use edgellm::util::cli::Args;
+use edgellm::util::fmt;
+use edgellm::util::rng::Rng;
+use edgellm::util::stats::percentile;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.u64_or("epochs", 12);
+    let rate = args.f64_or("rate", 6.0);
+    let clients = args.u64_or("clients", 3);
+    let quant = args.str_or("quant", "W8A16/RTN");
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::load(&dir, &quant).expect("engine load");
+    println!(
+        "loaded {} ({} params order entries) on {}, quant {}",
+        engine.meta.model_name,
+        engine.meta.param_order.len(),
+        engine.platform(),
+        quant
+    );
+
+    let cfg = ServerConfig::default();
+    let epoch_s = cfg.epoch.duration;
+    let mut server = EpochServer::new(engine, cfg, Box::new(Dftsp::new()));
+    let handle = server.handle();
+
+    let horizon = epochs as f64 * epoch_s;
+    println!(
+        "serving {epochs} epochs × {epoch_s}s with {clients} clients at ~{rate} req/s total\n"
+    );
+
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let tx = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xE2E ^ (c * 104729));
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                let mut submitted = 0u64;
+                let t0 = std::time::Instant::now();
+                while t0.elapsed().as_secs_f64() < horizon - 2.0 * epoch_s {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        rng.exponential(rate / clients as f64).min(1.0),
+                    ));
+                    let plen = rng.int_range(4, 48) as usize;
+                    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(512) as i32).collect();
+                    tx.send(ServeRequest {
+                        prompt,
+                        output_tokens: rng.int_range(4, 24) as u32,
+                        latency_req: rng.uniform(1.0, 4.0),
+                        accuracy_req: rng.uniform(0.0, 0.6),
+                        respond: rtx.clone(),
+                    })
+                    .ok();
+                    submitted += 1;
+                }
+                drop(rtx);
+                let responses: Vec<_> = rrx.iter().collect();
+                (submitted, responses)
+            })
+        })
+        .collect();
+
+    server.run_for(epochs);
+    println!("{}", server.metrics.report("edge_serving (DFTSP over PJRT)"));
+
+    let mut latencies = Vec::new();
+    let mut completed = 0u64;
+    let mut late = 0u64;
+    let mut rejected = 0u64;
+    let mut submitted = 0u64;
+    let mut sample_tokens: Option<Vec<i32>> = None;
+    for j in joins {
+        let (sent, responses) = j.join().expect("client join");
+        submitted += sent;
+        for r in responses {
+            match r.outcome {
+                ServeOutcome::Completed => {
+                    completed += 1;
+                    latencies.push(r.latency);
+                    if sample_tokens.is_none() && !r.tokens.is_empty() {
+                        sample_tokens = Some(r.tokens.clone());
+                    }
+                }
+                ServeOutcome::CompletedLate => late += 1,
+                ServeOutcome::Rejected => rejected += 1,
+            }
+        }
+    }
+    println!("client view: submitted {submitted}, completed {completed}, late {late}, rejected {rejected}");
+    if !latencies.is_empty() {
+        println!(
+            "client latency: p50 {}  p95 {}  max {}",
+            fmt::duration(percentile(&latencies, 50.0)),
+            fmt::duration(percentile(&latencies, 95.0)),
+            fmt::duration(percentile(&latencies, 100.0)),
+        );
+        println!(
+            "throughput (client-observed): {:.2} req/s over {horizon:.1}s",
+            completed as f64 / horizon
+        );
+    }
+    if let Some(toks) = sample_tokens {
+        println!("sample generated tokens: {:?}", &toks[..toks.len().min(12)]);
+    }
+    assert!(completed > 0, "end-to-end run must complete some requests");
+    println!("\nEND-TO-END OK: all three layers composed on the request path.");
+}

@@ -1,0 +1,97 @@
+//! Quantization trade-off study on both paths:
+//!   1. analytic — the paper's Table I models under every catalog quant,
+//!      simulated throughput vs accuracy-admission (Fig. 6 in miniature);
+//!   2. real — the tiny model's measured ΔPPL (artifacts/ppl.json) merged
+//!      into the same catalog, plus live generation divergence between
+//!      fp16 and W4A16 weights through the PJRT engine.
+//!
+//!   cargo run --release --example quantization_tradeoff
+
+use edgellm::coordinator::Dftsp;
+use edgellm::model::LlmSpec;
+use edgellm::quant;
+use edgellm::runtime::{artifacts_available, Engine};
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::fmt::Table;
+use edgellm::util::json::Json;
+use std::path::PathBuf;
+
+fn main() {
+    // ---- analytic sweep (paper models) --------------------------------
+    let mut table = Table::new(&[
+        "model",
+        "quant",
+        "dPPL",
+        "throughput (req/s)",
+        "dropped %",
+    ]);
+    for model in [LlmSpec::bloom_3b(), LlmSpec::bloom_7b()] {
+        for q in quant::catalog() {
+            let cfg = SimConfig {
+                model: model.clone(),
+                quant: q.clone(),
+                epochs: 15,
+                seed: 99,
+                ..SimConfig::paper_default()
+            };
+            let m = sim::run(&cfg, &mut Dftsp::new());
+            table.row(&[
+                model.name.clone(),
+                q.label(),
+                format!("{:.2}", q.dppl_for(&model.name)),
+                format!("{:.2}", m.throughput()),
+                format!("{:.1}", 100.0 * m.dropped as f64 / m.offered.max(1) as f64),
+            ]);
+        }
+    }
+    println!("analytic sweep (λ=50 req/s, accuracy req ~ U[0,1]):");
+    print!("{}", table.render());
+
+    // ---- measured dPPL for the tiny real model ------------------------
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ppl_path = dir.join("ppl.json");
+    if let Ok(src) = std::fs::read_to_string(&ppl_path) {
+        let j = Json::parse(&src).expect("ppl.json parses");
+        println!(
+            "\nmeasured PPL of {} (base {:.2}):",
+            j.req_str("model").unwrap_or("?"),
+            j.req_f64("base_ppl").unwrap_or(f64::NAN)
+        );
+        let mut t = Table::new(&["variant", "PPL", "dPPL", "admits a<=f(dPPL)"]);
+        if let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) {
+            for e in entries {
+                let dppl = e.req_f64("dppl").unwrap_or(f64::NAN);
+                t.row(&[
+                    e.req_str("label").unwrap_or("?").to_string(),
+                    format!("{:.3}", e.req_f64("ppl").unwrap_or(f64::NAN)),
+                    format!("{:.4}", dppl),
+                    format!("a <= {:.2}", quant::f_accuracy(dppl)),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+    } else {
+        println!("\n(ppl.json not built — run `make artifacts` for measured dPPL)");
+    }
+
+    // ---- live divergence through PJRT ---------------------------------
+    if artifacts_available(&dir) {
+        let fp = Engine::load_with_variants(&dir, "W16A16", &[1]).expect("fp engine");
+        let w4 = Engine::load_with_variants(&dir, "W4A16/ZQ-Local", &[1]).expect("w4 engine");
+        let prompt = vec![(0..24).map(|i| (i * 13) % 512).collect::<Vec<i32>>()];
+        let (lf, _) = fp.prefill(&prompt).unwrap();
+        let (lq, _) = w4.prefill(&prompt).unwrap();
+        let max_diff = lf[0]
+            .iter()
+            .zip(lq[0].iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let gf = fp.generate_greedy(&prompt, 10, None).unwrap();
+        let gq = w4.generate_greedy(&prompt, 10, None).unwrap();
+        println!("\nlive PJRT check: max |logit(fp16) − logit(W4A16)| = {max_diff:.4}");
+        println!("  fp16 tokens:  {:?}", gf[0]);
+        println!("  W4A16 tokens: {:?}", gq[0]);
+    } else {
+        println!("\n(artifacts not built — skipping live PJRT check)");
+    }
+}

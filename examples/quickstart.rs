@@ -1,0 +1,99 @@
+//! Quickstart: schedule one epoch of synthetic requests with DFTSP and the
+//! two baselines, printing who got scheduled and why.
+//!
+//!   cargo run --release --example quickstart
+
+use edgellm::cluster::ClusterSpec;
+use edgellm::coordinator::{
+    Dftsp, EpochParams, NoBatching, ProblemInstance, Scheduler, StaticBatching,
+};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant;
+use edgellm::request::{EpochRequest, RequestBuilder};
+use edgellm::util::fmt::Table;
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{ChannelParams, RadioParams};
+
+fn main() {
+    // The paper's default deployment: BLOOM-3B, W8A16, 20 Jetson TX2s.
+    let inst = ProblemInstance::new(
+        CostModel::new(LlmSpec::bloom_3b()),
+        quant::default_quant(),
+        ClusterSpec::paper_default(),
+        EpochParams::default(),
+        512,
+        0.0,
+    );
+
+    // 32 synthetic requests in the paper's §IV distributions.
+    let mut rng = Rng::new(42);
+    let mut builder = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let channel = ChannelParams::default();
+    let levels = [128u32, 256, 512];
+    let requests: Vec<EpochRequest> = (0..32)
+        .map(|_| {
+            let req = builder.build(
+                -rng.uniform(0.0, 2.0), // arrived during the previous epoch
+                *rng.choice(&levels),
+                *rng.choice(&levels),
+                rng.uniform(0.5, 2.0),
+                rng.uniform(0.0, 1.0),
+            );
+            let h = channel.draw_h(&mut rng);
+            EpochRequest::annotate(req, h, &radio, inst.epoch.t_u, inst.epoch.t_d)
+        })
+        .collect();
+
+    println!(
+        "epoch 0: {} candidate requests, model {}, quant {} (alpha {:.2}, beta {:.2})\n",
+        requests.len(),
+        inst.cost.spec.name,
+        inst.quant.label(),
+        inst.quant.alpha,
+        inst.quant.beta,
+    );
+
+    let mut table = Table::new(&[
+        "scheduler",
+        "batch",
+        "compute time (s)",
+        "uplink used",
+        "downlink used",
+        "nodes visited",
+    ]);
+    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Dftsp::new()),
+        Box::new(StaticBatching::new()),
+        Box::new(NoBatching::new()),
+    ];
+    for s in schedulers.iter_mut() {
+        let sched = s.schedule(&inst, &requests);
+        table.row(&[
+            s.name().to_string(),
+            sched.batch_size().to_string(),
+            format!("{:.3}", sched.compute_time),
+            format!("{:.3}", sched.rho_u_total),
+            format!("{:.3}", sched.rho_d_total),
+            sched.stats.nodes_visited.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Show DFTSP's chosen set in detail.
+    let sched = Dftsp::new().schedule(&inst, &requests);
+    println!("\nDFTSP selected {} requests:", sched.batch_size());
+    for r in &requests {
+        if sched.scheduled.contains(&r.id()) {
+            println!(
+                "  req {:>2}: s={:>3} n={:>3} tau={:.2}s a={:.2} rho_u={:.5}",
+                r.id(),
+                r.req.prompt_tokens,
+                r.req.output_tokens,
+                r.req.latency_req,
+                r.req.accuracy_req,
+                r.rho_min_u
+            );
+        }
+    }
+}

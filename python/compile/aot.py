@@ -1,0 +1,202 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts the Rust runtime
+loads via the `xla` crate's PJRT CPU client.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (gitignored, rebuilt by `make artifacts`):
+  prefill_b{B}.hlo.txt / decode_b{B}.hlo.txt   one per batch-size variant
+  weights_<variant>.bin                         one per quantization variant
+  quant_matmul_demo.hlo.txt                     int8-weight Pallas kernel demo
+  meta.json                                     dims + manifest
+  ppl.json                                      measured ΔPPL per variant
+
+Python runs exactly once at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import ppl as PPL
+from compile import quantize as Q
+
+BATCH_VARIANTS = [1, 2, 4, 8]
+WEIGHT_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text.
+
+    return_tuple=False: each function output becomes its own PJRT output
+    buffer on the Rust side, which lets the runtime keep the KV cache
+    device-resident across decode steps (§Perf: the before/after in
+    EXPERIMENTS.md) instead of paying a host round-trip per token."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path, cfg, params):
+    """Custom container (no npz dependency on the Rust side):
+    magic 'ELLM', u32 version, u32 tensor count, then per tensor:
+    u32 name_len, name utf-8, u8 dtype (0=f32, 1=i32), u32 ndim,
+    u32 dims…, u64 payload bytes, raw little-endian data."""
+    with open(path, "wb") as f:
+        f.write(b"ELLM")
+        f.write(struct.pack("<II", 1, len(cfg.param_order())))
+        for name in cfg.param_order():
+            w = np.ascontiguousarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", 0, w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<I", d))
+            payload = w.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def export_model(outdir, cfg):
+    manifest = {"programs": [], "weights": []}
+    for b in BATCH_VARIANTS:
+        for phase, make in [
+            ("prefill", M.make_prefill_fn),
+            ("decode", M.make_decode_fn),
+        ]:
+            fn = make(cfg, use_pallas=True)
+            args = M.example_args(cfg, b, phase)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{phase}_b{b}.hlo.txt"
+            with open(os.path.join(outdir, fname), "w") as f:
+                f.write(text)
+            manifest["programs"].append({"phase": phase, "batch": b, "file": fname})
+            print(f"  {fname}: {len(text)} chars")
+    return manifest
+
+
+def export_weights(outdir, cfg):
+    fp_params = M.init_params(cfg, WEIGHT_SEED)
+    entries = []
+    for label in Q.VARIANTS:
+        qp = Q.quantize_params(fp_params, label)
+        fname = Q.variant_filename(label)
+        write_weights_bin(os.path.join(outdir, fname), cfg, qp)
+        entries.append({"label": label, "file": fname})
+        print(f"  {fname}")
+    return entries
+
+
+def export_quant_matmul_demo(outdir, cfg):
+    """A standalone HLO for the int8-weight Pallas matmul: proves the
+    quantized compute path lowers and runs under the Rust PJRT client."""
+    from compile.kernels.quant_matmul import quant_matmul
+
+    m, k, n, g = 8, cfg.d_model, cfg.d_ff, 32
+
+    def fn(x, wq, scales):
+        return (quant_matmul(x, wq, scales, group_size=g),)
+
+    args = [
+        jax.ShapeDtypeStruct((m, k), np.float32),
+        jax.ShapeDtypeStruct((k, n), np.int8),
+        jax.ShapeDtypeStruct((k // g, n), np.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    fname = "quant_matmul_demo.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {"file": fname, "m": m, "k": k, "n": n, "group": g}
+
+
+def export_golden(outdir, cfg):
+    """Golden outputs for the Rust runtime's end-to-end numerics test: a
+    fixed prompt batch, the first prefill logits, and greedy continuations,
+    computed through the same Pallas path the HLO was lowered from."""
+    rng = np.random.default_rng(123)
+    n = 3
+    lengths = np.array([5, 17, cfg.max_prompt], dtype=np.int32)
+    prompts = np.zeros((n, cfg.max_prompt), dtype=np.int32)
+    for i, L in enumerate(lengths):
+        prompts[i, :L] = rng.integers(0, cfg.vocab, size=L)
+
+    params = M.init_params(M.ModelConfig(), WEIGHT_SEED)
+    plist = M.params_to_list(cfg, params)
+    logits, _, _ = M.prefill(cfg, prompts, lengths, plist, use_pallas=True)
+    gen = M.greedy_generate(cfg, plist, prompts, lengths, 8, use_pallas=True)
+
+    golden = {
+        "prompts": [prompts[i, : int(lengths[i])].tolist() for i in range(n)],
+        "prefill_logits_head": np.asarray(logits)[:, :8].tolist(),
+        "greedy_tokens": np.asarray(gen).tolist(),
+    }
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print("  golden.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--skip-ppl", action="store_true", help="skip ΔPPL measurement")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    print("exporting HLO programs…")
+    manifest = export_model(outdir, cfg)
+    print("exporting weight variants…")
+    manifest["weights"] = export_weights(outdir, cfg)
+    print("exporting quantized-matmul demo…")
+    manifest["quant_matmul_demo"] = export_quant_matmul_demo(outdir, cfg)
+    print("exporting golden outputs…")
+    export_golden(outdir, cfg)
+    print("training BPE tokenizer…")
+    from compile import tokenizer as T
+    T.export(os.path.join(outdir, "bpe.json"), vocab_size=cfg.vocab)
+
+    if not args.skip_ppl:
+        print("measuring ΔPPL…")
+        payload = PPL.measure_all(cfg, seed=WEIGHT_SEED)
+        with open(os.path.join(outdir, "ppl.json"), "w") as f:
+            json.dump(payload, f, indent=2)
+        for e in payload["entries"]:
+            print(f"  {e['label']:<16} dPPL {e['dppl']:.4f}")
+
+    meta = {
+        "model_name": PPL.MODEL_NAME,
+        "vocab": cfg.vocab,
+        "layers": cfg.layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "max_prompt": cfg.max_prompt,
+        "max_seq": cfg.max_seq,
+        "logit_scale": cfg.logit_scale,
+        "batch_variants": BATCH_VARIANTS,
+        "param_order": cfg.param_order(),
+        **manifest,
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {outdir}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

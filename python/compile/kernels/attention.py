@@ -1,0 +1,110 @@
+"""L1 Pallas attention kernels (Initial Stage + Auto-regressive Stage).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+CUDA GPUs; on TPU the same insight — keep the KV working set in fast
+memory while streaming queries — maps to VMEM tiling via BlockSpec. Each
+grid cell (b, h) stages one head's Q/K/V tile in VMEM and feeds the MXU
+with [S, Dh] x [Dh, S] matmuls. Dh = 64 and S padded to a multiple of 8
+keep tiles MXU-aligned (8x128 lanes).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+program runs under the Rust runtime. On a real TPU the identical kernel
+body compiles natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (batch, head) cell: causal+length-masked attention over [S, Dh]."""
+    q = q_ref[0, 0]  # [S, Dh]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    length = len_ref[0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T) * scale  # [S, S] — MXU matmul
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    mask = (cols <= rows) & (cols < length)
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(w, v)  # [S, Dh] — MXU matmul
+
+
+def attention_prefill(q, k, v, lengths):
+    """Pallas batched prefill attention.
+
+    q, k, v: [B, H, S, Dh]; lengths: [B]. Returns [B, H, S, Dh].
+    Grid = (B, H); each cell holds one head's S x Dh tiles in VMEM
+    (S=64, Dh=64 fp32 => 3 x 16 KiB in, 16 KiB out — far under the ~16 MiB
+    VMEM budget, leaving room for double buffering).
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(_prefill_kernel, scale=scale)
+    qkv_spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # lengths[b]
+            qkv_spec,
+            qkv_spec,
+            qkv_spec,
+        ],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        interpret=True,
+    )(lengths, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (batch, head) cell: single query against the padded KV cache."""
+    q = q_ref[0, 0]  # [1, Dh]
+    k = k_ref[0, 0]  # [T, Dh]
+    v = v_ref[0, 0]
+    pos = pos_ref[0]
+    t = k.shape[0]
+    scores = jnp.dot(q, k.T) * scale  # [1, T]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    scores = jnp.where(slots <= pos, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(w, v)  # [1, Dh]
+
+
+def attention_decode(q, k_cache, v_cache, pos):
+    """Pallas decode attention.
+
+    q: [B, H, Dh]; k_cache, v_cache: [B, H, T, Dh]; pos: [B].
+    Returns [B, H, Dh]. Grid = (B, H); the KV tile [T, Dh] dominates VMEM
+    (T=128, Dh=64 fp32 => 32 KiB per operand).
+    """
+    b, h, dh = q.shape
+    t = k_cache.shape[2]
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # pos[b]
+            pl.BlockSpec((1, 1, 1, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), q.dtype),
+        interpret=True,
+    )(pos, q[:, :, None, :], k_cache, v_cache)
+    return out[:, :, 0, :]

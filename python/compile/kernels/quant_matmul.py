@@ -1,0 +1,47 @@
+"""L1 Pallas quantized-weight matmul: int-quantized weights dequantized in
+VMEM and fed to the MXU at fp precision (W8A16/W4A16-style compute).
+
+TPU adaptation of the GPU dequant-in-shared-memory pattern: the quantized
+weight tile and its group scales are staged in VMEM (BlockSpec), expanded to
+fp32 in-register, and consumed by a single MXU matmul per grid cell. The
+weight tile at int8 is half the bytes of fp16 — exactly the α memory saving
+the scheduler models — and the dequant is elementwise (VPU) work fully
+overlapped with the matmul on real hardware.
+
+interpret=True for CPU-PJRT executability (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_matmul_kernel(x_ref, wq_ref, scale_ref, o_ref, *, group_size):
+    x = x_ref[...]  # [M, K]
+    wq = wq_ref[...]  # [K, N] int8
+    scales = scale_ref[...]  # [K // group_size, N]
+    k, n = wq.shape
+    groups = k // group_size
+    w = wq.astype(x.dtype).reshape(groups, group_size, n) * scales[:, None, :]
+    o_ref[...] = jnp.dot(x, w.reshape(k, n))
+
+
+def quant_matmul(x, w_q, scales, group_size=32):
+    """x: [M, K] fp; w_q: [K, N] int8; scales: [K//group_size, N] fp.
+
+    Returns [M, N] = x @ dequant(w_q). Single grid cell: the tiny model's
+    largest weight (K=1024, N=256 at int8 = 256 KiB) fits VMEM whole; larger
+    models would tile N via the BlockSpec index map.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert k % group_size == 0, "K must be divisible by group_size"
+    kernel = functools.partial(_quant_matmul_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w_q, scales)

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Everything here is deliberately naive and obviously-correct; pytest compares
+the Pallas kernels and the full L2 model against these references.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_prefill_ref(q, k, v, lengths):
+    """Masked causal attention over a whole prompt (Initial Stage).
+
+    q, k, v: [B, H, S, Dh]; lengths: [B] valid prompt lengths.
+    Returns [B, H, S, Dh]. Positions >= lengths[b] attend to nothing valid
+    but still produce rows (they are ignored downstream).
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    pos = jnp.arange(s)
+    causal = pos[None, :] <= pos[:, None]  # [S_q, S_k]
+    valid = pos[None, None, None, :] < lengths[:, None, None, None]  # key validity
+    mask = causal[None, None, :, :] & valid
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def attention_decode_ref(q, k_cache, v_cache, pos):
+    """Single-token attention against a padded KV cache (Auto-regressive
+    Stage).
+
+    q: [B, H, Dh]; k_cache, v_cache: [B, H, T, Dh]; pos: [B] index of the
+    query token (attends to cache slots 0..pos inclusive).
+    Returns [B, H, Dh].
+    """
+    b, h, t, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhd,bhtd->bht", q, k_cache) * scale
+    slot = jnp.arange(t)
+    mask = slot[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bht,bhtd->bhd", weights, v_cache)
+
+
+def quant_matmul_ref(x, w_q, scales, group_size):
+    """Quantized-weight matmul reference: dequantize then matmul.
+
+    x: [M, K] float; w_q: [K, N] int8 (or any int); scales: [K // group_size, N]
+    per-(input-group, output-channel) scales. Returns x @ dequant(w_q).
+    """
+    k, n = w_q.shape
+    groups = k // group_size
+    w = w_q.astype(x.dtype).reshape(groups, group_size, n) * scales[:, None, :]
+    return x @ w.reshape(k, n)
+
+
+def decoder_layer_ref(x, wq, wk, wv, wo, w1, w2, lengths):
+    """One transformer decoder layer exactly as written in paper §II-B(2):
+
+      X_out  = softmax(X_Q X_K^T / sqrt(d_h)) X_V w_O + X
+      X_next = relu(X_out w_1) w_2 + X_out
+
+    x: [B, S, Dm]. Multi-head splitting uses Dm = H * Dh with Dh = 64
+    (the tiny model's head size).
+    """
+    b, s, dm = x.shape
+    dh = min(64, dm)
+    h = dm // dh
+    q = (x @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    att = attention_prefill_ref(q, k, v, lengths)
+    att = att.transpose(0, 2, 1, 3).reshape(b, s, dm)
+    x_out = att @ wo + x
+    return jnp.maximum(x_out @ w1, 0.0) @ w2 + x_out

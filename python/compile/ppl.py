@@ -1,0 +1,110 @@
+"""ΔPPL measurement for the tiny real model — the build-time realization of
+the paper's "measured via offline exhaustive evaluations on diverse
+datasets" pipeline ([10], Table II).
+
+Evaluation corpus: sequences sampled (temperature 1) from the fp16 model
+itself — self-generated text is the synthetic stand-in for in-distribution
+data, giving the fp model a meaningful (low) perplexity baseline that
+quantization noise then degrades. ΔPPL = PPL(quantized) − PPL(fp) per
+variant is written to artifacts/ppl.json and loaded by the Rust quant
+catalog (`quant::merge_measured_dppl`), so the measured values flow through
+the identical admission path as the paper's Table II numbers.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import quantize as Q
+
+MODEL_NAME = "tiny-decoder"
+
+
+def sample_corpus(cfg, params_list, n_seqs=16, prompt_len=8, gen_len=48, seed=7):
+    """Temperature-1 sampling from the fp model: returns token matrix
+    [n_seqs, prompt_len + gen_len] and the prompt length."""
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab, size=(n_seqs, cfg.max_prompt)).astype(np.int32)
+    lengths = np.full((n_seqs,), prompt_len, dtype=np.int32)
+
+    logits, k, v = M.prefill(cfg, prompts, lengths, params_list, use_pallas=False)
+    pos = lengths.copy()
+    toks = [prompts[:, :prompt_len]]
+    key = jax.random.PRNGKey(seed)
+    token = None
+    for step in range(gen_len):
+        key, sub = jax.random.split(key)
+        token = jax.random.categorical(sub, logits, axis=-1).astype(jnp.int32)
+        toks.append(np.asarray(token)[:, None])
+        logits, k, v = M.decode_step(cfg, token, pos, k, v, params_list, use_pallas=False)
+        pos = pos + 1
+    return np.concatenate(toks, axis=1), prompt_len
+
+
+def perplexity(cfg, params_list, corpus, prompt_len):
+    """Teacher-forced next-token perplexity of `params_list` on `corpus`,
+    scored on the generated region only."""
+    n, total = corpus.shape
+    s = cfg.max_prompt
+    # Teacher forcing via repeated decode steps (exact same code path the
+    # serving engine uses).
+    prompts = np.zeros((n, s), dtype=np.int32)
+    prompts[:, :prompt_len] = corpus[:, :prompt_len]
+    lengths = np.full((n,), prompt_len, dtype=np.int32)
+    logits, k, v = M.prefill(cfg, prompts, lengths, params_list, use_pallas=False)
+    pos = lengths.copy()
+    nll = []
+    for t in range(prompt_len, total):
+        target = corpus[:, t]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll.append(-np.asarray(logp[np.arange(n), target]))
+        logits, k, v = M.decode_step(
+            cfg, jnp.asarray(target), pos, k, v, params_list, use_pallas=False
+        )
+        pos = pos + 1
+    ce = float(np.mean(np.stack(nll)))
+    return float(np.exp(ce))
+
+
+def measure_all(cfg=None, seed=0):
+    """Measure PPL for every quant variant; returns the ppl.json payload."""
+    cfg = cfg or M.ModelConfig()
+    fp_params = M.init_params(cfg, seed)
+    fp_list = M.params_to_list(cfg, fp_params)
+    corpus, prompt_len = sample_corpus(cfg, fp_list)
+
+    base_ppl = perplexity(cfg, fp_list, corpus, prompt_len)
+    entries = []
+    for label in Q.VARIANTS:
+        qp = Q.quantize_params(fp_params, label)
+        ql = M.params_to_list(cfg, qp)
+        p = perplexity(cfg, ql, corpus, prompt_len)
+        entries.append(
+            {
+                "label": label,
+                "ppl": p,
+                "dppl": max(0.0, p - base_ppl),
+            }
+        )
+    return {
+        "model": MODEL_NAME,
+        "base_ppl": base_ppl,
+        "entries": entries,
+    }
+
+
+def main(out_path="../artifacts/ppl.json"):
+    payload = measure_all()
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"base PPL {payload['base_ppl']:.3f}")
+    for e in payload["entries"]:
+        print(f"  {e['label']:<18} PPL {e['ppl']:.3f}  dPPL {e['dppl']:.4f}")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Post-training weight quantization (build-time) — the paper's §II-B(3)
+quantization model made concrete for the tiny real model.
+
+Two PTQ styles stand in for the paper's Table II methods, differing (as in
+the paper) only in their tensor-rounding strategy at identical precision:
+
+- "gptq"    — fine-grained grouping (group size 32) with sequential error
+              feedback along the input dimension, a Hessian-free stand-in
+              for GPTQ's error-compensated rounding.
+- "zq-local" — ZeroQuant-style local grouping, coarser groups (size 256),
+              plain round-to-nearest inside each group.
+- "rtn"     — per-tensor round-to-nearest (the crudest baseline).
+
+All methods are *fake-quant*: weights are quantized then dequantized back to
+f32 so every variant shares one HLO program and differs only in the weight
+payload (`weights_<variant>.bin`). The real int8 compute path is exercised
+separately by kernels/quant_matmul.py.
+"""
+
+import numpy as np
+
+GROUP_GPTQ = 32
+GROUP_ZQ = 256
+
+
+def _qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def quantize_rtn(w: np.ndarray, bits: int) -> np.ndarray:
+    """Per-tensor symmetric round-to-nearest fake-quant."""
+    qmax = _qmax(bits)
+    scale = np.abs(w).max() / qmax
+    if scale == 0.0:
+        return w.copy()
+    return np.clip(np.round(w / scale), -qmax - 1, qmax) * scale
+
+
+def _grouped_scales(w: np.ndarray, bits: int, group: int) -> np.ndarray:
+    """Per-(input-group, output-channel) scales for a [K, N] weight."""
+    k, n = w.shape
+    g = max(1, min(group, k))
+    while k % g != 0:
+        g -= 1
+    groups = k // g
+    scales = np.abs(w).reshape(groups, g, n).max(axis=1) / _qmax(bits)
+    return np.where(scales == 0.0, 1.0, scales), g
+
+
+def quantize_grouped(w: np.ndarray, bits: int, group: int, error_feedback: bool):
+    """Group-wise symmetric fake-quant, optionally with sequential error
+    feedback along K (each row's rounding error is folded into the next row
+    before it is rounded — the GPTQ-style compensation).
+
+    Returns (dequantized weights, int codes, scales, actual group size).
+    """
+    assert w.ndim == 2, "grouped quantization expects [K, N]"
+    k, n = w.shape
+    qmax = _qmax(bits)
+    scales, g = _grouped_scales(w, bits, group)
+    groups = k // g
+    scale_rows = np.repeat(scales, g, axis=0)  # [K, N]
+    if not error_feedback:
+        codes = np.clip(np.round(w / scale_rows), -qmax - 1, qmax)
+    else:
+        codes = np.empty_like(w)
+        err = np.zeros((n,), dtype=w.dtype)
+        for i in range(k):
+            target = w[i] + err
+            c = np.clip(np.round(target / scale_rows[i]), -qmax - 1, qmax)
+            codes[i] = c
+            err = target - c * scale_rows[i]
+    dq = codes * scale_rows
+    return dq, codes.astype(np.int8 if bits <= 8 else np.int32), scales, g
+
+
+def fake_quant(w: np.ndarray, bits: int, method: str) -> np.ndarray:
+    """Quantize-dequantize a weight tensor with the named method."""
+    if bits >= 16 or method == "none":
+        return w.copy()
+    if w.ndim != 2:
+        return quantize_rtn(w, bits)
+    if method == "rtn":
+        return quantize_rtn(w, bits)
+    if method == "gptq":
+        return quantize_grouped(w, bits, GROUP_GPTQ, error_feedback=True)[0]
+    if method == "zq-local":
+        return quantize_grouped(w, bits, GROUP_ZQ, error_feedback=False)[0]
+    raise ValueError(f"unknown quantization method `{method}`")
+
+
+#: The weight variants shipped as artifacts: label -> (bits, method).
+VARIANTS = {
+    "W16A16": (16, "none"),
+    "W8A16/GPTQ": (8, "gptq"),
+    "W8A16/ZQ-Local": (8, "zq-local"),
+    "W8A16/RTN": (8, "rtn"),
+    "W4A16/GPTQ": (4, "gptq"),
+    "W4A16/ZQ-Local": (4, "zq-local"),
+}
+
+
+def variant_filename(label: str) -> str:
+    """`W4A16/GPTQ` -> `weights_w4a16_gptq.bin`."""
+    return "weights_" + label.lower().replace("/", "_").replace("-", "") + ".bin"
+
+
+def quantize_params(params: dict, label: str) -> dict:
+    """Apply a variant to every weight tensor of the model (embeddings are
+    kept fp16-precision, matching common practice and the paper's focus on
+    decoder-layer weights)."""
+    bits, method = VARIANTS[label]
+    out = {}
+    for name, w in params.items():
+        if name == "embed" or bits >= 16:
+            out[name] = w.copy()
+        else:
+            out[name] = fake_quant(w, bits, method)
+    return out

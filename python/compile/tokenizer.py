@@ -1,0 +1,116 @@
+"""Byte-Pair Encoding tokenizer (build-time trainer) — paper §IV: "We use
+Byte-Pair Encoding (BPE) tokenization, with each token as a 2-byte index."
+
+Trains a byte-level BPE vocabulary on a small synthetic corpus and exports
+`artifacts/bpe.json` (merges in rank order + vocab strings). The Rust side
+(`rust/src/tokenizer/`) implements the matching encoder/decoder so the
+serving examples can accept *text* instead of raw token ids; cross-language
+agreement is tested via golden pairs embedded in the artifact.
+"""
+
+import json
+
+#: A tiny deterministic corpus: enough structure for BPE to find useful
+#: merges (repeated words, morphology) without shipping a dataset.
+CORPUS = (
+    "the edge node schedules batched inference for large language models. "
+    "the scheduler maximizes throughput while meeting latency and accuracy "
+    "requirements. quantization reduces memory and latency at some accuracy "
+    "cost. requests arrive with prompts and desired output lengths. "
+    "the wireless uplink and downlink carry prompts and outputs. "
+    "batching amortizes weight loading across requests. "
+) * 4
+
+
+def train_bpe(corpus: str, vocab_size: int):
+    """Classic byte-level BPE: start from the 256 byte tokens, repeatedly
+    merge the most frequent adjacent pair. Returns (merges, vocab) where
+    merges is a rank-ordered list of (left_id, right_id) and vocab maps
+    token id -> bytes."""
+    assert vocab_size >= 256
+    data = corpus.encode("utf-8")
+    ids = list(data)
+    vocab = {i: bytes([i]) for i in range(256)}
+    merges = []
+    next_id = 256
+    while next_id < vocab_size:
+        counts = {}
+        for a, b in zip(ids, ids[1:]):
+            counts[(a, b)] = counts.get((a, b), 0) + 1
+        if not counts:
+            break
+        (a, b), freq = max(counts.items(), key=lambda kv: (kv[1], -kv[0][0], -kv[0][1]))
+        if freq < 2:
+            break
+        merges.append((a, b))
+        vocab[next_id] = vocab[a] + vocab[b]
+        # apply the merge
+        out = []
+        i = 0
+        while i < len(ids):
+            if i + 1 < len(ids) and ids[i] == a and ids[i + 1] == b:
+                out.append(next_id)
+                i += 2
+            else:
+                out.append(ids[i])
+                i += 1
+        ids = out
+        next_id += 1
+    return merges, vocab
+
+
+def encode(text: str, merges):
+    """Encode by applying merges in rank order (reference implementation the
+    Rust encoder must match)."""
+    ids = list(text.encode("utf-8"))
+    rank = {pair: i for i, pair in enumerate(merges)}
+    while len(ids) >= 2:
+        best = None
+        best_rank = None
+        for pair in zip(ids, ids[1:]):
+            r = rank.get(pair)
+            if r is not None and (best_rank is None or r < best_rank):
+                best, best_rank = pair, r
+        if best is None:
+            break
+        a, b = best
+        merged = 256 + best_rank
+        out = []
+        i = 0
+        while i < len(ids):
+            if i + 1 < len(ids) and ids[i] == a and ids[i + 1] == b:
+                out.append(merged)
+                i += 2
+            else:
+                out.append(ids[i])
+                i += 1
+        ids = out
+    return ids
+
+
+def decode(ids, vocab):
+    return b"".join(vocab[i] for i in ids).decode("utf-8", errors="replace")
+
+
+def export(out_path: str, vocab_size: int = 512):
+    merges, vocab = train_bpe(CORPUS, vocab_size)
+    goldens = [
+        "the scheduler maximizes throughput.",
+        "quantization reduces memory!",
+        "edge LLM inference",
+        "hello world",
+    ]
+    payload = {
+        "vocab_size": 256 + len(merges),
+        "merges": [[a, b] for a, b in merges],
+        # goldens let the Rust tests prove byte-exact agreement
+        "goldens": [{"text": t, "ids": encode(t, merges)} for t in goldens],
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f)
+    print(f"  bpe.json: {256 + len(merges)} tokens, {len(merges)} merges")
+    return merges, vocab
+
+
+if __name__ == "__main__":
+    export("../artifacts/bpe.json")

@@ -1,0 +1,116 @@
+"""AOT artifact integrity: HLO text is well-formed for the xla-crate parser,
+the weights container round-trips, and meta.json describes what exists.
+
+These run against a freshly-exported artifact set in a temp directory, so
+they are independent of (and validate the code path behind) `make
+artifacts`.
+"""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import quantize as Q
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = M.ModelConfig()
+    manifest = aot.export_model(str(out), cfg)
+    manifest["weights"] = aot.export_weights(str(out), cfg)
+    (out / "manifest.json").write_text(json.dumps(manifest))
+    return out
+
+
+def read_weights_bin(path):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"ELLM"
+    version, count = struct.unpack_from("<II", data, 4)
+    off = 12
+    tensors = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode()
+        off += nlen
+        dtype, ndim = struct.unpack_from("<BI", data, off)
+        off += 5
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        (nbytes,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        arr = np.frombuffer(data[off : off + nbytes], dtype=np.float32).reshape(dims)
+        off += nbytes
+        tensors[name] = arr
+    assert off == len(data), "trailing bytes in container"
+    return tensors
+
+
+def test_hlo_text_wellformed(artifact_dir):
+    cfg = M.ModelConfig()
+    for b in aot.BATCH_VARIANTS:
+        for phase in ["prefill", "decode"]:
+            text = (artifact_dir / f"{phase}_b{b}.hlo.txt").read_text()
+            assert text.startswith("HloModule"), f"{phase}_b{b}"
+            assert "ENTRY" in text
+            # the tuple-return convention the Rust loader expects
+            assert "ROOT" in text
+
+
+def test_prefill_hlo_mentions_expected_shapes(artifact_dir):
+    cfg = M.ModelConfig()
+    text = (artifact_dir / "prefill_b4.hlo.txt").read_text()
+    # tokens input and logits output shapes appear
+    assert f"s32[4,{cfg.max_prompt}]" in text
+    assert f"f32[4,{cfg.vocab}]" in text
+    # KV cache output
+    assert f"f32[{cfg.layers},4,{cfg.n_heads},{cfg.max_seq},{cfg.d_head}]" in text
+
+
+def test_weights_container_roundtrip(artifact_dir):
+    cfg = M.ModelConfig()
+    fp = M.init_params(cfg, aot.WEIGHT_SEED)
+    tensors = read_weights_bin(artifact_dir / Q.variant_filename("W16A16"))
+    assert set(tensors) == set(cfg.param_order())
+    for name in cfg.param_order():
+        np.testing.assert_array_equal(tensors[name], fp[name])
+
+
+def test_quantized_weights_differ_from_fp(artifact_dir):
+    fp = read_weights_bin(artifact_dir / Q.variant_filename("W16A16"))
+    w4 = read_weights_bin(artifact_dir / Q.variant_filename("W4A16/GPTQ"))
+    diffs = [np.abs(fp[n] - w4[n]).max() for n in fp if n != "embed"]
+    assert max(diffs) > 1e-4
+
+
+def test_all_variants_exported(artifact_dir):
+    for label in Q.VARIANTS:
+        assert (artifact_dir / Q.variant_filename(label)).exists(), label
+
+
+def test_meta_json_of_make_artifacts():
+    """If the real artifacts/ directory exists (built by `make artifacts`),
+    its meta.json must be consistent with the code's configuration."""
+    repo_meta = os.path.join(os.path.dirname(__file__), "../../artifacts/meta.json")
+    if not os.path.exists(repo_meta):
+        pytest.skip("artifacts/ not built")
+    meta = json.load(open(repo_meta))
+    cfg = M.ModelConfig()
+    assert meta["vocab"] == cfg.vocab
+    assert meta["layers"] == cfg.layers
+    assert meta["d_model"] == cfg.d_model
+    assert meta["param_order"] == cfg.param_order()
+    assert sorted(meta["batch_variants"]) == sorted(aot.BATCH_VARIANTS)
+    for prog in meta["programs"]:
+        assert os.path.exists(
+            os.path.join(os.path.dirname(repo_meta), prog["file"])
+        ), prog["file"]

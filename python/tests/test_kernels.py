@@ -1,0 +1,188 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles — the core signal.
+
+hypothesis sweeps shapes/lengths/positions; fixed-seed numpy supplies the
+tensors (deterministic, independent of hypothesis' data strategy).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import quant_matmul as QM
+from compile.kernels import ref as R
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- prefill
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s=st.sampled_from([8, 16, 64]),
+    dh=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_matches_ref_swept(b, h, s, dh, seed):
+    q = rand(b, h, s, dh, seed=seed)
+    k = rand(b, h, s, dh, seed=seed + 1)
+    v = rand(b, h, s, dh, seed=seed + 2)
+    rng = np.random.default_rng(seed + 3)
+    lengths = rng.integers(1, s + 1, size=(b,)).astype(np.int32)
+    got = A.attention_prefill(q, k, v, lengths)
+    want = R.attention_prefill_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_full_lengths():
+    b, h, s, dh = 2, 4, 64, 64
+    q, k, v = rand(b, h, s, dh), rand(b, h, s, dh), rand(b, h, s, dh)
+    lengths = np.array([s, s], dtype=np.int32)
+    got = A.attention_prefill(q, k, v, lengths)
+    want = R.attention_prefill_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_causality():
+    """Changing future keys/values must not change earlier outputs."""
+    b, h, s, dh = 1, 2, 16, 16
+    q, k, v = rand(b, h, s, dh), rand(b, h, s, dh), rand(b, h, s, dh)
+    lengths = np.array([s], dtype=np.int32)
+    base = np.asarray(A.attention_prefill(q, k, v, lengths))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, s - 1] += 10.0
+    v2[:, :, s - 1] -= 5.0
+    pert = np.asarray(A.attention_prefill(q, k2, v2, lengths))
+    np.testing.assert_allclose(base[:, :, : s - 1], pert[:, :, : s - 1], rtol=1e-6)
+    assert np.abs(base[:, :, s - 1] - pert[:, :, s - 1]).max() > 1e-3
+
+
+def test_prefill_length_mask_blocks_padding():
+    """Keys beyond the valid length must not influence any output."""
+    b, h, s, dh = 1, 1, 16, 16
+    q, k, v = rand(b, h, s, dh), rand(b, h, s, dh), rand(b, h, s, dh)
+    lengths = np.array([7], dtype=np.int32)
+    base = np.asarray(A.attention_prefill(q, k, v, lengths))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 7:] = 99.0
+    v2[:, :, 7:] = -99.0
+    pert = np.asarray(A.attention_prefill(q, k2, v2, lengths))
+    np.testing.assert_allclose(base[:, :, :7], pert[:, :, :7], rtol=1e-6)
+
+
+def test_prefill_softmax_rows_normalized():
+    """With constant V, masked-softmax output must reproduce V exactly."""
+    b, h, s, dh = 2, 2, 8, 8
+    q, k = rand(b, h, s, dh), rand(b, h, s, dh)
+    v = np.ones((b, h, s, dh), dtype=np.float32) * 3.0
+    lengths = np.array([s, 4], dtype=np.int32)
+    out = np.asarray(A.attention_prefill(q, k, v, lengths))
+    np.testing.assert_allclose(out, 3.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- decode
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.sampled_from([16, 128]),
+    dh=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref_swept(b, h, t, dh, seed):
+    q = rand(b, h, dh, seed=seed)
+    kc = rand(b, h, t, dh, seed=seed + 1)
+    vc = rand(b, h, t, dh, seed=seed + 2)
+    rng = np.random.default_rng(seed + 3)
+    pos = rng.integers(0, t, size=(b,)).astype(np.int32)
+    got = A.attention_decode(q, kc, vc, pos)
+    want = R.attention_decode_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_pos_zero_returns_first_value():
+    """pos=0 attends to exactly slot 0: output == v_cache[:, :, 0]."""
+    b, h, t, dh = 2, 3, 32, 16
+    q, kc, vc = rand(b, h, dh), rand(b, h, t, dh), rand(b, h, t, dh)
+    pos = np.zeros((b,), dtype=np.int32)
+    out = np.asarray(A.attention_decode(q, kc, vc, pos))
+    np.testing.assert_allclose(out, vc[:, :, 0], rtol=1e-5)
+
+
+def test_decode_ignores_padding_beyond_pos():
+    b, h, t, dh = 1, 1, 64, 16
+    q, kc, vc = rand(b, h, dh), rand(b, h, t, dh), rand(b, h, t, dh)
+    pos = np.array([10], dtype=np.int32)
+    base = np.asarray(A.attention_decode(q, kc, vc, pos))
+    kc2, vc2 = kc.copy(), vc.copy()
+    kc2[:, :, 11:] = 1e3
+    vc2[:, :, 11:] = -1e3
+    pert = np.asarray(A.attention_decode(q, kc2, vc2, pos))
+    np.testing.assert_allclose(base, pert, rtol=1e-6)
+
+
+def test_decode_per_sequence_positions_differ():
+    """Each batch row honours its own pos."""
+    b, h, t, dh = 2, 1, 16, 8
+    q = np.stack([rand(h, dh, seed=1)] * b)  # identical queries
+    kc = np.stack([rand(h, t, dh, seed=2)] * b)
+    vc = np.stack([rand(h, t, dh, seed=3)] * b)
+    pos = np.array([0, 15], dtype=np.int32)
+    out = np.asarray(A.attention_decode(q, kc, vc, pos))
+    assert np.abs(out[0] - out[1]).max() > 1e-4
+
+
+# ---------------------------------------------------------------- quant matmul
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 8]),
+    k=st.sampled_from([64, 256]),
+    n=st.sampled_from([32, 256]),
+    g=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_matmul_matches_ref_swept(m, k, n, g, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    wq = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    scales = (rng.uniform(0.001, 0.1, size=(k // g, n))).astype(np.float32)
+    got = QM.quant_matmul(x, wq, scales, group_size=g)
+    want = R.quant_matmul_ref(x, wq, scales, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_zero_weights():
+    x = rand(4, 64)
+    wq = np.zeros((64, 32), dtype=np.int8)
+    scales = np.ones((2, 32), dtype=np.float32)
+    out = np.asarray(QM.quant_matmul(x, wq, scales, group_size=32))
+    np.testing.assert_allclose(out, 0.0)
+
+
+def test_quant_matmul_identity_scales():
+    """With group scales of 1.0 the kernel is a plain int->float matmul."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(3, 64)).astype(np.float32)
+    wq = rng.integers(-4, 5, size=(64, 16)).astype(np.int8)
+    scales = np.ones((2, 16), dtype=np.float32)
+    got = np.asarray(QM.quant_matmul(x, wq, scales, group_size=32))
+    want = x @ wq.astype(np.float32)
+    # fp32 accumulation-order differences across the K=64 reduction
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        QM.quant_matmul(rand(2, 64), np.zeros((32, 8), np.int8), np.ones((1, 8), np.float32))
+    with pytest.raises(AssertionError):
+        QM.quant_matmul(rand(2, 63), np.zeros((63, 8), np.int8), np.ones((1, 8), np.float32), group_size=32)

@@ -1,0 +1,114 @@
+"""L2 correctness: the full model with Pallas kernels vs its pure-jnp twin,
+KV-cache semantics, and shape discipline of the AOT-exported variants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig()
+PARAMS = M.init_params(CFG, 0)
+PLIST = M.params_to_list(CFG, PARAMS)
+RNG = np.random.default_rng(3)
+
+
+def random_prompts(b, lengths=None):
+    toks = RNG.integers(0, CFG.vocab, size=(b, CFG.max_prompt)).astype(np.int32)
+    if lengths is None:
+        lengths = RNG.integers(4, CFG.max_prompt + 1, size=(b,)).astype(np.int32)
+    return toks, np.asarray(lengths, dtype=np.int32)
+
+
+def test_param_inventory():
+    names = CFG.param_order()
+    assert names[0] == "embed"
+    assert len(names) == 1 + 6 * CFG.layers
+    total = sum(np.prod(CFG.param_shape(n)) for n in names)
+    assert 3e6 < total < 4e6, f"param count {total}"
+
+
+def test_prefill_pallas_matches_ref():
+    toks, lengths = random_prompts(4)
+    lg_p, k_p, v_p = M.prefill(CFG, toks, lengths, PLIST, use_pallas=True)
+    lg_r, k_r, v_r = M.prefill(CFG, toks, lengths, PLIST, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(k_p), np.asarray(k_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_r), rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_shapes():
+    for b in [1, 2, 8]:
+        toks, lengths = random_prompts(b)
+        lg, k, v = M.prefill(CFG, toks, lengths, PLIST, use_pallas=False)
+        assert lg.shape == (b, CFG.vocab)
+        assert k.shape == (CFG.layers, b, CFG.n_heads, CFG.max_seq, CFG.d_head)
+        assert v.shape == k.shape
+
+
+def test_decode_pallas_matches_ref():
+    toks, lengths = random_prompts(2)
+    _, k, v = M.prefill(CFG, toks, lengths, PLIST, use_pallas=False)
+    token = np.array([7, 12], dtype=np.int32)
+    lg_p, kp, vp = M.decode_step(CFG, token, lengths, k, v, PLIST, use_pallas=True)
+    lg_r, kr, vr = M.decode_step(CFG, token, lengths, k, v, PLIST, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(kr), rtol=1e-5, atol=1e-5)
+
+
+def test_kv_cache_written_at_pos():
+    toks, lengths = random_prompts(2, lengths=[10, 20])
+    _, k, v = M.prefill(CFG, toks, lengths, PLIST, use_pallas=False)
+    token = np.array([1, 2], dtype=np.int32)
+    _, k2, v2 = M.decode_step(CFG, token, lengths, k, v, PLIST, use_pallas=False)
+    k, v, k2, v2 = map(np.asarray, (k, v, k2, v2))
+    # slot lengths[b] must change, all other slots must be identical
+    for b_i, p in enumerate([10, 20]):
+        assert np.abs(k2[:, b_i, :, p] - k[:, b_i, :, p]).max() > 1e-6
+        untouched = [s for s in range(CFG.max_seq) if s != p]
+        np.testing.assert_allclose(k2[:, b_i, :, untouched], k[:, b_i, :, untouched])
+
+
+def test_incremental_decode_consistent_with_prefill():
+    """Prefill over n+1 tokens == prefill over n tokens + one decode step."""
+    b = 1
+    toks, _ = random_prompts(b)
+    n = 9
+    lengths_full = np.array([n + 1], dtype=np.int32)
+    lengths_part = np.array([n], dtype=np.int32)
+    lg_full, _, _ = M.prefill(CFG, toks, lengths_full, PLIST, use_pallas=False)
+    _, k, v = M.prefill(CFG, toks, lengths_part, PLIST, use_pallas=False)
+    lg_inc, _, _ = M.decode_step(
+        CFG, toks[:, n], lengths_part, k, v, PLIST, use_pallas=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg_full), np.asarray(lg_inc), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_greedy_generation_deterministic():
+    toks, lengths = random_prompts(2, lengths=[8, 8])
+    g1 = np.asarray(M.greedy_generate(CFG, PLIST, toks, lengths, 6))
+    g2 = np.asarray(M.greedy_generate(CFG, PLIST, toks, lengths, 6))
+    np.testing.assert_array_equal(g1, g2)
+    assert g1.shape == (2, 6)
+    assert (g1 >= 0).all() and (g1 < CFG.vocab).all()
+
+
+def test_generation_depends_on_prompt():
+    t1, l1 = random_prompts(1, lengths=[12])
+    t2 = (t1 + 37) % CFG.vocab
+    g1 = np.asarray(M.greedy_generate(CFG, PLIST, t1, l1, 8))
+    g2 = np.asarray(M.greedy_generate(CFG, PLIST, t2, l1, 8))
+    assert (g1 != g2).any()
+
+
+def test_example_args_match_fn_signature():
+    for b in [1, 4]:
+        for phase, make in [("prefill", M.make_prefill_fn), ("decode", M.make_decode_fn)]:
+            args = M.example_args(CFG, b, phase)
+            # prefill: tokens, lengths, 25 params; decode: +2 caches
+            expected = 2 + len(CFG.param_order()) + (2 if phase == "decode" else 0)
+            assert len(args) == expected, phase
+    with pytest.raises(ValueError):
+        M.example_args(CFG, 1, "training")

@@ -1,0 +1,58 @@
+"""BPE trainer/encoder correctness (the Rust side re-validates via goldens)."""
+
+import json
+
+import pytest
+
+from compile import tokenizer as T
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return T.train_bpe(T.CORPUS, 512)
+
+
+def test_training_produces_merges(trained):
+    merges, vocab = trained
+    assert len(merges) > 50, "corpus has plenty of repeated pairs"
+    assert len(vocab) == 256 + len(merges)
+    # merged tokens concatenate their parts
+    for rank, (a, b) in enumerate(merges):
+        assert vocab[256 + rank] == vocab[a] + vocab[b]
+
+
+def test_encode_decode_roundtrip(trained):
+    merges, vocab = trained
+    for text in [
+        "the scheduler maximizes throughput.",
+        "unseen words zigzag quirkily",
+        "",
+        "héllo wörld",
+    ]:
+        ids = T.encode(text, merges)
+        assert T.decode(ids, vocab) == text
+
+
+def test_encoding_compresses_corpus_words(trained):
+    merges, _ = trained
+    # A frequent corpus word must encode to fewer tokens than bytes.
+    word = "throughput"
+    ids = T.encode(word, merges)
+    assert len(ids) < len(word.encode())
+
+
+def test_ids_within_vocab(trained):
+    merges, vocab = trained
+    ids = T.encode("requests arrive with prompts", merges)
+    assert all(0 <= i < 256 + len(merges) for i in ids)
+
+
+def test_export_payload(tmp_path):
+    path = tmp_path / "bpe.json"
+    T.export(str(path), vocab_size=300)
+    payload = json.load(open(path))
+    assert payload["vocab_size"] <= 300
+    assert len(payload["goldens"]) >= 3
+    merges = [tuple(m) for m in payload["merges"]]
+    for g in payload["goldens"]:
+        assert T.encode(g["text"], merges) == g["ids"]

@@ -1,0 +1,202 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! A1. Constraint-based subtree pruning (DFTSP's second pruning rule, on top
+//!     of the paper's capacity rule): node-count impact.
+//! A2. Search vs greedy insertion: what the tree search buys over a single
+//!     feasibility-preserving pass, per insertion order.
+//! A3. Surplus-bandwidth allocation policy: effective upload times under
+//!     MinOnly / Proportional / MaxMin (the "joint allocation" knob).
+//! A4. Multi-LLM GPU partitioning: Equal vs LoadProportional under skewed
+//!     demand.
+//!
+//! Run: cargo bench --bench ablation_dftsp
+
+use edgellm::cluster::ClusterSpec;
+use edgellm::coordinator::{
+    Deployment, Dftsp, EpochParams, Greedy, GreedyOrder, MultiLlm, PartitionPolicy,
+    ProblemInstance, Scheduler,
+};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant;
+use edgellm::request::{EpochRequest, RequestBuilder};
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::fmt::Table;
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{allocate, AllocationPolicy, ChannelParams, RadioParams};
+use edgellm::workload::WorkloadParams;
+
+fn random_requests(n: usize, seed: u64) -> Vec<EpochRequest> {
+    let mut rng = Rng::new(seed);
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let channel = ChannelParams::default();
+    let levels = [128u32, 256, 512];
+    (0..n)
+        .map(|_| {
+            let req = b.build(
+                -rng.uniform(0.0, 2.0),
+                *rng.choice(&levels),
+                *rng.choice(&levels),
+                rng.uniform(0.5, 2.0),
+                rng.uniform(0.0, 1.0),
+            );
+            let h = channel.draw_h(&mut rng);
+            EpochRequest::annotate(req, h, &radio, 0.25, 0.25)
+        })
+        .collect()
+}
+
+fn inst() -> ProblemInstance {
+    ProblemInstance::new(
+        CostModel::new(LlmSpec::bloom_3b()),
+        quant::default_quant(),
+        ClusterSpec::paper_default(),
+        EpochParams::default(),
+        512,
+        0.0,
+    )
+}
+
+fn a1_constraint_pruning() {
+    println!("== A1: constraint-based subtree pruning (batch sizes identical by construction) ==");
+    let mut t = Table::new(&[
+        "candidates",
+        "nodes (full pruning)",
+        "nodes (capacity rule only)",
+        "extra reduction",
+    ]);
+    for n in [32usize, 128, 512] {
+        let reqs = random_requests(n, 7);
+        let i = inst();
+        let full = Dftsp::new().schedule(&i, &reqs);
+        let mut no_cp = Dftsp {
+            disable_constraint_pruning: true,
+        };
+        let cap_only = no_cp.schedule(&i, &reqs);
+        assert_eq!(full.batch_size(), cap_only.batch_size());
+        t.row(&[
+            n.to_string(),
+            full.stats.nodes_visited.to_string(),
+            cap_only.stats.nodes_visited.to_string(),
+            format!(
+                "{:.1}%",
+                100.0
+                    * (1.0
+                        - full.stats.nodes_visited as f64
+                            / cap_only.stats.nodes_visited.max(1) as f64)
+            ),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn a2_search_vs_greedy() {
+    println!("\n== A2: DFTSP vs greedy insertion (simulated throughput, req/s) ==");
+    let mut t = Table::new(&[
+        "arrival rate",
+        "DFTSP",
+        "Greedy-slack",
+        "Greedy-output",
+        "Greedy-fcfs",
+    ]);
+    for rate in [25.0, 60.0, 120.0] {
+        let cfg = SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: rate,
+                ..Default::default()
+            },
+            epochs: 12,
+            seed: 77,
+            ..SimConfig::paper_default()
+        };
+        let run = |s: &mut dyn Scheduler| sim::run(&cfg, s).throughput();
+        t.row(&[
+            format!("{rate:.0}"),
+            format!("{:.2}", run(&mut Dftsp::new())),
+            format!("{:.2}", run(&mut Greedy::new(GreedyOrder::SlackDescending))),
+            format!("{:.2}", run(&mut Greedy::new(GreedyOrder::OutputAscending))),
+            format!("{:.2}", run(&mut Greedy::new(GreedyOrder::Fcfs))),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn a3_allocation_policies() {
+    println!("\n== A3: surplus bandwidth allocation (scheduled batch of 12, mean upload time) ==");
+    let i = inst();
+    let reqs = random_requests(64, 11);
+    let sched = Dftsp::new().schedule(&i, &reqs);
+    let batch: Vec<&EpochRequest> = reqs
+        .iter()
+        .filter(|r| sched.scheduled.contains(&r.id()))
+        .collect();
+    let radio = RadioParams::default();
+    let mut t = Table::new(&["policy", "Σρ_u", "mean upload", "max upload"]);
+    for (name, policy) in [
+        ("MinOnly", AllocationPolicy::MinOnly),
+        ("Proportional", AllocationPolicy::Proportional),
+        ("MaxMin", AllocationPolicy::MaxMin),
+    ] {
+        let allocs = allocate(&batch, &radio, 0.25, 0.25, policy);
+        let mean_up =
+            allocs.iter().map(|a| a.upload_time).sum::<f64>() / allocs.len().max(1) as f64;
+        let max_up = allocs.iter().map(|a| a.upload_time).fold(0.0, f64::max);
+        t.row(&[
+            name.to_string(),
+            format!("{:.4}", allocs.iter().map(|a| a.rho_u).sum::<f64>()),
+            format!("{:.2} ms", mean_up * 1e3),
+            format!("{:.2} ms", max_up * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(batch size {}; MinOnly pins uploads at T_U = 250 ms)", batch.len());
+}
+
+fn a4_multi_llm_partitioning() {
+    println!("\n== A4: multi-LLM GPU partitioning under skewed demand ==");
+    let deps = vec![
+        Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        },
+        Deployment {
+            model: LlmSpec::bloom_7b(),
+            quant: quant::default_quant(),
+        },
+    ];
+    let cluster = ClusterSpec::paper_default();
+    let mut t = Table::new(&[
+        "demand (3B/7.1B)",
+        "policy",
+        "GPUs",
+        "scheduled total",
+    ]);
+    for (d3, d7) in [(30usize, 2usize), (16, 16), (2, 30)] {
+        let demand = vec![random_requests(d3, 3), random_requests(d7, 4)];
+        for policy in [PartitionPolicy::Equal, PartitionPolicy::LoadProportional] {
+            let mut m = MultiLlm::with_dftsp(deps.clone(), policy);
+            let (schedules, gpus) =
+                m.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+            t.row(&[
+                format!("{d3}/{d7}"),
+                format!("{policy:?}"),
+                format!("{gpus:?}"),
+                schedules
+                    .iter()
+                    .map(|s| s.batch_size())
+                    .sum::<usize>()
+                    .to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    a1_constraint_pruning();
+    a2_search_vs_greedy();
+    a3_allocation_policies();
+    a4_multi_llm_partitioning();
+    println!("\nablation bench completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

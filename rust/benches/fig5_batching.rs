@@ -1,0 +1,96 @@
+//! Figure 5 reproduction — throughput under different batching schemes.
+//!
+//! Fig. 5(a): throughput vs arrival rate (paper: 5–250 req/s), DFTSP vs
+//! StB vs NoB, for BLOOM-3B and BLOOM-7.1B at the default W8A16.
+//! Fig. 5(b): throughput vs user latency requirement window.
+//!
+//! Absolute values differ from the paper (the testbed is an analytic
+//! simulator, and the paper's own epoch/deadline settings bound goodput);
+//! the *shape* — DFTSP on top, saturation with rate, 3B above 7.1B, more
+//! lenient deadlines helping — is the reproduction target.
+//!
+//! Run: cargo bench --bench fig5_batching  (optionally EPOCHS=30)
+
+use edgellm::coordinator::{Dftsp, NoBatching, Scheduler, StaticBatching};
+use edgellm::model::LlmSpec;
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::fmt::Table;
+use edgellm::workload::WorkloadParams;
+
+fn epochs() -> usize {
+    std::env::var("EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15)
+}
+
+fn run_one(model: &LlmSpec, rate: f64, latency: (f64, f64), sched: &mut dyn Scheduler) -> f64 {
+    let cfg = SimConfig {
+        model: model.clone(),
+        workload: WorkloadParams {
+            arrival_rate: rate,
+            latency_range: latency,
+            ..Default::default()
+        },
+        epochs: epochs(),
+        seed: 77,
+        ..SimConfig::paper_default()
+    };
+    sim::run(&cfg, sched).throughput()
+}
+
+fn fig5a() {
+    println!("== Fig. 5(a): throughput (req/s) vs arrival rate, tau ~ U[0.5, 2] s ==");
+    let rates = [5.0, 10.0, 25.0, 50.0, 100.0, 150.0, 200.0, 250.0];
+    for model in [LlmSpec::bloom_3b(), LlmSpec::bloom_7b()] {
+        let mut t = Table::new(&["arrival rate", "DFTSP", "StB", "NoB"]);
+        for &r in &rates {
+            t.row(&[
+                format!("{r:.0}"),
+                format!("{:.2}", run_one(&model, r, (0.5, 2.0), &mut Dftsp::new())),
+                format!(
+                    "{:.2}",
+                    run_one(&model, r, (0.5, 2.0), &mut StaticBatching::new())
+                ),
+                format!("{:.2}", run_one(&model, r, (0.5, 2.0), &mut NoBatching::new())),
+            ]);
+        }
+        println!("\n[{}]", model.name);
+        print!("{}", t.render());
+    }
+}
+
+fn fig5b() {
+    println!("\n== Fig. 5(b): throughput (req/s) vs latency requirement, rate = 60 req/s ==");
+    // The paper sweeps the users' latency requirement; we sweep the upper
+    // edge of the U[tau/2, tau] window.
+    let taus = [0.5, 1.0, 1.5, 2.0, 3.0, 4.0];
+    for model in [LlmSpec::bloom_3b(), LlmSpec::bloom_7b()] {
+        let mut t = Table::new(&["tau_hi (s)", "DFTSP", "StB", "NoB"]);
+        for &tau in &taus {
+            let window = (0.5 * tau, tau);
+            t.row(&[
+                format!("{tau:.1}"),
+                format!("{:.2}", run_one(&model, 60.0, window, &mut Dftsp::new())),
+                format!(
+                    "{:.2}",
+                    run_one(&model, 60.0, window, &mut StaticBatching::new())
+                ),
+                format!("{:.2}", run_one(&model, 60.0, window, &mut NoBatching::new())),
+            ]);
+        }
+        println!("\n[{}]", model.name);
+        print!("{}", t.render());
+    }
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    fig5a();
+    fig5b();
+    println!(
+        "\nfig5 bench completed in {:.1}s ({} epochs per point)",
+        t0.elapsed().as_secs_f64(),
+        epochs()
+    );
+}

@@ -1,0 +1,100 @@
+//! Figure 6 reproduction — throughput under different quantization methods.
+//!
+//! Fig. 6(a): accuracy requirements ignored; throughput vs precision
+//! (W16A16 / W8A16 / W4A16) for the three Table I models — lower precision
+//! frees memory (α) and compute (β), raising throughput; larger models
+//! serve fewer requests.
+//! Fig. 6(b): accuracy constraint active; throughput vs the users' accuracy
+//! requirement ceiling for GPTQ vs ZQ-Local at W4A16, with the W8A16
+//! default as the paper's dotted reference line.
+//!
+//! Run: cargo bench --bench fig6_quantization
+
+use edgellm::coordinator::Dftsp;
+use edgellm::model::LlmSpec;
+use edgellm::quant::{self, Precision, QuantAlgo, QuantSpec};
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::fmt::Table;
+use edgellm::workload::WorkloadParams;
+
+fn epochs() -> usize {
+    std::env::var("EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15)
+}
+
+fn run_one(model: &LlmSpec, q: &QuantSpec, accuracy: (f64, f64)) -> f64 {
+    let cfg = SimConfig {
+        model: model.clone(),
+        quant: q.clone(),
+        workload: WorkloadParams {
+            arrival_rate: 60.0,
+            accuracy_range: accuracy,
+            ..Default::default()
+        },
+        epochs: epochs(),
+        seed: 77,
+        ..SimConfig::paper_default()
+    };
+    sim::run(&cfg, &mut Dftsp::new()).throughput()
+}
+
+fn fig6a() {
+    println!("== Fig. 6(a): throughput (req/s) vs precision, accuracy requirements ignored ==");
+    let quants = [
+        QuantSpec::fp16(),
+        quant::by_label(Precision::W8A16, QuantAlgo::Gptq).unwrap(),
+        quant::by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap(),
+    ];
+    let mut t = Table::new(&["model", "W16A16", "W8A16", "W4A16"]);
+    for model in LlmSpec::catalog() {
+        let vals: Vec<String> = quants
+            .iter()
+            .map(|q| format!("{:.2}", run_one(&model, q, (0.0, 0.0))))
+            .collect();
+        t.row(&[model.name.clone(), vals[0].clone(), vals[1].clone(), vals[2].clone()]);
+    }
+    print!("{}", t.render());
+}
+
+fn fig6b() {
+    println!("\n== Fig. 6(b): throughput (req/s) vs accuracy requirement ceiling (BLOOM-3B) ==");
+    println!("   users draw a_i ~ U[0, ceiling]; larger ceiling = stricter population");
+    let w8 = quant::by_label(Precision::W8A16, QuantAlgo::Gptq).unwrap();
+    let gptq = quant::by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap();
+    let zq = quant::by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap();
+    let model = LlmSpec::bloom_3b();
+    let mut t = Table::new(&[
+        "accuracy ceiling",
+        "W4A16/GPTQ",
+        "W4A16/ZQ-Local",
+        "W8A16 (dotted ref)",
+    ]);
+    for ceil in [0.05, 0.1, 0.25, 0.5, 0.75, 1.0] {
+        t.row(&[
+            format!("{ceil:.2}"),
+            format!("{:.2}", run_one(&model, &gptq, (0.0, ceil))),
+            format!("{:.2}", run_one(&model, &zq, (0.0, ceil))),
+            format!("{:.2}", run_one(&model, &w8, (0.0, ceil))),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(f(dPPL): GPTQ admits a <= {:.2}, ZQ-Local a <= {:.2}, W8A16 a <= {:.2} on BLOOM-3B)",
+        quant::f_accuracy(gptq.dppl_for("BLOOM-3B")),
+        quant::f_accuracy(zq.dppl_for("BLOOM-3B")),
+        quant::f_accuracy(w8.dppl_for("BLOOM-3B")),
+    );
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    fig6a();
+    fig6b();
+    println!(
+        "\nfig6 bench completed in {:.1}s ({} epochs per point)",
+        t0.elapsed().as_secs_f64(),
+        epochs()
+    );
+}

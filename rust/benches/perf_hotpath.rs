@@ -1,0 +1,124 @@
+//! §Perf micro-benchmarks — the L3 scheduler hot path and (when artifacts
+//! exist) the PJRT runtime request path. The before/after iteration log
+//! lives in EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use edgellm::cluster::ClusterSpec;
+use edgellm::coordinator::{
+    Dftsp, EpochParams, FeasibilityChecker, ProblemInstance, Scheduler,
+};
+use edgellm::coordinator::tree::{build_levels, suffix_capacity};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant;
+use edgellm::request::{EpochRequest, RequestBuilder};
+use edgellm::runtime::{artifacts_available, Engine};
+use edgellm::util::bench::{black_box, Bencher};
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{ChannelParams, RadioParams};
+use std::path::PathBuf;
+
+fn paper_inst() -> ProblemInstance {
+    ProblemInstance::new(
+        CostModel::new(LlmSpec::bloom_3b()),
+        quant::default_quant(),
+        ClusterSpec::paper_default(),
+        EpochParams::default(),
+        512,
+        0.0,
+    )
+}
+
+fn random_requests(n: usize, seed: u64) -> Vec<EpochRequest> {
+    let mut rng = Rng::new(seed);
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let channel = ChannelParams::default();
+    let levels = [128u32, 256, 512];
+    (0..n)
+        .map(|_| {
+            let req = b.build(
+                -rng.uniform(0.0, 2.0),
+                *rng.choice(&levels),
+                *rng.choice(&levels),
+                rng.uniform(0.5, 2.0),
+                rng.uniform(0.0, 1.0),
+            );
+            let h = channel.draw_h(&mut rng);
+            EpochRequest::annotate(req, h, &radio, 0.25, 0.25)
+        })
+        .collect()
+}
+
+fn scheduler_benches(bench: &Bencher) {
+    let inst = paper_inst();
+    for n in [32usize, 128, 512] {
+        let reqs = random_requests(n, 42);
+        let r = bench.run(&format!("dftsp/schedule/n={n}"), || {
+            let s = Dftsp::new().schedule(black_box(&inst), black_box(&reqs));
+            black_box(s.batch_size());
+        });
+        println!("{}", r.report());
+    }
+
+    let reqs = random_requests(256, 43);
+    let subset: Vec<&EpochRequest> = reqs.iter().take(64).collect();
+    let checker = FeasibilityChecker::new(&inst);
+    let r = bench.run("feasibility/check/64", || {
+        black_box(checker.check(black_box(&subset)).is_ok());
+    });
+    println!("{}", r.report());
+
+    let pool: Vec<&EpochRequest> = reqs.iter().collect();
+    let r = bench.run("tree/build_levels/256", || {
+        let levels = build_levels(black_box(&inst), black_box(&pool));
+        black_box(suffix_capacity(&levels).len());
+    });
+    println!("{}", r.report());
+}
+
+fn runtime_benches(bench: &Bencher) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts_available(&dir) {
+        println!("(artifacts/ not built — skipping runtime benches)");
+        return;
+    }
+    let engine = Engine::load_with_variants(&dir, "W16A16", &[1, 4]).expect("engine");
+    let prompts4: Vec<Vec<i32>> = (0..4)
+        .map(|i| (0..32).map(|t| (t * 7 + i * 13) % 512).collect())
+        .collect();
+    let r = bench.run("runtime/prefill/b4/s32", || {
+        let (l, c) = engine.prefill(black_box(&prompts4)).unwrap();
+        black_box((l.len(), c.active));
+    });
+    println!("{}", r.report());
+
+    let (logits, mut cache) = engine.prefill(&prompts4).unwrap();
+    let tokens: Vec<i32> = logits.iter().map(|l| edgellm::runtime::argmax(l)).collect();
+    let r = bench.run("runtime/decode_step/b4", || {
+        // NOTE decode mutates cache position; rebuild when the cache fills.
+        if cache.pos.iter().any(|&p| p as usize >= engine.meta.max_seq) {
+            let (_, c) = engine.prefill(&prompts4).unwrap();
+            cache = c;
+        }
+        let l = engine.decode(black_box(&tokens), &mut cache).unwrap();
+        black_box(l.len());
+    });
+    println!("{}", r.report());
+
+    let one = vec![prompts4[0].clone()];
+    let r = bench.run("runtime/generate_greedy/b1/8tok", || {
+        let g = engine.generate_greedy(black_box(&one), 8, None).unwrap();
+        black_box(g[0].len());
+    });
+    println!("{}", r.report());
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let bench = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("== L3 scheduler hot path ==");
+    scheduler_benches(&bench);
+    println!("\n== PJRT runtime request path ==");
+    runtime_benches(&bench);
+}

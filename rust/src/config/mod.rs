@@ -1,0 +1,209 @@
+//! Scenario configuration: a TOML file describing the model, quantization,
+//! cluster, radio, epoch protocol and workload, mapped onto `SimConfig`.
+//!
+//! Every field is optional — omitted keys fall back to the paper's §IV
+//! defaults, so a minimal scenario file can be just a couple of lines.
+
+pub mod toml;
+
+use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::coordinator::EpochParams;
+use crate::model::LlmSpec;
+use crate::quant::{self, Precision, QuantAlgo, QuantSpec};
+use crate::sim::SimConfig;
+use crate::wireless::{dbm_to_watts, ChannelParams, RadioParams};
+use crate::workload::WorkloadParams;
+use std::path::Path;
+
+/// Parse a quantization label like "W8A16/GPTQ", "W4A16/ZQ-Local", "W16A16".
+pub fn parse_quant_label(label: &str) -> Result<QuantSpec, String> {
+    if label.eq_ignore_ascii_case("W16A16") || label.eq_ignore_ascii_case("fp16") {
+        return Ok(QuantSpec::fp16());
+    }
+    let (prec_s, algo_s) = label
+        .split_once('/')
+        .ok_or_else(|| format!("quant label `{label}` must be `W<w>A<a>/<algo>` or `W16A16`"))?;
+    let prec = match prec_s.to_ascii_uppercase().as_str() {
+        "W8A16" => Precision::W8A16,
+        "W4A16" => Precision::W4A16,
+        "W8A8" => Precision::W8A8,
+        other => return Err(format!("unknown precision `{other}`")),
+    };
+    let algo = match algo_s.to_ascii_uppercase().as_str() {
+        "GPTQ" => QuantAlgo::Gptq,
+        "ZQ-LOCAL" | "ZQLOCAL" => QuantAlgo::ZqLocal,
+        "RTN" => QuantAlgo::Rtn,
+        other => return Err(format!("unknown quant algorithm `{other}`")),
+    };
+    quant::by_label(prec, algo).ok_or_else(|| format!("`{label}` not in the quant catalog"))
+}
+
+/// Build a `SimConfig` from a parsed TOML document.
+pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
+    let base = SimConfig::paper_default();
+
+    let model_name = doc.str_or("model.name", &base.model.name);
+    let model = LlmSpec::by_name(&model_name)
+        .ok_or_else(|| format!("unknown model `{model_name}` (catalog: BLOOM-3B, BLOOM-7.1B, OPT-13B)"))?;
+
+    let quant_label = doc.str_or("quant.label", "W8A16/GPTQ");
+    let quant = parse_quant_label(&quant_label)?;
+
+    let gpu = GpuSpec {
+        name: doc.str_or("cluster.gpu_name", &base.cluster.gpu.name),
+        flops: doc.f64_or("cluster.gpu_flops", base.cluster.gpu.flops),
+        mem_bytes: doc.u64_or("cluster.gpu_mem_bytes", base.cluster.gpu.mem_bytes),
+    };
+    let cluster = ClusterSpec::new(gpu, doc.u64_or("cluster.num_gpus", base.cluster.num_gpus as u64) as usize);
+
+    let epoch = EpochParams {
+        duration: doc.f64_or("epoch.duration", base.epoch.duration),
+        t_u: doc.f64_or("epoch.t_u", base.epoch.t_u),
+        t_d: doc.f64_or("epoch.t_d", base.epoch.t_d),
+    };
+
+    let radio = RadioParams {
+        uplink_hz: doc.f64_or("radio.uplink_hz", base.radio.uplink_hz),
+        downlink_hz: doc.f64_or("radio.downlink_hz", base.radio.downlink_hz),
+        uplink_tx_w: doc
+            .get("radio.uplink_tx_dbm")
+            .and_then(|v| v.as_f64())
+            .map(dbm_to_watts)
+            .unwrap_or(base.radio.uplink_tx_w),
+        downlink_tx_w: doc
+            .get("radio.downlink_tx_dbm")
+            .and_then(|v| v.as_f64())
+            .map(dbm_to_watts)
+            .unwrap_or(base.radio.downlink_tx_w),
+        noise_w_per_hz: base.radio.noise_w_per_hz,
+        bits_per_token: doc.f64_or("radio.bits_per_token", base.radio.bits_per_token),
+    };
+
+    let channel = ChannelParams {
+        path_loss: doc.f64_or("channel.path_loss", base.channel.path_loss),
+        rayleigh_sigma: base.channel.rayleigh_sigma,
+    };
+
+    let workload = WorkloadParams {
+        arrival_rate: doc.f64_or("workload.arrival_rate", base.workload.arrival_rate),
+        prompt_levels: doc
+            .u32_list("workload.prompt_levels")
+            .unwrap_or(base.workload.prompt_levels),
+        output_levels: doc
+            .u32_list("workload.output_levels")
+            .unwrap_or(base.workload.output_levels),
+        latency_range: (
+            doc.f64_or("workload.latency_lo", base.workload.latency_range.0),
+            doc.f64_or("workload.latency_hi", base.workload.latency_range.1),
+        ),
+        accuracy_range: (
+            doc.f64_or("workload.accuracy_lo", base.workload.accuracy_range.0),
+            doc.f64_or("workload.accuracy_hi", base.workload.accuracy_range.1),
+        ),
+    };
+    workload.validate()?;
+
+    let s_pad = doc.get("sim.s_pad").and_then(|v| v.as_i64()).map(|v| v as u32);
+
+    Ok(SimConfig {
+        model,
+        quant,
+        cluster,
+        epoch,
+        radio,
+        channel,
+        workload,
+        epochs: doc.u64_or("sim.epochs", base.epochs as u64) as usize,
+        seed: doc.u64_or("sim.seed", base.seed),
+        s_pad,
+    })
+}
+
+/// Load a scenario file from disk.
+pub fn load_scenario(path: &Path) -> Result<SimConfig, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let doc = toml::parse(&src).map_err(|e| e.to_string())?;
+    sim_config_from_doc(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_doc_gives_paper_defaults() {
+        let doc = toml::parse("").unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.model.name, "BLOOM-3B");
+        assert_eq!(cfg.cluster.num_gpus, 20);
+        assert_eq!(cfg.epoch.duration, 2.0);
+        assert_eq!(cfg.quant.label(), "W8A16/GPTQ");
+    }
+
+    #[test]
+    fn full_scenario_parses() {
+        let doc = toml::parse(
+            r#"
+[model]
+name = "OPT-13B"
+[quant]
+label = "W4A16/ZQ-Local"
+[cluster]
+num_gpus = 8
+gpu_flops = 2.0e12
+[epoch]
+duration = 1.5
+t_u = 0.2
+t_d = 0.2
+[workload]
+arrival_rate = 120
+output_levels = [128, 512]
+latency_lo = 1.0
+latency_hi = 3.0
+[sim]
+epochs = 50
+seed = 9
+s_pad = 256
+"#,
+        )
+        .unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.model.name, "OPT-13B");
+        assert_eq!(cfg.quant.label(), "W4A16/ZQ-Local");
+        assert_eq!(cfg.cluster.num_gpus, 8);
+        assert_eq!(cfg.cluster.gpu.flops, 2.0e12);
+        assert_eq!(cfg.epoch.duration, 1.5);
+        assert_eq!(cfg.workload.arrival_rate, 120.0);
+        assert_eq!(cfg.workload.output_levels, vec![128, 512]);
+        assert_eq!(cfg.epochs, 50);
+        assert_eq!(cfg.s_pad, Some(256));
+    }
+
+    #[test]
+    fn bad_model_rejected() {
+        let doc = toml::parse("[model]\nname = \"GPT-99\"\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn quant_labels() {
+        assert_eq!(parse_quant_label("W16A16").unwrap().label(), "W16A16");
+        assert_eq!(parse_quant_label("fp16").unwrap().label(), "W16A16");
+        assert_eq!(
+            parse_quant_label("w8a16/gptq").unwrap().label(),
+            "W8A16/GPTQ"
+        );
+        assert_eq!(
+            parse_quant_label("W4A16/ZQ-Local").unwrap().label(),
+            "W4A16/ZQ-Local"
+        );
+        assert!(parse_quant_label("W2A2/GPTQ").is_err());
+        assert!(parse_quant_label("W8A16").is_err());
+    }
+
+    #[test]
+    fn invalid_workload_rejected() {
+        let doc = toml::parse("[workload]\nlatency_lo = 5.0\nlatency_hi = 1.0\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+    }
+}

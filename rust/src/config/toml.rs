@@ -1,0 +1,273 @@
+//! Minimal TOML-subset parser for scenario files (no `toml` crate offline).
+//!
+//! Supported grammar — everything the scenario schema needs:
+//! `[section]` and `[section.sub]` headers, `key = value` pairs with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments, and
+//! blank lines. Keys are flattened to `section.sub.key` paths.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar/array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened TOML document: `section.key` → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get(path)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn u32_list(&self, path: &str) -> Option<Vec<u32>> {
+        self.get(path).and_then(|v| v.as_array()).map(|a| {
+            a.iter()
+                .filter_map(|x| x.as_i64())
+                .map(|i| i as u32)
+                .collect()
+        })
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "empty section name".into(),
+                });
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(TomlError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            });
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: lineno,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|msg| TomlError {
+            line: lineno,
+            msg,
+        })?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(path, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(end) = inner.find('"') else {
+            return Err("unterminated string".into());
+        };
+        if !inner[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::Str(inner[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            return Err("unterminated array".into());
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, String> = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# scenario
+title = "demo"
+[workload]
+arrival_rate = 50.5
+epochs = 30
+levels = [128, 256, 512]
+enabled = true
+[cluster.gpu]
+flops = 1.33e12
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("title", ""), "demo");
+        assert_eq!(doc.f64_or("workload.arrival_rate", 0.0), 50.5);
+        assert_eq!(doc.u64_or("workload.epochs", 0), 30);
+        assert_eq!(doc.u32_list("workload.levels").unwrap(), vec![128, 256, 512]);
+        assert_eq!(doc.get("workload.enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.f64_or("cluster.gpu.flops", 0.0), 1.33e12);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("a = 1 # trailing\n\n# full line\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(doc.u64_or("a", 0), 1);
+        assert_eq!(doc.str_or("b", ""), "x # not comment");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.f64_or("nope", 7.5), 7.5);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("k = \"unterminated\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse("big = 1_000_000\n").unwrap();
+        assert_eq!(doc.u64_or("big", 0), 1_000_000);
+    }
+}

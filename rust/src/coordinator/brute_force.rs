@@ -1,0 +1,251 @@
+//! Brute-force tree search — the paper's Table III comparison baseline:
+//! identical tree construction and outer (z, d) loops as DFTSP, but **no
+//! online pruning**: partial-constraint violations do not cut subtrees and
+//! the remaining-capacity rule is not applied, so the search walks every
+//! count vector of every subproblem until a feasible leaf appears.
+//!
+//! A node budget guards against the exponential node count at high arrival
+//! rates (the very effect Table III quantifies); when the budget trips, the
+//! searcher falls back to DFTSP's answer for the *schedule* (so simulations
+//! stay comparable) while `stats.budget_exhausted` records that the node
+//! count is a lower bound.
+
+use crate::coordinator::dftsp::Dftsp;
+use crate::coordinator::problem::{FeasibilityChecker, ProblemInstance};
+use crate::coordinator::scheduler::{Schedule, Scheduler, SearchStats};
+use crate::coordinator::tree::{build_levels, materialize, suffix_capacity, LevelGroup};
+use crate::request::EpochRequest;
+
+/// Unpruned depth-first tree search.
+#[derive(Debug, Clone)]
+pub struct BruteForce {
+    /// Maximum tree nodes to visit across the whole scheduling call.
+    pub node_budget: u64,
+}
+
+impl Default for BruteForce {
+    fn default() -> Self {
+        BruteForce {
+            node_budget: 50_000_000,
+        }
+    }
+}
+
+impl BruteForce {
+    pub fn with_budget(node_budget: u64) -> Self {
+        BruteForce { node_budget }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &self,
+        inst: &ProblemInstance,
+        levels: &[LevelGroup],
+        depth: usize,
+        count_sum: usize,
+        counts: &mut Vec<usize>,
+        z: usize,
+        stats: &mut SearchStats,
+    ) -> Option<bool> {
+        // Option<bool>: None = budget exhausted, Some(found) otherwise.
+        if count_sum == z {
+            stats.solutions_checked += 1;
+            let subset = materialize_partial(levels, counts);
+            return Some(FeasibilityChecker::new(inst).check(&subset).is_ok());
+        }
+        if depth == levels.len() {
+            return Some(false); // dead leaf: max depth, Σ < z
+        }
+        let need = z - count_sum;
+        let g = &levels[depth];
+        let cmax = need.min(g.len());
+        for c in (0..=cmax).rev() {
+            stats.nodes_visited += 1;
+            if stats.nodes_visited > self.node_budget {
+                stats.budget_exhausted = true;
+                return None;
+            }
+            counts.push(c);
+            match self.dfs(inst, levels, depth + 1, count_sum + c, counts, z, stats) {
+                None => {
+                    counts.pop();
+                    return None;
+                }
+                Some(true) => return Some(true),
+                Some(false) => {}
+            }
+            counts.pop();
+        }
+        Some(false)
+    }
+}
+
+/// Materialize when `counts` may be shorter than `levels` (deep leaves cut
+/// the vector early once Σ = z).
+fn materialize_partial<'a>(
+    levels: &[LevelGroup<'a>],
+    counts: &[usize],
+) -> Vec<&'a EpochRequest> {
+    let mut padded: Vec<usize> = counts.to_vec();
+    padded.resize(levels.len(), 0);
+    materialize(levels, &padded)
+}
+
+impl Scheduler for BruteForce {
+    fn name(&self) -> &'static str {
+        "BruteForce"
+    }
+
+    fn schedule(&mut self, inst: &ProblemInstance, candidates: &[EpochRequest]) -> Schedule {
+        let mut stats = SearchStats::default();
+        let mut adm = inst.admissible(candidates);
+        if adm.is_empty() {
+            return Schedule::empty();
+        }
+        adm.sort_by(|a, b| {
+            inst.compute_slack(b)
+                .partial_cmp(&inst.compute_slack(a))
+                .unwrap()
+                .then(a.id().cmp(&b.id()))
+        });
+
+        for z in (1..=adm.len()).rev() {
+            for d in z..=adm.len() {
+                stats.subproblems += 1;
+                let pool = &adm[..d];
+                let levels = build_levels(inst, pool);
+                // Capacity is still a *tree construction* fact (children are
+                // capped at min{z', |F_k|}); the quick skip below only avoids
+                // trees that cannot even contain a Σ=z path.
+                let cap = suffix_capacity(&levels);
+                if cap[0] < z {
+                    continue;
+                }
+                let mut counts = Vec::with_capacity(levels.len());
+                match self.dfs(inst, &levels, 0, 0, &mut counts, z, &mut stats) {
+                    None => {
+                        // Budget exhausted: delegate the decision to DFTSP so
+                        // downstream simulation remains meaningful; keep our
+                        // (lower bound) node count.
+                        let mut fallback = Dftsp::new();
+                        let mut sched = fallback.schedule(inst, candidates);
+                        stats.nodes_visited += sched.stats.nodes_visited;
+                        sched.stats = stats;
+                        return sched;
+                    }
+                    Some(true) => {
+                        let subset = materialize_partial(&levels, &counts);
+                        let t = FeasibilityChecker::new(inst)
+                            .check(&subset)
+                            .expect("checked feasible");
+                        return Schedule::from_subset(&subset, t, stats);
+                    }
+                    Some(false) => {}
+                }
+            }
+        }
+        Schedule {
+            stats,
+            ..Schedule::empty()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuSpec};
+    use crate::coordinator::problem::EpochParams;
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::RadioParams;
+
+    fn inst(gpus: usize) -> ProblemInstance {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::new(GpuSpec::jetson_tx2(), gpus),
+            EpochParams::default(),
+            512,
+            0.0,
+        )
+    }
+
+    fn gen_reqs(specs: &[(u32, u32, f64, f64)]) -> Vec<crate::request::EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        specs
+            .iter()
+            .map(|&(s, n, tau, a)| {
+                crate::request::EpochRequest::annotate(
+                    b.build(0.0, s, n, tau, a),
+                    (1e-3f64).sqrt(),
+                    &radio,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn same_cardinality_as_dftsp() {
+        // Both are exact searches: cardinality must agree even if the chosen
+        // sets differ.
+        for gpus in [1, 2, 20] {
+            let i = inst(gpus);
+            let reqs = gen_reqs(&[
+                (128, 128, 1.6, 0.2),
+                (256, 128, 1.9, 0.2),
+                (128, 256, 1.7, 0.2),
+                (512, 512, 2.0, 0.2),
+                (128, 128, 0.9, 0.2),
+                (256, 256, 1.4, 0.2),
+                (128, 512, 1.9, 0.2),
+            ]);
+            let bf = BruteForce::default().schedule(&i, &reqs);
+            let df = Dftsp::new().schedule(&i, &reqs);
+            assert!(!bf.stats.budget_exhausted);
+            assert_eq!(bf.batch_size(), df.batch_size(), "gpus={gpus}");
+        }
+    }
+
+    #[test]
+    fn visits_at_least_as_many_nodes_as_dftsp() {
+        let i = inst(2);
+        let reqs = gen_reqs(&[
+            (128, 128, 1.2, 0.2),
+            (256, 128, 1.3, 0.2),
+            (128, 256, 1.5, 0.2),
+            (512, 512, 1.8, 0.2),
+            (128, 512, 1.9, 0.2),
+            (256, 256, 1.1, 0.2),
+            (128, 128, 1.0, 0.2),
+            (64, 256, 1.6, 0.2),
+            (96, 512, 1.7, 0.2),
+            (200, 128, 1.4, 0.2),
+        ]);
+        let bf = BruteForce::default().schedule(&i, &reqs);
+        let df = Dftsp::new().schedule(&i, &reqs);
+        assert!(
+            bf.stats.nodes_visited >= df.stats.nodes_visited,
+            "bf={} df={}",
+            bf.stats.nodes_visited,
+            df.stats.nodes_visited
+        );
+    }
+
+    #[test]
+    fn budget_guard_falls_back() {
+        let i = inst(1);
+        // Many requests, all infeasible at high z: brute force must grind.
+        let reqs = gen_reqs(&[(512, 512, 1.1, 0.2); 24]);
+        let mut bf = BruteForce::with_budget(2_000);
+        let sched = bf.schedule(&i, &reqs);
+        assert!(sched.stats.budget_exhausted);
+        // Fallback still produces a feasible (possibly empty) schedule.
+        let df = Dftsp::new().schedule(&i, &reqs);
+        assert_eq!(sched.batch_size(), df.batch_size());
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's L3 coordination contribution: per-epoch batch scheduling of
+//! LLM inference requests under joint communication/computation/memory
+//! constraints (Problem P1), solved by DFTSP (Algorithm 1) and compared
+//! against the paper's baselines.
+
+pub mod brute_force;
+pub mod dftsp;
+pub mod greedy;
+pub mod multi;
+pub mod no_batching;
+pub mod problem;
+pub mod reformulation;
+pub mod scheduler;
+pub mod static_batching;
+pub mod tree;
+
+pub use brute_force::BruteForce;
+pub use dftsp::Dftsp;
+pub use greedy::{Greedy, GreedyOrder};
+pub use multi::{Deployment, MultiLlm, PartitionPolicy};
+pub use no_batching::NoBatching;
+pub use problem::{EpochParams, FeasibilityChecker, PartialState, ProblemInstance, Violation};
+pub use reformulation::P2Coefficients;
+pub use scheduler::{Schedule, Scheduler, SearchStats};
+pub use static_batching::StaticBatching;

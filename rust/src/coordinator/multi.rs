@@ -1,0 +1,270 @@
+//! Multi-LLM deployments — the paper's §II note that "while Fig. 1 focuses
+//! on one LLM, our approach is adaptable for multiple LLMs", made concrete:
+//! the edge node hosts several (model, quantization) deployments, the GPU
+//! pool is partitioned between them, and each partition runs its own DFTSP
+//! epoch schedule over the requests routed to it.
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::problem::{EpochParams, ProblemInstance};
+use crate::coordinator::scheduler::{Schedule, Scheduler};
+use crate::model::{CostModel, LlmSpec};
+use crate::quant::QuantSpec;
+use crate::request::EpochRequest;
+
+/// One hosted (model, quantization) pair.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub model: LlmSpec,
+    pub quant: QuantSpec,
+}
+
+impl Deployment {
+    /// Peak FLOPs one "typical" request costs on this deployment — used as
+    /// the load weight for GPU partitioning.
+    fn req_weight(&self, s_pad: u32, n_typ: u32) -> f64 {
+        let cost = CostModel::new(self.model.clone());
+        self.quant.beta * cost.total_flops_per_req(s_pad, n_typ)
+    }
+}
+
+/// GPU-partitioning policy across deployments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Equal GPU counts (remainder to the earliest deployments).
+    Equal,
+    /// GPUs ∝ offered load (queued requests × per-request FLOPs).
+    LoadProportional,
+}
+
+/// Partition `total_gpus` across deployments given their queued demand.
+/// Every deployment with demand gets at least one GPU (a model that cannot
+/// run serves nothing); the result always sums to `total_gpus`.
+pub fn partition_gpus(
+    deployments: &[Deployment],
+    demand: &[Vec<EpochRequest>],
+    total_gpus: usize,
+    s_pad: u32,
+    policy: PartitionPolicy,
+) -> Vec<usize> {
+    assert_eq!(deployments.len(), demand.len());
+    let k = deployments.len();
+    assert!(k > 0 && total_gpus >= k, "need at least one GPU per deployment");
+    match policy {
+        PartitionPolicy::Equal => {
+            let base = total_gpus / k;
+            let extra = total_gpus % k;
+            (0..k).map(|i| base + usize::from(i < extra)).collect()
+        }
+        PartitionPolicy::LoadProportional => {
+            let weights: Vec<f64> = deployments
+                .iter()
+                .zip(demand.iter())
+                .map(|(d, q)| {
+                    let load: f64 = q
+                        .iter()
+                        .map(|r| d.req_weight(s_pad, r.req.output_tokens))
+                        .sum();
+                    load.max(1.0) // idle deployments keep a floor weight
+                })
+                .collect();
+            let total_w: f64 = weights.iter().sum();
+            // one guaranteed GPU each, remainder largest-remainder apportioned
+            let spare = total_gpus - k;
+            let quotas: Vec<f64> = weights.iter().map(|w| spare as f64 * w / total_w).collect();
+            let mut alloc: Vec<usize> = quotas.iter().map(|q| 1 + q.floor() as usize).collect();
+            let mut assigned: usize = alloc.iter().sum();
+            let mut rema: Vec<(usize, f64)> = quotas
+                .iter()
+                .enumerate()
+                .map(|(i, q)| (i, q - q.floor()))
+                .collect();
+            rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            let mut ri = 0;
+            while assigned < total_gpus {
+                alloc[rema[ri % k].0] += 1;
+                assigned += 1;
+                ri += 1;
+            }
+            alloc
+        }
+    }
+}
+
+/// The multi-LLM coordinator: routes per-deployment request queues onto GPU
+/// partitions and schedules each partition independently.
+pub struct MultiLlm {
+    pub deployments: Vec<Deployment>,
+    pub policy: PartitionPolicy,
+    schedulers: Vec<Box<dyn Scheduler>>,
+}
+
+impl MultiLlm {
+    /// Build with one scheduler instance per deployment (DFTSP by default
+    /// via `with_dftsp`).
+    pub fn new(
+        deployments: Vec<Deployment>,
+        policy: PartitionPolicy,
+        schedulers: Vec<Box<dyn Scheduler>>,
+    ) -> Self {
+        assert_eq!(deployments.len(), schedulers.len());
+        MultiLlm {
+            deployments,
+            policy,
+            schedulers,
+        }
+    }
+
+    pub fn with_dftsp(deployments: Vec<Deployment>, policy: PartitionPolicy) -> Self {
+        let schedulers = deployments
+            .iter()
+            .map(|_| Box::new(crate::coordinator::Dftsp::new()) as Box<dyn Scheduler>)
+            .collect();
+        Self::new(deployments, policy, schedulers)
+    }
+
+    /// One epoch across every deployment. `demand[i]` are the requests
+    /// routed to deployment i (the application API names the target model).
+    /// Returns (per-deployment schedule, per-deployment GPU count).
+    pub fn schedule_epoch(
+        &mut self,
+        cluster: &ClusterSpec,
+        epoch: &EpochParams,
+        s_pad: u32,
+        now: f64,
+        demand: &[Vec<EpochRequest>],
+    ) -> (Vec<Schedule>, Vec<usize>) {
+        let gpus = partition_gpus(
+            &self.deployments,
+            demand,
+            cluster.num_gpus,
+            s_pad,
+            self.policy,
+        );
+        let mut out = Vec::with_capacity(self.deployments.len());
+        for ((dep, sched), (&g, reqs)) in self
+            .deployments
+            .iter()
+            .zip(self.schedulers.iter_mut())
+            .zip(gpus.iter().zip(demand.iter()))
+        {
+            let inst = ProblemInstance::new(
+                CostModel::new(dep.model.clone()),
+                dep.quant.clone(),
+                ClusterSpec::new(cluster.gpu.clone(), g),
+                epoch.clone(),
+                s_pad,
+                now,
+            );
+            out.push(sched.schedule(&inst, reqs));
+        }
+        (out, gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::RadioParams;
+
+    fn deployments() -> Vec<Deployment> {
+        vec![
+            Deployment {
+                model: LlmSpec::bloom_3b(),
+                quant: quant::default_quant(),
+            },
+            Deployment {
+                model: LlmSpec::bloom_7b(),
+                quant: quant::default_quant(),
+            },
+        ]
+    }
+
+    fn reqs(n: usize, n_out: u32) -> Vec<EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        (0..n)
+            .map(|_| {
+                EpochRequest::annotate(
+                    b.build(0.0, 128, n_out, 2.0, 0.2),
+                    (1e-3f64).sqrt(),
+                    &radio,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn partitions_sum_to_total() {
+        let deps = deployments();
+        let demand = vec![reqs(10, 128), reqs(3, 512)];
+        for policy in [PartitionPolicy::Equal, PartitionPolicy::LoadProportional] {
+            for total in [2usize, 7, 20, 21] {
+                let p = partition_gpus(&deps, &demand, total, 512, policy);
+                assert_eq!(p.iter().sum::<usize>(), total, "{policy:?} total {total}");
+                assert!(p.iter().all(|&g| g >= 1), "{policy:?}: everyone gets a GPU");
+            }
+        }
+    }
+
+    #[test]
+    fn load_proportional_favors_loaded_deployment() {
+        let deps = deployments();
+        // deployment 0 heavily loaded, deployment 1 nearly idle
+        let demand = vec![reqs(40, 512), reqs(1, 128)];
+        let p = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional);
+        assert!(p[0] > p[1], "loaded deployment gets more GPUs: {p:?}");
+        let eq = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::Equal);
+        assert_eq!(eq, vec![10, 10]);
+    }
+
+    #[test]
+    fn bigger_model_weighs_more() {
+        let deps = deployments();
+        // identical queue sizes: 7.1B requests cost more FLOPs, so the 7.1B
+        // deployment should receive at least as many GPUs.
+        let demand = vec![reqs(10, 256), reqs(10, 256)];
+        let p = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional);
+        assert!(p[1] >= p[0], "{p:?}");
+    }
+
+    #[test]
+    fn schedule_epoch_runs_both_deployments() {
+        let mut multi =
+            MultiLlm::with_dftsp(deployments(), PartitionPolicy::LoadProportional);
+        let cluster = ClusterSpec::paper_default();
+        let demand = vec![reqs(8, 128), reqs(8, 128)];
+        let (schedules, gpus) =
+            multi.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+        assert_eq!(schedules.len(), 2);
+        assert_eq!(gpus.iter().sum::<usize>(), 20);
+        // both deployments serve something under light load
+        assert!(schedules[0].batch_size() > 0);
+        assert!(schedules[1].batch_size() > 0);
+        // scheduled ids come from the right queue
+        for (s, q) in schedules.iter().zip(demand.iter()) {
+            for id in &s.scheduled {
+                assert!(q.iter().any(|r| r.id() == *id));
+            }
+        }
+    }
+
+    #[test]
+    fn proportional_beats_equal_under_skew() {
+        // All the load on the 3B deployment: proportional partitioning must
+        // serve at least as many requests as the equal split.
+        let deps = deployments();
+        let demand = vec![reqs(30, 256), reqs(0, 128)];
+        let cluster = ClusterSpec::paper_default();
+        let total = |policy| {
+            let mut m = MultiLlm::with_dftsp(deps.clone(), policy);
+            let (s, _) =
+                m.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+            s.iter().map(|x| x.batch_size()).sum::<usize>()
+        };
+        assert!(total(PartitionPolicy::LoadProportional) >= total(PartitionPolicy::Equal));
+    }
+}

@@ -1,0 +1,221 @@
+//! NoB — no-batching baseline (paper §IV benchmark 2).
+//!
+//! "Each GPU accepts a request once idle." Requests run solo on a single
+//! GPU at its native speed; there is no batching parallelism, so per-request
+//! latency is low but aggregate throughput is bounded by the GPU count. The
+//! scheduler is stateful: a long generation occupies its GPU across epochs.
+
+use crate::cluster::GpuPool;
+use crate::coordinator::problem::ProblemInstance;
+use crate::coordinator::scheduler::{Schedule, Scheduler, SearchStats};
+use crate::request::EpochRequest;
+use crate::wireless::BandwidthLedger;
+
+/// One-request-per-GPU scheduling.
+#[derive(Debug, Clone)]
+pub struct NoBatching {
+    pool: Option<GpuPool>,
+}
+
+impl Default for NoBatching {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NoBatching {
+    pub fn new() -> Self {
+        NoBatching { pool: None }
+    }
+
+    /// Solo run time of a request on one GPU (no padding: the lone prompt is
+    /// its own maximum).
+    pub fn solo_compute_time(inst: &ProblemInstance, r: &EpochRequest) -> f64 {
+        let flops = inst
+            .cost
+            .total_flops_per_req(r.req.prompt_tokens, r.req.output_tokens);
+        inst.quant.beta * flops / inst.cluster.gpu.flops
+    }
+}
+
+impl Scheduler for NoBatching {
+    fn name(&self) -> &'static str {
+        "NoB"
+    }
+
+    fn schedule(&mut self, inst: &ProblemInstance, candidates: &[EpochRequest]) -> Schedule {
+        let pool = self
+            .pool
+            .get_or_insert_with(|| GpuPool::new(inst.cluster.num_gpus));
+
+        // Accuracy admission + per-GPU memory screen (the model replica plus
+        // one request's KV must fit a single GPU).
+        let mut adm: Vec<&EpochRequest> = candidates
+            .iter()
+            .filter(|r| inst.admits(r))
+            .filter(|r| r.rho_min_u <= 1.0 && r.rho_min_d <= 1.0)
+            .filter(|r| {
+                let kv = inst
+                    .cost
+                    .kv_peak_bytes_per_req(r.req.prompt_tokens, r.req.output_tokens);
+                inst.quant.alpha * (inst.cost.weight_bytes() + kv) as f64
+                    <= inst.cluster.gpu.mem_bytes as f64
+            })
+            .collect();
+        if adm.is_empty() {
+            return Schedule::empty();
+        }
+        // FCFS.
+        adm.sort_by(|a, b| {
+            a.req
+                .arrival
+                .partial_cmp(&b.req.arrival)
+                .unwrap()
+                .then(a.id().cmp(&b.id()))
+        });
+
+        let mut ledger = BandwidthLedger::new();
+        let mut scheduled = Vec::new();
+        let mut per_request_compute = Vec::new();
+        let mut rho_u_total = 0.0;
+        let mut rho_d_total = 0.0;
+        let mut max_t = 0.0f64;
+        for r in adm {
+            let Some(gpu) = pool.idle_gpu(inst.now) else {
+                break; // all GPUs busy
+            };
+            if !ledger.alloc(r.rho_min_u, r.rho_min_d) {
+                continue; // bandwidth exhausted for this epoch
+            }
+            let t = Self::solo_compute_time(inst, r);
+            pool.occupy(gpu, inst.now + inst.epoch.t_u + t);
+            scheduled.push(r.id());
+            per_request_compute.push((r.id(), t));
+            rho_u_total += r.rho_min_u;
+            rho_d_total += r.rho_min_d;
+            max_t = max_t.max(t);
+        }
+        Schedule {
+            scheduled,
+            compute_time: max_t,
+            per_request_compute,
+            rho_u_total,
+            rho_d_total,
+            stats: SearchStats::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuSpec};
+    use crate::coordinator::problem::EpochParams;
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::RadioParams;
+
+    fn inst(gpus: usize, now: f64) -> ProblemInstance {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::new(GpuSpec::jetson_tx2(), gpus),
+            EpochParams::default(),
+            512,
+            now,
+        )
+    }
+
+    fn gen_sized(n: usize, prompt: u32, out: u32) -> Vec<EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        (0..n)
+            .map(|k| {
+                EpochRequest::annotate(
+                    b.build(k as f64 * 1e-3, prompt, out, 30.0, 0.2),
+                    (1e-3f64).sqrt(),
+                    &radio,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect()
+    }
+
+    fn gen(n: usize) -> Vec<EpochRequest> {
+        gen_sized(n, 128, 128)
+    }
+
+    #[test]
+    fn capped_by_gpu_count() {
+        let mut s = NoBatching::new();
+        let sched = s.schedule(&inst(3, 0.0), &gen(10));
+        assert_eq!(sched.batch_size(), 3);
+        assert_eq!(sched.per_request_compute.len(), 3);
+    }
+
+    #[test]
+    fn gpus_stay_busy_across_epochs() {
+        let mut s = NoBatching::new();
+        // 512-prompt/512-output solo runs take ≈3 s on one TX2 — longer than
+        // the 2 s epoch.
+        let first = s.schedule(&inst(2, 0.0), &gen_sized(4, 512, 512));
+        assert_eq!(first.batch_size(), 2);
+        // At the next epoch boundary both GPUs are still busy.
+        let second = s.schedule(&inst(2, 2.0), &gen_sized(4, 512, 512));
+        assert_eq!(second.batch_size(), 0);
+    }
+
+    #[test]
+    fn solo_time_faster_than_batched_share() {
+        // A single request alone is quicker than the same request inside a
+        // 20-deep batch on aggregate hardware — the NoB latency advantage.
+        let i = inst(20, 0.0);
+        let reqs = gen(1);
+        let solo = NoBatching::solo_compute_time(&i, &reqs[0]);
+        assert!(solo > 0.0);
+        let batched_per_req = i.quant.beta
+            * (i.cost.prefill_flops_per_req(512) + i.cost.decode_flops_per_req(512, 128))
+            / i.cluster.total_flops();
+        // padded batched request costs more FLOPs than the unpadded solo run
+        assert!(batched_per_req * 20.0 > solo * 0.9);
+    }
+
+    #[test]
+    fn per_request_times_vary() {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let short = EpochRequest::annotate(
+            b.build(0.0, 128, 128, 30.0, 0.2),
+            (1e-3f64).sqrt(),
+            &radio,
+            0.25,
+            0.25,
+        );
+        let long = EpochRequest::annotate(
+            b.build(0.0, 128, 512, 30.0, 0.2),
+            (1e-3f64).sqrt(),
+            &radio,
+            0.25,
+            0.25,
+        );
+        let i = inst(2, 0.0);
+        let mut s = NoBatching::new();
+        let sched = s.schedule(&i, &[short.clone(), long.clone()]);
+        assert_eq!(sched.batch_size(), 2);
+        let t_short = sched
+            .per_request_compute
+            .iter()
+            .find(|(id, _)| *id == short.id())
+            .unwrap()
+            .1;
+        let t_long = sched
+            .per_request_compute
+            .iter()
+            .find(|(id, _)| *id == long.id())
+            .unwrap()
+            .1;
+        assert!(t_long > t_short);
+    }
+}

@@ -1,0 +1,470 @@
+//! Problem instance and feasibility checking — paper P1, constraints
+//! (1a)–(1f).
+//!
+//! `ProblemInstance` freezes everything that is constant within one epoch
+//! (model, quantization, cluster, radio slots, padded prompt length, batch
+//! start time). `FeasibilityChecker` evaluates a candidate subset against the
+//! exact published constraints; `PartialState` is its incremental, monotone
+//! form used for online tree pruning inside DFTSP.
+
+use crate::cluster::ClusterSpec;
+use crate::model::CostModel;
+use crate::quant::QuantSpec;
+use crate::request::EpochRequest;
+
+/// Epoch timing protocol (paper Fig. 2). Defaults = §IV: 2 s epochs with
+/// T_U = T_D = 250 ms; T_C spans the full epoch thanks to the overlap of
+/// adjacent epochs' T_D/T_U slots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochParams {
+    pub duration: f64,
+    pub t_u: f64,
+    pub t_d: f64,
+}
+
+impl Default for EpochParams {
+    fn default() -> Self {
+        EpochParams {
+            duration: 2.0,
+            t_u: 0.25,
+            t_d: 0.25,
+        }
+    }
+}
+
+impl EpochParams {
+    /// The computation slot available to a batch — with the paper's
+    /// overlapped timeline, a full epoch.
+    pub fn t_c(&self) -> f64 {
+        self.duration
+    }
+}
+
+/// Everything constant during one scheduling decision.
+#[derive(Debug, Clone)]
+pub struct ProblemInstance {
+    pub cost: CostModel,
+    pub quant: QuantSpec,
+    pub cluster: ClusterSpec,
+    pub epoch: EpochParams,
+    /// s' — the padded prompt length for the Initial Stage (all prompts in a
+    /// batch are extended to this length for parallel execution).
+    pub s_pad: u32,
+    /// Batch start time (the epoch boundary at which T_U begins).
+    pub now: f64,
+}
+
+impl ProblemInstance {
+    pub fn new(
+        cost: CostModel,
+        quant: QuantSpec,
+        cluster: ClusterSpec,
+        epoch: EpochParams,
+        s_pad: u32,
+        now: f64,
+    ) -> Self {
+        ProblemInstance {
+            cost,
+            quant,
+            cluster,
+            epoch,
+            s_pad,
+            now,
+        }
+    }
+
+    /// Per-request compute slack in seconds available for β(tᴵ+tᴬ):
+    /// τᵢ − t_{w,i} − T_U − T_D (constraint 1d rearranged).
+    pub fn compute_slack(&self, r: &EpochRequest) -> f64 {
+        r.req.latency_req - r.req.waited(self.now) - self.epoch.t_u - self.epoch.t_d
+    }
+
+    /// Peak KV bytes a request occupies (unscaled; α applied at check time).
+    pub fn kv_bytes(&self, n_out: u32) -> u64 {
+        self.cost.kv_peak_bytes_per_req(self.s_pad, n_out)
+    }
+
+    /// β-scaled compute seconds for a batch described by (count, total decode
+    /// FLOPs) on the aggregate cluster.
+    pub fn compute_time(&self, batch: usize, decode_flops: f64) -> f64 {
+        let prefill = batch as f64 * self.cost.prefill_flops_per_req(self.s_pad);
+        self.quant.beta * (prefill + decode_flops) / self.cluster.total_flops()
+    }
+
+    /// Accuracy admission (constraint 1e): is this request servable at all by
+    /// the deployed quantization?
+    pub fn admits(&self, r: &EpochRequest) -> bool {
+        self.quant
+            .satisfies_accuracy(&self.cost.spec.name, r.req.accuracy_req)
+    }
+
+    /// The admission filter Ĩ — requests satisfying (1e) plus the trivial
+    /// individual-feasibility screens (a request that alone violates a
+    /// constraint can never appear in any feasible batch).
+    pub fn admissible<'a>(&self, reqs: &'a [EpochRequest]) -> Vec<&'a EpochRequest> {
+        reqs.iter()
+            .filter(|r| self.admits(r))
+            .filter(|r| r.rho_min_u <= 1.0 && r.rho_min_d <= 1.0)
+            .filter(|r| self.compute_slack(r) > 0.0)
+            .filter(|r| {
+                self.cluster.batch_fits_memory(
+                    &self.cost,
+                    &self.quant,
+                    &[self.kv_bytes(r.req.output_tokens)],
+                )
+            })
+            .collect()
+    }
+}
+
+/// Which constraint a subset violates (for diagnostics and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Violation {
+    /// (1a) Σ ρ_min^U > 1
+    Uplink,
+    /// (1b) Σ ρ_min^D > 1
+    Downlink,
+    /// (1c) α(m1 + m2^I + m2^A) > M
+    Memory,
+    /// (1d) some scheduled request misses its deadline
+    Latency,
+    /// (1e) some scheduled request's accuracy requirement unmet
+    Accuracy,
+}
+
+/// Exact feasibility evaluation of a complete subset.
+pub struct FeasibilityChecker<'a> {
+    pub inst: &'a ProblemInstance,
+}
+
+impl<'a> FeasibilityChecker<'a> {
+    pub fn new(inst: &'a ProblemInstance) -> Self {
+        FeasibilityChecker { inst }
+    }
+
+    /// Check constraints (1a)–(1e) for subset `s`. `Ok(batch_compute_time)`
+    /// on success.
+    pub fn check(&self, s: &[&EpochRequest]) -> Result<f64, Violation> {
+        let inst = self.inst;
+        if s.is_empty() {
+            return Ok(0.0);
+        }
+        // (1e)
+        if s.iter().any(|r| !inst.admits(r)) {
+            return Err(Violation::Accuracy);
+        }
+        // (1a), (1b)
+        let rho_u: f64 = s.iter().map(|r| r.rho_min_u).sum();
+        if rho_u > 1.0 + 1e-12 {
+            return Err(Violation::Uplink);
+        }
+        let rho_d: f64 = s.iter().map(|r| r.rho_min_d).sum();
+        if rho_d > 1.0 + 1e-12 {
+            return Err(Violation::Downlink);
+        }
+        // (1c)
+        let kv: Vec<u64> = s
+            .iter()
+            .map(|r| inst.kv_bytes(r.req.output_tokens))
+            .collect();
+        if !inst
+            .cluster
+            .batch_fits_memory(&inst.cost, &inst.quant, &kv)
+        {
+            return Err(Violation::Memory);
+        }
+        // (1d): the whole batch finishes together; every member must meet its
+        // own deadline.
+        let decode_flops: f64 = s
+            .iter()
+            .map(|r| {
+                inst.cost
+                    .decode_flops_per_req(inst.s_pad, r.req.output_tokens)
+            })
+            .sum();
+        let t_compute = inst.compute_time(s.len(), decode_flops);
+        let min_slack = s
+            .iter()
+            .map(|r| inst.compute_slack(r))
+            .fold(f64::INFINITY, f64::min);
+        if t_compute > min_slack {
+            return Err(Violation::Latency);
+        }
+        // The batch must also fit the computation slot itself.
+        if t_compute > inst.epoch.t_c() {
+            return Err(Violation::Latency);
+        }
+        Ok(t_compute)
+    }
+}
+
+/// Monotone partial-batch state for DFS pruning: every `add` makes all
+/// tracked quantities weakly worse, so a violated partial can never become
+/// feasible again — the soundness condition for online tree pruning.
+#[derive(Debug, Clone)]
+pub struct PartialState {
+    pub count: usize,
+    pub rho_u: f64,
+    pub rho_d: f64,
+    pub kv_total: u64,
+    pub kv_max: u64,
+    pub decode_flops: f64,
+    pub min_slack: f64,
+}
+
+impl PartialState {
+    pub fn empty() -> Self {
+        PartialState {
+            count: 0,
+            rho_u: 0.0,
+            rho_d: 0.0,
+            kv_total: 0,
+            kv_max: 0,
+            decode_flops: 0.0,
+            min_slack: f64::INFINITY,
+        }
+    }
+
+    /// Add a block of `count` requests with aggregate uplink/downlink
+    /// fractions, identical per-request KV bytes, aggregate decode FLOPs and
+    /// the block's minimum compute slack.
+    pub fn add_block(
+        &self,
+        count: usize,
+        rho_u: f64,
+        rho_d: f64,
+        kv_per_req: u64,
+        decode_flops: f64,
+        block_min_slack: f64,
+    ) -> PartialState {
+        PartialState {
+            count: self.count + count,
+            rho_u: self.rho_u + rho_u,
+            rho_d: self.rho_d + rho_d,
+            kv_total: self.kv_total + kv_per_req * count as u64,
+            kv_max: self.kv_max.max(if count > 0 { kv_per_req } else { 0 }),
+            decode_flops: self.decode_flops + decode_flops,
+            min_slack: self.min_slack.min(block_min_slack),
+        }
+    }
+
+    /// Can this partial still be part of a feasible batch? (Monotone bound —
+    /// `false` is a proof that every extension is infeasible.)
+    pub fn feasible(&self, inst: &ProblemInstance) -> bool {
+        if self.count == 0 {
+            return true;
+        }
+        if self.rho_u > 1.0 + 1e-12 || self.rho_d > 1.0 + 1e-12 {
+            return false;
+        }
+        // Memory: same worst-GPU bound as ClusterSpec::batch_fits_memory.
+        let m_gpu = inst.cluster.gpu.mem_bytes as f64;
+        let weights = inst.cost.weight_bytes() as f64;
+        let budget = m_gpu / inst.quant.alpha - weights;
+        if budget <= 0.0 {
+            return false;
+        }
+        let per_gpu_kv = if self.count <= inst.cluster.num_gpus {
+            self.kv_max as f64
+        } else {
+            self.kv_total as f64 / inst.cluster.num_gpus as f64 + self.kv_max as f64
+        };
+        if per_gpu_kv > budget {
+            return false;
+        }
+        // Latency lower bound: even with no further additions the batch costs
+        // compute_time(count, decode_flops); min_slack only shrinks later.
+        let t = inst.compute_time(self.count, self.decode_flops);
+        t <= self.min_slack && t <= inst.epoch.t_c()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::model::LlmSpec;
+    use crate::quant;
+    use crate::request::{Request, RequestBuilder};
+    use crate::wireless::RadioParams;
+
+    fn inst() -> ProblemInstance {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::paper_default(),
+            EpochParams::default(),
+            512,
+            0.0,
+        )
+    }
+
+    fn er(req: Request) -> EpochRequest {
+        EpochRequest::annotate(req, (1e-3f64).sqrt(), &RadioParams::default(), 0.25, 0.25)
+    }
+
+    fn mk(b: &mut RequestBuilder, n: u32, tau: f64, a: f64) -> EpochRequest {
+        er(b.build(0.0, 128, n, tau, a))
+    }
+
+    #[test]
+    fn empty_batch_feasible() {
+        let i = inst();
+        assert_eq!(FeasibilityChecker::new(&i).check(&[]), Ok(0.0));
+    }
+
+    #[test]
+    fn single_modest_request_feasible() {
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        let r = mk(&mut b, 128, 2.0, 0.5);
+        let t = FeasibilityChecker::new(&i).check(&[&r]).unwrap();
+        assert!(t > 0.0 && t < 2.0, "compute time {t}");
+    }
+
+    #[test]
+    fn accuracy_violation_detected() {
+        let mut i = inst();
+        // Deploy W4A16/ZQ-Local on BLOOM-3B: dPPL 0.92 → f = 0.08.
+        i.quant = quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::ZqLocal).unwrap();
+        let mut b = RequestBuilder::new();
+        let strict = mk(&mut b, 128, 2.0, 0.9);
+        assert_eq!(
+            FeasibilityChecker::new(&i).check(&[&strict]),
+            Err(Violation::Accuracy)
+        );
+        let lax = mk(&mut b, 128, 2.0, 0.05);
+        assert!(FeasibilityChecker::new(&i).check(&[&lax]).is_ok());
+    }
+
+    #[test]
+    fn latency_violation_detected() {
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        // τ = 0.55 s leaves only 50 ms of compute slack after T_U + T_D —
+        // far below one 512-token prefill+decode on the cluster.
+        let tight = mk(&mut b, 512, 0.55, 0.5);
+        assert_eq!(
+            FeasibilityChecker::new(&i).check(&[&tight]),
+            Err(Violation::Latency)
+        );
+    }
+
+    #[test]
+    fn uplink_violation_detected() {
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        // Terrible channel makes rho_min huge (h ≈ 5e-8 ⇒ SNR ≈ 3e-3,
+        // spectral efficiency ≈ 4.5e-3 bit/s/Hz ⇒ ρ_min ≈ 0.36 for 512 tok).
+        let radio = RadioParams::default();
+        let reqs: Vec<EpochRequest> = (0..3)
+            .map(|_| {
+                EpochRequest::annotate(b.build(0.0, 512, 128, 60.0, 0.0), 5e-8, &radio, 0.25, 0.25)
+            })
+            .collect();
+        assert!(reqs[0].rho_min_u > 0.34 && reqs[0].rho_min_u <= 1.0);
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        assert_eq!(
+            FeasibilityChecker::new(&i).check(&refs),
+            Err(Violation::Uplink)
+        );
+    }
+
+    #[test]
+    fn memory_violation_detected() {
+        // Small-memory cluster: a few 512-out requests overflow the KV budget.
+        let mut i = inst();
+        i.cluster = ClusterSpec::new(
+            crate::cluster::GpuSpec {
+                name: "small".into(),
+                flops: 1.33e12,
+                mem_bytes: 7 * (1 << 30) / 2, // 3.5 GiB; weights*α ≈ 3.3 GiB
+            },
+            1,
+        );
+        let mut b = RequestBuilder::new();
+        let reqs: Vec<EpochRequest> = (0..6).map(|_| mk(&mut b, 512, 3600.0, 0.0)).collect();
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        assert_eq!(
+            FeasibilityChecker::new(&i).check(&refs),
+            Err(Violation::Memory)
+        );
+    }
+
+    #[test]
+    fn partial_state_matches_full_checker() {
+        // Building the same batch through PartialState must agree with the
+        // exact checker on feasibility for same-slack, same-level batches.
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        let reqs: Vec<EpochRequest> = (0..8).map(|_| mk(&mut b, 256, 2.0, 0.5)).collect();
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        let full = FeasibilityChecker::new(&i).check(&refs).is_ok();
+
+        let mut p = PartialState::empty();
+        for r in &reqs {
+            p = p.add_block(
+                1,
+                r.rho_min_u,
+                r.rho_min_d,
+                i.kv_bytes(r.req.output_tokens),
+                i.cost.decode_flops_per_req(i.s_pad, r.req.output_tokens),
+                i.compute_slack(r),
+            );
+        }
+        assert_eq!(p.feasible(&i), full);
+        assert_eq!(p.count, 8);
+    }
+
+    #[test]
+    fn partial_state_monotone() {
+        // Once infeasible, adding more blocks never restores feasibility.
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        let mut p = PartialState::empty();
+        let mut was_infeasible = false;
+        for _ in 0..2000 {
+            let r = mk(&mut b, 512, 1.2, 0.5);
+            p = p.add_block(
+                1,
+                r.rho_min_u,
+                r.rho_min_d,
+                i.kv_bytes(512),
+                i.cost.decode_flops_per_req(i.s_pad, 512),
+                i.compute_slack(&r),
+            );
+            if was_infeasible {
+                assert!(!p.feasible(&i));
+            }
+            if !p.feasible(&i) {
+                was_infeasible = true;
+            }
+        }
+        assert!(was_infeasible);
+    }
+
+    #[test]
+    fn admissible_filters() {
+        let mut i = inst();
+        i.quant = quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::Gptq).unwrap();
+        // BLOOM-3B dPPL 0.75 → f = 0.25.
+        let mut b = RequestBuilder::new();
+        let ok = mk(&mut b, 128, 2.0, 0.2);
+        let too_strict = mk(&mut b, 128, 2.0, 0.3);
+        let too_late = mk(&mut b, 128, 0.4, 0.1); // slack < 0 after T_U+T_D
+        let reqs = vec![ok.clone(), too_strict, too_late];
+        let adm = i.admissible(&reqs);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].id(), ok.id());
+    }
+
+    #[test]
+    fn compute_slack_accounts_waiting() {
+        let mut i = inst();
+        i.now = 1.0;
+        let mut b = RequestBuilder::new();
+        let r = er(b.build(0.5, 128, 128, 2.0, 0.5));
+        // waited 0.5, slack = 2.0 - 0.5 - 0.25 - 0.25 = 1.0
+        assert!((i.compute_slack(&r) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,77 @@
+//! The `Scheduler` interface every batching policy implements, and the
+//! `Schedule` decision it returns.
+
+use crate::coordinator::problem::ProblemInstance;
+use crate::request::{EpochRequest, RequestId};
+
+/// Search-effort accounting (Table III compares these between DFTSP and the
+/// brute-force tree search).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchStats {
+    /// Tree nodes visited across all (z, d) subproblems.
+    pub nodes_visited: u64,
+    /// Complete candidate solutions submitted to the exact checker.
+    pub solutions_checked: u64,
+    /// Nodes skipped by the capacity rule Σ_{k≥N(v)}|F_k| < z − Σ v.
+    pub pruned_capacity: u64,
+    /// Subtrees cut because a monotone partial constraint was violated.
+    pub pruned_constraint: u64,
+    /// (z, d) subproblems attempted.
+    pub subproblems: u64,
+    /// True if a node budget stopped the search early (brute force guard).
+    pub budget_exhausted: bool,
+}
+
+/// A scheduling decision for one epoch.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    /// The scheduled requests (paper: S, the set with x_i = 1).
+    pub scheduled: Vec<RequestId>,
+    /// β-scaled batch compute time t = β(tᴵ + tᴬ) in seconds.
+    pub compute_time: f64,
+    /// Per-request compute seconds. For synchronous batch policies this is
+    /// `compute_time` for every member (the batch finishes together); for
+    /// NoB it is each request's solo run time on its GPU.
+    pub per_request_compute: Vec<(RequestId, f64)>,
+    /// Σ ρ_min^U and Σ ρ_min^D actually committed.
+    pub rho_u_total: f64,
+    pub rho_d_total: f64,
+    /// Search-effort statistics.
+    pub stats: SearchStats,
+}
+
+impl Schedule {
+    pub fn empty() -> Schedule {
+        Schedule::default()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.scheduled.len()
+    }
+
+    /// Build a schedule from a validated subset (synchronous batch: every
+    /// member completes after `compute_time`).
+    pub fn from_subset(subset: &[&EpochRequest], compute_time: f64, stats: SearchStats) -> Self {
+        Schedule {
+            scheduled: subset.iter().map(|r| r.id()).collect(),
+            compute_time,
+            per_request_compute: subset.iter().map(|r| (r.id(), compute_time)).collect(),
+            rho_u_total: subset.iter().map(|r| r.rho_min_u).sum(),
+            rho_d_total: subset.iter().map(|r| r.rho_min_d).sum(),
+            stats,
+        }
+    }
+}
+
+/// A per-epoch batch scheduling policy.
+pub trait Scheduler {
+    /// Human-readable policy name ("DFTSP", "StB", "NoB", "BruteForce").
+    fn name(&self) -> &'static str;
+
+    /// Decide which of `candidates` to run in the epoch described by `inst`.
+    ///
+    /// Implementations must only return subsets that satisfy constraints
+    /// (1a)–(1f) — except deliberately deadline-oblivious baselines (StB),
+    /// which document the deviation.
+    fn schedule(&mut self, inst: &ProblemInstance, candidates: &[EpochRequest]) -> Schedule;
+}

@@ -1,0 +1,221 @@
+//! StB — static batching baseline (paper §IV benchmark 1).
+//!
+//! "The edge node has a set batch size based on epoch duration and LLM
+//! parameters to avoid GPU overflow." The batch size is fixed *offline* from
+//! worst-case assumptions (every request at the maximum output length), and
+//! requests are admitted FCFS up to that size; per-request deadlines play no
+//! role in selection — the defining weakness the paper's Fig. 5 exposes.
+
+use crate::coordinator::problem::ProblemInstance;
+use crate::coordinator::scheduler::{Schedule, Scheduler, SearchStats};
+use crate::request::EpochRequest;
+use crate::wireless::BandwidthLedger;
+
+/// Static batching with an offline-fixed batch size.
+#[derive(Debug, Clone, Default)]
+pub struct StaticBatching {
+    /// Optional manual override of the computed batch size.
+    pub fixed_batch: Option<usize>,
+}
+
+impl StaticBatching {
+    pub fn new() -> Self {
+        StaticBatching::default()
+    }
+
+    /// The offline batch-size rule: the largest batch that can neither
+    /// overflow memory nor overrun its share of the epoch even if *every*
+    /// request demands the maximum output length. The compute budget is half
+    /// the usable slot (T_C − T_U − T_D): the conservative static
+    /// provisioning headroom an operator would configure so a worst-case
+    /// batch still leaves time for queueing jitter — without it, StB batches
+    /// always consume the whole epoch and never meet a sub-epoch deadline.
+    pub fn static_batch_size(inst: &ProblemInstance, n_max: u32) -> usize {
+        let kv_worst = inst.kv_bytes(n_max);
+        let by_mem = inst
+            .cluster
+            .max_batch_by_memory(&inst.cost, &inst.quant, kv_worst);
+        // Compute: B · β(F_prefill + F_decode_worst)/C_total ≤ budget.
+        let budget = 0.5 * (inst.epoch.t_c() - inst.epoch.t_u - inst.epoch.t_d).max(0.0);
+        let per_req = inst.quant.beta
+            * (inst.cost.prefill_flops_per_req(inst.s_pad)
+                + inst.cost.decode_flops_per_req(inst.s_pad, n_max))
+            / inst.cluster.total_flops();
+        let by_compute = if per_req <= 0.0 {
+            usize::MAX
+        } else {
+            (budget / per_req).floor() as usize
+        };
+        by_mem.min(by_compute)
+    }
+}
+
+impl Scheduler for StaticBatching {
+    fn name(&self) -> &'static str {
+        "StB"
+    }
+
+    fn schedule(&mut self, inst: &ProblemInstance, candidates: &[EpochRequest]) -> Schedule {
+        // Accuracy admission still applies (it is a property of the deployed
+        // model, not of the batching policy). Latency is deliberately NOT
+        // consulted.
+        let mut adm: Vec<&EpochRequest> = candidates
+            .iter()
+            .filter(|r| inst.admits(r))
+            .filter(|r| r.rho_min_u <= 1.0 && r.rho_min_d <= 1.0)
+            .collect();
+        if adm.is_empty() {
+            return Schedule::empty();
+        }
+        // FCFS: earliest arrival first.
+        adm.sort_by(|a, b| {
+            a.req
+                .arrival
+                .partial_cmp(&b.req.arrival)
+                .unwrap()
+                .then(a.id().cmp(&b.id()))
+        });
+
+        let n_max = candidates
+            .iter()
+            .map(|r| r.req.output_tokens)
+            .max()
+            .unwrap_or(512)
+            .max(512);
+        let batch_cap = self
+            .fixed_batch
+            .unwrap_or_else(|| Self::static_batch_size(inst, n_max));
+
+        let mut ledger = BandwidthLedger::new();
+        let mut selected: Vec<&EpochRequest> = Vec::new();
+        for r in adm {
+            if selected.len() >= batch_cap {
+                break;
+            }
+            if ledger.alloc(r.rho_min_u, r.rho_min_d) {
+                selected.push(r);
+            }
+        }
+        if selected.is_empty() {
+            return Schedule::empty();
+        }
+        let decode_flops: f64 = selected
+            .iter()
+            .map(|r| {
+                inst.cost
+                    .decode_flops_per_req(inst.s_pad, r.req.output_tokens)
+            })
+            .sum();
+        let t = inst.compute_time(selected.len(), decode_flops);
+        Schedule::from_subset(&selected, t, SearchStats::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuSpec};
+    use crate::coordinator::problem::EpochParams;
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::RadioParams;
+
+    fn inst(gpus: usize) -> ProblemInstance {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::new(GpuSpec::jetson_tx2(), gpus),
+            EpochParams::default(),
+            512,
+            0.0,
+        )
+    }
+
+    fn gen(specs: &[(f64, u32, u32, f64, f64)]) -> Vec<EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        specs
+            .iter()
+            .map(|&(at, s, n, tau, a)| {
+                EpochRequest::annotate(
+                    b.build(at, s, n, tau, a),
+                    (1e-3f64).sqrt(),
+                    &radio,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_size_is_worst_case_conservative() {
+        let i = inst(20);
+        let b = StaticBatching::static_batch_size(&i, 512);
+        assert!(b > 0);
+        // Worst-case sizing must not exceed what the epoch can compute at
+        // max output length.
+        let per_req = i.quant.beta
+            * (i.cost.prefill_flops_per_req(512) + i.cost.decode_flops_per_req(512, 512))
+            / i.cluster.total_flops();
+        assert!(b as f64 * per_req <= i.epoch.t_c() + 1e-9);
+    }
+
+    #[test]
+    fn fcfs_selection() {
+        let i = inst(20);
+        let reqs = gen(&[
+            (2.0, 128, 128, 2.0, 0.2),
+            (0.5, 128, 128, 2.0, 0.2),
+            (1.0, 128, 128, 2.0, 0.2),
+        ]);
+        let mut stb = StaticBatching {
+            fixed_batch: Some(2),
+        };
+        let s = stb.schedule(&i, &reqs);
+        assert_eq!(s.batch_size(), 2);
+        // picks the two earliest arrivals (ids 1 and 2)
+        assert!(s.scheduled.contains(&reqs[1].id()));
+        assert!(s.scheduled.contains(&reqs[2].id()));
+    }
+
+    #[test]
+    fn ignores_deadlines() {
+        // A request whose deadline is hopeless still gets batched — StB's
+        // defining flaw.
+        let i = inst(20);
+        let reqs = gen(&[(0.0, 512, 512, 0.51, 0.2); 4]);
+        let s = StaticBatching::new().schedule(&i, &reqs);
+        assert!(s.batch_size() >= 1);
+    }
+
+    #[test]
+    fn respects_bandwidth() {
+        let i = inst(20);
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        // Horrible channel: each request needs ~36% of uplink.
+        let reqs: Vec<EpochRequest> = (0..6)
+            .map(|k| {
+                EpochRequest::annotate(
+                    b.build(k as f64 * 0.01, 512, 128, 5.0, 0.2),
+                    5e-8,
+                    &radio,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect();
+        let s = StaticBatching::new().schedule(&i, &reqs);
+        assert!(s.rho_u_total <= 1.0 + 1e-9);
+        assert!(s.batch_size() < 6);
+    }
+
+    #[test]
+    fn smaller_cluster_smaller_batch() {
+        let big = StaticBatching::static_batch_size(&inst(20), 512);
+        let small = StaticBatching::static_batch_size(&inst(2), 512);
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,218 @@
+//! Search-tree construction shared by DFTSP and the brute-force baseline —
+//! paper §III-B.
+//!
+//! The candidate pool F_d is partitioned by output-length level
+//! (F_{N_1} ∪ ... ∪ F_{N_N}); a tree node at depth k fixes the number of
+//! requests c_k taken from level k, and within a level requests are ranked
+//! by uplink bandwidth demand so that "take the c_k cheapest" is the only
+//! selection the search must consider (optimal under the paper's
+//! geographically-concentrated-users assumption of §III-A).
+
+use crate::coordinator::problem::ProblemInstance;
+use crate::request::EpochRequest;
+
+/// One output-length level of the candidate pool, with prefix aggregates so
+/// the DFS can add a whole block `c_k` in O(1).
+#[derive(Debug, Clone)]
+pub struct LevelGroup<'a> {
+    /// The level's output length N_k.
+    pub n_out: u32,
+    /// Members sorted by ρ_min^U ascending (cheapest uplink first).
+    pub members: Vec<&'a EpochRequest>,
+    /// prefix_rho_u[c] = Σ ρ_min^U of the first c members (len = members+1).
+    pub prefix_rho_u: Vec<f64>,
+    /// prefix_rho_d[c] = Σ ρ_min^D of the first c members.
+    pub prefix_rho_d: Vec<f64>,
+    /// prefix_min_slack[c] = min compute slack among the first c members
+    /// (+∞ at c = 0).
+    pub prefix_min_slack: Vec<f64>,
+    /// Peak KV bytes per request at this level (identical within a level).
+    pub kv_per_req: u64,
+    /// Decode FLOPs per request at this level (identical within a level).
+    pub decode_flops_per_req: f64,
+}
+
+impl<'a> LevelGroup<'a> {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Build the per-level groups for a candidate pool. Levels are ordered by
+/// ascending output length (N_1 shortest first), matching Fig. 4.
+pub fn build_levels<'a>(
+    inst: &ProblemInstance,
+    pool: &[&'a EpochRequest],
+) -> Vec<LevelGroup<'a>> {
+    let mut ns: Vec<u32> = pool.iter().map(|r| r.req.output_tokens).collect();
+    ns.sort_unstable();
+    ns.dedup();
+
+    ns.into_iter()
+        .map(|n| {
+            let mut members: Vec<&EpochRequest> = pool
+                .iter()
+                .copied()
+                .filter(|r| r.req.output_tokens == n)
+                .collect();
+            // Uplink-cheapest first; id tiebreak for determinism.
+            members.sort_by(|a, b| {
+                a.rho_min_u
+                    .partial_cmp(&b.rho_min_u)
+                    .unwrap()
+                    .then(a.id().cmp(&b.id()))
+            });
+            let mut prefix_rho_u = Vec::with_capacity(members.len() + 1);
+            let mut prefix_rho_d = Vec::with_capacity(members.len() + 1);
+            let mut prefix_min_slack = Vec::with_capacity(members.len() + 1);
+            prefix_rho_u.push(0.0);
+            prefix_rho_d.push(0.0);
+            prefix_min_slack.push(f64::INFINITY);
+            for (i, m) in members.iter().enumerate() {
+                prefix_rho_u.push(prefix_rho_u[i] + m.rho_min_u);
+                prefix_rho_d.push(prefix_rho_d[i] + m.rho_min_d);
+                prefix_min_slack.push(prefix_min_slack[i].min(inst.compute_slack(m)));
+            }
+            LevelGroup {
+                n_out: n,
+                kv_per_req: inst.kv_bytes(n),
+                decode_flops_per_req: inst.cost.decode_flops_per_req(inst.s_pad, n),
+                members,
+                prefix_rho_u,
+                prefix_rho_d,
+                prefix_min_slack,
+            }
+        })
+        .collect()
+}
+
+/// suffix_capacity[k] = Σ_{j ≥ k} |F_{N_j}| — how many candidates remain at
+/// or below depth k; the quantity the paper's pruning rule compares against
+/// the outstanding demand z − Σ v.
+pub fn suffix_capacity(levels: &[LevelGroup]) -> Vec<usize> {
+    let mut cap = vec![0usize; levels.len() + 1];
+    for k in (0..levels.len()).rev() {
+        cap[k] = cap[k + 1] + levels[k].len();
+    }
+    cap
+}
+
+/// Materialize the request set selected by a count vector (first c_k members
+/// of each level).
+pub fn materialize<'a>(levels: &[LevelGroup<'a>], counts: &[usize]) -> Vec<&'a EpochRequest> {
+    let mut out = Vec::with_capacity(counts.iter().sum());
+    for (g, &c) in levels.iter().zip(counts.iter()) {
+        out.extend_from_slice(&g.members[..c]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::problem::EpochParams;
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::{EpochRequest, RequestBuilder};
+    use crate::wireless::RadioParams;
+
+    fn inst() -> ProblemInstance {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::paper_default(),
+            EpochParams::default(),
+            512,
+            0.0,
+        )
+    }
+
+    fn reqs() -> Vec<EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let mut out = Vec::new();
+        for (s, n) in [
+            (128, 512),
+            (256, 128),
+            (512, 128),
+            (128, 256),
+            (64, 128),
+            (256, 512),
+        ] {
+            out.push(EpochRequest::annotate(
+                b.build(0.0, s, n, 2.0, 0.3),
+                0.03,
+                &radio,
+                0.25,
+                0.25,
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn levels_sorted_and_grouped() {
+        let i = inst();
+        let rs = reqs();
+        let pool: Vec<&EpochRequest> = rs.iter().collect();
+        let levels = build_levels(&i, &pool);
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[0].n_out, 128);
+        assert_eq!(levels[1].n_out, 256);
+        assert_eq!(levels[2].n_out, 512);
+        assert_eq!(levels[0].len(), 3);
+        assert_eq!(levels[1].len(), 1);
+        assert_eq!(levels[2].len(), 2);
+        // within level 128, cheapest uplink first = smallest prompt (equal h)
+        let prompts: Vec<u32> = levels[0].members.iter().map(|r| r.req.prompt_tokens).collect();
+        assert_eq!(prompts, vec![64, 256, 512]);
+    }
+
+    #[test]
+    fn prefix_sums_consistent() {
+        let i = inst();
+        let rs = reqs();
+        let pool: Vec<&EpochRequest> = rs.iter().collect();
+        let levels = build_levels(&i, &pool);
+        for g in &levels {
+            assert_eq!(g.prefix_rho_u.len(), g.len() + 1);
+            for c in 1..=g.len() {
+                let manual: f64 = g.members[..c].iter().map(|m| m.rho_min_u).sum();
+                assert!((g.prefix_rho_u[c] - manual).abs() < 1e-15);
+                assert!(g.prefix_rho_u[c] >= g.prefix_rho_u[c - 1]);
+                assert!(g.prefix_min_slack[c] <= g.prefix_min_slack[c - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn suffix_capacity_sums() {
+        let i = inst();
+        let rs = reqs();
+        let pool: Vec<&EpochRequest> = rs.iter().collect();
+        let levels = build_levels(&i, &pool);
+        let cap = suffix_capacity(&levels);
+        assert_eq!(cap[0], 6);
+        assert_eq!(cap[1], 3);
+        assert_eq!(cap[2], 2);
+        assert_eq!(cap[3], 0);
+    }
+
+    #[test]
+    fn materialize_takes_prefixes() {
+        let i = inst();
+        let rs = reqs();
+        let pool: Vec<&EpochRequest> = rs.iter().collect();
+        let levels = build_levels(&i, &pool);
+        let sel = materialize(&levels, &[2, 0, 1]);
+        assert_eq!(sel.len(), 3);
+        assert_eq!(sel[0].req.prompt_tokens, 64);
+        assert_eq!(sel[1].req.prompt_tokens, 256);
+        assert_eq!(sel[2].req.output_tokens, 512);
+    }
+}

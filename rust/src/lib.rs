@@ -1,0 +1,25 @@
+//! # edgellm
+//!
+//! A production-grade reproduction of *"Edge Intelligence Optimization for
+//! Large Language Model Inference with Batching and Quantization"* (Zhang et
+//! al., 2024): epoch-based batched LLM serving on a wireless edge node, with
+//! the DFTSP optimal batch scheduler, OFDMA bandwidth allocation, a
+//! quantization catalog with perplexity-aware admission, a discrete-event
+//! simulator reproducing every figure/table of the paper, and a real
+//! PJRT-executed tiny transformer served end-to-end by the Rust coordinator
+//! (JAX/Pallas authored, AOT-compiled; Python never on the request path).
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod request;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod wireless;
+pub mod workload;

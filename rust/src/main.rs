@@ -1,0 +1,263 @@
+//! `edgellm` — CLI launcher for the edge-LLM serving stack.
+//!
+//! Subcommands:
+//!   simulate   run the discrete-event simulator (paper §IV testbed)
+//!   compare    run all batching policies on one scenario and tabulate
+//!   serve      serve the tiny real model through PJRT with DFTSP batching
+//!   catalog    print the model and quantization catalogs
+//!
+//! Scenario files are TOML (see `config` module docs); every flag falls back
+//! to the paper's §IV defaults.
+
+use edgellm::config;
+use edgellm::coordinator::{BruteForce, Dftsp, NoBatching, Scheduler, StaticBatching};
+use edgellm::model::LlmSpec;
+use edgellm::quant;
+use edgellm::runtime::Engine;
+use edgellm::serving::{EpochServer, ServeRequest, ServerConfig};
+use edgellm::sim;
+use edgellm::util::cli::Args;
+use edgellm::util::fmt::Table;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("catalog") => cmd_catalog(),
+        _ => {
+            eprintln!(
+                "usage: edgellm <simulate|compare|serve|catalog> [--config FILE] \
+                 [--scheduler dftsp|stb|nob|brute] [--rate R] [--epochs N] [--model NAME] \
+                 [--quant LABEL] [--seed S]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::load_scenario(Path::new(path))?,
+        None => sim::SimConfig::paper_default(),
+    };
+    if let Some(rate) = args.get("rate") {
+        cfg.workload.arrival_rate = rate.parse().map_err(|_| "bad --rate")?;
+    }
+    if let Some(epochs) = args.get("epochs") {
+        cfg.epochs = epochs.parse().map_err(|_| "bad --epochs")?;
+    }
+    if let Some(model) = args.get("model") {
+        cfg.model = LlmSpec::by_name(model).ok_or_else(|| format!("unknown model `{model}`"))?;
+    }
+    if let Some(q) = args.get("quant") {
+        cfg.quant = config::parse_quant_label(q)?;
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse().map_err(|_| "bad --seed")?;
+    }
+    Ok(cfg)
+}
+
+fn make_scheduler(name: &str) -> Result<Box<dyn Scheduler>, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "dftsp" => Ok(Box::new(Dftsp::new())),
+        "stb" => Ok(Box::new(StaticBatching::new())),
+        "nob" => Ok(Box::new(NoBatching::new())),
+        "brute" => Ok(Box::new(BruteForce::default())),
+        other => Err(format!("unknown scheduler `{other}`")),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let mut sched = match make_scheduler(&args.str_or("scheduler", "dftsp")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}",
+        cfg.model.name,
+        cfg.quant.label(),
+        cfg.workload.arrival_rate,
+        cfg.epochs,
+        cfg.epoch.duration,
+        cfg.cluster.num_gpus,
+        cfg.cluster.gpu.name
+    );
+    let m = sim::run(&cfg, sched.as_mut());
+    print!("{}", m.report(sched.name()));
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let results = sim::compare(
+        &cfg,
+        vec![
+            Box::new(Dftsp::new()),
+            Box::new(StaticBatching::new()),
+            Box::new(NoBatching::new()),
+        ],
+    );
+    let mut t = Table::new(&[
+        "scheduler",
+        "throughput (req/s)",
+        "goodput %",
+        "mean batch",
+        "p95 latency (s)",
+    ]);
+    for (name, m) in &results {
+        t.row(&[
+            name.clone(),
+            format!("{:.2}", m.throughput()),
+            format!("{:.1}", 100.0 * m.goodput_ratio()),
+            format!("{:.1}", m.batch_sizes.mean()),
+            format!("{:.3}", m.latency.quantile(0.95)),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let quant_label = args.str_or("quant", "W16A16");
+    let epochs = args.u64_or("epochs", 10);
+    let clients = args.u64_or("clients", 4);
+    let rate = args.f64_or("rate", 4.0);
+    let seed = args.u64_or("seed", 7);
+
+    let engine = match Engine::load(Path::new(&artifacts), &quant_label) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine load failed: {e}\n(run `make artifacts` first)");
+            return 1;
+        }
+    };
+    println!(
+        "engine up: {} on {} ({} batch variants, quant {})",
+        engine.meta.model_name,
+        engine.platform(),
+        engine.meta.batch_variants.len(),
+        quant_label
+    );
+    let server_cfg = ServerConfig::default();
+    let epoch_s = server_cfg.epoch.duration;
+    let mut server = EpochServer::new(engine, server_cfg, Box::new(Dftsp::new()));
+    let handle = server.handle();
+
+    // Optional TCP JSON-line front-end: --listen 127.0.0.1:7070
+    if let Some(addr) = args.get("listen") {
+        let bpe = edgellm::tokenizer::Bpe::load(&Path::new(&artifacts).join("bpe.json")).ok();
+        match edgellm::serving::spawn_listener(addr, handle.clone(), bpe) {
+            Ok(local) => println!("listening on {local} (JSON lines; text prompts via BPE)"),
+            Err(e) => eprintln!("listen failed: {e}"),
+        }
+    }
+
+    // Client threads: Poisson-ish request submission.
+    let horizon = epochs as f64 * epoch_s;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let tx = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = edgellm::util::rng::Rng::new(seed ^ (c * 7919));
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                let mut sent = 0u64;
+                let mut done = Vec::new();
+                let t0 = std::time::Instant::now();
+                while t0.elapsed().as_secs_f64() < horizon * 0.8 {
+                    let wait = rng.exponential(rate / clients as f64);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(1.0)));
+                    let plen = rng.int_range(4, 48) as usize;
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| rng.below(512) as i32).collect();
+                    let _ = tx.send(ServeRequest {
+                        prompt,
+                        output_tokens: rng.int_range(4, 32) as u32,
+                        latency_req: rng.uniform(1.0, 4.0),
+                        accuracy_req: rng.uniform(0.0, 0.6),
+                        respond: rtx.clone(),
+                    });
+                    sent += 1;
+                }
+                drop(rtx);
+                while let Ok(resp) = rrx.recv() {
+                    done.push(resp);
+                }
+                (sent, done)
+            })
+        })
+        .collect();
+
+    server.run_for(epochs);
+    print!("{}", server.metrics.report("edge serving (DFTSP)"));
+    let mut total_sent = 0;
+    let mut total_ok = 0;
+    for j in joins {
+        if let Ok((sent, done)) = j.join() {
+            total_sent += sent;
+            total_ok += done
+                .iter()
+                .filter(|r| r.outcome == edgellm::serving::ServeOutcome::Completed)
+                .count();
+        }
+    }
+    println!("clients: sent {total_sent}, completed-in-deadline {total_ok}");
+    0
+}
+
+fn cmd_catalog() -> i32 {
+    let mut t = Table::new(&["model", "layers", "d_model", "heads", "d_head", "params"]);
+    for m in LlmSpec::catalog() {
+        t.row(&[
+            m.name.clone(),
+            m.layers.to_string(),
+            m.d_model.to_string(),
+            m.n_heads.to_string(),
+            m.d_head.to_string(),
+            format!("{:.1}B", m.param_count() as f64 / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+    println!();
+    let mut q = Table::new(&[
+        "quant",
+        "alpha",
+        "beta",
+        "dPPL BLOOM-3B",
+        "dPPL BLOOM-7.1B",
+        "dPPL OPT-13B",
+    ]);
+    for spec in quant::catalog() {
+        q.row(&[
+            spec.label(),
+            format!("{:.2}", spec.alpha),
+            format!("{:.2}", spec.beta),
+            format!("{:.2}", spec.dppl_for("BLOOM-3B")),
+            format!("{:.2}", spec.dppl_for("BLOOM-7.1B")),
+            format!("{:.2}", spec.dppl_for("OPT-13B")),
+        ]);
+    }
+    print!("{}", q.render());
+    0
+}

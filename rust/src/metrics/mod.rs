@@ -1,0 +1,195 @@
+//! Serving metrics: counters, throughput accounting, latency distribution,
+//! and the per-run report consumed by the simulator, the serving loop and
+//! the benchmark harness.
+
+use crate::coordinator::SearchStats;
+use crate::util::fmt;
+use crate::util::stats::{LatencyHistogram, OnlineStats};
+
+/// Why a request left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed with end-to-end latency within τ_i.
+    CompletedInDeadline,
+    /// Completed but after its deadline (counts as a miss in Fig. 5 terms).
+    CompletedLate,
+    /// Dropped: could never meet its deadline (queue pressure) or was
+    /// inadmissible under the deployed quantization.
+    Dropped,
+}
+
+/// Aggregated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub offered: u64,
+    pub scheduled: u64,
+    pub completed_in_deadline: u64,
+    pub completed_late: u64,
+    pub dropped: u64,
+    /// End-to-end latency of in-deadline completions.
+    pub latency: LatencyHistogram,
+    /// Batch sizes of non-empty schedules.
+    pub batch_sizes: OnlineStats,
+    /// Queue length observed at each epoch boundary.
+    pub queue_depth: OnlineStats,
+    /// Accumulated search-effort statistics.
+    pub search: SearchStats,
+    /// Simulated (or wall) time covered by this run, in seconds.
+    pub horizon: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            latency: LatencyHistogram::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_offered(&mut self, n: u64) {
+        self.offered += n;
+    }
+
+    pub fn record_outcome(&mut self, outcome: Outcome, latency: f64) {
+        match outcome {
+            Outcome::CompletedInDeadline => {
+                self.completed_in_deadline += 1;
+                self.latency.record(latency);
+            }
+            Outcome::CompletedLate => self.completed_late += 1,
+            Outcome::Dropped => self.dropped += 1,
+        }
+    }
+
+    pub fn record_schedule(&mut self, batch_size: usize, stats: &SearchStats) {
+        if batch_size > 0 {
+            self.scheduled += batch_size as u64;
+            self.batch_sizes.push(batch_size as f64);
+        }
+        self.search.nodes_visited += stats.nodes_visited;
+        self.search.solutions_checked += stats.solutions_checked;
+        self.search.pruned_capacity += stats.pruned_capacity;
+        self.search.pruned_constraint += stats.pruned_constraint;
+        self.search.subproblems += stats.subproblems;
+        self.search.budget_exhausted |= stats.budget_exhausted;
+    }
+
+    /// The paper's headline metric: successfully served requests per second.
+    pub fn throughput(&self) -> f64 {
+        if self.horizon <= 0.0 {
+            return 0.0;
+        }
+        self.completed_in_deadline as f64 / self.horizon
+    }
+
+    /// Fraction of offered requests served within deadline.
+    pub fn goodput_ratio(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.completed_in_deadline as f64 / self.offered as f64
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self, label: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("== {label} ==\n"));
+        s.push_str(&format!(
+            "offered {}  scheduled {}  in-deadline {}  late {}  dropped {}\n",
+            self.offered, self.scheduled, self.completed_in_deadline, self.completed_late, self.dropped
+        ));
+        s.push_str(&format!(
+            "throughput {:.2} req/s  goodput {:.1}%  mean batch {:.1}  mean queue {:.1}\n",
+            self.throughput(),
+            100.0 * self.goodput_ratio(),
+            self.batch_sizes.mean(),
+            self.queue_depth.mean(),
+        ));
+        if self.latency.count() > 0 {
+            s.push_str(&format!(
+                "latency p50 {}  p95 {}  p99 {}  max {}\n",
+                fmt::duration(self.latency.quantile(0.50)),
+                fmt::duration(self.latency.quantile(0.95)),
+                fmt::duration(self.latency.quantile(0.99)),
+                fmt::duration(self.latency.max()),
+            ));
+        }
+        if self.search.nodes_visited > 0 {
+            s.push_str(&format!(
+                "search: {} nodes, {} solutions checked, {} capacity-pruned, {} constraint-pruned{}\n",
+                self.search.nodes_visited,
+                self.search.solutions_checked,
+                self.search.pruned_capacity,
+                self.search.pruned_constraint,
+                if self.search.budget_exhausted {
+                    " (budget exhausted)"
+                } else {
+                    ""
+                }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcomes_accumulate() {
+        let mut m = Metrics::new();
+        m.record_offered(10);
+        m.record_outcome(Outcome::CompletedInDeadline, 0.8);
+        m.record_outcome(Outcome::CompletedInDeadline, 1.2);
+        m.record_outcome(Outcome::CompletedLate, 2.5);
+        m.record_outcome(Outcome::Dropped, 0.0);
+        m.horizon = 2.0;
+        assert_eq!(m.completed_in_deadline, 2);
+        assert_eq!(m.completed_late, 1);
+        assert_eq!(m.dropped, 1);
+        assert!((m.throughput() - 1.0).abs() < 1e-12);
+        assert!((m.goodput_ratio() - 0.2).abs() < 1e-12);
+        assert_eq!(m.latency.count(), 2);
+    }
+
+    #[test]
+    fn schedule_stats_merge() {
+        let mut m = Metrics::new();
+        let s1 = SearchStats {
+            nodes_visited: 10,
+            subproblems: 2,
+            ..Default::default()
+        };
+        let s2 = SearchStats {
+            nodes_visited: 5,
+            budget_exhausted: true,
+            ..Default::default()
+        };
+        m.record_schedule(4, &s1);
+        m.record_schedule(0, &s2);
+        assert_eq!(m.scheduled, 4);
+        assert_eq!(m.search.nodes_visited, 15);
+        assert!(m.search.budget_exhausted);
+        assert_eq!(m.batch_sizes.count(), 1); // empty schedule not counted
+    }
+
+    #[test]
+    fn report_contains_key_fields() {
+        let mut m = Metrics::new();
+        m.record_offered(3);
+        m.record_outcome(Outcome::CompletedInDeadline, 1.0);
+        m.horizon = 1.0;
+        let r = m.report("unit");
+        assert!(r.contains("unit"));
+        assert!(r.contains("throughput"));
+        assert!(r.contains("p95"));
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.goodput_ratio(), 0.0);
+    }
+}

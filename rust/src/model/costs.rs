@@ -1,0 +1,205 @@
+//! Inference cost model — paper §II-B, implemented equation-by-equation.
+//!
+//! All memory quantities are in **bytes** assuming the baseline 2-byte
+//! (fp16/bf16) storage of the paper; quantization scaling (α, β) is applied
+//! by the caller (`quant::QuantSpec`), matching P1's `α(m1+m2^I+m2^A)` and
+//! `β(t^I+t^A)` forms. All FLOP quantities are in **FLOPs**; latency = FLOPs
+//! divided by the computing speed C (FLOP/s).
+
+use super::spec::LlmSpec;
+
+/// Bytes per parameter / per activation element at the unquantized baseline.
+pub const BASE_BYTES: u64 = 2;
+
+/// Cost model over one `LlmSpec`.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub spec: LlmSpec,
+}
+
+impl CostModel {
+    pub fn new(spec: LlmSpec) -> Self {
+        CostModel { spec }
+    }
+
+    /// m₁ — weight-storage footprint in bytes:
+    /// `m1 = L (8 d_m d_h n_h + 4 d_m d_f)` with d_h·n_h = d_m.
+    pub fn weight_bytes(&self) -> u64 {
+        let l = self.spec.layers as u64;
+        let dm = self.spec.d_model as u64;
+        let dhnh = (self.spec.d_head * self.spec.n_heads) as u64;
+        let df = self.spec.d_ff as u64;
+        l * (8 * dm * dhnh + 4 * dm * df)
+    }
+
+    /// Per-request KV-cache bytes for the *Initial Stage*:
+    /// `m2^I / batch = 4 L s' d_m` (K and V, 2 bytes each, s' padded tokens).
+    pub fn kv_initial_bytes_per_req(&self, s_pad: u32) -> u64 {
+        4 * self.spec.layers as u64 * s_pad as u64 * self.spec.d_model as u64
+    }
+
+    /// Per-request KV-cache bytes grown during the *Auto-regressive Stage*:
+    /// `m2^A contribution = 4 L n_i d_m`.
+    pub fn kv_autoreg_bytes_per_req(&self, n_out: u32) -> u64 {
+        4 * self.spec.layers as u64 * n_out as u64 * self.spec.d_model as u64
+    }
+
+    /// Total KV bytes a request holds at its peak (prompt + all outputs).
+    pub fn kv_peak_bytes_per_req(&self, s_pad: u32, n_out: u32) -> u64 {
+        self.kv_initial_bytes_per_req(s_pad) + self.kv_autoreg_bytes_per_req(n_out)
+    }
+
+    /// Per-request FLOPs of the *Initial Stage* (prefill over s' tokens):
+    /// `L (6 s' d_m² + (4 s'² d_m + 2 s' d_m²) + 4 s' d_m d_f)`.
+    pub fn prefill_flops_per_req(&self, s_pad: u32) -> f64 {
+        let l = self.spec.layers as f64;
+        let s = s_pad as f64;
+        let dm = self.spec.d_model as f64;
+        let df = self.spec.d_ff as f64;
+        l * (6.0 * s * dm * dm + (4.0 * s * s * dm + 2.0 * s * dm * dm) + 4.0 * s * dm * df)
+    }
+
+    /// Per-request FLOPs of the *Auto-regressive Stage* for n_i output tokens
+    /// over a prompt padded to s':
+    /// `L (n_i − 1)(6 d_m² + (4 (s' + n_i/2) d_m + 2 d_m²) + 4 d_m d_f)`.
+    ///
+    /// The `s' + n_i/2` term is the paper's closed form of the growing
+    /// attention span summed over decode iterations.
+    pub fn decode_flops_per_req(&self, s_pad: u32, n_out: u32) -> f64 {
+        if n_out <= 1 {
+            return 0.0;
+        }
+        let l = self.spec.layers as f64;
+        let s = s_pad as f64;
+        let n = n_out as f64;
+        let dm = self.spec.d_model as f64;
+        let df = self.spec.d_ff as f64;
+        l * (n - 1.0)
+            * (6.0 * dm * dm + (4.0 * (s + n / 2.0) * dm + 2.0 * dm * dm) + 4.0 * dm * df)
+    }
+
+    /// Total compute FLOPs for one request end-to-end.
+    pub fn total_flops_per_req(&self, s_pad: u32, n_out: u32) -> f64 {
+        self.prefill_flops_per_req(s_pad) + self.decode_flops_per_req(s_pad, n_out)
+    }
+
+    /// t^I — batched Initial-Stage latency in seconds for `batch` requests all
+    /// padded to s', on aggregate computing speed `c` (FLOP/s).
+    pub fn prefill_latency(&self, batch: usize, s_pad: u32, c: f64) -> f64 {
+        batch as f64 * self.prefill_flops_per_req(s_pad) / c
+    }
+
+    /// t^A — batched Auto-regressive-Stage latency in seconds: sum over the
+    /// scheduled requests' decode FLOPs, divided by `c`.
+    pub fn decode_latency(&self, reqs: &[(u32, u32)], c: f64) -> f64 {
+        reqs.iter()
+            .map(|&(s_pad, n_out)| self.decode_flops_per_req(s_pad, n_out))
+            .sum::<f64>()
+            / c
+    }
+
+    /// Full batch latency t^I + t^A given per-request (s_pad, n_out).
+    pub fn batch_latency(&self, reqs: &[(u32, u32)], s_pad: u32, c: f64) -> f64 {
+        self.prefill_latency(reqs.len(), s_pad, c) + self.decode_latency(reqs, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b3() -> CostModel {
+        CostModel::new(LlmSpec::bloom_3b())
+    }
+
+    #[test]
+    fn weight_bytes_is_2x_params() {
+        // m1 counts each parameter at 2 bytes, so it must equal 2 * params.
+        let m = b3();
+        assert_eq!(m.weight_bytes(), 2 * m.spec.param_count());
+    }
+
+    #[test]
+    fn kv_scales_linearly() {
+        let m = b3();
+        assert_eq!(
+            m.kv_initial_bytes_per_req(256),
+            2 * m.kv_initial_bytes_per_req(128)
+        );
+        assert_eq!(
+            m.kv_autoreg_bytes_per_req(512),
+            4 * m.kv_autoreg_bytes_per_req(128)
+        );
+        assert_eq!(
+            m.kv_peak_bytes_per_req(128, 128),
+            m.kv_initial_bytes_per_req(128) + m.kv_autoreg_bytes_per_req(128)
+        );
+    }
+
+    #[test]
+    fn kv_matches_hand_computation() {
+        // 4 * L * s * d_m = 4 * 30 * 128 * 2560
+        let m = b3();
+        assert_eq!(m.kv_initial_bytes_per_req(128), 4 * 30 * 128 * 2560);
+    }
+
+    #[test]
+    fn prefill_flops_formula() {
+        let m = b3();
+        let (l, s, dm, df) = (30.0, 128.0, 2560.0, 10240.0);
+        let expect =
+            l * (6.0 * s * dm * dm + 4.0 * s * s * dm + 2.0 * s * dm * dm + 4.0 * s * dm * df);
+        assert!((m.prefill_flops_per_req(128) - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn decode_flops_zero_for_single_token() {
+        assert_eq!(b3().decode_flops_per_req(128, 1), 0.0);
+        assert_eq!(b3().decode_flops_per_req(128, 0), 0.0);
+    }
+
+    #[test]
+    fn decode_flops_superlinear_in_n() {
+        // The n_i/2 attention-span term makes decode cost superlinear in n.
+        let m = b3();
+        let f256 = m.decode_flops_per_req(128, 256);
+        let f512 = m.decode_flops_per_req(128, 512);
+        assert!(f512 > 2.0 * f256);
+    }
+
+    #[test]
+    fn prefill_dominates_per_token() {
+        // Per token, prefill and decode cost the same matmuls; total prefill
+        // for s' tokens >> one decode step.
+        let m = b3();
+        let per_decode = m.decode_flops_per_req(128, 2); // 1 step
+        assert!(m.prefill_flops_per_req(128) > 50.0 * per_decode);
+    }
+
+    #[test]
+    fn batch_latency_additive() {
+        let m = b3();
+        let c = 1.33e12;
+        let one = m.batch_latency(&[(128, 128)], 128, c);
+        let two = m.batch_latency(&[(128, 128), (128, 128)], 128, c);
+        assert!((two - 2.0 * one).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_model_costs_more() {
+        let small = b3();
+        let big = CostModel::new(LlmSpec::opt_13b());
+        assert!(big.weight_bytes() > small.weight_bytes());
+        assert!(big.prefill_flops_per_req(128) > small.prefill_flops_per_req(128));
+        assert!(big.decode_flops_per_req(128, 128) > small.decode_flops_per_req(128, 128));
+    }
+
+    #[test]
+    fn realistic_magnitudes() {
+        // BLOOM-3B on one TX2 (1.33 TFLOPs): a 128-token prefill should take
+        // on the order of a second; sanity-check the magnitude window.
+        let m = b3();
+        let t = m.prefill_latency(1, 128, 1.33e12);
+        assert!((0.05..5.0).contains(&t), "prefill latency {t}");
+    }
+}

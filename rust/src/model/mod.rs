@@ -1,0 +1,8 @@
+//! Model specifications (paper Table I) and the §II-B inference cost model
+//! (memory footprint m₁/m₂ᴵ/m₂ᴬ, latency tᴵ/tᴬ).
+
+pub mod costs;
+pub mod spec;
+
+pub use costs::{CostModel, BASE_BYTES};
+pub use spec::LlmSpec;

@@ -1,0 +1,128 @@
+//! Transformer-decoder model specifications (paper Table I).
+//!
+//! The scheduler never touches weights — every decision in the paper is a
+//! function of the architectural dimensions below, so `LlmSpec` is the whole
+//! interface between "a model" and the coordinator. The tiny real model used
+//! by the end-to-end serving example also publishes itself as an `LlmSpec`
+//! (via `artifacts/meta.json`).
+
+/// Architecture of a transformer decoder-based LLM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmSpec {
+    /// Human-readable identifier, e.g. "BLOOM-3B".
+    pub name: String,
+    /// Number of stacked transformer decoder layers (paper: L).
+    pub layers: u32,
+    /// Hidden dimension (paper: d_m).
+    pub d_model: u32,
+    /// Number of attention heads (paper: n_h).
+    pub n_heads: u32,
+    /// Per-head dimension (paper: d_h). Must satisfy n_heads * d_head == d_model.
+    pub d_head: u32,
+    /// FFN hidden dimension (paper: d_f, set to 4 * d_m for all Table I models).
+    pub d_ff: u32,
+}
+
+impl LlmSpec {
+    pub fn new(name: &str, layers: u32, d_model: u32, n_heads: u32, d_head: u32) -> Self {
+        let spec = LlmSpec {
+            name: name.to_string(),
+            layers,
+            d_model,
+            n_heads,
+            d_head,
+            d_ff: 4 * d_model,
+        };
+        spec.validate().expect("invalid LlmSpec");
+        spec
+    }
+
+    /// Validate internal consistency (d_m = n_h * d_h, non-zero dims).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers == 0 || self.d_model == 0 || self.n_heads == 0 || self.d_head == 0 {
+            return Err(format!("{}: zero dimension", self.name));
+        }
+        if self.n_heads * self.d_head != self.d_model {
+            return Err(format!(
+                "{}: n_heads({}) * d_head({}) != d_model({})",
+                self.name, self.n_heads, self.d_head, self.d_model
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total parameter count of the decoder stack counted by the paper's
+    /// weight inventory: per layer w_Q, w_K, w_V, w_O (d_m×d_m each) plus
+    /// w_1 (d_m×d_f) and w_2 (d_f×d_m).
+    pub fn param_count(&self) -> u64 {
+        let dm = self.d_model as u64;
+        let df = self.d_ff as u64;
+        self.layers as u64 * (4 * dm * dm + 2 * dm * df)
+    }
+
+    /// BLOOM-3B (Table I row 1).
+    pub fn bloom_3b() -> Self {
+        LlmSpec::new("BLOOM-3B", 30, 2560, 32, 80)
+    }
+
+    /// BLOOM-7.1B (Table I row 2).
+    pub fn bloom_7b() -> Self {
+        LlmSpec::new("BLOOM-7.1B", 30, 4096, 32, 128)
+    }
+
+    /// OPT-13B (Table I row 3).
+    pub fn opt_13b() -> Self {
+        LlmSpec::new("OPT-13B", 40, 5120, 40, 128)
+    }
+
+    /// All Table I models, in paper order.
+    pub fn catalog() -> Vec<LlmSpec> {
+        vec![Self::bloom_3b(), Self::bloom_7b(), Self::opt_13b()]
+    }
+
+    /// Look up a catalog model by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<LlmSpec> {
+        Self::catalog()
+            .into_iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_dims_consistent() {
+        for m in LlmSpec::catalog() {
+            assert!(m.validate().is_ok(), "{}", m.name);
+            assert_eq!(m.d_ff, 4 * m.d_model);
+        }
+    }
+
+    #[test]
+    fn param_counts_match_model_names() {
+        // The decoder-stack count excludes embeddings/LN, so it lands a bit
+        // under the nominal size but within the right ballpark.
+        let b3 = LlmSpec::bloom_3b().param_count() as f64;
+        assert!((2.0e9..3.5e9).contains(&b3), "BLOOM-3B params {b3}");
+        let b7 = LlmSpec::bloom_7b().param_count() as f64;
+        assert!((5.5e9..8.0e9).contains(&b7), "BLOOM-7.1B params {b7}");
+        let o13 = LlmSpec::opt_13b().param_count() as f64;
+        assert!((11.0e9..14.0e9).contains(&o13), "OPT-13B params {o13}");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(LlmSpec::by_name("bloom-3b").unwrap().d_model, 2560);
+        assert_eq!(LlmSpec::by_name("OPT-13B").unwrap().layers, 40);
+        assert!(LlmSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        let mut s = LlmSpec::bloom_3b();
+        s.d_head = 81;
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,386 @@
+//! Post-training quantization model — paper §II-B(3) and Table II.
+//!
+//! A `QuantSpec` bundles the three scalars the optimization consumes:
+//! α (memory-saving factor), β (compute-time factor), and ΔPPL (perplexity
+//! degradation, per model). All three are "measured via offline exhaustive
+//! evaluations" in the paper; we ship the paper's Table II ΔPPL values for
+//! the Table I models and additionally load *measured* values for the tiny
+//! real model from `artifacts/ppl.json` (produced by `python/compile/ppl.py`
+//! at build time), so both sources flow through the same code path.
+
+use std::collections::BTreeMap;
+
+/// Weight/activation bit-widths, e.g. W8A16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Precision {
+    pub w_bits: u8,
+    pub a_bits: u8,
+}
+
+impl Precision {
+    pub const W16A16: Precision = Precision {
+        w_bits: 16,
+        a_bits: 16,
+    };
+    pub const W8A16: Precision = Precision {
+        w_bits: 8,
+        a_bits: 16,
+    };
+    pub const W4A16: Precision = Precision {
+        w_bits: 4,
+        a_bits: 16,
+    };
+    pub const W8A8: Precision = Precision {
+        w_bits: 8,
+        a_bits: 8,
+    };
+
+    pub fn label(&self) -> String {
+        format!("W{}A{}", self.w_bits, self.a_bits)
+    }
+
+    /// Weight-memory scaling vs the 16-bit baseline.
+    pub fn weight_scale(&self) -> f64 {
+        self.w_bits as f64 / 16.0
+    }
+
+    /// Activation/KV-cache memory scaling vs the 16-bit baseline.
+    pub fn act_scale(&self) -> f64 {
+        self.a_bits as f64 / 16.0
+    }
+}
+
+/// The PTQ algorithm family (distinct tensor-rounding strategies give
+/// distinct ΔPPL at identical precision — paper Fig. 6(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QuantAlgo {
+    /// No quantization (fp16 baseline).
+    None,
+    /// GPTQ-style second-order weight rounding.
+    Gptq,
+    /// ZeroQuant-Local style group-wise rounding.
+    ZqLocal,
+    /// Plain round-to-nearest (used by the tiny real model's W8A16 default).
+    Rtn,
+}
+
+impl QuantAlgo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantAlgo::None => "none",
+            QuantAlgo::Gptq => "GPTQ",
+            QuantAlgo::ZqLocal => "ZQ-Local",
+            QuantAlgo::Rtn => "RTN",
+        }
+    }
+}
+
+/// A deployable quantization configuration with its measured effect scalars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    pub precision: Precision,
+    pub algo: QuantAlgo,
+    /// α — aggregate memory-saving factor applied to (m1 + m2^I + m2^A) as in
+    /// constraint (1c). 1.0 = no saving. Derived from bit-widths.
+    pub alpha: f64,
+    /// β — compute-time factor applied to (t^I + t^A) as in constraint (1d).
+    /// <1 speeds up inference (narrower loads ⇒ less memory traffic), but
+    /// dequantization overhead keeps it above the pure bit-ratio.
+    pub beta: f64,
+    /// ΔPPL per model name (perplexity degradation vs fp16; larger = worse).
+    pub dppl: BTreeMap<String, f64>,
+}
+
+impl QuantSpec {
+    /// fp16 baseline: no memory saving, no speedup, no degradation.
+    pub fn fp16() -> QuantSpec {
+        QuantSpec {
+            precision: Precision::W16A16,
+            algo: QuantAlgo::None,
+            alpha: 1.0,
+            beta: 1.0,
+            dppl: BTreeMap::new(),
+        }
+    }
+
+    /// Label like "W4A16/GPTQ".
+    pub fn label(&self) -> String {
+        if self.algo == QuantAlgo::None {
+            self.precision.label()
+        } else {
+            format!("{}/{}", self.precision.label(), self.algo.label())
+        }
+    }
+
+    /// ΔPPL for a given model (0.0 when unquantized or unknown-but-baseline).
+    pub fn dppl_for(&self, model: &str) -> f64 {
+        if self.algo == QuantAlgo::None {
+            return 0.0;
+        }
+        *self.dppl.get(model).unwrap_or(&f64::INFINITY)
+    }
+
+    /// The accuracy function f — monotonically decreasing in ΔPPL, mapping
+    /// perplexity degradation into the same [0, 1] scale as the user accuracy
+    /// requirement a_i: f(Δ) = max(0, 1 − Δ).
+    pub fn accuracy_for(&self, model: &str) -> f64 {
+        f_accuracy(self.dppl_for(model))
+    }
+
+    /// Does this deployment satisfy user accuracy requirement `a` in [0,1]
+    /// for `model` — constraint (1e): a_i ≤ f(ΔPPL).
+    pub fn satisfies_accuracy(&self, model: &str, a: f64) -> bool {
+        a <= self.accuracy_for(model)
+    }
+}
+
+/// f(ΔPPL) — paper's monotonically-decreasing accuracy map.
+pub fn f_accuracy(dppl: f64) -> f64 {
+    (1.0 - dppl).max(0.0)
+}
+
+fn dppl_map(entries: &[(&str, f64)]) -> BTreeMap<String, f64> {
+    entries
+        .iter()
+        .map(|(k, v)| (k.to_string(), *v))
+        .collect()
+}
+
+/// The catalog of quantization deployments used in the paper's evaluation.
+///
+/// - W8A16 (default in §IV): small, nearly-lossless degradation.
+/// - W4A16 GPTQ and ZQ-Local: the exact Table II ΔPPL values.
+/// - α is the memory ratio of (weights at w_bits + KV at a_bits) to the
+///   fp16 baseline, weight-dominated for large models; β reflects the
+///   memory-bandwidth-bound speedup minus dequantization overhead, per the
+///   offline-profiling framing of [10].
+pub fn catalog() -> Vec<QuantSpec> {
+    vec![
+        QuantSpec::fp16(),
+        QuantSpec {
+            precision: Precision::W8A16,
+            algo: QuantAlgo::Gptq,
+            alpha: 0.55,
+            beta: 0.80,
+            dppl: dppl_map(&[
+                ("BLOOM-3B", 0.06),
+                ("BLOOM-7.1B", 0.04),
+                ("OPT-13B", 0.02),
+            ]),
+        },
+        QuantSpec {
+            precision: Precision::W8A16,
+            algo: QuantAlgo::ZqLocal,
+            alpha: 0.55,
+            beta: 0.83,
+            dppl: dppl_map(&[
+                ("BLOOM-3B", 0.09),
+                ("BLOOM-7.1B", 0.06),
+                ("OPT-13B", 0.05),
+            ]),
+        },
+        QuantSpec {
+            precision: Precision::W4A16,
+            algo: QuantAlgo::Gptq,
+            alpha: 0.35,
+            beta: 0.70,
+            // Table II, row GPTQ.
+            dppl: dppl_map(&[
+                ("BLOOM-3B", 0.75),
+                ("BLOOM-7.1B", 0.54),
+                ("OPT-13B", 0.20),
+            ]),
+        },
+        QuantSpec {
+            precision: Precision::W4A16,
+            algo: QuantAlgo::ZqLocal,
+            alpha: 0.35,
+            beta: 0.74,
+            // Table II, row ZQ-Local.
+            dppl: dppl_map(&[
+                ("BLOOM-3B", 0.92),
+                ("BLOOM-7.1B", 0.59),
+                ("OPT-13B", 0.42),
+            ]),
+        },
+    ]
+}
+
+/// The paper's default deployment (§IV: "Default quantization is 8-bit
+/// weight, 16-bit activation (W8A16)").
+pub fn default_quant() -> QuantSpec {
+    catalog()
+        .into_iter()
+        .find(|q| q.precision == Precision::W8A16 && q.algo == QuantAlgo::Gptq)
+        .expect("catalog contains W8A16/GPTQ")
+}
+
+/// Find a catalog entry by precision + algorithm.
+pub fn by_label(precision: Precision, algo: QuantAlgo) -> Option<QuantSpec> {
+    catalog()
+        .into_iter()
+        .find(|q| q.precision == precision && q.algo == algo)
+}
+
+/// Parse a label like "W8A16/RTN" or "W16A16" into its parts.
+pub fn parse_label(label: &str) -> Option<(Precision, QuantAlgo)> {
+    if label.eq_ignore_ascii_case("W16A16") || label.eq_ignore_ascii_case("fp16") {
+        return Some((Precision::W16A16, QuantAlgo::None));
+    }
+    let (prec_s, algo_s) = label.split_once('/')?;
+    let precision = match prec_s.to_ascii_uppercase().as_str() {
+        "W8A16" => Precision::W8A16,
+        "W4A16" => Precision::W4A16,
+        "W8A8" => Precision::W8A8,
+        _ => return None,
+    };
+    let algo = match algo_s.to_ascii_uppercase().as_str() {
+        "GPTQ" => QuantAlgo::Gptq,
+        "ZQ-LOCAL" | "ZQLOCAL" => QuantAlgo::ZqLocal,
+        "RTN" => QuantAlgo::Rtn,
+        "NONE" => QuantAlgo::None,
+        _ => return None,
+    };
+    Some((precision, algo))
+}
+
+/// A usable spec for any parsable label: the catalog entry when one exists,
+/// otherwise a synthesized spec with precision-derived α/β and an empty
+/// ΔPPL map (callers merge measured values, e.g. from artifacts/ppl.json).
+pub fn spec_for_label(label: &str) -> Option<QuantSpec> {
+    let (precision, algo) = parse_label(label)?;
+    if algo == QuantAlgo::None {
+        return Some(QuantSpec::fp16());
+    }
+    if let Some(spec) = by_label(precision, algo) {
+        return Some(spec);
+    }
+    let (alpha, beta) = match precision {
+        Precision::W16A16 => (1.0, 1.0),
+        Precision::W8A16 => (0.55, 0.82),
+        Precision::W4A16 => (0.35, 0.72),
+        _ => (0.40, 0.75), // W8A8-class
+    };
+    Some(QuantSpec {
+        precision,
+        algo,
+        alpha,
+        beta,
+        dppl: BTreeMap::new(),
+    })
+}
+
+/// Load measured ΔPPL entries (from `artifacts/ppl.json`) and merge them into
+/// a catalog spec, so the tiny real model's measured degradation flows through
+/// the same admission path as Table II. The JSON shape is
+/// `{"model": "tiny-decoder", "entries": [{"label": "W8A16/RTN", "dppl": 0.01}, ...]}`.
+pub fn merge_measured_dppl(
+    specs: &mut [QuantSpec],
+    json: &crate::util::json::Json,
+) -> Result<usize, String> {
+    let model = json.req_str("model")?.to_string();
+    let entries = json
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing `entries` array")?;
+    let mut merged = 0;
+    for e in entries {
+        let label = e.req_str("label")?;
+        let dppl = e.req_f64("dppl")?;
+        for spec in specs.iter_mut() {
+            if spec.label() == label {
+                spec.dppl.insert(model.clone(), dppl);
+                merged += 1;
+            }
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_present() {
+        let w4_gptq = by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap();
+        assert_eq!(w4_gptq.dppl_for("BLOOM-3B"), 0.75);
+        assert_eq!(w4_gptq.dppl_for("BLOOM-7.1B"), 0.54);
+        assert_eq!(w4_gptq.dppl_for("OPT-13B"), 0.20);
+        let w4_zq = by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap();
+        assert_eq!(w4_zq.dppl_for("BLOOM-3B"), 0.92);
+        assert_eq!(w4_zq.dppl_for("BLOOM-7.1B"), 0.59);
+        assert_eq!(w4_zq.dppl_for("OPT-13B"), 0.42);
+    }
+
+    #[test]
+    fn alpha_beta_monotone_in_precision() {
+        // Fewer bits ⇒ more memory saving (smaller α) and faster (smaller β).
+        let fp = QuantSpec::fp16();
+        let w8 = by_label(Precision::W8A16, QuantAlgo::Gptq).unwrap();
+        let w4 = by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap();
+        assert!(fp.alpha > w8.alpha && w8.alpha > w4.alpha);
+        assert!(fp.beta > w8.beta && w8.beta > w4.beta);
+    }
+
+    #[test]
+    fn accuracy_function_decreasing_and_clamped() {
+        assert_eq!(f_accuracy(0.0), 1.0);
+        assert!(f_accuracy(0.3) > f_accuracy(0.7));
+        assert_eq!(f_accuracy(1.5), 0.0);
+    }
+
+    #[test]
+    fn accuracy_admission() {
+        let w4_zq = by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap();
+        // BLOOM-3B dPPL 0.92 => f = 0.08: only very lax users admitted.
+        assert!(w4_zq.satisfies_accuracy("BLOOM-3B", 0.05));
+        assert!(!w4_zq.satisfies_accuracy("BLOOM-3B", 0.5));
+        // fp16 admits everyone.
+        assert!(QuantSpec::fp16().satisfies_accuracy("BLOOM-3B", 1.0));
+    }
+
+    #[test]
+    fn unknown_model_is_never_accurate() {
+        let w4 = by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap();
+        assert_eq!(w4.accuracy_for("mystery-model"), 0.0);
+        assert!(!w4.satisfies_accuracy("mystery-model", 0.1));
+    }
+
+    #[test]
+    fn gptq_beats_zq_local_at_same_precision() {
+        // Paper Fig. 6(b): distinct algorithms at identical precision differ.
+        let g = by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap();
+        let z = by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap();
+        for m in ["BLOOM-3B", "BLOOM-7.1B", "OPT-13B"] {
+            assert!(g.dppl_for(m) < z.dppl_for(m), "{m}");
+        }
+    }
+
+    #[test]
+    fn merge_measured_dppl_from_json() {
+        let mut specs = catalog();
+        let json = crate::util::json::Json::parse(
+            r#"{"model": "tiny-decoder",
+                "entries": [{"label": "W4A16/GPTQ", "dppl": 0.33},
+                             {"label": "W8A16/GPTQ", "dppl": 0.02}]}"#,
+        )
+        .unwrap();
+        let n = merge_measured_dppl(&mut specs, &json).unwrap();
+        assert_eq!(n, 2);
+        let w4 = specs
+            .iter()
+            .find(|s| s.label() == "W4A16/GPTQ")
+            .unwrap();
+        assert_eq!(w4.dppl_for("tiny-decoder"), 0.33);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(QuantSpec::fp16().label(), "W16A16");
+        assert_eq!(
+            by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap().label(),
+            "W4A16/ZQ-Local"
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! User inference requests — the ⟨sᵢ, nᵢ, τᵢ, aᵢ⟩ tuples of §II, plus the
+//! per-epoch derived quantities (channel gain, ρ_min fractions) the
+//! coordinator consumes.
+
+use crate::wireless::RadioParams;
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// A user inference request as submitted through the API (paper Fig. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival wall-clock time in seconds (simulation time).
+    pub arrival: f64,
+    /// Input prompt length in tokens (paper: s_i).
+    pub prompt_tokens: u32,
+    /// Desired maximum output length in tokens (paper: n_i), drawn from the
+    /// level set {N_1, ..., N}.
+    pub output_tokens: u32,
+    /// End-to-end latency requirement in seconds (paper: τ_i).
+    pub latency_req: f64,
+    /// Required text accuracy in [0,1] (paper: a_i). Admission demands
+    /// a_i ≤ f(ΔPPL) of the deployed quantization.
+    pub accuracy_req: f64,
+}
+
+impl Request {
+    /// Time this request has already waited if the batch starts at `now`.
+    pub fn waited(&self, now: f64) -> f64 {
+        (now - self.arrival).max(0.0)
+    }
+
+    /// Remaining latency budget at time `now`.
+    pub fn remaining_budget(&self, now: f64) -> f64 {
+        self.latency_req - self.waited(now)
+    }
+}
+
+/// A request annotated with this epoch's channel state and minimum bandwidth
+/// fractions — the unit the schedulers operate on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRequest {
+    pub req: Request,
+    /// Channel amplitude h_i for this epoch (constant within the epoch).
+    pub h: f64,
+    /// ρ_{i,min}^U — minimum uplink bandwidth fraction (constraint 1a term).
+    pub rho_min_u: f64,
+    /// ρ_{i,min}^D — minimum downlink bandwidth fraction (constraint 1b term).
+    pub rho_min_d: f64,
+}
+
+impl EpochRequest {
+    /// Annotate a request with channel-dependent quantities for one epoch.
+    pub fn annotate(req: Request, h: f64, radio: &RadioParams, t_u: f64, t_d: f64) -> Self {
+        let rho_min_u = radio.rho_min_uplink(req.prompt_tokens, h, t_u);
+        let rho_min_d = radio.rho_min_downlink(req.output_tokens, h, t_d);
+        EpochRequest {
+            req,
+            h,
+            rho_min_u,
+            rho_min_d,
+        }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.req.id
+    }
+}
+
+/// The discrete output-length levels {N_1 < N_2 < ... < N_N} present in a
+/// request set — the tree depth axis of DFTSP (§III-B).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputLevels {
+    levels: Vec<u32>,
+}
+
+impl OutputLevels {
+    /// Derive sorted distinct levels from a request slice.
+    pub fn from_requests(reqs: &[EpochRequest]) -> Self {
+        let mut levels: Vec<u32> = reqs.iter().map(|r| r.req.output_tokens).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        OutputLevels { levels }
+    }
+
+    /// The paper's default level set {128, 256, 512}.
+    pub fn standard() -> Self {
+        OutputLevels {
+            levels: vec![128, 256, 512],
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn levels(&self) -> &[u32] {
+        &self.levels
+    }
+
+    /// Index of the level a given n_i belongs to (exact match expected).
+    pub fn index_of(&self, n: u32) -> Option<usize> {
+        self.levels.binary_search(&n).ok()
+    }
+}
+
+/// Builder for hand-constructing requests in tests and examples.
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    next_id: RequestId,
+}
+
+impl Default for RequestBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestBuilder {
+    pub fn new() -> Self {
+        RequestBuilder { next_id: 0 }
+    }
+
+    pub fn build(
+        &mut self,
+        arrival: f64,
+        prompt_tokens: u32,
+        output_tokens: u32,
+        latency_req: f64,
+        accuracy_req: f64,
+    ) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        Request {
+            id,
+            arrival,
+            prompt_tokens,
+            output_tokens,
+            latency_req,
+            accuracy_req,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_req(n: u32) -> Request {
+        Request {
+            id: 1,
+            arrival: 10.0,
+            prompt_tokens: 128,
+            output_tokens: n,
+            latency_req: 1.5,
+            accuracy_req: 0.5,
+        }
+    }
+
+    #[test]
+    fn waited_and_budget() {
+        let r = sample_req(128);
+        assert_eq!(r.waited(12.0), 2.0);
+        assert_eq!(r.waited(9.0), 0.0);
+        assert!((r.remaining_budget(11.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn annotate_computes_rho_min() {
+        let radio = RadioParams::default();
+        let r = EpochRequest::annotate(sample_req(256), 0.03, &radio, 0.25, 0.25);
+        assert!(r.rho_min_u > 0.0 && r.rho_min_u < 1.0);
+        assert!(r.rho_min_d > 0.0 && r.rho_min_d < 1.0);
+        // downlink tokens (256) > uplink tokens (128) but downlink power is
+        // higher; just check both present and uplink matches formula.
+        let expect = radio.rho_min_uplink(128, 0.03, 0.25);
+        assert_eq!(r.rho_min_u, expect);
+    }
+
+    #[test]
+    fn output_levels_from_requests() {
+        let radio = RadioParams::default();
+        let mk = |n| EpochRequest::annotate(sample_req(n), 0.03, &radio, 0.25, 0.25);
+        let reqs = vec![mk(512), mk(128), mk(512), mk(256)];
+        let levels = OutputLevels::from_requests(&reqs);
+        assert_eq!(levels.levels(), &[128, 256, 512]);
+        assert_eq!(levels.index_of(256), Some(1));
+        assert_eq!(levels.index_of(300), None);
+        assert_eq!(levels.count(), 3);
+    }
+
+    #[test]
+    fn builder_assigns_unique_ids() {
+        let mut b = RequestBuilder::new();
+        let r1 = b.build(0.0, 128, 128, 1.0, 0.5);
+        let r2 = b.build(0.0, 128, 128, 1.0, 0.5);
+        assert_ne!(r1.id, r2.id);
+    }
+}

@@ -1,0 +1,266 @@
+//! Artifact manifest (`meta.json`) and weight container (`weights_*.bin`)
+//! loaders — the contract between `python/compile/aot.py` (build time) and
+//! the Rust request path (run time).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramEntry {
+    pub phase: String,
+    pub batch: usize,
+    pub file: String,
+}
+
+/// Parsed `meta.json`.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub model_name: String,
+    pub vocab: usize,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_prompt: usize,
+    pub max_seq: usize,
+    pub logit_scale: f64,
+    pub batch_variants: Vec<usize>,
+    pub param_order: Vec<String>,
+    pub programs: Vec<ProgramEntry>,
+    /// quant label -> weights file.
+    pub weights: BTreeMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta, String> {
+        let path = dir.join("meta.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| e.to_string())?;
+        let str_list = |key: &str| -> Result<Vec<String>, String> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| format!("missing array `{key}`"))
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+        };
+        let programs = j
+            .get("programs")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing `programs`")?
+            .iter()
+            .map(|p| {
+                Ok(ProgramEntry {
+                    phase: p.req_str("phase")?.to_string(),
+                    batch: p.req_f64("batch")? as usize,
+                    file: p.req_str("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let weights = j
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing `weights`")?
+            .iter()
+            .map(|w| {
+                Ok((
+                    w.req_str("label")?.to_string(),
+                    w.req_str("file")?.to_string(),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>, String>>()?;
+        Ok(Meta {
+            model_name: j.req_str("model_name")?.to_string(),
+            vocab: j.req_f64("vocab")? as usize,
+            layers: j.req_f64("layers")? as usize,
+            d_model: j.req_f64("d_model")? as usize,
+            n_heads: j.req_f64("n_heads")? as usize,
+            d_head: j.req_f64("d_head")? as usize,
+            d_ff: j.req_f64("d_ff")? as usize,
+            max_prompt: j.req_f64("max_prompt")? as usize,
+            max_seq: j.req_f64("max_seq")? as usize,
+            logit_scale: j.req_f64("logit_scale")?,
+            batch_variants: j
+                .get("batch_variants")
+                .and_then(|v| v.as_arr())
+                .ok_or("missing `batch_variants`")?
+                .iter()
+                .filter_map(|x| x.as_u64().map(|u| u as usize))
+                .collect(),
+            param_order: str_list("param_order")?,
+            programs,
+            weights,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Path of the HLO program for (phase, batch).
+    pub fn program_path(&self, phase: &str, batch: usize) -> Result<PathBuf, String> {
+        self.programs
+            .iter()
+            .find(|p| p.phase == phase && p.batch == batch)
+            .map(|p| self.dir.join(&p.file))
+            .ok_or_else(|| format!("no program for phase={phase} batch={batch}"))
+    }
+
+    /// Path of a weight variant ("W8A16/RTN" etc).
+    pub fn weights_path(&self, label: &str) -> Result<PathBuf, String> {
+        self.weights
+            .get(label)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| format!("no weight variant `{label}`"))
+    }
+
+    /// Smallest compiled batch variant that can hold `n` requests.
+    pub fn batch_variant_for(&self, n: usize) -> Option<usize> {
+        let mut vs = self.batch_variants.clone();
+        vs.sort_unstable();
+        vs.into_iter().find(|&b| b >= n)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.batch_variants.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// One tensor from the ELLM weight container.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Parse a `weights_*.bin` container (format documented in aot.py).
+pub fn load_weights(path: &Path) -> Result<Vec<Tensor>, String> {
+    let data = std::fs::read(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8], String> {
+        if *off + n > data.len() {
+            return Err(format!("truncated container at byte {off}"));
+        }
+        let s = &data[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    let magic = take(&mut off, 4)?;
+    if magic != b"ELLM" {
+        return Err("bad magic (not an ELLM container)".into());
+    }
+    let u32le = |b: &[u8]| u32::from_le_bytes(b.try_into().unwrap());
+    let version = u32le(take(&mut off, 4)?);
+    if version != 1 {
+        return Err(format!("unsupported container version {version}"));
+    }
+    let count = u32le(take(&mut off, 4)?) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = u32le(take(&mut off, 4)?) as usize;
+        let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
+            .map_err(|_| "non-utf8 tensor name".to_string())?;
+        let dtype = take(&mut off, 1)?[0];
+        if dtype != 0 {
+            return Err(format!("tensor {name}: unsupported dtype {dtype}"));
+        }
+        let ndim = u32le(take(&mut off, 4)?) as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32le(take(&mut off, 4)?) as usize);
+        }
+        let nbytes =
+            u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+        let raw = take(&mut off, nbytes)?;
+        if nbytes != dims.iter().product::<usize>() * 4 {
+            return Err(format!("tensor {name}: byte count mismatch"));
+        }
+        let mut vals = Vec::with_capacity(nbytes / 4);
+        for chunk in raw.chunks_exact(4) {
+            vals.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        out.push(Tensor {
+            name,
+            dims,
+            data: vals,
+        });
+    }
+    if off != data.len() {
+        return Err("trailing bytes in container".into());
+    }
+    Ok(out)
+}
+
+/// Does the artifact directory exist and carry a manifest? Tests use this to
+/// skip gracefully when `make artifacts` has not run.
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("meta.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn meta_loads_when_built() {
+        let dir = repo_artifacts();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.n_heads * meta.d_head, meta.d_model);
+        assert_eq!(meta.param_order.len(), 1 + 6 * meta.layers);
+        assert!(!meta.batch_variants.is_empty());
+        assert_eq!(meta.batch_variant_for(1), Some(1));
+        assert_eq!(meta.batch_variant_for(3), Some(4));
+        assert!(meta.batch_variant_for(meta.max_batch() + 1).is_none());
+        // every referenced file exists
+        for p in &meta.programs {
+            assert!(meta.dir.join(&p.file).exists(), "{}", p.file);
+        }
+        for f in meta.weights.values() {
+            assert!(meta.dir.join(f).exists(), "{f}");
+        }
+    }
+
+    #[test]
+    fn weights_container_parses_when_built() {
+        let dir = repo_artifacts();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let meta = Meta::load(&dir).unwrap();
+        let path = meta.weights_path("W16A16").unwrap();
+        let tensors = load_weights(&path).unwrap();
+        assert_eq!(tensors.len(), meta.param_order.len());
+        // order matches the canonical param order
+        for (t, name) in tensors.iter().zip(meta.param_order.iter()) {
+            assert_eq!(&t.name, name);
+            assert_eq!(t.data.len(), t.dims.iter().product::<usize>());
+        }
+        // embed shape
+        assert_eq!(tensors[0].dims, vec![meta.vocab, meta.d_model]);
+    }
+
+    #[test]
+    fn bad_container_rejected() {
+        let dir = std::env::temp_dir().join("edgellm_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load_weights(&p).is_err());
+        std::fs::write(&p, b"ELLM\x01\x00\x00\x00").unwrap();
+        assert!(load_weights(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! The PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! python/compile/aot.py) and executes prefill/decode on the request path.
+//! Adapted from /opt/xla-example/load_hlo — HLO text is the interchange
+//! format (see aot.py for why).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{artifacts_available, load_weights, Meta};
+pub use engine::{argmax, Engine, EngineError, KvCache};

@@ -1,0 +1,14 @@
+//! The serving layer: a real epoch-batched LLM server in the paper's Fig. 2
+//! protocol, composing the L3 scheduler (DFTSP or a baseline) with the PJRT
+//! runtime engine. Python is never on this path.
+//!
+//! Threading model: PJRT handles are not `Send`, so the engine and the epoch
+//! loop live on the thread that created them; clients submit requests
+//! through an mpsc handle from any thread and receive their generated tokens
+//! on a per-request reply channel.
+
+pub mod net;
+pub mod server;
+
+pub use net::{parse_request_line, render_response_line, spawn_listener};
+pub use server::{EpochServer, ServeOutcome, ServeRequest, ServeResponse, ServerConfig};

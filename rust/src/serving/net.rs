@@ -1,0 +1,201 @@
+//! TCP JSON-line front-end for the epoch server.
+//!
+//! Wire protocol (one JSON object per line, UTF-8):
+//!   → {"prompt": "text" | "ids": [..], "output_tokens": 16,
+//!      "latency_req": 2.0, "accuracy_req": 0.3}
+//!   ← {"outcome": "completed" | "late" | "rejected",
+//!      "ids": [..], "text": "...", "latency": 0.31, "epoch": 4}
+//!
+//! Each connection is handled by a plain thread (no tokio offline); the
+//! handler forwards requests through the epoch server's mpsc handle and
+//! writes the reply when generation completes. Prompts given as text are
+//! tokenized with the artifact BPE vocabulary.
+
+use crate::serving::{ServeOutcome, ServeRequest, ServeResponse};
+use crate::tokenizer::Bpe;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+/// Parse one request line. Returns (prompt ids, output_tokens, latency,
+/// accuracy).
+pub fn parse_request_line(
+    line: &str,
+    bpe: Option<&Bpe>,
+) -> Result<(Vec<i32>, u32, f64, f64), String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let prompt: Vec<i32> = if let Some(ids) = j.get("ids").and_then(|v| v.as_arr()) {
+        ids.iter()
+            .map(|x| x.as_f64().map(|f| f as i32).ok_or("non-numeric id"))
+            .collect::<Result<_, _>>()?
+    } else if let Some(text) = j.get("prompt").and_then(|v| v.as_str()) {
+        let bpe = bpe.ok_or("text prompts need a BPE vocabulary (artifacts/bpe.json)")?;
+        bpe.encode(text).into_iter().map(|t| t as i32).collect()
+    } else {
+        return Err("request needs `prompt` (text) or `ids` (numbers)".into());
+    };
+    let output_tokens = j.req_f64("output_tokens")? as u32;
+    let latency_req = j.req_f64("latency_req").unwrap_or(5.0);
+    let accuracy_req = j.req_f64("accuracy_req").unwrap_or(0.0);
+    Ok((prompt, output_tokens, latency_req, accuracy_req))
+}
+
+/// Render one response line.
+pub fn render_response_line(resp: &ServeResponse, bpe: Option<&Bpe>) -> String {
+    let outcome = match resp.outcome {
+        ServeOutcome::Completed => "completed",
+        ServeOutcome::CompletedLate => "late",
+        ServeOutcome::Rejected => "rejected",
+    };
+    let ids = Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect());
+    let mut fields = vec![
+        ("outcome", Json::Str(outcome.to_string())),
+        ("ids", ids),
+        ("latency", Json::Num(resp.latency)),
+    ];
+    if let Some(e) = resp.epoch {
+        fields.push(("epoch", Json::Num(e as f64)));
+    }
+    if let Some(bpe) = bpe {
+        let ids_u32: Vec<u32> = resp.tokens.iter().map(|&t| t as u32).collect();
+        fields.push(("text", Json::Str(bpe.decode(&ids_u32))));
+    }
+    Json::obj(fields).to_string()
+}
+
+fn handle_conn(stream: TcpStream, ingest: Sender<ServeRequest>, bpe: Option<Arc<Bpe>>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request_line(&line, bpe.as_deref()) {
+            Err(e) => format!("{{\"error\":{}}}", Json::Str(e)),
+            Ok((prompt, out, lat, acc)) => {
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                if ingest
+                    .send(ServeRequest {
+                        prompt,
+                        output_tokens: out,
+                        latency_req: lat,
+                        accuracy_req: acc,
+                        respond: rtx,
+                    })
+                    .is_err()
+                {
+                    break; // server gone
+                }
+                match rrx.recv() {
+                    Ok(resp) => render_response_line(&resp, bpe.as_deref()),
+                    Err(_) => break,
+                }
+            }
+        };
+        if writeln!(writer, "{reply}").is_err() {
+            break;
+        }
+    }
+    let _ = peer; // quiet unused when logging is off
+}
+
+/// Accept loop: spawns one thread per connection, forwarding into the epoch
+/// server's ingest handle. Returns the bound address; runs until the
+/// listener errors or the process exits.
+pub fn spawn_listener(
+    addr: &str,
+    ingest: Sender<ServeRequest>,
+    bpe: Option<Bpe>,
+) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let bpe = bpe.map(Arc::new);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let ingest = ingest.clone();
+                    let bpe = bpe.clone();
+                    std::thread::spawn(move || handle_conn(s, ingest, bpe));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ids_request() {
+        let (prompt, out, lat, acc) = parse_request_line(
+            r#"{"ids": [1, 2, 3], "output_tokens": 8, "latency_req": 2.5, "accuracy_req": 0.4}"#,
+            None,
+        )
+        .unwrap();
+        assert_eq!(prompt, vec![1, 2, 3]);
+        assert_eq!(out, 8);
+        assert_eq!(lat, 2.5);
+        assert_eq!(acc, 0.4);
+    }
+
+    #[test]
+    fn parse_text_request_needs_bpe() {
+        let err = parse_request_line(
+            r#"{"prompt": "hello", "output_tokens": 4}"#,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.contains("BPE"));
+        let bpe = crate::tokenizer::Bpe::from_merges(vec![]);
+        let (prompt, _, _, _) = parse_request_line(
+            r#"{"prompt": "hi", "output_tokens": 4}"#,
+            Some(&bpe),
+        )
+        .unwrap();
+        assert_eq!(prompt, vec![b'h' as i32, b'i' as i32]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_request_line("not json", None).is_err());
+        assert!(parse_request_line(r#"{"output_tokens": 4}"#, None).is_err());
+        assert!(parse_request_line(r#"{"ids": [1]}"#, None).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_through_json() {
+        let resp = ServeResponse {
+            outcome: ServeOutcome::Completed,
+            tokens: vec![5, 6, 7],
+            latency: 0.25,
+            epoch: Some(3),
+        };
+        let line = render_response_line(&resp, None);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req_str("outcome").unwrap(), "completed");
+        assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.req_f64("epoch").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn render_includes_text_with_bpe() {
+        let bpe = crate::tokenizer::Bpe::from_merges(vec![]);
+        let resp = ServeResponse {
+            outcome: ServeOutcome::Completed,
+            tokens: vec![b'o' as i32, b'k' as i32],
+            latency: 0.1,
+            epoch: None,
+        };
+        let line = render_response_line(&resp, Some(&bpe));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req_str("text").unwrap(), "ok");
+    }
+}

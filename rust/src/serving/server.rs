@@ -1,0 +1,436 @@
+//! Epoch-batched serving loop over the PJRT engine.
+
+use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
+use crate::metrics::{Metrics, Outcome};
+use crate::model::{CostModel, LlmSpec};
+use crate::quant::QuantSpec;
+use crate::request::{EpochRequest, Request};
+use crate::runtime::{argmax, Engine};
+use crate::util::rng::Rng;
+use crate::wireless::{ChannelParams, RadioParams};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+/// A client request: a prompt plus the paper's ⟨n, τ, a⟩ requirements.
+#[derive(Debug)]
+pub struct ServeRequest {
+    pub prompt: Vec<i32>,
+    /// Desired output length n_i (tokens).
+    pub output_tokens: u32,
+    /// Latency requirement τ_i in seconds.
+    pub latency_req: f64,
+    /// Accuracy requirement a_i in [0, 1].
+    pub accuracy_req: f64,
+    /// Reply channel.
+    pub respond: Sender<ServeResponse>,
+}
+
+/// Terminal state of a served request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// Generated within the deadline.
+    Completed,
+    /// Generated, but the deadline had already passed.
+    CompletedLate,
+    /// Rejected (inadmissible accuracy, oversized, or unschedulable before
+    /// its deadline).
+    Rejected,
+}
+
+/// What the client gets back.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub outcome: ServeOutcome,
+    pub tokens: Vec<i32>,
+    /// End-to-end latency in seconds (submission → response).
+    pub latency: f64,
+    /// Epoch index in which the request ran (None if rejected).
+    pub epoch: Option<u64>,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    /// Epoch protocol. The tiny model serves sub-second epochs comfortably.
+    pub epoch: EpochParams,
+    pub quant: QuantSpec,
+    pub radio: RadioParams,
+    pub channel: ChannelParams,
+    /// Requests older than this many epochs are rejected.
+    pub max_wait_epochs: u64,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            epoch: EpochParams {
+                duration: 0.5,
+                t_u: 0.05,
+                t_d: 0.05,
+            },
+            quant: crate::quant::default_quant(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            max_wait_epochs: 8,
+            seed: 7,
+        }
+    }
+}
+
+struct Pending {
+    req: Request,
+    prompt: Vec<i32>,
+    respond: Sender<ServeResponse>,
+    submitted: Instant,
+}
+
+/// The epoch server. Owns the engine; runs on the creating thread.
+pub struct EpochServer {
+    engine: Engine,
+    config: ServerConfig,
+    scheduler: Box<dyn Scheduler>,
+    inst_template: (CostModel, ClusterSpec),
+    ingress_tx: Sender<ServeRequest>,
+    ingress_rx: Receiver<ServeRequest>,
+    queue: Vec<Pending>,
+    next_id: u64,
+    rng: Rng,
+    pub metrics: Metrics,
+    epoch_idx: u64,
+}
+
+impl EpochServer {
+    /// Build a server around a loaded engine and a scheduling policy.
+    ///
+    /// The scheduler's cost model is calibrated to the *tiny real model*:
+    /// its `LlmSpec` comes from the artifact manifest and the virtual
+    /// "GPU" speed is measured from an actual warmup batch, so the paper's
+    /// analytic constraint (1d) tracks real wall-clock compute.
+    pub fn new(engine: Engine, mut config: ServerConfig, scheduler: Box<dyn Scheduler>) -> Self {
+        // Align the scheduler's quantization model with the weights the
+        // engine actually loaded: α/β from the label, ΔPPL from the
+        // build-time measurement (artifacts/ppl.json).
+        if let Some(mut spec) = crate::quant::spec_for_label(&engine.quant_label) {
+            let ppl_path = engine.meta.dir.join("ppl.json");
+            let mut merged = false;
+            if let Ok(src) = std::fs::read_to_string(&ppl_path) {
+                if let Ok(json) = crate::util::json::Json::parse(&src) {
+                    if let Ok(n) =
+                        crate::quant::merge_measured_dppl(std::slice::from_mut(&mut spec), &json)
+                    {
+                        merged = n > 0;
+                    }
+                }
+            }
+            if !merged && spec.algo != crate::quant::QuantAlgo::None {
+                // No measurement available: treat the deployed weights as
+                // validated (build-time pytest gates them) rather than
+                // rejecting every accuracy-sensitive request.
+                spec.dppl.insert(engine.meta.model_name.clone(), 0.0);
+            }
+            config.quant = spec;
+        }
+        let meta = &engine.meta;
+        let spec = LlmSpec::new(
+            &meta.model_name,
+            meta.layers as u32,
+            meta.d_model as u32,
+            meta.n_heads as u32,
+            meta.d_head as u32,
+        );
+        let cost = CostModel::new(spec);
+        let flops = Self::calibrate(&engine, &cost);
+        let cluster = ClusterSpec::new(
+            GpuSpec {
+                name: format!("pjrt-{}", engine.platform()),
+                flops,
+                mem_bytes: 4 << 30,
+            },
+            1,
+        );
+        let (tx, rx) = channel();
+        EpochServer {
+            engine,
+            config,
+            scheduler,
+            inst_template: (cost, cluster),
+            ingress_tx: tx,
+            ingress_rx: rx,
+            queue: Vec::new(),
+            next_id: 0,
+            rng: Rng::new(7),
+            metrics: Metrics::new(),
+            epoch_idx: 0,
+        }
+    }
+
+    /// Measure achieved FLOP/s with one warmup generation so the scheduler's
+    /// latency constraint reflects this machine, not a Jetson.
+    fn calibrate(engine: &Engine, cost: &CostModel) -> f64 {
+        let s = engine.meta.max_prompt.min(32) as u32;
+        let steps = 4usize;
+        let prompt = vec![(0..s as i32).collect::<Vec<i32>>()];
+        let t0 = Instant::now();
+        let _ = engine.generate_greedy(&prompt, steps, None);
+        let dt = t0.elapsed().as_secs_f64().max(1e-6);
+        let flops = cost.prefill_flops_per_req(engine.meta.max_prompt as u32)
+            + cost.decode_flops_per_req(engine.meta.max_prompt as u32, steps as u32 + 1);
+        (flops / dt).max(1e6)
+    }
+
+    /// Clonable ingest handle for client threads.
+    pub fn handle(&self) -> Sender<ServeRequest> {
+        self.ingress_tx.clone()
+    }
+
+    /// Drain newly-submitted requests into the queue (non-blocking).
+    fn drain_ingress(&mut self, now: f64) {
+        loop {
+            match self.ingress_rx.try_recv() {
+                Ok(sr) => {
+                    let max_prompt = self.engine.meta.max_prompt;
+                    let budget =
+                        (self.engine.meta.max_seq - sr.prompt.len().min(max_prompt)) as u32;
+                    let reject = sr.prompt.is_empty()
+                        || sr.prompt.len() > max_prompt
+                        || sr.output_tokens == 0
+                        || sr.output_tokens > budget;
+                    if reject {
+                        self.metrics.record_offered(1);
+                        self.metrics.record_outcome(Outcome::Dropped, 0.0);
+                        let _ = sr.respond.send(ServeResponse {
+                            outcome: ServeOutcome::Rejected,
+                            tokens: vec![],
+                            latency: 0.0,
+                            epoch: None,
+                        });
+                        continue;
+                    }
+                    let req = Request {
+                        id: self.next_id,
+                        arrival: now,
+                        prompt_tokens: sr.prompt.len() as u32,
+                        output_tokens: sr.output_tokens,
+                        latency_req: sr.latency_req,
+                        accuracy_req: sr.accuracy_req,
+                    };
+                    self.next_id += 1;
+                    self.metrics.record_offered(1);
+                    self.queue.push(Pending {
+                        req,
+                        prompt: sr.prompt,
+                        respond: sr.respond,
+                        submitted: Instant::now(),
+                    });
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+
+    /// Run `epochs` epochs of the Fig. 2 protocol, real time. Returns when
+    /// done; metrics accumulate in `self.metrics`.
+    pub fn run_for(&mut self, epochs: u64) {
+        let start = Instant::now();
+        for _ in 0..epochs {
+            let epoch_start = start.elapsed().as_secs_f64();
+            self.drain_ingress(epoch_start);
+            self.step_epoch(epoch_start);
+            self.epoch_idx += 1;
+            // Sleep until the next epoch boundary.
+            let next = (self.epoch_idx) as f64 * self.config.epoch.duration;
+            let now = start.elapsed().as_secs_f64();
+            if next > now {
+                std::thread::sleep(std::time::Duration::from_secs_f64(next - now));
+            }
+        }
+        self.metrics.horizon = start.elapsed().as_secs_f64();
+        // Shutdown: reject whatever is still queued (and anything that
+        // arrived after the last boundary) so clients waiting on their reply
+        // channels always unblock.
+        self.drain_ingress(start.elapsed().as_secs_f64());
+        for p in self.queue.drain(..) {
+            self.metrics.record_outcome(Outcome::Dropped, 0.0);
+            let _ = p.respond.send(ServeResponse {
+                outcome: ServeOutcome::Rejected,
+                tokens: vec![],
+                latency: p.submitted.elapsed().as_secs_f64(),
+                epoch: None,
+            });
+        }
+    }
+
+    /// One scheduling + execution round at epoch-relative time `now`.
+    fn step_epoch(&mut self, now: f64) {
+        // Reject requests that waited too long.
+        let max_wait =
+            self.config.max_wait_epochs as f64 * self.config.epoch.duration;
+        let mut keep = Vec::new();
+        for p in self.queue.drain(..) {
+            if p.req.waited(now) > max_wait {
+                self.metrics.record_outcome(Outcome::Dropped, 0.0);
+                let _ = p.respond.send(ServeResponse {
+                    outcome: ServeOutcome::Rejected,
+                    tokens: vec![],
+                    latency: p.submitted.elapsed().as_secs_f64(),
+                    epoch: None,
+                });
+            } else {
+                keep.push(p);
+            }
+        }
+        self.queue = keep;
+        self.metrics.queue_depth.push(self.queue.len() as f64);
+        if self.queue.is_empty() {
+            return;
+        }
+
+        let (cost, cluster) = &self.inst_template;
+        let inst = ProblemInstance::new(
+            cost.clone(),
+            self.config.quant.clone(),
+            cluster.clone(),
+            self.config.epoch.clone(),
+            self.engine.meta.max_prompt as u32,
+            now,
+        );
+        let annotated: Vec<EpochRequest> = self
+            .queue
+            .iter()
+            .map(|p| {
+                let h = self.config.channel.draw_h(&mut self.rng);
+                EpochRequest::annotate(
+                    p.req.clone(),
+                    h,
+                    &self.config.radio,
+                    self.config.epoch.t_u,
+                    self.config.epoch.t_d,
+                )
+            })
+            .collect();
+
+        // Reject inadmissible-by-accuracy requests outright.
+        let inadmissible: Vec<u64> = annotated
+            .iter()
+            .filter(|r| !inst.admits(r))
+            .map(|r| r.id())
+            .collect();
+        if !inadmissible.is_empty() {
+            let mut keep = Vec::new();
+            for p in self.queue.drain(..) {
+                if inadmissible.contains(&p.req.id) {
+                    self.metrics.record_outcome(Outcome::Dropped, 0.0);
+                    let _ = p.respond.send(ServeResponse {
+                        outcome: ServeOutcome::Rejected,
+                        tokens: vec![],
+                        latency: p.submitted.elapsed().as_secs_f64(),
+                        epoch: None,
+                    });
+                } else {
+                    keep.push(p);
+                }
+            }
+            self.queue = keep;
+        }
+        let annotated: Vec<EpochRequest> = annotated
+            .into_iter()
+            .filter(|r| !inadmissible.contains(&r.id()))
+            .collect();
+        if annotated.is_empty() {
+            return;
+        }
+
+        let schedule = self.scheduler.schedule(&inst, &annotated);
+        self.metrics
+            .record_schedule(schedule.batch_size(), &schedule.stats);
+        if schedule.scheduled.is_empty() {
+            return;
+        }
+
+        // Pull scheduled requests out of the queue and execute them on the
+        // engine in chunks of at most max_batch.
+        let mut to_run = Vec::new();
+        let mut keep = Vec::new();
+        for p in self.queue.drain(..) {
+            if schedule.scheduled.contains(&p.req.id) {
+                to_run.push(p);
+            } else {
+                keep.push(p);
+            }
+        }
+        self.queue = keep;
+
+        let max_batch = self.engine.max_batch().max(1);
+        for chunk in to_run.chunks(max_batch) {
+            let prompts: Vec<Vec<i32>> = chunk.iter().map(|p| p.prompt.clone()).collect();
+            let steps = chunk
+                .iter()
+                .map(|p| p.req.output_tokens as usize)
+                .max()
+                .unwrap_or(1);
+            match self.run_batch(&prompts, chunk, steps) {
+                Ok(()) => {}
+                Err(e) => {
+                    for p in chunk {
+                        let _ = p.respond.send(ServeResponse {
+                            outcome: ServeOutcome::Rejected,
+                            tokens: vec![],
+                            latency: p.submitted.elapsed().as_secs_f64(),
+                            epoch: Some(self.epoch_idx),
+                        });
+                        self.metrics.record_outcome(Outcome::Dropped, 0.0);
+                    }
+                    eprintln!("batch execution failed: {e}");
+                }
+            }
+        }
+    }
+
+    fn run_batch(
+        &mut self,
+        prompts: &[Vec<i32>],
+        chunk: &[Pending],
+        max_steps: usize,
+    ) -> Result<(), crate::runtime::EngineError> {
+        let (logits, mut cache) = self.engine.prefill(prompts)?;
+        let n = prompts.len();
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut next: Vec<i32> = logits.iter().map(|r| argmax(r)).collect();
+        for step in 0..max_steps {
+            for i in 0..n {
+                if (chunk[i].req.output_tokens as usize) > step {
+                    outs[i].push(next[i]);
+                }
+            }
+            if step + 1 == max_steps {
+                break;
+            }
+            let logits = self.engine.decode(&next, &mut cache)?;
+            next = logits.iter().map(|r| argmax(r)).collect();
+        }
+        for (i, p) in chunk.iter().enumerate() {
+            let latency = p.submitted.elapsed().as_secs_f64();
+            let in_deadline = latency <= p.req.latency_req;
+            self.metrics.record_outcome(
+                if in_deadline {
+                    Outcome::CompletedInDeadline
+                } else {
+                    Outcome::CompletedLate
+                },
+                latency,
+            );
+            let _ = p.respond.send(ServeResponse {
+                outcome: if in_deadline {
+                    ServeOutcome::Completed
+                } else {
+                    ServeOutcome::CompletedLate
+                },
+                tokens: outs[i].clone(),
+                latency,
+                epoch: Some(self.epoch_idx),
+            });
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,274 @@
+//! Epoch-driven discrete-event simulator — the testbed stand-in that
+//! regenerates the paper's §IV evaluation.
+//!
+//! Implements the Fig. 2 protocol: time is divided into epochs; requests
+//! arriving during epoch e are aggregated and offered to the scheduler at
+//! the boundary of epoch e+1; scheduled requests upload during T_U, compute
+//! during the (overlapped) T_C and download during T_D. Completion within
+//! τ_i counts toward throughput — the paper's headline metric.
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
+use crate::metrics::{Metrics, Outcome};
+use crate::model::{CostModel, LlmSpec};
+use crate::quant::QuantSpec;
+use crate::request::{EpochRequest, Request};
+use crate::util::rng::Rng;
+use crate::wireless::{ChannelParams, RadioParams};
+use crate::workload::{WorkloadGenerator, WorkloadParams};
+
+/// Full simulation scenario.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub model: LlmSpec,
+    pub quant: QuantSpec,
+    pub cluster: ClusterSpec,
+    pub epoch: EpochParams,
+    pub radio: RadioParams,
+    pub channel: ChannelParams,
+    pub workload: WorkloadParams,
+    /// Number of epochs to simulate.
+    pub epochs: usize,
+    pub seed: u64,
+    /// Fixed padding length s'; `None` pads to the longest queued prompt.
+    pub s_pad: Option<u32>,
+}
+
+impl SimConfig {
+    /// Paper §IV defaults: BLOOM-3B, W8A16, 20×TX2, 2 s epochs, λ=50.
+    pub fn paper_default() -> Self {
+        SimConfig {
+            model: LlmSpec::bloom_3b(),
+            quant: crate::quant::default_quant(),
+            cluster: ClusterSpec::paper_default(),
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            workload: WorkloadParams::default(),
+            epochs: 30,
+            seed: 42,
+            s_pad: None,
+        }
+    }
+}
+
+/// Run one scenario under one scheduling policy; returns aggregate metrics.
+pub fn run(config: &SimConfig, scheduler: &mut dyn Scheduler) -> Metrics {
+    let mut metrics = Metrics::new();
+    let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
+    let mut channel_rng = Rng::new(config.seed ^ 0xC0FFEE);
+    let cost = CostModel::new(config.model.clone());
+    let duration = config.epoch.duration;
+
+    // Requests waiting to be scheduled (arrived in earlier epochs).
+    let mut queue: Vec<Request> = Vec::new();
+
+    for e in 0..config.epochs {
+        let now = e as f64 * duration;
+
+        // 1. Drop queued requests that can no longer make their deadline even
+        //    if scheduled right now and run alone at full cluster speed.
+        let mut survivors = Vec::with_capacity(queue.len());
+        for r in queue.drain(..) {
+            let best_case = config.epoch.t_u
+                + config.quant.beta
+                    * cost.total_flops_per_req(r.prompt_tokens, r.output_tokens)
+                    / config.cluster.total_flops()
+                + config.epoch.t_d;
+            if r.waited(now) + best_case > r.latency_req {
+                metrics.record_outcome(Outcome::Dropped, 0.0);
+            } else {
+                survivors.push(r);
+            }
+        }
+        queue = survivors;
+        metrics.queue_depth.push(queue.len() as f64);
+
+        // 2. Annotate the queue with this epoch's channel state.
+        let s_pad = config.s_pad.unwrap_or_else(|| {
+            queue
+                .iter()
+                .map(|r| r.prompt_tokens)
+                .max()
+                .unwrap_or(512)
+        });
+        let inst = ProblemInstance::new(
+            cost.clone(),
+            config.quant.clone(),
+            config.cluster.clone(),
+            config.epoch.clone(),
+            s_pad,
+            now,
+        );
+        let annotated: Vec<EpochRequest> = queue
+            .iter()
+            .map(|r| {
+                let h = config.channel.draw_h(&mut channel_rng);
+                EpochRequest::annotate(r.clone(), h, &config.radio, config.epoch.t_u, config.epoch.t_d)
+            })
+            .collect();
+
+        // 3. Drop requests the deployed quantization can never satisfy
+        //    (accuracy admission is workload-independent).
+        //    They'd otherwise sit in the queue forever.
+        let inadmissible: Vec<u64> = annotated
+            .iter()
+            .filter(|r| !inst.admits(r))
+            .map(|r| r.id())
+            .collect();
+        for _ in &inadmissible {
+            metrics.record_outcome(Outcome::Dropped, 0.0);
+        }
+        queue.retain(|r| !inadmissible.contains(&r.id));
+        let annotated: Vec<EpochRequest> = annotated
+            .into_iter()
+            .filter(|r| !inadmissible.contains(&r.id()))
+            .collect();
+
+        // 4. Schedule.
+        let sched = scheduler.schedule(&inst, &annotated);
+        metrics.record_schedule(sched.batch_size(), &sched.stats);
+
+        // 5. Resolve completions.
+        for &(id, t_compute) in &sched.per_request_compute {
+            let req = annotated
+                .iter()
+                .find(|r| r.id() == id)
+                .expect("scheduler returned unknown request id");
+            let completion = now + config.epoch.t_u + t_compute + config.epoch.t_d;
+            let latency = completion - req.req.arrival;
+            let outcome = if latency <= req.req.latency_req + 1e-9 {
+                Outcome::CompletedInDeadline
+            } else {
+                Outcome::CompletedLate
+            };
+            metrics.record_outcome(outcome, latency);
+        }
+        queue.retain(|r| !sched.scheduled.contains(&r.id));
+
+        // 6. Admit the arrivals of this epoch (schedulable from the next
+        //    boundary onward — the Fig. 2 aggregation rule).
+        let arrivals = gen.arrivals_between(now, now + duration);
+        metrics.record_offered(arrivals.len() as u64);
+        queue.extend(arrivals);
+    }
+
+    // Close accounting: whatever still waits at the horizon is unserved.
+    for _ in &queue {
+        metrics.record_outcome(Outcome::Dropped, 0.0);
+    }
+    metrics.horizon = config.epochs as f64 * duration;
+    metrics
+}
+
+/// Convenience: run the same scenario under several schedulers (fresh
+/// workload generator each time — identical arrivals thanks to the seed).
+pub fn compare(
+    config: &SimConfig,
+    schedulers: Vec<Box<dyn Scheduler>>,
+) -> Vec<(String, Metrics)> {
+    schedulers
+        .into_iter()
+        .map(|mut s| {
+            let m = run(config, s.as_mut());
+            (s.name().to_string(), m)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Dftsp, NoBatching, StaticBatching};
+
+    fn quick_config(rate: f64, epochs: usize) -> SimConfig {
+        SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: rate,
+                ..Default::default()
+            },
+            epochs,
+            ..SimConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn accounting_closes() {
+        // offered == in-deadline + late + dropped (queue leftover included).
+        let cfg = quick_config(20.0, 10);
+        let m = run(&cfg, &mut Dftsp::new());
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "conservation of requests"
+        );
+        assert!(m.offered > 0);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = quick_config(30.0, 8);
+        let a = run(&cfg, &mut Dftsp::new());
+        let b = run(&cfg, &mut Dftsp::new());
+        assert_eq!(a.completed_in_deadline, b.completed_in_deadline);
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.search.nodes_visited, b.search.nodes_visited);
+    }
+
+    #[test]
+    fn dftsp_beats_baselines_at_moderate_load() {
+        let cfg = quick_config(40.0, 12);
+        let d = run(&cfg, &mut Dftsp::new());
+        let s = run(&cfg, &mut StaticBatching::new());
+        let n = run(&cfg, &mut NoBatching::new());
+        assert!(
+            d.throughput() >= s.throughput(),
+            "DFTSP {} vs StB {}",
+            d.throughput(),
+            s.throughput()
+        );
+        assert!(
+            d.throughput() >= n.throughput(),
+            "DFTSP {} vs NoB {}",
+            d.throughput(),
+            n.throughput()
+        );
+    }
+
+    #[test]
+    fn throughput_saturates_with_rate() {
+        // Fig. 5(a) shape: throughput grows then flattens.
+        let lo = run(&quick_config(5.0, 12), &mut Dftsp::new());
+        let mid = run(&quick_config(60.0, 12), &mut Dftsp::new());
+        let hi = run(&quick_config(200.0, 12), &mut Dftsp::new());
+        assert!(mid.throughput() > lo.throughput());
+        // saturation: the jump from mid to hi is much smaller than lo to mid
+        let g1 = mid.throughput() - lo.throughput();
+        let g2 = hi.throughput() - mid.throughput();
+        assert!(g2 < g1, "g1={g1} g2={g2}");
+    }
+
+    #[test]
+    fn larger_model_lower_throughput() {
+        let mut cfg7 = quick_config(60.0, 10);
+        cfg7.model = LlmSpec::bloom_7b();
+        let m3 = run(&quick_config(60.0, 10), &mut Dftsp::new());
+        let m7 = run(&cfg7, &mut Dftsp::new());
+        assert!(
+            m3.throughput() > m7.throughput(),
+            "3B {} vs 7.1B {}",
+            m3.throughput(),
+            m7.throughput()
+        );
+    }
+
+    #[test]
+    fn nob_gpus_bound_throughput() {
+        // NoB can never serve more than num_gpus per epoch.
+        let cfg = quick_config(100.0, 10);
+        let m = run(&cfg, &mut NoBatching::new());
+        let max_per_epoch = cfg.cluster.num_gpus as f64 / cfg.epoch.duration;
+        assert!(m.throughput() <= max_per_epoch + 1e-9);
+    }
+}

@@ -1,0 +1,209 @@
+//! Byte-level BPE tokenizer — the request-path twin of
+//! `python/compile/tokenizer.py` (paper §IV: BPE tokens as 2-byte indices).
+//!
+//! Loads the rank-ordered merge table from `artifacts/bpe.json` and
+//! implements encode (lowest-rank merge first, exactly like the Python
+//! trainer) and decode. Golden text↔ids pairs embedded in the artifact
+//! prove cross-language agreement.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded BPE vocabulary.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merges[r] = (left, right) merged into token 256 + r.
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> rank.
+    rank: HashMap<(u32, u32), u32>,
+    /// token id -> bytes.
+    vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Build from a merge table.
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Bpe {
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        for &(a, b) in &merges {
+            let mut bytes = vocab[a as usize].clone();
+            bytes.extend_from_slice(&vocab[b as usize]);
+            vocab.push(bytes);
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        Bpe {
+            merges,
+            rank,
+            vocab,
+        }
+    }
+
+    /// Load `bpe.json` produced by the Python trainer.
+    pub fn load(path: &Path) -> Result<Bpe, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| e.to_string())?;
+        let merges = j
+            .get("merges")
+            .and_then(|m| m.as_arr())
+            .ok_or("missing `merges`")?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().ok_or("merge entry not a pair")?;
+                if p.len() != 2 {
+                    return Err("merge entry not a pair".to_string());
+                }
+                Ok((
+                    p[0].as_u64().ok_or("bad merge id")? as u32,
+                    p[1].as_u64().ok_or("bad merge id")? as u32,
+                ))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Bpe::from_merges(merges))
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode text to token ids (reference-identical greedy lowest-rank
+    /// merging).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        while ids.len() >= 2 {
+            // find the lowest-rank adjacent pair
+            let mut best: Option<(usize, u32)> = None; // (position, rank)
+            for i in 0..ids.len() - 1 {
+                if let Some(&r) = self.rank.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(_, br)| r < br).unwrap_or(true) {
+                        best = Some((i, r));
+                    }
+                }
+            }
+            let Some((_, r)) = best else { break };
+            let (a, b) = self.merges[r as usize];
+            let merged = 256 + r;
+            // merge every occurrence of (a, b), as the trainer does
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && ids[i] == a && ids[i + 1] == b {
+                    out.push(merged);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    /// Decode ids back to text (invalid UTF-8 becomes U+FFFD, invalid ids are
+    /// skipped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(b) = self.vocab.get(id as usize) {
+                bytes.extend_from_slice(b);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Validate against the golden pairs embedded in bpe.json; returns the
+    /// number of goldens checked.
+    pub fn check_goldens(&self, json: &Json) -> Result<usize, String> {
+        let goldens = json
+            .get("goldens")
+            .and_then(|g| g.as_arr())
+            .ok_or("missing `goldens`")?;
+        for g in goldens {
+            let text = g.req_str("text")?;
+            let want: Vec<u32> = g
+                .get("ids")
+                .and_then(|i| i.as_arr())
+                .ok_or("missing ids")?
+                .iter()
+                .filter_map(|x| x.as_u64().map(|u| u as u32))
+                .collect();
+            let got = self.encode(text);
+            if got != want {
+                return Err(format!(
+                    "golden mismatch for `{text}`: rust {got:?} vs python {want:?}"
+                ));
+            }
+            if self.decode(&got) != text {
+                return Err(format!("decode(encode) != id for `{text}`"));
+            }
+        }
+        Ok(goldens.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small hand-built merge table: "ab" -> 256, then (256, 'c') -> 257.
+    fn toy() -> Bpe {
+        Bpe::from_merges(vec![(b'a' as u32, b'b' as u32), (256, b'c' as u32)])
+    }
+
+    #[test]
+    fn encodes_with_rank_priority() {
+        let bpe = toy();
+        assert_eq!(bpe.encode("abc"), vec![257]);
+        assert_eq!(bpe.encode("ab"), vec![256]);
+        assert_eq!(bpe.encode("ba"), vec![b'b' as u32, b'a' as u32]);
+        assert_eq!(bpe.encode("abab"), vec![256, 256]);
+    }
+
+    #[test]
+    fn decode_inverts_encode() {
+        let bpe = toy();
+        for text in ["abcabcab", "xyz", "aabbcc", ""] {
+            assert_eq!(bpe.decode(&bpe.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn roundtrips_unicode() {
+        let bpe = toy();
+        let text = "héllo wörld — ab";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text);
+    }
+
+    #[test]
+    fn vocab_size_counts_merges() {
+        assert_eq!(toy().vocab_size(), 258);
+    }
+
+    #[test]
+    fn invalid_ids_skipped_in_decode() {
+        let bpe = toy();
+        assert_eq!(bpe.decode(&[b'h' as u32, 9999, b'i' as u32]), "hi");
+    }
+
+    #[test]
+    fn matches_python_goldens_when_built() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/bpe.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts/bpe.json not built");
+            return;
+        }
+        let bpe = Bpe::load(&path).unwrap();
+        let json = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let n = bpe.check_goldens(&json).unwrap();
+        assert!(n >= 3, "expected several goldens, got {n}");
+        assert!(bpe.vocab_size() > 256);
+        // arbitrary text roundtrips
+        let text = "the scheduler batches requests across the wireless edge.";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text);
+    }
+}

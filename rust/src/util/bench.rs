@@ -1,0 +1,153 @@
+//! Micro-benchmark harness (no `criterion` in the offline environment).
+//!
+//! Provides warmup + repeated timed runs, outlier-robust summary statistics,
+//! and a black_box to defeat constant folding. Used by `rust/benches/*` and
+//! the §Perf pass.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of the standard black box; benchmark bodies should wrap both
+/// inputs and outputs.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Summary of a benchmark run (times in seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub std: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  median {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            super::fmt::duration(self.mean),
+            super::fmt::duration(self.median),
+            super::fmt::duration(self.p95),
+            self.iters,
+        )
+    }
+}
+
+/// Benchmark runner: calibrates iteration count toward `target_time`,
+/// then takes `samples` timed samples.
+pub struct Bencher {
+    pub warmup_time: f64,
+    pub target_time: f64,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_time: 0.2,
+            target_time: 1.0,
+            samples: 20,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_time: 0.05,
+            target_time: 0.25,
+            samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly and summarize per-iteration latency.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: find iters/sample such that one sample takes
+        // roughly target_time / samples.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed().as_secs_f64() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup_time / warm_iters.max(1) as f64;
+        let sample_budget = self.target_time / self.samples as f64;
+        let iters_per_sample = ((sample_budget / per_iter) as u64).max(1);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
+            / times.len().max(1) as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: iters_per_sample * self.samples as u64,
+            mean,
+            median: times[times.len() / 2],
+            p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+            min: times[0],
+            std: var.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let b = Bencher {
+            warmup_time: 0.01,
+            target_time: 0.05,
+            samples: 5,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean > 0.0);
+        assert!(r.median > 0.0);
+        assert!(r.iters >= 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn faster_code_benches_faster() {
+        let b = Bencher {
+            warmup_time: 0.01,
+            target_time: 0.08,
+            samples: 8,
+        };
+        let small = b.run("small", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        let big = b.run("big", || {
+            let mut s = 0u64;
+            for i in 0..100_000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(big.median > small.median * 5.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tiny command-line argument parser (no `clap` in the offline environment).
+//!
+//! Supports `subcommand --key value --key=value --flag positional` layouts,
+//! typed accessors with defaults, and collects unknown keys for error
+//! reporting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.kv
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.kv.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.kv.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.u64_or(name, default as u64) as usize
+    }
+
+    /// Keys present on the command line that were never queried — catches
+    /// typos like `--arival-rate`.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.kv
+            .keys()
+            .cloned()
+            .chain(self.flags.iter().cloned())
+            .filter(|k| !seen.contains(k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        // NOTE `--key value` is greedy: a bare `--flag` must come last or be
+        // followed by another `--` token, otherwise it consumes the next
+        // positional as its value.
+        let a = args("serve input.txt --port 8080 --model=bloom-3b --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("model"), Some("bloom-3b"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn typed_accessors_with_defaults() {
+        let a = args("run --rate 12.5 --epochs 30");
+        assert_eq!(a.f64_or("rate", 1.0), 12.5);
+        assert_eq!(a.u64_or("epochs", 5), 30);
+        assert_eq!(a.u64_or("seed", 42), 42);
+        assert_eq!(a.str_or("out", "x.json"), "x.json");
+    }
+
+    #[test]
+    fn unknown_key_tracking() {
+        let a = args("run --known 1 --typo 2");
+        let _ = a.get("known");
+        let unknown = a.unknown_keys();
+        assert_eq!(unknown, vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_flag() {
+        let a = args("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let a = args("run --rate abc");
+        let _ = a.f64_or("rate", 0.0);
+    }
+}

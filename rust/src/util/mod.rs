@@ -1,0 +1,10 @@
+//! Cross-cutting utilities built from scratch for the offline environment:
+//! deterministic RNG, JSON, CLI parsing, formatting, statistics, and a
+//! micro-benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;

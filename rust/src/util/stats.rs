@@ -1,0 +1,296 @@
+//! Small statistics helpers: online moments, percentiles, fixed-bucket
+//! latency histograms (HDR-style, log-spaced) used by the metrics layer.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator into this one (parallel Welford).
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 =
+            self.m2 + other.m2 + delta * delta * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile of a sample (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Log-spaced latency histogram covering [1 µs, ~100 s] with fixed relative
+/// error, recording values in seconds. No allocation after construction.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [lo * ratio^i, lo * ratio^(i+1))
+    buckets: Vec<u64>,
+    lo: f64,
+    log_ratio: f64,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 256 buckets, 1e-6 .. ~1e2 s => ratio = (1e8)^(1/256)
+        let lo = 1e-6;
+        let hi = 1e2;
+        let n = 256;
+        LatencyHistogram {
+            buckets: vec![0; n],
+            lo,
+            log_ratio: (hi / lo).ln() / n as f64,
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    fn index(&self, v: f64) -> usize {
+        if v <= self.lo {
+            return 0;
+        }
+        let idx = ((v / self.lo).ln() / self.log_ratio) as usize;
+        idx.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        let idx = self.index(seconds);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += seconds;
+        if seconds > self.max {
+            self.max = seconds;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket midpoints (relative error ≈ ratio).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // geometric midpoint of the bucket
+                return self.lo * ((i as f64 + 0.5) * self.log_ratio).exp();
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64) * 0.37 - 5.0).collect();
+        let mut whole = OnlineStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert!((percentile(&xs, 99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_close() {
+        let mut h = LatencyHistogram::new();
+        // uniform latencies 1..1000 ms
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.1, "p50={p50}");
+        assert!((p99 - 0.99).abs() / 0.99 < 0.1, "p99={p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=500 {
+            a.record(i as f64 * 1e-3);
+        }
+        for i in 501..=1000 {
+            b.record(i as f64 * 1e-3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let p50 = a.quantile(0.5);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.1, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Joint bandwidth allocation — the "resource allocation" half of the
+//! paper's contribution (P1 allocates ρᵢ ≥ ρ_min; the objective only needs
+//! ρ_min, but an operator should hand the *surplus* back to users).
+//!
+//! After the batch is selected, the unallocated fraction of each band is
+//! distributed to the scheduled users. Two policies:
+//!
+//! - `Proportional`: surplus split ∝ ρ_min (equalizes relative headroom, so
+//!   every user's transfer finishes at the same fraction of the slot);
+//! - `MaxMin`: water-filling toward equal absolute fractions (helps the
+//!   worst-channel users most).
+//!
+//! Shorter actual upload times translate into extra compute slack; the
+//! simulator and serving loop use the effective upload time to tighten
+//! constraint (1d) beyond the conservative T_U bound.
+
+use crate::request::{EpochRequest, RequestId};
+use crate::wireless::RadioParams;
+
+/// Surplus-distribution policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocationPolicy {
+    /// Everyone keeps exactly ρ_min (the P1 baseline).
+    MinOnly,
+    /// Surplus ∝ ρ_min.
+    Proportional,
+    /// Water-filling toward equal absolute fractions.
+    MaxMin,
+}
+
+/// Final per-request allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub id: RequestId,
+    pub rho_u: f64,
+    pub rho_d: f64,
+    /// Seconds to push the prompt at the allocated uplink rate.
+    pub upload_time: f64,
+    /// Seconds to push the output at the allocated downlink rate.
+    pub download_time: f64,
+}
+
+/// Allocate both bands for a scheduled batch. Requires Σρ_min ≤ 1 per band
+/// (the scheduler guarantees it); returns one `Allocation` per request in
+/// input order.
+pub fn allocate(
+    batch: &[&EpochRequest],
+    radio: &RadioParams,
+    t_u: f64,
+    t_d: f64,
+    policy: AllocationPolicy,
+) -> Vec<Allocation> {
+    if batch.is_empty() {
+        return Vec::new();
+    }
+    let rho_u = distribute(
+        &batch.iter().map(|r| r.rho_min_u).collect::<Vec<_>>(),
+        policy,
+    );
+    let rho_d = distribute(
+        &batch.iter().map(|r| r.rho_min_d).collect::<Vec<_>>(),
+        policy,
+    );
+    batch
+        .iter()
+        .zip(rho_u.iter().zip(rho_d.iter()))
+        .map(|(r, (&u, &d))| {
+            let up_rate = radio.uplink_rate(u, r.h); // bit/s
+            let down_rate = radio.downlink_rate(d, r.h);
+            let up_bits = r.req.prompt_tokens as f64 * radio.bits_per_token;
+            let down_bits = r.req.output_tokens as f64 * radio.bits_per_token;
+            Allocation {
+                id: r.id(),
+                rho_u: u,
+                rho_d: d,
+                upload_time: if up_rate > 0.0 { up_bits / up_rate } else { t_u },
+                download_time: if down_rate > 0.0 {
+                    down_bits / down_rate
+                } else {
+                    t_d
+                },
+            }
+        })
+        .collect()
+}
+
+/// Distribute a unit band over users with minimum fractions `mins`.
+fn distribute(mins: &[f64], policy: AllocationPolicy) -> Vec<f64> {
+    let total_min: f64 = mins.iter().sum();
+    let surplus = (1.0 - total_min).max(0.0);
+    match policy {
+        AllocationPolicy::MinOnly => mins.to_vec(),
+        AllocationPolicy::Proportional => {
+            if total_min <= 0.0 {
+                return vec![1.0 / mins.len() as f64; mins.len()];
+            }
+            mins.iter()
+                .map(|&m| m + surplus * m / total_min)
+                .collect()
+        }
+        AllocationPolicy::MaxMin => water_fill(mins, surplus),
+    }
+}
+
+/// Classic water-filling: raise the lowest allocations first until the
+/// surplus is exhausted or all are equal (then split the remainder evenly).
+fn water_fill(mins: &[f64], mut surplus: f64) -> Vec<f64> {
+    let n = mins.len();
+    let mut alloc = mins.to_vec();
+    // Process levels in ascending order of current allocation.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| mins[a].partial_cmp(&mins[b]).unwrap());
+    let mut i = 0;
+    while surplus > 1e-15 && i < n {
+        // Raise members order[0..=i] up to the next level (order[i+1]) or
+        // spend the surplus evenly among them.
+        let active = i + 1;
+        let cur = alloc[order[i]];
+        let next = if i + 1 < n { mins[order[i + 1]] } else { f64::INFINITY };
+        let lift = (next - cur).min(surplus / active as f64);
+        if lift <= 0.0 {
+            i += 1;
+            continue;
+        }
+        for &j in &order[..active] {
+            alloc[j] += lift;
+        }
+        surplus -= lift * active as f64;
+        if cur + lift >= next {
+            i += 1;
+        }
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::RequestBuilder;
+
+    fn batch(hs: &[f64], prompts: &[u32]) -> Vec<EpochRequest> {
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        hs.iter()
+            .zip(prompts.iter())
+            .map(|(&h, &s)| {
+                EpochRequest::annotate(b.build(0.0, s, 128, 2.0, 0.2), h, &radio, 0.25, 0.25)
+            })
+            .collect()
+    }
+
+    fn total(allocs: &[Allocation], f: impl Fn(&Allocation) -> f64) -> f64 {
+        allocs.iter().map(f).sum()
+    }
+
+    #[test]
+    fn min_only_matches_rho_min() {
+        let reqs = batch(&[1e-2, 1e-3], &[128, 512]);
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        let a = allocate(&refs, &RadioParams::default(), 0.25, 0.25, AllocationPolicy::MinOnly);
+        for (al, r) in a.iter().zip(reqs.iter()) {
+            assert_eq!(al.rho_u, r.rho_min_u);
+            assert_eq!(al.rho_d, r.rho_min_d);
+            // at rho_min the upload takes exactly T_U
+            assert!((al.upload_time - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn proportional_uses_whole_band_and_speeds_everyone() {
+        let reqs = batch(&[1e-2, 1e-3, 5e-3], &[128, 512, 256]);
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        let a = allocate(
+            &refs,
+            &RadioParams::default(),
+            0.25,
+            0.25,
+            AllocationPolicy::Proportional,
+        );
+        assert!((total(&a, |x| x.rho_u) - 1.0).abs() < 1e-9, "full band used");
+        for (al, r) in a.iter().zip(reqs.iter()) {
+            assert!(al.rho_u >= r.rho_min_u - 1e-12);
+            assert!(al.upload_time <= 0.25 + 1e-12, "never slower than T_U");
+        }
+        // equal relative headroom => identical upload times
+        for w in a.windows(2) {
+            assert!((w[0].upload_time - w[1].upload_time).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn max_min_equalizes_fractions() {
+        // user 0 has the better channel (smaller rho_min); water-filling
+        // raises the lower allocations first, so with ample surplus both
+        // end at the same absolute fraction and the lower-min user received
+        // the larger lift.
+        let reqs = batch(&[1e-2, 2e-4], &[256, 256]);
+        assert!(reqs[0].rho_min_u < reqs[1].rho_min_u);
+        let refs: Vec<&EpochRequest> = reqs.iter().collect();
+        let a = allocate(
+            &refs,
+            &RadioParams::default(),
+            0.25,
+            0.25,
+            AllocationPolicy::MaxMin,
+        );
+        assert!((total(&a, |x| x.rho_u) - 1.0).abs() < 1e-6);
+        // water-filling equalizes absolute fractions when surplus is large
+        assert!((a[0].rho_u - a[1].rho_u).abs() < 1e-6);
+        let boost0 = a[0].rho_u - reqs[0].rho_min_u;
+        let boost1 = a[1].rho_u - reqs[1].rho_min_u;
+        assert!(boost0 > boost1);
+        // the worse-channel user still uploads faster than T_U
+        assert!(a[1].upload_time < 0.25);
+    }
+
+    #[test]
+    fn water_fill_respects_surplus_budget() {
+        let mins = [0.1, 0.2, 0.3];
+        let out = water_fill(&mins, 0.15);
+        let spent: f64 = out.iter().sum::<f64>() - mins.iter().sum::<f64>();
+        assert!((spent - 0.15).abs() < 1e-12);
+        // mins preserved
+        for (o, m) in out.iter().zip(mins.iter()) {
+            assert!(o >= m);
+        }
+        // lowest got raised first
+        assert!(out[0] > mins[0] && (out[2] - mins[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let a = allocate(&[], &RadioParams::default(), 0.25, 0.25, AllocationPolicy::MaxMin);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn oversubscribed_mins_degrade_gracefully() {
+        // If somehow rho_min sums above 1 (scheduler bug), surplus is 0 and
+        // allocations equal mins.
+        let mins = [0.7, 0.8];
+        let out = distribute(&mins, AllocationPolicy::Proportional);
+        assert_eq!(out, mins.to_vec());
+    }
+}

@@ -1,0 +1,97 @@
+//! Wireless channel model — paper §II-A and §IV settings.
+//!
+//! Frequency non-selective channel whose gain h_i is constant within an
+//! epoch (re-drawn each epoch, as the EN would re-measure via CSI-RS).
+//! Small-scale fading is Rayleigh; large-scale attenuation is the paper's
+//! flat 10⁻³ path loss.
+
+use crate::util::rng::Rng;
+
+/// Convert dBm to linear watts.
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
+
+/// Convert dBm/Hz noise density to watts/Hz.
+pub fn dbm_per_hz_to_w_per_hz(dbm_hz: f64) -> f64 {
+    dbm_to_watts(dbm_hz)
+}
+
+/// Channel parameters (defaults = paper §IV).
+#[derive(Debug, Clone)]
+pub struct ChannelParams {
+    /// Large-scale path loss (power ratio). Paper: 1e-3.
+    pub path_loss: f64,
+    /// Rayleigh scale σ of the complex gain's magnitude; σ = 1/√2 gives a
+    /// unit-mean-power (E[|g|²]=1) normalized fading coefficient.
+    pub rayleigh_sigma: f64,
+}
+
+impl Default for ChannelParams {
+    fn default() -> Self {
+        ChannelParams {
+            path_loss: 1e-3,
+            rayleigh_sigma: std::f64::consts::FRAC_1_SQRT_2,
+        }
+    }
+}
+
+impl ChannelParams {
+    /// Draw a channel amplitude h for one user for one epoch.
+    ///
+    /// h² (the power gain used in the SNR) equals path_loss · |g|² with
+    /// |g| ~ Rayleigh(σ).
+    pub fn draw_h(&self, rng: &mut Rng) -> f64 {
+        let g = rng.rayleigh(self.rayleigh_sigma);
+        (self.path_loss).sqrt() * g
+    }
+
+    /// Expected power gain E[h²] = path_loss · 2σ².
+    pub fn mean_power_gain(&self) -> f64 {
+        self.path_loss * 2.0 * self.rayleigh_sigma * self.rayleigh_sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_conversions() {
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watts(20.0) - 0.1).abs() < 1e-12);
+        assert!((dbm_to_watts(43.0) - 19.952).abs() < 1e-2);
+        // -174 dBm/Hz thermal noise density
+        let n0 = dbm_per_hz_to_w_per_hz(-174.0);
+        assert!((n0 - 3.98e-21).abs() / 3.98e-21 < 0.01);
+    }
+
+    #[test]
+    fn rayleigh_power_gain_mean() {
+        let p = ChannelParams::default();
+        let mut rng = Rng::new(42);
+        let n = 100_000;
+        let mean_h2: f64 = (0..n)
+            .map(|_| {
+                let h = p.draw_h(&mut rng);
+                h * h
+            })
+            .sum::<f64>()
+            / n as f64;
+        // E[h²] = path_loss for unit-power fading
+        assert!(
+            (mean_h2 - p.mean_power_gain()).abs() / p.mean_power_gain() < 0.02,
+            "mean_h2={mean_h2}"
+        );
+        assert!((p.mean_power_gain() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn h_always_positive() {
+        let p = ChannelParams::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(p.draw_h(&mut rng) > 0.0);
+        }
+    }
+}

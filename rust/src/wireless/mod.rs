@@ -1,0 +1,11 @@
+//! Wireless substrate — paper §II-A: Rayleigh channel with flat path loss,
+//! OFDMA continuous bandwidth sharing, rate equation and ρ_min computation,
+//! and per-epoch bandwidth accounting.
+
+pub mod allocator;
+pub mod channel;
+pub mod ofdma;
+
+pub use allocator::{allocate, Allocation, AllocationPolicy};
+pub use channel::{dbm_to_watts, ChannelParams};
+pub use ofdma::{BandwidthLedger, RadioParams};

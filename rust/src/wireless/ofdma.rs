@@ -1,0 +1,207 @@
+//! OFDMA rate model and bandwidth accounting — paper §II-A.
+//!
+//! With thousands of sub-carriers, bandwidth splitting is treated as
+//! continuous: user i receives fractions ρᵢᵁ, ρᵢᴰ of the uplink/downlink
+//! bands. The transmission rate is
+//!
+//!   rᵢ = ρᵢ · B · log₂(1 + p·h² / N₀)
+//!
+//! with N₀ the total white-noise power over the band (paper's convention:
+//! SNR independent of the allocated fraction).
+
+use super::channel::{dbm_per_hz_to_w_per_hz, dbm_to_watts};
+
+/// Static radio parameters of the edge node (defaults = paper §IV).
+#[derive(Debug, Clone)]
+pub struct RadioParams {
+    /// Uplink band B^U in Hz (paper: 20 MHz).
+    pub uplink_hz: f64,
+    /// Downlink band B^D in Hz (paper: 20 MHz).
+    pub downlink_hz: f64,
+    /// User transmit power p_i^U in watts (paper: 20 dBm).
+    pub uplink_tx_w: f64,
+    /// EN transmit power p^D in watts (paper: 43 dBm).
+    pub downlink_tx_w: f64,
+    /// Noise density in W/Hz (paper: −174 dBm/Hz).
+    pub noise_w_per_hz: f64,
+    /// Bits used to encode one token over the air (2-byte BPE index).
+    pub bits_per_token: f64,
+}
+
+impl Default for RadioParams {
+    fn default() -> Self {
+        RadioParams {
+            uplink_hz: 20e6,
+            downlink_hz: 20e6,
+            uplink_tx_w: dbm_to_watts(20.0),
+            downlink_tx_w: dbm_to_watts(43.0),
+            noise_w_per_hz: dbm_per_hz_to_w_per_hz(-174.0),
+            bits_per_token: 16.0,
+        }
+    }
+}
+
+impl RadioParams {
+    /// Total noise power over a band of `band_hz`.
+    fn noise_power(&self, band_hz: f64) -> f64 {
+        self.noise_w_per_hz * band_hz
+    }
+
+    /// Uplink spectral efficiency log₂(1 + SNR) for channel amplitude h.
+    pub fn uplink_se(&self, h: f64) -> f64 {
+        (1.0 + self.uplink_tx_w * h * h / self.noise_power(self.uplink_hz)).log2()
+    }
+
+    /// Downlink spectral efficiency log₂(1 + SNR) for channel amplitude h.
+    pub fn downlink_se(&self, h: f64) -> f64 {
+        (1.0 + self.downlink_tx_w * h * h / self.noise_power(self.downlink_hz)).log2()
+    }
+
+    /// Uplink rate in bit/s for bandwidth fraction rho.
+    pub fn uplink_rate(&self, rho: f64, h: f64) -> f64 {
+        rho * self.uplink_hz * self.uplink_se(h)
+    }
+
+    /// Downlink rate in bit/s for bandwidth fraction rho.
+    pub fn downlink_rate(&self, rho: f64, h: f64) -> f64 {
+        rho * self.downlink_hz * self.downlink_se(h)
+    }
+
+    /// ρ_{i,min}^U — minimum uplink fraction to push `s_tokens` prompt tokens
+    /// within the uplink slot T_U: ρ ≥ s_bits / (T_U · B^U · log₂(1+SNR)).
+    pub fn rho_min_uplink(&self, s_tokens: u32, h: f64, t_u: f64) -> f64 {
+        let bits = s_tokens as f64 * self.bits_per_token;
+        bits / (t_u * self.uplink_hz * self.uplink_se(h))
+    }
+
+    /// ρ_{i,min}^D — minimum downlink fraction to push `n_tokens` output
+    /// tokens within the downlink slot T_D.
+    pub fn rho_min_downlink(&self, n_tokens: u32, h: f64, t_d: f64) -> f64 {
+        let bits = n_tokens as f64 * self.bits_per_token;
+        bits / (t_d * self.downlink_hz * self.downlink_se(h))
+    }
+}
+
+/// Tracks cumulative bandwidth-fraction commitments within one epoch and
+/// enforces Σρ ≤ 1 on each band — constraints (1a)/(1b).
+#[derive(Debug, Clone, Default)]
+pub struct BandwidthLedger {
+    uplink_used: f64,
+    downlink_used: f64,
+}
+
+impl BandwidthLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn uplink_used(&self) -> f64 {
+        self.uplink_used
+    }
+
+    pub fn downlink_used(&self) -> f64 {
+        self.downlink_used
+    }
+
+    /// Can both fractions still fit?
+    pub fn fits(&self, rho_u: f64, rho_d: f64) -> bool {
+        self.uplink_used + rho_u <= 1.0 + 1e-12 && self.downlink_used + rho_d <= 1.0 + 1e-12
+    }
+
+    /// Commit an allocation; returns false (and commits nothing) on overflow.
+    pub fn alloc(&mut self, rho_u: f64, rho_d: f64) -> bool {
+        if !self.fits(rho_u, rho_d) {
+            return false;
+        }
+        self.uplink_used += rho_u;
+        self.downlink_used += rho_d;
+        true
+    }
+
+    /// Release an allocation (end of epoch).
+    pub fn free(&mut self, rho_u: f64, rho_d: f64) {
+        self.uplink_used = (self.uplink_used - rho_u).max(0.0);
+        self.downlink_used = (self.downlink_used - rho_d).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> RadioParams {
+        RadioParams::default()
+    }
+
+    #[test]
+    fn snr_magnitude_sane() {
+        // h² = 1e-3, p=0.1W, N = 3.98e-21*20e6 = 7.96e-14 W
+        // SNR = 0.1*1e-3/7.96e-14 ≈ 1.26e9 → SE ≈ 30 bit/s/Hz
+        let se = params().uplink_se((1e-3f64).sqrt());
+        assert!((25.0..35.0).contains(&se), "uplink SE {se}");
+        let sed = params().downlink_se((1e-3f64).sqrt());
+        assert!(sed > se, "downlink more powerful");
+    }
+
+    #[test]
+    fn rate_linear_in_rho() {
+        let p = params();
+        let h = 0.03;
+        let r1 = p.uplink_rate(0.1, h);
+        let r2 = p.uplink_rate(0.2, h);
+        assert!((r2 - 2.0 * r1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rho_min_inverts_rate() {
+        // Sending exactly s tokens at rho_min for T_U seconds delivers s bits.
+        let p = params();
+        let h = 0.02;
+        let t_u = 0.25;
+        let s = 512;
+        let rho = p.rho_min_uplink(s, h, t_u);
+        let delivered_bits = p.uplink_rate(rho, h) * t_u;
+        assert!((delivered_bits - s as f64 * 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rho_min_monotonicity() {
+        let p = params();
+        let t = 0.25;
+        // more tokens => more bandwidth
+        assert!(p.rho_min_uplink(512, 0.02, t) > p.rho_min_uplink(128, 0.02, t));
+        // better channel => less bandwidth
+        assert!(p.rho_min_uplink(256, 0.01, t) > p.rho_min_uplink(256, 0.05, t));
+        // longer slot => less bandwidth
+        assert!(p.rho_min_uplink(256, 0.02, 0.1) > p.rho_min_uplink(256, 0.02, 0.5));
+    }
+
+    #[test]
+    fn typical_rho_min_small() {
+        // Paper-scale: 512 tokens, mean channel, 250 ms slot => tiny fraction,
+        // so tens-to-hundreds of users can share the band.
+        let p = params();
+        let rho = p.rho_min_uplink(512, (1e-3f64).sqrt(), 0.25);
+        assert!(rho < 1e-4, "rho_min {rho}");
+    }
+
+    #[test]
+    fn ledger_enforces_unit_capacity() {
+        let mut l = BandwidthLedger::new();
+        assert!(l.alloc(0.6, 0.2));
+        assert!(l.alloc(0.4, 0.2));
+        assert!(!l.alloc(0.01, 0.0), "uplink exhausted");
+        assert!(l.fits(0.0, 0.6));
+        l.free(0.4, 0.2);
+        assert!(l.alloc(0.2, 0.1));
+    }
+
+    #[test]
+    fn ledger_free_clamps_at_zero() {
+        let mut l = BandwidthLedger::new();
+        l.alloc(0.1, 0.1);
+        l.free(0.5, 0.5);
+        assert_eq!(l.uplink_used(), 0.0);
+        assert_eq!(l.downlink_used(), 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Workload generation — paper §IV simulation settings.
+//!
+//! Requests arrive as a Poisson process (5–250 req/s in the paper's sweep);
+//! prompt and output lengths are drawn uniformly from {128, 256, 512} tokens,
+//! latency requirements uniformly from [0.5, 2] s, and accuracy requirements
+//! uniformly from [0, 1]. Traces can be recorded to JSONL and replayed
+//! bit-exactly.
+
+pub mod trace;
+
+use crate::request::Request;
+use crate::util::rng::Rng;
+
+/// Distribution parameters for synthetic workloads (defaults = paper §IV).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadParams {
+    /// Poisson arrival rate λ in requests/second.
+    pub arrival_rate: f64,
+    /// Prompt-length levels (uniform choice).
+    pub prompt_levels: Vec<u32>,
+    /// Output-length levels (uniform choice) — the N_k levels of DFTSP.
+    pub output_levels: Vec<u32>,
+    /// Latency requirement range [lo, hi) seconds.
+    pub latency_range: (f64, f64),
+    /// Accuracy requirement range [lo, hi).
+    pub accuracy_range: (f64, f64),
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        WorkloadParams {
+            arrival_rate: 50.0,
+            prompt_levels: vec![128, 256, 512],
+            output_levels: vec![128, 256, 512],
+            latency_range: (0.5, 2.0),
+            accuracy_range: (0.0, 1.0),
+        }
+    }
+}
+
+impl WorkloadParams {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.arrival_rate < 0.0 {
+            return Err("arrival_rate must be >= 0".into());
+        }
+        if self.prompt_levels.is_empty() || self.output_levels.is_empty() {
+            return Err("token level sets must be non-empty".into());
+        }
+        if self.latency_range.0 > self.latency_range.1 {
+            return Err("latency_range inverted".into());
+        }
+        if self.accuracy_range.0 > self.accuracy_range.1 {
+            return Err("accuracy_range inverted".into());
+        }
+        Ok(())
+    }
+}
+
+/// Stateful Poisson request generator with monotone ids and arrival times.
+#[derive(Debug, Clone)]
+pub struct WorkloadGenerator {
+    pub params: WorkloadParams,
+    rng: Rng,
+    next_id: u64,
+    /// Time of the next arrival (exponential inter-arrival gaps).
+    next_arrival: f64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(params: WorkloadParams, seed: u64) -> Self {
+        params.validate().expect("invalid workload params");
+        let mut rng = Rng::new(seed);
+        let next_arrival = if params.arrival_rate > 0.0 {
+            rng.exponential(params.arrival_rate)
+        } else {
+            f64::INFINITY
+        };
+        WorkloadGenerator {
+            params,
+            rng,
+            next_id: 0,
+            next_arrival,
+        }
+    }
+
+    /// Generate every request arriving in [t0, t1).
+    pub fn arrivals_between(&mut self, t0: f64, t1: f64) -> Vec<Request> {
+        assert!(t1 >= t0);
+        let mut out = Vec::new();
+        while self.next_arrival < t1 {
+            if self.next_arrival >= t0 {
+                out.push(self.sample_at(self.next_arrival));
+            } else {
+                // Arrival predates the window (caller skipped time): emit it
+                // clamped to the window start so no request is lost.
+                out.push(self.sample_at(t0));
+            }
+            self.next_arrival += self.rng.exponential(self.params.arrival_rate);
+        }
+        out
+    }
+
+    fn sample_at(&mut self, t: f64) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let p = &self.params;
+        let prompt = *self.rng.choice(&p.prompt_levels);
+        let out = *self.rng.choice(&p.output_levels);
+        let (tl, th) = p.latency_range;
+        let (al, ah) = p.accuracy_range;
+        Request {
+            id,
+            arrival: t,
+            prompt_tokens: prompt,
+            output_tokens: out,
+            latency_req: if th > tl { self.rng.uniform(tl, th) } else { tl },
+            accuracy_req: if ah > al { self.rng.uniform(al, ah) } else { al },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_respected() {
+        let mut g = WorkloadGenerator::new(
+            WorkloadParams {
+                arrival_rate: 100.0,
+                ..Default::default()
+            },
+            7,
+        );
+        let reqs = g.arrivals_between(0.0, 50.0);
+        let rate = reqs.len() as f64 / 50.0;
+        assert!((rate - 100.0).abs() < 5.0, "rate={rate}");
+        // arrivals sorted and in-window
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(reqs.iter().all(|r| (0.0..50.0).contains(&r.arrival)));
+    }
+
+    #[test]
+    fn windows_are_disjoint_and_continuous() {
+        let mut g = WorkloadGenerator::new(Default::default(), 9);
+        let a = g.arrivals_between(0.0, 2.0);
+        let b = g.arrivals_between(2.0, 4.0);
+        let ids_a: Vec<u64> = a.iter().map(|r| r.id).collect();
+        let ids_b: Vec<u64> = b.iter().map(|r| r.id).collect();
+        // ids strictly increasing across windows, no overlap
+        assert!(ids_a.iter().max().unwrap() < ids_b.iter().min().unwrap());
+        assert!(b.iter().all(|r| (2.0..4.0).contains(&r.arrival)));
+    }
+
+    #[test]
+    fn fields_within_paper_ranges() {
+        let mut g = WorkloadGenerator::new(Default::default(), 3);
+        let reqs = g.arrivals_between(0.0, 20.0);
+        assert!(!reqs.is_empty());
+        for r in &reqs {
+            assert!([128, 256, 512].contains(&r.prompt_tokens));
+            assert!([128, 256, 512].contains(&r.output_tokens));
+            assert!((0.5..2.0).contains(&r.latency_req));
+            assert!((0.0..1.0).contains(&r.accuracy_req));
+        }
+        // all three output levels appear in a long window
+        for lvl in [128u32, 256, 512] {
+            assert!(reqs.iter().any(|r| r.output_tokens == lvl), "level {lvl}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = WorkloadGenerator::new(Default::default(), 11);
+        let mut b = WorkloadGenerator::new(Default::default(), 11);
+        assert_eq!(a.arrivals_between(0.0, 5.0), b.arrivals_between(0.0, 5.0));
+    }
+
+    #[test]
+    fn zero_rate_generates_nothing() {
+        let mut g = WorkloadGenerator::new(
+            WorkloadParams {
+                arrival_rate: 0.0,
+                ..Default::default()
+            },
+            1,
+        );
+        assert!(g.arrivals_between(0.0, 100.0).is_empty());
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        assert!(WorkloadParams {
+            arrival_rate: -1.0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(WorkloadParams {
+            prompt_levels: vec![],
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(WorkloadParams {
+            latency_range: (2.0, 0.5),
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Request-trace recording and replay (JSONL, one request per line).
+//!
+//! Traces make experiments reproducible across schedulers and across runs:
+//! the trace_replay example records a Poisson workload once and feeds the
+//! identical arrival sequence to every policy.
+
+use crate::request::Request;
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Serialize one request to its JSONL line.
+pub fn request_to_json(r: &Request) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("arrival", Json::Num(r.arrival)),
+        ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
+        ("output_tokens", Json::Num(r.output_tokens as f64)),
+        ("latency_req", Json::Num(r.latency_req)),
+        ("accuracy_req", Json::Num(r.accuracy_req)),
+    ])
+}
+
+/// Parse one request from a JSON value.
+pub fn request_from_json(j: &Json) -> Result<Request, String> {
+    Ok(Request {
+        id: j.req_f64("id")? as u64,
+        arrival: j.req_f64("arrival")?,
+        prompt_tokens: j.req_f64("prompt_tokens")? as u32,
+        output_tokens: j.req_f64("output_tokens")? as u32,
+        latency_req: j.req_f64("latency_req")?,
+        accuracy_req: j.req_f64("accuracy_req")?,
+    })
+}
+
+/// Write a trace to disk (JSONL).
+pub fn save(path: &Path, reqs: &[Request]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in reqs {
+        writeln!(f, "{}", request_to_json(r))?;
+    }
+    Ok(())
+}
+
+/// Load a trace from disk.
+pub fn load(path: &Path) -> Result<Vec<Request>, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line.map_err(|e| format!("read {path:?}: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| format!("{path:?}:{}: {e}", lineno + 1))?;
+        out.push(request_from_json(&j).map_err(|e| format!("{path:?}:{}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadGenerator, WorkloadParams};
+
+    #[test]
+    fn roundtrip_preserves_requests() {
+        let mut g = WorkloadGenerator::new(WorkloadParams::default(), 5);
+        let reqs = g.arrivals_between(0.0, 3.0);
+        assert!(!reqs.is_empty());
+        let dir = std::env::temp_dir().join("edgellm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        save(&path, &reqs).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(reqs.len(), back.len());
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.arrival - b.arrival).abs() < 1e-12);
+            assert!((a.latency_req - b.latency_req).abs() < 1e-12);
+            assert!((a.accuracy_req - b.accuracy_req).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("edgellm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 1}\nnot json\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/trace.jsonl")).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! Cross-module integration tests: scheduler × wireless × cluster × quant
+//! interactions that no single module's unit tests cover.
+
+use edgellm::cluster::{ClusterSpec, GpuSpec};
+use edgellm::coordinator::{
+    BruteForce, Dftsp, EpochParams, FeasibilityChecker, NoBatching, ProblemInstance, Scheduler,
+    StaticBatching,
+};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant::{self, Precision, QuantAlgo};
+use edgellm::request::{EpochRequest, RequestBuilder};
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{ChannelParams, RadioParams};
+
+fn paper_inst(model: LlmSpec, quant: quant::QuantSpec) -> ProblemInstance {
+    ProblemInstance::new(
+        CostModel::new(model),
+        quant,
+        ClusterSpec::paper_default(),
+        EpochParams::default(),
+        512,
+        0.0,
+    )
+}
+
+/// Random request set in the paper's distributions with per-request fading.
+fn random_requests(n: usize, seed: u64) -> Vec<EpochRequest> {
+    let mut rng = Rng::new(seed);
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let channel = ChannelParams::default();
+    let levels = [128u32, 256, 512];
+    (0..n)
+        .map(|_| {
+            let req = b.build(
+                -rng.uniform(0.0, 2.0),
+                *rng.choice(&levels),
+                *rng.choice(&levels),
+                rng.uniform(0.5, 2.0),
+                rng.uniform(0.0, 1.0),
+            );
+            let h = channel.draw_h(&mut rng);
+            EpochRequest::annotate(req, h, &radio, 0.25, 0.25)
+        })
+        .collect()
+}
+
+/// Every scheduler must return a subset of the candidates with no
+/// duplicates, and (except StB, which is deadline-oblivious by design) a
+/// feasible one.
+#[test]
+fn all_schedulers_return_valid_subsets() {
+    let reqs = random_requests(40, 1);
+    let inst = paper_inst(LlmSpec::bloom_3b(), quant::default_quant());
+    let mut schedulers: Vec<(Box<dyn Scheduler>, bool)> = vec![
+        (Box::new(Dftsp::new()), true),
+        (Box::new(BruteForce::default()), true),
+        (Box::new(StaticBatching::new()), false),
+        (Box::new(NoBatching::new()), false),
+    ];
+    for (s, must_be_feasible) in schedulers.iter_mut() {
+        let sched = s.schedule(&inst, &reqs);
+        let ids: Vec<u64> = sched.scheduled.clone();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "{}: duplicate ids", s.name());
+        for id in &ids {
+            assert!(
+                reqs.iter().any(|r| r.id() == *id),
+                "{}: unknown id {id}",
+                s.name()
+            );
+        }
+        if *must_be_feasible && !ids.is_empty() {
+            let subset: Vec<&EpochRequest> =
+                reqs.iter().filter(|r| ids.contains(&r.id())).collect();
+            assert!(
+                FeasibilityChecker::new(&inst).check(&subset).is_ok(),
+                "{}: returned infeasible schedule",
+                s.name()
+            );
+        }
+    }
+}
+
+/// DFTSP and brute force are both exact: identical cardinality on dozens of
+/// random instances (the sets themselves may differ).
+#[test]
+fn dftsp_cardinality_equals_brute_force() {
+    for seed in 0..12 {
+        let reqs = random_requests(14, seed);
+        let inst = ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            quant::default_quant(),
+            ClusterSpec::new(GpuSpec::jetson_tx2(), 3),
+            EpochParams::default(),
+            512,
+            0.0,
+        );
+        let d = Dftsp::new().schedule(&inst, &reqs);
+        let bf = BruteForce::default().schedule(&inst, &reqs);
+        assert!(!bf.stats.budget_exhausted, "seed {seed}");
+        assert_eq!(
+            d.batch_size(),
+            bf.batch_size(),
+            "seed {seed}: DFTSP {} vs brute {}",
+            d.batch_size(),
+            bf.batch_size()
+        );
+    }
+}
+
+/// Lower precision admits larger batches when accuracy requirements are lax
+/// (memory + beta effects), but loses accuracy-strict requests.
+#[test]
+fn quantization_tradeoff_visible_in_schedules() {
+    // All requests very lax on accuracy: W4 should schedule >= W16.
+    let mut rng = Rng::new(3);
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let lax: Vec<EpochRequest> = (0..30)
+        .map(|_| {
+            let req = b.build(0.0, 512, 512, rng.uniform(1.5, 2.0), 0.05);
+            EpochRequest::annotate(req, (1e-3f64).sqrt(), &radio, 0.25, 0.25)
+        })
+        .collect();
+    // Small cluster so memory/compute actually bind.
+    let small = ClusterSpec::new(
+        GpuSpec {
+            name: "tx2".into(),
+            flops: 1.33e12,
+            mem_bytes: 8 << 30,
+        },
+        4,
+    );
+    let mk = |q: quant::QuantSpec| {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::bloom_3b()),
+            q,
+            small.clone(),
+            EpochParams::default(),
+            512,
+            0.0,
+        )
+    };
+    let w16 = Dftsp::new().schedule(&mk(quant::QuantSpec::fp16()), &lax);
+    let w4 = Dftsp::new().schedule(
+        &mk(quant::by_label(Precision::W4A16, QuantAlgo::Gptq).unwrap()),
+        &lax,
+    );
+    assert!(
+        w4.batch_size() >= w16.batch_size(),
+        "W4 {} < W16 {}",
+        w4.batch_size(),
+        w16.batch_size()
+    );
+
+    // Accuracy-strict requests flip the ordering.
+    let strict: Vec<EpochRequest> = (0..30)
+        .map(|i| {
+            let req = b.build(0.0, 128, 128, 1.8, 0.5 + 0.01 * (i as f64 % 10.0));
+            EpochRequest::annotate(req, (1e-3f64).sqrt(), &radio, 0.25, 0.25)
+        })
+        .collect();
+    let w16s = Dftsp::new().schedule(&mk(quant::QuantSpec::fp16()), &strict);
+    let w4s = Dftsp::new().schedule(
+        &mk(quant::by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap()),
+        &strict,
+    );
+    assert!(w4s.batch_size() == 0, "W4/ZQ admits no a>=0.5 on BLOOM-3B");
+    assert!(w16s.batch_size() > 0);
+}
+
+/// Worse channels shrink the schedulable set through ρ_min growth.
+#[test]
+fn channel_quality_affects_scheduling() {
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let inst = paper_inst(LlmSpec::bloom_3b(), quant::default_quant());
+    let mk = |h: f64, b: &mut RequestBuilder| -> Vec<EpochRequest> {
+        (0..12)
+            .map(|_| {
+                EpochRequest::annotate(b.build(0.0, 512, 128, 60.0, 0.1), h, &radio, 0.25, 0.25)
+            })
+            .collect()
+    };
+    let mut inst_long = inst.clone();
+    inst_long.epoch.duration = 60.0; // compute never binds
+    let good = Dftsp::new().schedule(&inst_long, &mk(1e-2, &mut b));
+    let bad = Dftsp::new().schedule(&inst_long, &mk(4e-8, &mut b));
+    assert!(good.batch_size() > bad.batch_size());
+    assert!(bad.batch_size() >= 1);
+}
+
+/// The P2 reformulation and the direct checker agree on concrete subsets
+/// (uniform h).
+#[test]
+fn reformulation_consistent_with_checker() {
+    use edgellm::coordinator::P2Coefficients;
+    let inst = paper_inst(LlmSpec::bloom_7b(), quant::default_quant());
+    let radio = RadioParams::default();
+    let h = (1e-3f64).sqrt();
+    let k = P2Coefficients::derive(&inst, &radio, h);
+    let mut b = RequestBuilder::new();
+    let reqs: Vec<EpochRequest> = (0..6)
+        .map(|i| {
+            EpochRequest::annotate(
+                b.build(0.0, 128 + 64 * i, 256, 1.9, 0.1),
+                h,
+                &radio,
+                0.25,
+                0.25,
+            )
+        })
+        .collect();
+    let subset: Vec<&EpochRequest> = reqs.iter().collect();
+    // (2b): sum k_u * s_i == sum rho_min_u
+    let via_k: f64 = subset
+        .iter()
+        .map(|r| k.k_u * r.req.prompt_tokens as f64)
+        .sum();
+    let direct: f64 = subset.iter().map(|r| r.rho_min_u).sum();
+    assert!((via_k - direct).abs() < 1e-12);
+    // (2e): decode flops via quadratic form equals cost model's
+    for r in &subset {
+        let via_q = k.decode_flops(&inst, r.req.output_tokens);
+        let via_c = inst
+            .cost
+            .decode_flops_per_req(inst.s_pad, r.req.output_tokens);
+        assert!((via_q - via_c).abs() / via_c < 1e-12);
+    }
+}
+
+/// OPT-13B at fp16 exceeds a 16 GB GPU: quantization is what makes it
+/// deployable — the paper's motivating scenario.
+#[test]
+fn quantization_enables_large_model_deployment() {
+    let small_gpu = ClusterSpec::new(
+        GpuSpec {
+            name: "tx2-16g".into(),
+            flops: 1.33e12,
+            mem_bytes: 16 << 30,
+        },
+        20,
+    );
+    let mk = |q: quant::QuantSpec| {
+        ProblemInstance::new(
+            CostModel::new(LlmSpec::opt_13b()),
+            q,
+            small_gpu.clone(),
+            EpochParams {
+                duration: 30.0,
+                t_u: 0.25,
+                t_d: 0.25,
+            },
+            512,
+            0.0,
+        )
+    };
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let reqs: Vec<EpochRequest> = (0..5)
+        .map(|_| {
+            EpochRequest::annotate(b.build(0.0, 128, 128, 40.0, 0.1), 0.03, &radio, 0.25, 0.25)
+        })
+        .collect();
+    let fp = Dftsp::new().schedule(&mk(quant::QuantSpec::fp16()), &reqs);
+    assert_eq!(fp.batch_size(), 0, "fp16 OPT-13B cannot fit 16 GB");
+    let w8 = Dftsp::new().schedule(
+        &mk(quant::by_label(Precision::W8A16, QuantAlgo::Gptq).unwrap()),
+        &reqs,
+    );
+    assert!(w8.batch_size() > 0, "W8A16 makes OPT-13B servable");
+}

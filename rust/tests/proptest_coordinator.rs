@@ -1,0 +1,237 @@
+//! Property-based tests of coordinator invariants.
+//!
+//! No proptest crate is available offline, so this uses a seeded-case
+//! harness: each property runs over many deterministic random instances and
+//! failures report the offending seed for replay.
+
+use edgellm::cluster::{ClusterSpec, GpuSpec};
+use edgellm::coordinator::{
+    BruteForce, Dftsp, EpochParams, FeasibilityChecker, ProblemInstance, Scheduler,
+};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant;
+use edgellm::request::{EpochRequest, RequestBuilder};
+use edgellm::util::rng::Rng;
+use edgellm::wireless::RadioParams;
+
+/// Random problem instance: model, quant, cluster size, epoch all vary.
+fn random_instance(rng: &mut Rng) -> ProblemInstance {
+    let model = match rng.below(3) {
+        0 => LlmSpec::bloom_3b(),
+        1 => LlmSpec::bloom_7b(),
+        _ => LlmSpec::opt_13b(),
+    };
+    let quants = quant::catalog();
+    let q = quants[rng.below(quants.len() as u64) as usize].clone();
+    let cluster = ClusterSpec::new(GpuSpec::jetson_tx2(), rng.int_range(1, 24) as usize);
+    let epoch = EpochParams {
+        duration: rng.uniform(1.0, 4.0),
+        t_u: 0.25,
+        t_d: 0.25,
+    };
+    ProblemInstance::new(CostModel::new(model), q, cluster, epoch, 512, 0.0)
+}
+
+/// Random request batch; `uniform_h` pins the concentration assumption.
+fn random_requests(rng: &mut Rng, n: usize, uniform_h: bool) -> Vec<EpochRequest> {
+    let mut b = RequestBuilder::new();
+    let radio = RadioParams::default();
+    let levels = [128u32, 256, 512];
+    let h_common = (1e-3f64).sqrt();
+    (0..n)
+        .map(|_| {
+            let req = b.build(
+                -rng.uniform(0.0, 2.0),
+                *rng.choice(&levels),
+                *rng.choice(&levels),
+                rng.uniform(0.5, 2.5),
+                rng.uniform(0.0, 1.0),
+            );
+            let h = if uniform_h {
+                h_common
+            } else {
+                rng.rayleigh(std::f64::consts::FRAC_1_SQRT_2) * 1e-3f64.sqrt()
+            };
+            EpochRequest::annotate(req, h.max(1e-9), &radio, 0.25, 0.25)
+        })
+        .collect()
+}
+
+/// Exhaustive maximum-cardinality feasible subset (oracle, n <= ~14).
+fn exhaustive_opt(inst: &ProblemInstance, reqs: &[EpochRequest]) -> usize {
+    let checker = FeasibilityChecker::new(inst);
+    let n = reqs.len();
+    let mut best = 0;
+    for mask in 0u32..(1 << n) {
+        let size = mask.count_ones() as usize;
+        if size <= best {
+            continue;
+        }
+        let subset: Vec<&EpochRequest> = (0..n)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| &reqs[i])
+            .collect();
+        if checker.check(&subset).is_ok() {
+            best = size;
+        }
+    }
+    best
+}
+
+/// Greedy-by-slack lower bound: add latency-tolerant requests while the
+/// whole prefix stays feasible.
+fn greedy_lower_bound(inst: &ProblemInstance, reqs: &[EpochRequest]) -> usize {
+    let mut adm = inst.admissible(reqs);
+    adm.sort_by(|a, b| {
+        inst.compute_slack(b)
+            .partial_cmp(&inst.compute_slack(a))
+            .unwrap()
+    });
+    let checker = FeasibilityChecker::new(inst);
+    let mut chosen: Vec<&EpochRequest> = Vec::new();
+    for r in adm {
+        chosen.push(r);
+        if checker.check(&chosen).is_err() {
+            chosen.pop();
+        }
+    }
+    chosen.len()
+}
+
+/// PROPERTY: every DFTSP schedule satisfies constraints (1a)–(1e), on any
+/// instance, with arbitrary per-user fading.
+#[test]
+fn prop_dftsp_schedules_always_feasible() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(1, 30) as usize;
+        let reqs = random_requests(&mut rng, n, false);
+        let sched = Dftsp::new().schedule(&inst, &reqs);
+        let subset: Vec<&EpochRequest> = reqs
+            .iter()
+            .filter(|r| sched.scheduled.contains(&r.id()))
+            .collect();
+        assert!(
+            FeasibilityChecker::new(&inst).check(&subset).is_ok(),
+            "seed {seed}: infeasible schedule of size {}",
+            subset.len()
+        );
+        // bandwidth totals reported correctly
+        let rho_u: f64 = subset.iter().map(|r| r.rho_min_u).sum();
+        assert!((rho_u - sched.rho_u_total).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+/// PROPERTY: DFTSP matches the exhaustive optimum under the paper's P2
+/// assumption (uniform h across users).
+#[test]
+fn prop_dftsp_optimal_uniform_h() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(4, 12) as usize;
+        let reqs = random_requests(&mut rng, n, true);
+        let opt = exhaustive_opt(&inst, &reqs);
+        let got = Dftsp::new().schedule(&inst, &reqs).batch_size();
+        assert_eq!(got, opt, "seed {seed}");
+    }
+}
+
+/// PROPERTY: DFTSP never does worse than the greedy-by-slack heuristic.
+#[test]
+fn prop_dftsp_at_least_greedy() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(2, 26) as usize;
+        let reqs = random_requests(&mut rng, n, false);
+        let greedy = greedy_lower_bound(&inst, &reqs);
+        let dftsp = Dftsp::new().schedule(&inst, &reqs).batch_size();
+        assert!(
+            dftsp >= greedy,
+            "seed {seed}: DFTSP {dftsp} < greedy {greedy}"
+        );
+    }
+}
+
+/// PROPERTY: DFTSP and brute force agree on cardinality (both exact over the
+/// same tree), and brute force never visits fewer nodes.
+#[test]
+fn prop_brute_force_agrees_and_costs_more() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(2, 14) as usize;
+        let reqs = random_requests(&mut rng, n, true);
+        let d = Dftsp::new().schedule(&inst, &reqs);
+        let bf = BruteForce::default().schedule(&inst, &reqs);
+        if bf.stats.budget_exhausted {
+            continue;
+        }
+        assert_eq!(d.batch_size(), bf.batch_size(), "seed {seed}");
+    }
+}
+
+/// PROPERTY: scheduling is deterministic — identical inputs, identical
+/// outputs (ids and node counts).
+#[test]
+fn prop_deterministic() {
+    for seed in 0..20u64 {
+        let mut rng1 = Rng::new(4000 + seed);
+        let inst1 = random_instance(&mut rng1);
+        let reqs1 = random_requests(&mut rng1, 18, false);
+        let mut rng2 = Rng::new(4000 + seed);
+        let inst2 = random_instance(&mut rng2);
+        let reqs2 = random_requests(&mut rng2, 18, false);
+        let a = Dftsp::new().schedule(&inst1, &reqs1);
+        let b = Dftsp::new().schedule(&inst2, &reqs2);
+        assert_eq!(a.scheduled, b.scheduled, "seed {seed}");
+        assert_eq!(a.stats, b.stats, "seed {seed}");
+    }
+}
+
+/// PROPERTY: growing the cluster never shrinks the DFTSP batch (uniform h:
+/// relaxing compute/memory can only help a cardinality-exact search).
+#[test]
+fn prop_more_gpus_never_hurt() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let n = rng.int_range(4, 12) as usize;
+        let reqs = random_requests(&mut rng, n, true);
+        let mk = |gpus: usize| {
+            ProblemInstance::new(
+                CostModel::new(LlmSpec::bloom_3b()),
+                quant::default_quant(),
+                ClusterSpec::new(GpuSpec::jetson_tx2(), gpus),
+                EpochParams::default(),
+                512,
+                0.0,
+            )
+        };
+        let small = Dftsp::new().schedule(&mk(2), &reqs).batch_size();
+        let big = Dftsp::new().schedule(&mk(20), &reqs).batch_size();
+        assert!(big >= small, "seed {seed}: {big} < {small}");
+    }
+}
+
+/// PROPERTY: admission is sound — no returned id may belong to a request
+/// whose accuracy requirement the deployed quantization cannot meet.
+#[test]
+fn prop_accuracy_admission_sound() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let inst = random_instance(&mut rng);
+        let reqs = random_requests(&mut rng, 20, false);
+        let sched = Dftsp::new().schedule(&inst, &reqs);
+        for r in &reqs {
+            if sched.scheduled.contains(&r.id()) {
+                assert!(
+                    inst.quant
+                        .satisfies_accuracy(&inst.cost.spec.name, r.req.accuracy_req),
+                    "seed {seed}: scheduled request violates (1e)"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! End-to-end runtime validation: the Rust PJRT engine must reproduce the
+//! Python/JAX (Pallas) numerics exactly-enough from the AOT artifacts, and
+//! behave sanely across batch variants and cache reuse.
+//!
+//! All tests skip gracefully when `make artifacts` has not been run.
+
+use edgellm::runtime::{argmax, artifacts_available, Engine};
+use edgellm::util::json::Json;
+use std::path::PathBuf;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load a fresh fp16 engine with the given batch variants (the PJRT handles
+/// are not Sync, so each test owns its engine; compiling only the variants a
+/// test needs keeps this cheap).
+fn engine_with(variants: &[usize]) -> Option<Engine> {
+    if !artifacts_available(&artifact_dir()) {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load_with_variants(&artifact_dir(), "W16A16", variants).expect("engine load"))
+}
+
+fn golden() -> Option<Json> {
+    let p = artifact_dir().join("golden.json");
+    let src = std::fs::read_to_string(p).ok()?;
+    Some(Json::parse(&src).expect("golden.json parses"))
+}
+
+fn golden_prompts(g: &Json) -> Vec<Vec<i32>> {
+    g.get("prompts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            p.as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_f64().unwrap() as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prefill_logits_match_python_golden() {
+    let (Some(engine), Some(g)) = (engine_with(&[4]), golden()) else {
+        return;
+    };
+    let prompts = golden_prompts(&g);
+    let (logits, cache) = engine.prefill(&prompts).expect("prefill");
+    assert_eq!(cache.active, prompts.len());
+    let want = g.get("prefill_logits_head").unwrap().as_arr().unwrap();
+    for (i, row) in want.iter().enumerate() {
+        let row: Vec<f64> = row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        for (j, &w) in row.iter().enumerate() {
+            let got = logits[i][j] as f64;
+            assert!(
+                (got - w).abs() < 1e-3 + 1e-3 * w.abs(),
+                "logits[{i}][{j}]: rust {got} vs python {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_generation_matches_python_golden() {
+    let (Some(engine), Some(g)) = (engine_with(&[4]), golden()) else {
+        return;
+    };
+    let prompts = golden_prompts(&g);
+    let gen = engine.generate_greedy(&prompts, 8, None).expect("generate");
+    let want = g.get("greedy_tokens").unwrap().as_arr().unwrap();
+    for (i, row) in want.iter().enumerate() {
+        let row: Vec<i32> = row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(gen[i], row, "sequence {i} diverged from python");
+    }
+}
+
+#[test]
+fn batch_variant_invariance() {
+    // The same prompt must generate the same tokens whether it runs alone
+    // (b=1 variant) or padded into the b=4 variant with co-batched prompts.
+    let Some(engine) = engine_with(&[1, 4]) else { return };
+    let p1 = vec![vec![11, 22, 33, 44, 55]];
+    let p4 = vec![
+        vec![11, 22, 33, 44, 55],
+        vec![100, 101],
+        vec![200; 40],
+        vec![300, 301, 302],
+    ];
+    let solo = engine.generate_greedy(&p1, 6, None).unwrap();
+    let batched = engine.generate_greedy(&p4, 6, None).unwrap();
+    assert_eq!(solo[0], batched[0], "padding must not leak across the batch");
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(engine) = engine_with(&[2]) else { return };
+    let prompts = vec![vec![1, 2, 3], vec![9, 8, 7, 6]];
+    let a = engine.generate_greedy(&prompts, 5, None).unwrap();
+    let b = engine.generate_greedy(&prompts, 5, None).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn quant_variants_load_and_diverge() {
+    // The W4A16 weights must load through the same engine and eventually
+    // produce different tokens than fp16 (quantization noise is real).
+    let Some(fp) = engine_with(&[1]) else { return };
+    let w4 = Engine::load_with_variants(&artifact_dir(), "W4A16/ZQ-Local", &[1])
+        .expect("w4 engine");
+    let prompt = vec![(0..20).map(|i| (i * 7) % 512).collect::<Vec<i32>>()];
+    let (lf, _) = fp.prefill(&prompt).unwrap();
+    let (lq, _) = w4.prefill(&prompt).unwrap();
+    let max_diff = lf[0]
+        .iter()
+        .zip(lq[0].iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff > 1e-3,
+        "W4A16 weights must perturb the logits (max diff {max_diff})"
+    );
+    // and both engines remain internally deterministic
+    let (lq2, _) = w4.prefill(&prompt).unwrap();
+    assert_eq!(lq[0], lq2[0]);
+}
+
+#[test]
+fn cache_exhaustion_is_an_error() {
+    let Some(engine) = engine_with(&[1]) else { return };
+    let max_prompt = engine.meta.max_prompt;
+    let max_seq = engine.meta.max_seq;
+    let prompts = vec![vec![5i32; max_prompt]];
+    // max_seq - max_prompt decode steps fit; the next must fail cleanly.
+    let budget = max_seq - max_prompt;
+    let (logits, mut cache) = engine.prefill(&prompts).unwrap();
+    let mut next = vec![argmax(&logits[0])];
+    for _ in 0..budget {
+        let l = engine.decode(&next, &mut cache).unwrap();
+        next = vec![argmax(&l[0])];
+    }
+    assert!(engine.decode(&next, &mut cache).is_err());
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let Some(engine) = engine_with(&[1, 2]) else { return };
+    let too_many: Vec<Vec<i32>> =
+        (0..engine.max_batch() + 1).map(|_| vec![1, 2]).collect();
+    assert!(engine.prefill(&too_many).is_err());
+}
+
+#[test]
+fn empty_and_oversized_prompts_rejected() {
+    let Some(engine) = engine_with(&[1]) else { return };
+    assert!(engine.prefill(&[vec![]]).is_err());
+    let huge = vec![vec![1i32; engine.meta.max_prompt + 1]];
+    assert!(engine.prefill(&huge).is_err());
+}

@@ -1,0 +1,189 @@
+//! Serving-layer end-to-end tests: the threaded epoch server composing
+//! DFTSP with the PJRT engine. Skips when `make artifacts` has not run.
+
+use edgellm::coordinator::{Dftsp, EpochParams};
+use edgellm::runtime::{artifacts_available, Engine};
+use edgellm::serving::{EpochServer, ServeOutcome, ServeRequest, ServerConfig};
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn server(max_wait_epochs: u64) -> Option<EpochServer> {
+    if !artifacts_available(&artifact_dir()) {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    let engine =
+        Engine::load_with_variants(&artifact_dir(), "W8A16/RTN", &[1, 2, 4]).expect("engine");
+    let cfg = ServerConfig {
+        epoch: EpochParams {
+            duration: 0.2,
+            t_u: 0.02,
+            t_d: 0.02,
+        },
+        max_wait_epochs,
+        ..Default::default()
+    };
+    Some(EpochServer::new(engine, cfg, Box::new(Dftsp::new())))
+}
+
+#[test]
+fn serves_and_returns_tokens() {
+    let Some(mut server) = server(8) else { return };
+    let handle = server.handle();
+    let (rtx, rrx) = channel();
+    for i in 0..3 {
+        handle
+            .send(ServeRequest {
+                prompt: vec![1 + i, 2 + i, 3 + i, 4 + i],
+                output_tokens: 5,
+                latency_req: 10.0,
+                accuracy_req: 0.3,
+                respond: rtx.clone(),
+            })
+            .unwrap();
+    }
+    drop(rtx);
+    server.run_for(10);
+    let responses: Vec<_> = rrx.iter().collect();
+    assert_eq!(responses.len(), 3);
+    let completed: Vec<_> = responses
+        .iter()
+        .filter(|r| r.outcome == ServeOutcome::Completed)
+        .collect();
+    assert!(!completed.is_empty(), "some requests must complete");
+    for r in &completed {
+        assert_eq!(r.tokens.len(), 5, "requested 5 tokens");
+        assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(r.latency > 0.0);
+        assert!(r.epoch.is_some());
+    }
+    assert_eq!(
+        server.metrics.offered,
+        server.metrics.completed_in_deadline
+            + server.metrics.completed_late
+            + server.metrics.dropped
+    );
+}
+
+#[test]
+fn rejects_invalid_requests_immediately() {
+    let Some(mut server) = server(8) else { return };
+    let handle = server.handle();
+    let (rtx, rrx) = channel();
+    // empty prompt, oversized prompt, zero output, oversized output
+    let bad = vec![
+        (vec![], 4u32),
+        (vec![1i32; 1000], 4),
+        (vec![1, 2, 3], 0),
+        (vec![1, 2, 3], 10_000),
+    ];
+    for (prompt, out) in bad {
+        handle
+            .send(ServeRequest {
+                prompt,
+                output_tokens: out,
+                latency_req: 10.0,
+                accuracy_req: 0.1,
+                respond: rtx.clone(),
+            })
+            .unwrap();
+    }
+    drop(rtx);
+    server.run_for(2);
+    let responses: Vec<_> = rrx.iter().collect();
+    assert_eq!(responses.len(), 4);
+    assert!(responses
+        .iter()
+        .all(|r| r.outcome == ServeOutcome::Rejected && r.tokens.is_empty()));
+}
+
+#[test]
+fn unservable_accuracy_is_rejected_not_starved() {
+    let Some(mut server) = server(2) else { return };
+    let handle = server.handle();
+    let (rtx, rrx) = channel();
+    // a=1.0: even the measured near-lossless W8A16/RTN cannot guarantee
+    // f(dPPL) >= 1 unless dPPL is exactly 0 — but the request with a huge
+    // deadline must still terminate (reject) rather than wait forever.
+    handle
+        .send(ServeRequest {
+            prompt: vec![5, 6, 7],
+            output_tokens: 4,
+            latency_req: 1000.0,
+            accuracy_req: 1.0,
+            respond: rtx.clone(),
+        })
+        .unwrap();
+    drop(rtx);
+    server.run_for(6);
+    let responses: Vec<_> = rrx.iter().collect();
+    assert_eq!(responses.len(), 1, "request must terminate");
+}
+
+#[test]
+fn tcp_front_end_serves_text_prompts() {
+    let Some(mut server) = server(8) else { return };
+    let bpe_path = artifact_dir().join("bpe.json");
+    if !bpe_path.exists() {
+        eprintln!("skipping: bpe.json not built");
+        return;
+    }
+    let bpe = edgellm::tokenizer::Bpe::load(&bpe_path).unwrap();
+    let addr = edgellm::serving::spawn_listener("127.0.0.1:0", server.handle(), Some(bpe))
+        .expect("bind");
+
+    // Client thread speaking the JSON-line protocol over TCP.
+    let client = std::thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        writeln!(
+            stream,
+            r#"{{"prompt": "the scheduler batches requests", "output_tokens": 4, "latency_req": 30.0, "accuracy_req": 0.1}}"#
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    });
+
+    server.run_for(8);
+    let line = client.join().expect("client");
+    let j = edgellm::util::json::Json::parse(line.trim()).expect("json reply");
+    assert_eq!(j.req_str("outcome").unwrap(), "completed");
+    assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 4);
+    assert!(j.get("text").is_some(), "reply carries decoded text");
+}
+
+#[test]
+fn generated_tokens_match_direct_engine_output() {
+    // The served result must equal what the engine produces directly — the
+    // serving layer adds batching, not nondeterminism.
+    let Some(mut server) = server(8) else { return };
+    let direct_engine =
+        Engine::load_with_variants(&artifact_dir(), "W8A16/RTN", &[1]).expect("engine");
+    let prompt = vec![10, 20, 30, 40, 50];
+    let want = direct_engine
+        .generate_greedy(&[prompt.clone()], 6, None)
+        .unwrap();
+
+    let handle = server.handle();
+    let (rtx, rrx) = channel();
+    handle
+        .send(ServeRequest {
+            prompt,
+            output_tokens: 6,
+            latency_req: 30.0,
+            accuracy_req: 0.1,
+            respond: rtx,
+        })
+        .unwrap();
+    server.run_for(6);
+    let resp = rrx.recv().expect("response");
+    assert_eq!(resp.outcome, ServeOutcome::Completed);
+    assert_eq!(resp.tokens, want[0]);
+}

@@ -81,7 +81,7 @@ fn main() {
         .collect();
 
     server.run_for(epochs);
-    println!("{}", server.metrics.report("edge_serving (DFTSP over PJRT)"));
+    println!("{}", server.metrics().report("edge_serving (DFTSP over the runtime engine)"));
 
     let mut latencies = Vec::new();
     let mut completed = 0u64;

@@ -104,8 +104,7 @@ impl Scheduler for BruteForce {
         }
         adm.sort_by(|a, b| {
             inst.compute_slack(b)
-                .partial_cmp(&inst.compute_slack(a))
-                .unwrap()
+                .total_cmp(&inst.compute_slack(a))
                 .then(a.id().cmp(&b.id()))
         });
 

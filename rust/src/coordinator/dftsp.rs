@@ -41,9 +41,11 @@ impl Dftsp {
         if adm.is_empty() {
             return 0;
         }
-        // Uplink / downlink: prefix of the cheapest fractions.
+        // Uplink / downlink: prefix of the cheapest fractions. total_cmp:
+        // adversarial request inputs (NaN channel gains) must degrade the
+        // bound, not panic the scheduler.
         let bound_by = |vals: &mut Vec<f64>, cap: f64| -> usize {
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(f64::total_cmp);
             let mut acc = 0.0;
             let mut z = 0;
             for v in vals.iter() {
@@ -180,8 +182,7 @@ impl Scheduler for Dftsp {
         // Rank by latency tolerance (descending compute slack), id tiebreak.
         adm.sort_by(|a, b| {
             inst.compute_slack(b)
-                .partial_cmp(&inst.compute_slack(a))
-                .unwrap()
+                .total_cmp(&inst.compute_slack(a))
                 .then(a.id().cmp(&b.id()))
         });
 
@@ -444,6 +445,33 @@ mod tests {
         assert!(sched.stats.nodes_visited > 0);
         assert!(sched.stats.subproblems >= 1);
         assert!(sched.stats.solutions_checked >= 1);
+    }
+
+    #[test]
+    fn adversarial_nan_inputs_do_not_panic() {
+        // NaN channel gains / deadlines produce NaN ρ_min and slack; the
+        // admission screens drop them and the total_cmp sorts tolerate any
+        // survivors — scheduling must never panic.
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let good_h = (1e-3f64).sqrt();
+        let reqs = vec![
+            EpochRequest::annotate(b.build(0.0, 128, 128, 2.0, 0.2), good_h, &radio, 0.25, 0.25),
+            EpochRequest::annotate(b.build(0.0, 256, 128, 1.8, 0.2), good_h, &radio, 0.25, 0.25),
+            EpochRequest::annotate(b.build(0.0, 128, 128, 2.0, 0.2), f64::NAN, &radio, 0.25, 0.25),
+            EpochRequest::annotate(
+                b.build(0.0, 128, 128, f64::NAN, 0.2),
+                good_h,
+                &radio,
+                0.25,
+                0.25,
+            ),
+        ];
+        let sched = Dftsp::new().schedule(&i, &reqs);
+        assert_eq!(sched.batch_size(), 2, "only the two sane requests run");
+        assert!(!sched.scheduled.contains(&reqs[2].id()));
+        assert!(!sched.scheduled.contains(&reqs[3].id()));
     }
 
     #[test]

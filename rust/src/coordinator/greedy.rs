@@ -49,22 +49,20 @@ impl Scheduler for Greedy {
         match self.order {
             GreedyOrder::SlackDescending => adm.sort_by(|a, b| {
                 inst.compute_slack(b)
-                    .partial_cmp(&inst.compute_slack(a))
-                    .unwrap()
+                    .total_cmp(&inst.compute_slack(a))
                     .then(a.id().cmp(&b.id()))
             }),
             GreedyOrder::OutputAscending => adm.sort_by(|a, b| {
                 a.req
                     .output_tokens
                     .cmp(&b.req.output_tokens)
-                    .then(a.rho_min_u.partial_cmp(&b.rho_min_u).unwrap())
+                    .then(a.rho_min_u.total_cmp(&b.rho_min_u))
                     .then(a.id().cmp(&b.id()))
             }),
             GreedyOrder::Fcfs => adm.sort_by(|a, b| {
                 a.req
                     .arrival
-                    .partial_cmp(&b.req.arrival)
-                    .unwrap()
+                    .total_cmp(&b.req.arrival)
                     .then(a.id().cmp(&b.id()))
             }),
         }

@@ -78,7 +78,7 @@ pub fn partition_gpus(
                 .enumerate()
                 .map(|(i, q)| (i, q - q.floor()))
                 .collect();
-            rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            rema.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             let mut ri = 0;
             while assigned < total_gpus {
                 alloc[rema[ri % k].0] += 1;

@@ -69,8 +69,7 @@ impl Scheduler for NoBatching {
         adm.sort_by(|a, b| {
             a.req
                 .arrival
-                .partial_cmp(&b.req.arrival)
-                .unwrap()
+                .total_cmp(&b.req.arrival)
                 .then(a.id().cmp(&b.id()))
         });
 

@@ -71,8 +71,7 @@ impl Scheduler for StaticBatching {
         adm.sort_by(|a, b| {
             a.req
                 .arrival
-                .partial_cmp(&b.req.arrival)
-                .unwrap()
+                .total_cmp(&b.req.arrival)
                 .then(a.id().cmp(&b.id()))
         });
 

@@ -62,8 +62,7 @@ pub fn build_levels<'a>(
             // Uplink-cheapest first; id tiebreak for determinism.
             members.sort_by(|a, b| {
                 a.rho_min_u
-                    .partial_cmp(&b.rho_min_u)
-                    .unwrap()
+                    .total_cmp(&b.rho_min_u)
                     .then(a.id().cmp(&b.id()))
             });
             let mut prefix_rho_u = Vec::with_capacity(members.len() + 1);

@@ -1,0 +1,126 @@
+//! Execution backends: what happens to a batch after the scheduler picks it.
+//!
+//! The epoch protocol (admission, channel annotation, scheduling, rejection
+//! bookkeeping) is identical between the analytic simulator and the live
+//! server; only the *execution* of the chosen batch differs. This trait is
+//! that seam:
+//!
+//! - [`AnalyticBackend`] resolves completions from the paper's cost model —
+//!   the batch "finishes" at `now + T_up + t_compute + T_down` — and feeds
+//!   the outcome straight into `Metrics`. No tokens exist.
+//! - The serving layer's `EngineBackend` (see `serving::server`) runs real
+//!   prefill/decode on the loaded `runtime::Engine`, measures wall-clock
+//!   latency, and answers the clients' reply channels.
+
+use crate::coordinator::{ProblemInstance, Schedule};
+use crate::metrics::{Metrics, Outcome};
+use crate::request::{EpochRequest, Request, RequestId};
+use crate::wireless::Allocation;
+
+/// A request waiting in the driver's queue, together with whatever payload
+/// the backend needs to serve it (nothing for the simulator; prompt tokens
+/// and a reply channel for the live server).
+pub struct QueuedRequest<P> {
+    pub req: Request,
+    pub payload: P,
+}
+
+/// Why the driver is handing a request back unserved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The stale policy decided the request can no longer be served in time.
+    Stale,
+    /// The deployed quantization cannot meet its accuracy requirement
+    /// (constraint 1e) — it would starve in the queue forever.
+    Inadmissible,
+    /// The run ended with the request still queued.
+    Shutdown,
+}
+
+/// Everything a backend may need about the epoch being executed.
+pub struct EpochContext<'a> {
+    pub inst: &'a ProblemInstance,
+    /// This epoch's channel-annotated view of the whole queue (scheduled
+    /// requests included), in queue order.
+    pub annotated: &'a [EpochRequest],
+    /// Joint bandwidth allocations for the scheduled batch (one per
+    /// scheduled request; the driver's single `wireless::allocate` call).
+    pub allocations: &'a [Allocation],
+    /// The epoch boundary this batch started at.
+    pub now: f64,
+    pub epoch_idx: u64,
+}
+
+impl EpochContext<'_> {
+    /// Allocated (upload, download) seconds for a scheduled request. Under
+    /// `AllocationPolicy::MinOnly` these are exactly the protocol slots
+    /// T_U/T_D; surplus-distributing policies shorten them.
+    pub fn comm_times(&self, id: RequestId) -> (f64, f64) {
+        match self.allocations.iter().find(|a| a.id == id) {
+            Some(a) => (a.upload_time, a.download_time),
+            None => (self.inst.epoch.t_u, self.inst.epoch.t_d),
+        }
+    }
+}
+
+/// How scheduled batches are executed and unserved requests disposed of.
+pub trait ExecutionBackend {
+    /// Per-request payload carried through the driver queue.
+    type Payload;
+
+    /// Execute the scheduled batch. `batch` holds the scheduled queue
+    /// entries in queue order; implementations must record exactly one
+    /// outcome per scheduled request into `metrics`.
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        schedule: &Schedule,
+        batch: Vec<QueuedRequest<Self::Payload>>,
+        metrics: &mut Metrics,
+    );
+
+    /// A request leaves the system unserved. The default just counts the
+    /// drop; live backends also answer the client.
+    fn reject(
+        &mut self,
+        entry: QueuedRequest<Self::Payload>,
+        reason: RejectReason,
+        metrics: &mut Metrics,
+    ) {
+        let _ = (entry, reason);
+        metrics.record_outcome(Outcome::Dropped, 0.0);
+    }
+}
+
+/// Cost-model execution: the testbed stand-in used by the simulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticBackend;
+
+impl ExecutionBackend for AnalyticBackend {
+    type Payload = ();
+
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        schedule: &Schedule,
+        _batch: Vec<QueuedRequest<()>>,
+        metrics: &mut Metrics,
+    ) {
+        for &(id, t_compute) in &schedule.per_request_compute {
+            let req = ctx
+                .annotated
+                .iter()
+                .find(|r| r.id() == id)
+                .expect("scheduler returned unknown request id");
+            let (t_up, t_down) = ctx.comm_times(id);
+            let completion = ctx.now + t_up + t_compute + t_down;
+            let latency = completion - req.req.arrival;
+            let outcome = if latency <= req.req.latency_req + 1e-9 {
+                Outcome::CompletedInDeadline
+            } else {
+                Outcome::CompletedLate
+            };
+            metrics.record_outcome(outcome, latency);
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! The epoch-protocol core — the **single** implementation of the paper's
+//! Fig. 2 loop, shared by the discrete-event simulator (`sim`) and the live
+//! PJRT server (`serving`).
+//!
+//! Every epoch the driver runs the same pipeline:
+//!
+//! 1. apply the stale policy to the queue (simulator: best-case-infeasible;
+//!    server: max-wait) and hand drops to the backend,
+//! 2. freeze a [`ProblemInstance`] (padded prompt length per the s' policy,
+//!    batch start time = the epoch boundary),
+//! 3. draw this epoch's channel state and annotate the queue
+//!    ([`EpochRequest`]s, constraint 1a/1b terms),
+//! 4. reject accuracy-inadmissible requests (constraint 1e) so they cannot
+//!    starve,
+//! 5. ask the [`Scheduler`] for the batch and account the search effort,
+//! 6. run the joint bandwidth allocation — the one `wireless::allocate`
+//!    call site in the codebase,
+//! 7. hand the batch to the [`ExecutionBackend`] (analytic cost model or
+//!    the real engine) which records one outcome per scheduled request.
+//!
+//! What *varies* between the two worlds is injected: a [`Clock`] decides how
+//! epoch boundaries are reached (jump vs sleep), an [`ExecutionBackend`]
+//! decides how batches complete, and [`DriverPolicy`] captures the two
+//! documented policy differences (stale rule, s' selection). Schedulers are
+//! untouched — every policy (DFTSP, brute force, greedy, static, NoB,
+//! multi-LLM) sees identical `ProblemInstance`/`EpochRequest` inputs in both
+//! worlds.
+
+pub mod backend;
+pub mod clock;
+
+pub use backend::{AnalyticBackend, EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
+pub use clock::{Clock, SimClock, WallClock};
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
+use crate::metrics::Metrics;
+use crate::model::CostModel;
+use crate::quant::QuantSpec;
+use crate::request::{EpochRequest, Request, RequestId};
+use crate::util::rng::Rng;
+use crate::wireless::{allocate, AllocationPolicy, ChannelParams, RadioParams};
+
+/// Everything that stays constant across a run and is cloned into each
+/// epoch's [`ProblemInstance`].
+#[derive(Debug, Clone)]
+pub struct InstanceTemplate {
+    pub cost: CostModel,
+    pub quant: QuantSpec,
+    pub cluster: ClusterSpec,
+    pub epoch: EpochParams,
+}
+
+/// When is a queued request considered unservable and dropped?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalePolicy {
+    /// Drop when even an immediate solo run at full cluster speed cannot
+    /// meet the deadline (the simulator's rule — exact for the analytic
+    /// backend).
+    BestCaseInfeasible,
+    /// Drop after waiting more than this many seconds (the serving rule —
+    /// robust when compute time is measured, not modeled).
+    MaxWait(f64),
+}
+
+/// How is the padded prompt length s' chosen each epoch?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SPadPolicy {
+    /// Always pad to a fixed length (the engine's compiled `max_prompt`).
+    Fixed(u32),
+    /// Pad to the longest queued prompt, or `fallback` when the queue is
+    /// empty (the paper's evaluation setting).
+    LongestQueued { fallback: u32 },
+}
+
+/// The per-deployment policy knobs of the epoch protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriverPolicy {
+    pub stale: StalePolicy,
+    pub s_pad: SPadPolicy,
+    /// Surplus-bandwidth distribution for the scheduled batch. `MinOnly`
+    /// reproduces the paper's P1 accounting (transfers take exactly
+    /// T_U/T_D); `Proportional`/`MaxMin` shorten effective transfer times.
+    pub allocation: AllocationPolicy,
+}
+
+/// The shared epoch-protocol engine. Generic over the per-request payload
+/// `P` the execution backend carries ( `()` for the simulator, prompt +
+/// reply channel for the server).
+pub struct EpochDriver<P> {
+    template: InstanceTemplate,
+    policy: DriverPolicy,
+    radio: RadioParams,
+    channel: ChannelParams,
+    rng: Rng,
+    queue: Vec<QueuedRequest<P>>,
+    epoch_idx: u64,
+    pub metrics: Metrics,
+}
+
+impl<P> EpochDriver<P> {
+    pub fn new(
+        template: InstanceTemplate,
+        policy: DriverPolicy,
+        radio: RadioParams,
+        channel: ChannelParams,
+        rng: Rng,
+    ) -> Self {
+        EpochDriver {
+            template,
+            policy,
+            radio,
+            channel,
+            rng,
+            queue: Vec::new(),
+            epoch_idx: 0,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn epoch_duration(&self) -> f64 {
+        self.template.epoch.duration
+    }
+
+    pub fn epoch_idx(&self) -> u64 {
+        self.epoch_idx
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn template(&self) -> &InstanceTemplate {
+        &self.template
+    }
+
+    /// Admit a request into the queue (schedulable from the next boundary
+    /// onward — the Fig. 2 aggregation rule) and count it as offered.
+    pub fn offer(&mut self, req: Request, payload: P) {
+        self.metrics.record_offered(1);
+        self.queue.push(QueuedRequest { req, payload });
+    }
+
+    pub fn into_metrics(self) -> Metrics {
+        self.metrics
+    }
+
+    fn is_stale(&self, r: &Request, now: f64) -> bool {
+        match self.policy.stale {
+            StalePolicy::BestCaseInfeasible => {
+                let t = &self.template;
+                let best_case = t.epoch.t_u
+                    + t.quant.beta
+                        * t.cost.total_flops_per_req(r.prompt_tokens, r.output_tokens)
+                        / t.cluster.total_flops()
+                    + t.epoch.t_d;
+                r.waited(now) + best_case > r.latency_req
+            }
+            StalePolicy::MaxWait(max_wait) => r.waited(now) > max_wait,
+        }
+    }
+
+    /// One full round of the Fig. 2 protocol at epoch boundary `now`.
+    pub fn step_epoch<B>(&mut self, scheduler: &mut dyn Scheduler, backend: &mut B, now: f64)
+    where
+        B: ExecutionBackend<Payload = P>,
+    {
+        // 1. Stale policy: drop queued requests that can no longer be served.
+        let queue = std::mem::take(&mut self.queue);
+        for entry in queue {
+            if self.is_stale(&entry.req, now) {
+                backend.reject(entry, RejectReason::Stale, &mut self.metrics);
+            } else {
+                self.queue.push(entry);
+            }
+        }
+        self.metrics.queue_depth.push(self.queue.len() as f64);
+
+        // 2. Freeze this epoch's problem instance.
+        let s_pad = match self.policy.s_pad {
+            SPadPolicy::Fixed(s) => s,
+            SPadPolicy::LongestQueued { fallback } => self
+                .queue
+                .iter()
+                .map(|e| e.req.prompt_tokens)
+                .max()
+                .unwrap_or(fallback),
+        };
+        let (t_u, t_d) = (self.template.epoch.t_u, self.template.epoch.t_d);
+        let inst = ProblemInstance::new(
+            self.template.cost.clone(),
+            self.template.quant.clone(),
+            self.template.cluster.clone(),
+            self.template.epoch.clone(),
+            s_pad,
+            now,
+        );
+
+        // 3. Annotate the queue with this epoch's channel state (one draw
+        //    per queued request, in queue order — the determinism contract).
+        let mut annotated: Vec<EpochRequest> = Vec::with_capacity(self.queue.len());
+        for e in &self.queue {
+            let h = self.channel.draw_h(&mut self.rng);
+            annotated.push(EpochRequest::annotate(e.req.clone(), h, &self.radio, t_u, t_d));
+        }
+
+        // 4. Reject requests the deployed quantization can never satisfy
+        //    (accuracy admission is workload-independent — they would
+        //    otherwise sit in the queue forever).
+        let inadmissible: Vec<RequestId> = annotated
+            .iter()
+            .filter(|r| !inst.admits(r))
+            .map(|r| r.id())
+            .collect();
+        if !inadmissible.is_empty() {
+            let queue = std::mem::take(&mut self.queue);
+            for entry in queue {
+                if inadmissible.contains(&entry.req.id) {
+                    backend.reject(entry, RejectReason::Inadmissible, &mut self.metrics);
+                } else {
+                    self.queue.push(entry);
+                }
+            }
+            annotated.retain(|r| !inadmissible.contains(&r.id()));
+        }
+
+        // 5. Schedule and account the search effort.
+        let schedule = scheduler.schedule(&inst, &annotated);
+        self.metrics
+            .record_schedule(schedule.batch_size(), &schedule.stats);
+
+        // 6. Pull the scheduled entries out of the queue (order preserved).
+        let mut batch: Vec<QueuedRequest<P>> = Vec::new();
+        if !schedule.scheduled.is_empty() {
+            let queue = std::mem::take(&mut self.queue);
+            for entry in queue {
+                if schedule.scheduled.contains(&entry.req.id) {
+                    batch.push(entry);
+                } else {
+                    self.queue.push(entry);
+                }
+            }
+        }
+
+        // 7. Joint bandwidth allocation — the single allocator call site.
+        let selected: Vec<&EpochRequest> = annotated
+            .iter()
+            .filter(|r| schedule.scheduled.contains(&r.id()))
+            .collect();
+        let allocations = allocate(&selected, &self.radio, t_u, t_d, self.policy.allocation);
+
+        // 8. Execute: the backend records one outcome per scheduled request.
+        let ctx = EpochContext {
+            inst: &inst,
+            annotated: &annotated,
+            allocations: &allocations,
+            now,
+            epoch_idx: self.epoch_idx,
+        };
+        backend.execute(&ctx, &schedule, batch, &mut self.metrics);
+        self.epoch_idx += 1;
+    }
+
+    /// Close the run: whatever still waits is unserved; `horizon` is the
+    /// simulated (or wall) time the run covered.
+    pub fn finish<B>(&mut self, backend: &mut B, horizon: f64)
+    where
+        B: ExecutionBackend<Payload = P>,
+    {
+        for entry in std::mem::take(&mut self.queue) {
+            backend.reject(entry, RejectReason::Shutdown, &mut self.metrics);
+        }
+        self.metrics.horizon = horizon;
+    }
+}
+
+/// Drive `epochs` rounds of the protocol against a clock: wait to each
+/// boundary, ingest new arrivals (`ingest` is the adapter's intake — the
+/// workload generator for the simulator, the mpsc drain for the server),
+/// then step. Epochs whose own work exceeded the epoch duration are counted
+/// in `Metrics::epoch_overruns` (the wall clock then starts the next epoch
+/// immediately instead of sleeping backwards).
+pub fn run_epochs<P, B, C, F>(
+    driver: &mut EpochDriver<P>,
+    scheduler: &mut dyn Scheduler,
+    backend: &mut B,
+    clock: &mut C,
+    epochs: u64,
+    mut ingest: F,
+) where
+    B: ExecutionBackend<Payload = P>,
+    C: Clock + ?Sized,
+    F: FnMut(&mut EpochDriver<P>, &mut B, f64),
+{
+    let duration = driver.epoch_duration();
+    for e in 0..epochs {
+        let boundary = e as f64 * duration;
+        let now = clock.wait_until(boundary);
+        ingest(&mut *driver, &mut *backend, now);
+        driver.step_epoch(&mut *scheduler, &mut *backend, now);
+        // Charge an overrun to an epoch whose *own* work exceeded the slot
+        // (comparing against the absolute next boundary instead would also
+        // count every epoch that merely started late after one stall).
+        if clock.now() - now > duration {
+            driver.metrics.epoch_overruns += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::Dftsp;
+    use crate::model::LlmSpec;
+    use crate::quant;
+    use crate::request::RequestBuilder;
+
+    fn paper_template() -> InstanceTemplate {
+        InstanceTemplate {
+            cost: CostModel::new(LlmSpec::bloom_3b()),
+            quant: quant::default_quant(),
+            cluster: ClusterSpec::paper_default(),
+            epoch: EpochParams::default(),
+        }
+    }
+
+    fn driver(policy: DriverPolicy) -> EpochDriver<()> {
+        EpochDriver::new(
+            paper_template(),
+            policy,
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(42),
+        )
+    }
+
+    fn sim_policy() -> DriverPolicy {
+        DriverPolicy {
+            stale: StalePolicy::BestCaseInfeasible,
+            s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+            allocation: AllocationPolicy::MinOnly,
+        }
+    }
+
+    #[test]
+    fn conservation_through_driver() {
+        let mut d = driver(sim_policy());
+        let mut sched = Dftsp::new();
+        let mut backend = AnalyticBackend;
+        let mut b = RequestBuilder::new();
+        for e in 0..6u64 {
+            let now = e as f64 * 2.0;
+            for _ in 0..4 {
+                d.offer(b.build(now, 128, 128, 1.8, 0.3), ());
+            }
+            d.step_epoch(&mut sched, &mut backend, now);
+        }
+        d.finish(&mut backend, 12.0);
+        let m = d.into_metrics();
+        assert_eq!(m.offered, 24);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "conservation of requests"
+        );
+        assert!(m.completed_in_deadline > 0);
+        assert!((m.horizon - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_wait_policy_drops_old_requests() {
+        let mut d = driver(DriverPolicy {
+            stale: StalePolicy::MaxWait(1.0),
+            ..sim_policy()
+        });
+        let mut backend = AnalyticBackend;
+        // A scheduler that never schedules, so the queue only drains by
+        // staleness.
+        struct Never;
+        impl Scheduler for Never {
+            fn name(&self) -> &'static str {
+                "never"
+            }
+            fn schedule(
+                &mut self,
+                _inst: &ProblemInstance,
+                _c: &[EpochRequest],
+            ) -> crate::coordinator::Schedule {
+                crate::coordinator::Schedule::empty()
+            }
+        }
+        let mut sched = Never;
+        let mut b = RequestBuilder::new();
+        d.offer(b.build(0.0, 128, 128, 60.0, 0.0), ());
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        assert_eq!(d.queue_len(), 1, "fresh request stays queued");
+        d.step_epoch(&mut sched, &mut backend, 2.0);
+        assert_eq!(d.queue_len(), 0, "waited 2 s > max 1 s: dropped");
+        assert_eq!(d.metrics.dropped, 1);
+    }
+
+    #[test]
+    fn run_epochs_counts_overruns() {
+        // A clock whose time leaps 10 s at every observation: every epoch
+        // finishes past its boundary.
+        struct Laggy {
+            now: f64,
+        }
+        impl Clock for Laggy {
+            fn now(&mut self) -> f64 {
+                self.now += 10.0;
+                self.now
+            }
+            fn wait_until(&mut self, t: f64) -> f64 {
+                if t > self.now {
+                    self.now = t;
+                }
+                self.now
+            }
+        }
+        let mut d = driver(DriverPolicy {
+            stale: StalePolicy::MaxWait(1e9),
+            ..sim_policy()
+        });
+        let mut sched = Dftsp::new();
+        let mut backend = AnalyticBackend;
+        let mut clock = Laggy { now: 0.0 };
+        run_epochs(&mut d, &mut sched, &mut backend, &mut clock, 4, |_, _, _| {});
+        assert_eq!(d.metrics.epoch_overruns, 4);
+
+        // The exact sim clock never overruns.
+        let mut d2 = driver(sim_policy());
+        let mut clock2 = SimClock::new();
+        run_epochs(&mut d2, &mut sched, &mut backend, &mut clock2, 4, |_, _, _| {});
+        assert_eq!(d2.metrics.epoch_overruns, 0);
+    }
+
+    #[test]
+    fn inadmissible_requests_rejected_not_starved() {
+        let mut t = paper_template();
+        // W4A16/ZQ-Local on BLOOM-3B admits only a <= 0.08.
+        t.quant = quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::ZqLocal).unwrap();
+        let mut d: EpochDriver<()> = EpochDriver::new(
+            t,
+            sim_policy(),
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(1),
+        );
+        let mut sched = Dftsp::new();
+        let mut backend = AnalyticBackend;
+        let mut b = RequestBuilder::new();
+        d.offer(b.build(0.0, 128, 128, 3600.0, 0.9), ()); // unservable accuracy
+        d.offer(b.build(0.0, 128, 128, 2.0, 0.01), ()); // fine
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        assert_eq!(d.metrics.dropped, 1, "strict-accuracy request rejected");
+        assert_eq!(d.metrics.completed_in_deadline, 1);
+        assert_eq!(d.queue_len(), 0);
+    }
+}

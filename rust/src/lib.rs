@@ -5,13 +5,39 @@
 //! al., 2024): epoch-based batched LLM serving on a wireless edge node, with
 //! the DFTSP optimal batch scheduler, OFDMA bandwidth allocation, a
 //! quantization catalog with perplexity-aware admission, a discrete-event
-//! simulator reproducing every figure/table of the paper, and a real
-//! PJRT-executed tiny transformer served end-to-end by the Rust coordinator
-//! (JAX/Pallas authored, AOT-compiled; Python never on the request path).
+//! simulator reproducing every figure/table of the paper, and a real tiny
+//! transformer served end-to-end by the Rust coordinator (JAX/Pallas
+//! authored, AOT-compiled; Python never on the request path).
+//!
+//! ## Architecture: one epoch loop, two worlds
+//!
+//! The paper's Fig. 2 protocol — aggregate arrivals, schedule at the epoch
+//! boundary, upload during T_U, compute during T_C, download during T_D,
+//! account deadlines — is implemented **once**, in [`driver::EpochDriver`].
+//! Everything that differs between evaluation and production is injected:
+//!
+//! | seam                        | simulator (`sim`)        | server (`serving`)          |
+//! |-----------------------------|--------------------------|-----------------------------|
+//! | [`driver::Clock`]           | `SimClock` (exact jumps) | `WallClock` (sleeps)        |
+//! | [`driver::ExecutionBackend`]| `AnalyticBackend` (cost model) | `EngineBackend` (real tokens) |
+//! | intake                      | seeded Poisson generator | mpsc ingress + validation   |
+//! | [`driver::StalePolicy`]     | best-case-infeasible     | max-wait                    |
+//! | [`driver::SPadPolicy`]      | longest queued prompt    | engine's compiled max       |
+//!
+//! Schedulers ([`coordinator::Scheduler`]: DFTSP, brute force, greedy,
+//! static, no-batching, multi-LLM) see identical inputs in both worlds, so a
+//! policy validated in simulation runs unchanged in production. The joint
+//! bandwidth allocation (`wireless::allocate`) is invoked at exactly one
+//! call site, inside the driver.
+//!
+//! The runtime engine comes in two flavours behind one API: a pure-Rust CPU
+//! engine (default — zero external crates) and PJRT execution of the AOT
+//! HLO programs (feature `"pjrt"`). See `runtime` and README.md.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod driver;
 pub mod metrics;
 pub mod model;
 pub mod quant;

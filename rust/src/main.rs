@@ -210,7 +210,7 @@ fn cmd_serve(args: &Args) -> i32 {
         .collect();
 
     server.run_for(epochs);
-    print!("{}", server.metrics.report("edge serving (DFTSP)"));
+    print!("{}", server.metrics().report("edge serving (DFTSP)"));
     let mut total_sent = 0;
     let mut total_ok = 0;
     for j in joins {

@@ -19,7 +19,7 @@ pub enum Outcome {
 }
 
 /// Aggregated run metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
     pub offered: u64,
     pub scheduled: u64,
@@ -34,6 +34,10 @@ pub struct Metrics {
     pub queue_depth: OnlineStats,
     /// Accumulated search-effort statistics.
     pub search: SearchStats,
+    /// Epochs whose own work (scheduling + execution) exceeded the epoch
+    /// duration, forcing the wall clock to start the next epoch late instead
+    /// of sleeping. Always 0 under the simulated clock.
+    pub epoch_overruns: u64,
     /// Simulated (or wall) time covered by this run, in seconds.
     pub horizon: f64,
 }
@@ -105,6 +109,12 @@ impl Metrics {
             self.batch_sizes.mean(),
             self.queue_depth.mean(),
         ));
+        if self.epoch_overruns > 0 {
+            s.push_str(&format!(
+                "epoch overruns {} (epochs whose work exceeded the epoch duration)\n",
+                self.epoch_overruns
+            ));
+        }
         if self.latency.count() > 0 {
             s.push_str(&format!(
                 "latency p50 {}  p95 {}  p99 {}  max {}\n",

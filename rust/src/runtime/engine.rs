@@ -1,286 +1,46 @@
-//! The PJRT inference engine: loads AOT-compiled HLO programs and runs
-//! prefill/decode on the request path. Python is never involved here.
+//! Backend-independent engine surface: the error type and decoding helpers
+//! shared by every execution backend.
 //!
-//! One `PjRtLoadedExecutable` per (phase, batch-size) variant, compiled once
-//! at startup. Performance-critical state stays **device-resident**
-//! (§Perf in EXPERIMENTS.md): weights are uploaded once as `PjRtBuffer`s and
-//! the KV cache buffers returned by one step feed the next step directly —
-//! only tokens go up and logits come back per decode step.
-
-use crate::runtime::artifact::{load_weights, Meta};
-use std::collections::BTreeMap;
-use std::path::Path;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+//! The concrete `Engine` comes in two flavours selected at compile time:
+//!
+//! - [`crate::runtime::host`] (default): a pure-Rust, std-only CPU engine
+//!   that executes the tiny transformer directly from the weight container —
+//!   no external crates, which is what the offline build image requires.
+//! - `pjrt` (feature `"pjrt"`): the original PJRT path that compiles the
+//!   AOT-lowered HLO programs through the `xla` crate and keeps weights and
+//!   KV cache device-resident.
+//!
+//! Both expose the identical API (`load`, `load_with_variants`, `prefill`,
+//! `decode`, `generate_greedy`, `max_batch`, `platform`), so the serving
+//! layer and the `EpochDriver`'s engine backend are backend-agnostic.
 
 /// Runtime errors (artifact loading, compilation, execution).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("artifact error: {0}")]
+    /// Artifact manifest / weight container problems.
     Artifact(String),
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("batch of {0} exceeds the largest compiled variant {1}")]
+    /// Execution-backend failure (XLA/PJRT when the `pjrt` feature is on).
+    Backend(String),
+    /// Requested batch exceeds the largest compiled/loaded variant.
     BatchTooLarge(usize, usize),
-    #[error("engine error: {0}")]
+    /// Anything else (shape mismatches, exhausted KV cache, …).
     Other(String),
 }
 
-type Result<T> = std::result::Result<T, EngineError>;
-
-/// The functional KV cache of one in-flight batch. K/V live on the PJRT
-/// device and never round-trip through the host during generation.
-pub struct KvCache {
-    /// Number of real (non-padding) sequences in the batch.
-    pub active: usize,
-    /// Compiled batch variant this cache is shaped for.
-    pub batch: usize,
-    k: PjRtBuffer,
-    v: PjRtBuffer,
-    /// Per-sequence next write position (= current length).
-    pub pos: Vec<i32>,
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            EngineError::Backend(msg) => write!(f, "backend error: {msg}"),
+            EngineError::BatchTooLarge(n, max) => {
+                write!(f, "batch of {n} exceeds the largest compiled variant {max}")
+            }
+            EngineError::Other(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
 }
 
-/// The AOT-compiled model, ready to serve.
-pub struct Engine {
-    client: PjRtClient,
-    pub meta: Meta,
-    pub quant_label: String,
-    /// Weights as device buffers in canonical parameter order (uploaded once
-    /// at load time — 13 MB that would otherwise transfer on every step).
-    param_bufs: Vec<PjRtBuffer>,
-    prefill_exe: BTreeMap<usize, PjRtLoadedExecutable>,
-    decode_exe: BTreeMap<usize, PjRtLoadedExecutable>,
-}
-
-impl Engine {
-    /// Load the manifest, one weight variant, and compile all batch variants.
-    pub fn load(artifact_dir: &Path, quant_label: &str) -> Result<Engine> {
-        let meta = Meta::load(artifact_dir).map_err(EngineError::Artifact)?;
-        let variants = meta.batch_variants.clone();
-        Self::load_with_variants(artifact_dir, quant_label, &variants)
-    }
-
-    /// Load with a subset of batch variants (faster startup for tests).
-    pub fn load_with_variants(
-        artifact_dir: &Path,
-        quant_label: &str,
-        variants: &[usize],
-    ) -> Result<Engine> {
-        let meta = Meta::load(artifact_dir).map_err(EngineError::Artifact)?;
-        let client = PjRtClient::cpu()?;
-
-        let weights_path = meta
-            .weights_path(quant_label)
-            .map_err(EngineError::Artifact)?;
-        let tensors = load_weights(&weights_path).map_err(EngineError::Artifact)?;
-        if tensors.len() != meta.param_order.len() {
-            return Err(EngineError::Artifact(format!(
-                "weight container has {} tensors, meta declares {}",
-                tensors.len(),
-                meta.param_order.len()
-            )));
-        }
-        let param_bufs: Vec<PjRtBuffer> = tensors
-            .iter()
-            .map(|t| Ok(client.buffer_from_host_buffer(&t.data, &t.dims, None)?))
-            .collect::<Result<_>>()?;
-
-        let mut prefill_exe = BTreeMap::new();
-        let mut decode_exe = BTreeMap::new();
-        for &b in variants {
-            for (phase, map) in [("prefill", &mut prefill_exe), ("decode", &mut decode_exe)] {
-                let path = meta.program_path(phase, b).map_err(EngineError::Artifact)?;
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().ok_or_else(|| {
-                        EngineError::Artifact(format!("non-utf8 path {path:?}"))
-                    })?,
-                )?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                map.insert(b, client.compile(&comp)?);
-            }
-        }
-        Ok(Engine {
-            client,
-            meta,
-            quant_label: quant_label.to_string(),
-            param_bufs,
-            prefill_exe,
-            decode_exe,
-        })
-    }
-
-    /// Largest batch the engine can run in one call.
-    pub fn max_batch(&self) -> usize {
-        self.prefill_exe.keys().copied().max().unwrap_or(0)
-    }
-
-    /// Smallest compiled variant that fits `n` sequences.
-    fn variant_for(&self, n: usize) -> Result<usize> {
-        self.prefill_exe
-            .keys()
-            .copied()
-            .filter(|&b| b >= n)
-            .min()
-            .ok_or(EngineError::BatchTooLarge(n, self.max_batch()))
-    }
-
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    /// Initial Stage over up to `max_batch` prompts. Prompts longer than
-    /// `meta.max_prompt` are an error (the L3 scheduler enforces this).
-    /// Returns per-prompt logits and the batch KV cache (device-resident).
-    pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<(Vec<Vec<f32>>, KvCache)> {
-        let n = prompts.len();
-        if n == 0 {
-            return Err(EngineError::Other("empty prefill batch".into()));
-        }
-        let b = self.variant_for(n)?;
-        let s = self.meta.max_prompt;
-        let mut tokens = vec![0i32; b * s];
-        let mut lengths = vec![1i32; b]; // padding rows: 1-token dummy
-        for (i, p) in prompts.iter().enumerate() {
-            if p.is_empty() || p.len() > s {
-                return Err(EngineError::Other(format!(
-                    "prompt {i} length {} out of range 1..={s}",
-                    p.len()
-                )));
-            }
-            tokens[i * s..i * s + p.len()].copy_from_slice(p);
-            lengths[i] = p.len() as i32;
-        }
-        let tokens_buf = self.upload_i32(&tokens, &[b, s])?;
-        let lengths_buf = self.upload_i32(&lengths, &[b])?;
-
-        let exe = &self.prefill_exe[&b];
-        let mut args: Vec<&PjRtBuffer> = vec![&tokens_buf, &lengths_buf];
-        args.extend(self.param_bufs.iter());
-        let mut outputs = exe.execute_b::<&PjRtBuffer>(&args)?;
-        let mut replica = outputs.swap_remove(0);
-        if replica.len() != 3 {
-            return Err(EngineError::Other(format!(
-                "prefill produced {} outputs, expected 3 (logits, k, v)",
-                replica.len()
-            )));
-        }
-        let v = replica.pop().unwrap();
-        let k = replica.pop().unwrap();
-        let logits_buf = replica.pop().unwrap();
-        let logits_rows = self.logits_rows(&logits_buf, b, n)?;
-        let pos = prompts.iter().map(|p| p.len() as i32).collect();
-        Ok((
-            logits_rows,
-            KvCache {
-                active: n,
-                batch: b,
-                k,
-                v,
-                pos,
-            },
-        ))
-    }
-
-    /// One Auto-regressive Stage step for every active sequence in `cache`.
-    /// `tokens[i]` is the token sampled from the previous logits of sequence
-    /// i. Advances `cache` in place; K/V never leave the device.
-    pub fn decode(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<Vec<f32>>> {
-        if tokens.len() != cache.active {
-            return Err(EngineError::Other(format!(
-                "decode got {} tokens for {} active sequences",
-                tokens.len(),
-                cache.active
-            )));
-        }
-        let b = cache.batch;
-        if cache.pos.iter().any(|&p| p as usize >= self.meta.max_seq) {
-            return Err(EngineError::Other(
-                "KV cache exhausted (sequence reached max_seq)".into(),
-            ));
-        }
-        let mut tok = vec![0i32; b];
-        tok[..tokens.len()].copy_from_slice(tokens);
-        let mut pos = vec![0i32; b];
-        pos[..cache.pos.len()].copy_from_slice(&cache.pos);
-        let tok_buf = self.upload_i32(&tok, &[b])?;
-        let pos_buf = self.upload_i32(&pos, &[b])?;
-
-        let exe = &self.decode_exe[&b];
-        let mut args: Vec<&PjRtBuffer> = vec![&tok_buf, &pos_buf, &cache.k, &cache.v];
-        args.extend(self.param_bufs.iter());
-        let mut outputs = exe.execute_b::<&PjRtBuffer>(&args)?;
-        let mut replica = outputs.swap_remove(0);
-        if replica.len() != 3 {
-            return Err(EngineError::Other(format!(
-                "decode produced {} outputs, expected 3 (logits, k, v)",
-                replica.len()
-            )));
-        }
-        let v = replica.pop().unwrap();
-        let k = replica.pop().unwrap();
-        let logits_buf = replica.pop().unwrap();
-        cache.k = k;
-        cache.v = v;
-        for p in cache.pos.iter_mut() {
-            *p += 1;
-        }
-        self.logits_rows(&logits_buf, b, cache.active)
-    }
-
-    /// Greedy generation: prefill + `steps` decode iterations, stopping a
-    /// sequence early when it emits `eos` (if provided). Returns the
-    /// generated tokens per prompt.
-    pub fn generate_greedy(
-        &self,
-        prompts: &[Vec<i32>],
-        steps: usize,
-        eos: Option<i32>,
-    ) -> Result<Vec<Vec<i32>>> {
-        let (logits, mut cache) = self.prefill(prompts)?;
-        let n = prompts.len();
-        let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
-        let mut done = vec![false; n];
-        let mut next: Vec<i32> = logits.iter().map(|row| argmax(row)).collect();
-        for _ in 0..steps {
-            for i in 0..n {
-                if !done[i] {
-                    out[i].push(next[i]);
-                    if Some(next[i]) == eos {
-                        done[i] = true;
-                    }
-                }
-            }
-            if done.iter().all(|&d| d) {
-                break;
-            }
-            let logits = self.decode(&next, &mut cache)?;
-            next = logits.iter().map(|row| argmax(row)).collect();
-        }
-        Ok(out)
-    }
-
-    /// Read the first `n` rows of a [b, vocab] logits buffer back to host.
-    fn logits_rows(&self, logits: &PjRtBuffer, b: usize, n: usize) -> Result<Vec<Vec<f32>>> {
-        let vocab = self.meta.vocab;
-        let lit: Literal = logits.to_literal_sync()?;
-        let flat = lit.to_vec::<f32>()?;
-        if flat.len() != b * vocab {
-            return Err(EngineError::Other(format!(
-                "logits size {} != {}x{}",
-                flat.len(),
-                b,
-                vocab
-            )));
-        }
-        Ok((0..n)
-            .map(|i| flat[i * vocab..(i + 1) * vocab].to_vec())
-            .collect())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
+impl std::error::Error for EngineError {}
 
 /// Index of the maximum element (first on ties).
 pub fn argmax(xs: &[f32]) -> i32 {
@@ -303,5 +63,12 @@ mod tests {
         assert_eq!(argmax(&[5.0]), 0);
         assert_eq!(argmax(&[2.0, 2.0]), 0); // first on ties
         assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn error_display() {
+        let e = EngineError::BatchTooLarge(5, 4);
+        assert!(e.to_string().contains('5') && e.to_string().contains('4'));
+        assert!(EngineError::Artifact("x".into()).to_string().contains("artifact"));
     }
 }

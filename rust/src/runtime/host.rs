@@ -1,0 +1,576 @@
+//! Pure-Rust CPU engine (default backend): executes the tiny transformer
+//! directly from the ELLM weight container, mirroring the model semantics of
+//! `python/compile/model.py` layer for layer — embedding lookup, LN-free
+//! decoder layers (causal attention + ReLU FFN, both with residuals), tied
+//! output embeddings with the manifest's `logit_scale`.
+//!
+//! Each sequence is computed independently (the mathematical result of the
+//! padded batched graphs is identical, because padding rows never leak into
+//! valid rows), which makes batch-variant invariance hold by construction.
+//! The model is ~3.4 M parameters, so naive f32 matmuls serve sub-second
+//! epochs comfortably on a CPU; this backend exists so the whole serving
+//! stack — scheduler, driver, epoch server — runs end-to-end with zero
+//! external crates. Enable the `pjrt` feature for the XLA-compiled path.
+
+use crate::runtime::artifact::{load_weights, Meta, Tensor};
+use crate::runtime::engine::{argmax, EngineError};
+use std::path::Path;
+
+type Result<T> = std::result::Result<T, EngineError>;
+
+/// The KV cache of one in-flight batch. `k[layer][seq]` is a
+/// `[max_seq, d_model]` row-major slab; slot `t` holds the head-concatenated
+/// K (resp. V) vector of position `t`.
+pub struct KvCache {
+    /// Number of real sequences in the batch.
+    pub active: usize,
+    /// Loaded batch variant this cache is shaped for.
+    pub batch: usize,
+    /// Per-sequence next write position (= current length).
+    pub pos: Vec<i32>,
+    k: Vec<Vec<Vec<f32>>>,
+    v: Vec<Vec<Vec<f32>>>,
+}
+
+impl KvCache {
+    fn new(layers: usize, active: usize, batch: usize, max_seq: usize, d_model: usize) -> Self {
+        let slab = || {
+            (0..active)
+                .map(|_| vec![0f32; max_seq * d_model])
+                .collect::<Vec<_>>()
+        };
+        KvCache {
+            active,
+            batch,
+            pos: vec![0; active],
+            k: (0..layers).map(|_| slab()).collect(),
+            v: (0..layers).map(|_| slab()).collect(),
+        }
+    }
+
+    /// Write one position's K/V vectors for (layer, seq, slot).
+    fn write_slot(&mut self, layer: usize, seq: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let dm = k.len();
+        self.k[layer][seq][slot * dm..(slot + 1) * dm].copy_from_slice(k);
+        self.v[layer][seq][slot * dm..(slot + 1) * dm].copy_from_slice(v);
+    }
+}
+
+/// The weight-loaded model, ready to serve (CPU, std-only).
+pub struct Engine {
+    pub meta: Meta,
+    pub quant_label: String,
+    /// Tensors in canonical parameter order: `embed`, then per layer
+    /// `wq, wk, wv, wo, w1, w2`.
+    params: Vec<Tensor>,
+    /// Loaded batch variants (sorted ascending).
+    variants: Vec<usize>,
+}
+
+impl Engine {
+    /// Load the manifest and one weight variant for every declared batch
+    /// variant.
+    pub fn load(artifact_dir: &Path, quant_label: &str) -> Result<Engine> {
+        let meta = Meta::load(artifact_dir).map_err(EngineError::Artifact)?;
+        let variants = meta.batch_variants.clone();
+        Self::load_with_variants(artifact_dir, quant_label, &variants)
+    }
+
+    /// Load with a subset of batch variants (API parity with the PJRT
+    /// backend, where each variant costs a compilation; here the list only
+    /// bounds `max_batch`).
+    pub fn load_with_variants(
+        artifact_dir: &Path,
+        quant_label: &str,
+        variants: &[usize],
+    ) -> Result<Engine> {
+        let meta = Meta::load(artifact_dir).map_err(EngineError::Artifact)?;
+        let weights_path = meta
+            .weights_path(quant_label)
+            .map_err(EngineError::Artifact)?;
+        let tensors = load_weights(&weights_path).map_err(EngineError::Artifact)?;
+        if tensors.len() != meta.param_order.len() {
+            return Err(EngineError::Artifact(format!(
+                "weight container has {} tensors, meta declares {}",
+                tensors.len(),
+                meta.param_order.len()
+            )));
+        }
+        // The forward pass indexes params as embed + 6 per layer; a
+        // layers/param_order mismatch must fail at load, not panic on the
+        // request path.
+        if tensors.len() != 1 + 6 * meta.layers {
+            return Err(EngineError::Artifact(format!(
+                "manifest declares {} layers (expecting {} tensors) but the \
+                 container holds {}",
+                meta.layers,
+                1 + 6 * meta.layers,
+                tensors.len()
+            )));
+        }
+        // Validate every tensor's shape against the manifest-derived layout
+        // (the forward pass trusts these shapes; a mismatch must fail here,
+        // not panic or mis-multiply on the request path).
+        for (i, t) in tensors.iter().enumerate() {
+            let expect: Vec<usize> = if i == 0 {
+                vec![meta.vocab, meta.d_model]
+            } else {
+                match (i - 1) % 6 {
+                    4 => vec![meta.d_model, meta.d_ff],  // w1
+                    5 => vec![meta.d_ff, meta.d_model],  // w2
+                    _ => vec![meta.d_model, meta.d_model], // wq/wk/wv/wo
+                }
+            };
+            if t.dims != expect {
+                return Err(EngineError::Artifact(format!(
+                    "tensor {} (`{}`) has shape {:?}, manifest implies {:?}",
+                    i, t.name, t.dims, expect
+                )));
+            }
+        }
+        let mut variants: Vec<usize> = variants.iter().copied().filter(|&b| b > 0).collect();
+        variants.sort_unstable();
+        variants.dedup();
+        if variants.is_empty() {
+            return Err(EngineError::Artifact("no batch variants requested".into()));
+        }
+        Ok(Engine {
+            meta,
+            quant_label: quant_label.to_string(),
+            params: tensors,
+            variants,
+        })
+    }
+
+    /// Largest batch the engine can run in one call.
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().copied().unwrap_or(0)
+    }
+
+    /// Smallest loaded variant that fits `n` sequences.
+    fn variant_for(&self, n: usize) -> Result<usize> {
+        self.variants
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or(EngineError::BatchTooLarge(n, self.max_batch()))
+    }
+
+    pub fn platform(&self) -> String {
+        "host-cpu".to_string()
+    }
+
+    fn layer_weights(&self, l: usize) -> [&Tensor; 6] {
+        let base = 1 + 6 * l;
+        [
+            &self.params[base],
+            &self.params[base + 1],
+            &self.params[base + 2],
+            &self.params[base + 3],
+            &self.params[base + 4],
+            &self.params[base + 5],
+        ]
+    }
+
+    fn embed_row(&self, token: i32) -> &[f32] {
+        let dm = self.meta.d_model;
+        // Out-of-range ids clamp, matching XLA gather semantics.
+        let id = (token.max(0) as usize).min(self.meta.vocab - 1);
+        &self.params[0].data[id * dm..(id + 1) * dm]
+    }
+
+    /// Tied-embedding logits for one hidden state: `x @ embed.T * scale`.
+    fn logits_for(&self, x: &[f32]) -> Vec<f32> {
+        let dm = self.meta.d_model;
+        let scale = self.meta.logit_scale as f32;
+        let embed = &self.params[0].data;
+        (0..self.meta.vocab)
+            .map(|t| dot(x, &embed[t * dm..(t + 1) * dm]) * scale)
+            .collect()
+    }
+
+    /// Initial Stage over up to `max_batch` prompts. Returns per-prompt
+    /// last-position logits and the batch KV cache.
+    pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<(Vec<Vec<f32>>, KvCache)> {
+        let n = prompts.len();
+        if n == 0 {
+            return Err(EngineError::Other("empty prefill batch".into()));
+        }
+        let b = self.variant_for(n)?;
+        let s_max = self.meta.max_prompt;
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > s_max {
+                return Err(EngineError::Other(format!(
+                    "prompt {i} length {} out of range 1..={s_max}",
+                    p.len()
+                )));
+            }
+        }
+        let mut cache = KvCache::new(self.meta.layers, n, b, self.meta.max_seq, self.meta.d_model);
+        let mut logits = Vec::with_capacity(n);
+        for (i, p) in prompts.iter().enumerate() {
+            logits.push(self.prefill_one(i, p, &mut cache));
+        }
+        cache.pos = prompts.iter().map(|p| p.len() as i32).collect();
+        Ok((logits, cache))
+    }
+
+    fn prefill_one(&self, seq: usize, prompt: &[i32], cache: &mut KvCache) -> Vec<f32> {
+        let dm = self.meta.d_model;
+        let df = self.meta.d_ff;
+        let s = prompt.len();
+        let mut x = vec![0f32; s * dm];
+        for (t, &tok) in prompt.iter().enumerate() {
+            x[t * dm..(t + 1) * dm].copy_from_slice(self.embed_row(tok));
+        }
+        for l in 0..self.meta.layers {
+            let [wq, wk, wv, wo, w1, w2] = self.layer_weights(l);
+            let q = matmul(&x, s, dm, &wq.data, dm);
+            let k = matmul(&x, s, dm, &wk.data, dm);
+            let v = matmul(&x, s, dm, &wv.data, dm);
+            let att = causal_attention(&q, &k, &v, s, self.meta.n_heads, self.meta.d_head);
+            let mut x_out = matmul(&att, s, dm, &wo.data, dm);
+            add_assign(&mut x_out, &x);
+            let mut h = matmul(&x_out, s, dm, &w1.data, df);
+            relu(&mut h);
+            let mut x_next = matmul(&h, s, df, &w2.data, dm);
+            add_assign(&mut x_next, &x_out);
+            x = x_next;
+            for t in 0..s {
+                cache.write_slot(l, seq, t, &k[t * dm..(t + 1) * dm], &v[t * dm..(t + 1) * dm]);
+            }
+        }
+        self.logits_for(&x[(s - 1) * dm..s * dm])
+    }
+
+    /// One Auto-regressive Stage step for every active sequence in `cache`.
+    pub fn decode(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != cache.active {
+            return Err(EngineError::Other(format!(
+                "decode got {} tokens for {} active sequences",
+                tokens.len(),
+                cache.active
+            )));
+        }
+        if cache.pos.iter().any(|&p| p as usize >= self.meta.max_seq) {
+            return Err(EngineError::Other(
+                "KV cache exhausted (sequence reached max_seq)".into(),
+            ));
+        }
+        let mut logits = Vec::with_capacity(cache.active);
+        for (i, &tok) in tokens.iter().enumerate() {
+            logits.push(self.decode_one(i, tok, cache));
+        }
+        for p in cache.pos.iter_mut() {
+            *p += 1;
+        }
+        Ok(logits)
+    }
+
+    fn decode_one(&self, seq: usize, token: i32, cache: &mut KvCache) -> Vec<f32> {
+        let dm = self.meta.d_model;
+        let df = self.meta.d_ff;
+        let nh = self.meta.n_heads;
+        let dh = self.meta.d_head;
+        let pos = cache.pos[seq] as usize;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut x = self.embed_row(token).to_vec();
+        for l in 0..self.meta.layers {
+            let [wq, wk, wv, wo, w1, w2] = self.layer_weights(l);
+            let q = matmul(&x, 1, dm, &wq.data, dm);
+            let k_new = matmul(&x, 1, dm, &wk.data, dm);
+            let v_new = matmul(&x, 1, dm, &wv.data, dm);
+            cache.write_slot(l, seq, pos, &k_new, &v_new);
+            // Attend to cache slots 0..=pos, head by head.
+            let kc = &cache.k[l][seq];
+            let vc = &cache.v[l][seq];
+            let mut att = vec![0f32; dm];
+            for h in 0..nh {
+                let off = h * dh;
+                let qh = &q[off..off + dh];
+                let mut scores = Vec::with_capacity(pos + 1);
+                let mut m = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let sc = dot(qh, &kc[j * dm + off..j * dm + off + dh]) * scale;
+                    if sc > m {
+                        m = sc;
+                    }
+                    scores.push(sc);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - m).exp();
+                    denom += *sc;
+                }
+                for (j, &w) in scores.iter().enumerate() {
+                    let vr = &vc[j * dm + off..j * dm + off + dh];
+                    let w = w / denom;
+                    for (o, &vv) in att[off..off + dh].iter_mut().zip(vr.iter()) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            let mut x_out = matmul(&att, 1, dm, &wo.data, dm);
+            add_assign(&mut x_out, &x);
+            let mut hid = matmul(&x_out, 1, dm, &w1.data, df);
+            relu(&mut hid);
+            let mut x_next = matmul(&hid, 1, df, &w2.data, dm);
+            add_assign(&mut x_next, &x_out);
+            x = x_next;
+        }
+        self.logits_for(&x)
+    }
+
+    /// Greedy generation: prefill + `steps` decode iterations, stopping a
+    /// sequence early when it emits `eos` (if provided).
+    pub fn generate_greedy(
+        &self,
+        prompts: &[Vec<i32>],
+        steps: usize,
+        eos: Option<i32>,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (logits, mut cache) = self.prefill(prompts)?;
+        let n = prompts.len();
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut done = vec![false; n];
+        let mut next: Vec<i32> = logits.iter().map(|row| argmax(row)).collect();
+        for _ in 0..steps {
+            for i in 0..n {
+                if !done[i] {
+                    out[i].push(next[i]);
+                    if Some(next[i]) == eos {
+                        done[i] = true;
+                    }
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let logits = self.decode(&next, &mut cache)?;
+            next = logits.iter().map(|row| argmax(row)).collect();
+        }
+        Ok(out)
+    }
+}
+
+/// Row-major `[m, k] @ [k, n]` with k-ascending accumulation (the same
+/// reduction order as a per-element dot product).
+fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+fn add_assign(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x += y;
+    }
+}
+
+fn relu(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Masked causal attention over a whole prompt (Initial Stage), matching
+/// `attention_prefill_ref` in python/compile/kernels/ref.py.
+fn causal_attention(q: &[f32], k: &[f32], v: &[f32], s: usize, nh: usize, dh: usize) -> Vec<f32> {
+    let dm = nh * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; s * dm];
+    for h in 0..nh {
+        let off = h * dh;
+        for i in 0..s {
+            let qi = &q[i * dm + off..i * dm + off + dh];
+            let mut scores = Vec::with_capacity(i + 1);
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let sc = dot(qi, &k[j * dm + off..j * dm + off + dh]) * scale;
+                if sc > m {
+                    m = sc;
+                }
+                scores.push(sc);
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - m).exp();
+                denom += *sc;
+            }
+            let orow = &mut out[i * dm + off..i * dm + off + dh];
+            for (j, &w) in scores.iter().enumerate() {
+                let vr = &v[j * dm + off..j * dm + off + dh];
+                let w = w / denom;
+                for (o, &vv) in orow.iter_mut().zip(vr.iter()) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    /// Build a tiny deterministic in-memory engine (no artifacts on disk).
+    fn tiny_engine() -> Engine {
+        let (vocab, layers, dm, nh, dh, df) = (32usize, 2usize, 16usize, 2usize, 8usize, 32usize);
+        let meta = Meta {
+            model_name: "tiny-test".into(),
+            vocab,
+            layers,
+            d_model: dm,
+            n_heads: nh,
+            d_head: dh,
+            d_ff: df,
+            max_prompt: 8,
+            max_seq: 16,
+            logit_scale: 8.0,
+            batch_variants: vec![1, 2, 4],
+            param_order: Vec::new(),
+            programs: Vec::new(),
+            weights: BTreeMap::new(),
+            dir: PathBuf::new(),
+        };
+        let mut rng = Rng::new(0xE2E);
+        let mut tensor = |name: &str, dims: Vec<usize>, scale: f64| {
+            let n: usize = dims.iter().product();
+            Tensor {
+                name: name.into(),
+                dims,
+                data: (0..n)
+                    .map(|_| (rng.gaussian() * scale) as f32)
+                    .collect(),
+            }
+        };
+        let mut params = vec![tensor("embed", vec![vocab, dm], 0.25)];
+        for l in 0..layers {
+            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                let dims = match w {
+                    "w1" => vec![dm, df],
+                    "w2" => vec![df, dm],
+                    _ => vec![dm, dm],
+                };
+                params.push(tensor(&format!("layer{l}.{w}"), dims, 0.25));
+            }
+        }
+        Engine {
+            meta,
+            quant_label: "W16A16".into(),
+            params,
+            variants: vec![1, 2, 4],
+        }
+    }
+
+    #[test]
+    fn prefill_shapes_and_determinism() {
+        let e = tiny_engine();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5, 6, 7]];
+        let (l1, c1) = e.prefill(&prompts).unwrap();
+        let (l2, _c2) = e.prefill(&prompts).unwrap();
+        assert_eq!(l1.len(), 2);
+        assert_eq!(l1[0].len(), e.meta.vocab);
+        assert_eq!(l1, l2, "prefill must be deterministic");
+        assert_eq!(c1.active, 2);
+        assert_eq!(c1.pos, vec![3, 4]);
+        assert!(l1[0].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn batch_invariance() {
+        let e = tiny_engine();
+        let solo = e.generate_greedy(&[vec![3, 1, 4]], 5, None).unwrap();
+        let batched = e
+            .generate_greedy(&[vec![3, 1, 4], vec![9, 9], vec![2; 6]], 5, None)
+            .unwrap();
+        assert_eq!(solo[0], batched[0], "co-batched prompts must not leak");
+        assert!(batched.iter().all(|g| g.len() == 5));
+        assert!(batched
+            .iter()
+            .all(|g| g.iter().all(|&t| (0..e.meta.vocab as i32).contains(&t))));
+    }
+
+    #[test]
+    fn decode_advances_and_cache_exhausts() {
+        let e = tiny_engine();
+        let (logits, mut cache) = e.prefill(&[vec![1; e.meta.max_prompt]]).unwrap();
+        let mut next = vec![argmax(&logits[0])];
+        let budget = e.meta.max_seq - e.meta.max_prompt;
+        for _ in 0..budget {
+            let l = e.decode(&next, &mut cache).unwrap();
+            next = vec![argmax(&l[0])];
+        }
+        assert!(e.decode(&next, &mut cache).is_err(), "cache must exhaust");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let e = tiny_engine();
+        assert!(e.prefill(&[]).is_err());
+        assert!(e.prefill(&[vec![]]).is_err());
+        assert!(e.prefill(&[vec![1; e.meta.max_prompt + 1]]).is_err());
+        let too_many: Vec<Vec<i32>> = (0..e.max_batch() + 1).map(|_| vec![1]).collect();
+        assert!(matches!(
+            e.prefill(&too_many),
+            Err(EngineError::BatchTooLarge(5, 4))
+        ));
+        let (_, mut cache) = e.prefill(&[vec![1, 2]]).unwrap();
+        assert!(e.decode(&[1, 2], &mut cache).is_err(), "token count mismatch");
+    }
+
+    #[test]
+    fn out_of_vocab_tokens_clamp() {
+        let e = tiny_engine();
+        let a = e.prefill(&[vec![e.meta.vocab as i32 + 100]]).unwrap().0;
+        let b = e.prefill(&[vec![e.meta.vocab as i32 - 1]]).unwrap().0;
+        assert_eq!(a, b, "ids past the vocabulary clamp to the last row");
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        // [2,3] @ [3,2]
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let out = matmul(&x, 2, 3, &w, 2);
+        assert_eq!(out, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // With q = 0, attention weights are uniform over visible slots, so
+        // row i equals the mean of v[0..=i] per head.
+        let (s, nh, dh) = (3usize, 1usize, 4usize);
+        let dm = nh * dh;
+        let q = vec![0f32; s * dm];
+        let k: Vec<f32> = (0..s * dm).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..s * dm).map(|i| (i % 7) as f32).collect();
+        let out = causal_attention(&q, &k, &v, s, nh, dh);
+        for d in 0..dm {
+            let mean01 = (v[d] + v[dm + d]) / 2.0;
+            assert!((out[dm + d] - mean01).abs() < 1e-5);
+            assert!((out[d] - v[d]).abs() < 1e-6, "first row attends to itself only");
+        }
+    }
+}

@@ -1,10 +1,26 @@
-//! The PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
-//! python/compile/aot.py) and executes prefill/decode on the request path.
-//! Adapted from /opt/xla-example/load_hlo — HLO text is the interchange
-//! format (see aot.py for why).
+//! The inference runtime: loads the artifact contract produced by
+//! `python/compile/aot.py` (manifest, weight containers, AOT-lowered HLO)
+//! and executes prefill/decode on the request path.
+//!
+//! Two interchangeable engines implement the same API:
+//!
+//! - **host** (default): a pure-Rust CPU engine executing the tiny
+//!   transformer straight from the weight container — zero external crates.
+//! - **pjrt** (feature `"pjrt"`): PJRT execution of the AOT HLO programs via
+//!   the `xla` crate (adapted from /opt/xla-example/load_hlo — HLO text is
+//!   the interchange format, see aot.py for why). Requires adding the `xla`
+//!   dependency; see README.md §Runtime backends.
 
 pub mod artifact;
 pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+pub mod host;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{artifacts_available, load_weights, Meta};
-pub use engine::{argmax, Engine, EngineError, KvCache};
+pub use engine::{argmax, EngineError};
+#[cfg(not(feature = "pjrt"))]
+pub use host::{Engine, KvCache};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, KvCache};

@@ -1,6 +1,11 @@
 //! The serving layer: a real epoch-batched LLM server in the paper's Fig. 2
-//! protocol, composing the L3 scheduler (DFTSP or a baseline) with the PJRT
+//! protocol, composing the L3 scheduler (DFTSP or a baseline) with the
 //! runtime engine. Python is never on this path.
+//!
+//! The epoch loop itself is `driver::EpochDriver` — the same core the
+//! simulator runs — driven here by a wall clock and an engine-execution
+//! backend; this module adds the client-facing pieces (mpsc ingress, reply
+//! channels, TCP front-end).
 //!
 //! Threading model: PJRT handles are not `Send`, so the engine and the epoch
 //! loop live on the thread that created them; clients submit requests

@@ -1,14 +1,23 @@
-//! Epoch-batched serving loop over the PJRT engine.
+//! Epoch-batched serving loop over the runtime engine.
+//!
+//! Since PR 1 the Fig. 2 protocol itself lives in
+//! [`crate::driver::EpochDriver`]; this module contributes the *live*
+//! ingredients — a [`WallClock`] that sleeps to epoch boundaries, the
+//! [`EngineBackend`] that runs real prefill/decode and answers client reply
+//! channels, and the mpsc ingress with engine-shape validation.
 
 use crate::cluster::{ClusterSpec, GpuSpec};
-use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
+use crate::coordinator::{Schedule, Scheduler};
+use crate::driver::{
+    run_epochs, Clock, DriverPolicy, EpochContext, EpochDriver, ExecutionBackend,
+    InstanceTemplate, QueuedRequest, RejectReason, SPadPolicy, StalePolicy, WallClock,
+};
 use crate::metrics::{Metrics, Outcome};
 use crate::model::{CostModel, LlmSpec};
-use crate::quant::QuantSpec;
-use crate::request::{EpochRequest, Request};
+use crate::request::Request;
 use crate::runtime::{argmax, Engine};
 use crate::util::rng::Rng;
-use crate::wireless::{ChannelParams, RadioParams};
+use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
 
@@ -52,8 +61,8 @@ pub struct ServeResponse {
 /// Server configuration.
 pub struct ServerConfig {
     /// Epoch protocol. The tiny model serves sub-second epochs comfortably.
-    pub epoch: EpochParams,
-    pub quant: QuantSpec,
+    pub epoch: crate::coordinator::EpochParams,
+    pub quant: crate::quant::QuantSpec,
     pub radio: RadioParams,
     pub channel: ChannelParams,
     /// Requests older than this many epochs are rejected.
@@ -64,7 +73,7 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
-            epoch: EpochParams {
+            epoch: crate::coordinator::EpochParams {
                 duration: 0.5,
                 t_u: 0.05,
                 t_d: 0.05,
@@ -78,26 +87,176 @@ impl Default for ServerConfig {
     }
 }
 
+/// Live payload carried through the driver queue: the prompt tokens, the
+/// client's reply channel, and the submission instant for wall-clock
+/// latency accounting.
 struct Pending {
-    req: Request,
     prompt: Vec<i32>,
     respond: Sender<ServeResponse>,
     submitted: Instant,
 }
 
-/// The epoch server. Owns the engine; runs on the creating thread.
-pub struct EpochServer {
+/// Real-engine execution backend: runs the scheduled batch through
+/// prefill/decode in chunks of at most `max_batch`, records wall-clock
+/// outcomes, and answers every reply channel (scheduled or rejected).
+struct EngineBackend {
     engine: Engine,
-    config: ServerConfig,
+}
+
+impl EngineBackend {
+    fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn respond_rejected(p: &QueuedRequest<Pending>, epoch: Option<u64>) {
+        let _ = p.payload.respond.send(ServeResponse {
+            outcome: ServeOutcome::Rejected,
+            tokens: vec![],
+            latency: p.payload.submitted.elapsed().as_secs_f64(),
+            epoch,
+        });
+    }
+
+    fn run_batch(
+        &mut self,
+        chunk: &[QueuedRequest<Pending>],
+        epoch_idx: u64,
+        metrics: &mut Metrics,
+    ) -> Result<(), crate::runtime::EngineError> {
+        let prompts: Vec<Vec<i32>> = chunk.iter().map(|p| p.payload.prompt.clone()).collect();
+        let max_steps = chunk
+            .iter()
+            .map(|p| p.req.output_tokens as usize)
+            .max()
+            .unwrap_or(1);
+        let (logits, mut cache) = self.engine.prefill(&prompts)?;
+        let n = prompts.len();
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut next: Vec<i32> = logits.iter().map(|r| argmax(r)).collect();
+        for step in 0..max_steps {
+            for i in 0..n {
+                if (chunk[i].req.output_tokens as usize) > step {
+                    outs[i].push(next[i]);
+                }
+            }
+            if step + 1 == max_steps {
+                break;
+            }
+            let logits = self.engine.decode(&next, &mut cache)?;
+            next = logits.iter().map(|r| argmax(r)).collect();
+        }
+        for (i, p) in chunk.iter().enumerate() {
+            let latency = p.payload.submitted.elapsed().as_secs_f64();
+            let in_deadline = latency <= p.req.latency_req;
+            metrics.record_outcome(
+                if in_deadline {
+                    Outcome::CompletedInDeadline
+                } else {
+                    Outcome::CompletedLate
+                },
+                latency,
+            );
+            let _ = p.payload.respond.send(ServeResponse {
+                outcome: if in_deadline {
+                    ServeOutcome::Completed
+                } else {
+                    ServeOutcome::CompletedLate
+                },
+                tokens: outs[i].clone(),
+                latency,
+                epoch: Some(epoch_idx),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl ExecutionBackend for EngineBackend {
+    type Payload = Pending;
+
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        _schedule: &Schedule,
+        batch: Vec<QueuedRequest<Pending>>,
+        metrics: &mut Metrics,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        let max_batch = self.engine.max_batch().max(1);
+        let chunks = chunk_for_decode(batch, max_batch, self.engine.meta.max_seq);
+        for chunk in &chunks {
+            if let Err(e) = self.run_batch(chunk, ctx.epoch_idx, metrics) {
+                for p in chunk {
+                    Self::respond_rejected(p, Some(ctx.epoch_idx));
+                    metrics.record_outcome(Outcome::Dropped, 0.0);
+                }
+                eprintln!("batch execution failed: {e}");
+            }
+        }
+    }
+
+    fn reject(
+        &mut self,
+        entry: QueuedRequest<Pending>,
+        _reason: RejectReason,
+        metrics: &mut Metrics,
+    ) {
+        metrics.record_outcome(Outcome::Dropped, 0.0);
+        Self::respond_rejected(&entry, None);
+    }
+}
+
+/// Group scheduled requests into engine chunks. Batched decode advances
+/// *every* sequence in the chunk to the longest member's output length, so
+/// besides the `max_batch` cap, every member's KV headroom
+/// (`max_seq − prompt_len`) must cover the chunk-wide decode depth —
+/// otherwise a near-max-prompt request exhausts its cache mid-decode and
+/// fails the whole chunk. First-fit over all open chunks (an incompatible
+/// request in the middle of the batch must not fragment everything after
+/// it); a lone request always fits, because ingress validation guarantees
+/// `prompt + output ≤ max_seq`.
+fn chunk_for_decode(
+    batch: Vec<QueuedRequest<Pending>>,
+    max_batch: usize,
+    max_seq: usize,
+) -> Vec<Vec<QueuedRequest<Pending>>> {
+    let mut chunks: Vec<Vec<QueuedRequest<Pending>>> = Vec::new();
+    for p in batch {
+        let headroom = max_seq.saturating_sub(p.payload.prompt.len());
+        let out = p.req.output_tokens as usize;
+        let fits = |c: &Vec<QueuedRequest<Pending>>| {
+            if c.len() >= max_batch {
+                return false;
+            }
+            let depth = c
+                .iter()
+                .map(|q| q.req.output_tokens as usize)
+                .max()
+                .unwrap_or(0)
+                .max(out);
+            headroom >= depth
+                && c.iter()
+                    .all(|q| max_seq.saturating_sub(q.payload.prompt.len()) >= depth)
+        };
+        match chunks.iter().position(fits) {
+            Some(i) => chunks[i].push(p),
+            None => chunks.push(vec![p]),
+        }
+    }
+    chunks
+}
+
+/// The epoch server. Owns the engine (via its backend); runs on the
+/// creating thread.
+pub struct EpochServer {
+    driver: EpochDriver<Pending>,
+    backend: EngineBackend,
     scheduler: Box<dyn Scheduler>,
-    inst_template: (CostModel, ClusterSpec),
     ingress_tx: Sender<ServeRequest>,
     ingress_rx: Receiver<ServeRequest>,
-    queue: Vec<Pending>,
     next_id: u64,
-    rng: Rng,
-    pub metrics: Metrics,
-    epoch_idx: u64,
 }
 
 impl EpochServer {
@@ -149,19 +308,32 @@ impl EpochServer {
             },
             1,
         );
+        let driver = EpochDriver::new(
+            InstanceTemplate {
+                cost,
+                quant: config.quant.clone(),
+                cluster,
+                epoch: config.epoch.clone(),
+            },
+            DriverPolicy {
+                stale: StalePolicy::MaxWait(
+                    config.max_wait_epochs as f64 * config.epoch.duration,
+                ),
+                s_pad: SPadPolicy::Fixed(engine.meta.max_prompt as u32),
+                allocation: AllocationPolicy::MinOnly,
+            },
+            config.radio.clone(),
+            config.channel.clone(),
+            Rng::new(config.seed),
+        );
         let (tx, rx) = channel();
         EpochServer {
-            engine,
-            config,
+            driver,
+            backend: EngineBackend { engine },
             scheduler,
-            inst_template: (cost, cluster),
             ingress_tx: tx,
             ingress_rx: rx,
-            queue: Vec::new(),
             next_id: 0,
-            rng: Rng::new(7),
-            metrics: Metrics::new(),
-            epoch_idx: 0,
         }
     }
 
@@ -184,21 +356,34 @@ impl EpochServer {
         self.ingress_tx.clone()
     }
 
-    /// Drain newly-submitted requests into the queue (non-blocking).
-    fn drain_ingress(&mut self, now: f64) {
+    /// Run metrics so far (offered/served counters, latency, search effort).
+    pub fn metrics(&self) -> &Metrics {
+        &self.driver.metrics
+    }
+
+    /// Drain newly-submitted requests into the driver queue (non-blocking).
+    /// Shape validation against the engine happens here — before a request
+    /// ever reaches the scheduler.
+    fn drain_ingress(
+        driver: &mut EpochDriver<Pending>,
+        engine: &Engine,
+        rx: &Receiver<ServeRequest>,
+        next_id: &mut u64,
+        now: f64,
+    ) {
         loop {
-            match self.ingress_rx.try_recv() {
+            match rx.try_recv() {
                 Ok(sr) => {
-                    let max_prompt = self.engine.meta.max_prompt;
+                    let max_prompt = engine.meta.max_prompt;
                     let budget =
-                        (self.engine.meta.max_seq - sr.prompt.len().min(max_prompt)) as u32;
+                        (engine.meta.max_seq - sr.prompt.len().min(max_prompt)) as u32;
                     let reject = sr.prompt.is_empty()
                         || sr.prompt.len() > max_prompt
                         || sr.output_tokens == 0
                         || sr.output_tokens > budget;
                     if reject {
-                        self.metrics.record_offered(1);
-                        self.metrics.record_outcome(Outcome::Dropped, 0.0);
+                        driver.metrics.record_offered(1);
+                        driver.metrics.record_outcome(Outcome::Dropped, 0.0);
                         let _ = sr.respond.send(ServeResponse {
                             outcome: ServeOutcome::Rejected,
                             tokens: vec![],
@@ -208,21 +393,22 @@ impl EpochServer {
                         continue;
                     }
                     let req = Request {
-                        id: self.next_id,
+                        id: *next_id,
                         arrival: now,
                         prompt_tokens: sr.prompt.len() as u32,
                         output_tokens: sr.output_tokens,
                         latency_req: sr.latency_req,
                         accuracy_req: sr.accuracy_req,
                     };
-                    self.next_id += 1;
-                    self.metrics.record_offered(1);
-                    self.queue.push(Pending {
+                    *next_id += 1;
+                    driver.offer(
                         req,
-                        prompt: sr.prompt,
-                        respond: sr.respond,
-                        submitted: Instant::now(),
-                    });
+                        Pending {
+                            prompt: sr.prompt,
+                            respond: sr.respond,
+                            submitted: Instant::now(),
+                        },
+                    );
                 }
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
@@ -230,207 +416,109 @@ impl EpochServer {
     }
 
     /// Run `epochs` epochs of the Fig. 2 protocol, real time. Returns when
-    /// done; metrics accumulate in `self.metrics`.
+    /// done; metrics accumulate and are readable via [`Self::metrics`].
     pub fn run_for(&mut self, epochs: u64) {
-        let start = Instant::now();
-        for _ in 0..epochs {
-            let epoch_start = start.elapsed().as_secs_f64();
-            self.drain_ingress(epoch_start);
-            self.step_epoch(epoch_start);
-            self.epoch_idx += 1;
-            // Sleep until the next epoch boundary.
-            let next = (self.epoch_idx) as f64 * self.config.epoch.duration;
-            let now = start.elapsed().as_secs_f64();
-            if next > now {
-                std::thread::sleep(std::time::Duration::from_secs_f64(next - now));
-            }
+        let duration = self.driver.epoch_duration();
+        let mut clock = WallClock::start();
+        {
+            let driver = &mut self.driver;
+            let backend = &mut self.backend;
+            let scheduler = self.scheduler.as_mut();
+            let rx = &self.ingress_rx;
+            let next_id = &mut self.next_id;
+            run_epochs(driver, scheduler, backend, &mut clock, epochs, |d, b, now| {
+                Self::drain_ingress(d, b.engine(), rx, next_id, now);
+            });
         }
-        self.metrics.horizon = start.elapsed().as_secs_f64();
+        // Hold the line until the final epoch boundary so the advertised
+        // horizon covers exactly `epochs` epochs of wall time.
+        clock.wait_until(epochs as f64 * duration);
+        let end = clock.now();
         // Shutdown: reject whatever is still queued (and anything that
         // arrived after the last boundary) so clients waiting on their reply
         // channels always unblock.
-        self.drain_ingress(start.elapsed().as_secs_f64());
-        for p in self.queue.drain(..) {
-            self.metrics.record_outcome(Outcome::Dropped, 0.0);
-            let _ = p.respond.send(ServeResponse {
-                outcome: ServeOutcome::Rejected,
-                tokens: vec![],
-                latency: p.submitted.elapsed().as_secs_f64(),
-                epoch: None,
-            });
-        }
-    }
-
-    /// One scheduling + execution round at epoch-relative time `now`.
-    fn step_epoch(&mut self, now: f64) {
-        // Reject requests that waited too long.
-        let max_wait =
-            self.config.max_wait_epochs as f64 * self.config.epoch.duration;
-        let mut keep = Vec::new();
-        for p in self.queue.drain(..) {
-            if p.req.waited(now) > max_wait {
-                self.metrics.record_outcome(Outcome::Dropped, 0.0);
-                let _ = p.respond.send(ServeResponse {
-                    outcome: ServeOutcome::Rejected,
-                    tokens: vec![],
-                    latency: p.submitted.elapsed().as_secs_f64(),
-                    epoch: None,
-                });
-            } else {
-                keep.push(p);
-            }
-        }
-        self.queue = keep;
-        self.metrics.queue_depth.push(self.queue.len() as f64);
-        if self.queue.is_empty() {
-            return;
-        }
-
-        let (cost, cluster) = &self.inst_template;
-        let inst = ProblemInstance::new(
-            cost.clone(),
-            self.config.quant.clone(),
-            cluster.clone(),
-            self.config.epoch.clone(),
-            self.engine.meta.max_prompt as u32,
-            now,
+        Self::drain_ingress(
+            &mut self.driver,
+            self.backend.engine(),
+            &self.ingress_rx,
+            &mut self.next_id,
+            end,
         );
-        let annotated: Vec<EpochRequest> = self
-            .queue
-            .iter()
-            .map(|p| {
-                let h = self.config.channel.draw_h(&mut self.rng);
-                EpochRequest::annotate(
-                    p.req.clone(),
-                    h,
-                    &self.config.radio,
-                    self.config.epoch.t_u,
-                    self.config.epoch.t_d,
-                )
-            })
-            .collect();
+        // Counters accumulate across run_for calls, so the horizon must too
+        // — otherwise a second call would divide two runs' completions by
+        // one run's wall span and inflate throughput().
+        let horizon = self.driver.metrics.horizon + end;
+        self.driver.finish(&mut self.backend, horizon);
+    }
+}
 
-        // Reject inadmissible-by-accuracy requests outright.
-        let inadmissible: Vec<u64> = annotated
-            .iter()
-            .filter(|r| !inst.admits(r))
-            .map(|r| r.id())
-            .collect();
-        if !inadmissible.is_empty() {
-            let mut keep = Vec::new();
-            for p in self.queue.drain(..) {
-                if inadmissible.contains(&p.req.id) {
-                    self.metrics.record_outcome(Outcome::Dropped, 0.0);
-                    let _ = p.respond.send(ServeResponse {
-                        outcome: ServeOutcome::Rejected,
-                        tokens: vec![],
-                        latency: p.submitted.elapsed().as_secs_f64(),
-                        epoch: None,
-                    });
-                } else {
-                    keep.push(p);
-                }
-            }
-            self.queue = keep;
-        }
-        let annotated: Vec<EpochRequest> = annotated
-            .into_iter()
-            .filter(|r| !inadmissible.contains(&r.id()))
-            .collect();
-        if annotated.is_empty() {
-            return;
-        }
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-        let schedule = self.scheduler.schedule(&inst, &annotated);
-        self.metrics
-            .record_schedule(schedule.batch_size(), &schedule.stats);
-        if schedule.scheduled.is_empty() {
-            return;
-        }
-
-        // Pull scheduled requests out of the queue and execute them on the
-        // engine in chunks of at most max_batch.
-        let mut to_run = Vec::new();
-        let mut keep = Vec::new();
-        for p in self.queue.drain(..) {
-            if schedule.scheduled.contains(&p.req.id) {
-                to_run.push(p);
-            } else {
-                keep.push(p);
-            }
-        }
-        self.queue = keep;
-
-        let max_batch = self.engine.max_batch().max(1);
-        for chunk in to_run.chunks(max_batch) {
-            let prompts: Vec<Vec<i32>> = chunk.iter().map(|p| p.prompt.clone()).collect();
-            let steps = chunk
-                .iter()
-                .map(|p| p.req.output_tokens as usize)
-                .max()
-                .unwrap_or(1);
-            match self.run_batch(&prompts, chunk, steps) {
-                Ok(()) => {}
-                Err(e) => {
-                    for p in chunk {
-                        let _ = p.respond.send(ServeResponse {
-                            outcome: ServeOutcome::Rejected,
-                            tokens: vec![],
-                            latency: p.submitted.elapsed().as_secs_f64(),
-                            epoch: Some(self.epoch_idx),
-                        });
-                        self.metrics.record_outcome(Outcome::Dropped, 0.0);
-                    }
-                    eprintln!("batch execution failed: {e}");
-                }
-            }
+    fn pending(prompt_len: usize, output_tokens: u32, id: u64) -> QueuedRequest<Pending> {
+        let (tx, _rx) = channel();
+        QueuedRequest {
+            req: Request {
+                id,
+                arrival: 0.0,
+                prompt_tokens: prompt_len as u32,
+                output_tokens,
+                latency_req: 10.0,
+                accuracy_req: 0.0,
+            },
+            payload: Pending {
+                prompt: vec![1; prompt_len],
+                respond: tx,
+                submitted: Instant::now(),
+            },
         }
     }
 
-    fn run_batch(
-        &mut self,
-        prompts: &[Vec<i32>],
-        chunk: &[Pending],
-        max_steps: usize,
-    ) -> Result<(), crate::runtime::EngineError> {
-        let (logits, mut cache) = self.engine.prefill(prompts)?;
-        let n = prompts.len();
-        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n];
-        let mut next: Vec<i32> = logits.iter().map(|r| argmax(r)).collect();
-        for step in 0..max_steps {
-            for i in 0..n {
-                if (chunk[i].req.output_tokens as usize) > step {
-                    outs[i].push(next[i]);
-                }
-            }
-            if step + 1 == max_steps {
-                break;
-            }
-            let logits = self.engine.decode(&next, &mut cache)?;
-            next = logits.iter().map(|r| argmax(r)).collect();
-        }
-        for (i, p) in chunk.iter().enumerate() {
-            let latency = p.submitted.elapsed().as_secs_f64();
-            let in_deadline = latency <= p.req.latency_req;
-            self.metrics.record_outcome(
-                if in_deadline {
-                    Outcome::CompletedInDeadline
-                } else {
-                    Outcome::CompletedLate
-                },
-                latency,
-            );
-            let _ = p.respond.send(ServeResponse {
-                outcome: if in_deadline {
-                    ServeOutcome::Completed
-                } else {
-                    ServeOutcome::CompletedLate
-                },
-                tokens: outs[i].clone(),
-                latency,
-                epoch: Some(self.epoch_idx),
-            });
-        }
-        Ok(())
+    #[test]
+    fn chunking_respects_max_batch() {
+        let batch: Vec<_> = (0..5).map(|i| pending(4, 4, i)).collect();
+        let chunks = chunk_for_decode(batch, 2, 64);
+        assert_eq!(
+            chunks.iter().map(|c| c.len()).collect::<Vec<_>>(),
+            vec![2, 2, 1]
+        );
+    }
+
+    #[test]
+    fn chunking_splits_incompatible_kv_budgets() {
+        // max_seq 16: A (prompt 1, out 15) and B (prompt 8, out 8) are each
+        // valid alone, but batched together B's cache would be driven to
+        // A's 15-step decode depth (8 + 15 > 16). They must not share a
+        // chunk.
+        let batch = vec![pending(1, 15, 0), pending(8, 8, 1)];
+        let chunks = chunk_for_decode(batch, 4, 16);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0][0].req.id, 0);
+        assert_eq!(chunks[1][0].req.id, 1);
+    }
+
+    #[test]
+    fn chunking_is_first_fit_not_last_fit() {
+        // An incompatible request in the middle must not fragment later
+        // compatible ones: C joins A's chunk even though B opened a newer
+        // chunk in between.
+        let batch = vec![pending(1, 15, 0), pending(8, 8, 1), pending(1, 15, 2)];
+        let chunks = chunk_for_decode(batch, 4, 16);
+        assert_eq!(chunks.len(), 2);
+        let ids: Vec<Vec<u64>> = chunks
+            .iter()
+            .map(|c| c.iter().map(|q| q.req.id).collect())
+            .collect();
+        assert_eq!(ids, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn chunking_groups_compatible_requests() {
+        // Everyone has headroom >= the chunk-wide depth: one chunk.
+        let batch = vec![pending(4, 8, 0), pending(2, 6, 1), pending(8, 4, 2)];
+        let chunks = chunk_for_decode(batch, 4, 64);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 3);
     }
 }

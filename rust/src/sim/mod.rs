@@ -1,20 +1,28 @@
 //! Epoch-driven discrete-event simulator — the testbed stand-in that
 //! regenerates the paper's §IV evaluation.
 //!
-//! Implements the Fig. 2 protocol: time is divided into epochs; requests
-//! arriving during epoch e are aggregated and offered to the scheduler at
-//! the boundary of epoch e+1; scheduled requests upload during T_U, compute
-//! during the (overlapped) T_C and download during T_D. Completion within
-//! τ_i counts toward throughput — the paper's headline metric.
+//! Since PR 1 this module is a thin adapter: the Fig. 2 protocol itself
+//! (aggregation, admission, scheduling, outcome accounting) lives once in
+//! [`crate::driver::EpochDriver`]; the simulator contributes the *simulated*
+//! ingredients — a [`SimClock`] that lands exactly on epoch boundaries, the
+//! [`AnalyticBackend`] that resolves completions from the paper's cost
+//! model, and a seeded Poisson workload. Requests arriving during epoch e
+//! are aggregated and offered to the scheduler at the boundary of epoch
+//! e+1; scheduled requests upload during T_U, compute during the
+//! (overlapped) T_C and download during T_D. Completion within τ_i counts
+//! toward throughput — the paper's headline metric.
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
-use crate::metrics::{Metrics, Outcome};
+use crate::coordinator::{EpochParams, Scheduler};
+use crate::driver::{
+    run_epochs, AnalyticBackend, DriverPolicy, EpochDriver, InstanceTemplate, SPadPolicy,
+    SimClock, StalePolicy,
+};
+use crate::metrics::Metrics;
 use crate::model::{CostModel, LlmSpec};
 use crate::quant::QuantSpec;
-use crate::request::{EpochRequest, Request};
 use crate::util::rng::Rng;
-use crate::wireless::{ChannelParams, RadioParams};
+use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 use crate::workload::{WorkloadGenerator, WorkloadParams};
 
 /// Full simulation scenario.
@@ -52,113 +60,66 @@ impl SimConfig {
     }
 }
 
+/// The driver configuration a scenario maps to (shared with the parity
+/// tests; `sim::run` is exactly `EpochDriver` + `SimClock` +
+/// `AnalyticBackend` under this policy).
+pub fn driver_for(config: &SimConfig) -> EpochDriver<()> {
+    EpochDriver::new(
+        InstanceTemplate {
+            cost: CostModel::new(config.model.clone()),
+            quant: config.quant.clone(),
+            cluster: config.cluster.clone(),
+            epoch: config.epoch.clone(),
+        },
+        DriverPolicy {
+            stale: StalePolicy::BestCaseInfeasible,
+            s_pad: match config.s_pad {
+                Some(s) => SPadPolicy::Fixed(s),
+                None => SPadPolicy::LongestQueued { fallback: 512 },
+            },
+            allocation: AllocationPolicy::MinOnly,
+        },
+        config.radio.clone(),
+        config.channel.clone(),
+        Rng::new(config.seed ^ 0xC0FFEE),
+    )
+}
+
 /// Run one scenario under one scheduling policy; returns aggregate metrics.
 pub fn run(config: &SimConfig, scheduler: &mut dyn Scheduler) -> Metrics {
-    let mut metrics = Metrics::new();
     let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
-    let mut channel_rng = Rng::new(config.seed ^ 0xC0FFEE);
-    let cost = CostModel::new(config.model.clone());
+    let mut driver = driver_for(config);
+    let mut backend = AnalyticBackend;
+    let mut clock = SimClock::new();
     let duration = config.epoch.duration;
 
-    // Requests waiting to be scheduled (arrived in earlier epochs).
-    let mut queue: Vec<Request> = Vec::new();
-
-    for e in 0..config.epochs {
-        let now = e as f64 * duration;
-
-        // 1. Drop queued requests that can no longer make their deadline even
-        //    if scheduled right now and run alone at full cluster speed.
-        let mut survivors = Vec::with_capacity(queue.len());
-        for r in queue.drain(..) {
-            let best_case = config.epoch.t_u
-                + config.quant.beta
-                    * cost.total_flops_per_req(r.prompt_tokens, r.output_tokens)
-                    / config.cluster.total_flops()
-                + config.epoch.t_d;
-            if r.waited(now) + best_case > r.latency_req {
-                metrics.record_outcome(Outcome::Dropped, 0.0);
-            } else {
-                survivors.push(r);
+    // Arrivals during epoch e become schedulable at the boundary of epoch
+    // e+1 (the Fig. 2 aggregation rule): ingest the *previous* window at
+    // each boundary, and the final epoch's window before closing.
+    let mut window_start = 0.0;
+    run_epochs(
+        &mut driver,
+        scheduler,
+        &mut backend,
+        &mut clock,
+        config.epochs as u64,
+        |d, _backend, now| {
+            for r in gen.arrivals_between(window_start, now) {
+                d.offer(r, ());
             }
+            window_start = now;
+        },
+    );
+    if config.epochs > 0 {
+        let last_boundary = (config.epochs - 1) as f64 * duration;
+        for r in gen.arrivals_between(window_start, last_boundary + duration) {
+            driver.offer(r, ());
         }
-        queue = survivors;
-        metrics.queue_depth.push(queue.len() as f64);
-
-        // 2. Annotate the queue with this epoch's channel state.
-        let s_pad = config.s_pad.unwrap_or_else(|| {
-            queue
-                .iter()
-                .map(|r| r.prompt_tokens)
-                .max()
-                .unwrap_or(512)
-        });
-        let inst = ProblemInstance::new(
-            cost.clone(),
-            config.quant.clone(),
-            config.cluster.clone(),
-            config.epoch.clone(),
-            s_pad,
-            now,
-        );
-        let annotated: Vec<EpochRequest> = queue
-            .iter()
-            .map(|r| {
-                let h = config.channel.draw_h(&mut channel_rng);
-                EpochRequest::annotate(r.clone(), h, &config.radio, config.epoch.t_u, config.epoch.t_d)
-            })
-            .collect();
-
-        // 3. Drop requests the deployed quantization can never satisfy
-        //    (accuracy admission is workload-independent).
-        //    They'd otherwise sit in the queue forever.
-        let inadmissible: Vec<u64> = annotated
-            .iter()
-            .filter(|r| !inst.admits(r))
-            .map(|r| r.id())
-            .collect();
-        for _ in &inadmissible {
-            metrics.record_outcome(Outcome::Dropped, 0.0);
-        }
-        queue.retain(|r| !inadmissible.contains(&r.id));
-        let annotated: Vec<EpochRequest> = annotated
-            .into_iter()
-            .filter(|r| !inadmissible.contains(&r.id()))
-            .collect();
-
-        // 4. Schedule.
-        let sched = scheduler.schedule(&inst, &annotated);
-        metrics.record_schedule(sched.batch_size(), &sched.stats);
-
-        // 5. Resolve completions.
-        for &(id, t_compute) in &sched.per_request_compute {
-            let req = annotated
-                .iter()
-                .find(|r| r.id() == id)
-                .expect("scheduler returned unknown request id");
-            let completion = now + config.epoch.t_u + t_compute + config.epoch.t_d;
-            let latency = completion - req.req.arrival;
-            let outcome = if latency <= req.req.latency_req + 1e-9 {
-                Outcome::CompletedInDeadline
-            } else {
-                Outcome::CompletedLate
-            };
-            metrics.record_outcome(outcome, latency);
-        }
-        queue.retain(|r| !sched.scheduled.contains(&r.id));
-
-        // 6. Admit the arrivals of this epoch (schedulable from the next
-        //    boundary onward — the Fig. 2 aggregation rule).
-        let arrivals = gen.arrivals_between(now, now + duration);
-        metrics.record_offered(arrivals.len() as u64);
-        queue.extend(arrivals);
     }
 
     // Close accounting: whatever still waits at the horizon is unserved.
-    for _ in &queue {
-        metrics.record_outcome(Outcome::Dropped, 0.0);
-    }
-    metrics.horizon = config.epochs as f64 * duration;
-    metrics
+    driver.finish(&mut backend, config.epochs as f64 * duration);
+    driver.into_metrics()
 }
 
 /// Convenience: run the same scenario under several schedulers (fresh

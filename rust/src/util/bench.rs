@@ -88,7 +88,7 @@ impl Bencher {
             }
             times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(f64::total_cmp);
         let mean = times.iter().sum::<f64>() / times.len() as f64;
         let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
             / times.len().max(1) as f64;

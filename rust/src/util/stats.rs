@@ -2,7 +2,7 @@
 //! latency histograms (HDR-style, log-spaced) used by the metrics layer.
 
 /// Welford online mean/variance accumulator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct OnlineStats {
     n: u64,
     mean: f64,
@@ -96,7 +96,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    sorted.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -111,7 +111,7 @@ pub fn mean(xs: &[f64]) -> f64 {
 
 /// Log-spaced latency histogram covering [1 µs, ~100 s] with fixed relative
 /// error, recording values in seconds. No allocation after construction.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LatencyHistogram {
     /// bucket i covers [lo * ratio^i, lo * ratio^(i+1))
     buckets: Vec<u64>,

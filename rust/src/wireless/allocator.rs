@@ -61,6 +61,11 @@ pub fn allocate(
         &batch.iter().map(|r| r.rho_min_d).collect::<Vec<_>>(),
         policy,
     );
+    // At exactly ρ_min a transfer fills its slot by the definition of ρ_min;
+    // report the slot time verbatim so the P1-baseline accounting is
+    // bit-stable (floating round-trip through rate/bits would differ in the
+    // last ulp).
+    let exact_min = policy == AllocationPolicy::MinOnly;
     batch
         .iter()
         .zip(rho_u.iter().zip(rho_d.iter()))
@@ -73,8 +78,14 @@ pub fn allocate(
                 id: r.id(),
                 rho_u: u,
                 rho_d: d,
-                upload_time: if up_rate > 0.0 { up_bits / up_rate } else { t_u },
-                download_time: if down_rate > 0.0 {
+                // Positive-rate test so a NaN rate (NaN channel gain) falls
+                // back to the slot time instead of propagating NaN.
+                upload_time: if !exact_min && up_rate > 0.0 {
+                    up_bits / up_rate
+                } else {
+                    t_u
+                },
+                download_time: if !exact_min && down_rate > 0.0 {
                     down_bits / down_rate
                 } else {
                     t_d
@@ -109,7 +120,7 @@ fn water_fill(mins: &[f64], mut surplus: f64) -> Vec<f64> {
     let mut alloc = mins.to_vec();
     // Process levels in ascending order of current allocation.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| mins[a].partial_cmp(&mins[b]).unwrap());
+    order.sort_by(|&a, &b| mins[a].total_cmp(&mins[b]));
     let mut i = 0;
     while surplus > 1e-15 && i < n {
         // Raise members order[0..=i] up to the next level (order[i+1]) or

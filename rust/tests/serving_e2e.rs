@@ -61,11 +61,10 @@ fn serves_and_returns_tokens() {
         assert!(r.latency > 0.0);
         assert!(r.epoch.is_some());
     }
+    let m = server.metrics();
     assert_eq!(
-        server.metrics.offered,
-        server.metrics.completed_in_deadline
-            + server.metrics.completed_late
-            + server.metrics.dropped
+        m.offered,
+        m.completed_in_deadline + m.completed_late + m.dropped
     );
 }
 

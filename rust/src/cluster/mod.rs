@@ -62,6 +62,14 @@ impl ClusterSpec {
         self.num_gpus as u64 * self.gpu.mem_bytes
     }
 
+    /// Per-GPU unscaled-KV budget after the α-scaled weight footprint:
+    /// `M_gpu / α − m1` (negative when the weights alone do not fit). The
+    /// single source of the memory-budget formula shared by the feasibility
+    /// checker, DFTSP's memory bound and the continuous-batching KV ledger.
+    pub fn kv_budget_per_gpu(&self, cost: &CostModel, quant: &QuantSpec) -> f64 {
+        self.gpu.mem_bytes as f64 / quant.alpha - cost.weight_bytes() as f64
+    }
+
     /// Largest batch the cluster can hold in memory for a model+quant when
     /// every request carries `kv_bytes_per_req` of (unscaled) KV cache —
     /// the inverse of constraint (1c) used by static batching to pick its
@@ -73,10 +81,8 @@ impl ClusterSpec {
         kv_bytes_per_req: u64,
     ) -> usize {
         // Per GPU: α(m1 + per_gpu_batch · kv) ≤ M_gpu
-        let m_gpu = self.gpu.mem_bytes as f64;
-        let weights = cost.weight_bytes() as f64;
         let kv = kv_bytes_per_req as f64;
-        let per_gpu_budget = m_gpu / quant.alpha - weights;
+        let per_gpu_budget = self.kv_budget_per_gpu(cost, quant);
         if per_gpu_budget <= 0.0 {
             return 0;
         }
@@ -98,9 +104,7 @@ impl ClusterSpec {
         // Worst-case GPU holds ceil(batch/G) largest requests; with even
         // round-robin of sorted requests this bound is tight enough and
         // monotone (adding a request never makes it fit better).
-        let m_gpu = self.gpu.mem_bytes as f64;
-        let weights = cost.weight_bytes() as f64;
-        let per_gpu_budget = m_gpu / quant.alpha - weights;
+        let per_gpu_budget = self.kv_budget_per_gpu(cost, quant);
         if per_gpu_budget <= 0.0 {
             return false;
         }

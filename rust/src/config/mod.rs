@@ -8,6 +8,7 @@ pub mod toml;
 
 use crate::cluster::{ClusterSpec, GpuSpec};
 use crate::coordinator::EpochParams;
+use crate::driver::BatchingMode;
 use crate::model::LlmSpec;
 use crate::quant::{self, Precision, QuantAlgo, QuantSpec};
 use crate::sim::SimConfig;
@@ -105,6 +106,10 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
 
     let s_pad = doc.get("sim.s_pad").and_then(|v| v.as_i64()).map(|v| v as u32);
 
+    // `batching = "epoch" | "continuous"`: which ExecutionBackend runs the
+    // scheduled batches (epoch barrier vs decode-step admission).
+    let batching = BatchingMode::parse(&doc.str_or("sim.batching", "epoch"))?;
+
     Ok(SimConfig {
         model,
         quant,
@@ -116,6 +121,7 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         epochs: doc.u64_or("sim.epochs", base.epochs as u64) as usize,
         seed: doc.u64_or("sim.seed", base.seed),
         s_pad,
+        batching,
     })
 }
 
@@ -177,6 +183,19 @@ s_pad = 256
         assert_eq!(cfg.workload.output_levels, vec![128, 512]);
         assert_eq!(cfg.epochs, 50);
         assert_eq!(cfg.s_pad, Some(256));
+    }
+
+    #[test]
+    fn batching_knob_parses() {
+        let doc = toml::parse("[sim]\nbatching = \"continuous\"\n").unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.batching, BatchingMode::Continuous);
+        // Default is the paper's epoch barrier.
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.batching, BatchingMode::Epoch);
+        // Unknown modes are a config error, not a silent fallback.
+        let doc = toml::parse("[sim]\nbatching = \"rolling\"\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
     }
 
     #[test]

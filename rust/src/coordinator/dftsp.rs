@@ -63,9 +63,7 @@ impl Dftsp {
         let z_d = bound_by(&mut ds, 1.0);
 
         // Memory: cheapest-KV prefix against the aggregate budget.
-        let m_gpu = inst.cluster.gpu.mem_bytes as f64;
-        let weights = inst.cost.weight_bytes() as f64;
-        let budget_per_gpu = m_gpu / inst.quant.alpha - weights;
+        let budget_per_gpu = inst.cluster.kv_budget_per_gpu(&inst.cost, &inst.quant);
         let z_m = if budget_per_gpu <= 0.0 {
             0
         } else {

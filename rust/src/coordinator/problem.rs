@@ -258,9 +258,7 @@ impl PartialState {
             return false;
         }
         // Memory: same worst-GPU bound as ClusterSpec::batch_fits_memory.
-        let m_gpu = inst.cluster.gpu.mem_bytes as f64;
-        let weights = inst.cost.weight_bytes() as f64;
-        let budget = m_gpu / inst.quant.alpha - weights;
+        let budget = inst.cluster.kv_budget_per_gpu(&inst.cost, &inst.quant);
         if budget <= 0.0 {
             return false;
         }

@@ -90,6 +90,15 @@ pub trait ExecutionBackend {
         let _ = (entry, reason);
         metrics.record_outcome(Outcome::Dropped, 0.0);
     }
+
+    /// The run is over: flush whatever the backend still holds in flight.
+    /// Epoch backends complete every batch inside `execute` and need no
+    /// flush; the continuous backend drains its persistent in-flight set
+    /// here so request accounting always closes (`horizon` is the nominal
+    /// end of the run).
+    fn finish(&mut self, horizon: f64, metrics: &mut Metrics) {
+        let _ = (horizon, metrics);
+    }
 }
 
 /// Cost-model execution: the testbed stand-in used by the simulator.

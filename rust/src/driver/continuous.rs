@@ -1,0 +1,673 @@
+//! Continuous batching — the third [`ExecutionBackend`]: decode-step
+//! admission into a persistent running batch, relaxing the paper's epoch
+//! barrier (ROADMAP item; surveyed in "Network Edge Inference for Large
+//! Language Models").
+//!
+//! ## State machine
+//!
+//! ```text
+//!              scheduler picks the set          KV headroom + arrival due
+//!   queued ───────────────────────────▶ pending ─────────────────────────▶ uploading
+//!   (driver)        (epoch boundary)      │        (decode-step boundary)      │ T_U elapsed
+//!                                         │ best-case-infeasible               ▼
+//!                                         ▼                                 prefill ─▶ decoding
+//!                                      dropped                                          │ n_i tokens
+//!                                                                                       ▼
+//!                                                          ledger.release ◀── completed (+ T_D)
+//! ```
+//!
+//! The driver's Fig. 2 pipeline is unchanged: arrivals are annotated and the
+//! [`Scheduler`](crate::coordinator::Scheduler) still picks a feasible set at
+//! every epoch boundary, so DFTSP/greedy/static remain comparable across
+//! batching modes. What changes is *execution*: instead of the whole batch
+//! starting at the barrier and finishing together, this backend keeps a
+//! persistent per-request KV-cache ledger across `step_epoch` calls and
+//! walks the window decode step by decode step —
+//!
+//! 1. **Admission gate**: a scheduled request joins the running batch at the
+//!    first decode-step boundary after its *arrival timestamp* (not the
+//!    epoch barrier), provided the [`KvLedger`] can reserve its peak KV
+//!    bytes. Entries that do not fit yet wait; completions return headroom
+//!    to the gate. Admission latency (arrival → upload start) is recorded in
+//!    [`Metrics::admission_latency`](crate::metrics::Metrics).
+//! 2. **Upload**: the request uploads for its allocated T_U, then its
+//!    prefill FLOPs join the next step.
+//! 3. **Decode**: every step advances each in-flight request by one token;
+//!    the step's duration is β·ΣFLOPs/C over the *current* batch (prefills
+//!    of freshly-ready requests plus one `decode_step_flops` per decoding
+//!    request — the same cost model as the epoch path, so the two modes are
+//!    directly comparable). No cross-batch padding: each request is costed
+//!    at its own prompt length.
+//! 4. **Completion/eviction**: a request that has produced its n_i tokens
+//!    completes at `t + T_D`, releases its ledger reservation, and the gate
+//!    re-scans the pending set. Pending entries that can no longer meet
+//!    their deadline even best-case are dropped (stale).
+//!
+//! The simulation clock is *internal* to the backend (work-conserving: a
+//! window whose decode backlog overruns the boundary simply starts the next
+//! window late), which is what makes the backend persistent across
+//! `step_epoch` calls. `finish` drains everything still in flight so
+//! request conservation always closes.
+
+use crate::driver::backend::{EpochContext, ExecutionBackend, QueuedRequest};
+use crate::driver::InstanceTemplate;
+use crate::metrics::{Metrics, Outcome};
+use crate::request::{Request, RequestId};
+use std::collections::BTreeMap;
+
+/// How scheduled batches are executed: at the epoch barrier (the paper's
+/// Fig. 2 protocol) or with decode-step admission into a running batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchingMode {
+    /// Admission quantized to epoch boundaries; the batch starts and
+    /// finishes together (paper §II).
+    #[default]
+    Epoch,
+    /// Decode-step admission with a persistent KV ledger
+    /// ([`ContinuousBackend`]).
+    Continuous,
+}
+
+impl BatchingMode {
+    /// Parse the `batching = "epoch" | "continuous"` scenario knob.
+    pub fn parse(s: &str) -> Result<BatchingMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "epoch" => Ok(BatchingMode::Epoch),
+            "continuous" => Ok(BatchingMode::Continuous),
+            other => Err(format!(
+                "unknown batching mode `{other}` (expected `epoch` or `continuous`)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for BatchingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchingMode::Epoch => write!(f, "epoch"),
+            BatchingMode::Continuous => write!(f, "continuous"),
+        }
+    }
+}
+
+/// Per-request KV-cache reservations against the cluster's memory budget.
+/// Admission reserves a request's *peak* bytes up front and checks the same
+/// worst-GPU packing bound as [`ClusterSpec::batch_fits_memory`] — not just
+/// an aggregate sum — so the cross-epoch in-flight union always satisfies
+/// constraint (1c) under the paper's per-GPU memory model; completion
+/// returns the headroom to the admission gate.
+///
+/// [`ClusterSpec::batch_fits_memory`]: crate::cluster::ClusterSpec::batch_fits_memory
+#[derive(Debug, Clone)]
+pub struct KvLedger {
+    per_gpu_budget: u64,
+    num_gpus: usize,
+    in_use: u64,
+    peak: u64,
+    held: BTreeMap<RequestId, u64>,
+}
+
+impl KvLedger {
+    pub fn new(per_gpu_budget: u64, num_gpus: usize) -> Self {
+        KvLedger {
+            per_gpu_budget,
+            num_gpus: num_gpus.max(1),
+            in_use: 0,
+            peak: 0,
+            held: BTreeMap::new(),
+        }
+    }
+
+    /// Ledger for a cluster deployment: per-GPU memory after α-scaled
+    /// weights (the shared [`ClusterSpec::kv_budget_per_gpu`] formula
+    /// DFTSP's memory bound and the feasibility checker also use).
+    ///
+    /// [`ClusterSpec::kv_budget_per_gpu`]: crate::cluster::ClusterSpec::kv_budget_per_gpu
+    pub fn for_template(template: &InstanceTemplate) -> Self {
+        let per_gpu = template
+            .cluster
+            .kv_budget_per_gpu(&template.cost, &template.quant)
+            .max(0.0);
+        KvLedger::new(per_gpu as u64, template.cluster.num_gpus)
+    }
+
+    /// Aggregate budget across GPUs (upper bound for `in_use`).
+    pub fn capacity(&self) -> u64 {
+        self.per_gpu_budget.saturating_mul(self.num_gpus as u64)
+    }
+
+    pub fn in_use(&self) -> u64 {
+        self.in_use
+    }
+
+    /// High-water mark of `in_use` over the whole run.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Requests currently holding a reservation.
+    pub fn holders(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Would the in-flight union still fit per-GPU with one more request of
+    /// `bytes`? Same worst-loaded-GPU bound as `batch_fits_memory`: with at
+    /// most one request per GPU the worst GPU holds the largest request;
+    /// beyond that, the LPT makespan bound `total/G + max`.
+    fn fits_with(&self, bytes: u64) -> bool {
+        let count = self.held.len() + 1;
+        let total = (self.in_use + bytes) as f64;
+        let max = self
+            .held
+            .values()
+            .copied()
+            .max()
+            .unwrap_or(0)
+            .max(bytes) as f64;
+        let worst_gpu = if count <= self.num_gpus {
+            max
+        } else {
+            total / self.num_gpus as f64 + max
+        };
+        worst_gpu <= self.per_gpu_budget as f64
+    }
+
+    /// Can a request of `bytes` ever be admitted, even on an empty ledger?
+    pub fn fits_alone(&self, bytes: u64) -> bool {
+        bytes <= self.per_gpu_budget
+    }
+
+    /// Reserve `bytes` for `id`; false (and no state change) when the
+    /// packing bound cannot cover it.
+    pub fn try_admit(&mut self, id: RequestId, bytes: u64) -> bool {
+        if !self.fits_with(bytes) {
+            return false;
+        }
+        self.in_use += bytes;
+        if self.in_use > self.peak {
+            self.peak = self.in_use;
+        }
+        self.held.insert(id, bytes);
+        true
+    }
+
+    /// Return `id`'s reservation to the gate (no-op for unknown ids).
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(bytes) = self.held.remove(&id) {
+            self.in_use -= bytes;
+        }
+    }
+}
+
+/// A scheduled request waiting at the admission gate.
+#[derive(Debug, Clone)]
+struct PendingEntry {
+    req: Request,
+    kv_bytes: u64,
+    t_up: f64,
+    t_down: f64,
+}
+
+/// A request in the running batch.
+#[derive(Debug, Clone)]
+struct Flight {
+    req: Request,
+    /// Upload completes here; the prefill joins the first step at or after.
+    ready_at: f64,
+    t_down: f64,
+    /// Tokens produced so far (prefill emits the first).
+    produced: u32,
+    prefilled: bool,
+}
+
+/// Analytic continuous-batching execution: the cost-model counterpart of the
+/// serving layer's continuous mode, plugged into the same [`EpochDriver`]
+/// (see module docs for the state machine).
+///
+/// [`EpochDriver`]: crate::driver::EpochDriver
+pub struct ContinuousBackend {
+    template: InstanceTemplate,
+    ledger: KvLedger,
+    /// Internal work-conserving simulation clock (seconds).
+    clock: f64,
+    pending: Vec<PendingEntry>,
+    flights: Vec<Flight>,
+}
+
+impl ContinuousBackend {
+    pub fn new(template: &InstanceTemplate) -> Self {
+        ContinuousBackend {
+            ledger: KvLedger::for_template(template),
+            template: template.clone(),
+            clock: 0.0,
+            pending: Vec::new(),
+            flights: Vec::new(),
+        }
+    }
+
+    /// The KV admission gate's ledger (inspection for tests/diagnostics).
+    pub fn ledger(&self) -> &KvLedger {
+        &self.ledger
+    }
+
+    /// Requests admitted and not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.flights.len()
+    }
+
+    /// Scheduled requests still waiting at the admission gate.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Peak KV bytes a request reserves — costed at its *own* prompt length
+    /// (continuous batching does not pad across the batch).
+    fn kv_bytes(&self, req: &Request) -> u64 {
+        self.template
+            .cost
+            .kv_peak_bytes_per_req(req.prompt_tokens, req.output_tokens)
+    }
+
+    /// Even an immediate solo run cannot meet the deadline any more (the
+    /// driver's `BestCaseInfeasible` rule, via the shared template helper).
+    fn hopeless(&self, req: &Request, now: f64) -> bool {
+        let best_case = self
+            .template
+            .best_case_latency(req.prompt_tokens, req.output_tokens);
+        req.waited(now) + best_case > req.latency_req
+    }
+
+    /// Drop pending entries that can no longer make their deadline.
+    fn drop_stale_pending(&mut self, metrics: &mut Metrics) {
+        let pending = std::mem::take(&mut self.pending);
+        for p in pending {
+            if self.hopeless(&p.req, self.clock) {
+                metrics.record_outcome(Outcome::Dropped, 0.0);
+            } else {
+                self.pending.push(p);
+            }
+        }
+    }
+
+    /// Scan the gate in arrival order and admit due entries whose KV
+    /// reservation fits — strict FCFS: a due entry blocked on headroom also
+    /// holds back everything that arrived after it (the same no-leapfrog
+    /// discipline as the serving gate), so a large request cannot be starved
+    /// by a stream of smaller later ones. Entries that can *never* fit
+    /// (peak KV above one GPU's budget) are rejected outright rather than
+    /// deadlocking the gate.
+    fn admit_due(&mut self, metrics: &mut Metrics) {
+        let pending = std::mem::take(&mut self.pending);
+        let mut blocked = false;
+        for p in pending {
+            if blocked || p.req.arrival > self.clock {
+                self.pending.push(p);
+                continue;
+            }
+            if !self.ledger.fits_alone(p.kv_bytes) {
+                metrics.record_outcome(Outcome::Dropped, 0.0);
+            } else if self.ledger.try_admit(p.req.id, p.kv_bytes) {
+                metrics.record_admission(self.clock - p.req.arrival);
+                self.flights.push(Flight {
+                    ready_at: self.clock + p.t_up,
+                    t_down: p.t_down,
+                    produced: 0,
+                    prefilled: false,
+                    req: p.req,
+                });
+            } else {
+                blocked = true;
+                self.pending.push(p);
+            }
+        }
+    }
+
+    /// Advance the continuous machine until `until` (or, when `drain_all`,
+    /// until every pending and in-flight request has resolved).
+    fn simulate(&mut self, until: f64, drain_all: bool, metrics: &mut Metrics) {
+        loop {
+            self.drop_stale_pending(metrics);
+            self.admit_due(metrics);
+
+            // The step's workload: prefill for freshly-ready flights, one
+            // decode iteration for everyone already prefilled.
+            let step_start = self.clock;
+            let mut step_flops = 0.0;
+            let mut active = 0usize;
+            for f in &self.flights {
+                if f.ready_at > step_start {
+                    continue;
+                }
+                active += 1;
+                step_flops += if f.prefilled {
+                    self.template
+                        .cost
+                        .decode_step_flops(f.req.prompt_tokens, f.produced)
+                } else {
+                    self.template.cost.prefill_flops_per_req(f.req.prompt_tokens)
+                };
+            }
+
+            if active == 0 {
+                // Idle: jump to the next event (an upload finishing or a
+                // pending arrival coming due).
+                let mut next = f64::INFINITY;
+                for f in &self.flights {
+                    if f.ready_at > self.clock && f.ready_at < next {
+                        next = f.ready_at;
+                    }
+                }
+                for p in &self.pending {
+                    if p.req.arrival > self.clock && p.req.arrival < next {
+                        next = p.req.arrival;
+                    }
+                }
+                if drain_all {
+                    if next.is_finite() {
+                        self.clock = next;
+                        continue;
+                    }
+                    // Nothing can ever start again: anything left at the
+                    // gate is starved by its own KV demand — reject it.
+                    for _ in self.pending.drain(..) {
+                        metrics.record_outcome(Outcome::Dropped, 0.0);
+                    }
+                    return;
+                }
+                if next >= until {
+                    if self.clock < until {
+                        self.clock = until;
+                    }
+                    return;
+                }
+                self.clock = next;
+                continue;
+            }
+
+            metrics.record_step_occupancy(active);
+            let dt = self.template.quant.beta * step_flops / self.template.cluster.total_flops();
+            self.clock = step_start + dt;
+
+            // Advance every participating flight by one token and resolve
+            // completions (releasing KV headroom back to the gate).
+            let now = self.clock;
+            let flights = std::mem::take(&mut self.flights);
+            for mut f in flights {
+                if f.ready_at > step_start {
+                    // Was not part of this step (still uploading).
+                    self.flights.push(f);
+                    continue;
+                }
+                if f.prefilled {
+                    f.produced += 1;
+                } else {
+                    f.prefilled = true;
+                    f.produced = 1;
+                }
+                if f.produced >= f.req.output_tokens {
+                    let completion = now + f.t_down;
+                    let latency = completion - f.req.arrival;
+                    let outcome = if latency <= f.req.latency_req + 1e-9 {
+                        Outcome::CompletedInDeadline
+                    } else {
+                        Outcome::CompletedLate
+                    };
+                    metrics.record_outcome(outcome, latency);
+                    self.ledger.release(f.req.id);
+                } else {
+                    self.flights.push(f);
+                }
+            }
+
+            if !drain_all && self.clock >= until {
+                return;
+            }
+            if drain_all && self.flights.is_empty() && self.pending.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+impl ExecutionBackend for ContinuousBackend {
+    type Payload = ();
+
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        _schedule: &crate::coordinator::Schedule,
+        batch: Vec<QueuedRequest<()>>,
+        metrics: &mut Metrics,
+    ) {
+        // Work-conserving clock: catch up to the boundary when idle, keep
+        // the backlog when the previous window overran.
+        if self.clock < ctx.now {
+            self.clock = ctx.now;
+        }
+        for entry in batch {
+            let (t_up, t_down) = ctx.comm_times(entry.req.id);
+            self.pending.push(PendingEntry {
+                kv_bytes: self.kv_bytes(&entry.req),
+                t_up,
+                t_down,
+                req: entry.req,
+            });
+        }
+        // Admission order is arrival order (FCFS gate), not schedule order.
+        self.pending.sort_by(|a, b| {
+            a.req
+                .arrival
+                .total_cmp(&b.req.arrival)
+                .then(a.req.id.cmp(&b.req.id))
+        });
+        self.simulate(ctx.now + self.template.epoch.duration, false, metrics);
+    }
+
+    fn finish(&mut self, horizon: f64, metrics: &mut Metrics) {
+        // Shutdown semantics mirror the epoch path: no new admissions —
+        // whatever still waits at the gate is unserved (the driver rejects
+        // its queue the same way) — and only the already-running batch
+        // decodes to completion, so past-horizon serving is bounded by the
+        // in-flight work instead of draining an unbounded backlog into the
+        // throughput numerator.
+        for _ in self.pending.drain(..) {
+            metrics.record_outcome(Outcome::Dropped, 0.0);
+        }
+        let until = horizon.max(self.clock);
+        self.simulate(until, true, metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::{Dftsp, EpochParams};
+    use crate::driver::{DriverPolicy, EpochDriver, SPadPolicy, StalePolicy};
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::util::rng::Rng;
+    use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
+
+    fn template() -> InstanceTemplate {
+        InstanceTemplate {
+            cost: CostModel::new(LlmSpec::bloom_3b()),
+            quant: quant::default_quant(),
+            cluster: ClusterSpec::paper_default(),
+            epoch: EpochParams::default(),
+        }
+    }
+
+    fn driver() -> EpochDriver<()> {
+        EpochDriver::new(
+            template(),
+            DriverPolicy {
+                stale: StalePolicy::BestCaseInfeasible,
+                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                allocation: AllocationPolicy::MinOnly,
+            },
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(42),
+        )
+    }
+
+    #[test]
+    fn batching_mode_parses() {
+        assert_eq!(BatchingMode::parse("epoch").unwrap(), BatchingMode::Epoch);
+        assert_eq!(
+            BatchingMode::parse("Continuous").unwrap(),
+            BatchingMode::Continuous
+        );
+        assert!(BatchingMode::parse("rolling").is_err());
+        assert_eq!(BatchingMode::Continuous.to_string(), "continuous");
+        assert_eq!(BatchingMode::default(), BatchingMode::Epoch);
+    }
+
+    #[test]
+    fn ledger_enforces_worst_gpu_packing() {
+        // 2 GPUs, 100 bytes of per-GPU budget.
+        let mut l = KvLedger::new(100, 2);
+        assert!(l.try_admit(1, 60), "one per GPU: worst GPU holds 60");
+        assert!(l.try_admit(2, 50), "one per GPU: worst GPU holds 60");
+        assert_eq!(l.in_use(), 110);
+        assert_eq!(l.holders(), 2);
+        // A third request exceeds one-per-GPU: LPT bound total/G + max.
+        assert!(!l.try_admit(3, 80), "190/2 + 80 = 175 > 100");
+        assert!(!l.try_admit(3, 10), "120/2 + 60 = 120 > 100");
+        l.release(1);
+        assert_eq!(l.in_use(), 50);
+        assert!(l.try_admit(3, 40), "back to one per GPU: max 50 <= 100");
+        assert_eq!(l.peak(), 110, "high-water mark kept");
+        assert!(l.fits_alone(100));
+        assert!(!l.fits_alone(101), "bigger than one GPU can never fit");
+        l.release(99); // unknown id is a no-op
+        assert_eq!(l.in_use(), 90);
+        assert!(l.capacity() >= l.peak());
+    }
+
+    #[test]
+    fn ledger_capacity_positive_for_paper_cluster() {
+        let l = KvLedger::for_template(&template());
+        assert!(l.capacity() > 0);
+        // 20 GPUs × 32 GiB minus α-scaled BLOOM-3B weights: hundreds of GiB.
+        assert!(l.capacity() > 100 * (1 << 30) as u64);
+        assert!(l.fits_alone(1 << 30), "a 1 GiB KV request fits one GPU");
+    }
+
+    #[test]
+    fn mid_epoch_arrival_admitted_before_next_barrier() {
+        // One request arriving mid-window must start (and here: finish)
+        // before the next epoch boundary.
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut backend = ContinuousBackend::new(&template());
+        let mut b = RequestBuilder::new();
+        // Offered at boundary 0 with arrival 1.0 (mid-window intake).
+        d.offer(b.build(1.0, 128, 128, 1.9, 0.1), ());
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        d.finish(&mut backend, 2.0);
+        let m = d.into_metrics();
+        assert_eq!(m.offered, 1);
+        assert_eq!(m.completed_in_deadline, 1, "admitted at ~1.0, not 2.0");
+        assert_eq!(m.admission_latency.count(), 1);
+        assert!(
+            m.mean_admission_latency() < 0.2,
+            "waited {} s, continuous admission should be ~immediate",
+            m.mean_admission_latency()
+        );
+        assert!(m.inflight_occupancy.count() > 0);
+    }
+
+    #[test]
+    fn conservation_and_ledger_bounds_under_load() {
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut backend = ContinuousBackend::new(&template());
+        let mut b = RequestBuilder::new();
+        for e in 0..6u64 {
+            let now = e as f64 * 2.0;
+            for i in 0..5 {
+                // Arrivals spread through the window.
+                d.offer(b.build(now + 0.3 * i as f64, 128, 128, 1.8, 0.3), ());
+            }
+            d.step_epoch(&mut sched, &mut backend, now);
+        }
+        d.finish(&mut backend, 12.0);
+        assert_eq!(backend.in_flight(), 0, "finish drains every flight");
+        assert_eq!(backend.pending(), 0);
+        assert_eq!(backend.ledger().in_use(), 0);
+        assert!(backend.ledger().peak() <= backend.ledger().capacity());
+        let m = d.into_metrics();
+        assert_eq!(m.offered, 30);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "conservation of requests"
+        );
+        assert!(m.completed_in_deadline > 0);
+    }
+
+    #[test]
+    fn kv_pressure_defers_admission_until_headroom_returns() {
+        // Shrink the ledger so only one 512-output request fits at a time:
+        // the second must wait for the first to complete, then be admitted
+        // (not dropped).
+        let t = template();
+        let mut backend = ContinuousBackend::new(&t);
+        let kv_one = t.cost.kv_peak_bytes_per_req(128, 512);
+        backend.ledger = KvLedger::new(kv_one + kv_one / 2, 1);
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut b = RequestBuilder::new();
+        d.offer(b.build(0.0, 128, 512, 60.0, 0.0), ());
+        d.offer(b.build(0.0, 128, 512, 60.0, 0.0), ());
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        d.finish(&mut backend, 2.0);
+        let m = d.into_metrics();
+        assert_eq!(m.completed_in_deadline + m.completed_late, 2);
+        assert_eq!(m.dropped, 0);
+        assert!(backend.ledger().peak() <= backend.ledger().capacity());
+        // Serialized, never both in flight at once.
+        assert!(m.inflight_occupancy.max() <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn oversized_request_rejected_not_deadlocked() {
+        let t = template();
+        let mut backend = ContinuousBackend::new(&t);
+        backend.ledger = KvLedger::new(16, 1); // absurdly small per-GPU budget
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut b = RequestBuilder::new();
+        d.offer(b.build(0.0, 128, 128, 60.0, 0.0), ());
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        d.finish(&mut backend, 2.0);
+        let m = d.into_metrics();
+        assert_eq!(m.dropped, 1, "can never fit: rejected, not starved");
+        assert_eq!(m.completed_in_deadline + m.completed_late, 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut d = driver();
+            let mut sched = Dftsp::new();
+            let mut backend = ContinuousBackend::new(&template());
+            let mut b = RequestBuilder::new();
+            for e in 0..4u64 {
+                let now = e as f64 * 2.0;
+                for i in 0..4 {
+                    d.offer(b.build(now + 0.4 * i as f64, 256, 256, 2.0, 0.2), ());
+                }
+                d.step_epoch(&mut sched, &mut backend, now);
+            }
+            d.finish(&mut backend, 8.0);
+            d.into_metrics()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "continuous simulation must be bit-deterministic");
+    }
+}

@@ -25,12 +25,24 @@
 //! untouched — every policy (DFTSP, brute force, greedy, static, NoB,
 //! multi-LLM) sees identical `ProblemInstance`/`EpochRequest` inputs in both
 //! worlds.
+//!
+//! Three execution backends exist today:
+//!
+//! - [`AnalyticBackend`] — epoch-barrier completion from the cost model
+//!   (the paper's protocol; the simulator default),
+//! - `serving::EngineBackend` — real prefill/decode on the loaded engine,
+//! - [`ContinuousBackend`] — **continuous batching**: decode-step admission
+//!   into a persistent running batch gated by a [`KvLedger`], relaxing the
+//!   epoch barrier for mid-epoch arrivals (see `continuous` module docs for
+//!   the state machine and when to prefer each backend).
 
 pub mod backend;
 pub mod clock;
+pub mod continuous;
 
 pub use backend::{AnalyticBackend, EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
 pub use clock::{Clock, SimClock, WallClock};
+pub use continuous::{BatchingMode, ContinuousBackend, KvLedger};
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
@@ -49,6 +61,20 @@ pub struct InstanceTemplate {
     pub quant: QuantSpec,
     pub cluster: ClusterSpec,
     pub epoch: EpochParams,
+}
+
+impl InstanceTemplate {
+    /// Best-case end-to-end service time of a solo request at full cluster
+    /// speed: `T_U + β·flops/C + T_D`. The single source of the
+    /// best-case-infeasible staleness formula, shared by the driver's
+    /// [`StalePolicy::BestCaseInfeasible`] and the continuous backend's
+    /// pending-gate screen.
+    pub fn best_case_latency(&self, prompt_tokens: u32, output_tokens: u32) -> f64 {
+        self.epoch.t_u
+            + self.quant.beta * self.cost.total_flops_per_req(prompt_tokens, output_tokens)
+                / self.cluster.total_flops()
+            + self.epoch.t_d
+    }
 }
 
 /// When is a queued request considered unservable and dropped?
@@ -148,12 +174,9 @@ impl<P> EpochDriver<P> {
     fn is_stale(&self, r: &Request, now: f64) -> bool {
         match self.policy.stale {
             StalePolicy::BestCaseInfeasible => {
-                let t = &self.template;
-                let best_case = t.epoch.t_u
-                    + t.quant.beta
-                        * t.cost.total_flops_per_req(r.prompt_tokens, r.output_tokens)
-                        / t.cluster.total_flops()
-                    + t.epoch.t_d;
+                let best_case = self
+                    .template
+                    .best_case_latency(r.prompt_tokens, r.output_tokens);
                 r.waited(now) + best_case > r.latency_req
             }
             StalePolicy::MaxWait(max_wait) => r.waited(now) > max_wait,
@@ -261,7 +284,9 @@ impl<P> EpochDriver<P> {
         self.epoch_idx += 1;
     }
 
-    /// Close the run: whatever still waits is unserved; `horizon` is the
+    /// Close the run: whatever still waits is unserved, then the backend
+    /// drains anything it holds in flight (continuous batching keeps
+    /// requests decoding across epoch boundaries); `horizon` is the
     /// simulated (or wall) time the run covered.
     pub fn finish<B>(&mut self, backend: &mut B, horizon: f64)
     where
@@ -270,6 +295,7 @@ impl<P> EpochDriver<P> {
         for entry in std::mem::take(&mut self.queue) {
             backend.reject(entry, RejectReason::Shutdown, &mut self.metrics);
         }
+        backend.finish(horizon, &mut self.metrics);
         self.metrics.horizon = horizon;
     }
 }

@@ -30,6 +30,13 @@
 //! bandwidth allocation (`wireless::allocate`) is invoked at exactly one
 //! call site, inside the driver.
 //!
+//! A third execution backend, [`driver::ContinuousBackend`], relaxes the
+//! epoch barrier: requests join the running batch at *decode-step*
+//! granularity, gated by a persistent per-request KV-cache ledger
+//! (`batching = "epoch" | "continuous"` in scenario files; the serving
+//! layer's continuous mode does the same on the real engine). See the
+//! `driver::continuous` module docs for the state machine.
+//!
 //! The runtime engine comes in two flavours behind one API: a pure-Rust CPU
 //! engine (default — zero external crates) and PJRT execution of the AOT
 //! HLO programs (feature `"pjrt"`). See `runtime` and README.md.

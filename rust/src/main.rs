@@ -30,8 +30,8 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: edgellm <simulate|compare|serve|catalog> [--config FILE] \
-                 [--scheduler dftsp|stb|nob|brute] [--rate R] [--epochs N] [--model NAME] \
-                 [--quant LABEL] [--seed S]"
+                 [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
+                 [--epochs N] [--model NAME] [--quant LABEL] [--seed S]"
             );
             2
         }
@@ -58,6 +58,9 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     }
     if let Some(seed) = args.get("seed") {
         cfg.seed = seed.parse().map_err(|_| "bad --seed")?;
+    }
+    if let Some(mode) = args.get("batching") {
+        cfg.batching = edgellm::driver::BatchingMode::parse(mode)?;
     }
     Ok(cfg)
 }
@@ -88,14 +91,15 @@ fn cmd_simulate(args: &Args) -> i32 {
         }
     };
     println!(
-        "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}",
+        "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}  batching {}",
         cfg.model.name,
         cfg.quant.label(),
         cfg.workload.arrival_rate,
         cfg.epochs,
         cfg.epoch.duration,
         cfg.cluster.num_gpus,
-        cfg.cluster.gpu.name
+        cfg.cluster.gpu.name,
+        cfg.batching
     );
     let m = sim::run(&cfg, sched.as_mut());
     print!("{}", m.report(sched.name()));
@@ -160,8 +164,18 @@ fn cmd_serve(args: &Args) -> i32 {
         engine.meta.batch_variants.len(),
         quant_label
     );
-    let server_cfg = ServerConfig::default();
+    let mut server_cfg = ServerConfig::default();
+    if let Some(mode) = args.get("batching") {
+        match edgellm::driver::BatchingMode::parse(mode) {
+            Ok(m) => server_cfg.batching = m,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
     let epoch_s = server_cfg.epoch.duration;
+    println!("batching mode: {}", server_cfg.batching);
     let mut server = EpochServer::new(engine, server_cfg, Box::new(Dftsp::new()));
     let handle = server.handle();
 

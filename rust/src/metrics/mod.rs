@@ -40,6 +40,14 @@ pub struct Metrics {
     pub epoch_overruns: u64,
     /// Simulated (or wall) time covered by this run, in seconds.
     pub horizon: f64,
+    /// Arrival → admission-into-the-running-batch latency. Only continuous
+    /// backends record this (epoch-mode admission *is* the schedule barrier,
+    /// and the epoch analytic path stays bit-identical to the frozen
+    /// pre-refactor loop in `tests/driver_parity.rs`).
+    pub admission_latency: OnlineStats,
+    /// In-flight batch size observed at each decode step (continuous
+    /// backends only).
+    pub inflight_occupancy: OnlineStats,
 }
 
 impl Metrics {
@@ -52,6 +60,22 @@ impl Metrics {
 
     pub fn record_offered(&mut self, n: u64) {
         self.offered += n;
+    }
+
+    /// A request joined the running batch `latency` seconds after arriving.
+    pub fn record_admission(&mut self, latency: f64) {
+        self.admission_latency.push(latency.max(0.0));
+    }
+
+    /// One decode step ran with `n` requests in flight.
+    pub fn record_step_occupancy(&mut self, n: usize) {
+        self.inflight_occupancy.push(n as f64);
+    }
+
+    /// Mean arrival → service-start waiting time (NaN when nothing was
+    /// admitted through a continuous backend).
+    pub fn mean_admission_latency(&self) -> f64 {
+        self.admission_latency.mean()
     }
 
     pub fn record_outcome(&mut self, outcome: Outcome, latency: f64) {
@@ -94,6 +118,41 @@ impl Metrics {
         self.completed_in_deadline as f64 / self.offered as f64
     }
 
+    /// Flat JSON view of the run — the golden-test serialization
+    /// (`rust/tests/golden/`). Every field is a number so fixtures can be
+    /// compared field-by-field with a tolerance.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = Json::Num;
+        let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
+        Json::obj(vec![
+            ("offered", num(self.offered as f64)),
+            ("scheduled", num(self.scheduled as f64)),
+            ("completed_in_deadline", num(self.completed_in_deadline as f64)),
+            ("completed_late", num(self.completed_late as f64)),
+            ("dropped", num(self.dropped as f64)),
+            ("throughput", num(finite(self.throughput()))),
+            ("goodput_ratio", num(finite(self.goodput_ratio()))),
+            ("latency_count", num(self.latency.count() as f64)),
+            ("latency_mean", num(finite(self.latency.mean()))),
+            ("latency_p50", num(finite(self.latency.quantile(0.50)))),
+            ("latency_p95", num(finite(self.latency.quantile(0.95)))),
+            ("latency_max", num(finite(self.latency.max()))),
+            ("batch_size_mean", num(finite(self.batch_sizes.mean()))),
+            ("queue_depth_mean", num(finite(self.queue_depth.mean()))),
+            ("admission_count", num(self.admission_latency.count() as f64)),
+            ("admission_mean", num(finite(self.admission_latency.mean()))),
+            ("occupancy_mean", num(finite(self.inflight_occupancy.mean()))),
+            ("nodes_visited", num(self.search.nodes_visited as f64)),
+            ("solutions_checked", num(self.search.solutions_checked as f64)),
+            ("pruned_capacity", num(self.search.pruned_capacity as f64)),
+            ("pruned_constraint", num(self.search.pruned_constraint as f64)),
+            ("subproblems", num(self.search.subproblems as f64)),
+            ("epoch_overruns", num(self.epoch_overruns as f64)),
+            ("horizon", num(self.horizon)),
+        ])
+    }
+
     /// Multi-line human-readable report.
     pub fn report(&self, label: &str) -> String {
         let mut s = String::new();
@@ -109,6 +168,13 @@ impl Metrics {
             self.batch_sizes.mean(),
             self.queue_depth.mean(),
         ));
+        if self.admission_latency.count() > 0 {
+            s.push_str(&format!(
+                "admission latency mean {:.3} s  in-flight occupancy mean {:.1}\n",
+                self.admission_latency.mean(),
+                self.inflight_occupancy.mean(),
+            ));
+        }
         if self.epoch_overruns > 0 {
             s.push_str(&format!(
                 "epoch overruns {} (epochs whose work exceeded the epoch duration)\n",
@@ -201,5 +267,38 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.goodput_ratio(), 0.0);
+    }
+
+    #[test]
+    fn admission_and_occupancy_accumulate() {
+        let mut m = Metrics::new();
+        m.record_admission(0.5);
+        m.record_admission(-0.1); // clock skew clamps to 0
+        m.record_step_occupancy(3);
+        m.record_step_occupancy(5);
+        assert_eq!(m.admission_latency.count(), 2);
+        assert!((m.mean_admission_latency() - 0.25).abs() < 1e-12);
+        assert!((m.inflight_occupancy.mean() - 4.0).abs() < 1e-12);
+        let r = m.report("cont");
+        assert!(r.contains("admission latency"));
+    }
+
+    #[test]
+    fn json_export_covers_counters() {
+        let mut m = Metrics::new();
+        m.record_offered(4);
+        m.record_outcome(Outcome::CompletedInDeadline, 1.0);
+        m.record_outcome(Outcome::Dropped, 0.0);
+        m.horizon = 2.0;
+        let j = m.to_json();
+        assert_eq!(j.req_f64("offered").unwrap(), 4.0);
+        assert_eq!(j.req_f64("completed_in_deadline").unwrap(), 1.0);
+        assert_eq!(j.req_f64("dropped").unwrap(), 1.0);
+        assert!((j.req_f64("throughput").unwrap() - 0.5).abs() < 1e-12);
+        // NaN-producing empty stats serialize as finite zeros.
+        assert_eq!(j.req_f64("admission_mean").unwrap(), 0.0);
+        // The string round-trips through the parser (fixture format).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.req_f64("horizon").unwrap(), 2.0);
     }
 }

@@ -78,6 +78,21 @@ impl CostModel {
             * (6.0 * dm * dm + (4.0 * (s + n / 2.0) * dm + 2.0 * dm * dm) + 4.0 * dm * df)
     }
 
+    /// FLOPs of the k-th Auto-regressive iteration (k = 1 .. n−1) over a
+    /// prompt padded to s' — the per-decode-step cost continuous batching
+    /// accrues between admissions:
+    /// `L (6 d_m² + (4 (s' + k) d_m + 2 d_m²) + 4 d_m d_f)`.
+    ///
+    /// Summing k = 1..n−1 recovers `decode_flops_per_req` exactly (the
+    /// paper's closed form uses the arithmetic-series mean s' + n/2).
+    pub fn decode_step_flops(&self, s_pad: u32, k: u32) -> f64 {
+        let l = self.spec.layers as f64;
+        let s = s_pad as f64;
+        let dm = self.spec.d_model as f64;
+        let df = self.spec.d_ff as f64;
+        l * (6.0 * dm * dm + (4.0 * (s + k as f64) * dm + 2.0 * dm * dm) + 4.0 * dm * df)
+    }
+
     /// Total compute FLOPs for one request end-to-end.
     pub fn total_flops_per_req(&self, s_pad: u32, n_out: u32) -> f64 {
         self.prefill_flops_per_req(s_pad) + self.decode_flops_per_req(s_pad, n_out)
@@ -165,6 +180,22 @@ mod tests {
         let f256 = m.decode_flops_per_req(128, 256);
         let f512 = m.decode_flops_per_req(128, 512);
         assert!(f512 > 2.0 * f256);
+    }
+
+    #[test]
+    fn decode_step_flops_sum_matches_closed_form() {
+        // Σ_{k=1}^{n-1} step(k) must equal the paper's closed form used by
+        // the epoch path — the invariant that makes continuous and epoch
+        // batching comparable under the same cost model.
+        let m = b3();
+        for (s, n) in [(128u32, 128u32), (256, 512), (512, 2)] {
+            let sum: f64 = (1..n).map(|k| m.decode_step_flops(s, k)).sum();
+            let closed = m.decode_flops_per_req(s, n);
+            assert!(
+                (sum - closed).abs() <= 1e-6 * closed.max(1.0),
+                "s={s} n={n}: {sum} vs {closed}"
+            );
+        }
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub struct KvCache {
     pub batch: usize,
     /// Per-sequence next write position (= current length).
     pub pos: Vec<i32>,
+    max_seq: usize,
+    d_model: usize,
     k: Vec<Vec<Vec<f32>>>,
     v: Vec<Vec<Vec<f32>>>,
 }
@@ -43,6 +45,8 @@ impl KvCache {
             active,
             batch,
             pos: vec![0; active],
+            max_seq,
+            d_model,
             k: (0..layers).map(|_| slab()).collect(),
             v: (0..layers).map(|_| slab()).collect(),
         }
@@ -53,6 +57,40 @@ impl KvCache {
         let dm = k.len();
         self.k[layer][seq][slot * dm..(slot + 1) * dm].copy_from_slice(k);
         self.v[layer][seq][slot * dm..(slot + 1) * dm].copy_from_slice(v);
+    }
+
+    /// Append a fresh zeroed slot for one more sequence (continuous
+    /// batching: mid-flight admission). Returns the new sequence index.
+    /// Capacity against the engine's batch variants is the engine's job
+    /// (`Engine::prefill_into`); the cache itself just grows.
+    fn admit_slot(&mut self) -> usize {
+        let seq = self.active;
+        for layer in self.k.iter_mut() {
+            layer.push(vec![0f32; self.max_seq * self.d_model]);
+        }
+        for layer in self.v.iter_mut() {
+            layer.push(vec![0f32; self.max_seq * self.d_model]);
+        }
+        self.pos.push(0);
+        self.active += 1;
+        seq
+    }
+
+    /// Evict sequence `seq`, returning its KV slot to the pool (continuous
+    /// batching: completion releases headroom). Uses swap-remove semantics:
+    /// the *last* sequence moves into index `seq`, so a caller tracking a
+    /// parallel per-sequence vector stays aligned by calling its own
+    /// `swap_remove(seq)` in the same breath.
+    pub fn release(&mut self, seq: usize) {
+        assert!(seq < self.active, "release of inactive slot {seq}");
+        for layer in self.k.iter_mut() {
+            layer.swap_remove(seq);
+        }
+        for layer in self.v.iter_mut() {
+            layer.swap_remove(seq);
+        }
+        self.pos.swap_remove(seq);
+        self.active -= 1;
     }
 }
 
@@ -243,6 +281,29 @@ impl Engine {
         self.logits_for(&x[(s - 1) * dm..s * dm])
     }
 
+    /// Admit one more prompt into a *running* batch (continuous batching):
+    /// grows the cache by a slot, prefills the new sequence, and returns its
+    /// last-position logits. The sequences already in flight are untouched —
+    /// each sequence's computation is independent, so mid-flight admission
+    /// is mathematically identical to having co-batched from the start.
+    /// Fails with `BatchTooLarge` when the engine's largest loaded batch
+    /// variant is already full.
+    pub fn prefill_into(&self, prompt: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        if prompt.is_empty() || prompt.len() > self.meta.max_prompt {
+            return Err(EngineError::Other(format!(
+                "prompt length {} out of range 1..={}",
+                prompt.len(),
+                self.meta.max_prompt
+            )));
+        }
+        let b = self.variant_for(cache.active + 1)?;
+        let seq = cache.admit_slot();
+        let logits = self.prefill_one(seq, prompt, cache);
+        cache.pos[seq] = prompt.len() as i32;
+        cache.batch = b;
+        Ok(logits)
+    }
+
     /// One Auto-regressive Stage step for every active sequence in `cache`.
     pub fn decode(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<Vec<f32>>> {
         if tokens.len() != cache.active {
@@ -427,61 +488,69 @@ fn causal_attention(q: &[f32], k: &[f32], v: &[f32], s: usize, nh: usize, dh: us
     out
 }
 
+/// Build a tiny deterministic in-memory engine (no artifacts on disk) —
+/// shared by this module's tests and the serving layer's continuous-mode
+/// tests, so the real decode loop gets CI coverage without `make artifacts`.
 #[cfg(test)]
-mod tests {
-    use super::*;
+pub(crate) fn test_engine() -> Engine {
     use crate::util::rng::Rng;
     use std::collections::BTreeMap;
     use std::path::PathBuf;
 
-    /// Build a tiny deterministic in-memory engine (no artifacts on disk).
+    let (vocab, layers, dm, nh, dh, df) = (32usize, 2usize, 16usize, 2usize, 8usize, 32usize);
+    let meta = Meta {
+        model_name: "tiny-test".into(),
+        vocab,
+        layers,
+        d_model: dm,
+        n_heads: nh,
+        d_head: dh,
+        d_ff: df,
+        max_prompt: 8,
+        max_seq: 16,
+        logit_scale: 8.0,
+        batch_variants: vec![1, 2, 4],
+        param_order: Vec::new(),
+        programs: Vec::new(),
+        weights: BTreeMap::new(),
+        dir: PathBuf::new(),
+    };
+    let mut rng = Rng::new(0xE2E);
+    let mut tensor = |name: &str, dims: Vec<usize>, scale: f64| {
+        let n: usize = dims.iter().product();
+        Tensor {
+            name: name.into(),
+            dims,
+            data: (0..n)
+                .map(|_| (rng.gaussian() * scale) as f32)
+                .collect(),
+        }
+    };
+    let mut params = vec![tensor("embed", vec![vocab, dm], 0.25)];
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+            let dims = match w {
+                "w1" => vec![dm, df],
+                "w2" => vec![df, dm],
+                _ => vec![dm, dm],
+            };
+            params.push(tensor(&format!("layer{l}.{w}"), dims, 0.25));
+        }
+    }
+    Engine {
+        meta,
+        quant_label: "W16A16".into(),
+        params,
+        variants: vec![1, 2, 4],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
     fn tiny_engine() -> Engine {
-        let (vocab, layers, dm, nh, dh, df) = (32usize, 2usize, 16usize, 2usize, 8usize, 32usize);
-        let meta = Meta {
-            model_name: "tiny-test".into(),
-            vocab,
-            layers,
-            d_model: dm,
-            n_heads: nh,
-            d_head: dh,
-            d_ff: df,
-            max_prompt: 8,
-            max_seq: 16,
-            logit_scale: 8.0,
-            batch_variants: vec![1, 2, 4],
-            param_order: Vec::new(),
-            programs: Vec::new(),
-            weights: BTreeMap::new(),
-            dir: PathBuf::new(),
-        };
-        let mut rng = Rng::new(0xE2E);
-        let mut tensor = |name: &str, dims: Vec<usize>, scale: f64| {
-            let n: usize = dims.iter().product();
-            Tensor {
-                name: name.into(),
-                dims,
-                data: (0..n)
-                    .map(|_| (rng.gaussian() * scale) as f32)
-                    .collect(),
-            }
-        };
-        let mut params = vec![tensor("embed", vec![vocab, dm], 0.25)];
-        for l in 0..layers {
-            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
-                let dims = match w {
-                    "w1" => vec![dm, df],
-                    "w2" => vec![df, dm],
-                    _ => vec![dm, dm],
-                };
-                params.push(tensor(&format!("layer{l}.{w}"), dims, 0.25));
-            }
-        }
-        Engine {
-            meta,
-            quant_label: "W16A16".into(),
-            params,
-            variants: vec![1, 2, 4],
-        }
+        test_engine()
     }
 
     #[test]
@@ -538,6 +607,75 @@ mod tests {
         ));
         let (_, mut cache) = e.prefill(&[vec![1, 2]]).unwrap();
         assert!(e.decode(&[1, 2], &mut cache).is_err(), "token count mismatch");
+    }
+
+    #[test]
+    fn mid_flight_admission_matches_solo_run() {
+        // A prompt admitted into a running batch must generate exactly what
+        // it would have generated alone — continuous batching adds
+        // scheduling, not nondeterminism.
+        let e = tiny_engine();
+        let late_prompt = vec![4, 5];
+        let want = e.generate_greedy(&[late_prompt.clone()], 4, None).unwrap()[0].clone();
+
+        let (logits, mut cache) = e.prefill(&[vec![1, 2, 3]]).unwrap();
+        let mut next0 = argmax(&logits[0]);
+        // Sequence 0 decodes one step before the newcomer shows up.
+        let l = e.decode(&[next0], &mut cache).unwrap();
+        next0 = argmax(&l[0]);
+        // Mid-flight admission.
+        let l1 = e.prefill_into(&late_prompt, &mut cache).unwrap();
+        assert_eq!(cache.active, 2);
+        assert_eq!(cache.pos[1], late_prompt.len() as i32);
+        let mut next1 = argmax(&l1);
+        let mut got = vec![next1];
+        while got.len() < 4 {
+            let l = e.decode(&[next0, next1], &mut cache).unwrap();
+            next0 = argmax(&l[0]);
+            next1 = argmax(&l[1]);
+            got.push(next1);
+        }
+        assert_eq!(got, want, "mid-flight admission must not perturb output");
+    }
+
+    #[test]
+    fn release_returns_slot_and_keeps_others_running() {
+        let e = tiny_engine();
+        let solo = e.generate_greedy(&[vec![7, 3, 1]], 5, None).unwrap()[0].clone();
+        let (logits, mut cache) = e.prefill(&[vec![2, 2], vec![7, 3, 1]]).unwrap();
+        let mut next = vec![argmax(&logits[0]), argmax(&logits[1])];
+        let mut got = vec![next[1]];
+        // One joint step, then sequence 0 completes and is evicted.
+        let l = e.decode(&next, &mut cache).unwrap();
+        next = vec![argmax(&l[0]), argmax(&l[1])];
+        got.push(next[1]);
+        cache.release(0);
+        assert_eq!(cache.active, 1);
+        // Sequence 1 moved into slot 0 (swap-remove) and keeps decoding.
+        let mut next1 = next[1];
+        while got.len() < 5 {
+            let l = e.decode(&[next1], &mut cache).unwrap();
+            next1 = argmax(&l[0]);
+            got.push(next1);
+        }
+        assert_eq!(got, solo, "eviction must not disturb surviving sequences");
+    }
+
+    #[test]
+    fn prefill_into_enforces_batch_capacity() {
+        let e = tiny_engine();
+        let prompts: Vec<Vec<i32>> = (0..e.max_batch()).map(|i| vec![1 + i as i32]).collect();
+        let (_, mut cache) = e.prefill(&prompts).unwrap();
+        assert!(matches!(
+            e.prefill_into(&[9], &mut cache),
+            Err(EngineError::BatchTooLarge(5, 4))
+        ));
+        // Releasing one slot makes room again.
+        cache.release(1);
+        assert!(e.prefill_into(&[9], &mut cache).is_ok());
+        assert_eq!(cache.active, e.max_batch());
+        // Shape validation still applies mid-flight.
+        assert!(e.prefill_into(&[], &mut cache).is_err());
     }
 
     #[test]

@@ -40,6 +40,22 @@ pub struct KvCache {
     pub pos: Vec<i32>,
 }
 
+impl KvCache {
+    /// Eviction parity with the host cache: the device cache is padded to a
+    /// fixed batch variant, so "releasing" only retires the *last* active
+    /// row (its padded slot simply stops being read). Interior eviction
+    /// would require a device-side gather; the epoch server's continuous
+    /// mode is host-engine-only for now.
+    pub fn release(&mut self, seq: usize) {
+        assert!(
+            seq + 1 == self.active,
+            "pjrt cache can only release the last active row"
+        );
+        self.pos.pop();
+        self.active -= 1;
+    }
+}
+
 /// The AOT-compiled model, ready to serve.
 pub struct Engine {
     client: PjRtClient,
@@ -112,6 +128,18 @@ impl Engine {
     /// Largest batch the engine can run in one call.
     pub fn max_batch(&self) -> usize {
         self.prefill_exe.keys().copied().max().unwrap_or(0)
+    }
+
+    /// Mid-flight admission (continuous batching) is not implemented for the
+    /// PJRT engine yet: the AOT programs are compiled for fixed batch
+    /// variants, so growing a device-resident cache means re-padding to the
+    /// next variant. The epoch server handles this error by serving the
+    /// request as a solo barrier-style batch instead.
+    pub fn prefill_into(&self, _prompt: &[i32], _cache: &mut KvCache) -> Result<Vec<f32>> {
+        Err(EngineError::Other(
+            "continuous admission requires the host engine (pjrt variants are fixed-batch)"
+                .into(),
+        ))
     }
 
     /// Smallest compiled variant that fits `n` sequences.

@@ -16,4 +16,6 @@ pub mod net;
 pub mod server;
 
 pub use net::{parse_request_line, render_response_line, spawn_listener};
-pub use server::{EpochServer, ServeOutcome, ServeRequest, ServeResponse, ServerConfig};
+pub use server::{
+    EpochServer, ServeHandle, ServeOutcome, ServeRequest, ServeResponse, ServerConfig,
+};

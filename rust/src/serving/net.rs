@@ -11,12 +11,11 @@
 //! writes the reply when generation completes. Prompts given as text are
 //! tokenized with the artifact BPE vocabulary.
 
-use crate::serving::{ServeOutcome, ServeRequest, ServeResponse};
+use crate::serving::{ServeHandle, ServeOutcome, ServeRequest, ServeResponse};
 use crate::tokenizer::Bpe;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 /// Parse one request line. Returns (prompt ids, output_tokens, latency,
@@ -65,7 +64,7 @@ pub fn render_response_line(resp: &ServeResponse, bpe: Option<&Bpe>) -> String {
     Json::obj(fields).to_string()
 }
 
-fn handle_conn(stream: TcpStream, ingest: Sender<ServeRequest>, bpe: Option<Arc<Bpe>>) {
+fn handle_conn(stream: TcpStream, ingest: ServeHandle, bpe: Option<Arc<Bpe>>) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
@@ -108,7 +107,7 @@ fn handle_conn(stream: TcpStream, ingest: Sender<ServeRequest>, bpe: Option<Arc<
 /// listener errors or the process exits.
 pub fn spawn_listener(
     addr: &str,
-    ingest: Sender<ServeRequest>,
+    ingest: ServeHandle,
     bpe: Option<Bpe>,
 ) -> std::io::Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;

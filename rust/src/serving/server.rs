@@ -4,22 +4,46 @@
 //! [`crate::driver::EpochDriver`]; this module contributes the *live*
 //! ingredients — a [`WallClock`] that sleeps to epoch boundaries, the
 //! [`EngineBackend`] that runs real prefill/decode and answers client reply
-//! channels, and the mpsc ingress with engine-shape validation.
+//! channels, and the stamped mpsc ingress with engine-shape validation.
+//!
+//! ## Intake timestamps
+//!
+//! [`ServeHandle::send`] stamps the submission [`Instant`], and the boundary
+//! drain back-dates `Request::arrival` to that instant. Staleness
+//! (`StalePolicy::MaxWait`) therefore measures from when the client actually
+//! submitted, not from when the server happened to drain the channel — with
+//! mid-epoch arrivals the two differ by up to a full epoch.
+//!
+//! ## Batching modes
+//!
+//! `ServerConfig::batching` selects how scheduled batches execute:
+//!
+//! - [`BatchingMode::Epoch`] — the paper's barrier: the batch prefills and
+//!   decodes together, chunked by KV-budget compatibility.
+//! - [`BatchingMode::Continuous`] — decode-step admission: the engine keeps
+//!   one persistent KV cache across epochs; scheduled requests take slots as
+//!   they free, the ingress is polled *between decode steps* so compatible
+//!   mid-epoch arrivals join the running batch immediately (admission
+//!   latency is recorded), and completed sequences are evicted on the spot,
+//!   returning their slot to the gate. Designed for the host engine
+//!   (`runtime::host`); the PJRT engine's fixed-batch programs refuse
+//!   mid-flight admission, so requests that cannot join the running batch
+//!   fall back to solo barrier-style execution instead.
 
 use crate::cluster::{ClusterSpec, GpuSpec};
 use crate::coordinator::{Schedule, Scheduler};
 use crate::driver::{
-    run_epochs, Clock, DriverPolicy, EpochContext, EpochDriver, ExecutionBackend,
+    run_epochs, BatchingMode, Clock, DriverPolicy, EpochContext, EpochDriver, ExecutionBackend,
     InstanceTemplate, QueuedRequest, RejectReason, SPadPolicy, StalePolicy, WallClock,
 };
 use crate::metrics::{Metrics, Outcome};
 use crate::model::{CostModel, LlmSpec};
 use crate::request::Request;
-use crate::runtime::{argmax, Engine};
+use crate::runtime::{argmax, Engine, KvCache};
 use crate::util::rng::Rng;
 use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, SendError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
 
 /// A client request: a prompt plus the paper's ⟨n, τ, a⟩ requirements.
 #[derive(Debug)]
@@ -58,6 +82,32 @@ pub struct ServeResponse {
     pub epoch: Option<u64>,
 }
 
+/// A submitted request plus the instant the client handed it over — the
+/// arrival timestamp staleness and waiting time are measured from.
+struct Stamped {
+    req: ServeRequest,
+    submitted: Instant,
+}
+
+/// Clonable ingest handle. `send` stamps the submission instant, so the
+/// server's view of a request's arrival is the client's send, not the
+/// boundary drain that happens to pick it up.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: Sender<Stamped>,
+}
+
+impl ServeHandle {
+    pub fn send(&self, req: ServeRequest) -> Result<(), SendError<ServeRequest>> {
+        self.tx
+            .send(Stamped {
+                req,
+                submitted: Instant::now(),
+            })
+            .map_err(|SendError(stamped)| SendError(stamped.req))
+    }
+}
+
 /// Server configuration.
 pub struct ServerConfig {
     /// Epoch protocol. The tiny model serves sub-second epochs comfortably.
@@ -68,6 +118,8 @@ pub struct ServerConfig {
     /// Requests older than this many epochs are rejected.
     pub max_wait_epochs: u64,
     pub seed: u64,
+    /// Epoch-barrier or continuous (decode-step admission) execution.
+    pub batching: BatchingMode,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +135,7 @@ impl Default for ServerConfig {
             channel: ChannelParams::default(),
             max_wait_epochs: 8,
             seed: 7,
+            batching: BatchingMode::Epoch,
         }
     }
 }
@@ -96,16 +149,62 @@ struct Pending {
     submitted: Instant,
 }
 
-/// Real-engine execution backend: runs the scheduled batch through
-/// prefill/decode in chunks of at most `max_batch`, records wall-clock
-/// outcomes, and answers every reply channel (scheduled or rejected).
+/// One sequence of the continuous running batch. `flights[i]` always
+/// corresponds to cache sequence `i` — completion swap-removes both sides
+/// in the same breath, which is what keeps them aligned.
+struct LiveFlight {
+    entry: QueuedRequest<Pending>,
+    /// Tokens emitted so far.
+    out: Vec<i32>,
+    /// The next token to emit (argmax of the latest logits).
+    next: i32,
+    /// Epoch the request was admitted in.
+    epoch: u64,
+}
+
+/// Real-engine execution backend. Epoch mode runs each scheduled batch
+/// through prefill/decode in KV-compatible chunks; continuous mode keeps a
+/// persistent cache and admits at decode-step granularity (module docs).
+/// Owns the ingress receiver so the continuous decode loop can poll it
+/// between steps.
 struct EngineBackend {
     engine: Engine,
+    mode: BatchingMode,
+    ingress: Receiver<Stamped>,
+    /// Mid-epoch arrivals that could not take a slot on the spot; flushed
+    /// into the driver queue at the next boundary drain (their stamps, and
+    /// hence arrival timestamps, are preserved).
+    deferred: Vec<Stamped>,
+    /// Continuous mode: the persistent KV cache and its aligned flights.
+    cache: Option<KvCache>,
+    flights: Vec<LiveFlight>,
+    /// Scheduled entries waiting for a free slot, with their epoch index.
+    waiting: Vec<(QueuedRequest<Pending>, u64)>,
+    /// Monotonic id source for every request entering the system.
+    next_id: u64,
+    /// Anchor of the current run's clock (driver seconds = elapsed since).
+    run_start: Option<Instant>,
 }
 
 impl EngineBackend {
-    fn engine(&self) -> &Engine {
-        &self.engine
+    fn new(engine: Engine, mode: BatchingMode, ingress: Receiver<Stamped>) -> Self {
+        EngineBackend {
+            engine,
+            mode,
+            ingress,
+            deferred: Vec::new(),
+            cache: None,
+            flights: Vec::new(),
+            waiting: Vec::new(),
+            next_id: 0,
+            run_start: None,
+        }
+    }
+
+    fn now_secs(&self) -> f64 {
+        self.run_start
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
     }
 
     fn respond_rejected(p: &QueuedRequest<Pending>, epoch: Option<u64>) {
@@ -116,6 +215,79 @@ impl EngineBackend {
             epoch,
         });
     }
+
+    /// Does the request fit the engine's compiled shapes at all?
+    fn shape_ok(&self, prompt_len: usize, output_tokens: u32) -> bool {
+        let max_prompt = self.engine.meta.max_prompt;
+        let budget = (self.engine.meta.max_seq - prompt_len.min(max_prompt)) as u32;
+        prompt_len > 0
+            && prompt_len <= max_prompt
+            && output_tokens > 0
+            && output_tokens <= budget
+    }
+
+    /// Reject an un-offerable submission outright (shape or admission).
+    fn reject_stamped(s: Stamped, metrics: &mut Metrics) {
+        metrics.record_offered(1);
+        metrics.record_outcome(Outcome::Dropped, 0.0);
+        let _ = s.req.respond.send(ServeResponse {
+            outcome: ServeOutcome::Rejected,
+            tokens: vec![],
+            latency: s.submitted.elapsed().as_secs_f64(),
+            epoch: None,
+        });
+    }
+
+    /// Drain deferred + newly-submitted requests into the driver queue
+    /// (non-blocking). Shape validation happens here — before a request
+    /// ever reaches the scheduler — and `Request::arrival` is back-dated to
+    /// the submission stamp, so staleness measures true waiting time.
+    fn drain_into(&mut self, driver: &mut EpochDriver<Pending>, now: f64) {
+        let mut incoming = std::mem::take(&mut self.deferred);
+        loop {
+            match self.ingress.try_recv() {
+                Ok(s) => incoming.push(s),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        for s in incoming {
+            if !self.shape_ok(s.req.prompt.len(), s.req.output_tokens) {
+                Self::reject_stamped(s, &mut driver.metrics);
+                continue;
+            }
+            let QueuedRequest { req, payload } = self.intake(s, now);
+            driver.offer(req, payload);
+        }
+    }
+
+    /// Turn a validated submission into a driver-ready entry: assign the id
+    /// and back-date `arrival` to the submission stamp. The single
+    /// construction path shared by the boundary drain and the continuous
+    /// fast path — their arrival timestamps and id scheme cannot diverge.
+    fn intake(&mut self, s: Stamped, now: f64) -> QueuedRequest<Pending> {
+        let arrival = (now - s.submitted.elapsed().as_secs_f64()).max(0.0);
+        let req = Request {
+            id: self.next_id,
+            arrival,
+            prompt_tokens: s.req.prompt.len() as u32,
+            output_tokens: s.req.output_tokens,
+            latency_req: s.req.latency_req,
+            accuracy_req: s.req.accuracy_req,
+        };
+        self.next_id += 1;
+        QueuedRequest {
+            req,
+            payload: Pending {
+                prompt: s.req.prompt,
+                respond: s.req.respond,
+                submitted: s.submitted,
+            },
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Epoch-barrier execution
+    // ------------------------------------------------------------------
 
     fn run_batch(
         &mut self,
@@ -169,15 +341,10 @@ impl EngineBackend {
         }
         Ok(())
     }
-}
 
-impl ExecutionBackend for EngineBackend {
-    type Payload = Pending;
-
-    fn execute(
+    fn execute_epoch(
         &mut self,
         ctx: &EpochContext<'_>,
-        _schedule: &Schedule,
         batch: Vec<QueuedRequest<Pending>>,
         metrics: &mut Metrics,
     ) {
@@ -197,6 +364,295 @@ impl ExecutionBackend for EngineBackend {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Continuous execution (decode-step admission)
+    // ------------------------------------------------------------------
+
+    fn slots_free(&self) -> bool {
+        self.flights.len() < self.engine.max_batch()
+    }
+
+    /// Prefill `entry` into the persistent cache and join the running
+    /// batch. Consumes the entry either way: on an engine refusal (e.g. the
+    /// PJRT backend, or a shape race) the client is answered with a reject.
+    fn admit(&mut self, entry: QueuedRequest<Pending>, epoch: u64, metrics: &mut Metrics) {
+        if self.flights.is_empty() {
+            // Empty batch: start from a fresh prefill rather than growing a
+            // drained cache — also what keeps the PJRT engine (which cannot
+            // grow a cache mid-flight) on the continuous path whenever the
+            // batch restarts from empty.
+            self.cache = None;
+        }
+        let logits = if self.cache.is_some() {
+            let cache = self.cache.as_mut().unwrap();
+            self.engine.prefill_into(&entry.payload.prompt, cache)
+        } else {
+            match self
+                .engine
+                .prefill(std::slice::from_ref(&entry.payload.prompt))
+            {
+                Ok((mut rows, cache)) => {
+                    self.cache = Some(cache);
+                    Ok(rows.swap_remove(0))
+                }
+                Err(e) => Err(e),
+            }
+        };
+        match logits {
+            Ok(row) => {
+                metrics.record_admission(entry.payload.submitted.elapsed().as_secs_f64());
+                self.flights.push(LiveFlight {
+                    next: argmax(&row),
+                    out: Vec::new(),
+                    epoch,
+                    entry,
+                });
+            }
+            Err(e) => {
+                // Mid-flight admission unsupported (the PJRT engine's AOT
+                // programs are fixed-batch) or failed: degrade to a solo
+                // barrier-style batch so the request is still served rather
+                // than rejected.
+                eprintln!("continuous admission failed ({e}); falling back to barrier execution");
+                if let Err(e2) = self.run_batch(std::slice::from_ref(&entry), epoch, metrics) {
+                    eprintln!("fallback batch failed: {e2}");
+                    Self::respond_rejected(&entry, Some(epoch));
+                    metrics.record_outcome(Outcome::Dropped, 0.0);
+                }
+            }
+        }
+    }
+
+    /// Move slot-waiting scheduled entries into the batch while slots last.
+    /// Entries whose deadline already passed while queued for a slot are
+    /// dropped (the live mirror of the analytic backend's
+    /// `drop_stale_pending`): serving them would only burn slot time that
+    /// fresh feasible requests need.
+    fn admit_waiting(&mut self, metrics: &mut Metrics) {
+        let waiting = std::mem::take(&mut self.waiting);
+        for (entry, epoch) in waiting {
+            if entry.payload.submitted.elapsed().as_secs_f64() > entry.req.latency_req {
+                Self::respond_rejected(&entry, Some(epoch));
+                metrics.record_outcome(Outcome::Dropped, 0.0);
+            } else if self.slots_free() {
+                self.admit(entry, epoch, metrics);
+            } else {
+                self.waiting.push((entry, epoch));
+            }
+        }
+    }
+
+    /// Try to fast-path one submission into the running batch. Invalid or
+    /// inadmissible submissions are rejected outright (consumed); a valid
+    /// one is admitted when a slot is free and no scheduled waiter is queued
+    /// ahead of it, otherwise it is handed back for deferral.
+    fn try_fast_admit(
+        &mut self,
+        s: Stamped,
+        ctx: &EpochContext<'_>,
+        metrics: &mut Metrics,
+    ) -> Option<Stamped> {
+        if !self.shape_ok(s.req.prompt.len(), s.req.output_tokens) {
+            Self::reject_stamped(s, metrics);
+            return None;
+        }
+        // Constraint (1e) — the same admission screen the driver applies at
+        // the boundary.
+        if !ctx
+            .inst
+            .quant
+            .satisfies_accuracy(&ctx.inst.cost.spec.name, s.req.accuracy_req)
+        {
+            Self::reject_stamped(s, metrics);
+            return None;
+        }
+        // Deadline screen — the fast-path counterpart of the driver's stale
+        // policy and `admit_waiting`'s check: a submission whose budget has
+        // already expired must not burn a slot decoding to a useless late
+        // completion.
+        if s.submitted.elapsed().as_secs_f64() > s.req.latency_req {
+            Self::reject_stamped(s, metrics);
+            return None;
+        }
+        if !(self.slots_free() && self.waiting.is_empty()) {
+            return Some(s);
+        }
+        metrics.record_offered(1);
+        let now = self.now_secs();
+        let entry = self.intake(s, now);
+        self.admit(entry, ctx.epoch_idx, metrics);
+        None
+    }
+
+    /// Re-scan earlier deferred arrivals as slots free up — they joined the
+    /// gate first, so they must be admitted before anything newer (the live
+    /// mirror of the analytic gate's in-order re-scan after completions).
+    fn admit_deferred(&mut self, ctx: &EpochContext<'_>, metrics: &mut Metrics) {
+        let deferred = std::mem::take(&mut self.deferred);
+        for s in deferred {
+            if let Some(s) = self.try_fast_admit(s, ctx, metrics) {
+                self.deferred.push(s);
+            }
+        }
+    }
+
+    /// Poll the ingress between decode steps: valid, accuracy-admissible
+    /// arrivals take a free slot immediately (decode-step admission — this
+    /// is the continuous-batching fast path); anything that cannot join now
+    /// is deferred — retried as slots free, flushed to the driver at the
+    /// next boundary drain. Scheduled waiters keep priority, and FCFS holds
+    /// among fast-path arrivals: while anything sits deferred, newer
+    /// arrivals queue behind it instead of leapfrogging into a freed slot.
+    fn poll_ingress(&mut self, ctx: &EpochContext<'_>, metrics: &mut Metrics) {
+        loop {
+            match self.ingress.try_recv() {
+                Ok(s) => {
+                    if !self.deferred.is_empty() {
+                        self.deferred.push(s);
+                        continue;
+                    }
+                    if let Some(s) = self.try_fast_admit(s, ctx, metrics) {
+                        self.deferred.push(s);
+                    }
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+
+    /// Emit the pending token of every flight, then retire completed ones —
+    /// eviction releases the KV slot (and its cache row) back to the gate.
+    fn emit_and_complete(&mut self, metrics: &mut Metrics) {
+        let mut i = 0;
+        while i < self.flights.len() {
+            let next = self.flights[i].next;
+            self.flights[i].out.push(next);
+            if self.flights[i].out.len() >= self.flights[i].entry.req.output_tokens as usize {
+                let f = self.flights.swap_remove(i);
+                if let Some(cache) = self.cache.as_mut() {
+                    cache.release(i);
+                }
+                let latency = f.entry.payload.submitted.elapsed().as_secs_f64();
+                let in_deadline = latency <= f.entry.req.latency_req;
+                metrics.record_outcome(
+                    if in_deadline {
+                        Outcome::CompletedInDeadline
+                    } else {
+                        Outcome::CompletedLate
+                    },
+                    latency,
+                );
+                let _ = f.entry.payload.respond.send(ServeResponse {
+                    outcome: if in_deadline {
+                        ServeOutcome::Completed
+                    } else {
+                        ServeOutcome::CompletedLate
+                    },
+                    tokens: f.out,
+                    latency,
+                    epoch: Some(f.epoch),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One decode step for every in-flight sequence. A decode failure is
+    /// catastrophic for the running batch: every flight is answered with a
+    /// reject and the cache is rebuilt from scratch.
+    fn decode_round(&mut self, metrics: &mut Metrics) {
+        if self.flights.is_empty() {
+            return;
+        }
+        let tokens: Vec<i32> = self.flights.iter().map(|f| f.next).collect();
+        let cache = self.cache.as_mut().expect("in-flight sequences imply a cache");
+        match self.engine.decode(&tokens, cache) {
+            Ok(logits) => {
+                for (f, row) in self.flights.iter_mut().zip(logits.iter()) {
+                    f.next = argmax(row);
+                }
+            }
+            Err(e) => {
+                eprintln!("continuous decode failed: {e}");
+                for f in self.flights.drain(..) {
+                    Self::respond_rejected(&f.entry, Some(f.epoch));
+                    metrics.record_outcome(Outcome::Dropped, 0.0);
+                }
+                self.cache = None;
+            }
+        }
+    }
+
+    fn execute_continuous(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        batch: Vec<QueuedRequest<Pending>>,
+        metrics: &mut Metrics,
+    ) {
+        let epoch_end = ctx.now + ctx.inst.epoch.duration;
+        for entry in batch {
+            self.waiting.push((entry, ctx.epoch_idx));
+        }
+        // Leave a small guard before the boundary so an idle poll does not
+        // overshoot it and get charged as an epoch overrun.
+        const BOUNDARY_GUARD: f64 = 0.005;
+        loop {
+            self.admit_waiting(metrics);
+            self.admit_deferred(ctx, metrics);
+            self.poll_ingress(ctx, metrics);
+            if self.flights.is_empty() {
+                if !self.waiting.is_empty() {
+                    // Slots are free (no flights): the next admit_waiting
+                    // pass will place them.
+                    continue;
+                }
+                // Idle: keep polling the ingress until just before the
+                // boundary, so a mid-epoch arrival into an *empty* server
+                // is also admitted at decode-step (not barrier) latency.
+                let now = self.now_secs();
+                if now + BOUNDARY_GUARD >= epoch_end {
+                    break;
+                }
+                std::thread::sleep(Duration::from_secs_f64(
+                    (epoch_end - BOUNDARY_GUARD - now).min(0.002).max(0.0005),
+                ));
+                continue;
+            }
+            // Budget check *before* the round, with the same guard: a
+            // routine final round must not overshoot the boundary and turn
+            // `Metrics::epoch_overruns` into per-epoch noise — whatever is
+            // still decoding persists (cache and all) into the next
+            // `step_epoch` call. Genuinely over-long single rounds still
+            // register as overruns.
+            if self.now_secs() + BOUNDARY_GUARD >= epoch_end {
+                break;
+            }
+            self.emit_and_complete(metrics);
+            if !self.flights.is_empty() {
+                metrics.record_step_occupancy(self.flights.len());
+                self.decode_round(metrics);
+            }
+        }
+    }
+}
+
+impl ExecutionBackend for EngineBackend {
+    type Payload = Pending;
+
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        _schedule: &Schedule,
+        batch: Vec<QueuedRequest<Pending>>,
+        metrics: &mut Metrics,
+    ) {
+        match self.mode {
+            BatchingMode::Epoch => self.execute_epoch(ctx, batch, metrics),
+            BatchingMode::Continuous => self.execute_continuous(ctx, batch, metrics),
+        }
+    }
+
     fn reject(
         &mut self,
         entry: QueuedRequest<Pending>,
@@ -205,6 +661,33 @@ impl ExecutionBackend for EngineBackend {
     ) {
         metrics.record_outcome(Outcome::Dropped, 0.0);
         Self::respond_rejected(&entry, None);
+    }
+
+    /// Shutdown: finish generating for everything already admitted or
+    /// holding a scheduled slot claim, so no client blocks forever on its
+    /// reply channel. (Queue leftovers were already rejected by the driver;
+    /// deferred fast-path arrivals were flushed by the final drain.)
+    fn finish(&mut self, _horizon: f64, metrics: &mut Metrics) {
+        if self.mode != BatchingMode::Continuous {
+            return;
+        }
+        loop {
+            self.admit_waiting(metrics);
+            if self.flights.is_empty() {
+                if self.waiting.is_empty() {
+                    break;
+                }
+                continue;
+            }
+            self.emit_and_complete(metrics);
+            if !self.flights.is_empty() {
+                metrics.record_step_occupancy(self.flights.len());
+                self.decode_round(metrics);
+            }
+        }
+        for s in std::mem::take(&mut self.deferred) {
+            Self::reject_stamped(s, metrics);
+        }
     }
 }
 
@@ -216,7 +699,9 @@ impl ExecutionBackend for EngineBackend {
 /// fails the whole chunk. First-fit over all open chunks (an incompatible
 /// request in the middle of the batch must not fragment everything after
 /// it); a lone request always fits, because ingress validation guarantees
-/// `prompt + output ≤ max_seq`.
+/// `prompt + output ≤ max_seq`. (Continuous mode has no such constraint:
+/// completed sequences are evicted before the next step, so no sequence is
+/// ever driven past its own `prompt + output` length.)
 fn chunk_for_decode(
     batch: Vec<QueuedRequest<Pending>>,
     max_batch: usize,
@@ -254,9 +739,7 @@ pub struct EpochServer {
     driver: EpochDriver<Pending>,
     backend: EngineBackend,
     scheduler: Box<dyn Scheduler>,
-    ingress_tx: Sender<ServeRequest>,
-    ingress_rx: Receiver<ServeRequest>,
-    next_id: u64,
+    ingress_tx: Sender<Stamped>,
 }
 
 impl EpochServer {
@@ -329,11 +812,9 @@ impl EpochServer {
         let (tx, rx) = channel();
         EpochServer {
             driver,
-            backend: EngineBackend { engine },
+            backend: EngineBackend::new(engine, config.batching, rx),
             scheduler,
             ingress_tx: tx,
-            ingress_rx: rx,
-            next_id: 0,
         }
     }
 
@@ -351,9 +832,11 @@ impl EpochServer {
         (flops / dt).max(1e6)
     }
 
-    /// Clonable ingest handle for client threads.
-    pub fn handle(&self) -> Sender<ServeRequest> {
-        self.ingress_tx.clone()
+    /// Clonable ingest handle for client threads (stamps submission time).
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            tx: self.ingress_tx.clone(),
+        }
     }
 
     /// Run metrics so far (offered/served counters, latency, search effort).
@@ -361,73 +844,18 @@ impl EpochServer {
         &self.driver.metrics
     }
 
-    /// Drain newly-submitted requests into the driver queue (non-blocking).
-    /// Shape validation against the engine happens here — before a request
-    /// ever reaches the scheduler.
-    fn drain_ingress(
-        driver: &mut EpochDriver<Pending>,
-        engine: &Engine,
-        rx: &Receiver<ServeRequest>,
-        next_id: &mut u64,
-        now: f64,
-    ) {
-        loop {
-            match rx.try_recv() {
-                Ok(sr) => {
-                    let max_prompt = engine.meta.max_prompt;
-                    let budget =
-                        (engine.meta.max_seq - sr.prompt.len().min(max_prompt)) as u32;
-                    let reject = sr.prompt.is_empty()
-                        || sr.prompt.len() > max_prompt
-                        || sr.output_tokens == 0
-                        || sr.output_tokens > budget;
-                    if reject {
-                        driver.metrics.record_offered(1);
-                        driver.metrics.record_outcome(Outcome::Dropped, 0.0);
-                        let _ = sr.respond.send(ServeResponse {
-                            outcome: ServeOutcome::Rejected,
-                            tokens: vec![],
-                            latency: 0.0,
-                            epoch: None,
-                        });
-                        continue;
-                    }
-                    let req = Request {
-                        id: *next_id,
-                        arrival: now,
-                        prompt_tokens: sr.prompt.len() as u32,
-                        output_tokens: sr.output_tokens,
-                        latency_req: sr.latency_req,
-                        accuracy_req: sr.accuracy_req,
-                    };
-                    *next_id += 1;
-                    driver.offer(
-                        req,
-                        Pending {
-                            prompt: sr.prompt,
-                            respond: sr.respond,
-                            submitted: Instant::now(),
-                        },
-                    );
-                }
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
-    }
-
-    /// Run `epochs` epochs of the Fig. 2 protocol, real time. Returns when
-    /// done; metrics accumulate and are readable via [`Self::metrics`].
+    /// Run `epochs` epochs of the protocol, real time. Returns when done;
+    /// metrics accumulate and are readable via [`Self::metrics`].
     pub fn run_for(&mut self, epochs: u64) {
         let duration = self.driver.epoch_duration();
+        self.backend.run_start = Some(Instant::now());
         let mut clock = WallClock::start();
         {
             let driver = &mut self.driver;
             let backend = &mut self.backend;
             let scheduler = self.scheduler.as_mut();
-            let rx = &self.ingress_rx;
-            let next_id = &mut self.next_id;
             run_epochs(driver, scheduler, backend, &mut clock, epochs, |d, b, now| {
-                Self::drain_ingress(d, b.engine(), rx, next_id, now);
+                b.drain_into(d, now);
             });
         }
         // Hold the line until the final epoch boundary so the advertised
@@ -436,14 +864,9 @@ impl EpochServer {
         let end = clock.now();
         // Shutdown: reject whatever is still queued (and anything that
         // arrived after the last boundary) so clients waiting on their reply
-        // channels always unblock.
-        Self::drain_ingress(
-            &mut self.driver,
-            self.backend.engine(),
-            &self.ingress_rx,
-            &mut self.next_id,
-            end,
-        );
+        // channels always unblock. The driver's `finish` then asks the
+        // backend to drain its in-flight batch (continuous mode).
+        self.backend.drain_into(&mut self.driver, end);
         // Counters accumulate across run_for calls, so the horizon must too
         // — otherwise a second call would divide two runs' completions by
         // one run's wall span and inflate throughput().
@@ -520,5 +943,252 @@ mod tests {
         let chunks = chunk_for_decode(batch, 4, 64);
         assert_eq!(chunks.len(), 1);
         assert_eq!(chunks[0].len(), 3);
+    }
+}
+
+/// Tests that need a real (in-memory) engine: host backend only.
+#[cfg(all(test, not(feature = "pjrt")))]
+mod host_tests {
+    use super::*;
+    use crate::coordinator::{Dftsp, EpochParams, ProblemInstance};
+    use crate::quant::QuantSpec;
+    use crate::request::EpochRequest;
+    use crate::runtime::host::test_engine;
+    use std::time::Duration;
+
+    fn tiny_template() -> InstanceTemplate {
+        let meta = test_engine().meta;
+        InstanceTemplate {
+            cost: CostModel::new(LlmSpec::new(
+                &meta.model_name,
+                meta.layers as u32,
+                meta.d_model as u32,
+                meta.n_heads as u32,
+                meta.d_head as u32,
+            )),
+            quant: QuantSpec::fp16(),
+            cluster: ClusterSpec::new(
+                GpuSpec {
+                    name: "test-cpu".into(),
+                    flops: 1e12,
+                    mem_bytes: 4 << 30,
+                },
+                1,
+            ),
+            epoch: EpochParams {
+                // Short window: continuous execute() idle-polls to the
+                // boundary, so this bounds the unit tests' wall time.
+                duration: 0.25,
+                t_u: 0.0,
+                t_d: 0.0,
+            },
+        }
+    }
+
+    fn tiny_driver(max_wait: f64) -> EpochDriver<Pending> {
+        EpochDriver::new(
+            tiny_template(),
+            DriverPolicy {
+                stale: StalePolicy::MaxWait(max_wait),
+                s_pad: SPadPolicy::Fixed(8),
+                allocation: AllocationPolicy::MinOnly,
+            },
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(3),
+        )
+    }
+
+    struct Never;
+    impl Scheduler for Never {
+        fn name(&self) -> &'static str {
+            "never"
+        }
+        fn schedule(
+            &mut self,
+            _inst: &ProblemInstance,
+            _c: &[EpochRequest],
+        ) -> Schedule {
+            Schedule::empty()
+        }
+    }
+
+    /// Regression (issue satellite): staleness must measure from the
+    /// *arrival timestamp* (submission stamp), not from the boundary drain
+    /// that offered the request. A request that already waited 2 s when it
+    /// is drained must be stale under MaxWait(1.0) at that very boundary.
+    #[test]
+    fn staleness_measured_from_submission_not_drain() {
+        let (tx, rx) = channel();
+        let mut backend = EngineBackend::new(test_engine(), BatchingMode::Epoch, rx);
+        let mut driver = tiny_driver(1.0);
+        let (rtx, rrx) = channel();
+        tx.send(Stamped {
+            req: ServeRequest {
+                prompt: vec![1, 2],
+                output_tokens: 2,
+                latency_req: 30.0,
+                accuracy_req: 0.0,
+                respond: rtx,
+            },
+            submitted: Instant::now() - Duration::from_secs(2),
+        })
+        .unwrap();
+        backend.drain_into(&mut driver, 5.0);
+        assert_eq!(driver.queue_len(), 1);
+        driver.step_epoch(&mut Never, &mut backend, 5.0);
+        assert_eq!(
+            driver.queue_len(),
+            0,
+            "waited ~2 s before the drain: stale under MaxWait(1.0)"
+        );
+        assert_eq!(driver.metrics.dropped, 1);
+        let resp = rrx.recv().expect("client must be answered");
+        assert_eq!(resp.outcome, ServeOutcome::Rejected);
+    }
+
+    /// A fresh mid-epoch submission is *not* stale: back-dating must not
+    /// overshoot (arrival clamps into the current run).
+    #[test]
+    fn fresh_submission_survives_the_drain() {
+        let (tx, rx) = channel();
+        let mut backend = EngineBackend::new(test_engine(), BatchingMode::Epoch, rx);
+        let mut driver = tiny_driver(1.0);
+        let (rtx, _rrx) = channel();
+        tx.send(Stamped {
+            req: ServeRequest {
+                prompt: vec![1, 2],
+                output_tokens: 2,
+                latency_req: 30.0,
+                accuracy_req: 0.0,
+                respond: rtx,
+            },
+            submitted: Instant::now(),
+        })
+        .unwrap();
+        backend.drain_into(&mut driver, 5.0);
+        driver.step_epoch(&mut Never, &mut backend, 5.0);
+        assert_eq!(driver.queue_len(), 1, "waited ~0 s: not stale");
+    }
+
+    /// Continuous mode: a request polled from the ingress *between decode
+    /// steps* joins the running batch immediately, overlaps with the flight
+    /// already decoding, and generates exactly what a solo run would.
+    #[test]
+    fn mid_epoch_arrival_joins_running_batch() {
+        let want = test_engine()
+            .generate_greedy(&[vec![3, 4]], 3, None)
+            .unwrap()[0]
+            .clone();
+        let (tx, rx) = channel();
+        let mut backend = EngineBackend::new(test_engine(), BatchingMode::Continuous, rx);
+        backend.run_start = Some(Instant::now());
+        let mut metrics = Metrics::new();
+        let template = tiny_template();
+        let inst = ProblemInstance::new(
+            template.cost.clone(),
+            template.quant.clone(),
+            template.cluster.clone(),
+            template.epoch.clone(),
+            8,
+            0.0,
+        );
+        let ctx = EpochContext {
+            inst: &inst,
+            annotated: &[],
+            allocations: &[],
+            now: 0.0,
+            epoch_idx: 0,
+        };
+        // One scheduled flight occupies the batch…
+        let (rtx0, rrx0) = channel();
+        let scheduled = QueuedRequest {
+            req: Request {
+                id: 0,
+                arrival: 0.0,
+                prompt_tokens: 2,
+                output_tokens: 12,
+                latency_req: 30.0,
+                accuracy_req: 0.0,
+            },
+            payload: Pending {
+                prompt: vec![1, 2],
+                respond: rtx0,
+                submitted: Instant::now(),
+            },
+        };
+        // …and a second request is already sitting in the ingress, as if it
+        // arrived mid-epoch.
+        let (rtx1, rrx1) = channel();
+        tx.send(Stamped {
+            req: ServeRequest {
+                prompt: vec![3, 4],
+                output_tokens: 3,
+                latency_req: 30.0,
+                accuracy_req: 0.0,
+                respond: rtx1,
+            },
+            submitted: Instant::now(),
+        })
+        .unwrap();
+
+        backend.execute(&ctx, &Schedule::empty(), vec![scheduled], &mut metrics);
+
+        let r0 = rrx0.try_recv().expect("scheduled flight completed");
+        assert_eq!(r0.outcome, ServeOutcome::Completed);
+        assert_eq!(r0.tokens.len(), 12);
+        let r1 = rrx1.try_recv().expect("mid-epoch arrival completed");
+        assert_eq!(r1.outcome, ServeOutcome::Completed);
+        assert_eq!(r1.tokens, want, "decode-step admission must not perturb output");
+        assert_eq!(metrics.admission_latency.count(), 2);
+        assert!(
+            metrics.inflight_occupancy.max() >= 2.0,
+            "the two requests must actually co-decode"
+        );
+        assert_eq!(backend.flights.len(), 0);
+        assert_eq!(metrics.completed_in_deadline, 2);
+    }
+
+    /// Continuous mode end-to-end through the real `EpochServer` loop:
+    /// tokens must match the direct engine output and accounting must
+    /// close.
+    #[test]
+    fn continuous_server_serves_and_matches_direct_output() {
+        let want = test_engine()
+            .generate_greedy(&[vec![5, 6, 7]], 4, None)
+            .unwrap()[0]
+            .clone();
+        let cfg = ServerConfig {
+            epoch: EpochParams {
+                duration: 0.1,
+                t_u: 0.01,
+                t_d: 0.01,
+            },
+            batching: BatchingMode::Continuous,
+            ..Default::default()
+        };
+        let mut server = EpochServer::new(test_engine(), cfg, Box::new(Dftsp::new()));
+        let handle = server.handle();
+        let (rtx, rrx) = channel();
+        handle
+            .send(ServeRequest {
+                prompt: vec![5, 6, 7],
+                output_tokens: 4,
+                latency_req: 10.0,
+                accuracy_req: 0.2,
+                respond: rtx,
+            })
+            .unwrap();
+        server.run_for(4);
+        let resp = rrx.recv().expect("response");
+        assert_eq!(resp.outcome, ServeOutcome::Completed);
+        assert_eq!(resp.tokens, want);
+        let m = server.metrics();
+        assert_eq!(m.offered, 1);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+        assert_eq!(m.admission_latency.count(), 1);
     }
 }

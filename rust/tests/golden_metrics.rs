@@ -1,0 +1,85 @@
+//! Golden `Metrics` fixtures — freeze one epoch-mode and one
+//! continuous-mode sim run (fixed seed, the paper's Table I scenario
+//! template) as JSON under `tests/golden/`, compared field-by-field with a
+//! tolerance, so future refactors can't silently shift `Metrics`.
+//!
+//! Blessing: the first run (or any run with `UPDATE_GOLDEN=1`) writes the
+//! fixture and passes; commit the generated `tests/golden/*.json` files.
+//! Subsequent runs compare against the committed fixtures.
+
+use edgellm::coordinator::Dftsp;
+use edgellm::driver::BatchingMode;
+use edgellm::metrics::Metrics;
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::json::Json;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Relative tolerance for field comparison. The simulator is bit-
+/// deterministic on one toolchain; the tolerance only absorbs cross-
+/// platform float-formatting and libm differences.
+const REL_TOL: f64 = 1e-6;
+
+fn check_or_bless(name: &str, m: &Metrics) {
+    let path = golden_dir().join(format!("{name}.json"));
+    let current = m.to_json();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        std::fs::write(&path, format!("{current}\n")).expect("write fixture");
+        eprintln!("blessed golden fixture {path:?} — commit it");
+        return;
+    }
+    let src = std::fs::read_to_string(&path).expect("read fixture");
+    let want = Json::parse(src.trim()).expect("fixture parses");
+    let (Json::Obj(want_fields), Json::Obj(current_fields)) = (&want, &current) else {
+        panic!("golden `{name}`: fixture and metrics must both be JSON objects");
+    };
+    // Every frozen field must still exist and match; fields *added* to
+    // Metrics later are allowed (bless to pick them up).
+    for (key, want_v) in want_fields {
+        let cur_v = current_fields
+            .get(key)
+            .unwrap_or_else(|| panic!("golden `{name}`: field `{key}` vanished from Metrics"));
+        let w = want_v
+            .as_f64()
+            .unwrap_or_else(|| panic!("golden `{name}`: fixture field `{key}` not numeric"));
+        let c = cur_v
+            .as_f64()
+            .unwrap_or_else(|| panic!("golden `{name}`: current field `{key}` not numeric"));
+        let tol = REL_TOL * w.abs().max(1.0);
+        assert!(
+            (w - c).abs() <= tol,
+            "golden `{name}` field `{key}` drifted: fixture {w} vs current {c}\n\
+             (intentional change? re-bless with UPDATE_GOLDEN=1 and commit)"
+        );
+    }
+}
+
+/// Paper §IV / Table I scenario, trimmed to a CI-friendly horizon but
+/// otherwise untouched: BLOOM-3B, W8A16/GPTQ, 20×TX2, 2 s epochs, λ=50.
+fn table1_config() -> SimConfig {
+    SimConfig {
+        epochs: 15,
+        seed: 42,
+        ..SimConfig::paper_default()
+    }
+}
+
+#[test]
+fn golden_epoch_mode_dftsp() {
+    let m = sim::run(&table1_config(), &mut Dftsp::new());
+    assert!(m.offered > 0 && m.completed_in_deadline > 0, "run not degenerate");
+    check_or_bless("epoch_dftsp_table1", &m);
+}
+
+#[test]
+fn golden_continuous_mode_dftsp() {
+    let mut cfg = table1_config();
+    cfg.batching = BatchingMode::Continuous;
+    let m = sim::run(&cfg, &mut Dftsp::new());
+    assert!(m.offered > 0 && m.completed_in_deadline > 0, "run not degenerate");
+    check_or_bless("continuous_dftsp_table1", &m);
+}

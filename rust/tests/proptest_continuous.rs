@@ -1,0 +1,167 @@
+//! Property tests of the continuous-batching backend: request conservation
+//! and the KV-ledger capacity invariant, over randomized small scenarios.
+//!
+//! Seeded-case harness (no proptest crate offline): `PROPTEST_CASES`
+//! controls the case count (CI pins it to 64 for deterministic, bounded
+//! runtime); failures report the offending seed for replay.
+
+use edgellm::cluster::{ClusterSpec, GpuSpec};
+use edgellm::coordinator::{Dftsp, EpochParams};
+use edgellm::driver::{
+    ContinuousBackend, DriverPolicy, EpochDriver, InstanceTemplate, SPadPolicy, StalePolicy,
+};
+use edgellm::model::{CostModel, LlmSpec};
+use edgellm::quant;
+use edgellm::request::RequestBuilder;
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{AllocationPolicy, ChannelParams, RadioParams};
+
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Random scenario: cluster size, per-GPU memory (some tight enough that
+/// the KV gate actually binds), quantization and epoch length all vary.
+fn random_template(rng: &mut Rng) -> InstanceTemplate {
+    let quants = quant::catalog();
+    let quant = quants[rng.below(quants.len() as u64) as usize].clone();
+    let mem_bytes = *rng.choice(&[7u64 * (1 << 30), 8 * (1 << 30), 32 * (1 << 30)]);
+    InstanceTemplate {
+        cost: CostModel::new(LlmSpec::bloom_3b()),
+        quant,
+        cluster: ClusterSpec::new(
+            GpuSpec {
+                name: "prop-gpu".into(),
+                flops: 1.33e12,
+                mem_bytes,
+            },
+            rng.int_range(1, 8) as usize,
+        ),
+        epoch: EpochParams {
+            duration: rng.uniform(1.0, 3.0),
+            t_u: 0.25,
+            t_d: 0.25,
+        },
+    }
+}
+
+/// PROPERTY: through the continuous backend, every offered request resolves
+/// to exactly one of {completed-in-deadline, completed-late, dropped}
+/// (dropped = rejected or stale), and the KV ledger's high-water mark never
+/// exceeds its capacity at any decode step.
+#[test]
+fn prop_continuous_conservation_and_kv_capacity() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(0xC0_0017 + seed);
+        let template = random_template(&mut rng);
+        let duration = template.epoch.duration;
+        let mut driver: EpochDriver<()> = EpochDriver::new(
+            template.clone(),
+            DriverPolicy {
+                stale: StalePolicy::BestCaseInfeasible,
+                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                allocation: AllocationPolicy::MinOnly,
+            },
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(seed),
+        );
+        let mut backend = ContinuousBackend::new(&template);
+        let mut sched = Dftsp::new();
+        let mut b = RequestBuilder::new();
+        let epochs = rng.int_range(2, 6);
+        let levels = [128u32, 256, 512];
+        let mut offered = 0u64;
+        for e in 0..epochs {
+            let now = e as f64 * duration;
+            // Arrivals scattered through the window (the regime the epoch
+            // barrier cannot express).
+            for _ in 0..rng.int_range(0, 9) {
+                let arrival = now + rng.uniform(0.0, duration);
+                driver.offer(
+                    b.build(
+                        arrival,
+                        *rng.choice(&levels),
+                        *rng.choice(&levels),
+                        rng.uniform(0.5, 3.0),
+                        rng.uniform(0.0, 1.0),
+                    ),
+                    (),
+                );
+                offered += 1;
+            }
+            driver.step_epoch(&mut sched, &mut backend, now);
+            // Invariant holds at every step, so in particular between epochs.
+            assert!(
+                backend.ledger().peak() <= backend.ledger().capacity(),
+                "seed {seed}: KV peak {} exceeds capacity {}",
+                backend.ledger().peak(),
+                backend.ledger().capacity()
+            );
+        }
+        driver.finish(&mut backend, epochs as f64 * duration);
+
+        assert_eq!(backend.in_flight(), 0, "seed {seed}: finish drains flights");
+        assert_eq!(backend.pending(), 0, "seed {seed}: finish drains the gate");
+        assert_eq!(
+            backend.ledger().in_use(),
+            0,
+            "seed {seed}: all reservations returned"
+        );
+        assert!(
+            backend.ledger().peak() <= backend.ledger().capacity(),
+            "seed {seed}: KV in use exceeded capacity"
+        );
+
+        let m = driver.into_metrics();
+        assert_eq!(m.offered, offered, "seed {seed}: offered count");
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "seed {seed}: every request must resolve exactly once"
+        );
+    }
+}
+
+/// PROPERTY: the continuous backend is deterministic — identical scenario
+/// and seeds give bit-identical metrics.
+#[test]
+fn prop_continuous_deterministic() {
+    for seed in 0..cases(64).min(16) {
+        let run = || {
+            let mut rng = Rng::new(0xD0_0017 + seed);
+            let template = random_template(&mut rng);
+            let duration = template.epoch.duration;
+            let mut driver: EpochDriver<()> = EpochDriver::new(
+                template.clone(),
+                DriverPolicy {
+                    stale: StalePolicy::BestCaseInfeasible,
+                    s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                    allocation: AllocationPolicy::MinOnly,
+                },
+                RadioParams::default(),
+                ChannelParams::default(),
+                Rng::new(seed),
+            );
+            let mut backend = ContinuousBackend::new(&template);
+            let mut sched = Dftsp::new();
+            let mut b = RequestBuilder::new();
+            for e in 0..4u64 {
+                let now = e as f64 * duration;
+                for i in 0..5 {
+                    driver.offer(
+                        b.build(now + 0.17 * i as f64, 128, 256, 2.0, 0.2),
+                        (),
+                    );
+                }
+                driver.step_epoch(&mut sched, &mut backend, now);
+            }
+            driver.finish(&mut backend, 4.0 * duration);
+            driver.into_metrics()
+        };
+        assert_eq!(run(), run(), "seed {seed}");
+    }
+}

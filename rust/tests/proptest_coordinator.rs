@@ -2,7 +2,8 @@
 //!
 //! No proptest crate is available offline, so this uses a seeded-case
 //! harness: each property runs over many deterministic random instances and
-//! failures report the offending seed for replay.
+//! failures report the offending seed for replay. `PROPTEST_CASES` bounds
+//! the case count of the heavier properties (CI pins it to 64).
 
 use edgellm::cluster::{ClusterSpec, GpuSpec};
 use edgellm::coordinator::{
@@ -13,6 +14,13 @@ use edgellm::quant;
 use edgellm::request::{EpochRequest, RequestBuilder};
 use edgellm::util::rng::Rng;
 use edgellm::wireless::RadioParams;
+
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
 
 /// Random problem instance: model, quant, cluster size, epoch all vary.
 fn random_instance(rng: &mut Rng) -> ProblemInstance {
@@ -170,6 +178,93 @@ fn prop_brute_force_agrees_and_costs_more() {
             continue;
         }
         assert_eq!(d.batch_size(), bf.batch_size(), "seed {seed}");
+    }
+}
+
+/// PROPERTY (issue satellite): on randomized small instances (≤ 8 users,
+/// uniform h per the P2 concentration assumption), DFTSP's selected batch
+/// achieves the same per-epoch throughput (batch cardinality) as brute
+/// force *and* the exhaustive-subset oracle, and the selected batch never
+/// violates constraints (1b)–(1d) — checked explicitly, on top of the full
+/// (1a)–(1e) feasibility check.
+#[test]
+fn prop_dftsp_throughput_equals_brute_force_small() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(7000 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(1, 8) as usize;
+        let reqs = random_requests(&mut rng, n, true);
+
+        let d = Dftsp::new().schedule(&inst, &reqs);
+        let bf = BruteForce::default().schedule(&inst, &reqs);
+        assert!(!bf.stats.budget_exhausted, "seed {seed}: n <= 8 fits budget");
+        assert_eq!(
+            d.batch_size(),
+            bf.batch_size(),
+            "seed {seed}: DFTSP vs brute force"
+        );
+        assert_eq!(
+            d.batch_size(),
+            exhaustive_opt(&inst, &reqs),
+            "seed {seed}: DFTSP vs exhaustive oracle"
+        );
+
+        let subset: Vec<&EpochRequest> = reqs
+            .iter()
+            .filter(|r| d.scheduled.contains(&r.id()))
+            .collect();
+        // (1b) downlink bandwidth
+        let rho_d: f64 = subset.iter().map(|r| r.rho_min_d).sum();
+        assert!(rho_d <= 1.0 + 1e-9, "seed {seed}: (1b) violated: {rho_d}");
+        // (1c) memory
+        let kv: Vec<u64> = subset
+            .iter()
+            .map(|r| inst.kv_bytes(r.req.output_tokens))
+            .collect();
+        assert!(
+            inst.cluster.batch_fits_memory(&inst.cost, &inst.quant, &kv),
+            "seed {seed}: (1c) violated"
+        );
+        // (1d) latency: the shared batch completion meets every member's
+        // deadline and fits the computation slot.
+        if !subset.is_empty() {
+            let t = FeasibilityChecker::new(&inst)
+                .check(&subset)
+                .unwrap_or_else(|v| panic!("seed {seed}: violated {v:?}"));
+            let min_slack = subset
+                .iter()
+                .map(|r| inst.compute_slack(r))
+                .fold(f64::INFINITY, f64::min);
+            assert!(t <= min_slack + 1e-12, "seed {seed}: (1d) violated");
+            assert!(t <= inst.epoch.t_c() + 1e-12, "seed {seed}: (1d) slot");
+        }
+    }
+}
+
+/// PROPERTY (issue satellite): online tree-pruning never prunes the node
+/// holding the optimum — disabling the constraint-pruning rule must never
+/// find a *larger* feasible batch, while visiting at least as many nodes.
+#[test]
+fn prop_pruning_never_prunes_the_optimal_node() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(7500 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(2, 10) as usize;
+        let reqs = random_requests(&mut rng, n, true);
+        let pruned = Dftsp::new().schedule(&inst, &reqs);
+        let unpruned = Dftsp {
+            disable_constraint_pruning: true,
+        }
+        .schedule(&inst, &reqs);
+        assert_eq!(
+            pruned.batch_size(),
+            unpruned.batch_size(),
+            "seed {seed}: pruning changed the optimum"
+        );
+        assert!(
+            pruned.stats.nodes_visited <= unpruned.stats.nodes_visited,
+            "seed {seed}: pruning must not enlarge the search"
+        );
     }
 }
 

@@ -1,0 +1,721 @@
+#!/usr/bin/env python3
+"""Pure-Python mirror of the Rust DFTSP search core (rust/src/coordinator/).
+
+Purpose
+-------
+1. Cross-validate the Rust scheduler's search-space optimizations (full-pool
+   probe z-skip, chained d-pool floors, combined z upper bound, incremental
+   leaf feasibility) against an exhaustive subset oracle and the unoptimized
+   reference search, on thousands of seeded random instances:
+
+       python3 python/dftsp_mirror.py validate
+
+2. Regenerate the deterministic search-effort columns of BENCH_dftsp.json
+   (nodes visited, leaves checked, leaf-check work, prunes) for the six
+   perf_hotpath scenarios without needing a Rust toolchain:
+
+       python3 python/dftsp_mirror.py bench
+
+   Wall-clock columns are *not* produced here — they come from
+   `cargo bench --bench perf_hotpath -- --json` (the CI bench-smoke job
+   uploads the result as an artifact).
+
+The float arithmetic mirrors the Rust implementation operation-for-operation
+(IEEE-754 doubles in both), and the RNG is a faithful port of
+rust/src/util/rng.rs (SplitMix64 + xoshiro256++), so request streams and
+search counts match the Rust harness bit-for-bit modulo libm's log2 ulp.
+"""
+
+import json
+import math
+import sys
+import time
+
+MASK = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs (SplitMix64 seeding + xoshiro256++)."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def below(self, n):
+        zone = MASK - (MASK - n + 1) % n
+        while True:
+            v = self.next_u64()
+            if v <= zone:
+                return v % n
+
+    def int_range(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+    def rayleigh(self, sigma):
+        u = 1.0 - self.f64()
+        return sigma * math.sqrt(-2.0 * math.log(u))
+
+
+# --- model / radio constants (BLOOM-3B, paper defaults) ---------------------
+
+class LlmSpec:
+    def __init__(self, name, layers, d_model, n_heads, d_head):
+        self.name, self.layers, self.d_model = name, layers, d_model
+        self.n_heads, self.d_head = n_heads, d_head
+        self.d_ff = 4 * d_model
+
+
+BLOOM_3B = LlmSpec("BLOOM-3B", 30, 2560, 32, 80)
+
+
+class CostModel:
+    def __init__(self, spec):
+        self.spec = spec
+
+    def weight_bytes(self):
+        l, dm = self.spec.layers, self.spec.d_model
+        dhnh, df = self.spec.d_head * self.spec.n_heads, self.spec.d_ff
+        return l * (8 * dm * dhnh + 4 * dm * df)
+
+    def kv_peak_bytes_per_req(self, s_pad, n_out):
+        l, dm = self.spec.layers, self.spec.d_model
+        return 4 * l * s_pad * dm + 4 * l * n_out * dm
+
+    def prefill_flops_per_req(self, s_pad):
+        l, s = float(self.spec.layers), float(s_pad)
+        dm, df = float(self.spec.d_model), float(self.spec.d_ff)
+        return l * (6.0 * s * dm * dm + (4.0 * s * s * dm + 2.0 * s * dm * dm)
+                    + 4.0 * s * dm * df)
+
+    def decode_flops_per_req(self, s_pad, n_out):
+        if n_out <= 1:
+            return 0.0
+        l, s, n = float(self.spec.layers), float(s_pad), float(n_out)
+        dm, df = float(self.spec.d_model), float(self.spec.d_ff)
+        return l * (n - 1.0) * (6.0 * dm * dm + (4.0 * (s + n / 2.0) * dm
+                                                 + 2.0 * dm * dm) + 4.0 * dm * df)
+
+
+def dbm_to_watts(dbm):
+    return 10.0 ** ((dbm - 30.0) / 10.0)
+
+
+class Radio:
+    def __init__(self):
+        self.uplink_hz = 20e6
+        self.downlink_hz = 20e6
+        self.uplink_tx_w = dbm_to_watts(20.0)
+        self.downlink_tx_w = dbm_to_watts(43.0)
+        self.noise_w_per_hz = dbm_to_watts(-174.0)
+        self.bits_per_token = 16.0
+
+    def uplink_se(self, h):
+        return math.log2(1.0 + self.uplink_tx_w * h * h
+                         / (self.noise_w_per_hz * self.uplink_hz))
+
+    def downlink_se(self, h):
+        return math.log2(1.0 + self.downlink_tx_w * h * h
+                         / (self.noise_w_per_hz * self.downlink_hz))
+
+    def rho_min_uplink(self, s_tokens, h, t_u):
+        return s_tokens * self.bits_per_token / (t_u * self.uplink_hz * self.uplink_se(h))
+
+    def rho_min_downlink(self, n_tokens, h, t_d):
+        return n_tokens * self.bits_per_token / (t_d * self.downlink_hz * self.downlink_se(h))
+
+
+class Req:
+    __slots__ = ("id", "arrival", "s", "n", "tau", "acc", "h", "rho_u", "rho_d")
+
+    def __init__(self, rid, arrival, s, n, tau, acc, h, radio, t_u, t_d):
+        self.id, self.arrival, self.s, self.n = rid, arrival, s, n
+        self.tau, self.acc, self.h = tau, acc, h
+        self.rho_u = radio.rho_min_uplink(s, h, t_u)
+        self.rho_d = radio.rho_min_downlink(n, h, t_d)
+
+
+class Inst:
+    """ProblemInstance: BLOOM-3B + W8A16/GPTQ + G x TX2 + 2s epochs."""
+
+    def __init__(self, num_gpus=20, s_pad=512, now=0.0,
+                 duration=2.0, t_u=0.25, t_d=0.25, alpha=0.55, beta=0.80,
+                 gpu_flops=1.33e12, gpu_mem=32 * (1 << 30)):
+        self.cost = CostModel(BLOOM_3B)
+        self.num_gpus, self.s_pad, self.now = num_gpus, s_pad, now
+        self.duration, self.t_u, self.t_d = duration, t_u, t_d
+        self.alpha, self.beta = alpha, beta
+        self.gpu_flops, self.gpu_mem = gpu_flops, gpu_mem
+
+    def t_c(self):
+        return self.duration
+
+    def total_flops(self):
+        return self.num_gpus * self.gpu_flops
+
+    def kv_budget_per_gpu(self):
+        return self.gpu_mem / self.alpha - float(self.cost.weight_bytes())
+
+    def compute_slack(self, r):
+        waited = max(self.now - r.arrival, 0.0)
+        return r.tau - waited - self.t_u - self.t_d
+
+    def kv_bytes(self, n_out):
+        return self.cost.kv_peak_bytes_per_req(self.s_pad, n_out)
+
+    def compute_time(self, batch, decode_flops):
+        prefill = batch * self.cost.prefill_flops_per_req(self.s_pad)
+        return self.beta * (prefill + decode_flops) / self.total_flops()
+
+    def batch_fits_memory(self, kvs):
+        if not kvs:
+            return True
+        budget = self.kv_budget_per_gpu()
+        if budget <= 0.0:
+            return False
+        total, mx = float(sum(kvs)), float(max(kvs))
+        per_gpu = mx if len(kvs) <= self.num_gpus else total / self.num_gpus + mx
+        return per_gpu <= budget
+
+    def admissible(self, reqs):
+        out = []
+        for r in reqs:
+            if not (r.rho_u <= 1.0 and r.rho_d <= 1.0):
+                continue
+            if not self.compute_slack(r) > 0.0:
+                continue
+            if not self.batch_fits_memory([self.kv_bytes(r.n)]):
+                continue
+            out.append(r)
+        return out
+
+
+def check(inst, subset):
+    """FeasibilityChecker::check — True if (1a)-(1d) hold (accuracy skipped:
+    the default quant admits everything the mirror generates)."""
+    if not subset:
+        return True
+    if sum(r.rho_u for r in subset) > 1.0 + 1e-12:
+        return False
+    if sum(r.rho_d for r in subset) > 1.0 + 1e-12:
+        return False
+    if not inst.batch_fits_memory([inst.kv_bytes(r.n) for r in subset]):
+        return False
+    dec = sum(inst.cost.decode_flops_per_req(inst.s_pad, r.n) for r in subset)
+    t = inst.compute_time(len(subset), dec)
+    ms = min(inst.compute_slack(r) for r in subset)
+    if t > ms or t > inst.t_c():
+        return False
+    return True
+
+
+# --- tree construction (rust/src/coordinator/tree.rs) -----------------------
+
+class Level:
+    __slots__ = ("n_out", "members", "pre_u", "pre_d", "pre_slack",
+                 "kv", "dec")
+
+    def __init__(self, inst, n, members):
+        self.n_out = n
+        self.members = members
+        self.pre_u, self.pre_d, self.pre_slack = [0.0], [0.0], [math.inf]
+        for i, m in enumerate(members):
+            self.pre_u.append(self.pre_u[i] + m.rho_u)
+            self.pre_d.append(self.pre_d[i] + m.rho_d)
+            self.pre_slack.append(min(self.pre_slack[i], inst.compute_slack(m)))
+        self.kv = inst.kv_bytes(n)
+        self.dec = inst.cost.decode_flops_per_req(inst.s_pad, n)
+
+
+def build_levels(inst, pool):
+    ns = sorted(set(r.n for r in pool))
+    levels = []
+    for n in ns:
+        members = [r for r in pool if r.n == n]
+        members.sort(key=lambda m: (m.rho_u, m.id))
+        levels.append(Level(inst, n, members))
+    return levels
+
+
+def suffix_capacity(levels):
+    cap = [0] * (len(levels) + 1)
+    for k in range(len(levels) - 1, -1, -1):
+        cap[k] = cap[k + 1] + len(levels[k].members)
+    return cap
+
+
+def materialize(levels, counts):
+    out = []
+    for g, c in zip(levels, counts):
+        out.extend(g.members[:c])
+    return out
+
+
+# --- partial state (rust/src/coordinator/problem.rs) ------------------------
+
+U, D, M, L = "U", "D", "M", "L"
+
+
+class Partial:
+    __slots__ = ("count", "rho_u", "rho_d", "kv_total", "kv_max",
+                 "dec", "min_slack")
+
+    def __init__(self, count=0, rho_u=0.0, rho_d=0.0, kv_total=0, kv_max=0,
+                 dec=0.0, min_slack=math.inf):
+        self.count, self.rho_u, self.rho_d = count, rho_u, rho_d
+        self.kv_total, self.kv_max = kv_total, kv_max
+        self.dec, self.min_slack = dec, min_slack
+
+    def add_block(self, c, rho_u, rho_d, kv_per_req, dec, slack):
+        return Partial(self.count + c, self.rho_u + rho_u, self.rho_d + rho_d,
+                       self.kv_total + kv_per_req * c,
+                       max(self.kv_max, kv_per_req if c > 0 else 0),
+                       self.dec + dec, min(self.min_slack, slack))
+
+    def violation(self, inst):
+        if self.count == 0:
+            return None
+        if self.rho_u > 1.0 + 1e-12:
+            return U
+        if self.rho_d > 1.0 + 1e-12:
+            return D
+        budget = inst.kv_budget_per_gpu()
+        if budget <= 0.0:
+            return M
+        per_gpu = (float(self.kv_max) if self.count <= inst.num_gpus
+                   else float(self.kv_total) / inst.num_gpus + float(self.kv_max))
+        if per_gpu > budget:
+            return M
+        t = inst.compute_time(self.count, self.dec)
+        if t > self.min_slack or t > inst.t_c():
+            return L
+        return None
+
+    def near_boundary(self, inst):
+        if self.count == 0:
+            return False
+
+        def close(a, b):
+            return abs(a - b) <= 1e-9 * max(abs(a), abs(b), 1.0)
+
+        if close(self.rho_u, 1.0 + 1e-12) or close(self.rho_d, 1.0 + 1e-12):
+            return True
+        t = inst.compute_time(self.count, self.dec)
+        return close(t, self.min_slack) or close(t, inst.t_c())
+
+
+class Stats:
+    def __init__(self):
+        self.nodes = 0
+        self.leaves = 0
+        self.leaf_work = 0
+        self.pruned_cap = 0
+        self.pruned_con = 0
+        self.pruned_reuse = 0
+        self.z_skipped = 0
+        self.subproblems = 0
+
+
+# --- reference (pre-PR) DFTSP ----------------------------------------------
+
+def dfs_old(inst, levels, cap, depth, partial, counts, z, stats):
+    if partial.count == z:
+        stats.leaves += 1
+        stats.leaf_work += z  # O(z) exact leaf check
+        return check(inst, materialize(levels, counts))
+    if depth == len(levels):
+        return False
+    need = z - partial.count
+    if cap[depth] < need:
+        stats.pruned_cap += 1
+        return False
+    g = levels[depth]
+    for c in range(min(need, len(g.members)), -1, -1):
+        stats.nodes += 1
+        child = partial.add_block(c, g.pre_u[c], g.pre_d[c], g.kv,
+                                  g.dec * c, g.pre_slack[c])
+        if child.violation(inst) is not None:
+            stats.pruned_con += 1
+            continue
+        counts.append(c)
+        if dfs_old(inst, levels, cap, depth + 1, child, counts, z, stats):
+            return True
+        counts.pop()
+    return False
+
+
+def z_upper_bound_old(inst, adm):
+    if not adm:
+        return 0
+    def bound_by(vals, capv):
+        acc, z = 0.0, 0
+        for v in sorted(vals):
+            acc += v
+            if acc > capv + 1e-12:
+                break
+            z += 1
+        return z
+    z_u = bound_by([r.rho_u for r in adm], 1.0)
+    z_d = bound_by([r.rho_d for r in adm], 1.0)
+    budget = inst.kv_budget_per_gpu()
+    if budget <= 0.0:
+        z_m = 0
+    else:
+        total = budget * inst.num_gpus
+        acc, z_m = 0.0, 0
+        for kv in sorted(inst.kv_bytes(r.n) for r in adm):
+            acc += float(kv)
+            if acc > total:
+                break
+            z_m += 1
+    max_slack = min(max(inst.compute_slack(r) for r in adm), inst.t_c())
+    min_dec = min(inst.cost.decode_flops_per_req(inst.s_pad, r.n) for r in adm)
+    per_req = inst.beta * (inst.cost.prefill_flops_per_req(inst.s_pad) + min_dec) \
+        / inst.total_flops()
+    z_t = len(adm) if per_req <= 0.0 else int(max_slack / per_req)
+    return min(z_u, z_d, z_m, z_t, len(adm))
+
+
+def schedule_old(inst, reqs):
+    stats = Stats()
+    adm = inst.admissible(reqs)
+    if not adm:
+        return [], stats
+    adm.sort(key=lambda r: (-inst.compute_slack(r), r.id))
+    z_ub = z_upper_bound_old(inst, adm)
+    levels_by_d = {}
+    for z in range(z_ub, 0, -1):
+        for d in range(z, len(adm) + 1):
+            stats.subproblems += 1
+            if d not in levels_by_d:
+                lv = build_levels(inst, adm[:d])
+                levels_by_d[d] = (lv, suffix_capacity(lv))
+            lv, cap = levels_by_d[d]
+            counts = []
+            if dfs_old(inst, lv, cap, 0, Partial(), counts, z, stats):
+                return [r.id for r in materialize(lv, counts)], stats
+    return [], stats
+
+
+# --- new (this PR) DFTSP ----------------------------------------------------
+
+def dfs_new(inst, levels, cap, depth, partial, counts, z,
+            floor_depth, floor_count, stats, flag):
+    """flag is a 1-element list: flag[0] |= 'latency-only rejection seen'."""
+    if partial.count == z:
+        stats.leaves += 1
+        stats.leaf_work += 1  # O(1) incremental leaf check
+        v = partial.violation(inst)
+        if v == L:
+            flag[0] = True
+        if partial.near_boundary(inst):
+            # ulp-scale band: arbitrate with the exact checker.
+            stats.leaf_work += z
+            return check(inst, materialize(levels, counts))
+        return v is None
+    if depth == len(levels):
+        return False
+    need = z - partial.count
+    if cap[depth] < need:
+        stats.pruned_cap += 1
+        return False
+    g = levels[depth]
+    cmax = min(need, len(g.members))
+    lo = floor_count if depth == floor_depth else 0
+    if cmax < lo:
+        stats.pruned_reuse += 1
+        return False
+    for c in range(cmax, lo - 1, -1):
+        stats.nodes += 1
+        child = partial.add_block(c, g.pre_u[c], g.pre_d[c], g.kv,
+                                  g.dec * c, g.pre_slack[c])
+        v = child.violation(inst)
+        if v == L:
+            flag[0] = True
+        if v is not None:
+            stats.pruned_con += 1
+            continue
+        counts.append(c)
+        if dfs_new(inst, levels, cap, depth + 1, child, counts, z,
+                   floor_depth, floor_count, stats, flag):
+            return True
+        counts.pop()
+    return False
+
+
+def z_upper_bound_new(inst, adm):
+    """Combined-constraint monotone scan; adm sorted by slack descending."""
+    if not adm:
+        return 0
+    us = sorted(r.rho_u for r in adm)
+    ds = sorted(r.rho_d for r in adm)
+    kvs = sorted(inst.kv_bytes(r.n) for r in adm)
+    slacks = [inst.compute_slack(r) for r in adm]  # descending by sort order
+    budget = inst.kv_budget_per_gpu()
+    total_budget = budget * inst.num_gpus
+    min_dec = min(inst.cost.decode_flops_per_req(inst.s_pad, r.n) for r in adm)
+    per_req = inst.beta * (inst.cost.prefill_flops_per_req(inst.s_pad) + min_dec) \
+        / inst.total_flops()
+    t_c = inst.t_c()
+    acc_u = acc_d = 0.0
+    acc_kv = 0.0
+    z = 0
+    for k in range(len(adm)):
+        acc_u += us[k]
+        acc_d += ds[k]
+        acc_kv += float(kvs[k])
+        if acc_u > 1.0 + 1e-12 or acc_d > 1.0 + 1e-12:
+            break
+        if budget <= 0.0 or acc_kv > total_budget:
+            break
+        if per_req > 0.0 and math.isfinite(per_req):
+            t_lb = (k + 1) * per_req
+            if t_lb > slacks[k] or t_lb > t_c:
+                break
+        z = k + 1
+    return z
+
+
+def find_floor(levels, req):
+    """(depth, rank+1) of `req` inside `levels` (uplink order within level)."""
+    for depth, g in enumerate(levels):
+        if g.n_out == req.n:
+            for i, m in enumerate(g.members):
+                if m.id == req.id:
+                    return depth, i + 1
+    raise AssertionError("request not in its own pool")
+
+
+def schedule_new(inst, reqs):
+    stats = Stats()
+    adm = inst.admissible(reqs)
+    if not adm:
+        return [], stats
+    adm.sort(key=lambda r: (-inst.compute_slack(r), r.id))
+    n = len(adm)
+    z_ub = z_upper_bound_new(inst, adm)
+    levels_by_d = {}
+
+    def pools(d):
+        if d not in levels_by_d:
+            lv = build_levels(inst, adm[:d])
+            levels_by_d[d] = (lv, suffix_capacity(lv))
+        return levels_by_d[d]
+
+    for z in range(z_ub, 0, -1):
+        # Probe the full pool: if even F_n has no z-selection and latency was
+        # never the lone binding constraint, no smaller pool can work either.
+        lv, cap = pools(n)
+        flag = [False]
+        probe_counts = []
+        stats.subproblems += 1
+        probe_found = dfs_new(inst, lv, cap, 0, Partial(), probe_counts, z,
+                              -1, 0, stats, flag)
+        if not probe_found and not flag[0]:
+            stats.z_skipped += 1
+            continue
+        # d loops stop at n - 1; a successful probe's solution is reused.
+        prev_failed = False
+        for d in range(z, n):
+            lv, cap = pools(d)
+            if prev_failed:
+                floor_depth, floor_count = find_floor(lv, adm[d - 1])
+            else:
+                floor_depth, floor_count = -1, 0
+            stats.subproblems += 1
+            counts = []
+            if dfs_new(inst, lv, cap, 0, Partial(), counts, z,
+                       floor_depth, floor_count, stats, flag):
+                sel = materialize(lv, counts)
+                assert check(inst, sel)
+                return [r.id for r in sel], stats
+            prev_failed = True
+        if probe_found:
+            lv, cap = pools(n)
+            sel = materialize(lv, probe_counts)
+            assert check(inst, sel)
+            return [r.id for r in sel], stats
+    return [], stats
+
+
+# --- oracles ---------------------------------------------------------------
+
+def exhaustive_opt(inst, reqs):
+    n = len(reqs)
+    best = 0
+    for mask in range(1 << n):
+        size = bin(mask).count("1")
+        if size <= best:
+            continue
+        subset = [reqs[i] for i in range(n) if mask >> i & 1]
+        if check(inst, subset):
+            best = size
+    return best
+
+
+# --- request generation (mirrors benches/perf_hotpath.rs) -------------------
+
+def bench_requests(n, seed, radio, t_u=0.25, t_d=0.25):
+    rng = Rng(seed)
+    levels = [128, 256, 512]
+    out = []
+    for i in range(n):
+        arrival = -rng.uniform(0.0, 2.0)
+        s = rng.choice(levels)
+        nn = rng.choice(levels)
+        tau = rng.uniform(0.5, 2.0)
+        acc = rng.uniform(0.0, 1.0)
+        g = rng.rayleigh(1.0 / math.sqrt(2.0))
+        h = math.sqrt(1e-3) * g
+        out.append(Req(i, arrival, s, nn, tau, acc, h, radio, t_u, t_d))
+    return out
+
+
+def validate_requests(rng, n, radio, uniform_h):
+    levels = [128, 256, 512]
+    out = []
+    h_common = math.sqrt(1e-3)
+    for i in range(n):
+        arrival = -rng.uniform(0.0, 2.0)
+        s = rng.choice(levels)
+        nn = rng.choice(levels)
+        tau = rng.uniform(0.5, 2.5)
+        acc = rng.uniform(0.0, 1.0)
+        if uniform_h:
+            h = h_common
+        else:
+            h = max(rng.rayleigh(1.0 / math.sqrt(2.0)) * math.sqrt(1e-3), 1e-9)
+        out.append(Req(i, arrival, s, nn, tau, acc, h, radio, 0.25, 0.25))
+    return out
+
+
+def cmd_validate():
+    radio = Radio()
+    fails = 0
+    # 1. Optimality vs the exhaustive oracle on small instances.
+    for seed in range(400):
+        rng = Rng(seed)
+        gpus = rng.int_range(1, 24)
+        dur = rng.uniform(1.0, 4.0)
+        inst = Inst(num_gpus=gpus, duration=dur)
+        n = rng.int_range(1, 12)
+        reqs = validate_requests(rng, n, radio, uniform_h=True)
+        opt = exhaustive_opt(inst, reqs)
+        ids_new, _ = schedule_new(inst, reqs)
+        ids_old, _ = schedule_old(inst, reqs)
+        if len(ids_new) != opt or len(ids_old) != opt:
+            fails += 1
+            print(f"seed {seed}: opt={opt} new={len(ids_new)} old={len(ids_old)}")
+        if ids_new != ids_old:
+            fails += 1
+            print(f"seed {seed}: schedule mismatch new={ids_new} old={ids_old}")
+    # 2. Identical decisions + feasibility on larger, non-uniform-h instances.
+    for seed in range(200):
+        rng = Rng(10_000 + seed)
+        gpus = rng.int_range(1, 24)
+        dur = rng.uniform(1.0, 4.0)
+        inst = Inst(num_gpus=gpus, duration=dur)
+        n = rng.int_range(2, 40)
+        reqs = validate_requests(rng, n, radio, uniform_h=False)
+        ids_new, _ = schedule_new(inst, reqs)
+        ids_old, _ = schedule_old(inst, reqs)
+        if ids_new != ids_old:
+            fails += 1
+            print(f"seed {seed}: large mismatch |new|={len(ids_new)} |old|={len(ids_old)}")
+        by_id = {r.id: r for r in reqs}
+        if not check(inst, [by_id[i] for i in ids_new]):
+            fails += 1
+            print(f"seed {seed}: infeasible schedule")
+    # 3. Search-effort sanity: the new search must never visit more nodes.
+    worse = 0
+    for seed in range(100):
+        rng = Rng(20_000 + seed)
+        inst = Inst(num_gpus=rng.int_range(1, 24),
+                    duration=rng.uniform(1.0, 4.0))
+        n = rng.int_range(2, 40)
+        reqs = validate_requests(rng, n, radio, uniform_h=False)
+        _, st_new = schedule_new(inst, reqs)
+        _, st_old = schedule_old(inst, reqs)
+        if st_new.nodes > st_old.nodes:
+            worse += 1
+    print(f"validate: {fails} failures; new search visited more nodes than "
+          f"old in {worse}/100 instances")
+    return 1 if fails else 0
+
+
+def cmd_bench():
+    radio = Radio()
+    rows = []
+    for mode, now in [("epoch", 0.0), ("continuous", 0.6)]:
+        for n in [256, 1024, 4096]:
+            inst = Inst(now=now)
+            reqs = bench_requests(n, 42, radio)
+            t0 = time.perf_counter()
+            ids, st = schedule_new(inst, reqs)
+            dt = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ids_old, st_old = schedule_old(inst, reqs)
+            dt_old = time.perf_counter() - t0
+            assert ids == ids_old, f"{mode}/{n}: decision drift"
+            rows.append({
+                "scenario": f"dftsp/{mode}/n={n}",
+                "mode": mode, "candidates": n,
+                "admissible": len(inst.admissible(reqs)),
+                "batch_size": len(ids),
+                "nodes_visited": st.nodes,
+                "leaves_checked": st.leaves,
+                "leaf_check_work": st.leaf_work,
+                "pruned_capacity": st.pruned_cap,
+                "pruned_constraint": st.pruned_con,
+                "pruned_reuse": st.pruned_reuse,
+                "z_levels_skipped": st.z_skipped,
+                "subproblems": st.subproblems,
+                "pre_pr": {
+                    "nodes_visited": st_old.nodes,
+                    "leaves_checked": st_old.leaves,
+                    "leaf_check_work": st_old.leaf_work,
+                    "subproblems": st_old.subproblems,
+                },
+                "py_mirror_wall_s": {"new": round(dt, 4), "old": round(dt_old, 4)},
+            })
+            print(f"{mode}/n={n}: batch={len(ids)} nodes {st_old.nodes}->{st.nodes} "
+                  f"leaf_work {st_old.leaf_work}->{st.leaf_work} "
+                  f"subproblems {st_old.subproblems}->{st.subproblems} "
+                  f"py wall {dt_old:.3f}s->{dt:.3f}s")
+    print(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    cmd = sys.argv[1] if len(sys.argv) > 1 else "validate"
+    sys.exit(cmd_validate() if cmd == "validate" else cmd_bench())

@@ -71,6 +71,7 @@ fn a1_constraint_pruning() {
         let full = Dftsp::new().schedule(&i, &reqs);
         let mut no_cp = Dftsp {
             disable_constraint_pruning: true,
+            ..Dftsp::default()
         };
         let cap_only = no_cp.schedule(&i, &reqs);
         assert_eq!(full.batch_size(), cap_only.batch_size());

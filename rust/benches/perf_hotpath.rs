@@ -2,7 +2,15 @@
 //! exist) the PJRT runtime request path. The before/after iteration log
 //! lives in EXPERIMENTS.md §Perf.
 //!
-//! Run: cargo bench --bench perf_hotpath
+//! Run: cargo bench --bench perf_hotpath [-- --quick] [-- --json]
+//!
+//! `--json` (or JSON=1) additionally writes the tracked baseline
+//! `BENCH_dftsp.json` at the repository root: the {256, 1024, 4096} ×
+//! {epoch, continuous} DFTSP scenario matrix with schedule latency and the
+//! deterministic search-effort counters (nodes visited, leaves checked,
+//! leaf-check work, prunes). CI's bench-smoke job runs exactly this and
+//! uploads the file as an artifact, so the bench trajectory is tracked
+//! commit-over-commit. `--quick` (or QUICK=1) shortens warmup/samples.
 
 use edgellm::cluster::ClusterSpec;
 use edgellm::coordinator::{
@@ -13,19 +21,25 @@ use edgellm::model::{CostModel, LlmSpec};
 use edgellm::quant;
 use edgellm::request::{EpochRequest, RequestBuilder};
 use edgellm::runtime::{artifacts_available, Engine};
-use edgellm::util::bench::{black_box, Bencher};
+use edgellm::util::bench::{black_box, BenchSuite, Bencher};
+use edgellm::util::json::Json;
 use edgellm::util::rng::Rng;
 use edgellm::wireless::{ChannelParams, RadioParams};
 use std::path::PathBuf;
 
+/// Paper Table I instance at an epoch boundary (`now = 0`).
 fn paper_inst() -> ProblemInstance {
+    inst_at(0.0)
+}
+
+fn inst_at(now: f64) -> ProblemInstance {
     ProblemInstance::new(
         CostModel::new(LlmSpec::bloom_3b()),
         quant::default_quant(),
         ClusterSpec::paper_default(),
         EpochParams::default(),
         512,
-        0.0,
+        now,
     )
 }
 
@@ -50,17 +64,50 @@ fn random_requests(n: usize, seed: u64) -> Vec<EpochRequest> {
         .collect()
 }
 
-fn scheduler_benches(bench: &Bencher) {
-    let inst = paper_inst();
-    for n in [32usize, 128, 512] {
-        let reqs = random_requests(n, 42);
-        let r = bench.run(&format!("dftsp/schedule/n={n}"), || {
-            let s = Dftsp::new().schedule(black_box(&inst), black_box(&reqs));
-            black_box(s.batch_size());
-        });
-        println!("{}", r.report());
+/// The tracked scenario matrix: candidate-pool sizes × invocation contexts.
+/// "epoch" schedules at the boundary (`now = 0`, the paper's protocol);
+/// "continuous" schedules mid-epoch (`now = 0.6`, a decode-step boundary —
+/// since PR 2 the continuous backend invokes the scheduler at that
+/// granularity, with 0.6 s less slack across the same queue).
+fn scheduler_scenarios(bench: &Bencher, suite: &mut BenchSuite) {
+    for (mode, now) in [("epoch", 0.0), ("continuous", 0.6)] {
+        for n in [256usize, 1024, 4096] {
+            let inst = inst_at(now);
+            let reqs = random_requests(n, 42);
+            let name = format!("dftsp/{mode}/n={n}");
+            let r = bench.run(&name, || {
+                let s = Dftsp::new().schedule(black_box(&inst), black_box(&reqs));
+                black_box(s.batch_size());
+            });
+            println!("{}", r.report());
+            // One counted run for the deterministic search-effort columns.
+            let sched = Dftsp::new().schedule(&inst, &reqs);
+            let st = &sched.stats;
+            suite.push(Json::obj(vec![
+                ("scenario", Json::Str(name)),
+                ("mode", Json::Str(mode.to_string())),
+                ("candidates", Json::Num(n as f64)),
+                ("admissible", Json::Num(inst.admissible(&reqs).len() as f64)),
+                ("batch_size", Json::Num(sched.batch_size() as f64)),
+                ("nodes_visited", Json::Num(st.nodes_visited as f64)),
+                ("leaves_checked", Json::Num(st.solutions_checked as f64)),
+                ("leaf_check_work", Json::Num(st.leaf_check_work as f64)),
+                ("pruned_capacity", Json::Num(st.pruned_capacity as f64)),
+                ("pruned_constraint", Json::Num(st.pruned_constraint as f64)),
+                ("pruned_reuse", Json::Num(st.pruned_reuse as f64)),
+                ("z_levels_skipped", Json::Num(st.z_levels_skipped as f64)),
+                ("subproblems", Json::Num(st.subproblems as f64)),
+                ("wall_mean_s", Json::Num(r.mean)),
+                ("wall_median_s", Json::Num(r.median)),
+                ("wall_p95_s", Json::Num(r.p95)),
+                ("iters", Json::Num(r.iters as f64)),
+            ]));
+        }
     }
+}
 
+fn scheduler_microbenches(bench: &Bencher) {
+    let inst = paper_inst();
     let reqs = random_requests(256, 43);
     let subset: Vec<&EpochRequest> = reqs.iter().take(64).collect();
     let checker = FeasibilityChecker::new(&inst);
@@ -115,10 +162,29 @@ fn runtime_benches(bench: &Bencher) {
 }
 
 fn main() {
-    let quick = std::env::var("QUICK").is_ok();
+    let args: Vec<String> = std::env::args().collect();
+    let quick = std::env::var("QUICK").is_ok() || args.iter().any(|a| a == "--quick");
+    let json = std::env::var("JSON").is_ok() || args.iter().any(|a| a == "--json");
     let bench = if quick { Bencher::quick() } else { Bencher::default() };
+
     println!("== L3 scheduler hot path ==");
-    scheduler_benches(&bench);
+    let mut suite = BenchSuite::new();
+    scheduler_scenarios(&bench, &mut suite);
+    scheduler_microbenches(&bench);
+
+    if json {
+        // CARGO_MANIFEST_DIR = rust/; the tracked baseline lives at the
+        // repository root next to EXPERIMENTS.md.
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_dftsp.json");
+        suite
+            .write(
+                &path,
+                "cargo bench --bench perf_hotpath -- --json (QUICK=1 / --quick for the smoke profile)",
+            )
+            .expect("write BENCH_dftsp.json");
+        println!("wrote {} scenario rows to {}", suite.len(), path.display());
+    }
+
     println!("\n== PJRT runtime request path ==");
     runtime_benches(&bench);
 }

@@ -110,6 +110,12 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
     // scheduled batches (epoch barrier vs decode-step admission).
     let batching = BatchingMode::parse(&doc.str_or("sim.batching", "epoch"))?;
 
+    // `[scheduler] workers = N`: opt-in parallel DFTSP d-pool search
+    // (0 or 1 keeps the sequential chained search).
+    let scheduler = crate::coordinator::SchedulerConfig {
+        workers: doc.u64_or("scheduler.workers", 0) as usize,
+    };
+
     Ok(SimConfig {
         model,
         quant,
@@ -122,6 +128,7 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         seed: doc.u64_or("sim.seed", base.seed),
         s_pad,
         batching,
+        scheduler,
     })
 }
 
@@ -196,6 +203,16 @@ s_pad = 256
         // Unknown modes are a config error, not a silent fallback.
         let doc = toml::parse("[sim]\nbatching = \"rolling\"\n").unwrap();
         assert!(sim_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn scheduler_workers_knob_parses() {
+        let doc = toml::parse("[scheduler]\nworkers = 4\n").unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.scheduler.workers, 4);
+        // Default is the sequential chained search.
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.scheduler.workers, 0);
     }
 
     #[test]

@@ -50,6 +50,10 @@ impl BruteForce {
         // Option<bool>: None = budget exhausted, Some(found) otherwise.
         if count_sum == z {
             stats.solutions_checked += 1;
+            // The exact check walks every member: O(z) leaf-check work — the
+            // Table III / §Perf comparison axis against DFTSP's O(1)
+            // incremental leaf test.
+            stats.leaf_check_work += z as u64;
             let subset = materialize_partial(levels, counts);
             return Some(FeasibilityChecker::new(inst).check(&subset).is_ok());
         }

@@ -1,5 +1,5 @@
 //! DFTSP — optimal Depth-First Tree-Searching with online tree-Pruning
-//! (paper Algorithm 1, §III).
+//! (paper Algorithm 1, §III), scaled for decode-step invocation.
 //!
 //! Outer structure: for z = |Ĩ| … 1 (largest batch first), for d = z … |Ĩ|,
 //! form the pool F_d of the d most latency-tolerant admissible requests and
@@ -14,18 +14,109 @@
 //! levels cannot supply the outstanding demand; (b) monotone constraint
 //! violation — uplink/downlink/memory/latency partial sums only grow, so a
 //! violated partial proves its whole subtree infeasible.
+//!
+//! On top of the paper's algorithm, three search-space reductions keep the
+//! scheduler on budget at 1k–4k candidates (PR 2 put it on the serving
+//! critical path at decode-step granularity). All three preserve exactness —
+//! the DFTSP == brute-force == exhaustive-oracle proptests are the contract:
+//!
+//! 1. **Incremental leaf feasibility** — a leaf (Σ v_k = z) is tested with
+//!    [`PartialState::violation`], whose partial sums already hold the whole
+//!    batch: O(1), no allocation, no `materialize`. Blockwise summation can
+//!    drift an ulp against the checker's flat sums, so a leaf whose binding
+//!    quantity sits inside [`PartialState::near_boundary`]'s band is
+//!    arbitrated by the exact checker (measure-zero case); outside the band
+//!    the forms cannot disagree (`debug_assert`-checked per leaf in debug
+//!    builds). One exact `FeasibilityChecker::check` still validates the
+//!    final accepted subset, with an exact-leaf re-search of that (z, d) as
+//!    a last-resort fallback.
+//! 2. **Subproblem reuse across the (z, d) loop** —
+//!    *Full-pool probe*: each z level first searches the full pool F_|Ĩ|.
+//!    If that fails and the latency constraint was never the lone binding
+//!    violation, no smaller pool can succeed either (smaller pools only
+//!    shrink the per-level cheap prefixes, which worsens the monotone
+//!    bandwidth/memory constraints), so the whole z level is skipped after
+//!    one search instead of |Ĩ|−z+1.
+//!    *Chained floors*: going d → d+1 adds exactly one request; any
+//!    F_{d+1} selection that avoids it is an F_d selection, already proven
+//!    infeasible — so the search at d+1 floors the newcomer's level count
+//!    at its uplink rank, never revisiting the failed subtree.
+//! 3. **Combined z upper bound** — the per-constraint relaxations are
+//!    scanned jointly and the latency bound pairs z·(cheapest per-request
+//!    compute) against the z-th largest slack (pigeonhole) instead of the
+//!    maximum slack, so fewer hopeless z levels are visited at all.
+//!
+//! An opt-in parallel mode (`SchedulerConfig::workers` ≥ 2, std-only
+//! `std::thread::scope`) fans the d pools of one z level out across worker
+//! waves; the winner is the smallest feasible d, which makes the returned
+//! schedule byte-identical to the sequential search (property-tested).
 
-use crate::coordinator::problem::{FeasibilityChecker, PartialState, ProblemInstance};
-use crate::coordinator::scheduler::{Schedule, Scheduler, SearchStats};
-use crate::coordinator::tree::{build_levels, materialize, suffix_capacity, LevelGroup};
+use crate::coordinator::problem::{
+    FeasibilityChecker, PartialState, ProblemInstance, Violation,
+};
+use crate::coordinator::scheduler::{Schedule, Scheduler, SchedulerConfig, SearchStats};
+use crate::coordinator::tree::{
+    build_levels, materialize, member_rank, suffix_capacity, LevelGroup,
+};
 use crate::request::EpochRequest;
 
 /// DFTSP scheduler. Stateless between epochs.
 #[derive(Debug, Clone, Default)]
 pub struct Dftsp {
     /// Disable the constraint-based subtree pruning (the capacity rule stays,
-    /// it is part of tree construction). Used for ablations.
+    /// it is part of tree construction). Used for ablations. The monotone
+    /// violation is still *evaluated* per node so the probe's latency flag —
+    /// and therefore the z-skip decisions and visited subproblems — are
+    /// identical with and without pruning.
     pub disable_constraint_pruning: bool,
+    /// Worker threads for the parallel d-pool search; 0 or 1 = sequential.
+    pub workers: usize,
+}
+
+/// Immutable per-subproblem search context threaded through the DFS.
+#[derive(Clone, Copy)]
+struct DfsCtx<'a, 'r> {
+    inst: &'a ProblemInstance,
+    levels: &'a [LevelGroup<'r>],
+    suffix_cap: &'a [usize],
+    z: usize,
+    /// Depth whose count is floored by the cross-pool reuse rule
+    /// (`usize::MAX` = no floor).
+    floor_depth: usize,
+    floor_count: usize,
+    /// Leaf test: `false` = incremental `PartialState` (the fast path),
+    /// `true` = materialize + exact checker (the boundary-disagreement
+    /// fallback; also what the pre-PR implementation did at every leaf).
+    exact_leaves: bool,
+}
+
+/// The cached (levels, suffix capacity) pair for each pool prefix length d.
+type PoolCache<'r> = Vec<Option<(Vec<LevelGroup<'r>>, Vec<usize>)>>;
+
+/// Level groups depend only on d (the pool is always the first d requests);
+/// cache them so the (z, d) loops do not rebuild and re-sort the same pools
+/// (§Perf: ~40% of schedule time at 512 candidates before caching).
+fn pool<'s, 'r>(
+    cache: &'s mut PoolCache<'r>,
+    inst: &ProblemInstance,
+    adm: &[&'r EpochRequest],
+    d: usize,
+) -> &'s (Vec<LevelGroup<'r>>, Vec<usize>) {
+    if cache[d].is_none() {
+        let levels = build_levels(inst, &adm[..d]);
+        let cap = suffix_capacity(&levels);
+        cache[d] = Some((levels, cap));
+    }
+    cache[d].as_ref().unwrap()
+}
+
+/// The reuse floor for the pool that just gained `req`: selections taking
+/// fewer than rank+1 from its level exclude it and were proven infeasible
+/// at the previous d.
+fn reuse_floor(levels: &[LevelGroup], req: &EpochRequest) -> (usize, usize) {
+    let (depth, rank) =
+        member_rank(levels, req).expect("pool request missing from its own level groups");
+    (depth, rank + 1)
 }
 
 impl Dftsp {
@@ -33,65 +124,57 @@ impl Dftsp {
         Dftsp::default()
     }
 
-    /// Cheap sound upper bound on the achievable batch size: each constraint
-    /// is relaxed independently (take the globally cheapest requests per
-    /// dimension); the true optimum cannot exceed the minimum over
-    /// dimensions. Skipping z above this bound preserves optimality.
+    /// Build with deployment knobs (scenario TOML / CLI / `ServerConfig`).
+    pub fn with_config(cfg: SchedulerConfig) -> Self {
+        Dftsp {
+            workers: cfg.workers,
+            ..Dftsp::default()
+        }
+    }
+
+    /// Cheap sound upper bound on the achievable batch size, as one monotone
+    /// scan over z. `adm` must be admission-filtered and sorted by compute
+    /// slack descending (the caller's invariant). Cardinality z survives
+    /// only while
+    ///
+    /// - the z cheapest uplink / downlink fractions fit their bands,
+    /// - the z smallest KV footprints fit the aggregate budget,
+    /// - z·(prefill + cheapest decode)·β/C — a lower bound on any z-batch's
+    ///   compute time — fits both T_C and the z-th *largest* individual
+    ///   slack (any z-subset's min slack is at most that, by pigeonhole;
+    ///   combining the cardinality and latency constraints tightens the
+    ///   former `max_slack / per_req` bound).
+    ///
+    /// Each test is monotone in z, so stopping at the first failure is
+    /// sound. The scan replaces the former `(max_slack / per_req).floor()
+    /// as usize`, whose NaN input saturated to 0 through `as` and silently
+    /// emptied the schedule; there is no float→int cast left, and NaN terms
+    /// fail no comparison — they relax the bound, never tighten it.
     fn z_upper_bound(inst: &ProblemInstance, adm: &[&EpochRequest]) -> usize {
         if adm.is_empty() {
             return 0;
         }
-        // Uplink / downlink: prefix of the cheapest fractions. total_cmp:
-        // adversarial request inputs (NaN channel gains) must degrade the
-        // bound, not panic the scheduler.
-        let bound_by = |vals: &mut Vec<f64>, cap: f64| -> usize {
-            vals.sort_by(f64::total_cmp);
-            let mut acc = 0.0;
-            let mut z = 0;
-            for v in vals.iter() {
-                acc += v;
-                if acc > cap + 1e-12 {
-                    break;
-                }
-                z += 1;
-            }
-            z
-        };
+        debug_assert!(
+            adm.windows(2)
+                .all(|w| inst.compute_slack(w[0]) >= inst.compute_slack(w[1])
+                    || inst.compute_slack(w[0]).is_nan()
+                    || inst.compute_slack(w[1]).is_nan()),
+            "z_upper_bound requires slack-descending order"
+        );
+        // total_cmp sorts: adversarial request inputs (NaN channel gains)
+        // must degrade the bound, not panic the scheduler.
         let mut us: Vec<f64> = adm.iter().map(|r| r.rho_min_u).collect();
         let mut ds: Vec<f64> = adm.iter().map(|r| r.rho_min_d).collect();
-        let z_u = bound_by(&mut us, 1.0);
-        let z_d = bound_by(&mut ds, 1.0);
-
-        // Memory: cheapest-KV prefix against the aggregate budget.
-        let budget_per_gpu = inst.cluster.kv_budget_per_gpu(&inst.cost, &inst.quant);
-        let z_m = if budget_per_gpu <= 0.0 {
-            0
-        } else {
-            let mut kvs: Vec<u64> = adm
-                .iter()
-                .map(|r| inst.kv_bytes(r.req.output_tokens))
-                .collect();
-            kvs.sort_unstable();
-            let total_budget = budget_per_gpu * inst.cluster.num_gpus as f64;
-            let mut acc = 0.0;
-            let mut z = 0;
-            for kv in kvs {
-                acc += kv as f64;
-                if acc > total_budget {
-                    break;
-                }
-                z += 1;
-            }
-            z
-        };
-
-        // Latency: z requests cost at least z·(prefill + cheapest decode);
-        // the most slack any batch can have is the max individual slack.
-        let max_slack = adm
+        us.sort_by(f64::total_cmp);
+        ds.sort_by(f64::total_cmp);
+        let mut kvs: Vec<u64> = adm
             .iter()
-            .map(|r| inst.compute_slack(r))
-            .fold(0.0f64, f64::max)
-            .min(inst.epoch.t_c());
+            .map(|r| inst.kv_bytes(r.req.output_tokens))
+            .collect();
+        kvs.sort_unstable();
+
+        let budget_per_gpu = inst.cluster.kv_budget_per_gpu(&inst.cost, &inst.quant);
+        let total_budget = budget_per_gpu * inst.cluster.num_gpus as f64;
         let min_decode = adm
             .iter()
             .map(|r| inst.cost.decode_flops_per_req(inst.s_pad, r.req.output_tokens))
@@ -99,49 +182,115 @@ impl Dftsp {
         let per_req =
             inst.quant.beta * (inst.cost.prefill_flops_per_req(inst.s_pad) + min_decode)
                 / inst.cluster.total_flops();
-        let z_t = if per_req <= 0.0 {
-            adm.len()
-        } else {
-            (max_slack / per_req).floor() as usize
-        };
+        let t_c = inst.epoch.t_c();
 
-        z_u.min(z_d).min(z_m).min(z_t).min(adm.len())
+        let (mut acc_u, mut acc_d, mut acc_kv) = (0.0f64, 0.0f64, 0.0f64);
+        let mut z = 0usize;
+        for k in 0..adm.len() {
+            acc_u += us[k];
+            acc_d += ds[k];
+            acc_kv += kvs[k] as f64;
+            if acc_u > 1.0 + 1e-12 || acc_d > 1.0 + 1e-12 {
+                break;
+            }
+            if budget_per_gpu <= 0.0 || acc_kv > total_budget {
+                break;
+            }
+            if per_req > 0.0 && per_req.is_finite() {
+                let t_lb = (k + 1) as f64 * per_req;
+                if t_lb > inst.compute_slack(adm[k]) || t_lb > t_c {
+                    break;
+                }
+            }
+            z = k + 1;
+        }
+        z
     }
 
-    /// Depth-first search over level counts. Returns the per-level counts of
-    /// the first feasible exact-z selection.
-    #[allow(clippy::too_many_arguments)]
+    /// Depth-first search over level counts. On success `counts` holds the
+    /// per-level counts of the first feasible exact-z selection (levels past
+    /// the found leaf's depth implicitly contribute 0).
+    ///
+    /// `latency_seen` records whether any rejected node's *first* violated
+    /// constraint was latency — the probe's soundness flag for skipping a z
+    /// level: below a node whose first violation is uplink/downlink/memory,
+    /// that same monotone violation persists, so latency-first rejections
+    /// cannot hide under pruned subtrees and the flag is identical whether
+    /// or not pruning is enabled.
     fn dfs(
         &self,
-        inst: &ProblemInstance,
-        levels: &[LevelGroup],
-        suffix_cap: &[usize],
+        ctx: &DfsCtx,
         depth: usize,
         partial: &PartialState,
         counts: &mut Vec<usize>,
-        z: usize,
         stats: &mut SearchStats,
+        latency_seen: &mut bool,
     ) -> bool {
-        if partial.count == z {
-            // Leaf: Σ v_k = z — recover S' and run the exact check
-            // (Algorithm 1 lines 13–16).
+        if partial.count == ctx.z {
+            // Leaf: Σ v_k = z (Algorithm 1 lines 13–16).
             stats.solutions_checked += 1;
-            let subset = materialize(levels, counts);
-            return FeasibilityChecker::new(inst).check(&subset).is_ok();
+            if ctx.exact_leaves {
+                stats.leaf_check_work += ctx.z as u64;
+                let subset = materialize(ctx.levels, counts);
+                return FeasibilityChecker::new(ctx.inst).check(&subset).is_ok();
+            }
+            stats.leaf_check_work += 1;
+            let v = partial.violation(ctx.inst);
+            if v == Some(Violation::Latency) {
+                *latency_seen = true;
+            }
+            if partial.near_boundary(ctx.inst) {
+                // An ulp of blockwise-vs-flat association drift could flip
+                // this leaf either way: arbitrate with the exact checker
+                // (measure-zero case) so the (z, d) verdict — and every
+                // z-skip and reuse floor chained off it — stays exact. The
+                // latency flag must then come from the *exact* verdict: an
+                // incrementally-accepted leaf the checker rejects on
+                // latency alone must still block the z-skip.
+                stats.leaf_check_work += ctx.z as u64;
+                let subset = materialize(ctx.levels, counts);
+                return match FeasibilityChecker::new(ctx.inst).check(&subset) {
+                    Ok(_) => true,
+                    Err(e) => {
+                        if e == Violation::Latency {
+                            *latency_seen = true;
+                        }
+                        false
+                    }
+                };
+            }
+            // Outside the boundary band the two forms cannot disagree.
+            debug_assert_eq!(
+                v.is_none(),
+                FeasibilityChecker::new(ctx.inst)
+                    .check(&materialize(ctx.levels, counts))
+                    .is_ok(),
+                "incremental leaf feasibility diverged from the exact checker"
+            );
+            return v.is_none();
         }
-        if depth == levels.len() {
+        if depth == ctx.levels.len() {
             return false; // max depth without reaching z
         }
-        let need = z - partial.count;
+        let need = ctx.z - partial.count;
         // Paper's pruning rule: remaining levels cannot supply the demand.
-        if suffix_cap[depth] < need {
+        if ctx.suffix_cap[depth] < need {
             stats.pruned_capacity += 1;
             return false;
         }
-        let g = &levels[depth];
+        let g = &ctx.levels[depth];
         let cmax = need.min(g.len());
+        let lo = if depth == ctx.floor_depth {
+            ctx.floor_count
+        } else {
+            0
+        };
+        if cmax < lo {
+            stats.pruned_reuse += 1;
+            return false;
+        }
         // Largest index first: prefer taking many short-output requests.
-        for c in (0..=cmax).rev() {
+        for c in (lo..=cmax).rev() {
             stats.nodes_visited += 1;
             let child = partial.add_block(
                 c,
@@ -151,17 +300,278 @@ impl Dftsp {
                 g.decode_flops_per_req * c as f64,
                 g.prefix_min_slack[c],
             );
-            if !self.disable_constraint_pruning && !child.feasible(inst) {
+            // Evaluated even with pruning disabled so `latency_seen` — and
+            // with it every probe skip — is ablation-invariant.
+            let v = child.violation(ctx.inst);
+            if v == Some(Violation::Latency) {
+                *latency_seen = true;
+            }
+            if !self.disable_constraint_pruning && v.is_some() {
                 stats.pruned_constraint += 1;
                 continue;
             }
             counts.push(c);
-            if self.dfs(inst, levels, suffix_cap, depth + 1, &child, counts, z, stats) {
+            if self.dfs(ctx, depth + 1, &child, counts, stats, latency_seen) {
                 return true;
             }
             counts.pop();
         }
         false
+    }
+
+    /// Materialize a found count vector and run the one exact feasibility
+    /// check of the fast path. `None` only on an ulp-level disagreement
+    /// between the incremental and exact forms (the caller then re-searches
+    /// with exact leaves).
+    fn accept_counts(
+        &self,
+        inst: &ProblemInstance,
+        levels: &[LevelGroup],
+        counts: &[usize],
+        stats: &mut SearchStats,
+    ) -> Option<Schedule> {
+        let subset = materialize(levels, counts);
+        match FeasibilityChecker::new(inst).check(&subset) {
+            Ok(t) => Some(Schedule::from_subset(&subset, t, std::mem::take(stats))),
+            Err(_) => None,
+        }
+    }
+
+    /// Exact-leaf fallback for one (z, d) subproblem, keeping the verdict —
+    /// and the reuse floors chained off it — exact when the incremental leaf
+    /// test disagreed with the checker on a constraint-boundary leaf.
+    fn exact_rerun(
+        &self,
+        inst: &ProblemInstance,
+        levels: &[LevelGroup],
+        suffix_cap: &[usize],
+        z: usize,
+        floor: (usize, usize),
+        stats: &mut SearchStats,
+    ) -> Option<Schedule> {
+        let ctx = DfsCtx {
+            inst,
+            levels,
+            suffix_cap,
+            z,
+            floor_depth: floor.0,
+            floor_count: floor.1,
+            exact_leaves: true,
+        };
+        let mut counts = Vec::with_capacity(levels.len());
+        let mut latency_seen = false;
+        if self.dfs(&ctx, 0, &PartialState::empty(), &mut counts, stats, &mut latency_seen) {
+            return self.accept_counts(inst, levels, &counts, stats);
+        }
+        None
+    }
+
+    /// Search one z level: probe the full pool, skip the level when the
+    /// probe proves it hopeless, otherwise walk the d pools (sequentially
+    /// with chained reuse floors, or in parallel waves).
+    fn search_z<'r>(
+        &self,
+        inst: &ProblemInstance,
+        adm: &[&'r EpochRequest],
+        z: usize,
+        cache: &mut PoolCache<'r>,
+        stats: &mut SearchStats,
+    ) -> Option<Schedule> {
+        let n = adm.len();
+        let mut latency_seen = false;
+
+        // Full-pool probe: one search of F_n decides the whole level when it
+        // fails on monotone-in-pool-growth constraints alone.
+        stats.subproblems += 1;
+        let (probe_found, probe_counts) = {
+            let (levels, cap) = pool(cache, inst, adm, n);
+            let ctx = DfsCtx {
+                inst,
+                levels,
+                suffix_cap: cap,
+                z,
+                floor_depth: usize::MAX,
+                floor_count: 0,
+                exact_leaves: false,
+            };
+            let mut counts = Vec::with_capacity(levels.len());
+            let found = self.dfs(
+                &ctx,
+                0,
+                &PartialState::empty(),
+                &mut counts,
+                stats,
+                &mut latency_seen,
+            );
+            (found, counts)
+        };
+        if !probe_found && !latency_seen {
+            stats.z_levels_skipped += 1;
+            return None;
+        }
+        // Probe failed on a latency-involved path (smaller pools keep more
+        // slack — must try them), or succeeded (smallest feasible d still to
+        // be found). Either way the full pool needs no second search: the d
+        // loops stop at n − 1 and a successful probe's solution is reused
+        // below.
+        let found = if self.workers >= 2 {
+            self.d_loop_parallel(inst, adm, z, n - 1, cache, stats)
+        } else {
+            self.d_loop_sequential(inst, adm, z, n - 1, cache, stats, &mut latency_seen)
+        };
+        if found.is_some() {
+            return found;
+        }
+        if probe_found {
+            // Every pool below n failed, so each feasible F_n selection
+            // includes the pool's newest request — the probe's first-found
+            // leaf is exactly what the floored d = n search would return.
+            let (levels, cap) = cache[n].as_ref().unwrap();
+            if let Some(s) = self.accept_counts(inst, levels, &probe_counts, stats) {
+                return Some(s);
+            }
+            let floor = if n > z {
+                reuse_floor(levels, adm[n - 1])
+            } else {
+                (usize::MAX, 0)
+            };
+            return self.exact_rerun(inst, levels, cap, z, floor, stats);
+        }
+        None
+    }
+
+    /// Ascending-d scan with chained reuse floors: pool d > z only searches
+    /// selections that include its newest request (everything else failed at
+    /// d − 1).
+    #[allow(clippy::too_many_arguments)]
+    fn d_loop_sequential<'r>(
+        &self,
+        inst: &ProblemInstance,
+        adm: &[&'r EpochRequest],
+        z: usize,
+        d_max: usize,
+        cache: &mut PoolCache<'r>,
+        stats: &mut SearchStats,
+        latency_seen: &mut bool,
+    ) -> Option<Schedule> {
+        for d in z..=d_max {
+            stats.subproblems += 1;
+            let (levels, cap) = pool(cache, inst, adm, d);
+            let floor = if d > z {
+                reuse_floor(levels, adm[d - 1])
+            } else {
+                (usize::MAX, 0)
+            };
+            let ctx = DfsCtx {
+                inst,
+                levels,
+                suffix_cap: cap,
+                z,
+                floor_depth: floor.0,
+                floor_count: floor.1,
+                exact_leaves: false,
+            };
+            let mut counts = Vec::with_capacity(levels.len());
+            if self.dfs(&ctx, 0, &PartialState::empty(), &mut counts, stats, latency_seen) {
+                if let Some(s) = self.accept_counts(inst, levels, &counts, stats) {
+                    return Some(s);
+                }
+                if let Some(s) = self.exact_rerun(inst, levels, cap, z, floor, stats) {
+                    return Some(s);
+                }
+                // Exact verdict: infeasible after all — keep chaining.
+            }
+        }
+        None
+    }
+
+    /// Parallel d-pool search: waves of `workers` consecutive pools, each
+    /// searched unrestricted on its own thread; the deterministic winner is
+    /// the smallest feasible d. At that d every feasible leaf includes the
+    /// pool's newest request (all smaller pools failed), so the first leaf
+    /// the unrestricted DFS finds is exactly the one the floored sequential
+    /// search returns — schedules are byte-identical across modes
+    /// (`tests/proptest_coordinator.rs`). Per-worker `SearchStats` merge in
+    /// ascending d order, so parallel runs are deterministic too (their
+    /// effort counters legitimately exceed the sequential ones: a wave may
+    /// search pools past the winner).
+    #[allow(clippy::too_many_arguments)]
+    fn d_loop_parallel<'r>(
+        &self,
+        inst: &ProblemInstance,
+        adm: &[&'r EpochRequest],
+        z: usize,
+        d_max: usize,
+        cache: &mut PoolCache<'r>,
+        stats: &mut SearchStats,
+    ) -> Option<Schedule> {
+        let mut d_lo = z;
+        while d_lo <= d_max {
+            let d_hi = d_max.min(d_lo + self.workers - 1);
+            let results: Vec<(bool, Vec<usize>, SearchStats)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (d_lo..=d_hi)
+                    .map(|d| {
+                        let pool_slice = &adm[..d];
+                        scope.spawn(move || {
+                            let levels = build_levels(inst, pool_slice);
+                            let cap = suffix_capacity(&levels);
+                            let ctx = DfsCtx {
+                                inst,
+                                levels: &levels,
+                                suffix_cap: &cap,
+                                z,
+                                floor_depth: usize::MAX,
+                                floor_count: 0,
+                                exact_leaves: false,
+                            };
+                            let mut st = SearchStats {
+                                subproblems: 1,
+                                ..SearchStats::default()
+                            };
+                            let mut counts = Vec::with_capacity(levels.len());
+                            let mut latency_seen = false;
+                            let found = self.dfs(
+                                &ctx,
+                                0,
+                                &PartialState::empty(),
+                                &mut counts,
+                                &mut st,
+                                &mut latency_seen,
+                            );
+                            (found, counts, st)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("DFTSP search worker panicked"))
+                    .collect()
+            });
+
+            let mut winner: Option<(usize, Vec<usize>)> = None;
+            for (i, (found, counts, st)) in results.into_iter().enumerate() {
+                stats.merge(&st);
+                if found && winner.is_none() {
+                    winner = Some((d_lo + i, counts));
+                }
+            }
+            if let Some((d, counts)) = winner {
+                let (levels, cap) = pool(cache, inst, adm, d);
+                if let Some(s) = self.accept_counts(inst, levels, &counts, stats) {
+                    return Some(s);
+                }
+                if let Some(s) =
+                    self.exact_rerun(inst, levels, cap, z, (usize::MAX, 0), stats)
+                {
+                    return Some(s);
+                }
+                // Exact verdict overruled the boundary leaf: resume past d.
+                d_lo = d + 1;
+                continue;
+            }
+            d_lo = d_hi + 1;
+        }
+        None
     }
 }
 
@@ -185,39 +595,10 @@ impl Scheduler for Dftsp {
         });
 
         let z_ub = Self::z_upper_bound(inst, &adm);
-        // Level groups depend only on d (the pool is always the first d
-        // requests); cache them so the z-loop does not rebuild and re-sort
-        // the same pools (§Perf: ~40% of schedule time at 512 candidates).
-        let mut levels_by_d: Vec<Option<(Vec<LevelGroup>, Vec<usize>)>> =
-            vec![None; adm.len() + 1];
+        let mut cache: PoolCache<'_> = vec![None; adm.len() + 1];
         for z in (1..=z_ub).rev() {
-            for d in z..=adm.len() {
-                stats.subproblems += 1;
-                if levels_by_d[d].is_none() {
-                    let pool = &adm[..d];
-                    let levels = build_levels(inst, pool);
-                    let cap = suffix_capacity(&levels);
-                    levels_by_d[d] = Some((levels, cap));
-                }
-                let (levels, suffix_cap) = levels_by_d[d].as_ref().unwrap();
-                let mut counts = Vec::with_capacity(levels.len());
-                let found = self.dfs(
-                    inst,
-                    levels,
-                    suffix_cap,
-                    0,
-                    &PartialState::empty(),
-                    &mut counts,
-                    z,
-                    &mut stats,
-                );
-                if found {
-                    let subset = materialize(levels, &counts);
-                    let t = FeasibilityChecker::new(inst)
-                        .check(&subset)
-                        .expect("dfs returned a checked-feasible subset");
-                    return Schedule::from_subset(&subset, t, stats);
-                }
+            if let Some(schedule) = self.search_z(inst, &adm, z, &mut cache, &mut stats) {
+                return schedule;
             }
         }
         Schedule {
@@ -443,6 +824,7 @@ mod tests {
         assert!(sched.stats.nodes_visited > 0);
         assert!(sched.stats.subproblems >= 1);
         assert!(sched.stats.solutions_checked >= 1);
+        assert!(sched.stats.leaf_check_work >= 1);
     }
 
     #[test]
@@ -485,5 +867,158 @@ mod tests {
         let b = Dftsp::new().schedule(&i, &reqs);
         assert_eq!(a.scheduled, b.scheduled);
         assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_schedule() {
+        // The parallel d-pool search must pick the same batch as the chained
+        // sequential scan (deterministic winner = smallest feasible d).
+        let i = inst_with(
+            ClusterSpec::new(
+                GpuSpec {
+                    name: "duo".into(),
+                    flops: 1.33e12,
+                    mem_bytes: 32 * (1 << 30),
+                },
+                2,
+            ),
+            quant::default_quant(),
+        );
+        let reqs = gen_reqs(&[
+            (128, 128, 1.6, 0.2),
+            (256, 128, 1.9, 0.2),
+            (128, 256, 1.7, 0.2),
+            (512, 512, 2.0, 0.2),
+            (128, 128, 0.9, 0.2),
+            (256, 256, 1.4, 0.2),
+            (128, 512, 1.9, 0.2),
+            (64, 128, 1.2, 0.2),
+            (96, 256, 1.5, 0.2),
+            (200, 128, 1.3, 0.2),
+        ]);
+        let seq = Dftsp::new().schedule(&i, &reqs);
+        let par = Dftsp::with_config(SchedulerConfig { workers: 3 }).schedule(&i, &reqs);
+        assert_eq!(seq.scheduled, par.scheduled);
+        assert_eq!(seq.compute_time, par.compute_time);
+        assert_eq!(seq.per_request_compute, par.per_request_compute);
+        // Parallel runs are themselves deterministic, stats included.
+        let par2 = Dftsp::with_config(SchedulerConfig { workers: 3 }).schedule(&i, &reqs);
+        assert_eq!(par.scheduled, par2.scheduled);
+        assert_eq!(par.stats, par2.stats);
+    }
+
+    #[test]
+    fn z_upper_bound_adversarial_inputs() {
+        // Regression for the former `(max_slack / per_req).floor() as usize`
+        // cast: huge/NaN inputs must neither panic nor zero the bound.
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let good_h = (1e-3f64).sqrt();
+        let mk = |b: &mut RequestBuilder, tau: f64| {
+            EpochRequest::annotate(b.build(0.0, 128, 128, tau, 0.2), good_h, &radio, 0.25, 0.25)
+        };
+
+        // Huge slack (τ = 1e300): the old code divided it by per_req and
+        // cast; the scan must simply cap at the pool size.
+        let i = inst();
+        let huge: Vec<EpochRequest> = (0..4).map(|_| mk(&mut b, 1e300)).collect();
+        let refs: Vec<&EpochRequest> = huge.iter().collect();
+        let zb = Dftsp::z_upper_bound(&i, &refs);
+        assert!(zb <= refs.len());
+        assert!(zb >= 1, "huge slack must not zero the bound");
+
+        // β = NaN poisons per_req: the latency dimension must drop out
+        // (sound relaxation), not propagate NaN through a cast to 0.
+        let mut i_nan = inst();
+        i_nan.quant.beta = f64::NAN;
+        let zb = Dftsp::z_upper_bound(&i_nan, &refs);
+        assert_eq!(zb, refs.len(), "NaN per_req relaxes the latency bound");
+
+        // β = 0 keeps the old `per_req <= 0` escape hatch.
+        let mut i_zero = inst();
+        i_zero.quant.beta = 0.0;
+        assert_eq!(Dftsp::z_upper_bound(&i_zero, &refs), refs.len());
+
+        // End-to-end: scheduling the adversarial pool must not panic and
+        // must still return a feasible batch.
+        let sched = Dftsp::new().schedule(&i, &huge);
+        assert!(sched.batch_size() >= 1);
+    }
+
+    #[test]
+    fn z_upper_bound_combined_latency_tighter_than_max_slack() {
+        // One very tolerant request plus nine tight ones on the paper
+        // cluster: per-request compute ≈ 0.094 s, tight slack = 0.9 s, so 10
+        // requests need ≈ 0.94 s > 0.9 s while 9 need ≈ 0.84 s. The old
+        // bound (max slack, capped at T_C = 2 s, over per_req) allowed all
+        // 10; the pigeonhole bound (z-th largest slack) must stop at 9 —
+        // exactly the optimum.
+        let i = inst();
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let good_h = (1e-3f64).sqrt();
+        let mut reqs = vec![EpochRequest::annotate(
+            b.build(0.0, 128, 128, 1e6, 0.2),
+            good_h,
+            &radio,
+            0.25,
+            0.25,
+        )];
+        for _ in 0..9 {
+            reqs.push(EpochRequest::annotate(
+                b.build(0.0, 128, 128, 1.4, 0.2),
+                good_h,
+                &radio,
+                0.25,
+                0.25,
+            ));
+        }
+        let mut adm: Vec<&EpochRequest> = reqs.iter().collect();
+        adm.sort_by(|a, b| {
+            i.compute_slack(b)
+                .total_cmp(&i.compute_slack(a))
+                .then(a.id().cmp(&b.id()))
+        });
+        let zb = Dftsp::z_upper_bound(&i, &adm);
+        assert_eq!(zb, 9, "combined bound strictly tighter than max-slack's 10");
+        // And it stays sound: the true optimum is reached, not cut off.
+        let opt = exhaustive_opt(&i, &reqs);
+        assert_eq!(opt, 9);
+        assert_eq!(Dftsp::new().schedule(&i, &reqs).batch_size(), opt);
+    }
+
+    #[test]
+    fn probe_skips_hopeless_z_levels() {
+        // The z upper bound relaxes memory to the *aggregate* budget, which
+        // admits z = 4 here; but the worst-GPU packing bound (total/G + max)
+        // caps any actual selection at 2. That gap is exactly what the
+        // full-pool probe closes: z = 4 and z = 3 fail on memory everywhere
+        // (never latency), so each z level costs one probed subproblem
+        // instead of a full d scan. Budget per GPU = 2.2 KV footprints:
+        // packing needs z/2 + 1 ≤ 2.2 ⇒ z ≤ 2; aggregate allows 4.4 ⇒ 4.
+        let cost = CostModel::new(LlmSpec::bloom_3b());
+        let kv = cost.kv_peak_bytes_per_req(512, 512);
+        let w = cost.weight_bytes();
+        let mem = (0.55 * (2.2 * kv as f64 + w as f64)) as u64 + 1;
+        let mut i = inst_with(
+            ClusterSpec::new(
+                GpuSpec {
+                    name: "packing-gap".into(),
+                    flops: 1.33e12,
+                    mem_bytes: mem,
+                },
+                2,
+            ),
+            quant::default_quant(),
+        );
+        i.epoch.duration = 60.0; // latency never binds
+        let reqs = gen_reqs(&[(128, 512, 50.0, 0.2); 4]);
+        let sched = Dftsp::new().schedule(&i, &reqs);
+        assert_eq!(sched.batch_size(), 2);
+        assert_eq!(
+            sched.stats.z_levels_skipped, 2,
+            "z = 4 and z = 3 must be probe-skipped"
+        );
+        assert_eq!(sched.batch_size(), exhaustive_opt(&i, &reqs));
     }
 }

@@ -21,5 +21,5 @@ pub use multi::{Deployment, MultiLlm, PartitionPolicy};
 pub use no_batching::NoBatching;
 pub use problem::{EpochParams, FeasibilityChecker, PartialState, ProblemInstance, Violation};
 pub use reformulation::P2Coefficients;
-pub use scheduler::{Schedule, Scheduler, SearchStats};
+pub use scheduler::{Schedule, Scheduler, SchedulerConfig, SearchStats};
 pub use static_batching::StaticBatching;

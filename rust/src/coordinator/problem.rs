@@ -251,16 +251,46 @@ impl PartialState {
     /// Can this partial still be part of a feasible batch? (Monotone bound —
     /// `false` is a proof that every extension is infeasible.)
     pub fn feasible(&self, inst: &ProblemInstance) -> bool {
+        self.violation(inst).is_none()
+    }
+
+    /// The first violated constraint of this partial batch, in the exact
+    /// checker's order (uplink, downlink, memory, latency), or `None`.
+    ///
+    /// Two contracts hang off this method:
+    ///
+    /// - **Monotone bound** (any partial): every tracked quantity only
+    ///   worsens under `add_block`, so `Some(_)` proves the whole subtree
+    ///   infeasible — the online-pruning rule.
+    /// - **Exact leaf test** (complete batch of admissible requests): the
+    ///   formulas and comparisons mirror `FeasibilityChecker::check`
+    ///   term-for-term — same ρ sums, the same worst-GPU packing bound as
+    ///   `ClusterSpec::batch_fits_memory`, the same `t > slack` / `t > T_C`
+    ///   tests — so at a DFS leaf (Σ v_k = z) this *is* the (1a)–(1d) check,
+    ///   in O(1) with no allocation. (1e) is handled upstream by the
+    ///   admission filter. The only divergence from the checker is
+    ///   floating-point association: block sums group additions by level,
+    ///   which can drift by an ulp against the checker's flat sums — why
+    ///   DFTSP re-runs the exact checker once on the final accepted subset.
+    ///
+    /// NaN inputs follow the checker's convention (`NaN > cap` is false, so
+    /// a NaN term never *triggers* a violation) — required so the
+    /// incremental and exact forms agree on adversarial inputs, and sound
+    /// for pruning (a NaN partial is simply never pruned).
+    pub fn violation(&self, inst: &ProblemInstance) -> Option<Violation> {
         if self.count == 0 {
-            return true;
+            return None;
         }
-        if self.rho_u > 1.0 + 1e-12 || self.rho_d > 1.0 + 1e-12 {
-            return false;
+        if self.rho_u > 1.0 + 1e-12 {
+            return Some(Violation::Uplink);
+        }
+        if self.rho_d > 1.0 + 1e-12 {
+            return Some(Violation::Downlink);
         }
         // Memory: same worst-GPU bound as ClusterSpec::batch_fits_memory.
         let budget = inst.cluster.kv_budget_per_gpu(&inst.cost, &inst.quant);
         if budget <= 0.0 {
-            return false;
+            return Some(Violation::Memory);
         }
         let per_gpu_kv = if self.count <= inst.cluster.num_gpus {
             self.kv_max as f64
@@ -268,12 +298,37 @@ impl PartialState {
             self.kv_total as f64 / inst.cluster.num_gpus as f64 + self.kv_max as f64
         };
         if per_gpu_kv > budget {
-            return false;
+            return Some(Violation::Memory);
         }
         // Latency lower bound: even with no further additions the batch costs
         // compute_time(count, decode_flops); min_slack only shrinks later.
         let t = inst.compute_time(self.count, self.decode_flops);
-        t <= self.min_slack && t <= inst.epoch.t_c()
+        if t > self.min_slack || t > inst.epoch.t_c() {
+            return Some(Violation::Latency);
+        }
+        None
+    }
+
+    /// Is any drift-prone constraint quantity within an ulp-scale band of
+    /// its threshold? The incremental sums group additions by level while
+    /// the exact checker sums flat; the two can differ by ~n·ε ≈ 1e-12
+    /// relative — far inside this 1e-9 band. Outside the band the two forms
+    /// *cannot* disagree, so DFTSP's O(1) leaf test is exact there and
+    /// arbitrates with the full checker only on (measure-zero) boundary
+    /// leaves. Memory is excluded: its sums are integer u64 on both paths,
+    /// bit-identical by construction.
+    pub fn near_boundary(&self, inst: &ProblemInstance) -> bool {
+        if self.count == 0 {
+            return false;
+        }
+        fn close(a: f64, b: f64) -> bool {
+            (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+        }
+        if close(self.rho_u, 1.0 + 1e-12) || close(self.rho_d, 1.0 + 1e-12) {
+            return true;
+        }
+        let t = inst.compute_time(self.count, self.decode_flops);
+        close(t, self.min_slack) || close(t, inst.epoch.t_c())
     }
 }
 

@@ -6,20 +6,80 @@ use crate::request::{EpochRequest, RequestId};
 
 /// Search-effort accounting (Table III compares these between DFTSP and the
 /// brute-force tree search).
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 pub struct SearchStats {
     /// Tree nodes visited across all (z, d) subproblems.
     pub nodes_visited: u64,
-    /// Complete candidate solutions submitted to the exact checker.
+    /// Complete candidate solutions (leaves) submitted to a feasibility test.
     pub solutions_checked: u64,
+    /// Per-request units of work spent in leaf feasibility tests: the exact
+    /// `FeasibilityChecker::check` costs |S| units per leaf, the incremental
+    /// `PartialState` leaf test costs 1 — the "leaf-check FLOPs" axis of the
+    /// §Perf benchmarks.
+    pub leaf_check_work: u64,
     /// Nodes skipped by the capacity rule Σ_{k≥N(v)}|F_k| < z − Σ v.
     pub pruned_capacity: u64,
     /// Subtrees cut because a monotone partial constraint was violated.
     pub pruned_constraint: u64,
-    /// (z, d) subproblems attempted.
+    /// Subtrees cut by the cross-pool reuse floor: selections that avoid the
+    /// pool's newest request were already proven infeasible at the previous
+    /// d, so the new request's level count is floored at its uplink rank.
+    pub pruned_reuse: u64,
+    /// Whole z levels skipped because the full-pool probe failed without the
+    /// latency constraint ever being the lone binding violation (no smaller
+    /// pool can then succeed — smaller pools only worsen the monotone
+    /// bandwidth/memory constraints).
+    pub z_levels_skipped: u64,
+    /// (z, d) subproblems attempted (the full-pool probe counts as one).
     pub subproblems: u64,
     /// True if a node budget stopped the search early (brute force guard).
     pub budget_exhausted: bool,
+    /// Wall-clock seconds spent inside `Scheduler::schedule`, stamped by the
+    /// epoch driver. Excluded from `PartialEq`: wall time varies run-to-run
+    /// while every counter above is bit-deterministic (the determinism and
+    /// driver-parity suites compare `SearchStats` directly).
+    pub schedule_wall_s: f64,
+}
+
+impl PartialEq for SearchStats {
+    fn eq(&self, other: &Self) -> bool {
+        // Everything except `schedule_wall_s` (see field doc).
+        self.nodes_visited == other.nodes_visited
+            && self.solutions_checked == other.solutions_checked
+            && self.leaf_check_work == other.leaf_check_work
+            && self.pruned_capacity == other.pruned_capacity
+            && self.pruned_constraint == other.pruned_constraint
+            && self.pruned_reuse == other.pruned_reuse
+            && self.z_levels_skipped == other.z_levels_skipped
+            && self.subproblems == other.subproblems
+            && self.budget_exhausted == other.budget_exhausted
+    }
+}
+
+impl SearchStats {
+    /// Accumulate another run's counters into this one (wall time included).
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.nodes_visited += other.nodes_visited;
+        self.solutions_checked += other.solutions_checked;
+        self.leaf_check_work += other.leaf_check_work;
+        self.pruned_capacity += other.pruned_capacity;
+        self.pruned_constraint += other.pruned_constraint;
+        self.pruned_reuse += other.pruned_reuse;
+        self.z_levels_skipped += other.z_levels_skipped;
+        self.subproblems += other.subproblems;
+        self.budget_exhausted |= other.budget_exhausted;
+        self.schedule_wall_s += other.schedule_wall_s;
+    }
+}
+
+/// Deployment-level scheduler knobs, threaded from scenario TOML
+/// (`[scheduler]`), the CLI (`--workers`) and `ServerConfig` into the
+/// policy constructors.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// Worker threads for DFTSP's opt-in parallel d-pool search; 0 or 1
+    /// keeps the sequential chained search (the default).
+    pub workers: usize,
 }
 
 /// A scheduling decision for one epoch.

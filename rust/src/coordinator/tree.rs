@@ -100,6 +100,22 @@ pub fn suffix_capacity(levels: &[LevelGroup]) -> Vec<usize> {
     cap
 }
 
+/// Locate a request inside level groups: `(depth, rank)` where `rank` is its
+/// position in the level's uplink-cheapest order. DFTSP's cross-pool reuse
+/// rule floors the level's count at `rank + 1` once every selection without
+/// the request has been proven infeasible in the previous pool.
+pub fn member_rank(levels: &[LevelGroup], req: &EpochRequest) -> Option<(usize, usize)> {
+    levels.iter().enumerate().find_map(|(depth, g)| {
+        if g.n_out != req.req.output_tokens {
+            return None;
+        }
+        g.members
+            .iter()
+            .position(|m| m.id() == req.id())
+            .map(|rank| (depth, rank))
+    })
+}
+
 /// Materialize the request set selected by a count vector (first c_k members
 /// of each level).
 pub fn materialize<'a>(levels: &[LevelGroup<'a>], counts: &[usize]) -> Vec<&'a EpochRequest> {
@@ -200,6 +216,29 @@ mod tests {
         assert_eq!(cap[1], 3);
         assert_eq!(cap[2], 2);
         assert_eq!(cap[3], 0);
+    }
+
+    #[test]
+    fn member_rank_finds_every_pool_member() {
+        let i = inst();
+        let rs = reqs();
+        let pool: Vec<&EpochRequest> = rs.iter().collect();
+        let levels = build_levels(&i, &pool);
+        for r in &rs {
+            let (depth, rank) = member_rank(&levels, r).expect("member present");
+            assert_eq!(levels[depth].members[rank].id(), r.id());
+        }
+        // A request outside the pool is not found.
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        let outsider = EpochRequest::annotate(
+            b.build(0.0, 128, 1024, 2.0, 0.3),
+            0.03,
+            &radio,
+            0.25,
+            0.25,
+        );
+        assert_eq!(member_rank(&levels, &outsider), None);
     }
 
     #[test]

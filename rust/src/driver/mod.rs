@@ -247,8 +247,12 @@ impl<P> EpochDriver<P> {
             annotated.retain(|r| !inadmissible.contains(&r.id()));
         }
 
-        // 5. Schedule and account the search effort.
-        let schedule = scheduler.schedule(&inst, &annotated);
+        // 5. Schedule and account the search effort, stamping wall time here
+        //    so every Scheduler gets timed identically (the counters stay
+        //    bit-deterministic; SearchStats::PartialEq ignores wall time).
+        let sched_start = std::time::Instant::now();
+        let mut schedule = scheduler.schedule(&inst, &annotated);
+        schedule.stats.schedule_wall_s = sched_start.elapsed().as_secs_f64();
         self.metrics
             .record_schedule(schedule.batch_size(), &schedule.stats);
 

@@ -10,7 +10,9 @@
 //! to the paper's §IV defaults.
 
 use edgellm::config;
-use edgellm::coordinator::{BruteForce, Dftsp, NoBatching, Scheduler, StaticBatching};
+use edgellm::coordinator::{
+    BruteForce, Dftsp, NoBatching, Scheduler, SchedulerConfig, StaticBatching,
+};
 use edgellm::model::LlmSpec;
 use edgellm::quant;
 use edgellm::runtime::Engine;
@@ -31,7 +33,8 @@ fn main() {
             eprintln!(
                 "usage: edgellm <simulate|compare|serve|catalog> [--config FILE] \
                  [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
-                 [--epochs N] [--model NAME] [--quant LABEL] [--seed S]"
+                 [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
+                 [--workers N] [--stats]"
             );
             2
         }
@@ -62,12 +65,15 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     if let Some(mode) = args.get("batching") {
         cfg.batching = edgellm::driver::BatchingMode::parse(mode)?;
     }
+    if let Some(workers) = args.get("workers") {
+        cfg.scheduler.workers = workers.parse().map_err(|_| "bad --workers")?;
+    }
     Ok(cfg)
 }
 
-fn make_scheduler(name: &str) -> Result<Box<dyn Scheduler>, String> {
+fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler>, String> {
     match name.to_ascii_lowercase().as_str() {
-        "dftsp" => Ok(Box::new(Dftsp::new())),
+        "dftsp" => Ok(Box::new(Dftsp::with_config(cfg))),
         "stb" => Ok(Box::new(StaticBatching::new())),
         "nob" => Ok(Box::new(NoBatching::new())),
         "brute" => Ok(Box::new(BruteForce::default())),
@@ -83,13 +89,14 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut sched = match make_scheduler(&args.str_or("scheduler", "dftsp")) {
+    let mut sched = match make_scheduler(&args.str_or("scheduler", "dftsp"), cfg.scheduler) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    let show_stats = args.flag("stats");
     println!(
         "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}  batching {}",
         cfg.model.name,
@@ -103,6 +110,9 @@ fn cmd_simulate(args: &Args) -> i32 {
     );
     let m = sim::run(&cfg, sched.as_mut());
     print!("{}", m.report(sched.name()));
+    if show_stats {
+        print!("{}", m.search_report());
+    }
     0
 }
 
@@ -114,10 +124,11 @@ fn cmd_compare(args: &Args) -> i32 {
             return 2;
         }
     };
+    let show_stats = args.flag("stats");
     let results = sim::compare(
         &cfg,
         vec![
-            Box::new(Dftsp::new()),
+            Box::new(Dftsp::with_config(cfg.scheduler)),
             Box::new(StaticBatching::new()),
             Box::new(NoBatching::new()),
         ],
@@ -139,6 +150,12 @@ fn cmd_compare(args: &Args) -> i32 {
         ]);
     }
     print!("{}", t.render());
+    if show_stats {
+        for (name, m) in &results {
+            println!("-- {name} --");
+            print!("{}", m.search_report());
+        }
+    }
     0
 }
 
@@ -174,9 +191,12 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
+    server_cfg.scheduler.workers = args.u64_or("workers", 0) as usize;
+    let show_stats = args.flag("stats");
     let epoch_s = server_cfg.epoch.duration;
     println!("batching mode: {}", server_cfg.batching);
-    let mut server = EpochServer::new(engine, server_cfg, Box::new(Dftsp::new()));
+    let scheduler = Box::new(Dftsp::with_config(server_cfg.scheduler));
+    let mut server = EpochServer::new(engine, server_cfg, scheduler);
     let handle = server.handle();
 
     // Optional TCP JSON-line front-end: --listen 127.0.0.1:7070
@@ -225,6 +245,9 @@ fn cmd_serve(args: &Args) -> i32 {
 
     server.run_for(epochs);
     print!("{}", server.metrics().report("edge serving (DFTSP)"));
+    if show_stats {
+        print!("{}", server.metrics().search_report());
+    }
     let mut total_sent = 0;
     let mut total_ok = 0;
     for j in joins {

@@ -32,8 +32,12 @@ pub struct Metrics {
     pub batch_sizes: OnlineStats,
     /// Queue length observed at each epoch boundary.
     pub queue_depth: OnlineStats,
-    /// Accumulated search-effort statistics.
+    /// Accumulated search-effort statistics, including total scheduler wall
+    /// time (`SearchStats::schedule_wall_s`, stamped by the epoch driver).
     pub search: SearchStats,
+    /// Number of `Scheduler::schedule` invocations (including ones that
+    /// returned an empty batch) — the denominator for per-call wall time.
+    pub schedule_calls: u64,
     /// Epochs whose own work (scheduling + execution) exceeded the epoch
     /// duration, forcing the wall clock to start the next epoch late instead
     /// of sleeping. Always 0 under the simulated clock.
@@ -94,12 +98,17 @@ impl Metrics {
             self.scheduled += batch_size as u64;
             self.batch_sizes.push(batch_size as f64);
         }
-        self.search.nodes_visited += stats.nodes_visited;
-        self.search.solutions_checked += stats.solutions_checked;
-        self.search.pruned_capacity += stats.pruned_capacity;
-        self.search.pruned_constraint += stats.pruned_constraint;
-        self.search.subproblems += stats.subproblems;
-        self.search.budget_exhausted |= stats.budget_exhausted;
+        self.schedule_calls += 1;
+        self.search.merge(stats);
+    }
+
+    /// Mean scheduler wall time per `schedule` call in seconds (0 when the
+    /// driver never invoked a scheduler).
+    pub fn mean_schedule_wall_s(&self) -> f64 {
+        if self.schedule_calls == 0 {
+            return 0.0;
+        }
+        self.search.schedule_wall_s / self.schedule_calls as f64
     }
 
     /// The paper's headline metric: successfully served requests per second.
@@ -145,9 +154,16 @@ impl Metrics {
             ("occupancy_mean", num(finite(self.inflight_occupancy.mean()))),
             ("nodes_visited", num(self.search.nodes_visited as f64)),
             ("solutions_checked", num(self.search.solutions_checked as f64)),
+            ("leaf_check_work", num(self.search.leaf_check_work as f64)),
             ("pruned_capacity", num(self.search.pruned_capacity as f64)),
             ("pruned_constraint", num(self.search.pruned_constraint as f64)),
+            ("pruned_reuse", num(self.search.pruned_reuse as f64)),
+            ("z_levels_skipped", num(self.search.z_levels_skipped as f64)),
             ("subproblems", num(self.search.subproblems as f64)),
+            ("schedule_calls", num(self.schedule_calls as f64)),
+            // Wall-clock, not bit-deterministic: the golden-fixture compare
+            // (tests/golden_metrics.rs) skips this key.
+            ("schedule_wall_s", num(finite(self.search.schedule_wall_s))),
             ("epoch_overruns", num(self.epoch_overruns as f64)),
             ("horizon", num(self.horizon)),
         ])
@@ -192,7 +208,7 @@ impl Metrics {
         }
         if self.search.nodes_visited > 0 {
             s.push_str(&format!(
-                "search: {} nodes, {} solutions checked, {} capacity-pruned, {} constraint-pruned{}\n",
+                "search: {} nodes, {} solutions checked, {} capacity-pruned, {} constraint-pruned{}, schedule wall {}\n",
                 self.search.nodes_visited,
                 self.search.solutions_checked,
                 self.search.pruned_capacity,
@@ -201,10 +217,43 @@ impl Metrics {
                     " (budget exhausted)"
                 } else {
                     ""
-                }
+                },
+                fmt::duration(self.search.schedule_wall_s),
             ));
         }
         s
+    }
+
+    /// Detailed scheduler-observability block (the CLI's `--stats` view):
+    /// every search-effort counter plus total and per-call schedule wall
+    /// time, so perf work on the DFTSP hot path is measurable straight from
+    /// the binary.
+    pub fn search_report(&self) -> String {
+        let s = &self.search;
+        let mut out = String::from("== scheduler search stats ==\n");
+        out.push_str(&format!(
+            "schedule calls {}  wall total {}  wall mean/call {}\n",
+            self.schedule_calls,
+            fmt::duration(s.schedule_wall_s),
+            fmt::duration(self.mean_schedule_wall_s()),
+        ));
+        out.push_str(&format!(
+            "nodes {}  leaves checked {}  leaf-check work {}  subproblems {}\n",
+            s.nodes_visited, s.solutions_checked, s.leaf_check_work, s.subproblems,
+        ));
+        out.push_str(&format!(
+            "pruned: capacity {}  constraint {}  reuse {}  z-levels skipped {}{}\n",
+            s.pruned_capacity,
+            s.pruned_constraint,
+            s.pruned_reuse,
+            s.z_levels_skipped,
+            if s.budget_exhausted {
+                "  (budget exhausted)"
+            } else {
+                ""
+            },
+        ));
+        out
     }
 }
 
@@ -248,6 +297,35 @@ mod tests {
         assert_eq!(m.search.nodes_visited, 15);
         assert!(m.search.budget_exhausted);
         assert_eq!(m.batch_sizes.count(), 1); // empty schedule not counted
+        assert_eq!(m.schedule_calls, 2); // but it still counts as a call
+    }
+
+    #[test]
+    fn schedule_wall_time_accumulates() {
+        let mut m = Metrics::new();
+        let mut s = SearchStats {
+            nodes_visited: 3,
+            schedule_wall_s: 0.25,
+            ..Default::default()
+        };
+        m.record_schedule(2, &s);
+        s.schedule_wall_s = 0.75;
+        m.record_schedule(1, &s);
+        assert!((m.search.schedule_wall_s - 1.0).abs() < 1e-12);
+        assert!((m.mean_schedule_wall_s() - 0.5).abs() < 1e-12);
+        let r = m.search_report();
+        assert!(r.contains("schedule calls 2"));
+        assert!(r.contains("wall"));
+        assert!(r.contains("pruned"));
+        // Wall time is diagnostics, not identity: two runs differing only in
+        // wall time compare equal (driver-parity / determinism contract).
+        let mut a = SearchStats::default();
+        let b = SearchStats {
+            schedule_wall_s: 123.0,
+            ..Default::default()
+        };
+        a.schedule_wall_s = 4.0;
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -120,6 +120,10 @@ pub struct ServerConfig {
     pub seed: u64,
     /// Epoch-barrier or continuous (decode-step admission) execution.
     pub batching: BatchingMode,
+    /// Scheduler-level knobs (e.g. DFTSP's parallel d-pool search) — the
+    /// CLI constructs the scheduler it hands to `EpochServer::new` from
+    /// this, keeping one config path across sim and serving.
+    pub scheduler: crate::coordinator::SchedulerConfig,
 }
 
 impl Default for ServerConfig {
@@ -136,6 +140,7 @@ impl Default for ServerConfig {
             max_wait_epochs: 8,
             seed: 7,
             batching: BatchingMode::Epoch,
+            scheduler: crate::coordinator::SchedulerConfig::default(),
         }
     }
 }

@@ -13,7 +13,7 @@
 //! toward throughput — the paper's headline metric.
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::{EpochParams, Scheduler};
+use crate::coordinator::{EpochParams, Scheduler, SchedulerConfig};
 use crate::driver::{
     run_epochs, AnalyticBackend, BatchingMode, ContinuousBackend, DriverPolicy, EpochDriver,
     InstanceTemplate, SPadPolicy, SimClock, StalePolicy,
@@ -43,6 +43,10 @@ pub struct SimConfig {
     /// Execution mode: the paper's epoch barrier, or continuous batching
     /// with decode-step admission (`ContinuousBackend`).
     pub batching: BatchingMode,
+    /// Scheduler-level knobs (scenario TOML `[scheduler]`, CLI `--workers`):
+    /// the simulator itself is scheduler-agnostic, but the CLI uses this to
+    /// construct the policy it passes in (e.g. DFTSP's parallel search).
+    pub scheduler: SchedulerConfig,
 }
 
 impl SimConfig {
@@ -60,6 +64,7 @@ impl SimConfig {
             seed: 42,
             s_pad: None,
             batching: BatchingMode::Epoch,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }

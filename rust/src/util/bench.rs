@@ -37,6 +37,61 @@ impl BenchResult {
             self.iters,
         )
     }
+
+    /// Machine-readable view (seconds/iteration) for tracked bench baselines.
+    pub fn to_json(&self) -> super::json::Json {
+        use super::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean)),
+            ("median_s", Json::Num(self.median)),
+            ("p95_s", Json::Num(self.p95)),
+            ("min_s", Json::Num(self.min)),
+            ("std_s", Json::Num(self.std)),
+        ])
+    }
+}
+
+/// Collects benchmark rows and writes them as one tracked JSON artifact
+/// (e.g. `BENCH_dftsp.json` at the repository root) so the bench trajectory
+/// is diffable commit-over-commit and uploadable from CI.
+#[derive(Debug, Default)]
+pub struct BenchSuite {
+    rows: Vec<super::json::Json>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        BenchSuite::default()
+    }
+
+    pub fn push(&mut self, row: super::json::Json) {
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// `{"rows": [...], "provenance": ...}` — provenance names the command
+    /// that regenerates the file, so a stale baseline is always one
+    /// invocation away from fresh.
+    pub fn to_json(&self, provenance: &str) -> super::json::Json {
+        use super::json::Json;
+        Json::obj(vec![
+            ("provenance", Json::Str(provenance.to_string())),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+
+    pub fn write(&self, path: &std::path::Path, provenance: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json(provenance)))
+    }
 }
 
 /// Benchmark runner: calibrates iteration count toward `target_time`,
@@ -125,6 +180,28 @@ mod tests {
         assert!(r.median > 0.0);
         assert!(r.iters >= 5);
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn bench_suite_json_round_trips() {
+        let b = Bencher {
+            warmup_time: 0.01,
+            target_time: 0.02,
+            samples: 3,
+        };
+        let r = b.run("suite/row", || {
+            black_box(1 + 1);
+        });
+        let mut suite = BenchSuite::new();
+        suite.push(r.to_json());
+        assert_eq!(suite.len(), 1);
+        let s = suite.to_json("cargo bench --bench perf_hotpath -- --json").to_string();
+        let back = crate::util::json::Json::parse(&s).unwrap();
+        assert!(back.req_str("provenance").unwrap().contains("perf_hotpath"));
+        let rows = back.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req_str("name").unwrap(), "suite/row");
+        assert!(rows[0].req_f64("median_s").unwrap() >= 0.0);
     }
 
     #[test]

@@ -38,8 +38,13 @@ fn check_or_bless(name: &str, m: &Metrics) {
         panic!("golden `{name}`: fixture and metrics must both be JSON objects");
     };
     // Every frozen field must still exist and match; fields *added* to
-    // Metrics later are allowed (bless to pick them up).
+    // Metrics later are allowed (bless to pick them up). Wall-clock fields
+    // are exported for observability but are not bit-deterministic — skip.
+    const NON_DETERMINISTIC: &[&str] = &["schedule_wall_s"];
     for (key, want_v) in want_fields {
+        if NON_DETERMINISTIC.contains(&key.as_str()) {
+            continue;
+        }
         let cur_v = current_fields
             .get(key)
             .unwrap_or_else(|| panic!("golden `{name}`: field `{key}` vanished from Metrics"));

@@ -7,7 +7,8 @@
 
 use edgellm::cluster::{ClusterSpec, GpuSpec};
 use edgellm::coordinator::{
-    BruteForce, Dftsp, EpochParams, FeasibilityChecker, ProblemInstance, Scheduler,
+    BruteForce, Dftsp, EpochParams, FeasibilityChecker, PartialState, ProblemInstance,
+    Scheduler, SchedulerConfig, Violation,
 };
 use edgellm::model::{CostModel, LlmSpec};
 use edgellm::quant;
@@ -254,6 +255,7 @@ fn prop_pruning_never_prunes_the_optimal_node() {
         let pruned = Dftsp::new().schedule(&inst, &reqs);
         let unpruned = Dftsp {
             disable_constraint_pruning: true,
+            ..Dftsp::default()
         }
         .schedule(&inst, &reqs);
         assert_eq!(
@@ -265,6 +267,149 @@ fn prop_pruning_never_prunes_the_optimal_node() {
             pruned.stats.nodes_visited <= unpruned.stats.nodes_visited,
             "seed {seed}: pruning must not enlarge the search"
         );
+    }
+}
+
+/// PROPERTY (issue satellite): the incremental `PartialState` leaf test —
+/// DFTSP's O(1) fast path — agrees with `FeasibilityChecker::check` on
+/// arbitrary subsets, NaN-poisoned requests included. Building the partial
+/// one request at a time reproduces the checker's flat summation order, so
+/// agreement here is bit-exact, down to which constraint fires first.
+#[test]
+fn prop_incremental_leaf_matches_exact_checker() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(8000 + seed);
+        let inst = random_instance(&mut rng);
+        let mut reqs = random_requests(&mut rng, 10, false);
+        // Poison a couple of requests with NaN channel gain / deadline: the
+        // incremental and exact forms must still agree (both treat NaN
+        // comparisons as "no violation"), and neither may panic.
+        let mut b = RequestBuilder::new();
+        let radio = RadioParams::default();
+        reqs.push(EpochRequest::annotate(
+            b.build(0.0, 128, 256, 2.0, 0.2),
+            f64::NAN,
+            &radio,
+            0.25,
+            0.25,
+        ));
+        reqs.push(EpochRequest::annotate(
+            b.build(0.0, 256, 128, f64::NAN, 0.2),
+            (1e-3f64).sqrt(),
+            &radio,
+            0.25,
+            0.25,
+        ));
+        for _ in 0..8 {
+            let size = rng.int_range(0, reqs.len() as u64 - 1) as usize;
+            let mut subset: Vec<&EpochRequest> = Vec::new();
+            let mut p = PartialState::empty();
+            for _ in 0..size {
+                let r = &reqs[rng.below(reqs.len() as u64) as usize];
+                subset.push(r);
+                p = p.add_block(
+                    1,
+                    r.rho_min_u,
+                    r.rho_min_d,
+                    inst.kv_bytes(r.req.output_tokens),
+                    inst.cost.decode_flops_per_req(inst.s_pad, r.req.output_tokens),
+                    inst.compute_slack(r),
+                );
+            }
+            let exact = FeasibilityChecker::new(&inst).check(&subset);
+            if subset.iter().any(|r| !inst.admits(r)) {
+                // (1e) is the checker's concern alone — the DFS pool is
+                // admission-filtered before any PartialState exists.
+                assert_eq!(exact, Err(Violation::Accuracy), "seed {seed}");
+                continue;
+            }
+            let incremental = p.violation(&inst);
+            assert_eq!(
+                incremental.is_none(),
+                exact.is_ok(),
+                "seed {seed}: incremental {incremental:?} vs exact {exact:?} on {} reqs",
+                subset.len()
+            );
+            if let (Some(vi), Err(ve)) = (incremental, exact) {
+                assert_eq!(vi, ve, "seed {seed}: first violated constraint differs");
+            }
+        }
+    }
+}
+
+/// PROPERTY: the blockwise (level-prefix) `PartialState` construction the
+/// DFS actually uses — whole-level `add_block`s, the summation order that
+/// *can* drift an ulp against the checker's flat sums — agrees with the
+/// exact checker on every leaf outside `near_boundary`'s arbitration band;
+/// inside the band the DFS defers to the exact checker by construction, so
+/// only no-panic is asserted there.
+#[test]
+fn prop_blockwise_leaf_matches_exact_checker_outside_boundary() {
+    use edgellm::coordinator::tree::{build_levels, materialize};
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(8500 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(4, 16) as usize;
+        let reqs = random_requests(&mut rng, n, false);
+        let adm = inst.admissible(&reqs);
+        if adm.is_empty() {
+            continue;
+        }
+        let levels = build_levels(&inst, &adm);
+        for _ in 0..8 {
+            let counts: Vec<usize> = levels
+                .iter()
+                .map(|g| rng.int_range(0, g.len() as u64) as usize)
+                .collect();
+            let mut p = PartialState::empty();
+            for (g, &c) in levels.iter().zip(&counts) {
+                p = p.add_block(
+                    c,
+                    g.prefix_rho_u[c],
+                    g.prefix_rho_d[c],
+                    g.kv_per_req,
+                    g.decode_flops_per_req * c as f64,
+                    g.prefix_min_slack[c],
+                );
+            }
+            let subset = materialize(&levels, &counts);
+            let exact = FeasibilityChecker::new(&inst).check(&subset).is_ok();
+            if p.near_boundary(&inst) {
+                continue;
+            }
+            assert_eq!(
+                p.violation(&inst).is_none(),
+                exact,
+                "seed {seed}: blockwise partial diverged outside the boundary band \
+                 (counts {counts:?})"
+            );
+        }
+    }
+}
+
+/// PROPERTY (issue satellite): the opt-in parallel d-pool search returns the
+/// same schedule as the sequential chained search — same request ids in the
+/// same order, same compute times, same bandwidth totals. (Search-effort
+/// counters legitimately differ: a parallel wave may search pools past the
+/// winning d; they must still be deterministic run-to-run.)
+#[test]
+fn prop_parallel_search_matches_sequential() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(9000 + seed);
+        let inst = random_instance(&mut rng);
+        let n = rng.int_range(2, 24) as usize;
+        let reqs = random_requests(&mut rng, n, seed % 2 == 0);
+        let seq = Dftsp::new().schedule(&inst, &reqs);
+        let workers = rng.int_range(2, 5) as usize;
+        let par = Dftsp::with_config(SchedulerConfig { workers }).schedule(&inst, &reqs);
+        assert_eq!(seq.scheduled, par.scheduled, "seed {seed} workers {workers}");
+        assert_eq!(seq.compute_time, par.compute_time, "seed {seed}");
+        assert_eq!(seq.per_request_compute, par.per_request_compute, "seed {seed}");
+        assert_eq!(seq.rho_u_total, par.rho_u_total, "seed {seed}");
+        assert_eq!(seq.rho_d_total, par.rho_d_total, "seed {seed}");
+        let par2 = Dftsp::with_config(SchedulerConfig { workers }).schedule(&inst, &reqs);
+        assert_eq!(par.scheduled, par2.scheduled, "seed {seed}: parallel determinism");
+        assert_eq!(par.stats, par2.stats, "seed {seed}: parallel stats determinism");
     }
 }
 

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Gate a freshly generated bench baseline against the committed one.
+
+Compares the *deterministic* counter columns of matching scenario rows
+(matched by their "scenario" field) and fails when any counter regressed by
+more than the tolerance. Wall-clock columns are never compared — CI machines
+are too noisy to gate on latency; the counters (search nodes visited,
+leaf-check work, subproblems, …) are bit-deterministic, so any growth is a
+real algorithmic regression, not jitter.
+
+Usage (what CI's bench-smoke job runs):
+
+    python3 python/bench_gate.py BASELINE.json FRESH.json \
+        --keys nodes_visited,leaf_check_work,subproblems --tol 0.10
+
+Null / missing baseline values are skipped (the committed file may predate a
+column). Improvements are reported but never fail. Exit code 1 on any
+regression beyond tolerance or on a scenario that vanished from the fresh
+file.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    return {row["scenario"]: row for row in rows if "scenario" in row}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly generated JSON")
+    ap.add_argument(
+        "--keys",
+        default="nodes_visited,leaf_check_work,subproblems",
+        help="comma-separated deterministic counter columns to gate on",
+    )
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.10,
+        help="allowed relative regression (0.10 = +10%%)",
+    )
+    args = ap.parse_args()
+    keys = [k for k in args.keys.split(",") if k]
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+
+    failures = []
+    improvements = 0
+    compared = 0
+    for scenario, brow in sorted(base.items()):
+        frow = fresh.get(scenario)
+        if frow is None:
+            failures.append(f"{scenario}: missing from the fresh baseline")
+            continue
+        for key in keys:
+            want = brow.get(key)
+            got = frow.get(key)
+            if want is None or got is None:
+                continue  # column predates/postdates one of the files
+            compared += 1
+            if want == 0:
+                if got > 0:
+                    failures.append(f"{scenario}.{key}: 0 -> {got}")
+                continue
+            ratio = got / want
+            if ratio > 1.0 + args.tol:
+                failures.append(
+                    f"{scenario}.{key}: {want} -> {got} (+{(ratio - 1) * 100:.1f}% "
+                    f"> {args.tol * 100:.0f}% tolerance)"
+                )
+            elif ratio < 1.0:
+                improvements += 1
+                print(f"improved  {scenario}.{key}: {want} -> {got} "
+                      f"({(1 - ratio) * 100:.1f}% less)")
+
+    print(f"compared {compared} counters across {len(base)} scenarios "
+          f"({improvements} improved)")
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,11 +48,17 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def write_weights_bin(path, cfg, params):
+def write_weights_bin(path, cfg, params, int8=False):
     """Custom container (no npz dependency on the Rust side):
     magic 'ELLM', u32 version, u32 tensor count, then per tensor:
-    u32 name_len, name utf-8, u8 dtype (0=f32, 1=i32), u32 ndim,
-    u32 dims…, u64 payload bytes, raw little-endian data."""
+    u32 name_len, name utf-8, u8 dtype, u32 ndim, u32 dims…,
+    u64 payload bytes, payload.
+
+    dtype 0 (f32): payload is raw little-endian f32 data.
+    dtype 1 (i8 + scale, `int8=True`): payload is one little-endian f32
+    per-tensor scale followed by the int8 codes — the storage the host
+    engine's W8A16/W8A8 kernels consume directly. The embedding always
+    stays dtype 0 (the tied-logits lookup indexes raw f32 rows)."""
     with open(path, "wb") as f:
         f.write(b"ELLM")
         f.write(struct.pack("<II", 1, len(cfg.param_order())))
@@ -61,10 +67,17 @@ def write_weights_bin(path, cfg, params):
             nb = name.encode()
             f.write(struct.pack("<I", len(nb)))
             f.write(nb)
-            f.write(struct.pack("<BI", 0, w.ndim))
-            for d in w.shape:
-                f.write(struct.pack("<I", d))
-            payload = w.tobytes()
+            if int8 and name != "embed" and w.ndim == 2:
+                codes, scale = Q.quantize_int8_per_tensor(w)
+                f.write(struct.pack("<BI", 1, codes.ndim))
+                for d in codes.shape:
+                    f.write(struct.pack("<I", d))
+                payload = struct.pack("<f", float(scale)) + codes.tobytes()
+            else:
+                f.write(struct.pack("<BI", 0, w.ndim))
+                for d in w.shape:
+                    f.write(struct.pack("<I", d))
+                payload = w.tobytes()
             f.write(struct.pack("<Q", len(payload)))
             f.write(payload)
 
@@ -92,11 +105,23 @@ def export_weights(outdir, cfg):
     fp_params = M.init_params(cfg, WEIGHT_SEED)
     entries = []
     for label in Q.VARIANTS:
-        qp = Q.quantize_params(fp_params, label)
         fname = Q.variant_filename(label)
-        write_weights_bin(os.path.join(outdir, fname), cfg, qp)
+        if label in Q.INT8_VARIANTS:
+            # Real int8 container (dtype=1): per-tensor RTN codes + scale,
+            # numerically identical to the fake-quant f32 it replaces
+            # (dequantized value = codes * scale), but the host engine's
+            # quantized kernels now run on the codes directly.
+            write_weights_bin(os.path.join(outdir, fname), cfg, fp_params, int8=True)
+            print(f"  {fname} (int8)")
+        else:
+            qp = Q.quantize_params(fp_params, label)
+            write_weights_bin(os.path.join(outdir, fname), cfg, qp)
+            print(f"  {fname}")
         entries.append({"label": label, "file": fname})
-        print(f"  {fname}")
+    for alias, target in Q.INT8_ALIASES.items():
+        # Same weights file, different runtime kernel path (activation bits).
+        entries.append({"label": alias, "file": Q.variant_filename(target)})
+        print(f"  {alias} -> {Q.variant_filename(target)} (alias)")
     return entries
 
 

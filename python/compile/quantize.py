@@ -89,6 +89,25 @@ def fake_quant(w: np.ndarray, bits: int, method: str) -> np.ndarray:
     raise ValueError(f"unknown quantization method `{method}`")
 
 
+INT8_QMAX = 127
+
+
+def quantize_int8_per_tensor(w: np.ndarray):
+    """Per-tensor symmetric int8 codes + f32 scale — the weight container's
+    dtype=1 payload (mirrors rust/src/runtime/kernels.rs
+    `quantize_per_tensor_i8`). Dequantized value = codes * scale, equal to
+    what `quantize_rtn` would store as fake-quant f32 (up to the sign of
+    zero: a 0 code dequantizes to +0.0 where fake-quant keeps -0.0 — GEMM
+    accumulation is unaffected, since +0.0 + -0.0 = +0.0)."""
+    w = np.asarray(w, dtype=np.float32)
+    amax = np.float32(np.abs(w).max())
+    # Single f32 division (no f64 round-trip), matching the Rust kernel's
+    # `max / 127.0f32` bit-for-bit.
+    scale = np.float32(1.0) if amax == 0.0 else amax / np.float32(INT8_QMAX)
+    codes = np.clip(np.round(w / scale), -INT8_QMAX, INT8_QMAX).astype(np.int8)
+    return codes, scale
+
+
 #: The weight variants shipped as artifacts: label -> (bits, method).
 VARIANTS = {
     "W16A16": (16, "none"),
@@ -98,6 +117,14 @@ VARIANTS = {
     "W4A16/GPTQ": (4, "gptq"),
     "W4A16/ZQ-Local": (4, "zq-local"),
 }
+
+#: Variants whose container stores real int8 codes + per-tensor scale
+#: (dtype=1) instead of dequantized f32. Only the per-tensor RTN scheme maps
+#: onto a single scale, so these are the RTN variants; `W8A8/RTN` aliases
+#: the same weights file — activation width is a *runtime* kernel choice
+#: (the host engine's W8A8 path), not a storage property.
+INT8_VARIANTS = ["W8A16/RTN"]
+INT8_ALIASES = {"W8A8/RTN": "W8A16/RTN"}
 
 
 def variant_filename(label: str) -> str:

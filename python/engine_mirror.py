@@ -1,0 +1,453 @@
+#!/usr/bin/env python3
+"""Pure-Python (numpy) mirror of the Rust host engine's decode hot path
+(rust/src/runtime/{host,kernels}.rs).
+
+Purpose
+-------
+1. Cross-validate the batched-decode rework without a Rust toolchain:
+
+       python3 python/engine_mirror.py validate
+
+   - batched decode ≡ the per-sequence reference path *bit-exactly* on
+     randomized slot patterns (release holes, mid-flight admissions), for
+     f32, W8A16 and W8A8 kernel selections — the same property
+     `rust/tests/proptest_engine.rs` pins on the Rust side;
+   - the W8A16 kernel ≡ a dequantize-then-f32 oracle bit-for-bit;
+   - the W8A8 kernel within one quantization step per accumulated product.
+
+2. Author the deterministic columns of BENCH_engine.json (scenario names,
+   batch, nominal FLOPs closed form — identical to the formulas in
+   rust/benches/perf_engine.rs — and the tracked allocations-per-step,
+   0 by construction) without a toolchain:
+
+       python3 python/engine_mirror.py bench
+
+   Wall/throughput columns are *not* produced here — they come from
+   `cargo bench --bench perf_engine -- --json` (CI's bench-smoke job runs
+   the quick profile and uploads the file as an artifact). The mirror's own
+   wall clock (interpreter overhead included) is printed for EXPERIMENTS.md
+   as an indicative before/after only.
+
+The float arithmetic mirrors the Rust kernels operation-for-operation in
+float32 (k-ascending accumulation, multiply-then-add — no FMA), and the
+weight-generation RNG is the same SplitMix64 + xoshiro256++ port used by
+dftsp_mirror.py, so the mirror's two decode paths are bit-comparable to each
+other exactly as the Rust paths are to theirs. (Cross-language equality
+holds modulo libm ulps in Box–Muller weight generation, as with the DFTSP
+mirror.)
+"""
+
+import json
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from dftsp_mirror import Rng  # noqa: E402  (SplitMix64 + xoshiro256++ port)
+from compile.quantize import (  # noqa: E402  (single source of the RTN rule)
+    INT8_QMAX,
+    quantize_int8_per_tensor as quantize_per_tensor_i8,
+)
+
+F32 = np.float32
+
+
+def gaussian(rng):
+    """Port of util::rng::Rng::gaussian (Box–Muller, one value per call)."""
+    u1 = 1.0 - rng.f64()
+    u2 = rng.f64()
+    return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+# ---------------------------------------------------------------------------
+# Kernels (rust/src/runtime/kernels.rs)
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows_i8(x):
+    """Per-row activation quantization: returns (codes int32 [m,k], scales [m])."""
+    amax = np.abs(x).max(axis=1).astype(F32)
+    scales = np.where(amax == 0.0, F32(1.0), amax / F32(INT8_QMAX)).astype(F32)
+    codes = np.clip(np.round(x / scales[:, None]), -INT8_QMAX, INT8_QMAX)
+    return codes.astype(np.int32), scales
+
+
+def matmul_f32(x, w):
+    """k-ascending multiply-then-add accumulation, per row — the Rust
+    reduction order (NOT np.matmul, whose BLAS blocking reorders sums)."""
+    m, k = x.shape
+    out = np.zeros((m, w.shape[1]), dtype=F32)
+    for kk in range(k):
+        out += x[:, kk : kk + 1] * w[kk, :]
+    return out
+
+
+def matmul_w8a16(x, codes, scale):
+    m, k = x.shape
+    out = np.zeros((m, codes.shape[1]), dtype=F32)
+    for kk in range(k):
+        out += x[:, kk : kk + 1] * (codes[kk, :].astype(F32) * scale)
+    return out
+
+
+def matmul_w8a8(x, codes, w_scale):
+    q, a_scales = quantize_rows_i8(x)
+    acc = q @ codes.astype(np.int32)  # exact i32 accumulation, order-free
+    dq = (a_scales * F32(w_scale)).astype(F32)
+    return (acc.astype(F32) * dq[:, None]).astype(F32)
+
+
+def matmul_param(x, param, a_bits):
+    kind, payload = param
+    if kind == "dense":
+        return matmul_f32(x, payload)
+    codes, scale = payload
+    if a_bits <= 8:
+        return matmul_w8a8(x, codes, scale)
+    return matmul_w8a16(x, codes, scale)
+
+
+def relu(x):
+    return np.maximum(x, F32(0.0))
+
+
+# ---------------------------------------------------------------------------
+# Engine mirror (rust/src/runtime/host.rs)
+# ---------------------------------------------------------------------------
+
+TINY = dict(vocab=32, layers=2, d_model=16, n_heads=2, d_ff=32, max_prompt=8,
+            max_seq=16, logit_scale=8.0, variants=[1, 2, 4], seed=0xE2E,
+            weight_scale=0.25)
+BENCH = dict(vocab=256, layers=4, d_model=128, n_heads=4, d_ff=256,
+             max_prompt=64, max_seq=192, logit_scale=4.0, variants=[1, 8, 32],
+             seed=0xBE9C, weight_scale=0.08)
+
+
+class Engine:
+    def __init__(self, spec, w_bits=16, a_bits=16):
+        self.spec = spec
+        self.a_bits = a_bits
+        rng = Rng(spec["seed"])
+        scale = spec["weight_scale"]
+        dm, df, vocab = spec["d_model"], spec["d_ff"], spec["vocab"]
+
+        def tensor(shape):
+            n = int(np.prod(shape))
+            vals = np.array([F32(gaussian(rng) * scale) for _ in range(n)],
+                            dtype=F32)
+            return vals.reshape(shape)
+
+        self.embed = tensor((vocab, dm))
+        self.layers = []
+        for _ in range(spec["layers"]):
+            ws = {}
+            for w in ["wq", "wk", "wv", "wo", "w1", "w2"]:
+                shape = (dm, df) if w == "w1" else (df, dm) if w == "w2" else (dm, dm)
+                t = tensor(shape)
+                if w_bits < 16:
+                    ws[w] = ("quant", quantize_per_tensor_i8(t))
+                else:
+                    ws[w] = ("dense", t)
+            self.layers.append(ws)
+
+    def embed_rows(self, tokens):
+        ids = np.clip(np.asarray(tokens), 0, self.spec["vocab"] - 1)
+        return self.embed[ids].astype(F32)
+
+    def logits(self, x):
+        # Tied embedding: x @ embed.T * scale, k-ascending like the Rust dot.
+        return matmul_f32(x, self.embed.T.astype(F32)) * F32(self.spec["logit_scale"])
+
+    def _attend(self, q_rows, caches, poss, layer):
+        """Per-sequence incremental attention (identical for both paths)."""
+        spec = self.spec
+        nh, dh, dm = spec["n_heads"], spec["d_model"] // spec["n_heads"], spec["d_model"]
+        att = np.zeros_like(q_rows)
+        inv = F32(1.0 / math.sqrt(dh))
+        for i, (kc, vc, pos) in enumerate(zip(*caches, poss)):
+            for h in range(nh):
+                o = h * dh
+                qh = q_rows[i, o : o + dh]
+                ks = kc[layer][: pos + 1, o : o + dh]
+                # sequential-order dot per row (dh is tiny; sum order over dh
+                # matches Rust's k-ascending elementwise sum)
+                sc = np.array([np.add.reduce((qh * krow).astype(F32))
+                               for krow in ks], dtype=F32) * inv
+                m = sc.max()
+                e = np.exp(sc - m, dtype=F32)
+                denom = np.add.reduce(e)
+                wgt = (e / denom).astype(F32)
+                vs = vc[layer][: pos + 1, o : o + dh]
+                acc = np.zeros(dh, dtype=F32)
+                for j in range(pos + 1):
+                    acc += wgt[j] * vs[j]
+                att[i, o : o + dh] = acc
+        return att
+
+    def decode(self, tokens, k_caches, v_caches, poss, batched=True):
+        """One decode step. `k_caches[i]` is seq i's `[layers, max_seq, dm]`
+        K arena view (v likewise); poss its positions. `batched=False` runs
+        the per-sequence reference path (one kernel call per sequence)."""
+        b = len(tokens)
+        if batched:
+            groups = [list(range(b))]
+        else:
+            groups = [[i] for i in range(b)]
+        out = np.zeros((b, self.spec["vocab"]), dtype=F32)
+        for idx in groups:
+            x = self.embed_rows([tokens[i] for i in idx])
+            sub_k = [k_caches[i] for i in idx]
+            sub_v = [v_caches[i] for i in idx]
+            sub_p = [poss[i] for i in idx]
+            for l, ws in enumerate(self.layers):
+                q = matmul_param(x, ws["wq"], self.a_bits)
+                k = matmul_param(x, ws["wk"], self.a_bits)
+                v = matmul_param(x, ws["wv"], self.a_bits)
+                for j, i in enumerate(idx):
+                    k_caches[i][l][poss[i]] = k[j]
+                    v_caches[i][l][poss[i]] = v[j]
+                att = self._attend(q, (sub_k, sub_v), sub_p, l)
+                x_out = matmul_param(att, ws["wo"], self.a_bits) + x
+                hid = relu(matmul_param(x_out, ws["w1"], self.a_bits))
+                x = matmul_param(hid, ws["w2"], self.a_bits) + x_out
+            out[idx] = self.logits(x)
+        for i in range(b):
+            poss[i] += 1
+        return out
+
+    def prefill_one(self, prompt):
+        """Returns (last logits row, k arena, v arena, pos) for one prompt."""
+        spec = self.spec
+        L, dm, ms = spec["layers"], spec["d_model"], spec["max_seq"]
+        kc = np.zeros((L, ms, dm), dtype=F32)
+        vc = np.zeros((L, ms, dm), dtype=F32)
+        s = len(prompt)
+        x = self.embed_rows(prompt)
+        nh = spec["n_heads"]
+        dh = dm // nh
+        inv = F32(1.0 / math.sqrt(dh))
+        for l, ws in enumerate(self.layers):
+            q = matmul_param(x, ws["wq"], self.a_bits)
+            k = matmul_param(x, ws["wk"], self.a_bits)
+            v = matmul_param(x, ws["wv"], self.a_bits)
+            att = np.zeros_like(x)
+            for h in range(nh):
+                o = h * dh
+                for i in range(s):
+                    sc = np.array([np.add.reduce((q[i, o:o + dh] * k[j, o:o + dh]).astype(F32))
+                                   for j in range(i + 1)], dtype=F32) * inv
+                    m = sc.max()
+                    e = np.exp(sc - m, dtype=F32)
+                    wgt = (e / np.add.reduce(e)).astype(F32)
+                    acc = np.zeros(dh, dtype=F32)
+                    for j in range(i + 1):
+                        acc += wgt[j] * v[j, o:o + dh]
+                    att[i, o:o + dh] = acc
+            x_out = matmul_param(att, ws["wo"], self.a_bits) + x
+            hid = relu(matmul_param(x_out, ws["w1"], self.a_bits))
+            x = matmul_param(hid, ws["w2"], self.a_bits) + x_out
+            kc[l][:s] = k
+            vc[l][:s] = v
+        return self.logits(x[s - 1 : s])[0], kc, vc, s
+
+
+# ---------------------------------------------------------------------------
+# validate
+# ---------------------------------------------------------------------------
+
+def biteq(a, b):
+    return np.array_equal(a.astype(F32).view(np.uint32), b.astype(F32).view(np.uint32))
+
+
+def validate(cases=40):
+    failures = 0
+    for seed in range(cases):
+        rng = Rng(0xE17_0001 + seed)
+        w_bits, a_bits = [(16, 16), (8, 16), (8, 8)][rng.below(3)]
+        spec = dict(TINY)
+        spec["seed"] = 0xBADA55 + seed
+        eng = Engine(spec, w_bits, a_bits)
+        nmax = max(spec["variants"])
+
+        def prompt():
+            ln = rng.int_range(1, spec["max_prompt"])
+            return [rng.below(spec["vocab"]) for _ in range(ln)]
+
+        n0 = rng.int_range(1, nmax)
+        state = [eng.prefill_one(prompt()) for _ in range(n0)]
+        tokens = [int(np.argmax(s[0])) for s in state]
+        kb = [s[1].copy() for s in state]
+        vb = [s[2].copy() for s in state]
+        pb = [s[3] for s in state]
+        kr = [s[1].copy() for s in state]
+        vr = [s[2].copy() for s in state]
+        pr = [s[3] for s in state]
+
+        for _ in range(rng.int_range(3, 10)):
+            ev = rng.below(10)
+            if ev in (0, 1) and len(tokens) > 1:
+                victim = rng.below(len(tokens))
+                for lst in (kb, vb, pb, kr, vr, pr, tokens):
+                    lst[victim] = lst[-1]
+                    lst.pop()
+            elif ev in (2, 3) and len(tokens) < nmax:
+                lg, kc, vc, pos = eng.prefill_one(prompt())
+                kb.append(kc.copy()); vb.append(vc.copy()); pb.append(pos)
+                kr.append(kc.copy()); vr.append(vc.copy()); pr.append(pos)
+                tokens.append(int(np.argmax(lg)))
+            else:
+                if any(p >= spec["max_seq"] for p in pb):
+                    break
+                lb = eng.decode(tokens, kb, vb, pb, batched=True)
+                lr = eng.decode(tokens, kr, vr, pr, batched=False)
+                if not biteq(lb, lr) or pb != pr:
+                    print(f"FAIL seed {seed}: batched != reference "
+                          f"(w{w_bits}a{a_bits})")
+                    failures += 1
+                    break
+                tokens = [int(np.argmax(r)) for r in lb]
+
+    # Quant kernels vs dequantize oracle.
+    for seed in range(cases):
+        rng = Rng(0xE17_0002 + seed)
+        m = rng.int_range(1, 6)
+        k = rng.int_range(1, 24)
+        n = rng.int_range(1, 24)
+        amp = rng.uniform(0.01, 4.0)
+        w = np.array([[F32(rng.uniform(-amp, amp)) for _ in range(n)]
+                      for _ in range(k)], dtype=F32)
+        x = np.array([[F32(rng.uniform(-2.0, 2.0)) for _ in range(k)]
+                      for _ in range(m)], dtype=F32)
+        codes, w_scale = quantize_per_tensor_i8(w)
+        dense = (codes.astype(F32) * w_scale).astype(F32)
+        oracle = matmul_f32(x, dense)
+        got16 = matmul_w8a16(x, codes, w_scale)
+        if not biteq(oracle, got16):
+            print(f"FAIL seed {seed}: W8A16 != oracle")
+            failures += 1
+        got8 = matmul_w8a8(x, codes, w_scale)
+        _, a_scales = quantize_rows_i8(x)
+        tol = (k * (a_scales / 2.0) * 127.0 * float(w_scale))[:, None] + 1e-4
+        if not (np.abs(got8 - oracle) <= tol).all():
+            print(f"FAIL seed {seed}: W8A8 outside one-step bound")
+            failures += 1
+
+    if failures:
+        print(f"validate: {failures} FAILURES")
+        return 1
+    print(f"validate: OK ({cases} slot-pattern cases × 3 precisions, "
+          f"{cases} kernel-oracle cases)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# bench — deterministic columns of BENCH_engine.json + indicative mirror wall
+# ---------------------------------------------------------------------------
+
+BATCHES = [1, 8, 32]
+PROMPT_LEN = 48
+
+
+def decode_step_flops(spec, b, pos):
+    dm, df = spec["d_model"], spec["d_ff"]
+    mm = lambda m, k, n: 2 * m * k * n  # noqa: E731
+    per_layer = 4 * mm(1, dm, dm) + mm(1, dm, df) + mm(1, df, dm) + 4 * dm * (pos + 1)
+    return b * (spec["layers"] * per_layer + 2 * spec["vocab"] * dm)
+
+
+def prefill_flops(spec, b, s):
+    dm, df = spec["d_model"], spec["d_ff"]
+    mm = lambda m, k, n: 2 * m * k * n  # noqa: E731
+    attn = 2 * dm * s * (s + 1)
+    per_layer = 4 * mm(s, dm, dm) + mm(s, dm, df) + mm(s, df, dm) + attn
+    return b * (spec["layers"] * per_layer + 2 * spec["vocab"] * dm)
+
+
+def bench(out_path):
+    spec = BENCH
+    rows = []
+    wall_notes = []
+    for tag, (w_bits, a_bits) in [("f32", (16, 16)), ("w8a16", (8, 16)),
+                                  ("w8a8", (8, 8))]:
+        eng = Engine(spec, w_bits, a_bits)
+        for b in BATCHES:
+            prompts = [[(t * 7 + i * 13) % spec["vocab"] for t in range(PROMPT_LEN)]
+                       for i in range(b)]
+            state = [eng.prefill_one(p) for p in prompts]
+            tokens = [int(np.argmax(s[0])) for s in state]
+            kc = [s[1] for s in state]
+            vc = [s[2] for s in state]
+
+            def make_row(phase, flops, allocs):
+                return {
+                    "scenario": f"engine/{tag}/{phase}/b{b}",
+                    "precision": tag, "phase": phase, "batch": b,
+                    "prompt_len": PROMPT_LEN, "flops_per_call": flops,
+                    "allocs_per_step": allocs, "tokens_per_s": None,
+                    "wall_mean_s": None, "wall_median_s": None,
+                    "wall_p95_s": None, "iters": None,
+                }
+
+            rows.append(make_row("prefill", prefill_flops(spec, b, PROMPT_LEN), None))
+            rows.append(make_row("decode", decode_step_flops(spec, b, PROMPT_LEN), 0))
+            rows.append(make_row("decode_ref", decode_step_flops(spec, b, PROMPT_LEN), None))
+
+            # Indicative mirror wall (interpreter overhead included).
+            steps = 3
+            poss = [s[3] for s in state]
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                eng.decode(tokens, kc, vc, list(poss), batched=True)
+            tb = (time.perf_counter() - t0) / steps
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                eng.decode(tokens, kc, vc, list(poss), batched=False)
+            tr = (time.perf_counter() - t0) / steps
+            wall_notes.append(f"  {tag} b={b}: mirror decode {tb * 1e3:7.2f} ms "
+                              f"vs reference {tr * 1e3:7.2f} ms ({tr / tb:4.1f}x)")
+
+    doc = {
+        "provenance": (
+            "Baseline of the host-engine scenario matrix ({B=1,8,32} x "
+            "{f32, W8A16, W8A8} x {prefill, decode, decode_ref}). Regenerate "
+            "with: cargo bench --bench perf_engine -- --json (CI's "
+            "bench-smoke job runs the --quick profile and uploads this file "
+            "as an artifact). This first committed baseline was produced by "
+            "python/engine_mirror.py bench in a container without a Rust "
+            "toolchain: the deterministic columns (flops_per_call closed "
+            "form, allocs_per_step = tracked scratch+arena growth events, 0 "
+            "in steady state by construction and property-tested in "
+            "tests/proptest_engine.rs) are authoritative; wall_*_s and "
+            "tokens_per_s are null until the first cargo bench run fills "
+            "them."
+        ),
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(rows)} scenario rows to {out_path}")
+    print("indicative mirror walls (NOT committed — interpreter overhead):")
+    for n in wall_notes:
+        print(n)
+    return 0
+
+
+def main():
+    cmd = sys.argv[1] if len(sys.argv) > 1 else "validate"
+    if cmd == "validate":
+        cases = int(sys.argv[2]) if len(sys.argv) > 2 else 40
+        return validate(cases)
+    if cmd == "bench":
+        out = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_engine.json")
+        return bench(out)
+    print(f"unknown command `{cmd}` (expected validate | bench)")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -98,3 +98,25 @@ def test_w16_variant_is_identity_everywhere():
     qp = Q.quantize_params(params, "W16A16")
     for n in cfg.param_order():
         np.testing.assert_array_equal(qp[n], params[n])
+
+
+def test_int8_per_tensor_round_trips_as_rtn():
+    rng = np.random.default_rng(7)
+    w = rng.normal(0, 0.25, (64, 32)).astype(np.float32)
+    codes, scale = Q.quantize_int8_per_tensor(w)
+    assert codes.dtype == np.int8 and scale.dtype == np.float32
+    assert np.abs(codes).max() <= Q.INT8_QMAX
+    # dequantized codes equal the fake-quant RTN payload they replace
+    np.testing.assert_array_equal(
+        codes.astype(np.float32) * scale, Q.quantize_rtn(w, 8).astype(np.float32)
+    )
+    # all-zero tensors quantize without dividing by zero
+    zc, zs = Q.quantize_int8_per_tensor(np.zeros((4, 4), np.float32))
+    assert zs == np.float32(1.0) and (zc == 0).all()
+
+
+def test_int8_aliases_point_at_emitted_variants():
+    for alias, target in Q.INT8_ALIASES.items():
+        assert target in Q.INT8_VARIANTS
+        assert target in Q.VARIANTS
+        assert alias not in Q.VARIANTS, "aliases must not double-emit a file"

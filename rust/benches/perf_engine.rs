@@ -1,0 +1,227 @@
+//! §Perf micro-benchmarks — the host engine request path: the
+//! {B=1,8,32} × {f32, W8A16, W8A8} × {prefill, decode} scenario matrix, plus
+//! the retained per-sequence reference decode as the before/after baseline.
+//! The iteration log lives in EXPERIMENTS.md §Engine.
+//!
+//! Run: cargo bench --bench perf_engine [-- --quick] [-- --json]
+//!
+//! `--json` (or JSON=1) additionally writes the tracked baseline
+//! `BENCH_engine.json` at the repository root: per scenario the wall/
+//! throughput columns plus the deterministic columns — nominal FLOPs per
+//! call (closed form below, mirrored by python/engine_mirror.py) and the
+//! tracked allocations per decode step (scratch growth + KV-arena growth
+//! events; 0 in steady state by construction). CI's bench-smoke job runs
+//! exactly this and uploads the file, so the engine trajectory is tracked
+//! commit-over-commit. `--quick` (or QUICK=1) shortens warmup/samples.
+
+// The synthetic-engine scenario matrix exercises the host engine's batched
+// decode and quantized kernels; the pjrt engine has neither, so this bench
+// is a no-op stub under `--features pjrt`.
+#[cfg(not(feature = "pjrt"))]
+mod host_bench {
+    use edgellm::quant::Precision;
+    use edgellm::runtime::{argmax, Engine, SyntheticSpec};
+    use edgellm::util::bench::{black_box, BenchSuite, Bencher};
+    use edgellm::util::json::Json;
+    use std::path::PathBuf;
+
+    const BATCHES: [usize; 3] = [1, 8, 32];
+    const PROMPT_LEN: usize = 48;
+
+    fn precision_tag(p: Precision) -> &'static str {
+        match (p.w_bits, p.a_bits) {
+            (16, 16) => "f32",
+            (8, 16) => "w8a16",
+            _ => "w8a8",
+        }
+    }
+
+    fn prompts(b: usize, vocab: usize) -> Vec<Vec<i32>> {
+        (0..b)
+            .map(|i| {
+                (0..PROMPT_LEN)
+                    .map(|t| ((t * 7 + i * 13) % vocab) as i32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Nominal FLOPs of one batched decode step at position `pos`
+    /// (multiply-add = 2 FLOPs; identical formula in python/engine_mirror.py).
+    fn decode_step_flops(spec: &SyntheticSpec, b: usize, pos: usize) -> u64 {
+        let (dm, df) = (spec.d_model as u64, spec.d_ff as u64);
+        let mm = |m: u64, k: u64, n: u64| 2 * m * k * n;
+        let per_layer = 4 * mm(1, dm, dm) + mm(1, dm, df) + mm(1, df, dm) + 4 * dm * (pos as u64 + 1);
+        b as u64 * (spec.layers as u64 * per_layer + 2 * spec.vocab as u64 * dm)
+    }
+
+    /// Nominal FLOPs of one prefill call over `b` prompts of length `s`.
+    fn prefill_flops(spec: &SyntheticSpec, b: usize, s: usize) -> u64 {
+        let (dm, df, s64) = (spec.d_model as u64, spec.d_ff as u64, s as u64);
+        let mm = |m: u64, k: u64, n: u64| 2 * m * k * n;
+        let attn = 2 * dm * s64 * (s64 + 1); // sum over causal score+mix rows
+        let per_layer = 4 * mm(s64, dm, dm) + mm(s64, dm, df) + mm(s64, df, dm) + attn;
+        b as u64 * (spec.layers as u64 * per_layer + 2 * spec.vocab as u64 * dm)
+    }
+
+    fn push_row(
+        suite: &mut BenchSuite,
+        scenario: String,
+        precision: &str,
+        phase: &str,
+        batch: usize,
+        flops: u64,
+        allocs_per_step: Option<f64>,
+        tokens_per_s: Option<f64>,
+        r: &edgellm::util::bench::BenchResult,
+    ) {
+        suite.push(Json::obj(vec![
+            ("scenario", Json::Str(scenario)),
+            ("precision", Json::Str(precision.to_string())),
+            ("phase", Json::Str(phase.to_string())),
+            ("batch", Json::Num(batch as f64)),
+            ("prompt_len", Json::Num(PROMPT_LEN as f64)),
+            ("flops_per_call", Json::Num(flops as f64)),
+            (
+                "allocs_per_step",
+                allocs_per_step.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "tokens_per_s",
+                tokens_per_s.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("wall_mean_s", Json::Num(r.mean)),
+            ("wall_median_s", Json::Num(r.median)),
+            ("wall_p95_s", Json::Num(r.p95)),
+            ("iters", Json::Num(r.iters as f64)),
+        ]));
+    }
+
+    fn engine_scenarios(bench: &Bencher, suite: &mut BenchSuite) {
+        let spec = SyntheticSpec::bench();
+        for precision in [Precision::W16A16, Precision::W8A16, Precision::W8A8] {
+            let tag = precision_tag(precision);
+            let engine = Engine::synthetic(&spec, precision);
+            for b in BATCHES {
+                let ps = prompts(b, spec.vocab);
+
+                // --- prefill ---
+                let name = format!("engine/{tag}/prefill/b{b}");
+                let r = bench.run(&name, || {
+                    let (l, c) = engine.prefill(black_box(&ps)).unwrap();
+                    black_box((l.len(), c.active));
+                });
+                println!("{}", r.report());
+                push_row(
+                    suite,
+                    name,
+                    tag,
+                    "prefill",
+                    b,
+                    prefill_flops(&spec, b, PROMPT_LEN),
+                    None,
+                    Some(b as f64 * PROMPT_LEN as f64 / r.median),
+                    &r,
+                );
+
+                // --- batched decode (allocation-free steady state) ---
+                let (logits, mut cache) = engine.prefill(&ps).unwrap();
+                let tokens: Vec<i32> = logits.iter().map(|l| argmax(l)).collect();
+                let mut flat = Vec::new();
+                engine.decode_into(&tokens, &mut cache, &mut flat).unwrap(); // warm
+                let scratch0 = engine.scratch_allocs();
+                let grown0 = cache.grow_events();
+                let mut steps = 0u64;
+                let name = format!("engine/{tag}/decode/b{b}");
+                let r = bench.run(&name, || {
+                    // Pin every timed step at the nominal position the
+                    // flops_per_call column describes (a mid-loop re-prefill
+                    // would cost ~50 decode steps and skew the sample;
+                    // resetting pos is b integer writes).
+                    for p in cache.pos.iter_mut() {
+                        *p = PROMPT_LEN as i32;
+                    }
+                    let n = engine
+                        .decode_into(black_box(&tokens), &mut cache, &mut flat)
+                        .unwrap();
+                    steps += 1;
+                    black_box(n);
+                });
+                println!("{}", r.report());
+                let tracked = (engine.scratch_allocs() - scratch0) + (cache.grow_events() - grown0);
+                let allocs_per_step = tracked as f64 / steps.max(1) as f64;
+                push_row(
+                    suite,
+                    name,
+                    tag,
+                    "decode",
+                    b,
+                    decode_step_flops(&spec, b, PROMPT_LEN),
+                    Some(allocs_per_step),
+                    Some(b as f64 / r.median),
+                    &r,
+                );
+
+                // --- per-sequence reference decode (the pre-batching shape) ---
+                let (logits, mut cache) = engine.prefill(&ps).unwrap();
+                let tokens: Vec<i32> = logits.iter().map(|l| argmax(l)).collect();
+                let name = format!("engine/{tag}/decode_ref/b{b}");
+                let r = bench.run(&name, || {
+                    // Same position pinning as the batched scenario above.
+                    for p in cache.pos.iter_mut() {
+                        *p = PROMPT_LEN as i32;
+                    }
+                    let l = engine
+                        .decode_reference(black_box(&tokens), &mut cache)
+                        .unwrap();
+                    black_box(l.len());
+                });
+                println!("{}", r.report());
+                push_row(
+                    suite,
+                    name,
+                    tag,
+                    "decode_ref",
+                    b,
+                    decode_step_flops(&spec, b, PROMPT_LEN),
+                    None,
+                    Some(b as f64 / r.median),
+                    &r,
+                );
+            }
+        }
+    }
+
+    pub fn run() {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = std::env::var("QUICK").is_ok() || args.iter().any(|a| a == "--quick");
+        let json = std::env::var("JSON").is_ok() || args.iter().any(|a| a == "--json");
+        let bench = if quick { Bencher::quick() } else { Bencher::default() };
+
+        println!("== host engine request path ==");
+        let mut suite = BenchSuite::new();
+        engine_scenarios(&bench, &mut suite);
+
+        if json {
+            // CARGO_MANIFEST_DIR = rust/; the tracked baseline lives at the
+            // repository root next to BENCH_dftsp.json.
+            let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine.json");
+            let provenance =
+                "cargo bench --bench perf_engine -- --json (QUICK=1 / --quick for the smoke profile)";
+            suite
+                .write(&path, provenance)
+                .expect("write BENCH_engine.json");
+            println!("wrote {} scenario rows to {}", suite.len(), path.display());
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    host_bench::run();
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    eprintln!("perf_engine benches the host engine's kernels; rebuild without --features pjrt");
+}

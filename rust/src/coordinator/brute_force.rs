@@ -36,7 +36,6 @@ impl BruteForce {
         BruteForce { node_budget }
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn dfs(
         &self,
         inst: &ProblemInstance,

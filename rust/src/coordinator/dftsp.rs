@@ -443,7 +443,6 @@ impl Dftsp {
     /// Ascending-d scan with chained reuse floors: pool d > z only searches
     /// selections that include its newest request (everything else failed at
     /// d − 1).
-    #[allow(clippy::too_many_arguments)]
     fn d_loop_sequential<'r>(
         &self,
         inst: &ProblemInstance,
@@ -495,7 +494,6 @@ impl Dftsp {
     /// ascending d order, so parallel runs are deterministic too (their
     /// effort counters legitimately exceed the sequential ones: a wave may
     /// search pools past the winner).
-    #[allow(clippy::too_many_arguments)]
     fn d_loop_parallel<'r>(
         &self,
         inst: &ProblemInstance,

@@ -1,6 +1,15 @@
 //! Artifact manifest (`meta.json`) and weight container (`weights_*.bin`)
 //! loaders — the contract between `python/compile/aot.py` (build time) and
 //! the Rust request path (run time).
+//!
+//! Container tensor dtypes:
+//!
+//! - `0` — dense f32: payload is `product(dims) * 4` little-endian f32 bytes.
+//! - `1` — int8 + per-tensor scale: payload is one little-endian f32 scale
+//!   followed by `product(dims)` i8 codes (RTN per-tensor symmetric
+//!   quantization; dequantized value = `code * scale`). Emitted by
+//!   `python/compile/aot.py` for the real-int8 weight variants and consumed
+//!   directly by the host engine's W8A16/W8A8 kernels.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -129,7 +138,7 @@ impl Meta {
     }
 }
 
-/// One tensor from the ELLM weight container.
+/// One dense f32 tensor from the ELLM weight container (dtype 0).
 #[derive(Debug, Clone)]
 pub struct Tensor {
     pub name: String,
@@ -137,60 +146,180 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
-/// Parse a `weights_*.bin` container (format documented in aot.py).
-pub fn load_weights(path: &Path) -> Result<Vec<Tensor>, String> {
-    let data = std::fs::read(path).map_err(|e| format!("read {path:?}: {e}"))?;
-    let mut off = 0usize;
-    let take = |off: &mut usize, n: usize| -> Result<&[u8], String> {
-        if *off + n > data.len() {
-            return Err(format!("truncated container at byte {off}"));
+/// One int8-quantized tensor (dtype 1): codes plus a per-tensor f32 scale.
+/// Dequantized value = `codes[i] as f32 * scale`.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub codes: Vec<i8>,
+    pub scale: f32,
+}
+
+/// A tensor as stored in the container: dense f32 or int8 + scale. The host
+/// engine keeps quantized tensors quantized (its W8A16/W8A8 kernels consume
+/// the codes directly); the PJRT path dequantizes at upload via
+/// [`LoadedTensor::to_dense`].
+#[derive(Debug, Clone)]
+pub enum LoadedTensor {
+    Dense(Tensor),
+    Quant(QuantizedTensor),
+}
+
+impl LoadedTensor {
+    pub fn name(&self) -> &str {
+        match self {
+            LoadedTensor::Dense(t) => &t.name,
+            LoadedTensor::Quant(t) => &t.name,
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            LoadedTensor::Dense(t) => &t.dims,
+            LoadedTensor::Quant(t) => &t.dims,
+        }
+    }
+
+    /// Element count implied by the dims.
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dequantize to a dense f32 tensor (`code * scale`); dense tensors
+    /// clone through unchanged.
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            LoadedTensor::Dense(t) => t.clone(),
+            LoadedTensor::Quant(t) => Tensor {
+                name: t.name.clone(),
+                dims: t.dims.clone(),
+                data: t.codes.iter().map(|&c| c as f32 * t.scale).collect(),
+            },
+        }
+    }
+}
+
+/// Parse a `weights_*.bin` container (format documented in aot.py and the
+/// module docs above). Errors carry the byte offset of the offending field
+/// so a truncated or corrupted file is diagnosable without a hex dump.
+pub fn load_weights(path: &Path) -> Result<Vec<LoadedTensor>, String> {
+    fn take<'a>(
+        data: &'a [u8],
+        off: &mut usize,
+        n: usize,
+        what: &str,
+    ) -> Result<&'a [u8], String> {
+        // `*off <= data.len()` is an invariant, so `data.len() - *off` cannot
+        // underflow; comparing against the *remainder* (instead of computing
+        // `*off + n`) keeps a crafted near-usize::MAX size field from
+        // overflowing into a panic.
+        if n > data.len() - *off {
+            return Err(format!(
+                "truncated container: {what} needs {n} bytes at byte offset {} but only {} remain",
+                *off,
+                data.len() - *off
+            ));
         }
         let s = &data[*off..*off + n];
         *off += n;
         Ok(s)
-    };
-    let magic = take(&mut off, 4)?;
+    }
+    let data = std::fs::read(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let mut off = 0usize;
+    let magic = take(&data, &mut off, 4, "magic")?;
     if magic != b"ELLM" {
         return Err("bad magic (not an ELLM container)".into());
     }
     let u32le = |b: &[u8]| u32::from_le_bytes(b.try_into().unwrap());
-    let version = u32le(take(&mut off, 4)?);
+    let version = u32le(take(&data, &mut off, 4, "container version")?);
     if version != 1 {
         return Err(format!("unsupported container version {version}"));
     }
-    let count = u32le(take(&mut off, 4)?) as usize;
+    let count = u32le(take(&data, &mut off, 4, "tensor count")?) as usize;
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let nlen = u32le(take(&mut off, 4)?) as usize;
-        let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
+    for idx in 0..count {
+        let nlen = u32le(take(&data, &mut off, 4, "tensor name length")?) as usize;
+        let name = String::from_utf8(take(&data, &mut off, nlen, "tensor name")?.to_vec())
             .map_err(|_| "non-utf8 tensor name".to_string())?;
-        let dtype = take(&mut off, 1)?[0];
-        if dtype != 0 {
-            return Err(format!("tensor {name}: unsupported dtype {dtype}"));
-        }
-        let ndim = u32le(take(&mut off, 4)?) as usize;
+        let dtype_off = off;
+        let dtype = take(&data, &mut off, 1, "tensor dtype")?[0];
+        let ndim = u32le(take(&data, &mut off, 4, "tensor rank")?) as usize;
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(u32le(take(&mut off, 4)?) as usize);
+            dims.push(u32le(take(&data, &mut off, 4, "tensor dim")?) as usize);
         }
+        let count_elems = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| format!("tensor `{name}`: element count overflows ({dims:?})"))?;
         let nbytes =
-            u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
-        let raw = take(&mut off, nbytes)?;
-        if nbytes != dims.iter().product::<usize>() * 4 {
-            return Err(format!("tensor {name}: byte count mismatch"));
+            u64::from_le_bytes(take(&data, &mut off, 8, "tensor payload size")?.try_into().unwrap())
+                as usize;
+        let payload_off = off;
+        let what = format!("tensor `{name}` (#{idx}) payload");
+        let raw = take(&data, &mut off, nbytes, &what)?;
+        // `nbytes` is bounded by the file size from here on, so the
+        // comparisons below cannot overflow on crafted headers.
+        match dtype {
+            0 => {
+                // Short-circuit keeps `count_elems * 4` from overflowing,
+                // and the message avoids the product entirely.
+                if count_elems > usize::MAX / 4 || nbytes != count_elems * 4 {
+                    return Err(format!(
+                        "tensor `{name}` at byte offset {payload_off}: dtype 0 (f32) expects \
+                         {count_elems} elements × 4 payload bytes, found {nbytes}"
+                    ));
+                }
+                let mut vals = Vec::with_capacity(count_elems);
+                for chunk in raw.chunks_exact(4) {
+                    vals.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+                }
+                out.push(LoadedTensor::Dense(Tensor {
+                    name,
+                    dims,
+                    data: vals,
+                }));
+            }
+            1 => {
+                if count_elems > usize::MAX - 4 || nbytes != 4 + count_elems {
+                    return Err(format!(
+                        "tensor `{name}` at byte offset {payload_off}: dtype 1 (i8 + scale) \
+                         expects a 4-byte f32 scale + {count_elems} code bytes, found {nbytes}"
+                    ));
+                }
+                let scale = f32::from_le_bytes(raw[..4].try_into().unwrap());
+                if !scale.is_finite() || scale <= 0.0 {
+                    return Err(format!(
+                        "tensor `{name}` at byte offset {payload_off}: dtype 1 scale must be \
+                         finite and positive, found {scale}"
+                    ));
+                }
+                let codes = raw[4..].iter().map(|&b| b as i8).collect();
+                out.push(LoadedTensor::Quant(QuantizedTensor {
+                    name,
+                    dims,
+                    codes,
+                    scale,
+                }));
+            }
+            other => {
+                return Err(format!(
+                    "tensor `{name}` at byte offset {dtype_off}: unsupported dtype {other} \
+                     (supported: 0 = f32, 1 = i8 codes + per-tensor f32 scale)"
+                ));
+            }
         }
-        let mut vals = Vec::with_capacity(nbytes / 4);
-        for chunk in raw.chunks_exact(4) {
-            vals.push(f32::from_le_bytes(chunk.try_into().unwrap()));
-        }
-        out.push(Tensor {
-            name,
-            dims,
-            data: vals,
-        });
     }
     if off != data.len() {
-        return Err("trailing bytes in container".into());
+        return Err(format!(
+            "trailing bytes in container: {} past byte offset {off}",
+            data.len() - off
+        ));
     }
     Ok(out)
 }
@@ -207,6 +336,34 @@ mod tests {
 
     fn repo_artifacts() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Assemble a syntactically valid container from (name, dtype, dims,
+    /// payload) entries.
+    fn container(tensors: &[(&str, u8, &[usize], Vec<u8>)]) -> Vec<u8> {
+        let mut b: Vec<u8> = b"ELLM".to_vec();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dtype, dims, payload) in tensors {
+            b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            b.extend_from_slice(name.as_bytes());
+            b.push(*dtype);
+            b.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for &d in *dims {
+                b.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            b.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            b.extend_from_slice(payload);
+        }
+        b
+    }
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> PathBuf {
+        let dir = std::env::temp_dir().join("edgellm_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
     }
 
     #[test]
@@ -245,22 +402,115 @@ mod tests {
         assert_eq!(tensors.len(), meta.param_order.len());
         // order matches the canonical param order
         for (t, name) in tensors.iter().zip(meta.param_order.iter()) {
-            assert_eq!(&t.name, name);
-            assert_eq!(t.data.len(), t.dims.iter().product::<usize>());
+            assert_eq!(t.name(), name);
+            assert_eq!(t.to_dense().data.len(), t.len());
         }
         // embed shape
-        assert_eq!(tensors[0].dims, vec![meta.vocab, meta.d_model]);
+        assert_eq!(tensors[0].dims(), &[meta.vocab, meta.d_model]);
     }
 
     #[test]
     fn bad_container_rejected() {
-        let dir = std::env::temp_dir().join("edgellm_artifact_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("bad.bin");
-        std::fs::write(&p, b"NOPE").unwrap();
+        let p = write_tmp("bad.bin", b"NOPE");
         assert!(load_weights(&p).is_err());
-        std::fs::write(&p, b"ELLM\x01\x00\x00\x00").unwrap();
+        let p = write_tmp("bad2.bin", b"ELLM\x01\x00\x00\x00");
         assert!(load_weights(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dtype_error_reports_offset_and_expected_dtypes() {
+        let bytes = container(&[("w", 7, &[2, 2], vec![0u8; 16])]);
+        let p = write_tmp("dtype7.bin", &bytes);
+        let err = load_weights(&p).unwrap_err();
+        assert!(err.contains("tensor `w`"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        assert!(err.contains("unsupported dtype 7"), "{err}");
+        assert!(err.contains("0 = f32") && err.contains("1 = i8"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_reports_offset_and_tensor() {
+        // Header declares 16 payload bytes but the file stops after 5.
+        let mut bytes = container(&[("emb", 0, &[2, 2], vec![0u8; 16])]);
+        bytes.truncate(bytes.len() - 11);
+        let p = write_tmp("trunc.bin", &bytes);
+        let err = load_weights(&p).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("tensor `emb`"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+    }
+
+    #[test]
+    fn huge_declared_sizes_error_instead_of_panicking() {
+        // Payload-size field of u64::MAX: must surface as a truncation
+        // error, not an arithmetic-overflow or slice panic.
+        let mut bytes: Vec<u8> = b"ELLM".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name len 1
+        bytes.push(b'w');
+        bytes.push(0); // dtype 0
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // dims that overflow
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd payload size
+        let p = write_tmp("huge.bin", &bytes);
+        let err = load_weights(&p).unwrap_err();
+        assert!(
+            err.contains("truncated") || err.contains("overflow"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn garbage_after_magic_rejected_not_panicking() {
+        let mut bytes = b"ELLM".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // claims 3 tensors
+        bytes.extend_from_slice(&[0xAB; 7]); // then junk
+        let p = write_tmp("garbage.bin", &bytes);
+        assert!(load_weights(&p).is_err());
+    }
+
+    #[test]
+    fn payload_size_mismatch_names_expectation() {
+        // dtype 0 with 2x2 dims needs 16 bytes; declare (and supply) 12.
+        let bytes = container(&[("w", 0, &[2, 2], vec![0u8; 12])]);
+        let p = write_tmp("short_payload.bin", &bytes);
+        let err = load_weights(&p).unwrap_err();
+        assert!(err.contains("expects 4 elements × 4 payload bytes"), "{err}");
+        assert!(err.contains("found 12"), "{err}");
+    }
+
+    #[test]
+    fn int8_tensor_round_trips_and_dequantizes() {
+        let scale = 0.5f32;
+        let codes: [i8; 4] = [-3, 0, 5, 127];
+        let mut payload = scale.to_le_bytes().to_vec();
+        payload.extend(codes.iter().map(|&c| c as u8));
+        let bytes = container(&[("wq", 1, &[2, 2], payload)]);
+        let p = write_tmp("int8.bin", &bytes);
+        let tensors = load_weights(&p).unwrap();
+        assert_eq!(tensors.len(), 1);
+        let LoadedTensor::Quant(q) = &tensors[0] else {
+            panic!("dtype 1 must load as a quantized tensor");
+        };
+        assert_eq!(q.name, "wq");
+        assert_eq!(q.dims, vec![2, 2]);
+        assert_eq!(q.scale, scale);
+        assert_eq!(q.codes, codes);
+        let dense = tensors[0].to_dense();
+        assert_eq!(dense.data, vec![-1.5, 0.0, 2.5, 63.5]);
+    }
+
+    #[test]
+    fn int8_scale_must_be_finite_positive() {
+        let mut payload = f32::NAN.to_le_bytes().to_vec();
+        payload.extend([0u8; 4]);
+        let bytes = container(&[("wq", 1, &[2, 2], payload)]);
+        let p = write_tmp("nan_scale.bin", &bytes);
+        let err = load_weights(&p).unwrap_err();
+        assert!(err.contains("scale"), "{err}");
     }
 }

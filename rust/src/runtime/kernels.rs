@@ -1,0 +1,353 @@
+//! The host engine's compute kernels: dense f32, W8A16 (int8 weights,
+//! dequantized on the fly against f32 activations), and W8A8 (int8 weights ×
+//! per-row int8-quantized activations with i32 accumulation).
+//!
+//! Every kernel writes into a caller-provided output slice — the decode hot
+//! path in [`crate::runtime::host`] runs them against reusable scratch
+//! buffers and performs no heap allocation in steady state. Allocating
+//! wrappers ([`matmul_param`], [`causal_attention`]) serve the prefill path,
+//! where per-request setup cost dominates anyway.
+//!
+//! ## Reduction order and exactness
+//!
+//! All f32 paths accumulate k-ascending with elementwise `out += x * w`,
+//! independently per output row. A row's result therefore does not depend on
+//! how many other rows share the GEMM call — which is what makes the batched
+//! decode bit-identical to the retained per-sequence reference path
+//! (property-tested in `tests/proptest_engine.rs`). The W8A16 kernel
+//! computes `x * (code as f32 * scale)` in exactly the order a dense matmul
+//! over pre-dequantized weights would, so it matches that oracle bit-for-bit
+//! too. W8A8 quantizes each activation row symmetrically to int8 and
+//! accumulates exactly in i32; its only error versus the dequantize-then-f32
+//! oracle is the activation rounding — at most one quantization step
+//! (`a_scale / 2 · |code| · w_scale`) per accumulated product.
+
+use crate::runtime::artifact::LoadedTensor;
+
+/// Row-major `[m, k] @ [k, n]` into `out` (len `m*n`), k-ascending
+/// accumulation (the same reduction order as a per-element dot product).
+pub fn matmul_f32_into(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// W8A16: f32 activations × int8 weights with one per-tensor scale,
+/// dequantized on the fly. Identical op order to [`matmul_f32_into`] over
+/// `code as f32 * scale`, so it matches the dequantize-then-f32 oracle
+/// bit-for-bit.
+pub fn matmul_w8a16_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    codes: &[i8],
+    scale: f32,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(codes.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &codes[kk * n..(kk + 1) * n];
+            for (o, &c) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * (c as f32 * scale);
+            }
+        }
+    }
+}
+
+/// Per-row symmetric int8 activation quantization: `scale = max|x| / 127`
+/// (1.0 on an all-zero row), codes rounded ties-to-even (matching
+/// `np.round` in the Python emitter/mirror exactly) and clamped to
+/// `[-127, 127]`. Returns the scale. The per-*tensor* weight counterpart is
+/// [`quantize_per_tensor_i8`].
+pub fn quantize_row_i8(row: &[f32], out: &mut [i8]) -> f32 {
+    let max = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+    for (o, &v) in out.iter_mut().zip(row.iter()) {
+        *o = (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// W8A8: per-row int8-quantized activations × int8 weights, exact i32
+/// accumulation, one `a_scale * w_scale` dequantization per output element.
+/// `qrow` is the activation-code scratch (len ≥ `k`).
+pub fn matmul_w8a8_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    codes: &[i8],
+    w_scale: f32,
+    n: usize,
+    qrow: &mut [i8],
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(codes.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    debug_assert!(qrow.len() >= k);
+    for i in 0..m {
+        let a_scale = quantize_row_i8(&x[i * k..(i + 1) * k], &mut qrow[..k]);
+        let dq = a_scale * w_scale;
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc: i32 = 0;
+            for (kk, &q) in qrow[..k].iter().enumerate() {
+                acc += q as i32 * codes[kk * n + j] as i32;
+            }
+            *o = acc as f32 * dq;
+        }
+    }
+}
+
+/// Kernel dispatch by weight storage and activation precision: dense
+/// tensors always run the f32 path; int8 tensors run W8A8 when the
+/// deployment's activation width is ≤ 8 bits, W8A16 otherwise.
+pub fn matmul_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &LoadedTensor,
+    n: usize,
+    a_bits: u8,
+    qrow: &mut [i8],
+    out: &mut [f32],
+) {
+    match w {
+        LoadedTensor::Dense(t) => matmul_f32_into(x, m, k, &t.data, n, out),
+        LoadedTensor::Quant(t) if a_bits <= 8 => {
+            matmul_w8a8_into(x, m, k, &t.codes, t.scale, n, qrow, out)
+        }
+        LoadedTensor::Quant(t) => matmul_w8a16_into(x, m, k, &t.codes, t.scale, n, out),
+    }
+}
+
+/// Allocating convenience wrapper around [`matmul_into`] — the prefill path
+/// and the retained per-sequence reference decode use this.
+pub fn matmul_param(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &LoadedTensor,
+    n: usize,
+    a_bits: u8,
+) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    let mut qrow = vec![0i8; k];
+    matmul_into(x, m, k, w, n, a_bits, &mut qrow, &mut out);
+    out
+}
+
+/// Per-tensor symmetric int8 quantization (RTN): `scale = max|w| / 127`,
+/// codes rounded ties-to-even and clamped to `[-127, 127]` — the exact
+/// counterpart of `python/compile/quantize.quantize_int8_per_tensor`
+/// (`np.round` is also ties-to-even) and the payload of container dtype = 1.
+pub fn quantize_per_tensor_i8(data: &[f32]) -> (Vec<i8>, f32) {
+    // One rounding/clamping rule for weights and activations: delegate to
+    // the per-row kernel over the whole tensor.
+    let mut codes = vec![0i8; data.len()];
+    let scale = quantize_row_i8(data, &mut codes);
+    (codes, scale)
+}
+
+/// Dot product with k-ascending accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+/// Elementwise `a += b` (residual connections).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x += y;
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Masked causal attention over a whole prompt (Initial Stage), matching
+/// `attention_prefill_ref` in python/compile/kernels/ref.py. Allocating —
+/// prefill-only; the decode path attends incrementally against the KV arena
+/// with scratch buffers (see `host::Engine::decode`).
+pub fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    nh: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let dm = nh * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; s * dm];
+    for h in 0..nh {
+        let off = h * dh;
+        for i in 0..s {
+            let qi = &q[i * dm + off..i * dm + off + dh];
+            let mut scores = Vec::with_capacity(i + 1);
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let sc = dot(qi, &k[j * dm + off..j * dm + off + dh]) * scale;
+                if sc > m {
+                    m = sc;
+                }
+                scores.push(sc);
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - m).exp();
+                denom += *sc;
+            }
+            let orow = &mut out[i * dm + off..i * dm + off + dh];
+            for (j, &w) in scores.iter().enumerate() {
+                let vr = &v[j * dm + off..j * dm + off + dh];
+                let w = w / denom;
+                for (o, &vv) in orow.iter_mut().zip(vr.iter()) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{QuantizedTensor, Tensor};
+
+    fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        matmul_f32_into(x, m, k, w, n, &mut out);
+        out
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        // [2,3] @ [3,2]
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let out = matmul(&x, 2, 3, &w, 2);
+        assert_eq!(out, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // With q = 0, attention weights are uniform over visible slots, so
+        // row i equals the mean of v[0..=i] per head.
+        let (s, nh, dh) = (3usize, 1usize, 4usize);
+        let dm = nh * dh;
+        let q = vec![0f32; s * dm];
+        let k: Vec<f32> = (0..s * dm).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..s * dm).map(|i| (i % 7) as f32).collect();
+        let out = causal_attention(&q, &k, &v, s, nh, dh);
+        for d in 0..dm {
+            let mean01 = (v[d] + v[dm + d]) / 2.0;
+            assert!((out[dm + d] - mean01).abs() < 1e-5);
+            assert!((out[d] - v[d]).abs() < 1e-6, "first row attends to itself only");
+        }
+    }
+
+    #[test]
+    fn w8a16_matches_dequantized_f32_bitexact() {
+        let (m, k, n) = (3usize, 5usize, 4usize);
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| ((i * 11 % 7) as f32 - 3.0) * 0.5).collect();
+        let (codes, scale) = quantize_per_tensor_i8(&w);
+        let dense: Vec<f32> = codes.iter().map(|&c| c as f32 * scale).collect();
+        let want = matmul(&x, m, k, &dense, n);
+        let mut got = vec![0f32; m * n];
+        matmul_w8a16_into(&x, m, k, &codes, scale, n, &mut got);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "W8A16 must match the oracle bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn w8a8_within_one_quant_step_per_accumulation() {
+        let (m, k, n) = (2usize, 8usize, 3usize);
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 29 % 23) as f32 - 11.0) * 0.07).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| ((i * 13 % 9) as f32 - 4.0) * 0.3).collect();
+        let (codes, w_scale) = quantize_per_tensor_i8(&w);
+        let dense: Vec<f32> = codes.iter().map(|&c| c as f32 * w_scale).collect();
+        let oracle = matmul(&x, m, k, &dense, n);
+        let mut got = vec![0f32; m * n];
+        let mut qrow = vec![0i8; k];
+        matmul_w8a8_into(&x, m, k, &codes, w_scale, n, &mut qrow, &mut got);
+        for i in 0..m {
+            let mut q = vec![0i8; k];
+            let a_scale = quantize_row_i8(&x[i * k..(i + 1) * k], &mut q);
+            // One quantization step (a_scale/2) times the max |weight| per
+            // accumulated product, plus f32 rounding slop.
+            let tol = k as f32 * (a_scale / 2.0) * 127.0 * w_scale + 1e-5;
+            for j in 0..n {
+                let d = (got[i * n + j] - oracle[i * n + j]).abs();
+                assert!(d <= tol, "({i},{j}): |{d}| > {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_selects_kernel_by_storage_and_a_bits() {
+        let (m, k, n) = (2usize, 4usize, 3usize);
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32 - 5.0) * 0.2).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.1).collect();
+        let dense = LoadedTensor::Dense(Tensor {
+            name: "w".into(),
+            dims: vec![k, n],
+            data: w.clone(),
+        });
+        let (codes, scale) = quantize_per_tensor_i8(&w);
+        let quant = LoadedTensor::Quant(QuantizedTensor {
+            name: "w".into(),
+            dims: vec![k, n],
+            codes: codes.clone(),
+            scale,
+        });
+        let mut qrow = vec![0i8; k];
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        let mut c = vec![0f32; m * n];
+        matmul_into(&x, m, k, &dense, n, 16, &mut qrow, &mut a);
+        matmul_into(&x, m, k, &quant, n, 16, &mut qrow, &mut b);
+        matmul_into(&x, m, k, &quant, n, 8, &mut qrow, &mut c);
+        assert_eq!(a, matmul(&x, m, k, &w, n), "dense = f32 path");
+        let deq: Vec<f32> = codes.iter().map(|&cc| cc as f32 * scale).collect();
+        assert_eq!(b, matmul(&x, m, k, &deq, n), "a_bits=16 on int8 = W8A16");
+        assert_ne!(b, c, "a_bits=8 takes the integer-accumulation path");
+    }
+
+    #[test]
+    fn zero_row_quantizes_without_dividing_by_zero() {
+        let mut out = vec![9i8; 4];
+        let scale = quantize_row_i8(&[0.0; 4], &mut out);
+        assert_eq!(scale, 1.0);
+        assert_eq!(out, vec![0; 4]);
+        let (codes, wscale) = quantize_per_tensor_i8(&[0.0; 6]);
+        assert_eq!(wscale, 1.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+}

@@ -15,12 +15,15 @@ pub mod artifact;
 pub mod engine;
 #[cfg(not(feature = "pjrt"))]
 pub mod host;
+pub mod kernels;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use artifact::{artifacts_available, load_weights, Meta};
+pub use artifact::{
+    artifacts_available, load_weights, LoadedTensor, Meta, QuantizedTensor, Tensor,
+};
 pub use engine::{argmax, EngineError};
 #[cfg(not(feature = "pjrt"))]
-pub use host::{Engine, KvCache};
+pub use host::{Engine, KvCache, SyntheticSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Engine, KvCache};

@@ -13,7 +13,7 @@
 //! dependency has been added to Cargo.toml (see README.md §Runtime
 //! backends). The default build uses the pure-Rust `host` engine instead.
 
-use crate::runtime::artifact::{load_weights, Meta};
+use crate::runtime::artifact::{load_weights, LoadedTensor, Meta};
 use crate::runtime::engine::{argmax, EngineError};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -96,9 +96,20 @@ impl Engine {
                 meta.param_order.len()
             )));
         }
+        // The device path uploads f32 buffers: int8 (dtype-1) tensors are
+        // dequantized at load — quantized *compute* is the host engine's
+        // job. Dense tensors upload in place (no clone of the whole model).
         let param_bufs: Vec<PjRtBuffer> = tensors
             .iter()
-            .map(|t| Ok(client.buffer_from_host_buffer(&t.data, &t.dims, None)?))
+            .map(|t| match t {
+                LoadedTensor::Dense(d) => {
+                    Ok(client.buffer_from_host_buffer(&d.data, &d.dims, None)?)
+                }
+                LoadedTensor::Quant(_) => {
+                    let dense = t.to_dense();
+                    Ok(client.buffer_from_host_buffer(&dense.data, &dense.dims, None)?)
+                }
+            })
             .collect::<Result<_>>()?;
 
         let mut prefill_exe = BTreeMap::new();
@@ -253,6 +264,27 @@ impl Engine {
             *p += 1;
         }
         self.logits_rows(&logits_buf, b, cache.active)
+    }
+
+    /// One decode step writing flat `[active × vocab]` logits into a
+    /// caller-reused buffer — API parity with the host engine's
+    /// allocation-free path (the device round-trip still materializes rows
+    /// internally). Returns the number of rows written.
+    pub fn decode_into(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        out: &mut Vec<f32>,
+    ) -> Result<usize> {
+        let rows = self.decode(tokens, cache)?;
+        let vocab = self.meta.vocab;
+        if out.len() < rows.len() * vocab {
+            out.resize(rows.len() * vocab, 0.0);
+        }
+        for (i, row) in rows.iter().enumerate() {
+            out[i * vocab..(i + 1) * vocab].copy_from_slice(row);
+        }
+        Ok(rows.len())
     }
 
     /// Greedy generation: prefill + `steps` decode iterations, stopping a

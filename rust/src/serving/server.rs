@@ -189,6 +189,10 @@ struct EngineBackend {
     next_id: u64,
     /// Anchor of the current run's clock (driver seconds = elapsed since).
     run_start: Option<Instant>,
+    /// Reused flat `[active × vocab]` logits buffer for the continuous
+    /// decode loop (`Engine::decode_into`) — sized on the first step, no
+    /// per-step allocation after that.
+    logits: Vec<f32>,
 }
 
 impl EngineBackend {
@@ -203,6 +207,7 @@ impl EngineBackend {
             waiting: Vec::new(),
             next_id: 0,
             run_start: None,
+            logits: Vec::new(),
         }
     }
 
@@ -572,9 +577,11 @@ impl EngineBackend {
         }
         let tokens: Vec<i32> = self.flights.iter().map(|f| f.next).collect();
         let cache = self.cache.as_mut().expect("in-flight sequences imply a cache");
-        match self.engine.decode(&tokens, cache) {
-            Ok(logits) => {
-                for (f, row) in self.flights.iter_mut().zip(logits.iter()) {
+        match self.engine.decode_into(&tokens, cache, &mut self.logits) {
+            Ok(n) => {
+                let vocab = self.engine.meta.vocab;
+                let rows = self.logits.chunks(vocab).take(n);
+                for (f, row) in self.flights.iter_mut().zip(rows) {
                     f.next = argmax(row);
                 }
             }

@@ -1,0 +1,211 @@
+#![cfg(not(feature = "pjrt"))]
+//! Property tests of the host engine's batched decode and quantized kernels.
+//!
+//! 1. Batched decode ≡ the retained per-sequence reference path, *bit-
+//!    exactly*, on arbitrary active-slot patterns — including holes left by
+//!    `release` and mid-flight `prefill_into` admissions — across all three
+//!    kernel precisions (f32, W8A16, W8A8).
+//! 2. The W8A16 kernel matches a dequantize-then-f32-matmul oracle
+//!    bit-for-bit; the W8A8 kernel matches it within one quantization step
+//!    per accumulated product.
+//! 3. The steady-state decode loop never grows its tracked buffers
+//!    (scratch or KV arena) — the allocation-free property.
+//!
+//! Seeded-case harness (no proptest crate offline): `PROPTEST_CASES`
+//! controls the case count (CI pins it to 64 for deterministic, bounded
+//! runtime); failures report the offending seed for replay.
+
+use edgellm::quant::Precision;
+use edgellm::runtime::kernels::{
+    matmul_f32_into, matmul_w8a16_into, matmul_w8a8_into, quantize_per_tensor_i8, quantize_row_i8,
+};
+use edgellm::runtime::{argmax, Engine, KvCache, SyntheticSpec};
+use edgellm::util::rng::Rng;
+
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn precisions() -> [Precision; 3] {
+    [Precision::W16A16, Precision::W8A16, Precision::W8A8]
+}
+
+fn random_prompt(rng: &mut Rng, max_prompt: usize, vocab: usize) -> Vec<i32> {
+    let len = rng.int_range(1, max_prompt as u64) as usize;
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+fn assert_rows_bitexact(a: &[Vec<f32>], b: &[Vec<f32>], what: &str, seed: u64) {
+    assert_eq!(a.len(), b.len(), "seed {seed}: {what}: row count");
+    for (i, (ra, rb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "seed {seed}: {what}: row {i} len");
+        for (j, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "seed {seed}: {what}: row {i} col {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: on a randomized schedule of decode steps, releases (leaving
+/// holes the swap-remove fills) and mid-flight admissions, the batched
+/// decode produces bit-identical logits to the per-sequence reference path,
+/// for every kernel precision.
+#[test]
+fn prop_batched_decode_equals_reference_on_arbitrary_slot_patterns() {
+    for seed in 0..cases(48) {
+        let mut rng = Rng::new(0xE17_0001 + seed);
+        let precision = precisions()[rng.below(3) as usize];
+        let mut spec = SyntheticSpec::tiny();
+        spec.seed = 0xBADA55 + seed; // new weights per case
+        let engine = Engine::synthetic(&spec, precision);
+        let max_batch = engine.max_batch();
+
+        let n0 = rng.int_range(1, max_batch as u64) as usize;
+        let prompts: Vec<Vec<i32>> = (0..n0)
+            .map(|_| random_prompt(&mut rng, spec.max_prompt, spec.vocab))
+            .collect();
+        let (logits, mut cache_b) = engine.prefill(&prompts).unwrap();
+        let mut cache_r = cache_b.clone();
+        let mut tokens: Vec<i32> = logits.iter().map(|r| argmax(r)).collect();
+
+        for _step in 0..rng.int_range(3, 10) {
+            match rng.below(10) {
+                // Release a random slot (keep at least one sequence).
+                0 | 1 if cache_b.active > 1 => {
+                    let victim = rng.below(cache_b.active as u64) as usize;
+                    cache_b.release(victim);
+                    cache_r.release(victim);
+                    tokens.swap_remove(victim);
+                }
+                // Mid-flight admission when a batch variant still fits.
+                2 | 3 if cache_b.active < max_batch => {
+                    let p = random_prompt(&mut rng, spec.max_prompt, spec.vocab);
+                    let lb = engine.prefill_into(&p, &mut cache_b).unwrap();
+                    let lr = engine.prefill_into(&p, &mut cache_r).unwrap();
+                    assert_rows_bitexact(
+                        std::slice::from_ref(&lb),
+                        std::slice::from_ref(&lr),
+                        "prefill_into",
+                        seed,
+                    );
+                    tokens.push(argmax(&lb));
+                }
+                // Decode one step on both paths and compare bit-for-bit.
+                _ => {
+                    if cache_b.pos.iter().any(|&p| p as usize >= spec.max_seq) {
+                        break; // a sequence filled its KV budget
+                    }
+                    let lb = engine.decode(&tokens, &mut cache_b).unwrap();
+                    let lr = engine.decode_reference(&tokens, &mut cache_r).unwrap();
+                    assert_rows_bitexact(&lb, &lr, "decode", seed);
+                    assert_eq!(cache_b.pos, cache_r.pos, "seed {seed}: positions");
+                    tokens = lb.iter().map(|r| argmax(r)).collect();
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: W8A16 ≡ dequantize-then-f32 oracle bit-for-bit; W8A8 within one
+/// quantization step per accumulated product.
+#[test]
+fn prop_quant_kernels_match_dequantize_oracle() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(0xE17_0002 + seed);
+        let m = rng.int_range(1, 6) as usize;
+        let k = rng.int_range(1, 24) as usize;
+        let n = rng.int_range(1, 24) as usize;
+        let amp = rng.uniform(0.01, 4.0);
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| (rng.uniform(-amp, amp)) as f32)
+            .collect();
+        let x: Vec<f32> = (0..m * k)
+            .map(|_| (rng.uniform(-2.0, 2.0)) as f32)
+            .collect();
+        let (codes, w_scale) = quantize_per_tensor_i8(&w);
+        let dense: Vec<f32> = codes.iter().map(|&c| c as f32 * w_scale).collect();
+        let mut oracle = vec![0f32; m * n];
+        matmul_f32_into(&x, m, k, &dense, n, &mut oracle);
+
+        let mut got16 = vec![0f32; m * n];
+        matmul_w8a16_into(&x, m, k, &codes, w_scale, n, &mut got16);
+        for (i, (a, b)) in oracle.iter().zip(got16.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "seed {seed}: W8A16 elem {i}: {a} vs {b}"
+            );
+        }
+
+        let mut got8 = vec![0f32; m * n];
+        let mut qrow = vec![0i8; k];
+        matmul_w8a8_into(&x, m, k, &codes, w_scale, n, &mut qrow, &mut got8);
+        for i in 0..m {
+            let mut q = vec![0i8; k];
+            let a_scale = quantize_row_i8(&x[i * k..(i + 1) * k], &mut q);
+            // Each of the k products can be off by at most half an
+            // activation step times the (dequantized) weight magnitude.
+            let tol = k as f32 * (a_scale / 2.0) * 127.0 * w_scale + 1e-4;
+            for j in 0..n {
+                let d = (got8[i * n + j] - oracle[i * n + j]).abs();
+                assert!(
+                    d <= tol,
+                    "seed {seed}: W8A8 ({i},{j}): |{d}| > {tol} (a_scale {a_scale})"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: after the first step, a decode loop at constant batch size
+/// never grows the tracked scratch/arena buffers, whatever the precision.
+#[test]
+fn prop_steady_state_decode_is_allocation_free() {
+    for seed in 0..cases(24) {
+        let mut rng = Rng::new(0xE17_0003 + seed);
+        let precision = precisions()[rng.below(3) as usize];
+        let spec = SyntheticSpec::tiny();
+        let engine = Engine::synthetic(&spec, precision);
+        let n = rng.int_range(1, engine.max_batch() as u64) as usize;
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|_| random_prompt(&mut rng, 4, spec.vocab)) // short: room to decode
+            .collect();
+        let (logits, mut cache) = engine.prefill(&prompts).unwrap();
+        let mut tokens: Vec<i32> = logits.iter().map(|r| argmax(r)).collect();
+        let mut flat = Vec::new();
+        engine.decode_into(&tokens, &mut cache, &mut flat).unwrap();
+        let scratch0 = engine.scratch_allocs();
+        let cap0 = flat.capacity();
+        for _ in 0..6 {
+            let got = engine.decode_into(&tokens, &mut cache, &mut flat).unwrap();
+            tokens = (0..got)
+                .map(|i| argmax(&flat[i * spec.vocab..(i + 1) * spec.vocab]))
+                .collect();
+        }
+        assert_eq!(
+            engine.scratch_allocs(),
+            scratch0,
+            "seed {seed}: scratch grew mid-loop ({precision:?})"
+        );
+        assert_eq!(cache.grow_events(), 0, "seed {seed}: arena grew");
+        assert_eq!(flat.capacity(), cap0, "seed {seed}: logits buffer grew");
+    }
+}
+
+/// A prefill-sized cache admits up to its batch variant without growing the
+/// arena; only admissions past the sized capacity grow it.
+#[test]
+fn arena_growth_only_past_sized_capacity() {
+    let engine = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16);
+    // prefill of 3 selects the b=4 variant: one admission is headroom.
+    let (_, mut cache): (_, KvCache) = engine.prefill(&[vec![1], vec![2], vec![3]]).unwrap();
+    engine.prefill_into(&[4], &mut cache).unwrap();
+    assert_eq!(cache.grow_events(), 0, "within the sized variant: no growth");
+    assert_eq!(cache.active, 4);
+}

@@ -1,22 +1,34 @@
 #!/usr/bin/env python3
-"""Gate a freshly generated bench baseline against the committed one.
+"""Gate freshly generated bench baselines against the committed ones.
 
 Compares the *deterministic* counter columns of matching scenario rows
 (matched by their "scenario" field) and fails when any counter regressed by
 more than the tolerance. Wall-clock columns are never compared — CI machines
 are too noisy to gate on latency; the counters (search nodes visited,
-leaf-check work, subproblems, …) are bit-deterministic, so any growth is a
-real algorithmic regression, not jitter.
+leaf-check work, engine FLOPs per call, allocations per step, …) are
+bit-deterministic, so any growth is a real algorithmic regression, not
+jitter.
 
-Usage (what CI's bench-smoke job runs):
+Single-file usage (the original invocation, still supported):
 
     python3 python/bench_gate.py BASELINE.json FRESH.json \
         --keys nodes_visited,leaf_check_work,subproblems --tol 0.10
 
+Multi-file usage (what CI's bench-smoke job runs — one invocation gates
+every tracked baseline, each with its own key set):
+
+    python3 python/bench_gate.py --tol 0.10 \
+        --gate /tmp/BENCH_dftsp.baseline.json BENCH_dftsp.json \
+               nodes_visited,leaf_check_work,subproblems \
+        --gate /tmp/BENCH_engine.baseline.json BENCH_engine.json \
+               flops_per_call,allocs_per_step
+
 Null / missing baseline values are skipped (the committed file may predate a
-column). Improvements are reported but never fail. Exit code 1 on any
-regression beyond tolerance or on a scenario that vanished from the fresh
-file.
+column — e.g. wall columns authored without a toolchain). Improvements are
+reported but never fail. Exit code 1 on any regression beyond tolerance, on
+a scenario that vanished from a fresh file, or when nothing at all was
+compared (a gate that never compares is a broken gate, not a green one).
+Exit code 2 on usage errors.
 """
 
 import argparse
@@ -31,34 +43,18 @@ def load_rows(path):
     return {row["scenario"]: row for row in rows if "scenario" in row}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed baseline JSON")
-    ap.add_argument("fresh", help="freshly generated JSON")
-    ap.add_argument(
-        "--keys",
-        default="nodes_visited,leaf_check_work,subproblems",
-        help="comma-separated deterministic counter columns to gate on",
-    )
-    ap.add_argument(
-        "--tol",
-        type=float,
-        default=0.10,
-        help="allowed relative regression (0.10 = +10%%)",
-    )
-    args = ap.parse_args()
-    keys = [k for k in args.keys.split(",") if k]
-
-    base = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
-
+def gate_pair(baseline_path, fresh_path, keys, tol):
+    """Compare one (baseline, fresh) file pair. Returns
+    (failures, improvements, compared) — failures is a list of messages."""
+    base = load_rows(baseline_path)
+    fresh = load_rows(fresh_path)
     failures = []
     improvements = 0
     compared = 0
     for scenario, brow in sorted(base.items()):
         frow = fresh.get(scenario)
         if frow is None:
-            failures.append(f"{scenario}: missing from the fresh baseline")
+            failures.append(f"{scenario}: missing from {fresh_path}")
             continue
         for key in keys:
             want = brow.get(key)
@@ -71,22 +67,76 @@ def main():
                     failures.append(f"{scenario}.{key}: 0 -> {got}")
                 continue
             ratio = got / want
-            if ratio > 1.0 + args.tol:
+            if ratio > 1.0 + tol:
                 failures.append(
                     f"{scenario}.{key}: {want} -> {got} (+{(ratio - 1) * 100:.1f}% "
-                    f"> {args.tol * 100:.0f}% tolerance)"
+                    f"> {tol * 100:.0f}% tolerance)"
                 )
             elif ratio < 1.0:
                 improvements += 1
                 print(f"improved  {scenario}.{key}: {want} -> {got} "
                       f"({(1 - ratio) * 100:.1f}% less)")
+    print(f"{fresh_path}: compared {compared} counters across {len(base)} "
+          f"scenarios ({improvements} improved)")
+    return failures, improvements, compared
 
-    print(f"compared {compared} counters across {len(base)} scenarios "
-          f"({improvements} improved)")
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", nargs="?", help="committed baseline JSON")
+    ap.add_argument("fresh", nargs="?", help="freshly generated JSON")
+    ap.add_argument(
+        "--keys",
+        default="nodes_visited,leaf_check_work,subproblems",
+        help="deterministic counter columns for the positional pair",
+    )
+    ap.add_argument(
+        "--gate",
+        nargs=3,
+        action="append",
+        default=[],
+        metavar=("BASELINE", "FRESH", "KEYS"),
+        help="gate BASELINE vs FRESH on comma-separated KEYS; repeatable — "
+        "one invocation gates every tracked baseline",
+    )
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.10,
+        help="allowed relative regression (0.10 = +10%%), shared by all gates",
+    )
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.baseline is not None:
+        if args.fresh is None:
+            print("positional usage needs both BASELINE and FRESH", file=sys.stderr)
+            return 2
+        pairs.append((args.baseline, args.fresh, args.keys))
+    pairs.extend((b, f, k) for b, f, k in args.gate)
+    if not pairs:
+        print("nothing to gate: give BASELINE FRESH or at least one --gate",
+              file=sys.stderr)
+        return 2
+
+    failures = []
+    total_compared = 0
+    for baseline_path, fresh_path, keys_csv in pairs:
+        keys = [k for k in keys_csv.split(",") if k]
+        fails, _improved, compared = gate_pair(
+            baseline_path, fresh_path, keys, args.tol
+        )
+        failures.extend(fails)
+        total_compared += compared
+
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)
+        return 1
+    if total_compared == 0:
+        print("bench gate compared nothing — baselines empty or keys wrong",
+              file=sys.stderr)
         return 1
     print("bench gate: OK")
     return 0

@@ -1,0 +1,121 @@
+"""Unit tests for the bench gate's multi-file invocation (CI satellite).
+
+Runs under pytest (repo-root conftest puts python/ on sys.path) or
+standalone: python3 python/tests/test_bench_gate.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import bench_gate  # noqa: E402
+
+
+def write_baseline(dirname, name, rows):
+    path = os.path.join(dirname, name)
+    with open(path, "w") as f:
+        json.dump({"rows": rows}, f)
+    return path
+
+
+def dftsp_rows(nodes):
+    return [
+        {"scenario": "dftsp/epoch/n=256", "nodes_visited": nodes,
+         "leaf_check_work": 100, "subproblems": 7, "wall_mean_s": None},
+    ]
+
+
+def engine_rows(flops, allocs):
+    return [
+        {"scenario": "engine/f32/decode/b8", "flops_per_call": flops,
+         "allocs_per_step": allocs, "wall_mean_s": None},
+        {"scenario": "engine/f32/prefill/b8", "flops_per_call": 4 * flops,
+         "allocs_per_step": None, "wall_mean_s": None},
+    ]
+
+
+class MultiFileGate(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.dir = self.tmp.name
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def gate_args(self, dftsp_fresh_nodes, engine_fresh_flops,
+                  engine_fresh_allocs, tol="0.10"):
+        d_base = write_baseline(self.dir, "dftsp_base.json", dftsp_rows(1000))
+        d_fresh = write_baseline(
+            self.dir, "dftsp_fresh.json", dftsp_rows(dftsp_fresh_nodes))
+        e_base = write_baseline(
+            self.dir, "engine_base.json", engine_rows(5000, 0))
+        e_fresh = write_baseline(
+            self.dir, "engine_fresh.json",
+            engine_rows(engine_fresh_flops, engine_fresh_allocs))
+        return [
+            "--tol", tol,
+            "--gate", d_base, d_fresh,
+            "nodes_visited,leaf_check_work,subproblems",
+            "--gate", e_base, e_fresh, "flops_per_call,allocs_per_step",
+        ]
+
+    def test_both_files_within_tolerance_pass(self):
+        self.assertEqual(bench_gate.main(self.gate_args(1050, 5100, 0)), 0)
+
+    def test_dftsp_regression_fails_the_multi_gate(self):
+        self.assertEqual(bench_gate.main(self.gate_args(1200, 5000, 0)), 1)
+
+    def test_engine_flops_regression_fails_the_multi_gate(self):
+        self.assertEqual(bench_gate.main(self.gate_args(1000, 5600, 0)), 1)
+
+    def test_engine_alloc_regression_fails_zero_baseline(self):
+        # allocs_per_step baseline is 0: ANY fresh allocation is a failure
+        # (the steady-state decode path is allocation-free by construction).
+        self.assertEqual(bench_gate.main(self.gate_args(1000, 5000, 3)), 1)
+
+    def test_improvements_never_fail(self):
+        self.assertEqual(bench_gate.main(self.gate_args(700, 4000, 0)), 0)
+
+    def test_missing_scenario_fails(self):
+        d_base = write_baseline(self.dir, "b.json", dftsp_rows(1000))
+        d_fresh = write_baseline(self.dir, "f.json", [])
+        rc = bench_gate.main(
+            ["--gate", d_base, d_fresh, "nodes_visited"])
+        self.assertEqual(rc, 1)
+
+    def test_null_columns_are_skipped_not_compared(self):
+        # wall_mean_s is null in both: gating on it alone compares nothing,
+        # and an empty comparison is a failed gate, not a green one.
+        d_base = write_baseline(self.dir, "b.json", dftsp_rows(1000))
+        d_fresh = write_baseline(self.dir, "f.json", dftsp_rows(1000))
+        rc = bench_gate.main(["--gate", d_base, d_fresh, "wall_mean_s"])
+        self.assertEqual(rc, 1)
+
+    def test_positional_pair_still_supported(self):
+        d_base = write_baseline(self.dir, "b.json", dftsp_rows(1000))
+        d_fresh = write_baseline(self.dir, "f.json", dftsp_rows(1001))
+        rc = bench_gate.main(
+            [d_base, d_fresh, "--keys", "nodes_visited", "--tol", "0.10"])
+        self.assertEqual(rc, 0)
+
+    def test_positional_pair_combines_with_gates(self):
+        d_base = write_baseline(self.dir, "b.json", dftsp_rows(1000))
+        d_fresh = write_baseline(self.dir, "f.json", dftsp_rows(1000))
+        e_base = write_baseline(self.dir, "eb.json", engine_rows(5000, 0))
+        e_fresh = write_baseline(self.dir, "ef.json", engine_rows(9000, 0))
+        rc = bench_gate.main([
+            d_base, d_fresh, "--keys", "nodes_visited",
+            "--gate", e_base, e_fresh, "flops_per_call",
+        ])
+        self.assertEqual(rc, 1, "regression in the --gate pair must fail")
+
+    def test_no_inputs_is_a_usage_error(self):
+        self.assertEqual(bench_gate.main([]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -176,8 +176,9 @@ fn a4_multi_llm_partitioning() {
         let demand = vec![random_requests(d3, 3), random_requests(d7, 4)];
         for policy in [PartitionPolicy::Equal, PartitionPolicy::LoadProportional] {
             let mut m = MultiLlm::with_dftsp(deps.clone(), policy);
-            let (schedules, gpus) =
-                m.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+            let (schedules, gpus) = m
+                .schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand)
+                .expect("cluster covers both deployments");
             t.row(&[
                 format!("{d3}/{d7}"),
                 format!("{policy:?}"),

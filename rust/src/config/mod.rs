@@ -7,7 +7,7 @@
 pub mod toml;
 
 use crate::cluster::{ClusterSpec, GpuSpec};
-use crate::coordinator::EpochParams;
+use crate::coordinator::{EpochParams, PartitionPolicy};
 use crate::driver::BatchingMode;
 use crate::model::LlmSpec;
 use crate::quant::{self, Precision, QuantAlgo, QuantSpec};
@@ -116,6 +116,24 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         workers: doc.u64_or("scheduler.workers", 0) as usize,
     };
 
+    // `[cluster] shards = N` + `[cluster] partition_policy`: split the GPU
+    // pool into N partitions behind the sharded dispatch layer. Validated
+    // here so the min-1-GPU-per-shard guarantee fails at load time with a
+    // config error, not mid-run.
+    let shards = doc.u64_or("cluster.shards", 1) as usize;
+    if shards == 0 {
+        return Err("cluster.shards must be >= 1".into());
+    }
+    if shards > cluster.num_gpus {
+        return Err(format!(
+            "cluster.shards = {shards} exceeds cluster.num_gpus = {} \
+             (every shard needs at least one GPU)",
+            cluster.num_gpus
+        ));
+    }
+    let partition =
+        PartitionPolicy::parse(&doc.str_or("cluster.partition_policy", "load-proportional"))?;
+
     Ok(SimConfig {
         model,
         quant,
@@ -129,6 +147,8 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         s_pad,
         batching,
         scheduler,
+        shards,
+        partition,
     })
 }
 
@@ -213,6 +233,26 @@ s_pad = 256
         // Default is the sequential chained search.
         let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg.scheduler.workers, 0);
+    }
+
+    #[test]
+    fn cluster_shards_knob_parses_and_validates() {
+        let doc = toml::parse("[cluster]\nshards = 4\npartition_policy = \"equal\"\n").unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.partition, PartitionPolicy::Equal);
+        // Defaults: one pool, load-proportional re-partitioning.
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.partition, PartitionPolicy::LoadProportional);
+        // min-1 GPU per shard is a load-time config error.
+        let doc = toml::parse("[cluster]\nnum_gpus = 3\nshards = 4\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+        let doc = toml::parse("[cluster]\nshards = 0\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+        // Unknown policies are a config error, not a silent fallback.
+        let doc = toml::parse("[cluster]\npartition_policy = \"fair\"\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
     }
 
     #[test]

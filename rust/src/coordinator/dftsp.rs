@@ -120,8 +120,13 @@ fn reuse_floor(levels: &[LevelGroup], req: &EpochRequest) -> (usize, usize) {
 }
 
 impl Dftsp {
+    /// Default-configured DFTSP — routes through [`SchedulerConfig::default`]
+    /// so the `SCHED_WORKERS` env override (CI's worker matrix) reaches every
+    /// default-constructed scheduler in the test suite. Schedules are
+    /// byte-identical across worker counts; tests that freeze search-effort
+    /// counters (golden fixtures) construct `with_config` explicitly.
     pub fn new() -> Self {
-        Dftsp::default()
+        Dftsp::with_config(SchedulerConfig::default())
     }
 
     /// Build with deployment knobs (scenario TOML / CLI / `ServerConfig`).

@@ -17,7 +17,9 @@ pub mod tree;
 pub use brute_force::BruteForce;
 pub use dftsp::Dftsp;
 pub use greedy::{Greedy, GreedyOrder};
-pub use multi::{Deployment, MultiLlm, PartitionPolicy};
+pub use multi::{
+    partition_gpus, partition_gpus_by_load, Deployment, MultiLlm, PartitionError, PartitionPolicy,
+};
 pub use no_batching::NoBatching;
 pub use problem::{EpochParams, FeasibilityChecker, PartialState, ProblemInstance, Violation};
 pub use reformulation::P2Coefficients;

@@ -20,10 +20,18 @@ pub struct Deployment {
 
 impl Deployment {
     /// Peak FLOPs one "typical" request costs on this deployment — used as
-    /// the load weight for GPU partitioning.
-    fn req_weight(&self, s_pad: u32, n_typ: u32) -> f64 {
+    /// the load weight for GPU partitioning (here and by the sharded
+    /// driver's between-epoch re-partitioning).
+    pub fn req_weight(&self, s_pad: u32, n_typ: u32) -> f64 {
         let cost = CostModel::new(self.model.clone());
         self.quant.beta * cost.total_flops_per_req(s_pad, n_typ)
+    }
+
+    /// Do two deployments serve the same (model, quantization) pair? The
+    /// sharded driver's routing treats same-deployment shards as mutual
+    /// spill-over targets.
+    pub fn same_as(&self, other: &Deployment) -> bool {
+        self.model.name == other.model.name && self.quant.label() == other.quant.label()
     }
 }
 
@@ -36,36 +44,99 @@ pub enum PartitionPolicy {
     LoadProportional,
 }
 
-/// Partition `total_gpus` across deployments given their queued demand.
-/// Every deployment with demand gets at least one GPU (a model that cannot
-/// run serves nothing); the result always sums to `total_gpus`.
-pub fn partition_gpus(
-    deployments: &[Deployment],
-    demand: &[Vec<EpochRequest>],
+impl PartitionPolicy {
+    /// Parse the `partition_policy = "equal" | "load-proportional"` knob
+    /// (scenario TOML `[cluster]`, CLI `--partition`).
+    pub fn parse(s: &str) -> Result<PartitionPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "equal" => Ok(PartitionPolicy::Equal),
+            "load" | "load-proportional" | "load_proportional" | "loadproportional" => {
+                Ok(PartitionPolicy::LoadProportional)
+            }
+            other => Err(format!(
+                "unknown partition policy `{other}` (expected `equal` or `load-proportional`)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionPolicy::Equal => write!(f, "equal"),
+            PartitionPolicy::LoadProportional => write!(f, "load-proportional"),
+        }
+    }
+}
+
+/// Why a GPU partition could not be formed. Before this error existed, a
+/// request for more deployments than GPUs died on an `assert!` deep inside
+/// the apportionment — callers (the sharded driver, scenario validation)
+/// now get a typed, recoverable verdict instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionError {
+    /// No deployments were given — there is nothing to partition over.
+    NoDeployments,
+    /// Fewer GPUs than active deployments: the min-1-GPU-per-deployment
+    /// guarantee (a deployment with zero GPUs can never serve anything,
+    /// silently blackholing every request routed to it) is unsatisfiable.
+    InsufficientGpus {
+        deployments: usize,
+        total_gpus: usize,
+    },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::NoDeployments => write!(f, "no deployments to partition GPUs over"),
+            PartitionError::InsufficientGpus {
+                deployments,
+                total_gpus,
+            } => write!(
+                f,
+                "{total_gpus} GPUs cannot give {deployments} deployments one GPU each \
+                 (min-1 guarantee)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Core apportionment over precomputed per-deployment load weights (FLOPs of
+/// queued demand; any non-negative scale works — only ratios matter). Every
+/// deployment is guaranteed at least one GPU and the result always sums to
+/// `total_gpus`; when that guarantee cannot hold, a typed [`PartitionError`]
+/// is returned instead of a zero-GPU partition.
+pub fn partition_gpus_by_load(
+    loads: &[f64],
     total_gpus: usize,
-    s_pad: u32,
     policy: PartitionPolicy,
-) -> Vec<usize> {
-    assert_eq!(deployments.len(), demand.len());
-    let k = deployments.len();
-    assert!(k > 0 && total_gpus >= k, "need at least one GPU per deployment");
+) -> Result<Vec<usize>, PartitionError> {
+    let k = loads.len();
+    if k == 0 {
+        return Err(PartitionError::NoDeployments);
+    }
+    if total_gpus < k {
+        return Err(PartitionError::InsufficientGpus {
+            deployments: k,
+            total_gpus,
+        });
+    }
     match policy {
         PartitionPolicy::Equal => {
             let base = total_gpus / k;
             let extra = total_gpus % k;
-            (0..k).map(|i| base + usize::from(i < extra)).collect()
+            Ok((0..k).map(|i| base + usize::from(i < extra)).collect())
         }
         PartitionPolicy::LoadProportional => {
-            let weights: Vec<f64> = deployments
+            // Idle deployments keep a floor weight so the quota ratios stay
+            // finite; NaN/negative loads (poisoned cost inputs) clamp there
+            // too rather than corrupting the apportionment.
+            let weights: Vec<f64> = loads
                 .iter()
-                .zip(demand.iter())
-                .map(|(d, q)| {
-                    let load: f64 = q
-                        .iter()
-                        .map(|r| d.req_weight(s_pad, r.req.output_tokens))
-                        .sum();
-                    load.max(1.0) // idle deployments keep a floor weight
-                })
+                .map(|&w| if w.is_finite() && w > 1.0 { w } else { 1.0 })
                 .collect();
             let total_w: f64 = weights.iter().sum();
             // one guaranteed GPU each, remainder largest-remainder apportioned
@@ -85,9 +156,34 @@ pub fn partition_gpus(
                 assigned += 1;
                 ri += 1;
             }
-            alloc
+            Ok(alloc)
         }
     }
+}
+
+/// Partition `total_gpus` across deployments given their queued demand.
+/// Every deployment gets at least one GPU (a model with zero GPUs serves
+/// nothing — it would silently blackhole its queue); the result always sums
+/// to `total_gpus`. More deployments than GPUs is a typed error, not a
+/// panic or a zero-GPU partition.
+pub fn partition_gpus(
+    deployments: &[Deployment],
+    demand: &[Vec<EpochRequest>],
+    total_gpus: usize,
+    s_pad: u32,
+    policy: PartitionPolicy,
+) -> Result<Vec<usize>, PartitionError> {
+    assert_eq!(deployments.len(), demand.len());
+    let loads: Vec<f64> = deployments
+        .iter()
+        .zip(demand.iter())
+        .map(|(d, q)| {
+            q.iter()
+                .map(|r| d.req_weight(s_pad, r.req.output_tokens))
+                .sum()
+        })
+        .collect();
+    partition_gpus_by_load(&loads, total_gpus, policy)
 }
 
 /// The multi-LLM coordinator: routes per-deployment request queues onto GPU
@@ -124,7 +220,9 @@ impl MultiLlm {
 
     /// One epoch across every deployment. `demand[i]` are the requests
     /// routed to deployment i (the application API names the target model).
-    /// Returns (per-deployment schedule, per-deployment GPU count).
+    /// Returns (per-deployment schedule, per-deployment GPU count), or the
+    /// typed partition error when the cluster cannot give every deployment
+    /// its guaranteed GPU.
     pub fn schedule_epoch(
         &mut self,
         cluster: &ClusterSpec,
@@ -132,14 +230,14 @@ impl MultiLlm {
         s_pad: u32,
         now: f64,
         demand: &[Vec<EpochRequest>],
-    ) -> (Vec<Schedule>, Vec<usize>) {
+    ) -> Result<(Vec<Schedule>, Vec<usize>), PartitionError> {
         let gpus = partition_gpus(
             &self.deployments,
             demand,
             cluster.num_gpus,
             s_pad,
             self.policy,
-        );
+        )?;
         let mut out = Vec::with_capacity(self.deployments.len());
         for ((dep, sched), (&g, reqs)) in self
             .deployments
@@ -157,7 +255,7 @@ impl MultiLlm {
             );
             out.push(sched.schedule(&inst, reqs));
         }
-        (out, gpus)
+        Ok((out, gpus))
     }
 }
 
@@ -203,11 +301,57 @@ mod tests {
         let demand = vec![reqs(10, 128), reqs(3, 512)];
         for policy in [PartitionPolicy::Equal, PartitionPolicy::LoadProportional] {
             for total in [2usize, 7, 20, 21] {
-                let p = partition_gpus(&deps, &demand, total, 512, policy);
+                let p = partition_gpus(&deps, &demand, total, 512, policy).unwrap();
                 assert_eq!(p.iter().sum::<usize>(), total, "{policy:?} total {total}");
                 assert!(p.iter().all(|&g| g >= 1), "{policy:?}: everyone gets a GPU");
             }
         }
+    }
+
+    /// Regression (issue satellite): at the boundary `total_gpus ==
+    /// deployments` both policies must hand out exactly one GPU each, and
+    /// *below* it they must return the typed error — never a partition with
+    /// a zero-GPU deployment, and never a panic.
+    #[test]
+    fn boundary_min_one_gpu_or_typed_error() {
+        let deps = deployments();
+        let demand = vec![reqs(40, 512), reqs(0, 128)];
+        for policy in [PartitionPolicy::Equal, PartitionPolicy::LoadProportional] {
+            // Exactly one GPU per deployment: the guarantee binds everywhere.
+            let p = partition_gpus(&deps, &demand, 2, 512, policy).unwrap();
+            assert_eq!(p, vec![1, 1], "{policy:?} at the boundary");
+            // One GPU short: typed error carrying both sides of the deficit.
+            let err = partition_gpus(&deps, &demand, 1, 512, policy).unwrap_err();
+            assert_eq!(
+                err,
+                PartitionError::InsufficientGpus {
+                    deployments: 2,
+                    total_gpus: 1
+                },
+                "{policy:?} below the boundary"
+            );
+            assert!(err.to_string().contains("min-1"));
+        }
+        // Zero deployments is its own typed case.
+        assert_eq!(
+            partition_gpus_by_load(&[], 4, PartitionPolicy::Equal).unwrap_err(),
+            PartitionError::NoDeployments
+        );
+    }
+
+    #[test]
+    fn load_weights_clamp_non_finite() {
+        // NaN / negative loads must clamp to the floor weight, not poison
+        // the quotas: the partition stays total-preserving and min-1.
+        let p = partition_gpus_by_load(
+            &[f64::NAN, 10.0, -3.0],
+            9,
+            PartitionPolicy::LoadProportional,
+        )
+        .unwrap();
+        assert_eq!(p.iter().sum::<usize>(), 9);
+        assert!(p.iter().all(|&g| g >= 1), "{p:?}");
+        assert!(p[1] > p[0] && p[1] > p[2], "{p:?}: real load dominates");
     }
 
     #[test]
@@ -215,9 +359,10 @@ mod tests {
         let deps = deployments();
         // deployment 0 heavily loaded, deployment 1 nearly idle
         let demand = vec![reqs(40, 512), reqs(1, 128)];
-        let p = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional);
+        let p =
+            partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional).unwrap();
         assert!(p[0] > p[1], "loaded deployment gets more GPUs: {p:?}");
-        let eq = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::Equal);
+        let eq = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::Equal).unwrap();
         assert_eq!(eq, vec![10, 10]);
     }
 
@@ -227,8 +372,25 @@ mod tests {
         // identical queue sizes: 7.1B requests cost more FLOPs, so the 7.1B
         // deployment should receive at least as many GPUs.
         let demand = vec![reqs(10, 256), reqs(10, 256)];
-        let p = partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional);
+        let p =
+            partition_gpus(&deps, &demand, 20, 512, PartitionPolicy::LoadProportional).unwrap();
         assert!(p[1] >= p[0], "{p:?}");
+    }
+
+    #[test]
+    fn partition_policy_parses() {
+        assert_eq!(PartitionPolicy::parse("equal").unwrap(), PartitionPolicy::Equal);
+        assert_eq!(
+            PartitionPolicy::parse("Load-Proportional").unwrap(),
+            PartitionPolicy::LoadProportional
+        );
+        assert_eq!(
+            PartitionPolicy::parse("load").unwrap(),
+            PartitionPolicy::LoadProportional
+        );
+        assert!(PartitionPolicy::parse("fair").is_err());
+        assert_eq!(PartitionPolicy::LoadProportional.to_string(), "load-proportional");
+        assert_eq!(PartitionPolicy::Equal.to_string(), "equal");
     }
 
     #[test]
@@ -237,8 +399,9 @@ mod tests {
             MultiLlm::with_dftsp(deployments(), PartitionPolicy::LoadProportional);
         let cluster = ClusterSpec::paper_default();
         let demand = vec![reqs(8, 128), reqs(8, 128)];
-        let (schedules, gpus) =
-            multi.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+        let (schedules, gpus) = multi
+            .schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand)
+            .unwrap();
         assert_eq!(schedules.len(), 2);
         assert_eq!(gpus.iter().sum::<usize>(), 20);
         // both deployments serve something under light load
@@ -261,8 +424,9 @@ mod tests {
         let cluster = ClusterSpec::paper_default();
         let total = |policy| {
             let mut m = MultiLlm::with_dftsp(deps.clone(), policy);
-            let (s, _) =
-                m.schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand);
+            let (s, _) = m
+                .schedule_epoch(&cluster, &EpochParams::default(), 512, 0.0, &demand)
+                .unwrap();
             s.iter().map(|x| x.batch_size()).sum::<usize>()
         };
         assert!(total(PartitionPolicy::LoadProportional) >= total(PartitionPolicy::Equal));

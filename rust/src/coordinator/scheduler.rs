@@ -75,11 +75,30 @@ impl SearchStats {
 /// Deployment-level scheduler knobs, threaded from scenario TOML
 /// (`[scheduler]`), the CLI (`--workers`) and `ServerConfig` into the
 /// policy constructors.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SchedulerConfig {
     /// Worker threads for DFTSP's opt-in parallel d-pool search; 0 or 1
     /// keeps the sequential chained search (the default).
     pub workers: usize,
+}
+
+impl Default for SchedulerConfig {
+    /// Sequential search, unless the `SCHED_WORKERS` environment variable
+    /// overrides it. The override exists so CI can run the whole test suite
+    /// over a worker matrix (schedules are byte-identical across modes —
+    /// property-tested — so every behavioral assertion holds under both;
+    /// only search-*effort* counters may differ, which is why effort-
+    /// sensitive fixtures pin `workers` explicitly). Explicit scenario TOML
+    /// and CLI values are parsed with their own fallbacks and are not
+    /// affected.
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: std::env::var("SCHED_WORKERS")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0),
+        }
+    }
 }
 
 /// A scheduling decision for one epoch.

@@ -99,6 +99,26 @@ pub trait ExecutionBackend {
     fn finish(&mut self, horizon: f64, metrics: &mut Metrics) {
         let _ = (horizon, metrics);
     }
+
+    /// Fewest GPUs this backend needs to keep its *in-flight* work resident
+    /// — the KV-safety floor for between-epoch re-partitioning (the sharded
+    /// driver never migrates in-flight work between shards, only headroom,
+    /// so a shard's partition cannot shrink below what its running batch
+    /// occupies). Epoch backends complete everything within `execute` and
+    /// hold nothing across boundaries: floor 1. The continuous backend
+    /// overrides this from its KV ledger.
+    fn min_gpus_for_inflight(&self) -> usize {
+        1
+    }
+
+    /// The shard this backend serves was re-partitioned to `cluster`
+    /// (called between epochs, never mid-batch). Backends tracking cluster
+    /// capacity (the continuous KV ledger) resize their budgets here; the
+    /// guarantee from `min_gpus_for_inflight` is that the new cluster still
+    /// covers everything currently in flight.
+    fn cluster_resized(&mut self, cluster: &crate::cluster::ClusterSpec) {
+        let _ = cluster;
+    }
 }
 
 /// Cost-model execution: the testbed stand-in used by the simulator.

@@ -49,6 +49,7 @@
 //! `step_epoch` calls. `finish` drains everything still in flight so
 //! request conservation always closes.
 
+use crate::cluster::ClusterSpec;
 use crate::driver::backend::{EpochContext, ExecutionBackend, QueuedRequest};
 use crate::driver::InstanceTemplate;
 use crate::metrics::{Metrics, Outcome};
@@ -196,6 +197,41 @@ impl KvLedger {
         if let Some(bytes) = self.held.remove(&id) {
             self.in_use -= bytes;
         }
+    }
+
+    /// Resize the GPU pool backing this ledger (sharded re-partitioning;
+    /// the per-GPU budget is a property of the GPU model and stays put).
+    /// Callers guarantee `num_gpus >= self.min_gpus_for_inflight()` — the
+    /// held reservations were admitted under the packing bound and must
+    /// keep satisfying it.
+    pub fn set_num_gpus(&mut self, num_gpus: usize) {
+        self.num_gpus = num_gpus.max(1);
+    }
+
+    /// Smallest GPU count under which every *currently held* reservation
+    /// still satisfies the worst-GPU packing bound — the KV-safety floor
+    /// handed to the sharded driver's re-partitioner (in-flight work never
+    /// migrates; only headroom does). An empty ledger floors at 1.
+    pub fn min_gpus_for_inflight(&self) -> usize {
+        if self.held.is_empty() {
+            return 1;
+        }
+        let total = self.in_use as f64;
+        let max = *self.held.values().max().unwrap() as f64;
+        let budget = self.per_gpu_budget as f64;
+        for g in 1..=self.num_gpus.max(1) {
+            let worst = if self.held.len() <= g {
+                max
+            } else {
+                total / g as f64 + max
+            };
+            if worst <= budget {
+                return g;
+            }
+        }
+        // Degenerate (shrunken-budget tests): nothing smaller fits — keep
+        // the pool as is.
+        self.num_gpus.max(1)
     }
 }
 
@@ -476,6 +512,21 @@ impl ExecutionBackend for ContinuousBackend {
         let until = horizon.max(self.clock);
         self.simulate(until, true, metrics);
     }
+
+    /// KV-safety floor for re-partitioning: the ledger's current in-flight
+    /// reservations pin this many GPUs to the shard.
+    fn min_gpus_for_inflight(&self) -> usize {
+        self.ledger.min_gpus_for_inflight()
+    }
+
+    /// Re-partition handoff: adopt the new pool size for both the compute
+    /// model (step durations, best-case screens) and the KV admission gate.
+    /// In-flight reservations are untouched — the caller honored
+    /// `min_gpus_for_inflight`, so they still satisfy the packing bound.
+    fn cluster_resized(&mut self, cluster: &ClusterSpec) {
+        self.template.cluster = cluster.clone();
+        self.ledger.set_num_gpus(cluster.num_gpus);
+    }
 }
 
 #[cfg(test)]
@@ -545,6 +596,41 @@ mod tests {
         l.release(99); // unknown id is a no-op
         assert_eq!(l.in_use(), 90);
         assert!(l.capacity() >= l.peak());
+    }
+
+    #[test]
+    fn ledger_kv_safe_resize_floor() {
+        // 4 GPUs, 100 bytes per GPU; three 60-byte holders need the LPT
+        // bound 180/g + 60 <= 100 => g >= 4.5 … but with holders <= g the
+        // worst GPU holds only max: g = 3 fits one-per-GPU.
+        let mut l = KvLedger::new(100, 4);
+        assert_eq!(l.min_gpus_for_inflight(), 1, "empty ledger floors at 1");
+        assert!(l.try_admit(1, 60));
+        assert!(l.try_admit(2, 60));
+        assert!(l.try_admit(3, 60));
+        assert_eq!(l.min_gpus_for_inflight(), 3, "one-per-GPU regime");
+        // Shrinking to the floor keeps every later admit consistent.
+        l.set_num_gpus(3);
+        assert!(!l.try_admit(4, 60), "240/3 + 60 = 140 > 100");
+        l.release(1);
+        assert_eq!(l.min_gpus_for_inflight(), 2);
+        l.set_num_gpus(2);
+        assert_eq!(l.holders(), 2);
+        // Growing again restores headroom.
+        l.set_num_gpus(4);
+        assert!(l.try_admit(5, 60));
+    }
+
+    #[test]
+    fn backend_cluster_resize_updates_ledger_and_compute() {
+        let t = template();
+        let mut backend = ContinuousBackend::new(&t);
+        let before = backend.ledger().capacity();
+        let half = ClusterSpec::new(t.cluster.gpu.clone(), t.cluster.num_gpus / 2);
+        backend.cluster_resized(&half);
+        assert_eq!(backend.ledger().capacity(), before / 2);
+        assert_eq!(backend.template.cluster.num_gpus, t.cluster.num_gpus / 2);
+        assert_eq!(backend.min_gpus_for_inflight(), 1, "nothing in flight");
     }
 
     #[test]

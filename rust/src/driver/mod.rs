@@ -35,14 +35,21 @@
 //!   into a persistent running batch gated by a [`KvLedger`], relaxing the
 //!   epoch barrier for mid-epoch arrivals (see `continuous` module docs for
 //!   the state machine and when to prefer each backend).
+//!
+//! Above the single-pool loop, [`ShardedDriver`] (module `sharded`) runs
+//! one `EpochDriver` per GPU partition behind a dispatch layer — routing by
+//! deployment affinity, KV-safe demand-driven re-partitioning, parallel
+//! deterministic stepping.
 
 pub mod backend;
 pub mod clock;
 pub mod continuous;
+pub mod sharded;
 
 pub use backend::{AnalyticBackend, EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
 pub use clock::{Clock, SimClock, WallClock};
 pub use continuous::{BatchingMode, ContinuousBackend, KvLedger};
+pub use sharded::{Shard, ShardedConfig, ShardedDriver};
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
@@ -158,6 +165,20 @@ impl<P> EpochDriver<P> {
 
     pub fn template(&self) -> &InstanceTemplate {
         &self.template
+    }
+
+    /// Replace the cluster slice this driver schedules against. Called by
+    /// the sharded driver's between-epoch re-partitioning; takes effect at
+    /// the next `step_epoch` (the new `ProblemInstance` is frozen then), so
+    /// a batch never sees its cluster change mid-epoch.
+    pub fn set_cluster(&mut self, cluster: ClusterSpec) {
+        self.template.cluster = cluster;
+    }
+
+    /// The queued requests in queue order — the sharded driver's demand
+    /// feedback signal for load-proportional re-partitioning.
+    pub fn queued_requests(&self) -> impl Iterator<Item = &Request> + '_ {
+        self.queue.iter().map(|e| &e.req)
     }
 
     /// Admit a request into the queue (schedulable from the next boundary

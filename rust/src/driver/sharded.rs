@@ -1,0 +1,552 @@
+//! Sharded multi-deployment serving — one [`EpochDriver`] per GPU
+//! partition behind a dispatch layer (the last big ROADMAP scaling item,
+//! unlocked by the PR 1 driver refactor).
+//!
+//! The paper schedules a single deployment's GPU pool; its own multi-LLM
+//! extension (`coordinator::multi`) already *partitions* GPUs across
+//! deployments but was schedule-only. This module drives N partitions
+//! through the full epoch protocol: the edge node hosts several
+//! (model, quantization) deployments, each shard owns one partition — its
+//! own [`EpochDriver`], [`ExecutionBackend`], scheduler, RNG stream and
+//! [`Metrics`] — and a dispatch layer routes arrivals and re-balances GPU
+//! headroom between epochs.
+//!
+//! ## Routing
+//!
+//! Every arrival names a *deployment affinity* (which model/quant it wants).
+//! Dispatch picks the least-loaded shard (queue depth, ties to the lowest
+//! shard index) among the shards hosting that deployment whose quantization
+//! admits the request's accuracy requirement (constraint 1e). When no
+//! affinity shard can admit it, the request spills over to the least-loaded
+//! *feasible* shard of any deployment; when nothing at all can serve it, it
+//! still lands on the affinity shard so the driver's admission step rejects
+//! it and accounting closes — every arrival lands in exactly one shard,
+//! always (property-tested in `tests/proptest_sharded.rs`).
+//!
+//! ## Re-partitioning (headroom moves, in-flight work never does)
+//!
+//! Between epochs the dispatch layer re-apportions the GPU pool from
+//! observed per-shard demand (queued FLOPs weighted by each deployment's β)
+//! under the configured [`PartitionPolicy`], with two guarantees:
+//!
+//! - **min-1**: every shard keeps at least one GPU
+//!   ([`partition_gpus_by_load`] returns a typed error otherwise);
+//! - **KV-safe handoff**: a shard never shrinks below
+//!   [`ExecutionBackend::min_gpus_for_inflight`] — the continuous backend
+//!   pins the GPUs its in-flight KV reservations occupy, so only *headroom*
+//!   migrates and running batches are never squeezed out of memory. When the
+//!   floors cannot be honored (every GPU pinned), the partition stays put
+//!   for that epoch.
+//!
+//! ## Determinism
+//!
+//! Shards step **in parallel** via `std::thread::scope`, and the result is
+//! bit-identical to stepping them sequentially: each shard's RNG stream is
+//! split from the run seed by shard index (shard 0 inherits the run stream,
+//! which is what makes a 1-shard run bit-identical to the unsharded
+//! driver — `tests/sharded_e2e.rs`), shards share no mutable state during a
+//! step, and metrics merge in fixed shard-index order.
+
+use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::coordinator::{
+    partition_gpus_by_load, Deployment, EpochParams, PartitionError, PartitionPolicy, Scheduler,
+};
+use crate::driver::{DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate};
+use crate::metrics::Metrics;
+use crate::model::CostModel;
+use crate::request::Request;
+use crate::util::rng::{splitmix64, Rng};
+use crate::wireless::{ChannelParams, RadioParams};
+
+/// Everything the dispatch layer needs to stand up its shards.
+#[derive(Debug, Clone)]
+pub struct ShardedConfig {
+    /// One entry per shard: the (model, quantization) pair it serves.
+    /// Several shards may host the same deployment (pure data-parallel
+    /// scale-out); routing then balances across them.
+    pub deployments: Vec<Deployment>,
+    /// The total GPU pool being partitioned.
+    pub cluster: ClusterSpec,
+    pub partition: PartitionPolicy,
+    /// Per-shard epoch-protocol policy (stale rule, s', allocation).
+    pub policy: DriverPolicy,
+    pub epoch: EpochParams,
+    pub radio: RadioParams,
+    pub channel: ChannelParams,
+    /// Run seed; shard i draws from a stream split off it (shard 0 keeps
+    /// the run stream itself — the 1-shard parity contract).
+    pub seed: u64,
+}
+
+/// Per-shard RNG stream: shard 0 inherits the run stream bit-for-bit;
+/// shard i > 0 gets an independent SplitMix64-derived stream.
+fn shard_stream(seed: u64, shard: u64) -> u64 {
+    if shard == 0 {
+        return seed;
+    }
+    let mut s = seed ^ shard.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// One GPU partition: a deployment, its epoch driver, execution backend and
+/// scheduler.
+pub struct Shard<P, B> {
+    pub deployment: Deployment,
+    pub driver: EpochDriver<P>,
+    pub backend: B,
+    scheduler: Box<dyn Scheduler + Send>,
+}
+
+impl<P, B: ExecutionBackend<Payload = P>> Shard<P, B> {
+    fn step(&mut self, now: f64) {
+        let sched: &mut dyn Scheduler = &mut *self.scheduler;
+        self.driver.step_epoch(sched, &mut self.backend, now);
+    }
+}
+
+/// The dispatch layer: owns one [`EpochDriver`] per GPU partition, routes
+/// arrivals, re-partitions headroom between epochs and steps the shards in
+/// parallel (module docs).
+pub struct ShardedDriver<P, B> {
+    shards: Vec<Shard<P, B>>,
+    gpu: GpuSpec,
+    total_gpus: usize,
+    partition: PartitionPolicy,
+    gpus: Vec<usize>,
+    epoch_idx: u64,
+}
+
+/// Raise every below-floor entry to its floor by taking GPUs from the
+/// largest-surplus donors (ties to the lowest index). Caller guarantees
+/// `Σ floors ≤ Σ alloc`, so the loop always finds a donor and terminates
+/// with the total preserved.
+fn apply_floors(mut alloc: Vec<usize>, floors: &[usize]) -> Vec<usize> {
+    loop {
+        let Some(need) = (0..alloc.len()).find(|&i| alloc[i] < floors[i]) else {
+            return alloc;
+        };
+        let donor = (0..alloc.len())
+            .filter(|&i| alloc[i] > floors[i])
+            .max_by_key(|&i| (alloc[i] - floors[i], usize::MAX - i))
+            .expect("sum(floors) <= sum(alloc): a deficit implies a surplus");
+        alloc[donor] -= 1;
+        alloc[need] += 1;
+    }
+}
+
+impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
+    /// Stand up one shard per deployment. The initial partition apportions
+    /// the pool under `cfg.partition` with zero observed demand (i.e.
+    /// near-equal); demand-driven re-partitioning takes over from the first
+    /// epoch. Returns the typed [`PartitionError`] when the pool cannot
+    /// give every deployment its guaranteed GPU.
+    pub fn new(
+        cfg: ShardedConfig,
+        mut make_backend: impl FnMut(&InstanceTemplate) -> B,
+        mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send>,
+    ) -> Result<Self, PartitionError> {
+        let k = cfg.deployments.len();
+        let gpus = partition_gpus_by_load(&vec![0.0; k], cfg.cluster.num_gpus, cfg.partition)?;
+        let mut shards = Vec::with_capacity(k);
+        for (i, dep) in cfg.deployments.into_iter().enumerate() {
+            let template = InstanceTemplate {
+                cost: CostModel::new(dep.model.clone()),
+                quant: dep.quant.clone(),
+                cluster: ClusterSpec::new(cfg.cluster.gpu.clone(), gpus[i]),
+                epoch: cfg.epoch.clone(),
+            };
+            let backend = make_backend(&template);
+            let driver = EpochDriver::new(
+                template,
+                cfg.policy,
+                cfg.radio.clone(),
+                cfg.channel.clone(),
+                Rng::new(shard_stream(cfg.seed, i as u64)),
+            );
+            shards.push(Shard {
+                deployment: dep,
+                driver,
+                backend,
+                scheduler: make_scheduler(i),
+            });
+        }
+        Ok(ShardedDriver {
+            shards,
+            gpu: cfg.cluster.gpu,
+            total_gpus: cfg.cluster.num_gpus,
+            partition: cfg.partition,
+            gpus,
+            epoch_idx: 0,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current GPU counts, by shard index (always sums to the pool size).
+    pub fn partition(&self) -> &[usize] {
+        &self.gpus
+    }
+
+    pub fn shards(&self) -> &[Shard<P, B>] {
+        &self.shards
+    }
+
+    pub fn epoch_idx(&self) -> u64 {
+        self.epoch_idx
+    }
+
+    /// Pick the shard an arrival should land on (module docs: affinity
+    /// first, least-loaded within the deployment, accuracy-feasible
+    /// spill-over, affinity fallback so rejection is still accounted).
+    fn route(&self, req: &Request, affinity: usize) -> usize {
+        let aff = affinity.min(self.shards.len() - 1);
+        let admits = |i: usize| {
+            let d = &self.shards[i].deployment;
+            d.quant.satisfies_accuracy(&d.model.name, req.accuracy_req)
+        };
+        let least_loaded = |it: &mut dyn Iterator<Item = usize>| {
+            it.min_by_key(|&i| (self.shards[i].driver.queue_len(), i))
+        };
+        let target = &self.shards[aff].deployment;
+        let mut same = (0..self.shards.len())
+            .filter(|&i| admits(i) && self.shards[i].deployment.same_as(target));
+        if let Some(i) = least_loaded(&mut same) {
+            return i;
+        }
+        let mut feasible = (0..self.shards.len()).filter(|&i| admits(i));
+        least_loaded(&mut feasible).unwrap_or(aff)
+    }
+
+    /// Admit a request: route it to exactly one shard's queue. `affinity`
+    /// is the index of the deployment the caller wants (clamped into
+    /// range); the chosen shard index is returned.
+    pub fn offer(&mut self, req: Request, payload: P, affinity: usize) -> usize {
+        let shard = self.route(&req, affinity);
+        self.shards[shard].driver.offer(req, payload);
+        shard
+    }
+
+    /// Re-apportion the GPU pool from observed queued demand, clamped to
+    /// each backend's KV-safety floor. No-ops for a single shard, when
+    /// every GPU is pinned by in-flight work, or when the apportionment is
+    /// unchanged.
+    fn repartition(&mut self) {
+        if self.shards.len() <= 1 {
+            return;
+        }
+        let loads: Vec<f64> = self
+            .shards
+            .iter()
+            .map(|s| {
+                s.driver
+                    .queued_requests()
+                    .map(|r| s.deployment.req_weight(r.prompt_tokens, r.output_tokens))
+                    .sum()
+            })
+            .collect();
+        let Ok(desired) = partition_gpus_by_load(&loads, self.total_gpus, self.partition) else {
+            return; // pool shrank below min-1 — unreachable once constructed
+        };
+        let floors: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|s| s.backend.min_gpus_for_inflight().clamp(1, self.total_gpus))
+            .collect();
+        if floors.iter().sum::<usize>() > self.total_gpus {
+            return; // every GPU pinned by in-flight work: no safe handoff
+        }
+        let alloc = apply_floors(desired, &floors);
+        if alloc == self.gpus {
+            return;
+        }
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            if alloc[i] != self.gpus[i] {
+                let cluster = ClusterSpec::new(self.gpu.clone(), alloc[i]);
+                shard.driver.set_cluster(cluster.clone());
+                shard.backend.cluster_resized(&cluster);
+            }
+        }
+        self.gpus = alloc;
+    }
+
+    /// One epoch across every shard: re-partition from current demand, then
+    /// step all shards in parallel. Deterministic regardless of thread
+    /// interleaving — shards are fully independent within a step and all
+    /// cross-shard decisions (routing, re-partitioning) happen before the
+    /// fan-out.
+    pub fn step_epoch(&mut self, now: f64)
+    where
+        P: Send,
+        B: Send,
+    {
+        self.repartition();
+        if self.shards.len() == 1 {
+            self.shards[0].step(now);
+        } else {
+            let shards = &mut self.shards;
+            std::thread::scope(|scope| {
+                for shard in shards.iter_mut() {
+                    scope.spawn(move || shard.step(now));
+                }
+            });
+        }
+        self.epoch_idx += 1;
+    }
+
+    /// Close the run on every shard (queue leftovers rejected, in-flight
+    /// work drained — see [`EpochDriver::finish`]).
+    pub fn finish(&mut self, horizon: f64) {
+        for shard in &mut self.shards {
+            let Shard {
+                driver, backend, ..
+            } = shard;
+            driver.finish(backend, horizon);
+        }
+    }
+
+    /// Per-shard metrics (shard order = deployment order).
+    pub fn shard_metrics(&self, shard: usize) -> &Metrics {
+        &self.shards[shard].driver.metrics
+    }
+
+    /// Cross-shard aggregate, merged in fixed shard-index order
+    /// ([`Metrics::merge`]: counters sum exactly, horizon takes the max).
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut merged = Metrics::new();
+        for shard in &self.shards {
+            merged.merge(&shard.driver.metrics);
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Dftsp;
+    use crate::driver::{AnalyticBackend, ContinuousBackend, SPadPolicy, StalePolicy};
+    use crate::model::LlmSpec;
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::AllocationPolicy;
+
+    fn policy() -> DriverPolicy {
+        DriverPolicy {
+            stale: StalePolicy::BestCaseInfeasible,
+            s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+            allocation: AllocationPolicy::MinOnly,
+        }
+    }
+
+    fn two_quant_config() -> ShardedConfig {
+        // Same model, two quantizations: distinct deployments, so affinity
+        // binds; W4A16/ZQ-Local on BLOOM-3B admits only a <= 0.08.
+        ShardedConfig {
+            deployments: vec![
+                Deployment {
+                    model: LlmSpec::bloom_3b(),
+                    quant: quant::default_quant(),
+                },
+                Deployment {
+                    model: LlmSpec::bloom_3b(),
+                    quant: quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::ZqLocal)
+                        .unwrap(),
+                },
+            ],
+            cluster: ClusterSpec::paper_default(),
+            partition: PartitionPolicy::LoadProportional,
+            policy: policy(),
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            seed: 7,
+        }
+    }
+
+    fn analytic(cfg: ShardedConfig) -> ShardedDriver<(), AnalyticBackend> {
+        ShardedDriver::new(cfg, |_| AnalyticBackend, |_| Box::new(Dftsp::new())).unwrap()
+    }
+
+    #[test]
+    fn new_rejects_more_deployments_than_gpus() {
+        let mut cfg = two_quant_config();
+        cfg.cluster = ClusterSpec::new(cfg.cluster.gpu.clone(), 1);
+        let err = ShardedDriver::<(), _>::new(cfg, |_| AnalyticBackend, |_| {
+            Box::new(Dftsp::new()) as Box<dyn Scheduler + Send>
+        })
+        .err()
+        .expect("1 GPU cannot host 2 deployments");
+        assert_eq!(
+            err,
+            PartitionError::InsufficientGpus {
+                deployments: 2,
+                total_gpus: 1
+            }
+        );
+    }
+
+    #[test]
+    fn affinity_routes_to_the_named_deployment() {
+        let mut sd = analytic(two_quant_config());
+        let mut b = RequestBuilder::new();
+        // Low accuracy requirement: both deployments admit it, so affinity
+        // decides.
+        let s = sd.offer(b.build(0.0, 128, 128, 2.0, 0.05), (), 1);
+        assert_eq!(s, 1);
+        assert_eq!(sd.shards()[1].driver.queue_len(), 1);
+        assert_eq!(sd.shards()[0].driver.queue_len(), 0);
+        let s = sd.offer(b.build(0.0, 128, 128, 2.0, 0.05), (), 0);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn inadmissible_affinity_spills_to_feasible_shard() {
+        let mut sd = analytic(two_quant_config());
+        let mut b = RequestBuilder::new();
+        // a=0.5: W4A16/ZQ-Local (affinity 1) cannot admit it; W8A16/GPTQ
+        // can — the request must spill to shard 0, not starve on shard 1.
+        let s = sd.offer(b.build(0.0, 128, 128, 2.0, 0.5), (), 1);
+        assert_eq!(s, 0, "spill-over to the feasible deployment");
+        // a=0.99: nobody admits it — affinity shard keeps it so the driver
+        // rejects it and accounting closes.
+        let s = sd.offer(b.build(0.0, 128, 128, 2.0, 0.99), (), 1);
+        assert_eq!(s, 1);
+        sd.step_epoch(0.0);
+        sd.finish(2.0);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 2);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+        assert!(m.dropped >= 1, "the un-admittable request was rejected");
+    }
+
+    #[test]
+    fn same_deployment_shards_balance_by_queue_depth() {
+        // Three identical deployments: routing ignores the affinity index
+        // and balances by queue depth, ties to the lowest shard index.
+        let dep = Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        };
+        let cfg = ShardedConfig {
+            deployments: vec![dep.clone(), dep.clone(), dep],
+            cluster: ClusterSpec::paper_default(),
+            partition: PartitionPolicy::Equal,
+            policy: policy(),
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            seed: 3,
+        };
+        let mut sd = analytic(cfg);
+        let mut b = RequestBuilder::new();
+        let picks: Vec<usize> = (0..6)
+            .map(|_| sd.offer(b.build(0.0, 128, 128, 2.0, 0.1), (), 0))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2], "round-robin by depth");
+    }
+
+    #[test]
+    fn repartition_follows_demand_and_respects_min_one() {
+        let mut sd = analytic(two_quant_config());
+        assert_eq!(sd.partition(), &[10, 10], "idle start is near-equal");
+        let mut b = RequestBuilder::new();
+        for _ in 0..30 {
+            sd.offer(b.build(0.0, 256, 256, 1.9, 0.05), (), 0);
+        }
+        sd.offer(b.build(0.0, 128, 128, 1.9, 0.05), (), 1);
+        sd.step_epoch(0.0);
+        let p = sd.partition();
+        assert_eq!(p.iter().sum::<usize>(), 20);
+        assert!(p[0] > p[1], "loaded shard takes the headroom: {p:?}");
+        assert!(p[1] >= 1, "min-1 floor holds: {p:?}");
+        sd.finish(2.0);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 31);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+    }
+
+    #[test]
+    fn parallel_step_is_deterministic() {
+        let run = || {
+            let mut sd = analytic(two_quant_config());
+            let mut b = RequestBuilder::new();
+            for e in 0..4u64 {
+                let now = e as f64 * 2.0;
+                for i in 0..12 {
+                    sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), (i % 2) as usize);
+                }
+                sd.step_epoch(now);
+            }
+            sd.finish(8.0);
+            (
+                sd.merged_metrics(),
+                sd.shard_metrics(0).clone(),
+                sd.shard_metrics(1).clone(),
+            )
+        };
+        let (am, a0, a1) = run();
+        let (bm, b0, b1) = run();
+        assert_eq!(am, bm, "merged metrics bit-identical across runs");
+        assert_eq!(a0, b0);
+        assert_eq!(a1, b1);
+        assert!(am.offered == 48);
+    }
+
+    #[test]
+    fn continuous_backend_shards_conserve_and_keep_kv_floors() {
+        let cfg = two_quant_config();
+        let mut sd: ShardedDriver<(), ContinuousBackend> = ShardedDriver::new(
+            cfg,
+            ContinuousBackend::new,
+            |_| Box::new(Dftsp::new()),
+        )
+        .unwrap();
+        let mut b = RequestBuilder::new();
+        for e in 0..4u64 {
+            let now = e as f64 * 2.0;
+            for i in 0..8 {
+                sd.offer(b.build(now + 0.2 * i as f64, 256, 256, 1.9, 0.05), (), 0);
+            }
+            sd.offer(b.build(now, 128, 128, 1.9, 0.05), (), 1);
+            sd.step_epoch(now);
+            assert_eq!(sd.partition().iter().sum::<usize>(), 20);
+        }
+        sd.finish(8.0);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 36);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+        for s in sd.shards() {
+            assert_eq!(s.backend.in_flight(), 0, "finish drains every shard");
+            assert_eq!(s.backend.ledger().in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn apply_floors_preserves_total_and_raises_deficits() {
+        assert_eq!(apply_floors(vec![8, 1, 1], &[1, 3, 1]), vec![6, 3, 1]);
+        assert_eq!(apply_floors(vec![5, 5], &[1, 1]), vec![5, 5]);
+        // Donor choice: largest surplus first, ties to the lowest index.
+        assert_eq!(apply_floors(vec![4, 4, 0], &[1, 1, 2]), vec![3, 3, 2]);
+        // Floors exactly exhaust the pool.
+        assert_eq!(apply_floors(vec![3, 0, 0], &[1, 1, 1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn shard_streams_split_deterministically() {
+        assert_eq!(shard_stream(42, 0), 42, "shard 0 keeps the run stream");
+        assert_ne!(shard_stream(42, 1), shard_stream(42, 2));
+        assert_eq!(shard_stream(42, 1), shard_stream(42, 1));
+        assert_ne!(shard_stream(42, 1), shard_stream(43, 1));
+    }
+}

@@ -37,6 +37,14 @@
 //! layer's continuous mode does the same on the real engine). See the
 //! `driver::continuous` module docs for the state machine.
 //!
+//! Above the single-pool loop sits [`driver::ShardedDriver`]: one
+//! `EpochDriver` per GPU partition behind a dispatch layer that routes
+//! arrivals by deployment affinity and re-balances GPU headroom between
+//! epochs (`[cluster] shards` / `--shards`; `serving::serve_sharded` is the
+//! live counterpart, one engine instance per shard). See the
+//! `driver::sharded` module docs for the routing and re-partitioning state
+//! machines.
+//!
 //! The runtime engine comes in two flavours behind one API: a pure-Rust CPU
 //! engine (default — zero external crates) and PJRT execution of the AOT
 //! HLO programs (feature `"pjrt"`). See `runtime` and README.md.

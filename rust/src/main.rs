@@ -34,7 +34,7 @@ fn main() {
                 "usage: edgellm <simulate|compare|serve|catalog> [--config FILE] \
                  [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
                  [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
-                 [--workers N] [--stats]"
+                 [--workers N] [--shards N] [--partition equal|load-proportional] [--stats]"
             );
             2
         }
@@ -68,10 +68,25 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     if let Some(workers) = args.get("workers") {
         cfg.scheduler.workers = workers.parse().map_err(|_| "bad --workers")?;
     }
+    if let Some(shards) = args.get("shards") {
+        cfg.shards = shards.parse().map_err(|_| "bad --shards")?;
+        if cfg.shards == 0 {
+            return Err("--shards must be >= 1".into());
+        }
+        if cfg.shards > cfg.cluster.num_gpus {
+            return Err(format!(
+                "--shards {} exceeds the {}-GPU cluster (every shard needs a GPU)",
+                cfg.shards, cfg.cluster.num_gpus
+            ));
+        }
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = edgellm::coordinator::PartitionPolicy::parse(p)?;
+    }
     Ok(cfg)
 }
 
-fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler>, String> {
+fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler + Send>, String> {
     match name.to_ascii_lowercase().as_str() {
         "dftsp" => Ok(Box::new(Dftsp::with_config(cfg))),
         "stb" => Ok(Box::new(StaticBatching::new())),
@@ -89,7 +104,8 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut sched = match make_scheduler(&args.str_or("scheduler", "dftsp"), cfg.scheduler) {
+    let sched_name = args.str_or("scheduler", "dftsp");
+    let mut sched = match make_scheduler(&sched_name, cfg.scheduler) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -98,7 +114,7 @@ fn cmd_simulate(args: &Args) -> i32 {
     };
     let show_stats = args.flag("stats");
     println!(
-        "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}  batching {}",
+        "model {}  quant {}  λ={} req/s  {} epochs × {} s  cluster {}×{}  batching {}{}",
         cfg.model.name,
         cfg.quant.label(),
         cfg.workload.arrival_rate,
@@ -106,9 +122,21 @@ fn cmd_simulate(args: &Args) -> i32 {
         cfg.epoch.duration,
         cfg.cluster.num_gpus,
         cfg.cluster.gpu.name,
-        cfg.batching
+        cfg.batching,
+        if cfg.shards > 1 {
+            format!("  shards {} ({})", cfg.shards, cfg.partition)
+        } else {
+            String::new()
+        }
     );
-    let m = sim::run(&cfg, sched.as_mut());
+    let m = if cfg.shards > 1 {
+        // One fresh scheduler per shard (validated above).
+        sim::run_sharded(&cfg, |_| {
+            make_scheduler(&sched_name, cfg.scheduler).expect("scheduler name already validated")
+        })
+    } else {
+        sim::run(&cfg, sched.as_mut())
+    };
     print!("{}", m.report(sched.name()));
     if show_stats {
         print!("{}", m.search_report());
@@ -125,14 +153,34 @@ fn cmd_compare(args: &Args) -> i32 {
         }
     };
     let show_stats = args.flag("stats");
-    let results = sim::compare(
-        &cfg,
-        vec![
-            Box::new(Dftsp::with_config(cfg.scheduler)),
-            Box::new(StaticBatching::new()),
-            Box::new(NoBatching::new()),
-        ],
-    );
+    let results = if cfg.shards > 1 {
+        // Sharded comparison: each policy gets one fresh scheduler per
+        // shard, same seeded workload (run_sharded regenerates it).
+        ["dftsp", "stb", "nob"]
+            .iter()
+            .map(|name| {
+                // One construction up front supplies the display name; the
+                // closure then builds the real per-shard instances.
+                let display = make_scheduler(name, cfg.scheduler)
+                    .expect("known scheduler names")
+                    .name()
+                    .to_string();
+                let m = sim::run_sharded(&cfg, |_| {
+                    make_scheduler(name, cfg.scheduler).expect("known scheduler names")
+                });
+                (display, m)
+            })
+            .collect()
+    } else {
+        sim::compare(
+            &cfg,
+            vec![
+                Box::new(Dftsp::with_config(cfg.scheduler)),
+                Box::new(StaticBatching::new()),
+                Box::new(NoBatching::new()),
+            ],
+        )
+    };
     let mut t = Table::new(&[
         "scheduler",
         "throughput (req/s)",
@@ -195,6 +243,73 @@ fn cmd_serve(args: &Args) -> i32 {
     let show_stats = args.flag("stats");
     let epoch_s = server_cfg.epoch.duration;
     println!("batching mode: {}", server_cfg.batching);
+
+    // Sharded serving: N servers in this process, each on its own thread
+    // with its own engine instance (disjoint KV arenas); clients round-robin
+    // over the shard handles.
+    let shards = args.u64_or("shards", 1) as usize;
+    if shards == 0 {
+        eprintln!("--shards must be >= 1");
+        return 2;
+    }
+    if args.get("partition").is_some() {
+        // Serving shards each own a whole engine; GPU re-partitioning is a
+        // simulate/compare knob. Refuse rather than silently ignore.
+        eprintln!("--partition applies to simulate/compare (serving shards each own their engine)");
+        return 2;
+    }
+    if shards > 1 {
+        drop(engine); // validated loadable; each shard loads its own copy
+        if args.get("listen").is_some() {
+            eprintln!("--listen is not supported with --shards (route via the handles instead)");
+            return 2;
+        }
+        let horizon = epochs as f64 * epoch_s;
+        let base_cfg = server_cfg.clone();
+        let artifacts_dir = artifacts.clone();
+        let per_shard = edgellm::serving::serve_sharded(
+            shards,
+            epochs,
+            |shard| {
+                let engine = Engine::load(Path::new(&artifacts_dir), &quant_label)
+                    .expect("engine loaded once already");
+                let cfg = ServerConfig {
+                    seed: base_cfg.seed ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    ..base_cfg.clone()
+                };
+                EpochServer::new(engine, cfg, Box::new(Dftsp::with_config(base_cfg.scheduler)))
+            },
+            |handles| {
+                let joins: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let tx = handles[(c as usize) % handles.len()].clone();
+                        std::thread::spawn(move || {
+                            run_client(tx, c, seed, rate, clients, horizon)
+                        })
+                    })
+                    .collect();
+                let mut total_sent = 0u64;
+                let mut total_ok = 0usize;
+                for j in joins {
+                    if let Ok((sent, ok)) = j.join() {
+                        total_sent += sent;
+                        total_ok += ok;
+                    }
+                }
+                println!("clients: sent {total_sent}, completed-in-deadline {total_ok}");
+            },
+        );
+        for (i, m) in per_shard.iter().enumerate() {
+            print!("{}", m.report(&format!("shard {i} (DFTSP)")));
+        }
+        let merged = edgellm::serving::merge_shard_metrics(&per_shard);
+        print!("{}", merged.report(&format!("merged × {shards} shards (DFTSP)")));
+        if show_stats {
+            print!("{}", merged.search_report());
+        }
+        return 0;
+    }
+
     let scheduler = Box::new(Dftsp::with_config(server_cfg.scheduler));
     let mut server = EpochServer::new(engine, server_cfg, scheduler);
     let handle = server.handle();
@@ -213,33 +328,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let joins: Vec<_> = (0..clients)
         .map(|c| {
             let tx = handle.clone();
-            std::thread::spawn(move || {
-                let mut rng = edgellm::util::rng::Rng::new(seed ^ (c * 7919));
-                let (rtx, rrx) = std::sync::mpsc::channel();
-                let mut sent = 0u64;
-                let mut done = Vec::new();
-                let t0 = std::time::Instant::now();
-                while t0.elapsed().as_secs_f64() < horizon * 0.8 {
-                    let wait = rng.exponential(rate / clients as f64);
-                    std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(1.0)));
-                    let plen = rng.int_range(4, 48) as usize;
-                    let prompt: Vec<i32> =
-                        (0..plen).map(|_| rng.below(512) as i32).collect();
-                    let _ = tx.send(ServeRequest {
-                        prompt,
-                        output_tokens: rng.int_range(4, 32) as u32,
-                        latency_req: rng.uniform(1.0, 4.0),
-                        accuracy_req: rng.uniform(0.0, 0.6),
-                        respond: rtx.clone(),
-                    });
-                    sent += 1;
-                }
-                drop(rtx);
-                while let Ok(resp) = rrx.recv() {
-                    done.push(resp);
-                }
-                (sent, done)
-            })
+            std::thread::spawn(move || run_client(tx, c, seed, rate, clients, horizon))
         })
         .collect();
 
@@ -251,16 +340,51 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut total_sent = 0;
     let mut total_ok = 0;
     for j in joins {
-        if let Ok((sent, done)) = j.join() {
+        if let Ok((sent, ok)) = j.join() {
             total_sent += sent;
-            total_ok += done
-                .iter()
-                .filter(|r| r.outcome == edgellm::serving::ServeOutcome::Completed)
-                .count();
+            total_ok += ok;
         }
     }
     println!("clients: sent {total_sent}, completed-in-deadline {total_ok}");
     0
+}
+
+/// One Poisson-ish client: submit requests through `tx` for 80% of the
+/// horizon, then count in-deadline completions. Shared by the single-pool
+/// and sharded serve paths (the latter hands each client one shard's
+/// handle, round-robin).
+fn run_client(
+    tx: edgellm::serving::ServeHandle,
+    c: u64,
+    seed: u64,
+    rate: f64,
+    clients: u64,
+    horizon: f64,
+) -> (u64, usize) {
+    let mut rng = edgellm::util::rng::Rng::new(seed ^ (c * 7919));
+    let (rtx, rrx) = std::sync::mpsc::channel();
+    let mut sent = 0u64;
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < horizon * 0.8 {
+        let wait = rng.exponential(rate / clients.max(1) as f64);
+        std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(1.0)));
+        let plen = rng.int_range(4, 48) as usize;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(512) as i32).collect();
+        let _ = tx.send(ServeRequest {
+            prompt,
+            output_tokens: rng.int_range(4, 32) as u32,
+            latency_req: rng.uniform(1.0, 4.0),
+            accuracy_req: rng.uniform(0.0, 0.6),
+            respond: rtx.clone(),
+        });
+        sent += 1;
+    }
+    drop(rtx);
+    let ok = rrx
+        .iter()
+        .filter(|r| r.outcome == edgellm::serving::ServeOutcome::Completed)
+        .count();
+    (sent, ok)
 }
 
 fn cmd_catalog() -> i32 {

@@ -102,6 +102,32 @@ impl Metrics {
         self.search.merge(stats);
     }
 
+    /// Fold another run's (or shard's) metrics into this one — the
+    /// cross-shard aggregation the sharded driver reports merged results
+    /// through. Every counter is an exact integer (or an exactly-mergeable
+    /// accumulator: Welford moments, histogram buckets), so merging N
+    /// per-shard metrics in shard-index order is deterministic and the
+    /// merged totals equal the per-shard sums bit-exactly
+    /// (`tests/proptest_sharded.rs`). `horizon` takes the max, not the sum:
+    /// shards cover the same wall span concurrently, so summing would
+    /// deflate merged throughput by the shard count.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.offered += other.offered;
+        self.scheduled += other.scheduled;
+        self.completed_in_deadline += other.completed_in_deadline;
+        self.completed_late += other.completed_late;
+        self.dropped += other.dropped;
+        self.latency.merge(&other.latency);
+        self.batch_sizes.merge(&other.batch_sizes);
+        self.queue_depth.merge(&other.queue_depth);
+        self.search.merge(&other.search);
+        self.schedule_calls += other.schedule_calls;
+        self.epoch_overruns += other.epoch_overruns;
+        self.horizon = self.horizon.max(other.horizon);
+        self.admission_latency.merge(&other.admission_latency);
+        self.inflight_occupancy.merge(&other.inflight_occupancy);
+    }
+
     /// Mean scheduler wall time per `schedule` call in seconds (0 when the
     /// driver never invoked a scheduler).
     pub fn mean_schedule_wall_s(&self) -> f64 {
@@ -338,6 +364,39 @@ mod tests {
         assert!(r.contains("unit"));
         assert!(r.contains("throughput"));
         assert!(r.contains("p95"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_horizon() {
+        let mut a = Metrics::new();
+        a.record_offered(3);
+        a.record_outcome(Outcome::CompletedInDeadline, 1.0);
+        a.record_outcome(Outcome::Dropped, 0.0);
+        a.record_schedule(2, &SearchStats { nodes_visited: 7, ..Default::default() });
+        a.horizon = 10.0;
+        let mut b = Metrics::new();
+        b.record_offered(2);
+        b.record_outcome(Outcome::CompletedLate, 3.0);
+        b.record_schedule(1, &SearchStats { nodes_visited: 5, ..Default::default() });
+        b.record_admission(0.5);
+        b.horizon = 10.0;
+        a.merge(&b);
+        assert_eq!(a.offered, 5);
+        assert_eq!(a.scheduled, 3);
+        assert_eq!(a.completed_in_deadline, 1);
+        assert_eq!(a.completed_late, 1);
+        assert_eq!(a.dropped, 1);
+        assert_eq!(a.search.nodes_visited, 12);
+        assert_eq!(a.schedule_calls, 2);
+        assert_eq!(a.latency.count(), 1);
+        assert_eq!(a.admission_latency.count(), 1);
+        // Concurrent shards cover the same span: horizon is the max.
+        assert!((a.horizon - 10.0).abs() < 1e-12);
+        assert!((a.throughput() - 0.1).abs() < 1e-12);
+        // Merging an empty Metrics is the identity.
+        let snapshot = a.clone();
+        a.merge(&Metrics::new());
+        assert_eq!(a, snapshot);
     }
 
     #[test]

@@ -14,8 +14,10 @@
 
 pub mod net;
 pub mod server;
+pub mod sharded;
 
 pub use net::{parse_request_line, render_response_line, spawn_listener};
 pub use server::{
     EpochServer, ServeHandle, ServeOutcome, ServeRequest, ServeResponse, ServerConfig,
 };
+pub use sharded::{merge_shard_metrics, serve_sharded};

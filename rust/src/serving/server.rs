@@ -108,7 +108,9 @@ impl ServeHandle {
     }
 }
 
-/// Server configuration.
+/// Server configuration. `Clone` so sharded serving can stamp per-shard
+/// variants (distinct seeds) from one base config.
+#[derive(Clone)]
 pub struct ServerConfig {
     /// Epoch protocol. The tiny model serves sub-second epochs comfortably.
     pub epoch: crate::coordinator::EpochParams,

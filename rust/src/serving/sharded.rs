@@ -1,0 +1,155 @@
+//! Sharded serving: N independent [`EpochServer`]s in one process, each on
+//! its own OS thread with its own engine instance — and therefore its own
+//! KV arenas, scratch buffers and epoch loop — behind a set of
+//! [`ServeHandle`]s the caller routes client traffic over.
+//!
+//! This is the live counterpart of `driver::sharded`: the simulator's
+//! dispatch layer shares one address space and steps shards in lockstep,
+//! while serving shards run free on the wall clock (each sleeps to its own
+//! epoch boundaries), so the dispatch here is thread-per-shard rather than
+//! `thread::scope`-per-step. Engines are created *inside* each shard's
+//! thread — PJRT handles are not `Send`, and the host engine's arenas stay
+//! disjoint by construction (nothing is shared but the process).
+//!
+//! Per-shard [`Metrics`] are returned in shard order; merge them with
+//! [`Metrics::merge`] for the cross-shard aggregate.
+
+use crate::metrics::Metrics;
+use crate::serving::server::{EpochServer, ServeHandle};
+
+/// Run `shards` epoch servers for `epochs` epochs each, concurrently.
+///
+/// `make_server` is called once per shard *on that shard's thread* (build
+/// the engine there; it never crosses threads). Once every shard is up,
+/// `drive` receives the shard handles (index = shard) on the calling thread
+/// — submit client traffic through them however you route it (round-robin,
+/// per-model affinity, …); the call returns when `drive` has returned and
+/// every shard finished its run.
+///
+/// Panics in a shard thread propagate: a dead shard is a failed run, not a
+/// silent capacity loss.
+pub fn serve_sharded<F, C>(shards: usize, epochs: u64, make_server: F, drive: C) -> Vec<Metrics>
+where
+    F: Fn(usize) -> EpochServer + Sync,
+    C: FnOnce(&[ServeHandle]),
+{
+    assert!(shards >= 1, "need at least one shard");
+    let mut per_shard: Vec<Option<Metrics>> = (0..shards).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let (handle_tx, handle_rx) = std::sync::mpsc::channel::<(usize, ServeHandle)>();
+        let make = &make_server;
+        let joins: Vec<_> = (0..shards)
+            .map(|i| {
+                let handle_tx = handle_tx.clone();
+                scope.spawn(move || {
+                    let mut server = make(i);
+                    handle_tx
+                        .send((i, server.handle()))
+                        .expect("collector outlives shard startup");
+                    drop(handle_tx);
+                    server.run_for(epochs);
+                    server.metrics().clone()
+                })
+            })
+            .collect();
+        drop(handle_tx);
+        let mut handles: Vec<(usize, ServeHandle)> = handle_rx.iter().take(shards).collect();
+        handles.sort_by_key(|(i, _)| *i);
+        let handles: Vec<ServeHandle> = handles.into_iter().map(|(_, h)| h).collect();
+        assert_eq!(handles.len(), shards, "every shard came up");
+        drive(&handles);
+        // Handles drop here; shards finish their remaining epochs and drain.
+        drop(handles);
+        for (i, join) in joins.into_iter().enumerate() {
+            per_shard[i] = Some(join.join().expect("shard server thread panicked"));
+        }
+    });
+    per_shard
+        .into_iter()
+        .map(|m| m.expect("every shard reports metrics"))
+        .collect()
+}
+
+/// Merge per-shard metrics in shard order (sums counters exactly, maxes the
+/// horizon — see [`Metrics::merge`]).
+pub fn merge_shard_metrics(per_shard: &[Metrics]) -> Metrics {
+    let mut merged = Metrics::new();
+    for m in per_shard {
+        merged.merge(m);
+    }
+    merged
+}
+
+/// Host-engine tests (the PJRT feature has no in-memory test engine).
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Dftsp, EpochParams};
+    use crate::runtime::host::test_engine;
+    use crate::serving::server::{ServeOutcome, ServeRequest, ServerConfig};
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn two_shards_serve_concurrently_with_disjoint_engines() {
+        let want = test_engine()
+            .generate_greedy(&[vec![5, 6, 7]], 4, None)
+            .unwrap()[0]
+            .clone();
+        let make = |i: usize| {
+            let cfg = ServerConfig {
+                epoch: EpochParams {
+                    duration: 0.1,
+                    t_u: 0.01,
+                    t_d: 0.01,
+                },
+                seed: 7 + i as u64,
+                ..Default::default()
+            };
+            EpochServer::new(test_engine(), cfg, Box::new(Dftsp::new()))
+        };
+        let responses = std::sync::Mutex::new(Vec::new());
+        // Generous epoch budget: the requests are served in the first
+        // boundary or two; the rest of the run idles. This keeps the test
+        // robust on loaded CI machines where shard startup can straddle a
+        // few 100 ms epochs.
+        let per_shard = serve_sharded(2, 20, make, |handles| {
+            assert_eq!(handles.len(), 2);
+            // One request to each shard (round-robin routing).
+            let mut rxs = Vec::new();
+            for h in handles {
+                let (rtx, rrx) = channel();
+                h.send(ServeRequest {
+                    prompt: vec![5, 6, 7],
+                    output_tokens: 4,
+                    latency_req: 10.0,
+                    accuracy_req: 0.2,
+                    respond: rtx,
+                })
+                .expect("shard accepts work");
+                rxs.push(rrx);
+            }
+            for rrx in rxs {
+                responses
+                    .lock()
+                    .unwrap()
+                    .push(rrx.recv().expect("shard answered"));
+            }
+        });
+        let responses = responses.into_inner().unwrap();
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert_eq!(r.outcome, ServeOutcome::Completed);
+            assert_eq!(r.tokens, want, "shards serve identical models identically");
+        }
+        assert_eq!(per_shard.len(), 2);
+        let merged = merge_shard_metrics(&per_shard);
+        assert_eq!(merged.offered, 2);
+        assert_eq!(
+            merged.offered,
+            merged.completed_in_deadline + merged.completed_late + merged.dropped
+        );
+        assert_eq!(merged.completed_in_deadline, 2);
+        // Each shard saw exactly one request — the router split the load.
+        assert!(per_shard.iter().all(|m| m.offered == 1));
+    }
+}

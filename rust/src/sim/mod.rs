@@ -13,10 +13,10 @@
 //! toward throughput — the paper's headline metric.
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::{EpochParams, Scheduler, SchedulerConfig};
+use crate::coordinator::{Deployment, EpochParams, PartitionPolicy, Scheduler, SchedulerConfig};
 use crate::driver::{
     run_epochs, AnalyticBackend, BatchingMode, ContinuousBackend, DriverPolicy, EpochDriver,
-    InstanceTemplate, SPadPolicy, SimClock, StalePolicy,
+    InstanceTemplate, SPadPolicy, ShardedConfig, ShardedDriver, SimClock, StalePolicy,
 };
 use crate::metrics::Metrics;
 use crate::model::{CostModel, LlmSpec};
@@ -47,6 +47,14 @@ pub struct SimConfig {
     /// the simulator itself is scheduler-agnostic, but the CLI uses this to
     /// construct the policy it passes in (e.g. DFTSP's parallel search).
     pub scheduler: SchedulerConfig,
+    /// GPU-pool shards (scenario TOML `[cluster] shards`, CLI `--shards`):
+    /// 1 = the paper's single pool (`run`); N > 1 = one `EpochDriver` per
+    /// GPU partition behind the sharded dispatch layer (`run_sharded`).
+    pub shards: usize,
+    /// How the sharded dispatch layer re-partitions GPUs between epochs
+    /// (`[cluster] partition_policy`, CLI `--partition`). Ignored at
+    /// `shards = 1`.
+    pub partition: PartitionPolicy,
 }
 
 impl SimConfig {
@@ -65,6 +73,8 @@ impl SimConfig {
             s_pad: None,
             batching: BatchingMode::Epoch,
             scheduler: SchedulerConfig::default(),
+            shards: 1,
+            partition: PartitionPolicy::LoadProportional,
         }
     }
 }
@@ -183,6 +193,99 @@ pub fn run_continuous(config: &SimConfig, scheduler: &mut dyn Scheduler) -> Metr
 
     driver.finish(&mut backend, config.epochs as f64 * duration);
     driver.into_metrics()
+}
+
+/// The shard layout a scenario maps to: one deployment per shard, all
+/// hosting the scenario's (model, quant) pair — pure data-parallel
+/// scale-out of the paper's single deployment. (Heterogeneous multi-model
+/// layouts construct [`ShardedDriver`] directly; see
+/// `tests/sharded_e2e.rs`.)
+fn sharded_config_for(config: &SimConfig, shards: usize) -> ShardedConfig {
+    ShardedConfig {
+        deployments: (0..shards)
+            .map(|_| Deployment {
+                model: config.model.clone(),
+                quant: config.quant.clone(),
+            })
+            .collect(),
+        cluster: config.cluster.clone(),
+        partition: config.partition,
+        policy: DriverPolicy {
+            stale: StalePolicy::BestCaseInfeasible,
+            s_pad: match config.s_pad {
+                Some(s) => SPadPolicy::Fixed(s),
+                None => SPadPolicy::LongestQueued { fallback: 512 },
+            },
+            allocation: AllocationPolicy::MinOnly,
+        },
+        epoch: config.epoch.clone(),
+        radio: config.radio.clone(),
+        channel: config.channel.clone(),
+        // The same stream `driver_for` seeds: shard 0 inherits it verbatim,
+        // which is what makes `shards = 1` bit-identical to `run`.
+        seed: config.seed ^ 0xC0FFEE,
+    }
+}
+
+/// Run one scenario through the sharded dispatch layer (`config.shards`
+/// partitions, `config.partition` policy), one fresh scheduler per shard
+/// from `make_scheduler`. Intake mirrors [`run`] exactly — same seeded
+/// workload, same per-mode aggregation rule — and requests carry a
+/// deployment affinity of `id % shards` (deployments are identical here, so
+/// routing balances by queue depth regardless). With `shards = 1` the
+/// result is bit-identical to [`run`] (`tests/sharded_e2e.rs` pins this;
+/// `tests/proptest_sharded.rs` fuzzes it).
+pub fn run_sharded(
+    config: &SimConfig,
+    mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send>,
+) -> Metrics {
+    let shards = config.shards.max(1);
+    let scfg = sharded_config_for(config, shards);
+    let duration = config.epoch.duration;
+    let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
+    let affinity = |id: u64| (id % shards as u64) as usize;
+    match config.batching {
+        BatchingMode::Epoch => {
+            let mut sd: ShardedDriver<(), AnalyticBackend> =
+                ShardedDriver::new(scfg, |_| AnalyticBackend, &mut make_scheduler)
+                    .expect("shards <= GPUs (validated by the scenario loader)");
+            // Fig. 2 aggregation: epoch e's window is offered at e+1.
+            let mut window_start = 0.0;
+            for e in 0..config.epochs as u64 {
+                let now = e as f64 * duration;
+                for r in gen.arrivals_between(window_start, now) {
+                    let aff = affinity(r.id);
+                    sd.offer(r, (), aff);
+                }
+                window_start = now;
+                sd.step_epoch(now);
+            }
+            if config.epochs > 0 {
+                let last_boundary = (config.epochs - 1) as f64 * duration;
+                for r in gen.arrivals_between(window_start, last_boundary + duration) {
+                    let aff = affinity(r.id);
+                    sd.offer(r, (), aff);
+                }
+            }
+            sd.finish(config.epochs as f64 * duration);
+            sd.merged_metrics()
+        }
+        BatchingMode::Continuous => {
+            let mut sd: ShardedDriver<(), ContinuousBackend> =
+                ShardedDriver::new(scfg, ContinuousBackend::new, &mut make_scheduler)
+                    .expect("shards <= GPUs (validated by the scenario loader)");
+            for e in 0..config.epochs as u64 {
+                let now = e as f64 * duration;
+                for r in gen.arrivals_between(now, now + duration) {
+                    let aff = affinity(r.id);
+                    sd.offer(r, (), aff);
+                }
+                sd.step_epoch(now);
+            }
+            sd.finish(config.epochs as f64 * duration);
+            sd.merged_metrics()
+        }
+    }
 }
 
 /// Convenience: run the same scenario under several schedulers (fresh
@@ -329,6 +432,42 @@ mod tests {
         // epoch of queueing before T_U even starts).
         assert!(c.mean_admission_latency() < cfg_epoch.epoch.duration);
         assert_eq!(e.offered, c.offered, "identical seeded workloads");
+    }
+
+    #[test]
+    fn sharded_one_shard_matches_unsharded_bit_exactly() {
+        // The headline parity contract, in both batching modes: shards = 1
+        // through the dispatch layer is the unsharded driver, bit for bit.
+        for batching in [BatchingMode::Epoch, BatchingMode::Continuous] {
+            let mut cfg = quick_config(35.0, 10);
+            cfg.batching = batching;
+            cfg.shards = 1;
+            let unsharded = run(&cfg, &mut Dftsp::new());
+            let sharded = run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+            assert_eq!(unsharded, sharded, "{batching:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_runs_conserve_and_stay_deterministic() {
+        for batching in [BatchingMode::Epoch, BatchingMode::Continuous] {
+            let mut cfg = quick_config(40.0, 8);
+            cfg.batching = batching;
+            cfg.shards = 4;
+            let a = run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+            let b = run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+            assert_eq!(a, b, "{batching:?}: sharded runs are deterministic");
+            assert!(a.offered > 0);
+            assert_eq!(
+                a.offered,
+                a.completed_in_deadline + a.completed_late + a.dropped,
+                "{batching:?}: conservation through the dispatch layer"
+            );
+            // Same seeded workload as the unsharded run.
+            cfg.shards = 1;
+            let solo = run(&cfg, &mut Dftsp::new());
+            assert_eq!(solo.offered, a.offered, "{batching:?}: identical arrivals");
+        }
     }
 
     #[test]

@@ -7,12 +7,20 @@
 //! fixture and passes; commit the generated `tests/golden/*.json` files.
 //! Subsequent runs compare against the committed fixtures.
 
-use edgellm::coordinator::Dftsp;
+use edgellm::coordinator::{Dftsp, SchedulerConfig};
 use edgellm::driver::BatchingMode;
 use edgellm::metrics::Metrics;
 use edgellm::sim::{self, SimConfig};
 use edgellm::util::json::Json;
 use std::path::PathBuf;
+
+/// The fixtures freeze search-*effort* counters, which legitimately differ
+/// between the sequential and parallel d-pool searches (schedules don't).
+/// Pin the sequential reference so the fixtures hold under CI's
+/// `SCHED_WORKERS` matrix.
+fn sequential_dftsp() -> Dftsp {
+    Dftsp::with_config(SchedulerConfig { workers: 0 })
+}
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
@@ -75,7 +83,7 @@ fn table1_config() -> SimConfig {
 
 #[test]
 fn golden_epoch_mode_dftsp() {
-    let m = sim::run(&table1_config(), &mut Dftsp::new());
+    let m = sim::run(&table1_config(), &mut sequential_dftsp());
     assert!(m.offered > 0 && m.completed_in_deadline > 0, "run not degenerate");
     check_or_bless("epoch_dftsp_table1", &m);
 }
@@ -84,7 +92,19 @@ fn golden_epoch_mode_dftsp() {
 fn golden_continuous_mode_dftsp() {
     let mut cfg = table1_config();
     cfg.batching = BatchingMode::Continuous;
-    let m = sim::run(&cfg, &mut Dftsp::new());
+    let m = sim::run(&cfg, &mut sequential_dftsp());
     assert!(m.offered > 0 && m.completed_in_deadline > 0, "run not degenerate");
     check_or_bless("continuous_dftsp_table1", &m);
+}
+
+/// The sharded dispatch layer must not drift either: freeze a 2-shard
+/// epoch-mode run of the same scenario (merged metrics, fixed shard-index
+/// merge order).
+#[test]
+fn golden_sharded_epoch_mode_dftsp() {
+    let mut cfg = table1_config();
+    cfg.shards = 2;
+    let m = sim::run_sharded(&cfg, |_| Box::new(sequential_dftsp()));
+    assert!(m.offered > 0 && m.completed_in_deadline > 0, "run not degenerate");
+    check_or_bless("sharded2_epoch_dftsp_table1", &m);
 }

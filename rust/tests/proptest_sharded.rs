@@ -1,0 +1,183 @@
+//! Property tests of the sharded dispatch layer.
+//!
+//! Seeded-case harness (no proptest crate offline): `PROPTEST_CASES`
+//! controls the case count (CI pins it to 64); failures report the
+//! offending seed for replay.
+
+use edgellm::cluster::ClusterSpec;
+use edgellm::coordinator::{Deployment, Dftsp, EpochParams, PartitionPolicy};
+use edgellm::driver::{
+    AnalyticBackend, BatchingMode, DriverPolicy, SPadPolicy, ShardedConfig, ShardedDriver,
+    StalePolicy,
+};
+use edgellm::model::LlmSpec;
+use edgellm::quant;
+use edgellm::request::RequestBuilder;
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::rng::Rng;
+use edgellm::wireless::{AllocationPolicy, ChannelParams, RadioParams};
+use edgellm::workload::WorkloadParams;
+
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn random_deployment(rng: &mut Rng) -> Deployment {
+    let quants = quant::catalog();
+    Deployment {
+        model: LlmSpec::bloom_3b(),
+        quant: quants[rng.below(quants.len() as u64) as usize].clone(),
+    }
+}
+
+/// PROPERTY: every arrival lands in exactly one shard (Σ per-shard offered
+/// equals the number of offers), the partition always sums to the pool and
+/// keeps min-1 per shard, and the merged `Metrics` totals equal the sum of
+/// the per-shard totals bit-exactly — for every counter the dispatch layer
+/// aggregates.
+#[test]
+fn prop_sharded_conservation_and_exact_merge() {
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(0x5AA_2D + seed);
+        let shards = rng.int_range(1, 4) as usize;
+        let total_gpus = rng.int_range(shards as u64, 24) as usize;
+        let cfg = ShardedConfig {
+            deployments: (0..shards).map(|_| random_deployment(&mut rng)).collect(),
+            cluster: ClusterSpec::new(ClusterSpec::paper_default().gpu, total_gpus),
+            partition: if rng.below(2) == 0 {
+                PartitionPolicy::Equal
+            } else {
+                PartitionPolicy::LoadProportional
+            },
+            policy: DriverPolicy {
+                stale: StalePolicy::BestCaseInfeasible,
+                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                allocation: AllocationPolicy::MinOnly,
+            },
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            seed,
+        };
+        let mut sd: ShardedDriver<(), AnalyticBackend> =
+            ShardedDriver::new(cfg, |_| AnalyticBackend, |_| Box::new(Dftsp::new())).unwrap();
+        let mut b = RequestBuilder::new();
+        let epochs = rng.int_range(2, 5);
+        let levels = [128u32, 256, 512];
+        let mut offered = 0u64;
+        for e in 0..epochs {
+            let now = e as f64 * 2.0;
+            for _ in 0..rng.int_range(0, 12) {
+                let req = b.build(
+                    now,
+                    levels[rng.below(3) as usize],
+                    levels[rng.below(3) as usize],
+                    rng.uniform(0.5, 3.0),
+                    rng.uniform(0.0, 1.0),
+                );
+                let affinity = rng.below(shards as u64) as usize;
+                let landed = sd.offer(req, (), affinity);
+                assert!(landed < shards, "seed {seed}: shard index in range");
+                offered += 1;
+            }
+            sd.step_epoch(now);
+            assert_eq!(
+                sd.partition().iter().sum::<usize>(),
+                total_gpus,
+                "seed {seed}: partition sums to the pool"
+            );
+            assert!(
+                sd.partition().iter().all(|&g| g >= 1),
+                "seed {seed}: min-1 GPU per shard"
+            );
+        }
+        sd.finish(epochs as f64 * 2.0);
+
+        // Exactly-one-shard landing: per-shard offered counts close the sum.
+        let per_shard: Vec<_> = (0..shards).map(|i| sd.shard_metrics(i).clone()).collect();
+        assert_eq!(
+            per_shard.iter().map(|m| m.offered).sum::<u64>(),
+            offered,
+            "seed {seed}: every arrival lands in exactly one shard"
+        );
+
+        // Bit-exact merge: merged totals == per-shard sums, counter by
+        // counter (u64 additions — no tolerance).
+        let merged = sd.merged_metrics();
+        let sum = |f: &dyn Fn(&edgellm::metrics::Metrics) -> u64| -> u64 {
+            per_shard.iter().map(|m| f(m)).sum()
+        };
+        assert_eq!(merged.offered, sum(&|m| m.offered), "seed {seed}");
+        assert_eq!(merged.scheduled, sum(&|m| m.scheduled), "seed {seed}");
+        assert_eq!(
+            merged.completed_in_deadline,
+            sum(&|m| m.completed_in_deadline),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.completed_late,
+            sum(&|m| m.completed_late),
+            "seed {seed}"
+        );
+        assert_eq!(merged.dropped, sum(&|m| m.dropped), "seed {seed}");
+        assert_eq!(
+            merged.schedule_calls,
+            sum(&|m| m.schedule_calls),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.latency.count(),
+            sum(&|m| m.latency.count()),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.search.nodes_visited,
+            sum(&|m| m.search.nodes_visited),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.search.subproblems,
+            sum(&|m| m.search.subproblems),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.offered,
+            merged.completed_in_deadline + merged.completed_late + merged.dropped,
+            "seed {seed}: merged accounting closes"
+        );
+    }
+}
+
+/// PROPERTY: the dispatch layer with one shard is bit-identical to the
+/// unsharded driver across random scenarios and both batching modes.
+#[test]
+fn prop_one_shard_parity_with_unsharded_driver() {
+    for seed in 0..cases(64).min(24) {
+        let mut rng = Rng::new(0x1_5AA_2D + seed);
+        let cfg = SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: rng.uniform(5.0, 80.0),
+                ..Default::default()
+            },
+            epochs: rng.int_range(2, 8) as usize,
+            seed,
+            batching: if rng.below(2) == 0 {
+                BatchingMode::Epoch
+            } else {
+                BatchingMode::Continuous
+            },
+            shards: 1,
+            ..SimConfig::paper_default()
+        };
+        let unsharded = sim::run(&cfg, &mut Dftsp::new());
+        let sharded = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(
+            unsharded, sharded,
+            "seed {seed} ({:?}): one-shard dispatch must be bit-identical",
+            cfg.batching
+        );
+    }
+}

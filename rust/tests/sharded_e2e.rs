@@ -1,0 +1,137 @@
+//! End-to-end tests of the sharded dispatch layer (acceptance criteria of
+//! the sharding issue):
+//!
+//! 1. `shards = 1` through `sim::run_sharded` is **bit-identical** to the
+//!    unsharded `EpochDriver` path (`sim::run`) in both batching modes.
+//! 2. On a two-deployment skewed trace, `LoadProportional` re-partitioning
+//!    strictly beats `Equal` on merged throughput — the dispatch layer's
+//!    reason to exist. (Scenario cross-checked numerically against the
+//!    toolchain-free mirror before commit: at 40 heavy req/epoch the loaded
+//!    shard serves ~9/epoch on its Equal half-pool vs ~17/epoch on the
+//!    ~19-GPU load-proportional partition, while the light shard's
+//!    1 req/epoch is served either way — a ~1.8× merged margin.)
+
+use edgellm::cluster::ClusterSpec;
+use edgellm::coordinator::{
+    Deployment, Dftsp, EpochParams, PartitionPolicy, Scheduler, SchedulerConfig,
+};
+use edgellm::driver::{
+    AnalyticBackend, BatchingMode, DriverPolicy, SPadPolicy, ShardedConfig, ShardedDriver,
+    StalePolicy,
+};
+use edgellm::metrics::Metrics;
+use edgellm::model::LlmSpec;
+use edgellm::quant;
+use edgellm::request::RequestBuilder;
+use edgellm::sim::{self, SimConfig};
+use edgellm::wireless::{AllocationPolicy, ChannelParams, RadioParams};
+use edgellm::workload::WorkloadParams;
+
+#[test]
+fn one_shard_is_bit_identical_to_the_unsharded_driver() {
+    for batching in [BatchingMode::Epoch, BatchingMode::Continuous] {
+        let cfg = SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: 45.0,
+                ..Default::default()
+            },
+            epochs: 12,
+            seed: 99,
+            batching,
+            shards: 1,
+            ..SimConfig::paper_default()
+        };
+        let unsharded = sim::run(&cfg, &mut Dftsp::new());
+        let sharded = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(
+            unsharded, sharded,
+            "{batching:?}: dispatch layer with one shard must be a no-op"
+        );
+        assert!(unsharded.completed_in_deadline > 0, "non-degenerate run");
+    }
+}
+
+/// Two deployments of BLOOM-3B under different quantizations (so affinity
+/// binds), 20 TX2 GPUs, 2 s epochs. Deployment 0 takes 40 requests per
+/// epoch, deployment 1 takes 1 — the skew the equal split wastes half the
+/// pool on.
+fn skewed_run(policy: PartitionPolicy) -> Metrics {
+    let epochs = 8u64;
+    let cfg = ShardedConfig {
+        deployments: vec![
+            Deployment {
+                model: LlmSpec::bloom_3b(),
+                quant: quant::default_quant(), // W8A16/GPTQ
+            },
+            Deployment {
+                model: LlmSpec::bloom_3b(),
+                quant: quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::Gptq).unwrap(),
+            },
+        ],
+        cluster: ClusterSpec::paper_default(),
+        partition: policy,
+        policy: DriverPolicy {
+            stale: StalePolicy::BestCaseInfeasible,
+            s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+            allocation: AllocationPolicy::MinOnly,
+        },
+        epoch: EpochParams::default(),
+        radio: RadioParams::default(),
+        channel: ChannelParams::default(),
+        seed: 4242,
+    };
+    let sequential = |_: usize| {
+        Box::new(Dftsp::with_config(SchedulerConfig { workers: 0 })) as Box<dyn Scheduler + Send>
+    };
+    let mut sd: ShardedDriver<(), AnalyticBackend> =
+        ShardedDriver::new(cfg, |_| AnalyticBackend, sequential).unwrap();
+    let mut b = RequestBuilder::new();
+    for e in 0..epochs {
+        let now = e as f64 * 2.0;
+        for _ in 0..40 {
+            // Admissible on both deployments (W4A16/GPTQ on 3B admits
+            // a <= 0.25), latency tight enough that unserved leftovers go
+            // stale at the next boundary instead of piling up.
+            sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), 0);
+        }
+        sd.offer(b.build(now, 128, 128, 1.9, 0.05), (), 1);
+        sd.step_epoch(now);
+        assert_eq!(sd.partition().iter().sum::<usize>(), 20, "pool conserved");
+    }
+    sd.finish(epochs as f64 * 2.0);
+    let m = sd.merged_metrics();
+    assert_eq!(m.offered, epochs * 41);
+    assert_eq!(
+        m.offered,
+        m.completed_in_deadline + m.completed_late + m.dropped,
+        "{policy:?}: conservation through the dispatch layer"
+    );
+    m
+}
+
+#[test]
+fn load_proportional_strictly_beats_equal_on_skewed_trace() {
+    let equal = skewed_run(PartitionPolicy::Equal);
+    let load = skewed_run(PartitionPolicy::LoadProportional);
+    assert!(
+        load.throughput() > equal.throughput(),
+        "LoadProportional ({:.2} req/s, {} in-deadline) must strictly beat \
+         Equal ({:.2} req/s, {} in-deadline) when demand is skewed",
+        load.throughput(),
+        load.completed_in_deadline,
+        equal.throughput(),
+        equal.completed_in_deadline
+    );
+    // The margin is structural (≈2× more GPUs on the hot shard), not noise:
+    // demand re-partitioning must buy well over a third more goodput.
+    assert!(
+        load.completed_in_deadline as f64 >= 1.35 * equal.completed_in_deadline as f64,
+        "expected a structural win, got {} vs {}",
+        load.completed_in_deadline,
+        equal.completed_in_deadline
+    );
+    // Both policies serve the light deployment: min-1 GPU means no
+    // starvation even when 97% of the load lives elsewhere.
+    assert!(equal.completed_in_deadline >= 8);
+    assert!(load.completed_in_deadline >= 8);
+}

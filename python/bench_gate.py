@@ -26,7 +26,9 @@ every tracked baseline, each with its own key set):
 Null / missing baseline values are skipped (the committed file may predate a
 column — e.g. wall columns authored without a toolchain). Improvements are
 reported but never fail. Exit code 1 on any regression beyond tolerance, on
-a scenario that vanished from a fresh file, or when nothing at all was
+a scenario that vanished from a fresh file, on a fresh scenario missing from
+the committed baseline (a stale baseline would silently stop tracking newly
+added scenarios — regenerate and commit it), or when nothing at all was
 compared (a gate that never compares is a broken gate, not a green one).
 Exit code 2 on usage errors.
 """
@@ -76,6 +78,14 @@ def gate_pair(baseline_path, fresh_path, keys, tol):
                 improvements += 1
                 print(f"improved  {scenario}.{key}: {want} -> {got} "
                       f"({(1 - ratio) * 100:.1f}% less)")
+    # The reverse direction: a fresh scenario the committed baseline does not
+    # know about means the baseline is stale and the new scenario is not
+    # being tracked — fail loudly so the baseline gets regenerated.
+    for scenario in sorted(set(fresh) - set(base)):
+        failures.append(
+            f"{scenario}: present in {fresh_path} but missing from the "
+            f"baseline {baseline_path} (stale baseline — regenerate it)"
+        )
     print(f"{fresh_path}: compared {compared} counters across {len(base)} "
           f"scenarios ({improvements} improved)")
     return failures, improvements, compared

@@ -98,13 +98,21 @@ def quantize_int8_per_tensor(w: np.ndarray):
     `quantize_per_tensor_i8`). Dequantized value = codes * scale, equal to
     what `quantize_rtn` would store as fake-quant f32 (up to the sign of
     zero: a 0 code dequantizes to +0.0 where fake-quant keeps -0.0 — GEMM
-    accumulation is unaffected, since +0.0 + -0.0 = +0.0)."""
+    accumulation is unaffected, since +0.0 + -0.0 = +0.0).
+
+    Non-finite elements are handled explicitly, identically to the Rust
+    kernel: the scale is taken over the *finite* magnitudes only (an Inf
+    must not poison the scale of every finite weight in the tensor) and
+    NaN/Inf elements quantize to code 0. Finite inputs are bit-identical to
+    the pre-hardening behavior."""
     w = np.asarray(w, dtype=np.float32)
-    amax = np.float32(np.abs(w).max())
+    finite = np.isfinite(w)
+    safe = np.where(finite, w, np.float32(0.0))
+    amax = np.float32(np.abs(safe).max()) if w.size else np.float32(0.0)
     # Single f32 division (no f64 round-trip), matching the Rust kernel's
     # `max / 127.0f32` bit-for-bit.
     scale = np.float32(1.0) if amax == 0.0 else amax / np.float32(INT8_QMAX)
-    codes = np.clip(np.round(w / scale), -INT8_QMAX, INT8_QMAX).astype(np.int8)
+    codes = np.clip(np.round(safe / scale), -INT8_QMAX, INT8_QMAX).astype(np.int8)
     return codes, scale
 
 

@@ -10,10 +10,18 @@ Purpose
 
    - batched decode ≡ the per-sequence reference path *bit-exactly* on
      randomized slot patterns (release holes, mid-flight admissions), for
-     f32, W8A16 and W8A8 kernel selections — the same property
-     `rust/tests/proptest_engine.rs` pins on the Rust side;
+     f32, W8A16, W8A8 and W8A8KV8 (int8 KV cache) kernel selections — the
+     same property `rust/tests/proptest_engine.rs` pins on the Rust side;
    - the W8A16 kernel ≡ a dequantize-then-f32 oracle bit-for-bit;
-   - the W8A8 kernel within one quantization step per accumulated product.
+   - the W8A8 kernel within one quantization step per accumulated product;
+   - the tiled cache-blocked kernels (matmul_*_tiled, packed column-blocked
+     weight layout) ≡ the k-ascending reference kernels *bit-exactly* on
+     ragged shapes — same loop structure as the Rust kernels, so a pass
+     here demonstrates the blocking preserves the f32 addition chains;
+   - the int8-KV dot within one quantization step per accumulated product
+     of the exact f32 dot, and a W8A8KV8 engine tracking its f32-KV W8A8
+     sibling (bit-equal prefill, bounded decode drift) through release
+     holes and mid-flight admissions.
 
 2. Author the deterministic columns of BENCH_engine.json (scenario names,
    batch, nominal FLOPs closed form — identical to the formulas in
@@ -68,11 +76,24 @@ def gaussian(rng):
 
 
 def quantize_rows_i8(x):
-    """Per-row activation quantization: returns (codes int32 [m,k], scales [m])."""
-    amax = np.abs(x).max(axis=1).astype(F32)
+    """Per-row activation quantization: returns (codes int32 [m,k], scales [m]).
+
+    Mirrors rust quantize_row_i8 including the explicit non-finite rule:
+    scale from the finite magnitudes only, NaN/Inf elements -> code 0
+    (finite inputs are bit-identical to the pre-hardening behavior)."""
+    finite = np.isfinite(x)
+    safe = np.where(finite, x, F32(0.0)).astype(F32)
+    amax = np.abs(safe).max(axis=1).astype(F32) if x.shape[1] else np.zeros(
+        x.shape[0], dtype=F32)
     scales = np.where(amax == 0.0, F32(1.0), amax / F32(INT8_QMAX)).astype(F32)
-    codes = np.clip(np.round(x / scales[:, None]), -INT8_QMAX, INT8_QMAX)
+    codes = np.clip(np.round(safe / scales[:, None]), -INT8_QMAX, INT8_QMAX)
     return codes.astype(np.int32), scales
+
+
+def quantize_row_1(row):
+    """Single-row convenience: returns (codes int32 [k], scale f32)."""
+    c, s = quantize_rows_i8(np.asarray(row, dtype=F32)[None, :])
+    return c[0], F32(s[0])
 
 
 def matmul_f32(x, w):
@@ -98,6 +119,131 @@ def matmul_w8a8(x, codes, w_scale):
     acc = q @ codes.astype(np.int32)  # exact i32 accumulation, order-free
     dq = (a_scales * F32(w_scale)).astype(F32)
     return (acc.astype(F32) * dq[:, None]).astype(F32)
+
+
+# Tile geometry — must match rust/src/runtime/kernels.rs TILE_*.
+TILE_NR, TILE_MC, TILE_NC, TILE_KC = 4, 32, 64, 64
+
+
+def pack_codes_col_blocked(codes):
+    """Row-major [k, n] int codes -> the column-blocked layout the tiled
+    kernels stream: packed[jb*k*NR + kk*NR + r] = codes[kk, jb*NR + r],
+    zero-padded past n (rust pack_codes_col_blocked)."""
+    k, n = codes.shape
+    nb = (n + TILE_NR - 1) // TILE_NR
+    packed = np.zeros(nb * k * TILE_NR, dtype=np.int32)
+    for jb in range(nb):
+        width = min(TILE_NR, n - jb * TILE_NR)
+        base = jb * k * TILE_NR
+        for kk in range(k):
+            for r in range(width):
+                packed[base + kk * TILE_NR + r] = codes[kk, jb * TILE_NR + r]
+    return packed
+
+
+def matmul_f32_tiled(x, w):
+    """Op-for-op port of rust matmul_f32_tiled_into: MC x NC x KC cache
+    blocking with NR-wide register accumulation. Per output element the KC
+    blocks ascend (load partial -> accumulate -> store), so the f32 addition
+    chain is exactly matmul_f32's — validate() asserts bit-equality."""
+    m, k = x.shape
+    n = w.shape[1]
+    out = np.zeros((m, n), dtype=F32)
+    jc = 0
+    while jc < n:
+        nc = min(TILE_NC, n - jc)
+        kc = 0
+        while kc < k:
+            kb = min(TILE_KC, k - kc)
+            ic = 0
+            while ic < m:
+                mc = min(TILE_MC, m - ic)
+                for i in range(ic, ic + mc):
+                    j = jc
+                    while j + TILE_NR <= jc + nc:
+                        acc = [out[i, j + r] for r in range(TILE_NR)]
+                        for kk in range(kc, kc + kb):
+                            xv = x[i, kk]
+                            for r in range(TILE_NR):
+                                acc[r] = F32(acc[r] + F32(xv * w[kk, j + r]))
+                        for r in range(TILE_NR):
+                            out[i, j + r] = acc[r]
+                        j += TILE_NR
+                    while j < jc + nc:
+                        a = out[i, j]
+                        for kk in range(kc, kc + kb):
+                            a = F32(a + F32(x[i, kk] * w[kk, j]))
+                        out[i, j] = a
+                        j += 1
+                ic += mc
+            kc += kb
+        jc += nc
+    return out
+
+
+def matmul_w8a16_tiled(x, packed, scale, n):
+    """Port of rust matmul_w8a16_tiled_into over the packed layout:
+    dequantizes code*scale inline in the reference op order."""
+    m, k = x.shape
+    scale = F32(scale)
+    out = np.zeros((m, n), dtype=F32)
+    jc = 0
+    while jc < n:
+        nc = min(TILE_NC, n - jc)
+        kc = 0
+        while kc < k:
+            kb = min(TILE_KC, k - kc)
+            ic = 0
+            while ic < m:
+                mc = min(TILE_MC, m - ic)
+                for i in range(ic, ic + mc):
+                    j = jc
+                    while j + TILE_NR <= jc + nc:
+                        base = (j // TILE_NR) * k * TILE_NR
+                        acc = [out[i, j + r] for r in range(TILE_NR)]
+                        for kk in range(kc, kc + kb):
+                            xv = x[i, kk]
+                            for r in range(TILE_NR):
+                                c = packed[base + kk * TILE_NR + r]
+                                acc[r] = F32(acc[r] + F32(xv * F32(F32(c) * scale)))
+                        for r in range(TILE_NR):
+                            out[i, j + r] = acc[r]
+                        j += TILE_NR
+                    while j < jc + nc:
+                        base = (j // TILE_NR) * k * TILE_NR
+                        r = j % TILE_NR
+                        a = out[i, j]
+                        for kk in range(kc, kc + kb):
+                            c = packed[base + kk * TILE_NR + r]
+                            a = F32(a + F32(x[i, kk] * F32(F32(c) * scale)))
+                        out[i, j] = a
+                        j += 1
+                ic += mc
+            kc += kb
+        jc += nc
+    return out
+
+
+def matmul_w8a8_tiled(x, packed, w_scale, n):
+    """Port of rust matmul_w8a8_tiled_into: per-row int8 activations against
+    NR-wide packed panels, exact i32 accumulation over the full k range."""
+    m, k = x.shape
+    q, a_scales = quantize_rows_i8(x)
+    out = np.zeros((m, n), dtype=F32)
+    nb = (n + TILE_NR - 1) // TILE_NR
+    for i in range(m):
+        dq = F32(a_scales[i] * F32(w_scale))
+        for jb in range(nb):
+            base = jb * k * TILE_NR
+            acc = [0, 0, 0, 0]
+            for kk in range(k):
+                qv = int(q[i, kk])
+                for r in range(TILE_NR):
+                    acc[r] += qv * int(packed[base + kk * TILE_NR + r])
+            width = min(TILE_NR, n - jb * TILE_NR)
+            for r in range(width):
+                out[i, jb * TILE_NR + r] = F32(F32(acc[r]) * dq)
+    return out
 
 
 def matmul_param(x, param, a_bits):
@@ -126,10 +272,19 @@ BENCH = dict(vocab=256, layers=4, d_model=128, n_heads=4, d_ff=256,
              seed=0xBE9C, weight_scale=0.08)
 
 
+def cache_copy(c):
+    """Deep-copy one sequence's K (or V) cache — f32 arena or the int8
+    (codes, scales) pair of the KV8 mode."""
+    if isinstance(c, tuple):
+        return (c[0].copy(), c[1].copy())
+    return c.copy()
+
+
 class Engine:
-    def __init__(self, spec, w_bits=16, a_bits=16):
+    def __init__(self, spec, w_bits=16, a_bits=16, kv_bits=16):
         self.spec = spec
         self.a_bits = a_bits
+        self.kv_bits = kv_bits
         rng = Rng(spec["seed"])
         scale = spec["weight_scale"]
         dm, df, vocab = spec["d_model"], spec["d_ff"], spec["vocab"]
@@ -161,6 +316,17 @@ class Engine:
         # Tied embedding: x @ embed.T * scale, k-ascending like the Rust dot.
         return matmul_f32(x, self.embed.T.astype(F32)) * F32(self.spec["logit_scale"])
 
+    def _rows(self, cache, layer, pos):
+        """The first pos+1 cached rows of one layer, dequantized when the
+        KV cache is int8: code*scale per element (rust dot_i8_dequant /
+        axpy_i8_dequant dequantize inline in exactly this op order, so
+        pre-dequantizing the rows is op-for-op identical)."""
+        if self.kv_bits == 8:
+            codes, scales = cache
+            return (codes[layer][: pos + 1].astype(F32)
+                    * scales[layer][: pos + 1, None]).astype(F32)
+        return cache[layer][: pos + 1]
+
     def _attend(self, q_rows, caches, poss, layer):
         """Per-sequence incremental attention (identical for both paths)."""
         spec = self.spec
@@ -168,10 +334,12 @@ class Engine:
         att = np.zeros_like(q_rows)
         inv = F32(1.0 / math.sqrt(dh))
         for i, (kc, vc, pos) in enumerate(zip(*caches, poss)):
+            krows = self._rows(kc, layer, pos)
+            vrows = self._rows(vc, layer, pos)
             for h in range(nh):
                 o = h * dh
                 qh = q_rows[i, o : o + dh]
-                ks = kc[layer][: pos + 1, o : o + dh]
+                ks = krows[:, o : o + dh]
                 # sequential-order dot per row (dh is tiny; sum order over dh
                 # matches Rust's k-ascending elementwise sum)
                 sc = np.array([np.add.reduce((qh * krow).astype(F32))
@@ -180,7 +348,7 @@ class Engine:
                 e = np.exp(sc - m, dtype=F32)
                 denom = np.add.reduce(e)
                 wgt = (e / denom).astype(F32)
-                vs = vc[layer][: pos + 1, o : o + dh]
+                vs = vrows[:, o : o + dh]
                 acc = np.zeros(dh, dtype=F32)
                 for j in range(pos + 1):
                     acc += wgt[j] * vs[j]
@@ -207,8 +375,16 @@ class Engine:
                 k = matmul_param(x, ws["wk"], self.a_bits)
                 v = matmul_param(x, ws["wv"], self.a_bits)
                 for j, i in enumerate(idx):
-                    k_caches[i][l][poss[i]] = k[j]
-                    v_caches[i][l][poss[i]] = v[j]
+                    if self.kv_bits == 8:
+                        # Quantize-on-write: one symmetric scale per
+                        # (layer, slot, position) row (rust KvCache).
+                        kq, ksc = k_caches[i]
+                        kq[l][poss[i]], ksc[l][poss[i]] = quantize_row_1(k[j])
+                        vq, vsc = v_caches[i]
+                        vq[l][poss[i]], vsc[l][poss[i]] = quantize_row_1(v[j])
+                    else:
+                        k_caches[i][l][poss[i]] = k[j]
+                        v_caches[i][l][poss[i]] = v[j]
                 att = self._attend(q, (sub_k, sub_v), sub_p, l)
                 x_out = matmul_param(att, ws["wo"], self.a_bits) + x
                 hid = relu(matmul_param(x_out, ws["w1"], self.a_bits))
@@ -219,7 +395,11 @@ class Engine:
         return out
 
     def prefill_one(self, prompt):
-        """Returns (last logits row, k arena, v arena, pos) for one prompt."""
+        """Returns (last logits row, k arena, v arena, pos) for one prompt.
+        In KV8 mode the arenas are (codes, scales) pairs; in-prompt attention
+        still runs over the exact f32 K/V (quantize-on-write happens after),
+        so prefill logits are bit-identical across KV modes — the property
+        the Rust host test and proptest pin."""
         spec = self.spec
         L, dm, ms = spec["layers"], spec["d_model"], spec["max_seq"]
         kc = np.zeros((L, ms, dm), dtype=F32)
@@ -251,7 +431,18 @@ class Engine:
             x = matmul_param(hid, ws["w2"], self.a_bits) + x_out
             kc[l][:s] = k
             vc[l][:s] = v
-        return self.logits(x[s - 1 : s])[0], kc, vc, s
+        logits = self.logits(x[s - 1 : s])[0]
+        if self.kv_bits == 8:
+            kq = np.zeros((L, ms, dm), dtype=np.int32)
+            ksc = np.zeros((L, ms), dtype=F32)
+            vq = np.zeros((L, ms, dm), dtype=np.int32)
+            vsc = np.zeros((L, ms), dtype=F32)
+            for l in range(L):
+                for i in range(s):
+                    kq[l][i], ksc[l][i] = quantize_row_1(kc[l][i])
+                    vq[l][i], vsc[l][i] = quantize_row_1(vc[l][i])
+            return logits, (kq, ksc), (vq, vsc), s
+        return logits, kc, vc, s
 
 
 # ---------------------------------------------------------------------------
@@ -266,10 +457,11 @@ def validate(cases=40):
     failures = 0
     for seed in range(cases):
         rng = Rng(0xE17_0001 + seed)
-        w_bits, a_bits = [(16, 16), (8, 16), (8, 8)][rng.below(3)]
+        w_bits, a_bits, kv_bits = [
+            (16, 16, 16), (8, 16, 16), (8, 8, 16), (8, 8, 8)][rng.below(4)]
         spec = dict(TINY)
         spec["seed"] = 0xBADA55 + seed
-        eng = Engine(spec, w_bits, a_bits)
+        eng = Engine(spec, w_bits, a_bits, kv_bits)
         nmax = max(spec["variants"])
 
         def prompt():
@@ -279,11 +471,11 @@ def validate(cases=40):
         n0 = rng.int_range(1, nmax)
         state = [eng.prefill_one(prompt()) for _ in range(n0)]
         tokens = [int(np.argmax(s[0])) for s in state]
-        kb = [s[1].copy() for s in state]
-        vb = [s[2].copy() for s in state]
+        kb = [cache_copy(s[1]) for s in state]
+        vb = [cache_copy(s[2]) for s in state]
         pb = [s[3] for s in state]
-        kr = [s[1].copy() for s in state]
-        vr = [s[2].copy() for s in state]
+        kr = [cache_copy(s[1]) for s in state]
+        vr = [cache_copy(s[2]) for s in state]
         pr = [s[3] for s in state]
 
         for _ in range(rng.int_range(3, 10)):
@@ -295,8 +487,8 @@ def validate(cases=40):
                     lst.pop()
             elif ev in (2, 3) and len(tokens) < nmax:
                 lg, kc, vc, pos = eng.prefill_one(prompt())
-                kb.append(kc.copy()); vb.append(vc.copy()); pb.append(pos)
-                kr.append(kc.copy()); vr.append(vc.copy()); pr.append(pos)
+                kb.append(cache_copy(kc)); vb.append(cache_copy(vc)); pb.append(pos)
+                kr.append(cache_copy(kc)); vr.append(cache_copy(vc)); pr.append(pos)
                 tokens.append(int(np.argmax(lg)))
             else:
                 if any(p >= spec["max_seq"] for p in pb):
@@ -305,7 +497,7 @@ def validate(cases=40):
                 lr = eng.decode(tokens, kr, vr, pr, batched=False)
                 if not biteq(lb, lr) or pb != pr:
                     print(f"FAIL seed {seed}: batched != reference "
-                          f"(w{w_bits}a{a_bits})")
+                          f"(w{w_bits}a{a_bits}kv{kv_bits})")
                     failures += 1
                     break
                 tokens = [int(np.argmax(r)) for r in lb]
@@ -335,11 +527,115 @@ def validate(cases=40):
             print(f"FAIL seed {seed}: W8A8 outside one-step bound")
             failures += 1
 
+    # Tiled cache-blocked kernels ≡ reference kernels, bit-exactly, on
+    # ragged shapes (mirrors prop_tiled_kernels_equal_reference_bitexact —
+    # identical seed/draw order, so the same shapes are exercised).
+    for seed in range(cases):
+        rng = Rng(0xE17_0004 + seed)
+        m = rng.int_range(1, TILE_MC + 9)
+        kr = rng.below(8)
+        if kr == 0:
+            k = 0
+        elif kr == 1:
+            k = rng.int_range(TILE_KC, 2 * TILE_KC + 5)
+        else:
+            k = rng.int_range(1, 48)
+        n = (rng.int_range(TILE_NC, TILE_NC + 13) if rng.below(8) == 0
+             else rng.int_range(1, 48))
+        x = np.array([F32(rng.uniform(-2.0, 2.0)) for _ in range(m * k)],
+                     dtype=F32).reshape(m, k)
+        w = np.array([F32(rng.uniform(-1.5, 1.5)) for _ in range(k * n)],
+                     dtype=F32).reshape(k, n)
+        codes, w_scale = quantize_per_tensor_i8(w)
+        packed = pack_codes_col_blocked(codes.astype(np.int32))
+        if not biteq(matmul_f32(x, w), matmul_f32_tiled(x, w)):
+            print(f"FAIL seed {seed}: f32 tiled != reference (m={m} k={k} n={n})")
+            failures += 1
+        if not biteq(matmul_w8a16(x, codes, w_scale),
+                     matmul_w8a16_tiled(x, packed, w_scale, n)):
+            print(f"FAIL seed {seed}: W8A16 tiled != reference (m={m} k={k} n={n})")
+            failures += 1
+        if not biteq(matmul_w8a8(x, codes, w_scale),
+                     matmul_w8a8_tiled(x, packed, w_scale, n)):
+            print(f"FAIL seed {seed}: W8A8 tiled != reference (m={m} k={k} n={n})")
+            failures += 1
+
+    # Int8-KV error bound (mirrors prop_int8_kv_error_is_bounded_vs_f32_kv_
+    # oracle): the dot primitive within one quantization step per product,
+    # and a KV8 engine tracking its f32-KV sibling through slot churn.
+    max_drift = 0.0
+    for seed in range(cases):
+        rng = Rng(0xE17_0005 + seed)
+        d = rng.int_range(1, 64)
+        amp = rng.uniform(0.01, 8.0)
+        row = np.array([F32(rng.uniform(-amp, amp)) for _ in range(d)], dtype=F32)
+        q = np.array([F32(rng.uniform(-2.0, 2.0)) for _ in range(d)], dtype=F32)
+        codes, step = quantize_row_1(row)
+        exact = np.add.reduce((q * row).astype(F32))
+        approx = np.add.reduce((q * (codes.astype(F32) * step).astype(F32)).astype(F32))
+        bound = np.abs(q).sum() * (step / 2.0) + 1e-4
+        if abs(float(approx) - float(exact)) > bound:
+            print(f"FAIL seed {seed}: int8-KV dot outside one-step bound")
+            failures += 1
+
+        spec = dict(TINY)
+        spec["seed"] = 0xC0FFEE + seed
+        base = Engine(spec, 8, 8, 16)
+        kv8 = Engine(spec, 8, 8, 8)
+        nmax = max(spec["variants"])
+        n0 = rng.int_range(1, nmax)
+        prompts = []
+        for _ in range(n0):
+            ln = rng.int_range(1, spec["max_prompt"])
+            prompts.append([rng.below(spec["vocab"]) for _ in range(ln)])
+        sf = [base.prefill_one(p) for p in prompts]
+        sq = [kv8.prefill_one(p) for p in prompts]
+        if not all(biteq(a[0], b[0]) for a, b in zip(sf, sq)):
+            print(f"FAIL seed {seed}: KV8 prefill != f32-KV prefill")
+            failures += 1
+            continue
+        tokens = [int(np.argmax(s[0])) for s in sq]
+        kf = [s[1] for s in sf]; vf = [s[2] for s in sf]; pf = [s[3] for s in sf]
+        kq = [s[1] for s in sq]; vq = [s[2] for s in sq]; pq = [s[3] for s in sq]
+        for _ in range(rng.int_range(3, 10)):
+            ev = rng.below(10)
+            if ev in (0, 1) and len(tokens) > 1:
+                victim = rng.below(len(tokens))
+                for lst in (kf, vf, pf, kq, vq, pq, tokens):
+                    lst[victim] = lst[-1]
+                    lst.pop()
+            elif ev in (2, 3) and len(tokens) < nmax:
+                ln = rng.int_range(1, spec["max_prompt"])
+                p = [rng.below(spec["vocab"]) for _ in range(ln)]
+                lgf, kcf, vcf, pos = base.prefill_one(p)
+                lgq, kcq, vcq, _ = kv8.prefill_one(p)
+                if not biteq(lgf, lgq):
+                    print(f"FAIL seed {seed}: KV8 prefill_into != f32-KV")
+                    failures += 1
+                    break
+                kf.append(kcf); vf.append(vcf); pf.append(pos)
+                kq.append(kcq); vq.append(vcq); pq.append(pos)
+                tokens.append(int(np.argmax(lgq)))
+            else:
+                if any(p >= spec["max_seq"] for p in pq):
+                    break
+                lf = base.decode(tokens, kf, vf, pf, batched=True)
+                lq = kv8.decode(tokens, kq, vq, pq, batched=True)
+                norm = np.maximum(np.abs(lf).max(axis=1), 1e-6)[:, None]
+                drift = float((np.abs(lf - lq) / norm).max())
+                max_drift = max(max_drift, drift)
+                if drift >= 0.5:
+                    print(f"FAIL seed {seed}: KV8 decode drift {drift}")
+                    failures += 1
+                    break
+                tokens = [int(np.argmax(r)) for r in lq]
+
     if failures:
         print(f"validate: {failures} FAILURES")
         return 1
-    print(f"validate: OK ({cases} slot-pattern cases × 3 precisions, "
-          f"{cases} kernel-oracle cases)")
+    print(f"validate: OK ({cases} slot-pattern cases × 4 precisions, "
+          f"{cases} kernel-oracle cases, {cases} tiled-vs-reference cases, "
+          f"{cases} int8-KV cases; max KV8 decode drift {max_drift:.4f})")
     return 0
 
 
@@ -366,13 +662,38 @@ def prefill_flops(spec, b, s):
     return b * (spec["layers"] * per_layer + 2 * spec["vocab"] * dm)
 
 
+# Tiled-vs-reference kernel matrix shape (rust/benches/perf_engine.rs
+# KERNEL_M/K/N).
+KERNEL_M, KERNEL_K, KERNEL_N = 32, 256, 256
+
+
+def kernel_rows():
+    """Deterministic columns of the kernel/{f32,w8a16,w8a8}/{tiled,ref}
+    scenarios: flops_per_call = 2·m·k·n, allocs_per_step = 0 (the packed
+    layout and all scratch are built outside the timed region)."""
+    flops = 2 * KERNEL_M * KERNEL_K * KERNEL_N
+    rows = []
+    for tag in ["f32", "w8a16", "w8a8"]:
+        for variant in ["ref", "tiled"]:
+            rows.append({
+                "scenario": f"kernel/{tag}/{variant}/m{KERNEL_M}",
+                "precision": tag, "phase": variant, "batch": KERNEL_M,
+                "prompt_len": KERNEL_K, "flops_per_call": flops,
+                "allocs_per_step": 0, "tokens_per_s": None,
+                "wall_mean_s": None, "wall_median_s": None,
+                "wall_p95_s": None, "iters": None,
+            })
+    return rows
+
+
 def bench(out_path):
     spec = BENCH
-    rows = []
+    rows = kernel_rows()
     wall_notes = []
-    for tag, (w_bits, a_bits) in [("f32", (16, 16)), ("w8a16", (8, 16)),
-                                  ("w8a8", (8, 8))]:
-        eng = Engine(spec, w_bits, a_bits)
+    for tag, (w_bits, a_bits, kv_bits) in [
+            ("f32", (16, 16, 16)), ("w8a16", (8, 16, 16)),
+            ("w8a8", (8, 8, 16)), ("w8a8kv8", (8, 8, 8))]:
+        eng = Engine(spec, w_bits, a_bits, kv_bits)
         for b in BATCHES:
             prompts = [[(t * 7 + i * 13) % spec["vocab"] for t in range(PROMPT_LEN)]
                        for i in range(b)]
@@ -412,10 +733,12 @@ def bench(out_path):
     doc = {
         "provenance": (
             "Baseline of the host-engine scenario matrix ({B=1,8,32} x "
-            "{f32, W8A16, W8A8} x {prefill, decode, decode_ref}). Regenerate "
+            "{f32, W8A16, W8A8, W8A8KV8} x {prefill, decode, decode_ref}) "
+            "plus the tiled-vs-reference kernel matrix "
+            "(kernel/{f32,w8a16,w8a8}/{tiled,ref}). Regenerate "
             "with: cargo bench --bench perf_engine -- --json (CI's "
             "bench-smoke job runs the --quick profile and uploads this file "
-            "as an artifact). This first committed baseline was produced by "
+            "as an artifact). This baseline was produced by "
             "python/engine_mirror.py bench in a container without a Rust "
             "toolchain: the deterministic columns (flops_per_call closed "
             "form, allocs_per_step = tracked scratch+arena growth events, 0 "

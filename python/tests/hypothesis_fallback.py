@@ -1,0 +1,58 @@
+"""Deterministic stand-in for the slice of the hypothesis API these tests
+use, for environments where hypothesis is not installed (the property tests
+must still *run*, not silently skip — they are the kernel-vs-oracle signal).
+
+Semantics: each strategy enumerates a small fixed candidate list
+(`sampled_from` keeps the given values; `integers(lo, hi)` takes lo, mid,
+hi). `@given` runs the test once per row of the zipped/cycled candidate
+lists — a deterministic mini-sweep instead of hypothesis' randomized one.
+`@settings` is a no-op. With hypothesis installed this module is never
+imported.
+"""
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(values):
+        return _Strategy(values)
+
+    @staticmethod
+    def integers(lo, hi):
+        out = []
+        for v in (lo, lo + (hi - lo) // 2, hi):
+            if v not in out:
+                out.append(v)
+        return _Strategy(out)
+
+
+st = _Strategies()
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # No functools.wraps: it would set __wrapped__, making pytest see the
+        # original parameters and demand fixtures for them.
+        def wrapper():
+            rows = max(len(s.examples) for s in strategies.values())
+            for i in range(rows):
+                fn(**{
+                    name: s.examples[i % len(s.examples)]
+                    for name, s in strategies.items()
+                })
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

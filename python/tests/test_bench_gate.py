@@ -87,6 +87,27 @@ class MultiFileGate(unittest.TestCase):
             ["--gate", d_base, d_fresh, "nodes_visited"])
         self.assertEqual(rc, 1)
 
+    def test_fresh_scenario_missing_from_baseline_fails(self):
+        # A scenario added in code but absent from the committed baseline
+        # would otherwise be silently untracked — the gate must force a
+        # baseline regeneration instead.
+        base = write_baseline(self.dir, "b.json", engine_rows(5000, 0))
+        extra = engine_rows(5000, 0) + [
+            {"scenario": "engine/w8a8kv8/decode/b8", "flops_per_call": 5000,
+             "allocs_per_step": 0, "wall_mean_s": None},
+        ]
+        fresh = write_baseline(self.dir, "f.json", extra)
+        rc = bench_gate.main(
+            ["--gate", base, fresh, "flops_per_call,allocs_per_step"])
+        self.assertEqual(rc, 1)
+
+    def test_matching_scenario_sets_still_pass(self):
+        base = write_baseline(self.dir, "b.json", engine_rows(5000, 0))
+        fresh = write_baseline(self.dir, "f.json", engine_rows(5000, 0))
+        rc = bench_gate.main(
+            ["--gate", base, fresh, "flops_per_call,allocs_per_step"])
+        self.assertEqual(rc, 0)
+
     def test_null_columns_are_skipped_not_compared(self):
         # wall_mean_s is null in both: gating on it alone compares nothing,
         # and an empty comparison is a failed gate, not a green one.

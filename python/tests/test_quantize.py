@@ -1,9 +1,17 @@
 """Quantization correctness: rounding error bounds, method ordering, and
 variant plumbing."""
 
+import os
+import sys
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hypothesis in this env: deterministic mini-sweep
+    sys.path.insert(0, os.path.dirname(__file__))
+    from hypothesis_fallback import given, settings, st
 
 from compile import model as M
 from compile import quantize as Q
@@ -113,6 +121,30 @@ def test_int8_per_tensor_round_trips_as_rtn():
     # all-zero tensors quantize without dividing by zero
     zc, zs = Q.quantize_int8_per_tensor(np.zeros((4, 4), np.float32))
     assert zs == np.float32(1.0) and (zc == 0).all()
+
+
+def test_int8_per_tensor_nan_inf_quantize_to_zero_with_finite_scale():
+    # Mirrors rust/src/runtime/kernels.rs quantize_row_i8: the scale comes
+    # from the finite magnitudes only (an Inf must not poison every finite
+    # weight's code) and non-finite elements map to code 0.
+    w = np.array([np.nan, 127.0, np.inf, -63.5, -np.inf], np.float32)
+    codes, scale = Q.quantize_int8_per_tensor(w)
+    assert scale == np.float32(1.0)
+    np.testing.assert_array_equal(codes, np.array([0, 127, 0, -64, 0], np.int8))
+    # all-non-finite: no finite magnitude -> scale 1.0, all codes zero
+    codes, scale = Q.quantize_int8_per_tensor(
+        np.array([np.nan, np.inf, -np.inf], np.float32))
+    assert scale == np.float32(1.0) and (codes == 0).all()
+    # finite inputs are bit-identical to the pre-hardening behavior
+    rng = np.random.default_rng(11)
+    w = rng.normal(0, 0.5, (32, 16)).astype(np.float32)
+    codes, scale = Q.quantize_int8_per_tensor(w)
+    amax = np.float32(np.abs(w).max())
+    assert scale == amax / np.float32(Q.INT8_QMAX)
+    np.testing.assert_array_equal(
+        codes,
+        np.clip(np.round(w / scale), -Q.INT8_QMAX, Q.INT8_QMAX).astype(np.int8),
+    )
 
 
 def test_int8_aliases_point_at_emitted_variants():

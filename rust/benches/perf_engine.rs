@@ -1,6 +1,9 @@
 //! §Perf micro-benchmarks — the host engine request path: the
-//! {B=1,8,32} × {f32, W8A16, W8A8} × {prefill, decode} scenario matrix, plus
-//! the retained per-sequence reference decode as the before/after baseline.
+//! {B=1,8,32} × {f32, W8A16, W8A8, W8A8KV8} × {prefill, decode} scenario
+//! matrix, the retained per-sequence reference decode as the before/after
+//! baseline, and the tiled-vs-reference kernel matrix
+//! (kernel/{f32,w8a16,w8a8}/{tiled,ref}) that isolates the cache-blocked
+//! matmul rework from the rest of the engine.
 //! The iteration log lives in EXPERIMENTS.md §Engine.
 //!
 //! Run: cargo bench --bench perf_engine [-- --quick] [-- --json]
@@ -20,6 +23,10 @@
 #[cfg(not(feature = "pjrt"))]
 mod host_bench {
     use edgellm::quant::Precision;
+    use edgellm::runtime::kernels::{
+        matmul_f32_into, matmul_f32_tiled_into, matmul_w8a16_into, matmul_w8a16_tiled_into,
+        matmul_w8a8_into, matmul_w8a8_tiled_into, pack_codes_col_blocked, quantize_per_tensor_i8,
+    };
     use edgellm::runtime::{argmax, Engine, SyntheticSpec};
     use edgellm::util::bench::{black_box, BenchSuite, Bencher};
     use edgellm::util::json::Json;
@@ -28,10 +35,17 @@ mod host_bench {
     const BATCHES: [usize; 3] = [1, 8, 32];
     const PROMPT_LEN: usize = 48;
 
+    /// Kernel-matrix shape: a decode-sized GEMM (rows = batch, k×n = one
+    /// projection of the bench spec). Mirrored by python/engine_mirror.py.
+    const KERNEL_M: usize = 32;
+    const KERNEL_K: usize = 256;
+    const KERNEL_N: usize = 256;
+
     fn precision_tag(p: Precision) -> &'static str {
-        match (p.w_bits, p.a_bits) {
-            (16, 16) => "f32",
-            (8, 16) => "w8a16",
+        match (p.w_bits, p.a_bits, p.kv_bits) {
+            (16, 16, _) => "f32",
+            (8, 16, _) => "w8a16",
+            (8, 8, 8) => "w8a8kv8",
             _ => "w8a8",
         }
     }
@@ -97,9 +111,114 @@ mod host_bench {
         ]));
     }
 
+    /// The tiled cache-blocked kernels against their k-ascending reference
+    /// implementations on one decode-sized GEMM. Deterministic columns:
+    /// flops_per_call = 2·m·k·n, allocs_per_step = 0 (all buffers, including
+    /// the packed weight layout and the W8A8 activation-row scratch, are
+    /// built outside the timed region).
+    fn kernel_scenarios(bench: &Bencher, suite: &mut BenchSuite) {
+        let (m, k, n) = (KERNEL_M, KERNEL_K, KERNEL_N);
+        let x: Vec<f32> = (0..m * k)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) / 25.0)
+            .collect();
+        let w: Vec<f32> = (0..k * n)
+            .map(|i| ((i * 53 % 97) as f32 - 48.0) / 32.0)
+            .collect();
+        let (codes, w_scale) = quantize_per_tensor_i8(&w);
+        let packed = pack_codes_col_blocked(&codes, k, n);
+        let mut out = vec![0f32; m * n];
+        let mut qrow = vec![0i8; k];
+        let flops = (2 * m * k * n) as u64;
+
+        let mut row = |suite: &mut BenchSuite,
+                       tag: &str,
+                       variant: &str,
+                       r: &edgellm::util::bench::BenchResult| {
+            suite.push(Json::obj(vec![
+                (
+                    "scenario",
+                    Json::Str(format!("kernel/{tag}/{variant}/m{m}")),
+                ),
+                ("precision", Json::Str(tag.to_string())),
+                ("phase", Json::Str(variant.to_string())),
+                ("batch", Json::Num(m as f64)),
+                ("prompt_len", Json::Num(k as f64)),
+                ("flops_per_call", Json::Num(flops as f64)),
+                ("allocs_per_step", Json::Num(0.0)),
+                ("tokens_per_s", Json::Null),
+                ("wall_mean_s", Json::Num(r.mean)),
+                ("wall_median_s", Json::Num(r.median)),
+                ("wall_p95_s", Json::Num(r.p95)),
+                ("iters", Json::Num(r.iters as f64)),
+            ]));
+        };
+
+        let r = bench.run("kernel/f32/ref/m32", || {
+            matmul_f32_into(black_box(&x), m, k, black_box(&w), n, &mut out);
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "f32", "ref", &r);
+        let r = bench.run("kernel/f32/tiled/m32", || {
+            matmul_f32_tiled_into(black_box(&x), m, k, black_box(&w), n, &mut out);
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "f32", "tiled", &r);
+
+        let r = bench.run("kernel/w8a16/ref/m32", || {
+            matmul_w8a16_into(black_box(&x), m, k, black_box(&codes), w_scale, n, &mut out);
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "w8a16", "ref", &r);
+        let r = bench.run("kernel/w8a16/tiled/m32", || {
+            matmul_w8a16_tiled_into(black_box(&x), m, k, black_box(&packed), w_scale, n, &mut out);
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "w8a16", "tiled", &r);
+
+        let r = bench.run("kernel/w8a8/ref/m32", || {
+            matmul_w8a8_into(
+                black_box(&x),
+                m,
+                k,
+                black_box(&codes),
+                w_scale,
+                n,
+                &mut qrow,
+                &mut out,
+            );
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "w8a8", "ref", &r);
+        let r = bench.run("kernel/w8a8/tiled/m32", || {
+            matmul_w8a8_tiled_into(
+                black_box(&x),
+                m,
+                k,
+                black_box(&packed),
+                w_scale,
+                n,
+                &mut qrow,
+                &mut out,
+            );
+            black_box(out[0]);
+        });
+        println!("{}", r.report());
+        row(suite, "w8a8", "tiled", &r);
+    }
+
     fn engine_scenarios(bench: &Bencher, suite: &mut BenchSuite) {
         let spec = SyntheticSpec::bench();
-        for precision in [Precision::W16A16, Precision::W8A16, Precision::W8A8] {
+        for precision in [
+            Precision::W16A16,
+            Precision::W8A16,
+            Precision::W8A8,
+            Precision::W8A8KV8,
+        ] {
             let tag = precision_tag(precision);
             let engine = Engine::synthetic(&spec, precision);
             for b in BATCHES {
@@ -198,8 +317,11 @@ mod host_bench {
         let json = std::env::var("JSON").is_ok() || args.iter().any(|a| a == "--json");
         let bench = if quick { Bencher::quick() } else { Bencher::default() };
 
-        println!("== host engine request path ==");
+        println!("== tiled vs reference kernels ==");
         let mut suite = BenchSuite::new();
+        kernel_scenarios(&bench, &mut suite);
+
+        println!("== host engine request path ==");
         engine_scenarios(&bench, &mut suite);
 
         if json {

@@ -63,11 +63,17 @@ impl ClusterSpec {
     }
 
     /// Per-GPU unscaled-KV budget after the α-scaled weight footprint:
-    /// `M_gpu / α − m1` (negative when the weights alone do not fit). The
-    /// single source of the memory-budget formula shared by the feasibility
-    /// checker, DFTSP's memory bound and the continuous-batching KV ledger.
+    /// `(M_gpu / α − m1) / kv_bytes_factor` (negative when the weights alone
+    /// do not fit). The budget is denominated in *unscaled* (baseline-width)
+    /// KV bytes, so when the deployment stores its KV cache at a narrower
+    /// width (kv_bytes_factor < 1, e.g. int8 KV = 0.5) the same physical
+    /// headroom holds proportionally more unscaled bytes — ~2× batch
+    /// capacity under KV-int8. The single source of the memory-budget
+    /// formula shared by the feasibility checker, DFTSP's memory bound and
+    /// the continuous-batching KV ledger.
     pub fn kv_budget_per_gpu(&self, cost: &CostModel, quant: &QuantSpec) -> f64 {
-        self.gpu.mem_bytes as f64 / quant.alpha - cost.weight_bytes() as f64
+        (self.gpu.mem_bytes as f64 / quant.alpha - cost.weight_bytes() as f64)
+            / quant.kv_bytes_factor()
     }
 
     /// Largest batch the cluster can hold in memory for a model+quant when
@@ -200,6 +206,31 @@ mod tests {
         let w8 = quant::by_label(quant::Precision::W8A16, quant::QuantAlgo::Gptq).unwrap();
         let w4 = quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::Gptq).unwrap();
         assert!(c.max_batch_by_memory(&cost, &w4, kv) > c.max_batch_by_memory(&cost, &w8, kv));
+    }
+
+    #[test]
+    fn kv_int8_doubles_memory_capacity() {
+        // W8A8 vs W8A8KV8 share α, so the KV-bytes factor alone must double
+        // the per-GPU KV budget and (floor effects aside) the batch bound.
+        let c = cluster();
+        let cost = CostModel::new(LlmSpec::bloom_7b());
+        let kv = cost.kv_peak_bytes_per_req(512, 512);
+        let base = quant::spec_for_label("W8A8/RTN").unwrap();
+        let kv8 = quant::spec_for_label("W8A8KV8/RTN").unwrap();
+        let b_base = c.kv_budget_per_gpu(&cost, &base);
+        let b_kv8 = c.kv_budget_per_gpu(&cost, &kv8);
+        assert!((b_kv8 - 2.0 * b_base).abs() < 1.0, "{b_kv8} vs 2×{b_base}");
+        let m_base = c.max_batch_by_memory(&cost, &base, kv);
+        let m_kv8 = c.max_batch_by_memory(&cost, &kv8, kv);
+        assert!(m_kv8 > m_base, "{m_kv8} must beat {m_base}");
+        assert!(m_kv8 >= 2 * m_base - c.num_gpus, "~2× up to per-GPU floors");
+        // A uniform batch sized to just overflow the base worst-GPU bound
+        // (total/G + max > budget) still fits under KV8's doubled budget.
+        let g = c.num_gpus as f64;
+        let n_over = (g * (b_base / kv as f64 - 1.0)).ceil() as usize + 1;
+        let batch: Vec<u64> = vec![kv; n_over];
+        assert!(!c.batch_fits_memory(&cost, &base, &batch));
+        assert!(c.batch_fits_memory(&cost, &kv8, &batch));
     }
 
     #[test]

@@ -10,33 +10,20 @@ use crate::cluster::{ClusterSpec, GpuSpec};
 use crate::coordinator::{EpochParams, PartitionPolicy};
 use crate::driver::BatchingMode;
 use crate::model::LlmSpec;
-use crate::quant::{self, Precision, QuantAlgo, QuantSpec};
+use crate::quant::{self, QuantSpec};
 use crate::sim::SimConfig;
 use crate::wireless::{dbm_to_watts, ChannelParams, RadioParams};
 use crate::workload::WorkloadParams;
 use std::path::Path;
 
-/// Parse a quantization label like "W8A16/GPTQ", "W4A16/ZQ-Local", "W16A16".
+/// Parse a quantization label like "W8A16/GPTQ", "W4A16/ZQ-Local",
+/// "W8A8KV8/RTN" or "W16A16". Catalog entries resolve to their measured
+/// α/β/ΔPPL; off-catalog precisions (the W8A8 class, and any `KV8` KV-int8
+/// variant) get the synthesized spec from `quant::spec_for_label`.
 pub fn parse_quant_label(label: &str) -> Result<QuantSpec, String> {
-    if label.eq_ignore_ascii_case("W16A16") || label.eq_ignore_ascii_case("fp16") {
-        return Ok(QuantSpec::fp16());
-    }
-    let (prec_s, algo_s) = label
-        .split_once('/')
-        .ok_or_else(|| format!("quant label `{label}` must be `W<w>A<a>/<algo>` or `W16A16`"))?;
-    let prec = match prec_s.to_ascii_uppercase().as_str() {
-        "W8A16" => Precision::W8A16,
-        "W4A16" => Precision::W4A16,
-        "W8A8" => Precision::W8A8,
-        other => return Err(format!("unknown precision `{other}`")),
-    };
-    let algo = match algo_s.to_ascii_uppercase().as_str() {
-        "GPTQ" => QuantAlgo::Gptq,
-        "ZQ-LOCAL" | "ZQLOCAL" => QuantAlgo::ZqLocal,
-        "RTN" => QuantAlgo::Rtn,
-        other => return Err(format!("unknown quant algorithm `{other}`")),
-    };
-    quant::by_label(prec, algo).ok_or_else(|| format!("`{label}` not in the quant catalog"))
+    quant::spec_for_label(label).ok_or_else(|| {
+        format!("quant label `{label}` must be `W<w>A<a>[KV8]/<algo>` or `W16A16`")
+    })
 }
 
 /// Build a `SimConfig` from a parsed TOML document.
@@ -275,6 +262,13 @@ s_pad = 256
         );
         assert!(parse_quant_label("W2A2/GPTQ").is_err());
         assert!(parse_quant_label("W8A16").is_err());
+        // Off-catalog precisions synthesize a spec instead of erroring; the
+        // KV8 suffix halves the KV-bytes factor and nothing else.
+        let w8a8 = parse_quant_label("W8A8/RTN").unwrap();
+        let kv8 = parse_quant_label("w8a8kv8/rtn").unwrap();
+        assert_eq!(kv8.label(), "W8A8KV8/RTN");
+        assert_eq!(kv8.alpha, w8a8.alpha);
+        assert_eq!(kv8.kv_bytes_factor(), 0.5);
     }
 
     #[test]

@@ -720,6 +720,72 @@ mod tests {
     }
 
     #[test]
+    fn kv_int8_admits_larger_concurrent_set_and_lifts_throughput() {
+        // End-to-end memory win of the int8 KV cache: on a KV-bound
+        // deployment the W8A8 gate serializes (budget ≈ 2.6 requests' KV,
+        // but the worst-GPU bound `total + max` caps co-residency at one),
+        // while W8A8KV8 — identical α/β, half the stored KV bytes — admits
+        // all four at once. Uploads then overlap decode instead of queueing
+        // behind it, and the later requests stop missing their deadlines.
+        let cost = CostModel::new(LlmSpec::bloom_3b());
+        let kv_one = cost.kv_peak_bytes_per_req(128, 512);
+        let alpha = quant::spec_for_label("W8A8/RTN").unwrap().alpha;
+        // One GPU sized so the unscaled-KV budget is 2.6 × one request.
+        let mem = (alpha * (cost.weight_bytes() as f64 + 2.6 * kv_one as f64)) as u64;
+        let run = |label: &str| {
+            let template = InstanceTemplate {
+                cost: CostModel::new(LlmSpec::bloom_3b()),
+                quant: quant::spec_for_label(label).unwrap(),
+                cluster: ClusterSpec::new(
+                    crate::cluster::GpuSpec {
+                        name: "kv-bound".into(),
+                        flops: 1.33e12,
+                        mem_bytes: mem,
+                    },
+                    1,
+                ),
+                epoch: EpochParams::default(),
+            };
+            let mut backend = ContinuousBackend::new(&template);
+            let mut metrics = Metrics::new();
+            let mut b = RequestBuilder::new();
+            for _ in 0..4 {
+                let req = b.build(0.0, 128, 512, 10.0, 0.0);
+                backend.pending.push(PendingEntry {
+                    kv_bytes: template.cost.kv_peak_bytes_per_req(128, 512),
+                    t_up: 2.0, // upload comparable to compute: overlap matters
+                    t_down: 0.0,
+                    req,
+                });
+            }
+            backend.simulate(20.0, true, &mut metrics);
+            metrics.horizon = 20.0;
+            (metrics, backend)
+        };
+        let (base, base_backend) = run("W8A8/RTN");
+        let (kv8, kv8_backend) = run("W8A8KV8/RTN");
+
+        // Same physical memory, twice the unscaled-KV capacity.
+        assert_eq!(
+            kv8_backend.ledger().capacity(),
+            2 * base_backend.ledger().capacity()
+        );
+        // Strictly larger concurrent set…
+        assert_eq!(base.inflight_occupancy.max(), 1.0, "base gate serializes");
+        assert_eq!(kv8.inflight_occupancy.max(), 4.0, "kv8 admits all four");
+        assert!(kv8_backend.ledger().peak() > base_backend.ledger().peak());
+        // …and strictly higher throughput on the same trace and horizon.
+        assert_eq!(kv8.completed_in_deadline, 4, "kv8 serves the whole trace");
+        assert!(
+            base.completed_in_deadline < 4,
+            "base must miss deadlines for the comparison to bite (got {})",
+            base.completed_in_deadline
+        );
+        assert!(kv8.throughput() > base.throughput());
+        assert!(kv8.mean_admission_latency() < base.mean_admission_latency());
+    }
+
+    #[test]
     fn oversized_request_rejected_not_deadlocked() {
         let t = template();
         let mut backend = ContinuousBackend::new(&t);

@@ -49,6 +49,21 @@ impl CostModel {
         self.kv_initial_bytes_per_req(s_pad) + self.kv_autoreg_bytes_per_req(n_out)
     }
 
+    /// Peak KV bytes as *stored* under a deployment's KV-cache width: the
+    /// unscaled baseline shrunk by `QuantSpec::kv_bytes_factor` (int8 KV
+    /// halves it). The admission ledgers keep accounting in unscaled bytes
+    /// against a factor-scaled budget (`ClusterSpec::kv_budget_per_gpu`) —
+    /// the two forms are equivalent; this one is for reporting physical
+    /// footprints.
+    pub fn kv_stored_bytes_per_req(
+        &self,
+        s_pad: u32,
+        n_out: u32,
+        quant: &crate::quant::QuantSpec,
+    ) -> u64 {
+        (self.kv_peak_bytes_per_req(s_pad, n_out) as f64 * quant.kv_bytes_factor()).ceil() as u64
+    }
+
     /// Per-request FLOPs of the *Initial Stage* (prefill over s' tokens):
     /// `L (6 s' d_m² + (4 s'² d_m + 2 s' d_m²) + 4 s' d_m d_f)`.
     pub fn prefill_flops_per_req(&self, s_pad: u32) -> f64 {
@@ -149,6 +164,16 @@ mod tests {
             m.kv_peak_bytes_per_req(128, 128),
             m.kv_initial_bytes_per_req(128) + m.kv_autoreg_bytes_per_req(128)
         );
+    }
+
+    #[test]
+    fn kv_stored_bytes_track_kv_width() {
+        let m = b3();
+        let base = crate::quant::spec_for_label("W8A8/RTN").unwrap();
+        let kv8 = crate::quant::spec_for_label("W8A8KV8/RTN").unwrap();
+        let unscaled = m.kv_peak_bytes_per_req(128, 128);
+        assert_eq!(m.kv_stored_bytes_per_req(128, 128, &base), unscaled);
+        assert_eq!(m.kv_stored_bytes_per_req(128, 128, &kv8), unscaled / 2);
     }
 
     #[test]

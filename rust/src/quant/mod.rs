@@ -10,33 +10,55 @@
 
 use std::collections::BTreeMap;
 
-/// Weight/activation bit-widths, e.g. W8A16.
+/// Weight/activation/KV-cache bit-widths, e.g. W8A16 or W8A8KV8.
+///
+/// `kv_bits` is the *stored* width of the KV-cache arenas, independent of the
+/// activation compute width: W8A8 still stores f32 KV (kv_bits = 16-class
+/// baseline), while a `KV8` suffix on the label selects per-row symmetric
+/// int8 KV storage in the host engine and halves the per-element KV
+/// footprint the memory ledger accounts for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Precision {
     pub w_bits: u8,
     pub a_bits: u8,
+    /// KV-cache storage width (16 = baseline, 8 = int8 KV arenas).
+    pub kv_bits: u8,
 }
 
 impl Precision {
     pub const W16A16: Precision = Precision {
         w_bits: 16,
         a_bits: 16,
+        kv_bits: 16,
     };
     pub const W8A16: Precision = Precision {
         w_bits: 8,
         a_bits: 16,
+        kv_bits: 16,
     };
     pub const W4A16: Precision = Precision {
         w_bits: 4,
         a_bits: 16,
+        kv_bits: 16,
     };
     pub const W8A8: Precision = Precision {
         w_bits: 8,
         a_bits: 8,
+        kv_bits: 16,
+    };
+    /// W8A8 compute plus int8 KV-cache storage (label "W8A8KV8").
+    pub const W8A8KV8: Precision = Precision {
+        w_bits: 8,
+        a_bits: 8,
+        kv_bits: 8,
     };
 
     pub fn label(&self) -> String {
-        format!("W{}A{}", self.w_bits, self.a_bits)
+        if self.kv_bits == 16 {
+            format!("W{}A{}", self.w_bits, self.a_bits)
+        } else {
+            format!("W{}A{}KV{}", self.w_bits, self.a_bits, self.kv_bits)
+        }
     }
 
     /// Weight-memory scaling vs the 16-bit baseline.
@@ -47,6 +69,12 @@ impl Precision {
     /// Activation/KV-cache memory scaling vs the 16-bit baseline.
     pub fn act_scale(&self) -> f64 {
         self.a_bits as f64 / 16.0
+    }
+
+    /// KV-cache bytes-per-element scaling vs the 16-bit baseline: 1.0 for
+    /// f32/fp16-class KV storage, 0.5 when the KV arenas are int8.
+    pub fn kv_scale(&self) -> f64 {
+        self.kv_bits as f64 / 16.0
     }
 }
 
@@ -131,6 +159,16 @@ impl QuantSpec {
     /// for `model` — constraint (1e): a_i ≤ f(ΔPPL).
     pub fn satisfies_accuracy(&self, model: &str, a: f64) -> bool {
         a <= self.accuracy_for(model)
+    }
+
+    /// KV-cache bytes-per-element factor vs the unscaled baseline the cost
+    /// model quotes: 1.0 for f32/fp16-class KV, 0.5 when the KV arenas are
+    /// stored int8 (kv_bits = 8). `ClusterSpec::kv_budget_per_gpu` divides
+    /// by this, so the same physical headroom admits 1/factor× the unscaled
+    /// KV bytes — the memory win of KV quantization, threaded through
+    /// `max_batch_by_memory`, the DFTSP memory bound and the `KvLedger`.
+    pub fn kv_bytes_factor(&self) -> f64 {
+        self.precision.kv_scale()
     }
 }
 
@@ -222,18 +260,27 @@ pub fn by_label(precision: Precision, algo: QuantAlgo) -> Option<QuantSpec> {
         .find(|q| q.precision == precision && q.algo == algo)
 }
 
-/// Parse a label like "W8A16/RTN" or "W16A16" into its parts.
+/// Parse a label like "W8A16/RTN", "W8A8KV8/RTN" or "W16A16" into its
+/// parts. An optional `KV8` suffix on the precision selects int8 KV-cache
+/// storage (kv_bits = 8); without it the KV arenas stay at the baseline
+/// width.
 pub fn parse_label(label: &str) -> Option<(Precision, QuantAlgo)> {
     if label.eq_ignore_ascii_case("W16A16") || label.eq_ignore_ascii_case("fp16") {
         return Some((Precision::W16A16, QuantAlgo::None));
     }
     let (prec_s, algo_s) = label.split_once('/')?;
-    let precision = match prec_s.to_ascii_uppercase().as_str() {
+    let prec_upper = prec_s.to_ascii_uppercase();
+    let (base_s, kv_bits) = match prec_upper.strip_suffix("KV8") {
+        Some(base) => (base, 8u8),
+        None => (prec_upper.as_str(), 16u8),
+    };
+    let base = match base_s {
         "W8A16" => Precision::W8A16,
         "W4A16" => Precision::W4A16,
         "W8A8" => Precision::W8A8,
         _ => return None,
     };
+    let precision = Precision { kv_bits, ..base };
     let algo = match algo_s.to_ascii_uppercase().as_str() {
         "GPTQ" => QuantAlgo::Gptq,
         "ZQ-LOCAL" | "ZQLOCAL" => QuantAlgo::ZqLocal,
@@ -255,10 +302,14 @@ pub fn spec_for_label(label: &str) -> Option<QuantSpec> {
     if let Some(spec) = by_label(precision, algo) {
         return Some(spec);
     }
-    let (alpha, beta) = match precision {
-        Precision::W16A16 => (1.0, 1.0),
-        Precision::W8A16 => (0.55, 0.82),
-        Precision::W4A16 => (0.35, 0.72),
+    // KV-int8 variants share their base precision's α/β: α already covers
+    // the aggregate weight saving, and the KV-storage win is threaded
+    // separately through `kv_bytes_factor` — keeping the pair identical
+    // isolates the KV factor when comparing e.g. W8A8 vs W8A8KV8.
+    let (alpha, beta) = match (precision.w_bits, precision.a_bits) {
+        (16, 16) => (1.0, 1.0),
+        (8, 16) => (0.55, 0.82),
+        (4, 16) => (0.35, 0.72),
         _ => (0.40, 0.75), // W8A8-class
     };
     Some(QuantSpec {
@@ -382,5 +433,34 @@ mod tests {
             by_label(Precision::W4A16, QuantAlgo::ZqLocal).unwrap().label(),
             "W4A16/ZQ-Local"
         );
+        assert_eq!(Precision::W8A8KV8.label(), "W8A8KV8");
+    }
+
+    #[test]
+    fn kv8_label_round_trips_and_halves_kv_factor() {
+        let (p, a) = parse_label("W8A8KV8/RTN").unwrap();
+        assert_eq!(p, Precision::W8A8KV8);
+        assert_eq!(a, QuantAlgo::Rtn);
+        assert_eq!(p.kv_bits, 8);
+        assert_eq!(p.kv_scale(), 0.5);
+        // Existing labels keep baseline KV storage.
+        let (p16, _) = parse_label("W8A8/RTN").unwrap();
+        assert_eq!(p16.kv_bits, 16);
+        assert_eq!(p16.kv_scale(), 1.0);
+        // Label formatting round-trips through the parser.
+        assert_eq!(parse_label(&format!("{}/RTN", p.label())).unwrap().0, p);
+    }
+
+    #[test]
+    fn kv8_spec_isolates_the_kv_factor() {
+        // Same α/β as the base W8A8 spec, so any admission difference in the
+        // e2e trace is the KV-bytes factor and nothing else.
+        let base = spec_for_label("W8A8/RTN").unwrap();
+        let kv8 = spec_for_label("W8A8KV8/RTN").unwrap();
+        assert_eq!(base.alpha, kv8.alpha);
+        assert_eq!(base.beta, kv8.beta);
+        assert_eq!(base.kv_bytes_factor(), 1.0);
+        assert_eq!(kv8.kv_bytes_factor(), 0.5);
+        assert_eq!(QuantSpec::fp16().kv_bytes_factor(), 1.0);
     }
 }

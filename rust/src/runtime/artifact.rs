@@ -148,12 +148,41 @@ pub struct Tensor {
 
 /// One int8-quantized tensor (dtype 1): codes plus a per-tensor f32 scale.
 /// Dequantized value = `codes[i] as f32 * scale`.
+///
+/// Alongside the row-major `codes` (the container payload, still consumed
+/// by [`LoadedTensor::to_dense`] and the reference kernels), construction
+/// via [`QuantizedTensor::new`] builds `packed` — the column-blocked layout
+/// ([`crate::runtime::kernels::pack_codes_col_blocked`]) the tiled int8
+/// kernels stream contiguously. Built once at load; the hot path never
+/// re-packs.
 #[derive(Debug, Clone)]
 pub struct QuantizedTensor {
     pub name: String,
     pub dims: Vec<usize>,
     pub codes: Vec<i8>,
     pub scale: f32,
+    /// Column-blocked packing of `codes` for the tiled kernels
+    /// (`[n/NR panels] × [k] × [NR]`, zero-padded past `n`).
+    pub packed: Vec<i8>,
+}
+
+impl QuantizedTensor {
+    /// Build a quantized tensor, packing its codes for the tiled kernels.
+    /// `dims` is interpreted as `[k, n...]` (a matmul maps `k` inputs to
+    /// `n = product(dims[1..])` outputs, matching the engine's `[k, n]`
+    /// weight shapes).
+    pub fn new(name: String, dims: Vec<usize>, codes: Vec<i8>, scale: f32) -> Self {
+        let k = dims.first().copied().unwrap_or(0);
+        let n: usize = dims.iter().skip(1).product();
+        let packed = crate::runtime::kernels::pack_codes_col_blocked(&codes, k, n);
+        QuantizedTensor {
+            name,
+            dims,
+            codes,
+            scale,
+            packed,
+        }
+    }
 }
 
 /// A tensor as stored in the container: dense f32 or int8 + scale. The host
@@ -300,12 +329,9 @@ pub fn load_weights(path: &Path) -> Result<Vec<LoadedTensor>, String> {
                     ));
                 }
                 let codes = raw[4..].iter().map(|&b| b as i8).collect();
-                out.push(LoadedTensor::Quant(QuantizedTensor {
-                    name,
-                    dims,
-                    codes,
-                    scale,
-                }));
+                out.push(LoadedTensor::Quant(QuantizedTensor::new(
+                    name, dims, codes, scale,
+                )));
             }
             other => {
                 return Err(format!(
@@ -500,6 +526,8 @@ mod tests {
         assert_eq!(q.dims, vec![2, 2]);
         assert_eq!(q.scale, scale);
         assert_eq!(q.codes, codes);
+        // [k=2, n=2] packs into one zero-padded NR=4 panel, k-interleaved.
+        assert_eq!(q.packed, vec![-3, 0, 0, 0, 5, 127, 0, 0]);
         let dense = tensors[0].to_dense();
         assert_eq!(dense.data, vec![-1.5, 0.0, 2.5, 63.5]);
     }

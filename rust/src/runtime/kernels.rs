@@ -1,12 +1,27 @@
 //! The host engine's compute kernels: dense f32, W8A16 (int8 weights,
 //! dequantized on the fly against f32 activations), and W8A8 (int8 weights ×
-//! per-row int8-quantized activations with i32 accumulation).
+//! per-row int8-quantized activations with i32 accumulation) — each in a
+//! retained *reference* form (`matmul_*_into`, plain k-ascending loops) and
+//! a *tiled* form (`matmul_*_tiled_into`) that the dispatcher
+//! ([`matmul_into`]) actually runs.
 //!
 //! Every kernel writes into a caller-provided output slice — the decode hot
 //! path in [`crate::runtime::host`] runs them against reusable scratch
 //! buffers and performs no heap allocation in steady state. Allocating
 //! wrappers ([`matmul_param`], [`causal_attention`]) serve the prefill path,
 //! where per-request setup cost dominates anyway.
+//!
+//! ## Tiling
+//!
+//! The tiled kernels use cache blocking (MC×NC×KC, see the `TILE_*`
+//! constants) with [`TILE_NR`]-wide register accumulation, and the int8
+//! kernels read weights from a packed column-blocked layout
+//! ([`pack_codes_col_blocked`], built once per tensor at load) so the inner
+//! loop streams `NR` weight codes per cache line instead of striding `n`
+//! bytes per product. Tiling changes memory access order only, never the
+//! per-element arithmetic order (KC blocks ascend; i32 accumulation is
+//! exact), so every tiled kernel is **bit-identical** to its reference —
+//! property-tested in `tests/proptest_engine.rs`.
 //!
 //! ## Reduction order and exactness
 //!
@@ -20,7 +35,10 @@
 //! too. W8A8 quantizes each activation row symmetrically to int8 and
 //! accumulates exactly in i32; its only error versus the dequantize-then-f32
 //! oracle is the activation rounding — at most one quantization step
-//! (`a_scale / 2 · |code| · w_scale`) per accumulated product.
+//! (`a_scale / 2 · |code| · w_scale`) per accumulated product. The int8
+//! KV-cache primitives ([`dot_i8_dequant`], [`axpy_i8_dequant`]) carry the
+//! same discipline: bit-exact versus the f32 ops over pre-dequantized rows,
+//! within one quantization step per accumulated product of the exact rows.
 
 use crate::runtime::artifact::LoadedTensor;
 
@@ -77,11 +95,26 @@ pub fn matmul_w8a16_into(
 /// `np.round` in the Python emitter/mirror exactly) and clamped to
 /// `[-127, 127]`. Returns the scale. The per-*tensor* weight counterpart is
 /// [`quantize_per_tensor_i8`].
+///
+/// Non-finite inputs are handled *explicitly* so a NaN/Inf activation cannot
+/// poison a quantized row (or, with int8 KV, a cache slot): non-finite
+/// elements are excluded from the scale and quantize to code 0, and the
+/// returned scale is always finite and positive. Finite inputs are
+/// bit-identical to the pre-hardening behaviour (`f32::max` already ignored
+/// NaN in the scale fold; an Inf, however, used to drive the scale to Inf
+/// and zero out the whole row — now it only zeroes itself). Mirrored in
+/// `python/compile/quantize.py::quantize_int8_per_tensor`.
 pub fn quantize_row_i8(row: &[f32], out: &mut [i8]) -> f32 {
-    let max = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let max = row
+        .iter()
+        .fold(0f32, |m, &v| if v.is_finite() { m.max(v.abs()) } else { m });
     let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
     for (o, &v) in out.iter_mut().zip(row.iter()) {
-        *o = (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8;
+        *o = if v.is_finite() {
+            (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8
+        } else {
+            0
+        };
     }
     scale
 }
@@ -117,9 +150,234 @@ pub fn matmul_w8a8_into(
     }
 }
 
+/// Register-blocking width of the tiled kernels: each inner loop iteration
+/// feeds `NR` output-column accumulators held in registers. The packed
+/// weight layout ([`pack_codes_col_blocked`]) is interleaved at this width.
+pub const TILE_NR: usize = 4;
+/// Cache-blocking row count (MC): rows of `x` revisited per KC panel.
+pub const TILE_MC: usize = 32;
+/// Cache-blocking column count (NC): output columns per panel (a multiple
+/// of [`TILE_NR`], so full panels stay register-aligned).
+pub const TILE_NC: usize = 64;
+/// Cache-blocking depth (KC): the k-slab kept hot across an MC×NC tile.
+pub const TILE_KC: usize = 64;
+
+/// Pack row-major `[k, n]` int8 weight codes into the column-blocked layout
+/// the tiled kernels stream contiguously:
+///
+/// ```text
+/// packed[jb*k*NR + kk*NR + r] = codes[kk*n + jb*NR + r]
+/// ```
+///
+/// Panel `jb` holds columns `jb*NR .. jb*NR+NR` interleaved by k, so the
+/// inner loop over `kk` reads `NR` weights from one cache line instead of
+/// striding `n` bytes per product (the old W8A8 inner-loop walk). Columns
+/// past `n` (when `n` is not a multiple of `NR`) pad with zero codes —
+/// `n.div_ceil(NR) * k * NR` bytes total. Built once per tensor at load
+/// ([`crate::runtime::artifact::QuantizedTensor::new`]).
+pub fn pack_codes_col_blocked(codes: &[i8], k: usize, n: usize) -> Vec<i8> {
+    debug_assert_eq!(codes.len(), k * n);
+    let nb = n.div_ceil(TILE_NR);
+    let mut packed = vec![0i8; nb * k * TILE_NR];
+    for jb in 0..nb {
+        let width = TILE_NR.min(n - jb * TILE_NR);
+        let base = jb * k * TILE_NR;
+        for kk in 0..k {
+            for r in 0..width {
+                packed[base + kk * TILE_NR + r] = codes[kk * n + jb * TILE_NR + r];
+            }
+        }
+    }
+    packed
+}
+
+/// Cache-blocked (MC×NC×KC), register-accumulating (NR-wide) f32 matmul.
+/// **Bit-identical** to [`matmul_f32_into`]: per output element the KC
+/// blocks are visited in ascending order (load partial → accumulate the
+/// block's k-ascending products in a register → store), so the f32 addition
+/// chain is exactly the reference kernel's — property-tested in
+/// `tests/proptest_engine.rs`.
+pub fn matmul_f32_tiled_into(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    let mut jc = 0;
+    while jc < n {
+        let nc = TILE_NC.min(n - jc);
+        let mut kc = 0;
+        while kc < k {
+            let kb = TILE_KC.min(k - kc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = TILE_MC.min(m - ic);
+                for i in ic..ic + mc {
+                    let xrow = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let mut j = jc;
+                    while j + TILE_NR <= jc + nc {
+                        let mut a0 = orow[j];
+                        let mut a1 = orow[j + 1];
+                        let mut a2 = orow[j + 2];
+                        let mut a3 = orow[j + 3];
+                        for (kk, &xv) in xrow.iter().enumerate().take(kc + kb).skip(kc) {
+                            let wrow = &w[kk * n + j..kk * n + j + TILE_NR];
+                            a0 += xv * wrow[0];
+                            a1 += xv * wrow[1];
+                            a2 += xv * wrow[2];
+                            a3 += xv * wrow[3];
+                        }
+                        orow[j] = a0;
+                        orow[j + 1] = a1;
+                        orow[j + 2] = a2;
+                        orow[j + 3] = a3;
+                        j += TILE_NR;
+                    }
+                    while j < jc + nc {
+                        let mut acc = orow[j];
+                        for (kk, &xv) in xrow.iter().enumerate().take(kc + kb).skip(kc) {
+                            acc += xv * w[kk * n + j];
+                        }
+                        orow[j] = acc;
+                        j += 1;
+                    }
+                }
+                ic += mc;
+            }
+            kc += kb;
+        }
+        jc += nc;
+    }
+}
+
+/// Tiled W8A16 over the packed column-blocked codes: dequantizes
+/// `code as f32 * scale` inline in exactly the reference op order, so it is
+/// bit-identical to [`matmul_w8a16_into`] (and hence to the
+/// dequantize-then-f32 oracle). `packed` is [`pack_codes_col_blocked`]
+/// output for a `[k, n]` tensor.
+pub fn matmul_w8a16_tiled_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    packed: &[i8],
+    scale: f32,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(packed.len(), n.div_ceil(TILE_NR) * k * TILE_NR);
+    debug_assert!(out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    let mut jc = 0;
+    while jc < n {
+        let nc = TILE_NC.min(n - jc);
+        let mut kc = 0;
+        while kc < k {
+            let kb = TILE_KC.min(k - kc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = TILE_MC.min(m - ic);
+                for i in ic..ic + mc {
+                    let xrow = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let mut j = jc;
+                    // NC is a multiple of NR, so within a panel `j` stays
+                    // NR-aligned: jb indexes whole packed panels.
+                    while j + TILE_NR <= jc + nc {
+                        let panel = &packed[(j / TILE_NR) * k * TILE_NR..];
+                        let mut a0 = orow[j];
+                        let mut a1 = orow[j + 1];
+                        let mut a2 = orow[j + 2];
+                        let mut a3 = orow[j + 3];
+                        for (kk, &xv) in xrow.iter().enumerate().take(kc + kb).skip(kc) {
+                            let p = &panel[kk * TILE_NR..kk * TILE_NR + TILE_NR];
+                            a0 += xv * (p[0] as f32 * scale);
+                            a1 += xv * (p[1] as f32 * scale);
+                            a2 += xv * (p[2] as f32 * scale);
+                            a3 += xv * (p[3] as f32 * scale);
+                        }
+                        orow[j] = a0;
+                        orow[j + 1] = a1;
+                        orow[j + 2] = a2;
+                        orow[j + 3] = a3;
+                        j += TILE_NR;
+                    }
+                    while j < jc + nc {
+                        let panel = &packed[(j / TILE_NR) * k * TILE_NR..];
+                        let r = j % TILE_NR;
+                        let mut acc = orow[j];
+                        for (kk, &xv) in xrow.iter().enumerate().take(kc + kb).skip(kc) {
+                            acc += xv * (panel[kk * TILE_NR + r] as f32 * scale);
+                        }
+                        orow[j] = acc;
+                        j += 1;
+                    }
+                }
+                ic += mc;
+            }
+            kc += kb;
+        }
+        jc += nc;
+    }
+}
+
+/// Tiled W8A8 over the packed column-blocked codes: per-row int8 activations
+/// against contiguous NR-wide weight panels, exact i32 accumulation held in
+/// registers across the whole k range (i32 addition is associative, so the
+/// result is bit-identical to [`matmul_w8a8_into`] regardless of blocking;
+/// no overflow — |codes| ≤ 127 bounds the sum by 127²·k « i32::MAX for any
+/// k this engine runs). This is the kernel that fixes the old column-strided
+/// `codes[kk*n + j]` walk.
+pub fn matmul_w8a8_tiled_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    packed: &[i8],
+    w_scale: f32,
+    n: usize,
+    qrow: &mut [i8],
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= m * k);
+    debug_assert_eq!(packed.len(), n.div_ceil(TILE_NR) * k * TILE_NR);
+    debug_assert!(out.len() >= m * n);
+    debug_assert!(qrow.len() >= k);
+    let nb = n.div_ceil(TILE_NR);
+    let mut ic = 0;
+    while ic < m {
+        let mc = TILE_MC.min(m - ic);
+        for i in ic..ic + mc {
+            let a_scale = quantize_row_i8(&x[i * k..(i + 1) * k], &mut qrow[..k]);
+            let dq = a_scale * w_scale;
+            let orow = &mut out[i * n..(i + 1) * n];
+            for jb in 0..nb {
+                let panel = &packed[jb * k * TILE_NR..(jb + 1) * k * TILE_NR];
+                let mut acc = [0i32; TILE_NR];
+                for (kk, &q) in qrow[..k].iter().enumerate() {
+                    let q = q as i32;
+                    let p = &panel[kk * TILE_NR..kk * TILE_NR + TILE_NR];
+                    acc[0] += q * p[0] as i32;
+                    acc[1] += q * p[1] as i32;
+                    acc[2] += q * p[2] as i32;
+                    acc[3] += q * p[3] as i32;
+                }
+                let width = TILE_NR.min(n - jb * TILE_NR);
+                for (r, &a) in acc.iter().enumerate().take(width) {
+                    orow[jb * TILE_NR + r] = a as f32 * dq;
+                }
+            }
+        }
+        ic += mc;
+    }
+}
+
 /// Kernel dispatch by weight storage and activation precision: dense
-/// tensors always run the f32 path; int8 tensors run W8A8 when the
-/// deployment's activation width is ≤ 8 bits, W8A16 otherwise.
+/// tensors always run the (tiled) f32 path; int8 tensors run tiled W8A8
+/// when the deployment's activation width is ≤ 8 bits, tiled W8A16
+/// otherwise — all three against the packed column-blocked weight layout
+/// built at load. The untiled `matmul_*_into` kernels above are retained as
+/// bit-exactness oracles (property-tested) and as the bench's
+/// tiled-vs-reference baseline.
 pub fn matmul_into(
     x: &[f32],
     m: usize,
@@ -131,11 +389,11 @@ pub fn matmul_into(
     out: &mut [f32],
 ) {
     match w {
-        LoadedTensor::Dense(t) => matmul_f32_into(x, m, k, &t.data, n, out),
+        LoadedTensor::Dense(t) => matmul_f32_tiled_into(x, m, k, &t.data, n, out),
         LoadedTensor::Quant(t) if a_bits <= 8 => {
-            matmul_w8a8_into(x, m, k, &t.codes, t.scale, n, qrow, out)
+            matmul_w8a8_tiled_into(x, m, k, &t.packed, t.scale, n, qrow, out)
         }
-        LoadedTensor::Quant(t) => matmul_w8a16_into(x, m, k, &t.codes, t.scale, n, out),
+        LoadedTensor::Quant(t) => matmul_w8a16_tiled_into(x, m, k, &t.packed, t.scale, n, out),
     }
 }
 
@@ -170,6 +428,31 @@ pub fn quantize_per_tensor_i8(data: &[f32]) -> (Vec<i8>, f32) {
 /// Dot product with k-ascending accumulation.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+/// Dot product of an f32 query row against an int8-quantized KV row,
+/// dequantizing `code as f32 * scale` inline in exactly the op order
+/// [`dot`] uses over a pre-dequantized row — so it matches that oracle
+/// bit-for-bit. Versus the *exact* (unquantized) row the error is bounded
+/// by one quantization step per accumulated product:
+/// `|dot_i8 − dot_exact| ≤ Σ_d |a_d| · scale/2` (each stored code is within
+/// half a step of the true value; property-tested in
+/// `tests/proptest_engine.rs`), mirroring the W8A8 activation bound.
+pub fn dot_i8_dequant(a: &[f32], codes: &[i8], scale: f32) -> f32 {
+    a.iter()
+        .zip(codes.iter())
+        .map(|(&x, &c)| x * (c as f32 * scale))
+        .sum()
+}
+
+/// `out += w * (code as f32 * scale)` elementwise — the attention V-mix
+/// against an int8-quantized value row, same op order as the f32 mix over a
+/// pre-dequantized row (bit-exact vs that oracle; within `w · scale/2` per
+/// element of the exact row).
+pub fn axpy_i8_dequant(w: f32, codes: &[i8], scale: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o += w * (c as f32 * scale);
+    }
 }
 
 /// Elementwise `a += b` (residual connections).
@@ -321,12 +604,12 @@ mod tests {
             data: w.clone(),
         });
         let (codes, scale) = quantize_per_tensor_i8(&w);
-        let quant = LoadedTensor::Quant(QuantizedTensor {
-            name: "w".into(),
-            dims: vec![k, n],
-            codes: codes.clone(),
+        let quant = LoadedTensor::Quant(QuantizedTensor::new(
+            "w".into(),
+            vec![k, n],
+            codes.clone(),
             scale,
-        });
+        ));
         let mut qrow = vec![0i8; k];
         let mut a = vec![0f32; m * n];
         let mut b = vec![0f32; m * n];
@@ -349,5 +632,103 @@ mod tests {
         let (codes, wscale) = quantize_per_tensor_i8(&[0.0; 6]);
         assert_eq!(wscale, 1.0);
         assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn non_finite_inputs_quantize_to_zero_with_finite_scale() {
+        // NaN/Inf must neither poison the scale nor survive into the codes —
+        // the explicit rule that keeps a NaN activation from corrupting a
+        // quantized KV slot. Finite elements round exactly as before.
+        let mut out = vec![9i8; 5];
+        let scale = quantize_row_i8(&[f32::NAN, 127.0, f32::INFINITY, -63.5, f32::NEG_INFINITY], &mut out);
+        assert_eq!(scale, 1.0, "scale comes from the finite elements only");
+        assert_eq!(out, vec![0, 127, 0, -64, 0]);
+        // All-non-finite row: scale 1.0, all-zero codes.
+        let scale = quantize_row_i8(&[f32::NAN, f32::INFINITY], &mut out[..2]);
+        assert_eq!(scale, 1.0);
+        assert_eq!(&out[..2], &[0, 0]);
+        assert!(scale.is_finite() && scale > 0.0);
+    }
+
+    #[test]
+    fn packing_is_column_blocked_and_zero_padded() {
+        // [k=2, n=6]: panels of NR=4 columns, second panel half-padded.
+        let codes: Vec<i8> = (1..=12).collect();
+        let p = pack_codes_col_blocked(&codes, 2, 6);
+        assert_eq!(p.len(), 2 * 2 * TILE_NR);
+        // panel 0: cols 0..4 of rows 0,1
+        assert_eq!(&p[..8], &[1, 2, 3, 4, 7, 8, 9, 10]);
+        // panel 1: cols 4..6 + two zero pad lanes
+        assert_eq!(&p[8..], &[5, 6, 0, 0, 11, 12, 0, 0]);
+    }
+
+    #[test]
+    fn tiled_kernels_match_reference_bitexact() {
+        // Ragged shapes straddling every tile boundary, including k = 0 and
+        // n not a multiple of NR. The exhaustive randomized version lives in
+        // tests/proptest_engine.rs.
+        for (m, k, n) in [
+            (1usize, 0usize, 3usize),
+            (3, 7, 5),
+            (TILE_MC + 1, TILE_KC + 3, TILE_NC + 6),
+            (2, 130, 66),
+        ] {
+            let w: Vec<f32> = (0..k * n).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13).collect();
+            let x: Vec<f32> = (0..m * k).map(|i| ((i * 11 % 13) as f32 - 6.0) * 0.4).collect();
+            let mut want = vec![0f32; m * n];
+            matmul_f32_into(&x, m, k, &w, n, &mut want);
+            let mut got = vec![0f32; m * n];
+            matmul_f32_tiled_into(&x, m, k, &w, n, &mut got);
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "f32 ({m},{k},{n}) elem {i}");
+            }
+
+            let (codes, scale) = quantize_per_tensor_i8(&w);
+            let packed = pack_codes_col_blocked(&codes, k, n);
+            let mut want16 = vec![0f32; m * n];
+            matmul_w8a16_into(&x, m, k, &codes, scale, n, &mut want16);
+            let mut got16 = vec![0f32; m * n];
+            matmul_w8a16_tiled_into(&x, m, k, &packed, scale, n, &mut got16);
+            for (i, (a, b)) in want16.iter().zip(got16.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "w8a16 ({m},{k},{n}) elem {i}");
+            }
+
+            let mut qrow = vec![0i8; k.max(1)];
+            let mut want8 = vec![0f32; m * n];
+            matmul_w8a8_into(&x, m, k, &codes, scale, n, &mut qrow, &mut want8);
+            let mut got8 = vec![0f32; m * n];
+            matmul_w8a8_tiled_into(&x, m, k, &packed, scale, n, &mut qrow, &mut got8);
+            for (i, (a, b)) in want8.iter().zip(got8.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "w8a8 ({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_kv_primitives_match_dequantized_oracle_bitexact() {
+        let row: Vec<f32> = (0..9).map(|i| (i as f32 - 4.0) * 0.37).collect();
+        let q: Vec<f32> = (0..9).map(|i| ((i * 5 % 7) as f32 - 3.0) * 0.2).collect();
+        let mut codes = vec![0i8; 9];
+        let scale = quantize_row_i8(&row, &mut codes);
+        let deq: Vec<f32> = codes.iter().map(|&c| c as f32 * scale).collect();
+        assert_eq!(
+            dot_i8_dequant(&q, &codes, scale).to_bits(),
+            dot(&q, &deq).to_bits(),
+            "dot_i8_dequant must equal the f32 dot over dequantized values"
+        );
+        // Error vs the exact row: one quantization step per product.
+        let exact = dot(&q, &row);
+        let tol: f32 = q.iter().map(|v| v.abs()).sum::<f32>() * (scale / 2.0) + 1e-6;
+        assert!((dot_i8_dequant(&q, &codes, scale) - exact).abs() <= tol);
+
+        let mut a = vec![0.5f32; 9];
+        let mut b = a.clone();
+        axpy_i8_dequant(0.3, &codes, scale, &mut a);
+        for (o, &d) in b.iter_mut().zip(deq.iter()) {
+            *o += 0.3 * d;
+        }
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "axpy_i8_dequant oracle");
+        }
     }
 }

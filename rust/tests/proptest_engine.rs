@@ -3,13 +3,20 @@
 //!
 //! 1. Batched decode ≡ the retained per-sequence reference path, *bit-
 //!    exactly*, on arbitrary active-slot patterns — including holes left by
-//!    `release` and mid-flight `prefill_into` admissions — across all three
-//!    kernel precisions (f32, W8A16, W8A8).
+//!    `release` and mid-flight `prefill_into` admissions — across all four
+//!    kernel precisions (f32, W8A16, W8A8, W8A8KV8).
 //! 2. The W8A16 kernel matches a dequantize-then-f32-matmul oracle
 //!    bit-for-bit; the W8A8 kernel matches it within one quantization step
 //!    per accumulated product.
 //! 3. The steady-state decode loop never grows its tracked buffers
 //!    (scratch or KV arena) — the allocation-free property.
+//! 4. The tiled cache-blocked kernels are bit-identical to the k-ascending
+//!    reference kernels on ragged shapes (k = 0, n not a multiple of the
+//!    register tile, blocks larger than the cache tiles).
+//! 5. The int8-KV dot primitive stays within the documented
+//!    one-quantization-step-per-product bound of the exact f32 dot, and an
+//!    int8-KV engine tracks its f32-KV sibling within that bound through
+//!    release holes and mid-flight admissions.
 //!
 //! Seeded-case harness (no proptest crate offline): `PROPTEST_CASES`
 //! controls the case count (CI pins it to 64 for deterministic, bounded
@@ -17,7 +24,9 @@
 
 use edgellm::quant::Precision;
 use edgellm::runtime::kernels::{
-    matmul_f32_into, matmul_w8a16_into, matmul_w8a8_into, quantize_per_tensor_i8, quantize_row_i8,
+    dot, dot_i8_dequant, matmul_f32_into, matmul_f32_tiled_into, matmul_w8a16_into,
+    matmul_w8a16_tiled_into, matmul_w8a8_into, matmul_w8a8_tiled_into, pack_codes_col_blocked,
+    quantize_per_tensor_i8, quantize_row_i8,
 };
 use edgellm::runtime::{argmax, Engine, KvCache, SyntheticSpec};
 use edgellm::util::rng::Rng;
@@ -29,8 +38,13 @@ fn cases(default: u64) -> u64 {
         .unwrap_or(default)
 }
 
-fn precisions() -> [Precision; 3] {
-    [Precision::W16A16, Precision::W8A16, Precision::W8A8]
+fn precisions() -> [Precision; 4] {
+    [
+        Precision::W16A16,
+        Precision::W8A16,
+        Precision::W8A8,
+        Precision::W8A8KV8,
+    ]
 }
 
 fn random_prompt(rng: &mut Rng, max_prompt: usize, vocab: usize) -> Vec<i32> {
@@ -60,7 +74,7 @@ fn assert_rows_bitexact(a: &[Vec<f32>], b: &[Vec<f32>], what: &str, seed: u64) {
 fn prop_batched_decode_equals_reference_on_arbitrary_slot_patterns() {
     for seed in 0..cases(48) {
         let mut rng = Rng::new(0xE17_0001 + seed);
-        let precision = precisions()[rng.below(3) as usize];
+        let precision = precisions()[rng.below(4) as usize];
         let mut spec = SyntheticSpec::tiny();
         spec.seed = 0xBADA55 + seed; // new weights per case
         let engine = Engine::synthetic(&spec, precision);
@@ -169,7 +183,7 @@ fn prop_quant_kernels_match_dequantize_oracle() {
 fn prop_steady_state_decode_is_allocation_free() {
     for seed in 0..cases(24) {
         let mut rng = Rng::new(0xE17_0003 + seed);
-        let precision = precisions()[rng.below(3) as usize];
+        let precision = precisions()[rng.below(4) as usize];
         let spec = SyntheticSpec::tiny();
         let engine = Engine::synthetic(&spec, precision);
         let n = rng.int_range(1, engine.max_batch() as u64) as usize;
@@ -195,6 +209,155 @@ fn prop_steady_state_decode_is_allocation_free() {
         );
         assert_eq!(cache.grow_events(), 0, "seed {seed}: arena grew");
         assert_eq!(flat.capacity(), cap0, "seed {seed}: logits buffer grew");
+    }
+}
+
+/// PROPERTY: the tiled cache-blocked kernels are bit-identical to the
+/// k-ascending reference kernels on ragged shapes — k = 0, n not a multiple
+/// of the register tile, and dimensions straddling the cache tiles.
+#[test]
+fn prop_tiled_kernels_equal_reference_bitexact() {
+    use edgellm::runtime::kernels::{TILE_KC, TILE_MC, TILE_NC};
+    for seed in 0..cases(64) {
+        let mut rng = Rng::new(0xE17_0004 + seed);
+        // Bias toward ragged edges: k = 0 and n ≢ 0 (mod TILE_NR) must occur.
+        let m = rng.int_range(1, (TILE_MC + 9) as u64) as usize;
+        let k = match rng.below(8) {
+            0 => 0,
+            1 => rng.int_range(TILE_KC as u64, (2 * TILE_KC + 5) as u64) as usize,
+            _ => rng.int_range(1, 48) as usize,
+        };
+        let n = match rng.below(8) {
+            0 => rng.int_range(TILE_NC as u64, (TILE_NC + 13) as u64) as usize,
+            _ => rng.int_range(1, 48) as usize,
+        };
+        let x: Vec<f32> = (0..m * k)
+            .map(|_| rng.uniform(-2.0, 2.0) as f32)
+            .collect();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| rng.uniform(-1.5, 1.5) as f32)
+            .collect();
+        let (codes, w_scale) = quantize_per_tensor_i8(&w);
+        let packed = pack_codes_col_blocked(&codes, k, n);
+        let ctx = format!("seed {seed}: m={m} k={k} n={n}");
+
+        let mut reference = vec![0f32; m * n];
+        let mut tiled = vec![1f32; m * n]; // poison: tiled must overwrite
+        matmul_f32_into(&x, m, k, &w, n, &mut reference);
+        matmul_f32_tiled_into(&x, m, k, &w, n, &mut tiled);
+        for (i, (a, b)) in reference.iter().zip(tiled.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: f32 elem {i}: {a} vs {b}");
+        }
+
+        matmul_w8a16_into(&x, m, k, &codes, w_scale, n, &mut reference);
+        tiled.fill(1.0);
+        matmul_w8a16_tiled_into(&x, m, k, &packed, w_scale, n, &mut tiled);
+        for (i, (a, b)) in reference.iter().zip(tiled.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: W8A16 elem {i}: {a} vs {b}"
+            );
+        }
+
+        let mut qrow = vec![0i8; k];
+        matmul_w8a8_into(&x, m, k, &codes, w_scale, n, &mut qrow, &mut reference);
+        tiled.fill(1.0);
+        matmul_w8a8_tiled_into(&x, m, k, &packed, w_scale, n, &mut qrow, &mut tiled);
+        for (i, (a, b)) in reference.iter().zip(tiled.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: W8A8 elem {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// PROPERTY: int8-KV error stays within the documented bound.
+///
+/// Kernel level: `dot_i8_dequant` against the exact f32 `dot` differs by at
+/// most `Σ_d |q_d| · step/2` — one quantization step per accumulated product
+/// (plus f32 rounding slop), the same shape of bound the W8A8 matmul
+/// carries. Engine level: a W8A8KV8 engine fed the *same* token stream as
+/// its f32-KV W8A8 sibling keeps prefill logits bit-identical (prefill
+/// attends over exact f32 K/V before quantize-on-write) and decode logits
+/// within a small relative drift, through release holes and mid-flight
+/// admissions.
+#[test]
+fn prop_int8_kv_error_is_bounded_vs_f32_kv_oracle() {
+    for seed in 0..cases(32) {
+        let mut rng = Rng::new(0xE17_0005 + seed);
+
+        // Kernel-level bound on random rows.
+        let d = rng.int_range(1, 64) as usize;
+        let amp = rng.uniform(0.01, 8.0);
+        let row: Vec<f32> = (0..d).map(|_| rng.uniform(-amp, amp) as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let mut codes = vec![0i8; d];
+        let step = quantize_row_i8(&row, &mut codes);
+        let exact = dot(&q, &row);
+        let approx = dot_i8_dequant(&q, &codes, step);
+        let bound = q.iter().map(|v| v.abs()).sum::<f32>() * (step / 2.0) + 1e-4;
+        assert!(
+            (approx - exact).abs() <= bound,
+            "seed {seed}: |{approx} - {exact}| > {bound} (d={d} step={step})"
+        );
+
+        // Engine-level drift through an arbitrary slot schedule.
+        let mut spec = SyntheticSpec::tiny();
+        spec.seed = 0xC0FFEE + seed; // new weights per case
+        let base = Engine::synthetic(&spec, Precision::W8A8);
+        let kv8 = Engine::synthetic(&spec, Precision::W8A8KV8);
+        let max_batch = kv8.max_batch();
+        let n0 = rng.int_range(1, max_batch as u64) as usize;
+        let prompts: Vec<Vec<i32>> = (0..n0)
+            .map(|_| random_prompt(&mut rng, spec.max_prompt, spec.vocab))
+            .collect();
+        let (lf, mut cache_f) = base.prefill(&prompts).unwrap();
+        let (lq, mut cache_q) = kv8.prefill(&prompts).unwrap();
+        assert_rows_bitexact(&lf, &lq, "kv8 prefill", seed);
+        let mut tokens: Vec<i32> = lq.iter().map(|r| argmax(r)).collect();
+
+        for _step in 0..rng.int_range(3, 10) {
+            match rng.below(10) {
+                0 | 1 if cache_q.active > 1 => {
+                    let victim = rng.below(cache_q.active as u64) as usize;
+                    cache_f.release(victim);
+                    cache_q.release(victim);
+                    tokens.swap_remove(victim);
+                }
+                2 | 3 if cache_q.active < max_batch => {
+                    let p = random_prompt(&mut rng, spec.max_prompt, spec.vocab);
+                    let lf = base.prefill_into(&p, &mut cache_f).unwrap();
+                    let lq = kv8.prefill_into(&p, &mut cache_q).unwrap();
+                    assert_rows_bitexact(
+                        std::slice::from_ref(&lf),
+                        std::slice::from_ref(&lq),
+                        "kv8 prefill_into",
+                        seed,
+                    );
+                    tokens.push(argmax(&lq));
+                }
+                _ => {
+                    if cache_q.pos.iter().any(|&p| p as usize >= spec.max_seq) {
+                        break;
+                    }
+                    let lf = base.decode(&tokens, &mut cache_f).unwrap();
+                    let lq = kv8.decode(&tokens, &mut cache_q).unwrap();
+                    for (i, (rf, rq)) in lf.iter().zip(lq.iter()).enumerate() {
+                        let norm = rf.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+                        for (j, (a, b)) in rf.iter().zip(rq.iter()).enumerate() {
+                            let drift = (a - b).abs() / norm;
+                            assert!(
+                                drift < 0.5,
+                                "seed {seed}: kv8 decode row {i} col {j}: \
+                                 drift {drift} ({a} vs {b})"
+                            );
+                        }
+                    }
+                    // Drive both caches with the same token stream so they
+                    // stay comparable.
+                    tokens = lq.iter().map(|r| argmax(r)).collect();
+                }
+            }
+        }
     }
 }
 

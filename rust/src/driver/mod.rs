@@ -49,7 +49,7 @@ pub mod sharded;
 pub use backend::{AnalyticBackend, EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
 pub use clock::{Clock, SimClock, WallClock};
 pub use continuous::{BatchingMode, ContinuousBackend, KvLedger};
-pub use sharded::{Shard, ShardedConfig, ShardedDriver};
+pub use sharded::{pick_least_loaded, Shard, ShardedConfig, ShardedDriver};
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};

@@ -78,6 +78,20 @@ pub struct ShardedConfig {
     pub seed: u64,
 }
 
+/// Least-loaded pick among candidate shard indices: minimum load, ties to
+/// the lowest index. The one routing primitive shared by the simulator's
+/// dispatch layer ([`ShardedDriver::offer`]) and the TCP front-end's
+/// model-name router (`serving::net::Router`) — both implement
+/// "affinity → least-loaded" in terms of this, so their tie-breaking
+/// cannot diverge.
+pub fn pick_least_loaded<I, L>(candidates: I, load: L) -> Option<usize>
+where
+    I: Iterator<Item = usize>,
+    L: Fn(usize) -> usize,
+{
+    candidates.min_by_key(|&i| (load(i), i))
+}
+
 /// Per-shard RNG stream: shard 0 inherits the run stream bit-for-bit;
 /// shard i > 0 gets an independent SplitMix64-derived stream.
 fn shard_stream(seed: u64, shard: u64) -> u64 {
@@ -206,17 +220,15 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
             let d = &self.shards[i].deployment;
             d.quant.satisfies_accuracy(&d.model.name, req.accuracy_req)
         };
-        let least_loaded = |it: &mut dyn Iterator<Item = usize>| {
-            it.min_by_key(|&i| (self.shards[i].driver.queue_len(), i))
-        };
+        let load = |i: usize| self.shards[i].driver.queue_len();
         let target = &self.shards[aff].deployment;
-        let mut same = (0..self.shards.len())
+        let same = (0..self.shards.len())
             .filter(|&i| admits(i) && self.shards[i].deployment.same_as(target));
-        if let Some(i) = least_loaded(&mut same) {
+        if let Some(i) = pick_least_loaded(same, load) {
             return i;
         }
-        let mut feasible = (0..self.shards.len()).filter(|&i| admits(i));
-        least_loaded(&mut feasible).unwrap_or(aff)
+        let feasible = (0..self.shards.len()).filter(|&i| admits(i));
+        pick_least_loaded(feasible, load).unwrap_or(aff)
     }
 
     /// Admit a request: route it to exactly one shard's queue. `affinity`

@@ -4,6 +4,7 @@
 //!   simulate   run the discrete-event simulator (paper §IV testbed)
 //!   compare    run all batching policies on one scenario and tabulate
 //!   serve      serve the tiny real model through PJRT with DFTSP batching
+//!   loadtest   loopback TCP load harness against synthetic engines
 //!   catalog    print the model and quantization catalogs
 //!
 //! Scenario files are TOML (see `config` module docs); every flag falls back
@@ -28,13 +29,15 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadtest") => cmd_loadtest(&args),
         Some("catalog") => cmd_catalog(),
         _ => {
             eprintln!(
-                "usage: edgellm <simulate|compare|serve|catalog> [--config FILE] \
+                "usage: edgellm <simulate|compare|serve|loadtest|catalog> [--config FILE] \
                  [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
                  [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
-                 [--workers N] [--shards N] [--partition equal|load-proportional] [--stats]"
+                 [--workers N] [--shards N] [--partition equal|load-proportional] [--stats] \
+                 [--listen ADDR] [--pending-cap N] [--clients N] [--quick] [--json]"
             );
             2
         }
@@ -84,6 +87,22 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
         cfg.partition = edgellm::coordinator::PartitionPolicy::parse(p)?;
     }
     Ok(cfg)
+}
+
+/// Front-end knobs shared by `serve --listen` and `loadtest`.
+fn net_config(args: &Args) -> edgellm::serving::NetConfig {
+    let base = edgellm::serving::NetConfig::default();
+    edgellm::serving::NetConfig {
+        max_output_tokens: args.u64_or("max-output-tokens", base.max_output_tokens as u64) as u32,
+        pending_cap: args.usize_or("pending-cap", base.pending_cap),
+        idle_timeout: std::time::Duration::from_secs_f64(
+            args.f64_or("idle-timeout-s", base.idle_timeout.as_secs_f64()),
+        ),
+        reply_timeout: std::time::Duration::from_secs_f64(
+            args.f64_or("reply-timeout-s", base.reply_timeout.as_secs_f64()),
+        ),
+        max_line_bytes: base.max_line_bytes,
+    }
 }
 
 fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler + Send>, String> {
@@ -260,13 +279,13 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     if shards > 1 {
         drop(engine); // validated loadable; each shard loads its own copy
-        if args.get("listen").is_some() {
-            eprintln!("--listen is not supported with --shards (route via the handles instead)");
-            return 2;
-        }
         let horizon = epochs as f64 * epoch_s;
         let base_cfg = server_cfg.clone();
         let artifacts_dir = artifacts.clone();
+        let net_cfg = net_config(args);
+        // Net counters escape the drive closure so they merge into the
+        // cross-shard report below.
+        let mut net_metrics: Option<edgellm::metrics::Metrics> = None;
         let per_shard = edgellm::serving::serve_sharded(
             shards,
             epochs,
@@ -280,14 +299,47 @@ fn cmd_serve(args: &Args) -> i32 {
                 EpochServer::new(engine, cfg, Box::new(Dftsp::with_config(base_cfg.scheduler)))
             },
             |handles| {
+                // Optional TCP front-end over every shard: the router
+                // matches the wire `model` field against each shard's
+                // deployment, least-loaded gate among candidates.
+                let listener = args.get("listen").and_then(|addr| {
+                    let bpe =
+                        edgellm::tokenizer::Bpe::load(&Path::new(&artifacts_dir).join("bpe.json"))
+                            .ok();
+                    let router = edgellm::serving::Router::new(
+                        handles
+                            .iter()
+                            .map(|h| (h.model.clone(), h.handle.clone()))
+                            .collect(),
+                        net_cfg.pending_cap,
+                    );
+                    match edgellm::serving::spawn_listener(addr, router, bpe, net_cfg.clone()) {
+                        Ok(l) => {
+                            println!(
+                                "listening on {} ({} shards, model-name routing)",
+                                l.addr(),
+                                handles.len()
+                            );
+                            Some(l)
+                        }
+                        Err(e) => {
+                            eprintln!("listen failed: {e}");
+                            None
+                        }
+                    }
+                });
                 let joins: Vec<_> = (0..clients)
                     .map(|c| {
-                        let tx = handles[(c as usize) % handles.len()].clone();
+                        let tx = handles[(c as usize) % handles.len()].handle.clone();
                         std::thread::spawn(move || {
                             run_client(tx, c, seed, rate, clients, horizon)
                         })
                     })
                     .collect();
+                if listener.is_some() && clients == 0 {
+                    // No local traffic: keep the front-end up for the run.
+                    std::thread::sleep(std::time::Duration::from_secs_f64(horizon));
+                }
                 let mut total_sent = 0u64;
                 let mut total_ok = 0usize;
                 for j in joins {
@@ -297,12 +349,19 @@ fn cmd_serve(args: &Args) -> i32 {
                     }
                 }
                 println!("clients: sent {total_sent}, completed-in-deadline {total_ok}");
+                if let Some(l) = listener {
+                    net_metrics = Some(l.net_metrics());
+                    l.shutdown();
+                }
             },
         );
         for (i, m) in per_shard.iter().enumerate() {
             print!("{}", m.report(&format!("shard {i} (DFTSP)")));
         }
-        let merged = edgellm::serving::merge_shard_metrics(&per_shard);
+        let mut merged = edgellm::serving::merge_shard_metrics(&per_shard);
+        if let Some(net) = net_metrics {
+            merged.merge(&net);
+        }
         print!("{}", merged.report(&format!("merged × {shards} shards (DFTSP)")));
         if show_stats {
             print!("{}", merged.search_report());
@@ -314,14 +373,28 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut server = EpochServer::new(engine, server_cfg, scheduler);
     let handle = server.handle();
 
-    // Optional TCP JSON-line front-end: --listen 127.0.0.1:7070
-    if let Some(addr) = args.get("listen") {
+    // Optional TCP JSON-line front-end: --listen 127.0.0.1:7070. The
+    // single-shard path goes through the same Router (one shard, same
+    // admission gate and typed replies) as `--shards N`.
+    let listener = args.get("listen").and_then(|addr| {
         let bpe = edgellm::tokenizer::Bpe::load(&Path::new(&artifacts).join("bpe.json")).ok();
-        match edgellm::serving::spawn_listener(addr, handle.clone(), bpe) {
-            Ok(local) => println!("listening on {local} (JSON lines; text prompts via BPE)"),
-            Err(e) => eprintln!("listen failed: {e}"),
+        let net_cfg = net_config(args);
+        let router =
+            edgellm::serving::Router::single(server.model_name(), handle.clone(), net_cfg.pending_cap);
+        match edgellm::serving::spawn_listener(addr, router, bpe, net_cfg) {
+            Ok(l) => {
+                println!(
+                    "listening on {} (JSON lines; text prompts via BPE)",
+                    l.addr()
+                );
+                Some(l)
+            }
+            Err(e) => {
+                eprintln!("listen failed: {e}");
+                None
+            }
         }
-    }
+    });
 
     // Client threads: Poisson-ish request submission.
     let horizon = epochs as f64 * epoch_s;
@@ -333,9 +406,14 @@ fn cmd_serve(args: &Args) -> i32 {
         .collect();
 
     server.run_for(epochs);
-    print!("{}", server.metrics().report("edge serving (DFTSP)"));
+    let mut m = server.metrics().clone();
+    if let Some(l) = listener {
+        m.merge(&l.net_metrics());
+        l.shutdown();
+    }
+    print!("{}", m.report("edge serving (DFTSP)"));
     if show_stats {
-        print!("{}", server.metrics().search_report());
+        print!("{}", m.search_report());
     }
     let mut total_sent = 0;
     let mut total_ok = 0;
@@ -376,6 +454,7 @@ fn run_client(
             latency_req: rng.uniform(1.0, 4.0),
             accuracy_req: rng.uniform(0.0, 0.6),
             respond: rtx.clone(),
+            stream: None,
         });
         sent += 1;
     }
@@ -385,6 +464,311 @@ fn run_client(
         .filter(|r| r.outcome == edgellm::serving::ServeOutcome::Completed)
         .count();
     (sent, ok)
+}
+
+/// Per-submit-thread tally for the load harness.
+#[derive(Default)]
+struct LoadTally {
+    sent: u64,
+    completed: u64,
+    late: u64,
+    shed: u64,
+    other_rejected: u64,
+    io_errors: u64,
+    latencies: Vec<f64>,
+}
+
+impl LoadTally {
+    fn replies(&self) -> u64 {
+        self.completed + self.late + self.shed + self.other_rejected
+    }
+
+    fn absorb(&mut self, other: LoadTally) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        self.late += other.late;
+        self.shed += other.shed;
+        self.other_rejected += other.other_rejected;
+        self.io_errors += other.io_errors;
+        self.latencies.extend(other.latencies);
+    }
+}
+
+/// The load harness drives the synthetic host engine; the PJRT engine has
+/// no in-memory synthetic constructor.
+#[cfg(feature = "pjrt")]
+fn cmd_loadtest(_args: &Args) -> i32 {
+    eprintln!("loadtest uses the synthetic host engine; build without --features pjrt");
+    2
+}
+
+/// Loopback TCP load harness: synthetic engines (no artifacts needed), a
+/// real listener, and O(10k) concurrent client connections multiplexed over
+/// a small pool of submit threads. Exercises the full hardened path —
+/// model-name routing, bounded admission (typed `overloaded` sheds), reply
+/// waits — then checks the accounting and leak invariants: every request
+/// gets exactly one reply or one IO error, every handler thread drains, and
+/// the accept loop is still alive at the end.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_loadtest(args: &Args) -> i32 {
+    use edgellm::coordinator::EpochParams;
+    use edgellm::quant::Precision;
+    use edgellm::runtime::SyntheticSpec;
+    use edgellm::util::json::Json;
+    use edgellm::util::stats::percentile;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Barrier;
+    use std::time::{Duration, Instant};
+
+    let quick = args.flag("quick");
+    let shards = args.usize_or("shards", 2).max(1);
+    let clients = args.usize_or("clients", if quick { 200 } else { 10_000 });
+    let pending_cap = args.usize_or("pending-cap", 64);
+    let epochs = args.u64_or("epochs", if quick { 60 } else { 300 });
+    let submit_threads = args.usize_or("client-threads", 32).clamp(1, clients.max(1));
+    let write_json = args.flag("json");
+    let net_cfg = edgellm::serving::NetConfig {
+        pending_cap,
+        ..Default::default()
+    };
+    // Distinct model names across shards so the router's affinity path is
+    // the one under load, not just the least-loaded fallback.
+    let model_variants = shards.min(2);
+    println!(
+        "loadtest: {clients} connections over {submit_threads} threads → {shards} shards \
+         (cap {pending_cap}/shard, {epochs} epochs)"
+    );
+
+    let mut outcome = None;
+    let per_shard = edgellm::serving::serve_sharded(
+        shards,
+        epochs,
+        |shard| {
+            // Short epochs: the harness measures connection churn and
+            // admission, not batch quality.
+            let mut engine = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16);
+            engine.meta.model_name = format!("synthetic-{}", shard % model_variants.max(1));
+            let cfg = ServerConfig {
+                epoch: EpochParams {
+                    duration: 0.05,
+                    t_u: 0.005,
+                    t_d: 0.005,
+                },
+                seed: 7 + shard as u64,
+                ..Default::default()
+            };
+            EpochServer::new(engine, cfg, Box::new(Dftsp::new()))
+        },
+        |handles| {
+            let router = edgellm::serving::Router::new(
+                handles
+                    .iter()
+                    .map(|h| (h.model.clone(), h.handle.clone()))
+                    .collect(),
+                net_cfg.pending_cap,
+            );
+            let listener =
+                edgellm::serving::spawn_listener("127.0.0.1:0", router, None, net_cfg.clone())
+                    .expect("bind loopback");
+            let addr = listener.addr();
+            // All submit threads connect + write, meet at the barrier (every
+            // accepted connection is now simultaneously open), then read.
+            let barrier = Barrier::new(submit_threads + 1);
+            let tally = std::thread::scope(|scope| {
+                let joins: Vec<_> = (0..submit_threads)
+                    .map(|t| {
+                        let barrier = &barrier;
+                        scope.spawn(move || {
+                            let lo = clients * t / submit_threads;
+                            let hi = clients * (t + 1) / submit_threads;
+                            let mut tally = LoadTally::default();
+                            let mut conns = Vec::with_capacity(hi - lo);
+                            for c in lo..hi {
+                                let line = Json::obj(vec![
+                                    ("ids", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+                                    ("output_tokens", Json::Num(4.0)),
+                                    ("latency_req", Json::Num(60.0)),
+                                    (
+                                        "model",
+                                        Json::Str(format!("synthetic-{}", c % model_variants)),
+                                    ),
+                                ])
+                                .to_string();
+                                match TcpStream::connect(addr) {
+                                    Ok(mut s) => {
+                                        let _ =
+                                            s.set_read_timeout(Some(Duration::from_secs(30)));
+                                        if writeln!(s, "{line}").is_ok() {
+                                            tally.sent += 1;
+                                            conns.push((Instant::now(), s));
+                                        } else {
+                                            tally.io_errors += 1;
+                                        }
+                                    }
+                                    Err(_) => tally.io_errors += 1,
+                                }
+                            }
+                            barrier.wait();
+                            for (t0, s) in conns {
+                                let mut reader = BufReader::new(s);
+                                let mut reply = String::new();
+                                match reader.read_line(&mut reply) {
+                                    Ok(n) if n > 0 => match Json::parse(reply.trim()) {
+                                        Ok(j) => {
+                                            let wall = t0.elapsed().as_secs_f64();
+                                            match j.req_str("outcome").unwrap_or("?") {
+                                                "completed" => {
+                                                    tally.completed += 1;
+                                                    tally.latencies.push(wall);
+                                                }
+                                                "late" => {
+                                                    tally.late += 1;
+                                                    tally.latencies.push(wall);
+                                                }
+                                                "rejected" => {
+                                                    if j.req_str("reason").unwrap_or("?")
+                                                        == "overloaded"
+                                                    {
+                                                        tally.shed += 1;
+                                                    } else {
+                                                        tally.other_rejected += 1;
+                                                    }
+                                                }
+                                                _ => tally.other_rejected += 1,
+                                            }
+                                        }
+                                        Err(_) => tally.io_errors += 1,
+                                    },
+                                    _ => tally.io_errors += 1,
+                                }
+                            }
+                            tally
+                        })
+                    })
+                    .collect();
+                barrier.wait();
+                // Every write landed and nothing has been read back yet:
+                // the fleet of connections is concurrently open right now.
+                let peak_open = listener.open_connections();
+                let mut tally = LoadTally::default();
+                for j in joins {
+                    tally.absorb(j.join().expect("submit thread"));
+                }
+                println!(
+                    "peak open connections at barrier: {peak_open} (accepted {})",
+                    listener.accepted()
+                );
+                tally
+            });
+            // Liveness probe: the accept loop must still answer after the
+            // storm (the pre-hardening loop died on its first accept error).
+            let probe_alive = (|| {
+                let mut s = TcpStream::connect(addr).ok()?;
+                s.set_read_timeout(Some(Duration::from_secs(30))).ok()?;
+                writeln!(s, r#"{{"ids": [1], "output_tokens": 1, "latency_req": 60.0}}"#).ok()?;
+                let mut reply = String::new();
+                BufReader::new(s).read_line(&mut reply).ok()?;
+                Json::parse(reply.trim()).ok()
+            })()
+            .is_some();
+            // Every client socket is closed; handlers must all exit.
+            let drained = listener.wait_drained(Duration::from_secs(20));
+            let leaked = if drained { 0 } else { listener.open_connections() };
+            let net = listener.net_metrics();
+            listener.shutdown();
+            outcome = Some((tally, probe_alive, leaked, net));
+        },
+    );
+    let (tally, probe_alive, leaked, net) = outcome.expect("drive ran");
+    // Every attempted connection must resolve to exactly one reply or one
+    // IO error — a nonzero gap means a reply was lost in the stack.
+    let accounting_gap = clients as i64 - tally.replies() as i64 - tally.io_errors as i64;
+    let accept_loop_deaths = if probe_alive { 0 } else { 1 };
+    let shed_rate = tally.shed as f64 / tally.sent.max(1) as f64;
+    let (p50, p95, p99) = if tally.latencies.is_empty() {
+        (f64::NAN, f64::NAN, f64::NAN)
+    } else {
+        (
+            percentile(&tally.latencies, 50.0),
+            percentile(&tally.latencies, 95.0),
+            percentile(&tally.latencies, 99.0),
+        )
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["sent".into(), tally.sent.to_string()]);
+    t.row(&["completed".into(), tally.completed.to_string()]);
+    t.row(&["late".into(), tally.late.to_string()]);
+    t.row(&["shed (overloaded)".into(), tally.shed.to_string()]);
+    t.row(&["other rejected".into(), tally.other_rejected.to_string()]);
+    t.row(&["io errors".into(), tally.io_errors.to_string()]);
+    t.row(&["shed rate".into(), format!("{:.3}", shed_rate)]);
+    t.row(&["wire p50 (s)".into(), format!("{p50:.4}")]);
+    t.row(&["wire p95 (s)".into(), format!("{p95:.4}")]);
+    t.row(&["wire p99 (s)".into(), format!("{p99:.4}")]);
+    t.row(&["bad requests (server)".into(), net.bad_requests.to_string()]);
+    t.row(&["accounting gap".into(), accounting_gap.to_string()]);
+    t.row(&["leaked connections".into(), leaked.to_string()]);
+    t.row(&["accept loop deaths".into(), accept_loop_deaths.to_string()]);
+    print!("{}", t.render());
+    let merged = edgellm::serving::merge_shard_metrics(&per_shard);
+    println!(
+        "server side: offered {} completed {}+{} dropped {} | wire histogram n={} p99={:.4}s",
+        merged.offered,
+        merged.completed_in_deadline,
+        merged.completed_late,
+        merged.dropped,
+        net.wire_latency.count(),
+        net.wire_latency.quantile(0.99),
+    );
+
+    if write_json {
+        let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let row = Json::obj(vec![
+            (
+                "scenario",
+                Json::Str(if quick { "net/quick" } else { "net/full" }.to_string()),
+            ),
+            ("sent", Json::Num(tally.sent as f64)),
+            ("bad_requests", Json::Num(net.bad_requests as f64)),
+            ("accounting_gap", Json::Num(accounting_gap as f64)),
+            ("leaked_connections", Json::Num(leaked as f64)),
+            ("accept_loop_deaths", Json::Num(accept_loop_deaths as f64)),
+            ("served", num_or_null((tally.completed + tally.late) as f64)),
+            ("shed", num_or_null(tally.shed as f64)),
+            ("shed_rate", num_or_null(shed_rate)),
+            ("wall_p50_s", num_or_null(p50)),
+            ("wall_p95_s", num_or_null(p95)),
+            ("wall_p99_s", num_or_null(p99)),
+        ]);
+        let doc = Json::obj(vec![
+            (
+                "provenance",
+                Json::Str("cargo run --release -- loadtest --quick --json".to_string()),
+            ),
+            ("rows", Json::Arr(vec![row])),
+        ]);
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_net.json");
+        match std::fs::write(&path, format!("{doc}\n")) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => {
+                eprintln!("write BENCH_net.json failed: {e}");
+                return 1;
+            }
+        }
+    }
+
+    let ok = accounting_gap == 0
+        && leaked == 0
+        && accept_loop_deaths == 0
+        && net.bad_requests == 0
+        && tally.sent as usize == clients;
+    if !ok {
+        eprintln!("loadtest invariants FAILED");
+        return 1;
+    }
+    println!("loadtest invariants hold");
+    0
 }
 
 fn cmd_catalog() -> i32 {

@@ -52,12 +52,32 @@ pub struct Metrics {
     /// In-flight batch size observed at each decode step (continuous
     /// backends only).
     pub inflight_occupancy: OnlineStats,
+    /// Requests shed at the TCP ingress gate before reaching the server
+    /// (typed `overloaded` wire rejections). Only the front-end records
+    /// these — a shed request never becomes `offered`.
+    pub shed_overloaded: u64,
+    /// Malformed wire requests answered with a typed `bad_request` reply.
+    pub bad_requests: u64,
+    /// Transient accept-loop errors survived by backoff-and-retry (the
+    /// pre-hardening loop died on the first of these).
+    pub accept_errors: u64,
+    /// Requests whose reply wait expired at the front-end (typed `timeout`
+    /// replies; the server may still finish them, but the client is gone).
+    pub net_timeouts: u64,
+    /// TCP connections accepted by the front-end.
+    pub net_connections: u64,
+    /// Front-end wire latency: request line parsed → reply line written,
+    /// recorded for every completed (in-deadline or late) request. Distinct
+    /// from `latency`, which the driver records for in-deadline completions
+    /// only; mergeable across shards/listeners like every histogram here.
+    pub wire_latency: LatencyHistogram,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Metrics {
             latency: LatencyHistogram::new(),
+            wire_latency: LatencyHistogram::new(),
             ..Default::default()
         }
     }
@@ -126,6 +146,12 @@ impl Metrics {
         self.horizon = self.horizon.max(other.horizon);
         self.admission_latency.merge(&other.admission_latency);
         self.inflight_occupancy.merge(&other.inflight_occupancy);
+        self.shed_overloaded += other.shed_overloaded;
+        self.bad_requests += other.bad_requests;
+        self.accept_errors += other.accept_errors;
+        self.net_timeouts += other.net_timeouts;
+        self.net_connections += other.net_connections;
+        self.wire_latency.merge(&other.wire_latency);
     }
 
     /// Mean scheduler wall time per `schedule` call in seconds (0 when the
@@ -172,7 +198,17 @@ impl Metrics {
             ("latency_mean", num(finite(self.latency.mean()))),
             ("latency_p50", num(finite(self.latency.quantile(0.50)))),
             ("latency_p95", num(finite(self.latency.quantile(0.95)))),
+            ("latency_p99", num(finite(self.latency.quantile(0.99)))),
             ("latency_max", num(finite(self.latency.max()))),
+            ("shed_overloaded", num(self.shed_overloaded as f64)),
+            ("bad_requests", num(self.bad_requests as f64)),
+            ("accept_errors", num(self.accept_errors as f64)),
+            ("net_timeouts", num(self.net_timeouts as f64)),
+            ("net_connections", num(self.net_connections as f64)),
+            ("wire_latency_count", num(self.wire_latency.count() as f64)),
+            ("wire_latency_p50", num(finite(self.wire_latency.quantile(0.50)))),
+            ("wire_latency_p95", num(finite(self.wire_latency.quantile(0.95)))),
+            ("wire_latency_p99", num(finite(self.wire_latency.quantile(0.99)))),
             ("batch_size_mean", num(finite(self.batch_sizes.mean()))),
             ("queue_depth_mean", num(finite(self.queue_depth.mean()))),
             ("admission_count", num(self.admission_latency.count() as f64)),
@@ -221,6 +257,25 @@ impl Metrics {
             s.push_str(&format!(
                 "epoch overruns {} (epochs whose work exceeded the epoch duration)\n",
                 self.epoch_overruns
+            ));
+        }
+        if self.net_connections > 0 || self.shed_overloaded > 0 || self.bad_requests > 0 {
+            s.push_str(&format!(
+                "net: {} connections  shed {}  bad requests {}  timeouts {}  accept retries {}\n",
+                self.net_connections,
+                self.shed_overloaded,
+                self.bad_requests,
+                self.net_timeouts,
+                self.accept_errors,
+            ));
+        }
+        if self.wire_latency.count() > 0 {
+            s.push_str(&format!(
+                "wire latency p50 {}  p95 {}  p99 {}  max {}\n",
+                fmt::duration(self.wire_latency.quantile(0.50)),
+                fmt::duration(self.wire_latency.quantile(0.95)),
+                fmt::duration(self.wire_latency.quantile(0.99)),
+                fmt::duration(self.wire_latency.max()),
             ));
         }
         if self.latency.count() > 0 {
@@ -394,6 +449,41 @@ mod tests {
         assert!((a.horizon - 10.0).abs() < 1e-12);
         assert!((a.throughput() - 0.1).abs() < 1e-12);
         // Merging an empty Metrics is the identity.
+        let snapshot = a.clone();
+        a.merge(&Metrics::new());
+        assert_eq!(a, snapshot);
+    }
+
+    #[test]
+    fn net_counters_merge_and_serialize() {
+        let mut a = Metrics::new();
+        a.shed_overloaded = 3;
+        a.bad_requests = 2;
+        a.net_connections = 10;
+        a.wire_latency.record(0.010);
+        let mut b = Metrics::new();
+        b.shed_overloaded = 1;
+        b.accept_errors = 4;
+        b.net_timeouts = 2;
+        b.net_connections = 5;
+        b.wire_latency.record(0.020);
+        a.merge(&b);
+        assert_eq!(a.shed_overloaded, 4);
+        assert_eq!(a.bad_requests, 2);
+        assert_eq!(a.accept_errors, 4);
+        assert_eq!(a.net_timeouts, 2);
+        assert_eq!(a.net_connections, 15);
+        assert_eq!(a.wire_latency.count(), 2);
+        let j = a.to_json();
+        assert_eq!(j.req_f64("shed_overloaded").unwrap(), 4.0);
+        assert_eq!(j.req_f64("net_connections").unwrap(), 15.0);
+        assert_eq!(j.req_f64("wire_latency_count").unwrap(), 2.0);
+        assert!(j.req_f64("wire_latency_p99").unwrap() > 0.0);
+        assert!(j.req_f64("latency_p99").unwrap() == 0.0, "no driver latency recorded");
+        let r = a.report("net");
+        assert!(r.contains("shed 4"));
+        assert!(r.contains("wire latency"));
+        // Merging an empty Metrics stays the identity with net counters too.
         let snapshot = a.clone();
         a.merge(&Metrics::new());
         assert_eq!(a, snapshot);

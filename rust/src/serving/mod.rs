@@ -16,8 +16,11 @@ pub mod net;
 pub mod server;
 pub mod sharded;
 
-pub use net::{parse_request_line, render_response_line, spawn_listener};
-pub use server::{
-    EpochServer, ServeHandle, ServeOutcome, ServeRequest, ServeResponse, ServerConfig,
+pub use net::{
+    parse_request_line, render_rejection_line, render_response_line, spawn_listener, GatePermit,
+    IngressGate, Listener, NetConfig, ParsedRequest, RouteError, Router,
 };
-pub use sharded::{merge_shard_metrics, serve_sharded};
+pub use server::{
+    EpochServer, RejectCause, ServeHandle, ServeOutcome, ServeRequest, ServeResponse, ServerConfig,
+};
+pub use sharded::{merge_shard_metrics, serve_sharded, ShardHandle};

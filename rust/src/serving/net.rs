@@ -1,33 +1,137 @@
-//! TCP JSON-line front-end for the epoch server.
+//! Hardened TCP JSON-line front-end: model-name routing over sharded epoch
+//! servers, bounded ingress admission, typed rejections, per-connection
+//! liveness, and optional per-token streaming.
 //!
 //! Wire protocol (one JSON object per line, UTF-8):
 //!   → {"prompt": "text" | "ids": [..], "output_tokens": 16,
-//!      "latency_req": 2.0, "accuracy_req": 0.3}
+//!      "latency_req": 2.0, "accuracy_req": 0.3,
+//!      "model": "BLOOM-3B", "stream": true}
+//!   ← {"token": 17}                                  (per token, stream only)
 //!   ← {"outcome": "completed" | "late" | "rejected",
+//!      "reason": "overloaded" | "kv_full" | "bad_request" | "inadmissible"
+//!                | "timeout" | "shutdown" | "execution",   (rejected only)
 //!      "ids": [..], "text": "...", "latency": 0.31, "epoch": 4}
 //!
-//! Each connection is handled by a plain thread (no tokio offline); the
-//! handler forwards requests through the epoch server's mpsc handle and
-//! writes the reply when generation completes. Prompts given as text are
-//! tokenized with the artifact BPE vocabulary.
+//! `model` and `stream` are optional; `latency_req`/`accuracy_req` default
+//! to 5.0 s / 0.0 when absent but are a typed `bad_request` when present and
+//! malformed — a client's constraint (1c)/(1e) is never silently replaced.
+//!
+//! ## Routing and backpressure
+//!
+//! A [`Router`] owns one [`ServeHandle`] + [`IngressGate`] per shard. The
+//! `model` field selects the affinity set (shards serving that model name);
+//! among candidates the least-loaded gate wins, lowest shard index on ties —
+//! the same `pick_least_loaded` primitive as the simulator's
+//! [`ShardedDriver`](crate::driver::ShardedDriver) dispatch, so the two
+//! routing layers cannot diverge. Each gate caps requests in flight
+//! (accepted but unanswered); beyond the cap the connection handler replies
+//! `{"outcome":"rejected","reason":"overloaded"}` immediately instead of
+//! queueing without bound.
+//!
+//! ## Liveness
+//!
+//! Connections are plain threads (std-only, no tokio offline), but every
+//! blocking edge is bounded: an idle read times out
+//! ([`NetConfig::idle_timeout`]), a reply wait times out
+//! ([`NetConfig::reply_timeout`], releasing the gate permit so a wedged
+//! epoch cannot leak admission slots), the accept loop survives transient
+//! errors (EMFILE bursts) with capped exponential backoff, and
+//! [`Listener::shutdown`] stops accepting deterministically.
 
+use crate::driver::pick_least_loaded;
+use crate::metrics::Metrics;
 use crate::serving::{ServeHandle, ServeOutcome, ServeRequest, ServeResponse};
 use crate::tokenizer::Bpe;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use crate::util::stats::LatencyHistogram;
+use std::io::{self, BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// Parse one request line. Returns (prompt ids, output_tokens, latency,
-/// accuracy).
+/// Front-end configuration (per listener; every connection shares it).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Server-side cap on `output_tokens` accepted off the wire. Engine
+    /// shape validation still applies downstream; this bound exists so a
+    /// hostile `1e12` never reaches the scheduler at all.
+    pub max_output_tokens: u32,
+    /// Per-shard admission cap: requests in flight (accepted, unanswered)
+    /// beyond this are shed with a typed `overloaded` reply.
+    pub pending_cap: usize,
+    /// Close a connection that sends nothing for this long.
+    pub idle_timeout: Duration,
+    /// Give up on a reply (final or next stream token) after this long; the
+    /// client gets a typed `timeout` rejection and the connection closes
+    /// (a late reply would desync the line protocol).
+    pub reply_timeout: Duration,
+    /// Longest request line accepted, in bytes (a line that exceeds it is a
+    /// `bad_request` and the connection closes — there is no safe resync
+    /// point inside an oversize line).
+    pub max_line_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_output_tokens: 4096,
+            pending_cap: 1024,
+            idle_timeout: Duration::from_secs(60),
+            reply_timeout: Duration::from_secs(30),
+            max_line_bytes: 1 << 20,
+        }
+    }
+}
+
+/// A validated wire request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedRequest {
+    pub prompt: Vec<i32>,
+    pub output_tokens: u32,
+    pub latency_req: f64,
+    pub accuracy_req: f64,
+    /// Deployment affinity (router key); None routes least-loaded overall.
+    pub model: Option<String>,
+    /// Stream `{"token":..}` events ahead of the final reply.
+    pub stream: bool,
+}
+
+/// Optional numeric field: absent is fine (default), present-but-malformed
+/// is a typed error — `unwrap_or(default)` silently replacing a client's
+/// stated requirement is exactly the bug this refuses to reintroduce.
+fn optional_f64(j: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|f| f.is_finite())
+            .ok_or_else(|| format!("field `{key}` is present but not a finite number")),
+    }
+}
+
+/// Parse and validate one request line against the server-configured
+/// `output_tokens` cap. Every rejection is a `bad_request`-class error
+/// string; nothing is silently clamped or defaulted away.
 pub fn parse_request_line(
     line: &str,
     bpe: Option<&Bpe>,
-) -> Result<(Vec<i32>, u32, f64, f64), String> {
+    max_output_tokens: u32,
+) -> Result<ParsedRequest, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
     let prompt: Vec<i32> = if let Some(ids) = j.get("ids").and_then(|v| v.as_arr()) {
         ids.iter()
-            .map(|x| x.as_f64().map(|f| f as i32).ok_or("non-numeric id"))
+            .map(|x| match x.as_f64() {
+                Some(f)
+                    if f.is_finite()
+                        && f.fract() == 0.0
+                        && (i32::MIN as f64..=i32::MAX as f64).contains(&f) =>
+                {
+                    Ok(f as i32)
+                }
+                _ => Err("`ids` must be finite integers".to_string()),
+            })
             .collect::<Result<_, _>>()?
     } else if let Some(text) = j.get("prompt").and_then(|v| v.as_str()) {
         let bpe = bpe.ok_or("text prompts need a BPE vocabulary (artifacts/bpe.json)")?;
@@ -35,13 +139,54 @@ pub fn parse_request_line(
     } else {
         return Err("request needs `prompt` (text) or `ids` (numbers)".into());
     };
-    let output_tokens = j.req_f64("output_tokens")? as u32;
-    let latency_req = j.req_f64("latency_req").unwrap_or(5.0);
-    let accuracy_req = j.req_f64("accuracy_req").unwrap_or(0.0);
-    Ok((prompt, output_tokens, latency_req, accuracy_req))
+    if prompt.is_empty() {
+        return Err("prompt must be non-empty".into());
+    }
+    let out = j.req_f64("output_tokens")?;
+    if !out.is_finite() || out.fract() != 0.0 {
+        return Err("`output_tokens` must be a finite integer".into());
+    }
+    if out < 1.0 {
+        return Err("`output_tokens` must be >= 1".into());
+    }
+    if out > max_output_tokens as f64 {
+        return Err(format!(
+            "`output_tokens` exceeds the server cap of {max_output_tokens}"
+        ));
+    }
+    let latency_req = optional_f64(&j, "latency_req", 5.0)?;
+    if latency_req <= 0.0 {
+        return Err("`latency_req` must be > 0".into());
+    }
+    let accuracy_req = optional_f64(&j, "accuracy_req", 0.0)?;
+    if !(0.0..=1.0).contains(&accuracy_req) {
+        return Err("`accuracy_req` must be in [0, 1]".into());
+    }
+    let model = match j.get("model") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or("field `model` is present but not a string")?
+                .to_string(),
+        ),
+    };
+    let stream = match j.get("stream") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or("field `stream` is present but not a boolean")?,
+    };
+    Ok(ParsedRequest {
+        prompt,
+        output_tokens: out as u32,
+        latency_req,
+        accuracy_req,
+        model,
+        stream,
+    })
 }
 
-/// Render one response line.
+/// Render one final response line.
 pub fn render_response_line(resp: &ServeResponse, bpe: Option<&Bpe>) -> String {
     let outcome = match resp.outcome {
         ServeOutcome::Completed => "completed",
@@ -54,6 +199,9 @@ pub fn render_response_line(resp: &ServeResponse, bpe: Option<&Bpe>) -> String {
         ("ids", ids),
         ("latency", Json::Num(resp.latency)),
     ];
+    if let Some(cause) = resp.reason {
+        fields.push(("reason", Json::Str(cause.as_wire_str().to_string())));
+    }
     if let Some(e) = resp.epoch {
         fields.push(("epoch", Json::Num(e as f64)));
     }
@@ -64,109 +212,703 @@ pub fn render_response_line(resp: &ServeResponse, bpe: Option<&Bpe>) -> String {
     Json::obj(fields).to_string()
 }
 
-fn handle_conn(stream: TcpStream, ingest: ServeHandle, bpe: Option<Arc<Bpe>>) {
-    let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match parse_request_line(&line, bpe.as_deref()) {
-            Err(e) => format!("{{\"error\":{}}}", Json::Str(e)),
-            Ok((prompt, out, lat, acc)) => {
-                let (rtx, rrx) = std::sync::mpsc::channel();
-                if ingest
-                    .send(ServeRequest {
-                        prompt,
-                        output_tokens: out,
-                        latency_req: lat,
-                        accuracy_req: acc,
-                        respond: rtx,
-                    })
-                    .is_err()
-                {
-                    break; // server gone
-                }
-                match rrx.recv() {
-                    Ok(resp) => render_response_line(&resp, bpe.as_deref()),
-                    Err(_) => break,
-                }
+/// Render a front-end rejection (the request never reached a server).
+/// Built with [`Json::obj`], so the reply is well-formed by construction —
+/// no hand-rolled `format!("{{\"error\":…")` string splicing.
+pub fn render_rejection_line(reason: &str, detail: Option<&str>) -> String {
+    let mut fields = vec![
+        ("outcome", Json::Str("rejected".to_string())),
+        ("reason", Json::Str(reason.to_string())),
+    ];
+    if let Some(d) = detail {
+        fields.push(("error", Json::Str(d.to_string())));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Render one streamed token event.
+fn render_token_line(token: i32) -> String {
+    Json::obj(vec![("token", Json::Num(token as f64))]).to_string()
+}
+
+// ---------------------------------------------------------------------
+// Admission gate
+// ---------------------------------------------------------------------
+
+/// Bounded per-shard admission: at most `cap` requests in flight (accepted
+/// off the wire, not yet answered). Lock-free; permits release on drop, so
+/// every exit path — reply written, timeout, handler death — returns the
+/// slot.
+pub struct IngressGate {
+    inflight: AtomicUsize,
+    cap: usize,
+}
+
+impl IngressGate {
+    pub fn new(cap: usize) -> Arc<Self> {
+        Arc::new(IngressGate {
+            inflight: AtomicUsize::new(0),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Requests currently holding a permit (the router's load signal).
+    pub fn depth(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Take a slot, or None when the gate is full (shed).
+    pub fn try_acquire(gate: &Arc<IngressGate>) -> Option<GatePermit> {
+        let mut cur = gate.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= gate.cap {
+                return None;
             }
+            match gate.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return Some(GatePermit {
+                        gate: Arc::clone(gate),
+                    })
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// RAII in-flight slot; dropping it releases the gate.
+pub struct GatePermit {
+    gate: Arc<IngressGate>,
+}
+
+impl Drop for GatePermit {
+    fn drop(&mut self) {
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------
+
+/// Why the router refused a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// No shard serves the requested model name (`bad_request` on the wire).
+    UnknownModel(String),
+    /// Every candidate shard's gate is full (`overloaded` on the wire).
+    Overloaded,
+}
+
+struct RouterShard {
+    model: String,
+    handle: ServeHandle,
+    gate: Arc<IngressGate>,
+}
+
+/// Model-name routing over per-shard handles: affinity (name match) →
+/// least-loaded gate, lowest index on ties — the wire-protocol counterpart
+/// of `ShardedDriver::route`, built on the same [`pick_least_loaded`].
+pub struct Router {
+    shards: Vec<RouterShard>,
+}
+
+impl Router {
+    /// One `(model_name, handle)` pair per shard, all sharing one gate cap.
+    pub fn new(shards: Vec<(String, ServeHandle)>, pending_cap: usize) -> Router {
+        assert!(!shards.is_empty(), "router needs at least one shard");
+        Router {
+            shards: shards
+                .into_iter()
+                .map(|(model, handle)| RouterShard {
+                    model,
+                    handle,
+                    gate: IngressGate::new(pending_cap),
+                })
+                .collect(),
+        }
+    }
+
+    /// Single-shard router (the unsharded `--listen` path).
+    pub fn single(model: &str, handle: ServeHandle, pending_cap: usize) -> Router {
+        Router::new(vec![(model.to_string(), handle)], pending_cap)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current gate depths by shard (diagnostics/tests).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.gate.depth()).collect()
+    }
+
+    /// Pick the shard for a request: the least-loaded among the affinity
+    /// set (every shard when no model is named).
+    fn route(&self, model: Option<&str>) -> Result<usize, RouteError> {
+        let candidates: Vec<usize> = match model {
+            Some(name) => (0..self.shards.len())
+                .filter(|&i| self.shards[i].model == name)
+                .collect(),
+            None => (0..self.shards.len()).collect(),
         };
-        if writeln!(writer, "{reply}").is_err() {
+        if candidates.is_empty() {
+            return Err(RouteError::UnknownModel(
+                model.unwrap_or_default().to_string(),
+            ));
+        }
+        pick_least_loaded(candidates.into_iter(), |i| self.shards[i].gate.depth())
+            .ok_or(RouteError::Overloaded)
+    }
+
+    /// Route and take an admission slot in one step.
+    pub fn admit(&self, model: Option<&str>) -> Result<(usize, GatePermit), RouteError> {
+        let shard = self.route(model)?;
+        match IngressGate::try_acquire(&self.shards[shard].gate) {
+            Some(permit) => Ok((shard, permit)),
+            None => Err(RouteError::Overloaded),
+        }
+    }
+
+    /// Submit to a shard chosen by [`Router::admit`].
+    pub fn send_to(&self, shard: usize, req: ServeRequest) -> Result<(), ()> {
+        self.shards[shard].handle.send(req).map_err(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared listener counters
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct NetStats {
+    connections: AtomicU64,
+    closed: AtomicU64,
+    shed_overloaded: AtomicU64,
+    bad_requests: AtomicU64,
+    accept_errors: AtomicU64,
+    timeouts: AtomicU64,
+    wire_latency: Mutex<LatencyHistogram>,
+}
+
+impl NetStats {
+    /// Snapshot as a [`Metrics`] (net counters only), mergeable with the
+    /// per-shard server metrics like any other shard's.
+    fn to_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.net_connections = self.connections.load(Ordering::Acquire);
+        m.shed_overloaded = self.shed_overloaded.load(Ordering::Acquire);
+        m.bad_requests = self.bad_requests.load(Ordering::Acquire);
+        m.accept_errors = self.accept_errors.load(Ordering::Acquire);
+        m.net_timeouts = self.timeouts.load(Ordering::Acquire);
+        m.wire_latency = self.wire_latency.lock().expect("wire histogram").clone();
+        m
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection handler
+// ---------------------------------------------------------------------
+
+struct ConnCtx {
+    router: Router,
+    bpe: Option<Bpe>,
+    cfg: NetConfig,
+    stats: NetStats,
+}
+
+enum LineEvent {
+    Line,
+    Eof,
+    Oversize,
+}
+
+/// Read one `\n`-terminated line into `buf`, enforcing the byte cap without
+/// ever buffering more than the cap (an attacker streaming an endless line
+/// must not grow memory). Errors surface the socket/timeout condition.
+fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
+    buf: &mut String,
+    max: usize,
+) -> io::Result<LineEvent> {
+    let mut bytes: Vec<u8> = Vec::new();
+    loop {
+        let available = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if available.is_empty() {
+            if bytes.is_empty() {
+                return Ok(LineEvent::Eof);
+            }
+            break; // EOF terminates a final unterminated line
+        }
+        let newline = available.iter().position(|&b| b == b'\n');
+        let take = newline.map(|i| i + 1).unwrap_or(available.len());
+        if bytes.len() + take > max {
+            reader.consume(take);
+            return Ok(LineEvent::Oversize);
+        }
+        bytes.extend_from_slice(&available[..take]);
+        reader.consume(take);
+        if newline.is_some() {
             break;
         }
     }
-    let _ = peer; // quiet unused when logging is off
+    while matches!(bytes.last(), Some(b'\n') | Some(b'\r')) {
+        bytes.pop();
+    }
+    *buf = String::from_utf8_lossy(&bytes).into_owned();
+    Ok(LineEvent::Line)
 }
 
-/// Accept loop: spawns one thread per connection, forwarding into the epoch
-/// server's ingest handle. Returns the bound address; runs until the
-/// listener errors or the process exits.
-pub fn spawn_listener(
-    addr: &str,
-    ingest: ServeHandle,
-    bpe: Option<Bpe>,
-) -> std::io::Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind(addr)?;
-    let local = listener.local_addr()?;
-    let bpe = bpe.map(Arc::new);
-    std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            match stream {
-                Ok(s) => {
-                    let ingest = ingest.clone();
-                    let bpe = bpe.clone();
-                    std::thread::spawn(move || handle_conn(s, ingest, bpe));
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
+    // A failed clone (fd pressure) drops the connection gracefully instead
+    // of panicking the handler thread.
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let _ = read_half.set_read_timeout(Some(ctx.cfg.idle_timeout));
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        match read_line_bounded(&mut reader, &mut buf, ctx.cfg.max_line_bytes) {
+            Ok(LineEvent::Eof) => break,
+            Ok(LineEvent::Oversize) => {
+                ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    render_rejection_line("bad_request", Some("request line exceeds the size cap"))
+                );
+                break;
+            }
+            Ok(LineEvent::Line) => {}
+            // Idle timeout or socket error: per-connection liveness.
+            Err(_) => break,
+        }
+        if buf.trim().is_empty() {
+            continue;
+        }
+        if !serve_one(buf.trim(), ctx, &mut writer) {
+            break;
+        }
+    }
+}
+
+/// Handle one request line end to end. Returns false when the connection
+/// must close (write failure, server gone, reply timeout).
+fn serve_one(line: &str, ctx: &ConnCtx, writer: &mut TcpStream) -> bool {
+    let parsed = match parse_request_line(line, ctx.bpe.as_ref(), ctx.cfg.max_output_tokens) {
+        Ok(p) => p,
+        Err(e) => {
+            // Typed reply, connection stays open: a malformed request is the
+            // client's bug, not a transport failure.
+            ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+            return writeln!(writer, "{}", render_rejection_line("bad_request", Some(&e))).is_ok();
+        }
+    };
+    let (shard, permit) = match ctx.router.admit(parsed.model.as_deref()) {
+        Ok(x) => x,
+        Err(RouteError::UnknownModel(name)) => {
+            ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+            let detail = format!("no shard serves model `{name}`");
+            return writeln!(
+                writer,
+                "{}",
+                render_rejection_line("bad_request", Some(&detail))
+            )
+            .is_ok();
+        }
+        Err(RouteError::Overloaded) => {
+            // Admission control: shed, never queue without bound.
+            ctx.stats.shed_overloaded.fetch_add(1, Ordering::AcqRel);
+            return writeln!(writer, "{}", render_rejection_line("overloaded", None)).is_ok();
+        }
+    };
+    let t0 = Instant::now();
+    let (rtx, rrx) = std::sync::mpsc::channel();
+    let (stx, srx) = if parsed.stream {
+        let (a, b) = std::sync::mpsc::channel();
+        (Some(a), Some(b))
+    } else {
+        (None, None)
+    };
+    if ctx
+        .router
+        .send_to(
+            shard,
+            ServeRequest {
+                prompt: parsed.prompt,
+                output_tokens: parsed.output_tokens,
+                latency_req: parsed.latency_req,
+                accuracy_req: parsed.accuracy_req,
+                respond: rtx,
+                stream: stx,
+            },
+        )
+        .is_err()
+    {
+        let _ = writeln!(writer, "{}", render_rejection_line("shutdown", None));
+        drop(permit);
+        return false;
+    }
+    // Stream tokens until the server drops the sender — which it does only
+    // after queueing the final reply, so the rrx read below cannot race it.
+    if let Some(srx) = srx {
+        loop {
+            match srx.recv_timeout(ctx.cfg.reply_timeout) {
+                Ok(token) => {
+                    if writeln!(writer, "{}", render_token_line(token)).is_err() {
+                        drop(permit);
+                        return false;
+                    }
                 }
-                Err(_) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    ctx.stats.timeouts.fetch_add(1, Ordering::AcqRel);
+                    let _ = writeln!(writer, "{}", render_rejection_line("timeout", None));
+                    drop(permit);
+                    return false;
+                }
             }
         }
+    }
+    match rrx.recv_timeout(ctx.cfg.reply_timeout) {
+        Ok(resp) => {
+            if resp.outcome != ServeOutcome::Rejected {
+                ctx.stats
+                    .wire_latency
+                    .lock()
+                    .expect("wire histogram")
+                    .record(t0.elapsed().as_secs_f64());
+            }
+            drop(permit);
+            writeln!(writer, "{}", render_response_line(&resp, ctx.bpe.as_ref())).is_ok()
+        }
+        Err(_) => {
+            // Reply-wait liveness: release the slot (a wedged epoch must not
+            // leak gate capacity) and close — a late reply on a reused line
+            // would desync the protocol.
+            ctx.stats.timeouts.fetch_add(1, Ordering::AcqRel);
+            let _ = writeln!(writer, "{}", render_rejection_line("timeout", None));
+            drop(permit);
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accept loop
+// ---------------------------------------------------------------------
+
+/// Accept-loop error classification. Transient conditions — fd exhaustion
+/// under a connection burst (EMFILE/ENFILE surface as `Other`/uncategorized
+/// on Linux), peers vanishing between `accept` and the handshake, timeouts —
+/// are retried with backoff; only errors that mean the listener socket
+/// itself is gone are fatal.
+fn is_fatal_accept_error(kind: ErrorKind) -> bool {
+    !matches!(
+        kind,
+        ErrorKind::ConnectionAborted
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionRefused
+            | ErrorKind::Interrupted
+            | ErrorKind::TimedOut
+            | ErrorKind::WouldBlock
+            | ErrorKind::OutOfMemory
+            | ErrorKind::Other
+    ) && format!("{kind:?}") != "Uncategorized"
+}
+
+/// Exponential accept backoff: 1 ms doubling to a 500 ms cap, so a
+/// sustained EMFILE storm throttles the loop instead of spinning it, and a
+/// single hiccup costs almost nothing.
+fn accept_backoff(consecutive_errors: u32) -> Duration {
+    Duration::from_millis((1u64 << consecutive_errors.min(9)).min(500))
+}
+
+/// A live front-end: bound address, counters, and deterministic shutdown.
+pub struct Listener {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    ctx: Arc<ConnCtx>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Listener {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections accepted so far.
+    pub fn accepted(&self) -> u64 {
+        self.ctx.stats.connections.load(Ordering::Acquire)
+    }
+
+    /// Connections whose handler is still running. Zero after every client
+    /// disconnects and handlers drain — the no-thread-leak invariant the
+    /// load harness asserts.
+    pub fn open_connections(&self) -> u64 {
+        let s = &self.ctx.stats;
+        s.connections.load(Ordering::Acquire) - s.closed.load(Ordering::Acquire)
+    }
+
+    /// Poll until every connection handler has exited (true) or the
+    /// deadline passes (false).
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.open_connections() > 0 {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Front-end counters as a [`Metrics`] snapshot — merge it with the
+    /// per-shard server metrics for the full picture.
+    pub fn net_metrics(&self) -> Metrics {
+        self.ctx.stats.to_metrics()
+    }
+
+    /// Stop accepting and join the accept thread. Connections already
+    /// handed to handlers run to completion (bounded by their own idle and
+    /// reply timeouts).
+    pub fn shutdown(mut self) {
+        self.request_stop();
+        if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+    }
+
+    fn request_stop(&self) {
+        if self.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Unblock the accept call with a throwaway local connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        self.request_stop();
+    }
+}
+
+/// Bind and start the accept loop: one bounded-liveness handler thread per
+/// connection, requests routed through `router`. Returns the [`Listener`]
+/// handle (address, counters, shutdown).
+pub fn spawn_listener(
+    addr: &str,
+    router: Router,
+    bpe: Option<Bpe>,
+    cfg: NetConfig,
+) -> io::Result<Listener> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let ctx = Arc::new(ConnCtx {
+        router,
+        bpe,
+        cfg,
+        stats: NetStats::default(),
     });
-    Ok(local)
+    let accept_ctx = Arc::clone(&ctx);
+    let accept_stop = Arc::clone(&shutdown);
+    let accept_join = std::thread::Builder::new()
+        .name("net-accept".to_string())
+        .spawn(move || {
+            let mut consecutive_errors = 0u32;
+            loop {
+                let accepted = listener.accept();
+                if accept_stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match accepted {
+                    Ok((stream, _peer)) => {
+                        consecutive_errors = 0;
+                        let ctx = Arc::clone(&accept_ctx);
+                        ctx.stats.connections.fetch_add(1, Ordering::AcqRel);
+                        // Small stacks: O(10k) concurrent handlers reserve
+                        // ~1 GiB of *virtual* address space instead of 80.
+                        let spawned = std::thread::Builder::new()
+                            .name("net-conn".to_string())
+                            .stack_size(128 * 1024)
+                            .spawn(move || {
+                                handle_conn(stream, &ctx);
+                                ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
+                            });
+                        if spawned.is_err() {
+                            // Thread exhaustion is admission pressure too:
+                            // count the shed and the close (the socket
+                            // dropped with the failed spawn's closure).
+                            let s = &accept_ctx.stats;
+                            s.shed_overloaded.fetch_add(1, Ordering::AcqRel);
+                            s.closed.fetch_add(1, Ordering::AcqRel);
+                        }
+                    }
+                    Err(e) => {
+                        // The pre-hardening loop did `Err(_) => break` here:
+                        // one EMFILE burst and the front-end was dead for
+                        // good while the server ran on headless.
+                        accept_ctx.stats.accept_errors.fetch_add(1, Ordering::AcqRel);
+                        if is_fatal_accept_error(e.kind()) {
+                            eprintln!("listener: fatal accept error: {e}");
+                            break;
+                        }
+                        std::thread::sleep(accept_backoff(consecutive_errors));
+                        consecutive_errors = consecutive_errors.saturating_add(1);
+                    }
+                }
+            }
+        })?;
+    Ok(Listener {
+        addr: local,
+        shutdown,
+        ctx,
+        accept_join: Some(accept_join),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::RejectCause;
+
+    const CAP: u32 = 1024;
 
     #[test]
     fn parse_ids_request() {
-        let (prompt, out, lat, acc) = parse_request_line(
+        let p = parse_request_line(
             r#"{"ids": [1, 2, 3], "output_tokens": 8, "latency_req": 2.5, "accuracy_req": 0.4}"#,
             None,
+            CAP,
         )
         .unwrap();
-        assert_eq!(prompt, vec![1, 2, 3]);
-        assert_eq!(out, 8);
-        assert_eq!(lat, 2.5);
-        assert_eq!(acc, 0.4);
+        assert_eq!(p.prompt, vec![1, 2, 3]);
+        assert_eq!(p.output_tokens, 8);
+        assert_eq!(p.latency_req, 2.5);
+        assert_eq!(p.accuracy_req, 0.4);
+        assert_eq!(p.model, None);
+        assert!(!p.stream);
+    }
+
+    #[test]
+    fn parse_model_and_stream_fields() {
+        let p = parse_request_line(
+            r#"{"ids": [1], "output_tokens": 2, "model": "BLOOM-3B", "stream": true}"#,
+            None,
+            CAP,
+        )
+        .unwrap();
+        assert_eq!(p.model.as_deref(), Some("BLOOM-3B"));
+        assert!(p.stream);
+        // Present-but-mistyped routing fields are typed errors, not
+        // silently ignored routing.
+        assert!(parse_request_line(
+            r#"{"ids": [1], "output_tokens": 2, "model": 7}"#,
+            None,
+            CAP
+        )
+        .is_err());
+        assert!(parse_request_line(
+            r#"{"ids": [1], "output_tokens": 2, "stream": "yes"}"#,
+            None,
+            CAP
+        )
+        .is_err());
     }
 
     #[test]
     fn parse_text_request_needs_bpe() {
-        let err = parse_request_line(
-            r#"{"prompt": "hello", "output_tokens": 4}"#,
-            None,
-        )
-        .unwrap_err();
+        let err = parse_request_line(r#"{"prompt": "hello", "output_tokens": 4}"#, None, CAP)
+            .unwrap_err();
         assert!(err.contains("BPE"));
         let bpe = crate::tokenizer::Bpe::from_merges(vec![]);
-        let (prompt, _, _, _) = parse_request_line(
-            r#"{"prompt": "hi", "output_tokens": 4}"#,
-            Some(&bpe),
-        )
-        .unwrap();
-        assert_eq!(prompt, vec![b'h' as i32, b'i' as i32]);
+        let p = parse_request_line(r#"{"prompt": "hi", "output_tokens": 4}"#, Some(&bpe), CAP)
+            .unwrap();
+        assert_eq!(p.prompt, vec![b'h' as i32, b'i' as i32]);
     }
 
     #[test]
     fn parse_rejects_garbage() {
-        assert!(parse_request_line("not json", None).is_err());
-        assert!(parse_request_line(r#"{"output_tokens": 4}"#, None).is_err());
-        assert!(parse_request_line(r#"{"ids": [1]}"#, None).is_err());
+        assert!(parse_request_line("not json", None, CAP).is_err());
+        assert!(parse_request_line(r#"{"output_tokens": 4}"#, None, CAP).is_err());
+        assert!(parse_request_line(r#"{"ids": [1]}"#, None, CAP).is_err());
+        assert!(parse_request_line(r#"{"ids": [], "output_tokens": 4}"#, None, CAP).is_err());
+    }
+
+    /// Regression (issue satellite): `req_f64("output_tokens")? as u32`
+    /// silently turned negatives into 0, clamped 1e12, and accepted
+    /// non-integers — all of these must now be typed errors.
+    #[test]
+    fn parse_validates_output_tokens_range() {
+        let line = |v: &str| format!(r#"{{"ids": [1, 2], "output_tokens": {v}}}"#);
+        assert!(parse_request_line(&line("0"), None, CAP).is_err());
+        assert!(parse_request_line(&line("-3"), None, CAP).is_err());
+        assert!(parse_request_line(&line("3.5"), None, CAP).is_err());
+        // 1e400 overflows f64 into +inf — not finite, not a valid count.
+        assert!(parse_request_line(&line("1e400"), None, CAP).is_err());
+        // Above the server-configured cap.
+        assert!(parse_request_line(&line("1e12"), None, CAP).is_err());
+        assert!(parse_request_line(&line(&(CAP + 1).to_string()), None, CAP).is_err());
+        // The cap itself is fine.
+        let p = parse_request_line(&line(&CAP.to_string()), None, CAP).unwrap();
+        assert_eq!(p.output_tokens, CAP);
+    }
+
+    /// Regression (issue satellite): `unwrap_or(default)` could not tell
+    /// *absent* (fine, default) from *present but malformed* — a client's
+    /// `"latency_req": "2.0"` silently became 5.0, violating their actual
+    /// constraint (1c). Present-but-malformed must be a typed error.
+    #[test]
+    fn parse_distinguishes_absent_from_malformed_requirements() {
+        // Absent: defaults apply.
+        let p = parse_request_line(r#"{"ids": [1], "output_tokens": 4}"#, None, CAP).unwrap();
+        assert_eq!(p.latency_req, 5.0);
+        assert_eq!(p.accuracy_req, 0.0);
+        // Present and valid: honored.
+        let p = parse_request_line(
+            r#"{"ids": [1], "output_tokens": 4, "latency_req": 2.0, "accuracy_req": 0.5}"#,
+            None,
+            CAP,
+        )
+        .unwrap();
+        assert_eq!(p.latency_req, 2.0);
+        assert_eq!(p.accuracy_req, 0.5);
+        // Present but malformed: typed error, not the default.
+        for bad in [
+            r#"{"ids": [1], "output_tokens": 4, "latency_req": "2.0"}"#,
+            r#"{"ids": [1], "output_tokens": 4, "latency_req": -1.0}"#,
+            r#"{"ids": [1], "output_tokens": 4, "latency_req": 1e400}"#,
+            r#"{"ids": [1], "output_tokens": 4, "accuracy_req": true}"#,
+            r#"{"ids": [1], "output_tokens": 4, "accuracy_req": 1.5}"#,
+            r#"{"ids": [1], "output_tokens": 4, "accuracy_req": -0.1}"#,
+        ] {
+            assert!(parse_request_line(bad, None, CAP).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_non_integer_ids() {
+        assert!(parse_request_line(r#"{"ids": [1.5], "output_tokens": 4}"#, None, CAP).is_err());
+        assert!(parse_request_line(r#"{"ids": [1e40], "output_tokens": 4}"#, None, CAP).is_err());
+        assert!(parse_request_line(r#"{"ids": ["x"], "output_tokens": 4}"#, None, CAP).is_err());
     }
 
     #[test]
@@ -176,12 +918,45 @@ mod tests {
             tokens: vec![5, 6, 7],
             latency: 0.25,
             epoch: Some(3),
+            reason: None,
         };
         let line = render_response_line(&resp, None);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.req_str("outcome").unwrap(), "completed");
         assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(j.req_f64("epoch").unwrap(), 3.0);
+        assert!(j.get("reason").is_none());
+    }
+
+    #[test]
+    fn render_includes_typed_reason() {
+        let resp = ServeResponse {
+            outcome: ServeOutcome::Rejected,
+            tokens: vec![],
+            latency: 0.1,
+            epoch: None,
+            reason: Some(RejectCause::KvFull),
+        };
+        let j = Json::parse(&render_response_line(&resp, None)).unwrap();
+        assert_eq!(j.req_str("outcome").unwrap(), "rejected");
+        assert_eq!(j.req_str("reason").unwrap(), "kv_full");
+    }
+
+    /// Regression (issue satellite): error replies were hand-rolled
+    /// `format!("{{\"error\":{}}}", …)` string splicing; they must be
+    /// well-formed JSON by construction, whatever the detail text contains.
+    #[test]
+    fn rejection_lines_are_wellformed_json() {
+        let nasty = "quote \" backslash \\ newline \n done";
+        let line = render_rejection_line("bad_request", Some(nasty));
+        let j = Json::parse(&line).expect("reply must reparse");
+        assert_eq!(j.req_str("outcome").unwrap(), "rejected");
+        assert_eq!(j.req_str("reason").unwrap(), "bad_request");
+        assert_eq!(j.req_str("error").unwrap(), nasty);
+        let bare = render_rejection_line("overloaded", None);
+        let j = Json::parse(&bare).unwrap();
+        assert_eq!(j.req_str("reason").unwrap(), "overloaded");
+        assert!(j.get("error").is_none());
     }
 
     #[test]
@@ -192,9 +967,81 @@ mod tests {
             tokens: vec![b'o' as i32, b'k' as i32],
             latency: 0.1,
             epoch: None,
+            reason: None,
         };
         let line = render_response_line(&resp, Some(&bpe));
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.req_str("text").unwrap(), "ok");
+    }
+
+    #[test]
+    fn gate_caps_and_releases() {
+        let gate = IngressGate::new(2);
+        let a = IngressGate::try_acquire(&gate).expect("slot 1");
+        let b = IngressGate::try_acquire(&gate).expect("slot 2");
+        assert_eq!(gate.depth(), 2);
+        assert!(
+            IngressGate::try_acquire(&gate).is_none(),
+            "cap reached: shed"
+        );
+        drop(a);
+        assert_eq!(gate.depth(), 1);
+        let c = IngressGate::try_acquire(&gate).expect("released slot is reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(gate.depth(), 0);
+    }
+
+    /// Regression (issue satellite): the pre-hardening accept loop broke on
+    /// *any* error. The classifier must treat burst-shaped errors (EMFILE
+    /// surfaces as uncategorized/`Other`, peers aborting mid-handshake) as
+    /// retryable, and the backoff must grow and cap.
+    #[test]
+    fn accept_error_classification_and_backoff() {
+        for transient in [
+            ErrorKind::ConnectionAborted,
+            ErrorKind::ConnectionReset,
+            ErrorKind::Interrupted,
+            ErrorKind::TimedOut,
+            ErrorKind::WouldBlock,
+            ErrorKind::Other,
+        ] {
+            assert!(!is_fatal_accept_error(transient), "{transient:?}");
+        }
+        // EMFILE has no stable ErrorKind; make sure the raw-os form is
+        // treated as retryable on this platform.
+        let emfile = io::Error::from_raw_os_error(24); // EMFILE
+        assert!(!is_fatal_accept_error(emfile.kind()), "{:?}", emfile.kind());
+        assert!(is_fatal_accept_error(ErrorKind::InvalidInput));
+        assert!(accept_backoff(0) < accept_backoff(3));
+        assert!(accept_backoff(3) < accept_backoff(9));
+        assert_eq!(accept_backoff(9), accept_backoff(40), "backoff caps");
+        assert!(accept_backoff(40) <= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn read_line_bounded_enforces_cap() {
+        use std::io::Cursor;
+        let mut buf = String::new();
+        // Under the cap: fine.
+        let mut r = BufReader::new(Cursor::new(b"hello\nworld\n".to_vec()));
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineEvent::Line
+        ));
+        assert_eq!(buf, "hello");
+        // Over the cap: Oversize, no unbounded buffering.
+        let long = vec![b'x'; 1000];
+        let mut r = BufReader::new(Cursor::new(long));
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineEvent::Oversize
+        ));
+        // Empty input: EOF.
+        let mut r = BufReader::new(Cursor::new(Vec::new()));
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineEvent::Eof
+        ));
     }
 }

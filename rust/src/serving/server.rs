@@ -57,6 +57,49 @@ pub struct ServeRequest {
     pub accuracy_req: f64,
     /// Reply channel.
     pub respond: Sender<ServeResponse>,
+    /// Optional per-token stream: every generated token is sent here as it
+    /// is emitted (epoch mode streams at batch-decode step granularity,
+    /// continuous mode at decode-round granularity). The sender is dropped
+    /// when the request terminates — strictly *after* the final
+    /// [`ServeResponse`] is queued on `respond`, so a receiver that drains
+    /// this channel to disconnection can then read the final reply without
+    /// racing it.
+    pub stream: Option<Sender<i32>>,
+}
+
+/// Why a request was rejected — carried in [`ServeResponse::reason`] and
+/// rendered as the wire protocol's typed `reason` token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCause {
+    /// Malformed or engine-shape-invalid request — something the client can
+    /// fix and resubmit.
+    BadRequest,
+    /// The deployed quantization cannot satisfy the accuracy requirement
+    /// (constraint 1e): no amount of retrying against this deployment helps.
+    Inadmissible,
+    /// Queue pressure: the request went stale or its deadline is already
+    /// unmeetable — shed; retry against a less-loaded shard or back off.
+    Overloaded,
+    /// KV pressure: the deadline expired while waiting for a KV slot.
+    KvFull,
+    /// The server is shutting down.
+    Shutdown,
+    /// Engine execution failed mid-flight.
+    Execution,
+}
+
+impl RejectCause {
+    /// The wire token (`{"outcome":"rejected","reason":"…"}`).
+    pub fn as_wire_str(self) -> &'static str {
+        match self {
+            RejectCause::BadRequest => "bad_request",
+            RejectCause::Inadmissible => "inadmissible",
+            RejectCause::Overloaded => "overloaded",
+            RejectCause::KvFull => "kv_full",
+            RejectCause::Shutdown => "shutdown",
+            RejectCause::Execution => "execution",
+        }
+    }
 }
 
 /// Terminal state of a served request.
@@ -80,6 +123,8 @@ pub struct ServeResponse {
     pub latency: f64,
     /// Epoch index in which the request ran (None if rejected).
     pub epoch: Option<u64>,
+    /// Why the request was rejected (None for completions).
+    pub reason: Option<RejectCause>,
 }
 
 /// A submitted request plus the instant the client handed it over — the
@@ -153,6 +198,9 @@ impl Default for ServerConfig {
 struct Pending {
     prompt: Vec<i32>,
     respond: Sender<ServeResponse>,
+    /// Per-token stream sender (see [`ServeRequest::stream`]); dropped with
+    /// the `Pending`, after the final reply is queued.
+    stream: Option<Sender<i32>>,
     submitted: Instant,
 }
 
@@ -219,12 +267,13 @@ impl EngineBackend {
             .unwrap_or(0.0)
     }
 
-    fn respond_rejected(p: &QueuedRequest<Pending>, epoch: Option<u64>) {
+    fn respond_rejected(p: &QueuedRequest<Pending>, epoch: Option<u64>, cause: RejectCause) {
         let _ = p.payload.respond.send(ServeResponse {
             outcome: ServeOutcome::Rejected,
             tokens: vec![],
             latency: p.payload.submitted.elapsed().as_secs_f64(),
             epoch,
+            reason: Some(cause),
         });
     }
 
@@ -239,7 +288,7 @@ impl EngineBackend {
     }
 
     /// Reject an un-offerable submission outright (shape or admission).
-    fn reject_stamped(s: Stamped, metrics: &mut Metrics) {
+    fn reject_stamped(s: Stamped, metrics: &mut Metrics, cause: RejectCause) {
         metrics.record_offered(1);
         metrics.record_outcome(Outcome::Dropped, 0.0);
         let _ = s.req.respond.send(ServeResponse {
@@ -247,6 +296,7 @@ impl EngineBackend {
             tokens: vec![],
             latency: s.submitted.elapsed().as_secs_f64(),
             epoch: None,
+            reason: Some(cause),
         });
     }
 
@@ -264,7 +314,7 @@ impl EngineBackend {
         }
         for s in incoming {
             if !self.shape_ok(s.req.prompt.len(), s.req.output_tokens) {
-                Self::reject_stamped(s, &mut driver.metrics);
+                Self::reject_stamped(s, &mut driver.metrics, RejectCause::BadRequest);
                 continue;
             }
             let QueuedRequest { req, payload } = self.intake(s, now);
@@ -292,6 +342,7 @@ impl EngineBackend {
             payload: Pending {
                 prompt: s.req.prompt,
                 respond: s.req.respond,
+                stream: s.req.stream,
                 submitted: s.submitted,
             },
         }
@@ -321,6 +372,12 @@ impl EngineBackend {
             for i in 0..n {
                 if (chunk[i].req.output_tokens as usize) > step {
                     outs[i].push(next[i]);
+                    if let Some(stream) = &chunk[i].payload.stream {
+                        // A gone receiver is not an error: the client may
+                        // have stopped reading; the final reply still tells
+                        // the handler what happened.
+                        let _ = stream.send(next[i]);
+                    }
                 }
             }
             if step + 1 == max_steps {
@@ -349,6 +406,7 @@ impl EngineBackend {
                 tokens: outs[i].clone(),
                 latency,
                 epoch: Some(epoch_idx),
+                reason: None,
             });
         }
         Ok(())
@@ -368,7 +426,7 @@ impl EngineBackend {
         for chunk in &chunks {
             if let Err(e) = self.run_batch(chunk, ctx.epoch_idx, metrics) {
                 for p in chunk {
-                    Self::respond_rejected(p, Some(ctx.epoch_idx));
+                    Self::respond_rejected(p, Some(ctx.epoch_idx), RejectCause::Execution);
                     metrics.record_outcome(Outcome::Dropped, 0.0);
                 }
                 eprintln!("batch execution failed: {e}");
@@ -428,7 +486,7 @@ impl EngineBackend {
                 eprintln!("continuous admission failed ({e}); falling back to barrier execution");
                 if let Err(e2) = self.run_batch(std::slice::from_ref(&entry), epoch, metrics) {
                     eprintln!("fallback batch failed: {e2}");
-                    Self::respond_rejected(&entry, Some(epoch));
+                    Self::respond_rejected(&entry, Some(epoch), RejectCause::Execution);
                     metrics.record_outcome(Outcome::Dropped, 0.0);
                 }
             }
@@ -444,7 +502,9 @@ impl EngineBackend {
         let waiting = std::mem::take(&mut self.waiting);
         for (entry, epoch) in waiting {
             if entry.payload.submitted.elapsed().as_secs_f64() > entry.req.latency_req {
-                Self::respond_rejected(&entry, Some(epoch));
+                // The deadline burned away *queued for a KV slot*: the
+                // resource that ran out was cache capacity, not queue space.
+                Self::respond_rejected(&entry, Some(epoch), RejectCause::KvFull);
                 metrics.record_outcome(Outcome::Dropped, 0.0);
             } else if self.slots_free() {
                 self.admit(entry, epoch, metrics);
@@ -465,7 +525,7 @@ impl EngineBackend {
         metrics: &mut Metrics,
     ) -> Option<Stamped> {
         if !self.shape_ok(s.req.prompt.len(), s.req.output_tokens) {
-            Self::reject_stamped(s, metrics);
+            Self::reject_stamped(s, metrics, RejectCause::BadRequest);
             return None;
         }
         // Constraint (1e) — the same admission screen the driver applies at
@@ -475,7 +535,7 @@ impl EngineBackend {
             .quant
             .satisfies_accuracy(&ctx.inst.cost.spec.name, s.req.accuracy_req)
         {
-            Self::reject_stamped(s, metrics);
+            Self::reject_stamped(s, metrics, RejectCause::Inadmissible);
             return None;
         }
         // Deadline screen — the fast-path counterpart of the driver's stale
@@ -483,7 +543,7 @@ impl EngineBackend {
         // already expired must not burn a slot decoding to a useless late
         // completion.
         if s.submitted.elapsed().as_secs_f64() > s.req.latency_req {
-            Self::reject_stamped(s, metrics);
+            Self::reject_stamped(s, metrics, RejectCause::Overloaded);
             return None;
         }
         if !(self.slots_free() && self.waiting.is_empty()) {
@@ -539,6 +599,9 @@ impl EngineBackend {
         while i < self.flights.len() {
             let next = self.flights[i].next;
             self.flights[i].out.push(next);
+            if let Some(stream) = &self.flights[i].entry.payload.stream {
+                let _ = stream.send(next);
+            }
             if self.flights[i].out.len() >= self.flights[i].entry.req.output_tokens as usize {
                 let f = self.flights.swap_remove(i);
                 if let Some(cache) = self.cache.as_mut() {
@@ -563,6 +626,7 @@ impl EngineBackend {
                     tokens: f.out,
                     latency,
                     epoch: Some(f.epoch),
+                    reason: None,
                 });
             } else {
                 i += 1;
@@ -590,7 +654,7 @@ impl EngineBackend {
             Err(e) => {
                 eprintln!("continuous decode failed: {e}");
                 for f in self.flights.drain(..) {
-                    Self::respond_rejected(&f.entry, Some(f.epoch));
+                    Self::respond_rejected(&f.entry, Some(f.epoch), RejectCause::Execution);
                     metrics.record_outcome(Outcome::Dropped, 0.0);
                 }
                 self.cache = None;
@@ -670,11 +734,16 @@ impl ExecutionBackend for EngineBackend {
     fn reject(
         &mut self,
         entry: QueuedRequest<Pending>,
-        _reason: RejectReason,
+        reason: RejectReason,
         metrics: &mut Metrics,
     ) {
         metrics.record_outcome(Outcome::Dropped, 0.0);
-        Self::respond_rejected(&entry, None);
+        let cause = match reason {
+            RejectReason::Stale => RejectCause::Overloaded,
+            RejectReason::Inadmissible => RejectCause::Inadmissible,
+            RejectReason::Shutdown => RejectCause::Shutdown,
+        };
+        Self::respond_rejected(&entry, None, cause);
     }
 
     /// Shutdown: finish generating for everything already admitted or
@@ -700,7 +769,7 @@ impl ExecutionBackend for EngineBackend {
             }
         }
         for s in std::mem::take(&mut self.deferred) {
-            Self::reject_stamped(s, metrics);
+            Self::reject_stamped(s, metrics, RejectCause::Shutdown);
         }
     }
 }
@@ -853,6 +922,12 @@ impl EpochServer {
         }
     }
 
+    /// Name of the model this server's engine is serving — the routing key
+    /// the TCP front-end matches the wire protocol's `model` field against.
+    pub fn model_name(&self) -> &str {
+        &self.backend.engine.meta.model_name
+    }
+
     /// Run metrics so far (offered/served counters, latency, search effort).
     pub fn metrics(&self) -> &Metrics {
         &self.driver.metrics
@@ -907,6 +982,7 @@ mod tests {
             payload: Pending {
                 prompt: vec![1; prompt_len],
                 respond: tx,
+                stream: None,
                 submitted: Instant::now(),
             },
         }
@@ -1044,6 +1120,7 @@ mod host_tests {
                 latency_req: 30.0,
                 accuracy_req: 0.0,
                 respond: rtx,
+                stream: None,
             },
             submitted: Instant::now() - Duration::from_secs(2),
         })
@@ -1076,6 +1153,7 @@ mod host_tests {
                 latency_req: 30.0,
                 accuracy_req: 0.0,
                 respond: rtx,
+                stream: None,
             },
             submitted: Instant::now(),
         })
@@ -1128,6 +1206,7 @@ mod host_tests {
             payload: Pending {
                 prompt: vec![1, 2],
                 respond: rtx0,
+                stream: None,
                 submitted: Instant::now(),
             },
         };
@@ -1141,6 +1220,7 @@ mod host_tests {
                 latency_req: 30.0,
                 accuracy_req: 0.0,
                 respond: rtx1,
+                stream: None,
             },
             submitted: Instant::now(),
         })
@@ -1161,6 +1241,48 @@ mod host_tests {
         );
         assert_eq!(backend.flights.len(), 0);
         assert_eq!(metrics.completed_in_deadline, 2);
+    }
+
+    /// Streaming contract: every generated token arrives on the stream
+    /// channel in order, the channel disconnects only after the final reply
+    /// is queued, and the streamed tokens equal the final reply's tokens.
+    #[test]
+    fn stream_tokens_match_final_reply_and_disconnect_after_it() {
+        for batching in [BatchingMode::Epoch, BatchingMode::Continuous] {
+            let cfg = ServerConfig {
+                epoch: EpochParams {
+                    duration: 0.1,
+                    t_u: 0.01,
+                    t_d: 0.01,
+                },
+                batching,
+                ..Default::default()
+            };
+            let mut server = EpochServer::new(test_engine(), cfg, Box::new(Dftsp::new()));
+            let handle = server.handle();
+            let (rtx, rrx) = channel();
+            let (stx, srx) = channel();
+            handle
+                .send(ServeRequest {
+                    prompt: vec![5, 6, 7],
+                    output_tokens: 4,
+                    latency_req: 10.0,
+                    accuracy_req: 0.2,
+                    respond: rtx,
+                    stream: Some(stx),
+                })
+                .unwrap();
+            server.run_for(4);
+            // Drain the stream to disconnection *first*: the final reply must
+            // already be waiting (ordering guarantee in the field docs).
+            let streamed: Vec<i32> = srx.iter().collect();
+            let resp = rrx
+                .try_recv()
+                .expect("final reply queued before the stream sender dropped");
+            assert_eq!(resp.outcome, ServeOutcome::Completed, "mode {batching}");
+            assert_eq!(streamed, resp.tokens, "mode {batching}");
+            assert_eq!(streamed.len(), 4);
+        }
     }
 
     /// Continuous mode end-to-end through the real `EpochServer` loop:
@@ -1191,6 +1313,7 @@ mod host_tests {
                 latency_req: 10.0,
                 accuracy_req: 0.2,
                 respond: rtx,
+                stream: None,
             })
             .unwrap();
         server.run_for(4);

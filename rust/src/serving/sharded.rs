@@ -17,26 +17,39 @@
 use crate::metrics::Metrics;
 use crate::serving::server::{EpochServer, ServeHandle};
 
+/// A shard's ingest handle plus the model name its engine serves — the
+/// affinity key the TCP front-end's [`Router`](crate::serving::Router)
+/// matches wire-protocol `model` fields against.
+#[derive(Clone)]
+pub struct ShardHandle {
+    /// Shard index (position in the `serve_sharded` fleet).
+    pub shard: usize,
+    /// `engine.meta.model_name` of this shard's deployment.
+    pub model: String,
+    /// Ingest handle for submitting [`ServeRequest`](crate::serving::ServeRequest)s.
+    pub handle: ServeHandle,
+}
+
 /// Run `shards` epoch servers for `epochs` epochs each, concurrently.
 ///
 /// `make_server` is called once per shard *on that shard's thread* (build
 /// the engine there; it never crosses threads). Once every shard is up,
 /// `drive` receives the shard handles (index = shard) on the calling thread
 /// — submit client traffic through them however you route it (round-robin,
-/// per-model affinity, …); the call returns when `drive` has returned and
-/// every shard finished its run.
+/// per-model affinity via [`ShardHandle::model`], …); the call returns when
+/// `drive` has returned and every shard finished its run.
 ///
 /// Panics in a shard thread propagate: a dead shard is a failed run, not a
 /// silent capacity loss.
 pub fn serve_sharded<F, C>(shards: usize, epochs: u64, make_server: F, drive: C) -> Vec<Metrics>
 where
     F: Fn(usize) -> EpochServer + Sync,
-    C: FnOnce(&[ServeHandle]),
+    C: FnOnce(&[ShardHandle]),
 {
     assert!(shards >= 1, "need at least one shard");
     let mut per_shard: Vec<Option<Metrics>> = (0..shards).map(|_| None).collect();
     std::thread::scope(|scope| {
-        let (handle_tx, handle_rx) = std::sync::mpsc::channel::<(usize, ServeHandle)>();
+        let (handle_tx, handle_rx) = std::sync::mpsc::channel::<ShardHandle>();
         let make = &make_server;
         let joins: Vec<_> = (0..shards)
             .map(|i| {
@@ -44,7 +57,11 @@ where
                 scope.spawn(move || {
                     let mut server = make(i);
                     handle_tx
-                        .send((i, server.handle()))
+                        .send(ShardHandle {
+                            shard: i,
+                            model: server.model_name().to_string(),
+                            handle: server.handle(),
+                        })
                         .expect("collector outlives shard startup");
                     drop(handle_tx);
                     server.run_for(epochs);
@@ -53,9 +70,8 @@ where
             })
             .collect();
         drop(handle_tx);
-        let mut handles: Vec<(usize, ServeHandle)> = handle_rx.iter().take(shards).collect();
-        handles.sort_by_key(|(i, _)| *i);
-        let handles: Vec<ServeHandle> = handles.into_iter().map(|(_, h)| h).collect();
+        let mut handles: Vec<ShardHandle> = handle_rx.iter().take(shards).collect();
+        handles.sort_by_key(|h| h.shard);
         assert_eq!(handles.len(), shards, "every shard came up");
         drive(&handles);
         // Handles drop here; shards finish their remaining epochs and drain.
@@ -114,18 +130,23 @@ mod tests {
         // few 100 ms epochs.
         let per_shard = serve_sharded(2, 20, make, |handles| {
             assert_eq!(handles.len(), 2);
+            assert!(handles.iter().enumerate().all(|(i, h)| h.shard == i));
+            // Every shard reports its engine's model name for routing.
+            assert!(handles.iter().all(|h| !h.model.is_empty()));
             // One request to each shard (round-robin routing).
             let mut rxs = Vec::new();
             for h in handles {
                 let (rtx, rrx) = channel();
-                h.send(ServeRequest {
-                    prompt: vec![5, 6, 7],
-                    output_tokens: 4,
-                    latency_req: 10.0,
-                    accuracy_req: 0.2,
-                    respond: rtx,
-                })
-                .expect("shard accepts work");
+                h.handle
+                    .send(ServeRequest {
+                        prompt: vec![5, 6, 7],
+                        output_tokens: 4,
+                        latency_req: 10.0,
+                        accuracy_req: 0.2,
+                        respond: rtx,
+                        stream: None,
+                    })
+                    .expect("shard accepts work");
                 rxs.push(rrx);
             }
             for rrx in rxs {

@@ -179,6 +179,17 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Bucket index a value lands in. Bucket 0 also absorbs everything at or
+    /// below the low edge; the last bucket absorbs the overflow tail.
+    /// Exposed so bucket math is testable without reaching into internals.
+    pub fn bucket_index(&self, v: f64) -> usize {
+        self.index(v)
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
     /// Approximate quantile from bucket midpoints (relative error ≈ ratio).
     pub fn quantile(&self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q));
@@ -292,5 +303,71 @@ mod tests {
         h.record(1e9);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_index_monotone_and_clamped() {
+        let h = LatencyHistogram::new();
+        // Below-range and at-edge values land in bucket 0; far-overflow in
+        // the last bucket; and the mapping never decreases as values grow.
+        assert_eq!(h.bucket_index(0.0), 0);
+        assert_eq!(h.bucket_index(1e-9), 0);
+        assert_eq!(h.bucket_index(1e-6), 0);
+        assert_eq!(h.bucket_index(1e9), h.bucket_count() - 1);
+        let mut prev = 0usize;
+        let mut v = 1e-7;
+        while v < 1e3 {
+            let idx = h.bucket_index(v);
+            assert!(idx >= prev, "index must be monotone in the value");
+            assert!(idx < h.bucket_count());
+            prev = idx;
+            v *= 1.07;
+        }
+        // The full range actually spreads over the bucket space (log-spaced,
+        // not collapsed into a few buckets).
+        assert!(h.bucket_index(50.0) > h.bucket_count() / 2);
+    }
+
+    #[test]
+    fn histogram_merge_equals_sequential_bitexact() {
+        // Merging two shards must equal recording everything into one
+        // histogram — bucket-for-bucket (PartialEq covers buckets, count,
+        // sum and max), the exact-merge contract `Metrics::merge` relies on.
+        let mut whole = LatencyHistogram::new();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..400 {
+            let v = 1e-5 * (1.05f64).powi(i % 97) * (1 + i % 7) as f64;
+            whole.record(v);
+            if i % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        // Merging an empty histogram is the identity.
+        let snapshot = a.clone();
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a, snapshot);
+    }
+
+    #[test]
+    fn histogram_p99_tail_resolution() {
+        let mut h = LatencyHistogram::new();
+        // 985 fast requests at ~2 ms, 15 stragglers at ~1.5 s: p99 must see
+        // the straggler tail, not the bulk.
+        for _ in 0..985 {
+            h.record(0.002);
+        }
+        for _ in 0..15 {
+            h.record(1.5);
+        }
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 0.002).abs() / 0.002 < 0.1, "p50={p50}");
+        assert!(p99 > 1.0, "p99={p99} must resolve the tail");
+        assert!((p99 - 1.5).abs() / 1.5 < 0.1, "p99={p99}");
     }
 }

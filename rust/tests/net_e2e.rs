@@ -1,0 +1,332 @@
+//! TCP front-end end-to-end tests on real loopback sockets: typed
+//! rejections, connection reuse after errors, deterministic shed under a
+//! full admission gate, model-name routing across shards, streaming, and
+//! liveness timeouts. Synthetic host engines only — no artifacts needed.
+#![cfg(not(feature = "pjrt"))]
+
+use edgellm::coordinator::{Dftsp, EpochParams};
+use edgellm::quant::Precision;
+use edgellm::runtime::{Engine, SyntheticSpec};
+use edgellm::serving::{
+    serve_sharded, spawn_listener, EpochServer, NetConfig, Router, ServerConfig,
+};
+use edgellm::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn tiny_server() -> EpochServer {
+    let cfg = ServerConfig {
+        epoch: EpochParams {
+            duration: 0.05,
+            t_u: 0.005,
+            t_d: 0.005,
+        },
+        ..Default::default()
+    };
+    EpochServer::new(
+        Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16),
+        cfg,
+        Box::new(Dftsp::new()),
+    )
+}
+
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s
+}
+
+fn send_line(s: &mut TcpStream, line: &str) {
+    writeln!(s, "{line}").expect("write request");
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read reply");
+    assert!(n > 0, "connection closed instead of replying");
+    Json::parse(line.trim()).expect("reply is well-formed JSON")
+}
+
+#[test]
+fn well_formed_ids_request_completes_and_matches_direct_engine() {
+    let mut server = tiny_server();
+    let router = Router::single(server.model_name(), server.handle(), 64);
+    let listener =
+        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
+    let addr = listener.addr();
+    // The served tokens must equal the engine's direct greedy decode — the
+    // wire adds transport, not nondeterminism. This also pins the single
+    // shard `--listen` path to the unsharded reply content.
+    let want = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16)
+        .generate_greedy(&[vec![1, 2, 3]], 4, None)
+        .unwrap()[0]
+        .clone();
+
+    let client = std::thread::spawn(move || {
+        let mut s = connect(addr);
+        send_line(
+            &mut s,
+            r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0}"#,
+        );
+        let mut reader = BufReader::new(s);
+        read_reply(&mut reader)
+    });
+    server.run_for(20);
+    let j = client.join().unwrap();
+    assert_eq!(j.req_str("outcome").unwrap(), "completed");
+    let ids: Vec<i32> = j
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(ids, want);
+    assert!(listener.wait_drained(Duration::from_secs(10)));
+    assert_eq!(listener.net_metrics().net_connections, 1);
+    listener.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_typed_errors_and_connection_survives() {
+    let mut server = tiny_server();
+    let router = Router::single(server.model_name(), server.handle(), 64);
+    let listener =
+        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
+    let addr = listener.addr();
+
+    let client = std::thread::spawn(move || {
+        let mut s = connect(addr);
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        // Every malformed class gets a typed `bad_request` on the SAME
+        // connection — a client bug must not kill the transport.
+        let malformed = [
+            "not json at all",
+            r#"{"output_tokens": 4}"#,
+            r#"{"ids": [], "output_tokens": 4}"#,
+            r#"{"ids": [1.5], "output_tokens": 4}"#,
+            r#"{"ids": [1], "output_tokens": 0}"#,
+            r#"{"ids": [1], "output_tokens": -5}"#,
+            r#"{"ids": [1], "output_tokens": 3.5}"#,
+            r#"{"ids": [1], "output_tokens": 1e400}"#,
+            r#"{"ids": [1], "output_tokens": 1e12}"#,
+            r#"{"ids": [1], "output_tokens": 4, "latency_req": "2.0"}"#,
+            r#"{"ids": [1], "output_tokens": 4, "accuracy_req": true}"#,
+            r#"{"ids": [1], "output_tokens": 4, "model": 7}"#,
+            r#"{"ids": [1], "output_tokens": 4, "stream": "yes"}"#,
+            r#"{"ids": [1], "output_tokens": 4, "model": "no-such-deployment"}"#,
+        ];
+        for line in malformed {
+            send_line(&mut s, line);
+            let j = read_reply(&mut reader);
+            assert_eq!(j.req_str("outcome").unwrap(), "rejected", "{line}");
+            assert_eq!(j.req_str("reason").unwrap(), "bad_request", "{line}");
+        }
+        // The connection is still usable for a good request afterwards.
+        send_line(
+            &mut s,
+            r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
+        );
+        read_reply(&mut reader)
+    });
+    server.run_for(20);
+    let j = client.join().unwrap();
+    assert_eq!(j.req_str("outcome").unwrap(), "completed");
+    let net = listener.net_metrics();
+    assert_eq!(net.bad_requests, 14, "every malformed line counted");
+    assert!(listener.wait_drained(Duration::from_secs(10)));
+    listener.shutdown();
+}
+
+#[test]
+fn full_gate_sheds_with_typed_overloaded_reply() {
+    let mut server = tiny_server();
+    // cap = 1: with the epoch loop not yet running, the first admitted
+    // request parks on its reply and holds the only permit; the other is
+    // shed immediately with a typed `overloaded`. Exactly one of each,
+    // whatever the arrival order.
+    let router = Router::single(server.model_name(), server.handle(), 1);
+    let listener =
+        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
+    let addr = listener.addr();
+
+    let mut a = connect(addr);
+    send_line(
+        &mut a,
+        r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
+    );
+    // Give A's handler time to take the permit before B arrives (the
+    // assertion below holds for either winner; this just makes the common
+    // path deterministic).
+    std::thread::sleep(Duration::from_millis(300));
+    let mut b = connect(addr);
+    send_line(
+        &mut b,
+        r#"{"ids": [3, 4], "output_tokens": 2, "latency_req": 30.0}"#,
+    );
+    std::thread::sleep(Duration::from_millis(300));
+
+    // Only now does the server start serving: the shed happened under a
+    // genuinely full gate, not a race with completions.
+    server.run_for(20);
+    let mut ra = BufReader::new(a);
+    let mut rb = BufReader::new(b);
+    let ja = read_reply(&mut ra);
+    let jb = read_reply(&mut rb);
+    let outcomes = [
+        ja.req_str("outcome").unwrap().to_string(),
+        jb.req_str("outcome").unwrap().to_string(),
+    ];
+    assert!(
+        outcomes.contains(&"completed".to_string()),
+        "the permit holder completes: {outcomes:?}"
+    );
+    assert!(
+        outcomes.contains(&"rejected".to_string()),
+        "the other is shed: {outcomes:?}"
+    );
+    let shed = if outcomes[0] == "rejected" { &ja } else { &jb };
+    assert_eq!(shed.req_str("reason").unwrap(), "overloaded");
+    assert_eq!(listener.net_metrics().shed_overloaded, 1);
+    drop(ra);
+    drop(rb);
+    assert!(listener.wait_drained(Duration::from_secs(10)));
+    listener.shutdown();
+}
+
+#[test]
+fn model_name_routes_to_the_matching_shard() {
+    let make = |shard: usize| {
+        let mut engine = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16);
+        engine.meta.model_name = format!("m{shard}");
+        let cfg = ServerConfig {
+            epoch: EpochParams {
+                duration: 0.05,
+                t_u: 0.005,
+                t_d: 0.005,
+            },
+            seed: 7 + shard as u64,
+            ..Default::default()
+        };
+        EpochServer::new(engine, cfg, Box::new(Dftsp::new()))
+    };
+    let per_shard = serve_sharded(2, 40, make, |handles| {
+        assert_eq!(handles[0].model, "m0");
+        assert_eq!(handles[1].model, "m1");
+        let router = Router::new(
+            handles
+                .iter()
+                .map(|h| (h.model.clone(), h.handle.clone()))
+                .collect(),
+            64,
+        );
+        let listener =
+            spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
+        let addr = listener.addr();
+        // One request per model name, both over the same wire endpoint.
+        for model in ["m0", "m1"] {
+            let mut s = connect(addr);
+            send_line(
+                &mut s,
+                &format!(
+                    r#"{{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0, "model": "{model}"}}"#
+                ),
+            );
+            let j = read_reply(&mut BufReader::new(s));
+            assert_eq!(j.req_str("outcome").unwrap(), "completed", "{model}");
+        }
+        assert!(listener.wait_drained(Duration::from_secs(10)));
+        listener.shutdown();
+    });
+    // Affinity, not load, decided the shard: one request landed on each.
+    assert_eq!(per_shard[0].offered, 1, "m0 went to shard 0");
+    assert_eq!(per_shard[1].offered, 1, "m1 went to shard 1");
+}
+
+#[test]
+fn streamed_tokens_arrive_before_and_match_the_final_reply() {
+    let mut server = tiny_server();
+    let router = Router::single(server.model_name(), server.handle(), 64);
+    let listener =
+        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
+    let addr = listener.addr();
+
+    let client = std::thread::spawn(move || {
+        let mut s = connect(addr);
+        send_line(
+            &mut s,
+            r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0, "stream": true}"#,
+        );
+        let mut reader = BufReader::new(s);
+        let mut streamed: Vec<i32> = Vec::new();
+        loop {
+            let j = read_reply(&mut reader);
+            if let Some(tok) = j.get("token") {
+                streamed.push(tok.as_f64().unwrap() as i32);
+            } else {
+                return (streamed, j);
+            }
+        }
+    });
+    server.run_for(20);
+    let (streamed, fin) = client.join().unwrap();
+    assert_eq!(fin.req_str("outcome").unwrap(), "completed");
+    let ids: Vec<i32> = fin
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(streamed.len(), 4, "one event per generated token");
+    assert_eq!(streamed, ids, "stream and final reply agree");
+    listener.shutdown();
+}
+
+#[test]
+fn reply_timeout_is_typed_and_releases_the_connection() {
+    let server = tiny_server(); // never run: every reply wait times out
+    let cfg = NetConfig {
+        reply_timeout: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let router = Router::single(server.model_name(), server.handle(), 4);
+    let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
+    let mut s = connect(listener.addr());
+    send_line(
+        &mut s,
+        r#"{"ids": [1], "output_tokens": 1, "latency_req": 30.0}"#,
+    );
+    let mut reader = BufReader::new(s);
+    let j = read_reply(&mut reader);
+    assert_eq!(j.req_str("outcome").unwrap(), "rejected");
+    assert_eq!(j.req_str("reason").unwrap(), "timeout");
+    // The server closes after a timeout (a late reply would desync the
+    // line protocol): the next read sees EOF, and the handler exits.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+    assert!(listener.wait_drained(Duration::from_secs(10)));
+    assert_eq!(listener.net_metrics().net_timeouts, 1);
+    listener.shutdown();
+}
+
+#[test]
+fn idle_connections_are_reaped_not_leaked() {
+    let server = tiny_server(); // never run; nothing is ever submitted
+    let cfg = NetConfig {
+        idle_timeout: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let router = Router::single(server.model_name(), server.handle(), 4);
+    let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
+    let s = connect(listener.addr());
+    // Send nothing: the server must hang up on us, not park a thread
+    // forever on a silent connection.
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server hangs up");
+    assert!(listener.wait_drained(Duration::from_secs(10)));
+    assert_eq!(listener.open_connections(), 0);
+    listener.shutdown();
+}

@@ -43,6 +43,7 @@ fn serves_and_returns_tokens() {
                 latency_req: 10.0,
                 accuracy_req: 0.3,
                 respond: rtx.clone(),
+                stream: None,
             })
             .unwrap();
     }
@@ -88,6 +89,7 @@ fn rejects_invalid_requests_immediately() {
                 latency_req: 10.0,
                 accuracy_req: 0.1,
                 respond: rtx.clone(),
+                stream: None,
             })
             .unwrap();
     }
@@ -115,6 +117,7 @@ fn unservable_accuracy_is_rejected_not_starved() {
             latency_req: 1000.0,
             accuracy_req: 1.0,
             respond: rtx.clone(),
+            stream: None,
         })
         .unwrap();
     drop(rtx);
@@ -132,8 +135,15 @@ fn tcp_front_end_serves_text_prompts() {
         return;
     }
     let bpe = edgellm::tokenizer::Bpe::load(&bpe_path).unwrap();
-    let addr = edgellm::serving::spawn_listener("127.0.0.1:0", server.handle(), Some(bpe))
-        .expect("bind");
+    let router = edgellm::serving::Router::single(server.model_name(), server.handle(), 64);
+    let listener = edgellm::serving::spawn_listener(
+        "127.0.0.1:0",
+        router,
+        Some(bpe),
+        edgellm::serving::NetConfig::default(),
+    )
+    .expect("bind");
+    let addr = listener.addr();
 
     // Client thread speaking the JSON-line protocol over TCP.
     let client = std::thread::spawn(move || {
@@ -152,6 +162,7 @@ fn tcp_front_end_serves_text_prompts() {
 
     server.run_for(8);
     let line = client.join().expect("client");
+    listener.shutdown();
     let j = edgellm::util::json::Json::parse(line.trim()).expect("json reply");
     assert_eq!(j.req_str("outcome").unwrap(), "completed");
     assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 4);
@@ -179,6 +190,7 @@ fn generated_tokens_match_direct_engine_output() {
             latency_req: 30.0,
             accuracy_req: 0.1,
             respond: rtx,
+            stream: None,
         })
         .unwrap();
     server.run_for(6);

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Bit-exact Python mirror of the Rust chaos-injection stream.
+
+Reimplements `rust/src/util/rng.rs` (SplitMix64 seeding + xoshiro256++)
+and `rust/src/driver/chaos.rs` (`chaos_stream`, `resolve_fault`) so the
+fault schedule of any chaos run can be predicted — and cross-checked —
+from the seed alone, without a Rust toolchain. The determinism contract
+being mirrored: the `ChaosBackend` draws exactly one uniform per epoch,
+so the fault at epoch `e` of `(shard, generation)` is
+
+    resolve_fault(cfg, Xoshiro256pp(chaos_stream(seed, shard, gen)).f64()^e)
+
+independent of traffic, wall time and the other shards.
+
+Usage:
+
+    python3 python/chaos_mirror.py --seed 77 --shard 1 --generation 0 \
+        --epochs 20 --panic 0.2 --error 0.15 --kv-fail 0.15
+
+prints one line per epoch with the resolved fault. `--selftest` runs the
+built-in vectors (also exercised by python/tests via pytest, and pinned
+against the Rust side in `rust/src/driver/chaos.rs` tests).
+"""
+
+import argparse
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(state):
+    """One SplitMix64 step. Returns (output, new_state)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK, state
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Xoshiro256pp:
+    """xoshiro256++ seeded via SplitMix64 — mirrors `util::rng::Rng`."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            out, sm = splitmix64(sm)
+            s.append(out)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        """Uniform in [0, 1): 53 random mantissa bits."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def chaos_stream(seed, shard, generation):
+    """Per-(shard, restart-generation) chaos stream seed (chaos.rs)."""
+    if shard == 0 and generation == 0:
+        return seed & MASK
+    s = (seed
+         ^ ((shard * 0x9E3779B97F4A7C15) & MASK)
+         ^ ((generation * 0xD1B54A32D192ED03) & MASK)) & MASK
+    out, _ = splitmix64(s)
+    return out
+
+
+# Fault names match the Rust `Fault` enum variants.
+NONE, PANIC, STALL, ERROR, KV_FAIL = "none", "panic", "stall", "error", "kv-fail"
+
+
+def resolve_fault(cfg, u):
+    """Cumulative thresholds in the order panic, stall, error, kv-fail —
+    the single decision rule shared with `ChaosBackend::execute`."""
+    edge = cfg["panic_prob"]
+    if u < edge:
+        return PANIC
+    edge += cfg["stall_prob"]
+    if u < edge:
+        return STALL
+    edge += cfg["error_prob"]
+    if u < edge:
+        return ERROR
+    edge += cfg["kv_fail_prob"]
+    if u < edge:
+        return KV_FAIL
+    return NONE
+
+
+def fault_schedule(cfg, shard, generation, epochs):
+    """The faults a `ChaosBackend` for `(shard, generation)` resolves over
+    its first `epochs` execute calls. Note an incarnation that panics at
+    epoch e stops there — the restarted shard continues on the stream of
+    `generation + 1`."""
+    rng = Xoshiro256pp(chaos_stream(cfg["seed"], shard, generation))
+    return [resolve_fault(cfg, rng.f64()) for _ in range(epochs)]
+
+
+def config(seed=0, panic_prob=0.0, stall_prob=0.0, error_prob=0.0,
+           kv_fail_prob=0.0):
+    return {"seed": seed, "panic_prob": panic_prob, "stall_prob": stall_prob,
+            "error_prob": error_prob, "kv_fail_prob": kv_fail_prob}
+
+
+def selftest():
+    # Mirror of chaos.rs `resolve_fault_thresholds_are_cumulative`.
+    cfg = config(panic_prob=0.1, stall_prob=0.2, error_prob=0.3,
+                 kv_fail_prob=0.2)
+    assert resolve_fault(cfg, 0.05) == PANIC
+    assert resolve_fault(cfg, 0.1) == STALL
+    assert resolve_fault(cfg, 0.29) == STALL
+    # The edges are accumulated float sums (0.1 + 0.2 != exactly 0.3), and
+    # Python floats are the same IEEE-754 doubles as Rust f64 — boundary
+    # draws land identically on both sides.
+    assert resolve_fault(cfg, 0.3) == STALL
+    assert resolve_fault(cfg, 0.35) == ERROR
+    assert resolve_fault(cfg, 0.65) == KV_FAIL
+    assert resolve_fault(cfg, 0.85) == NONE
+    assert resolve_fault(config(), 0.0) == NONE
+    # Mirror of `chaos_streams_split_by_shard_and_generation`.
+    assert chaos_stream(7, 0, 0) == 7
+    assert chaos_stream(7, 0, 0) != chaos_stream(7, 0, 1)
+    assert chaos_stream(7, 1, 0) != chaos_stream(7, 2, 0)
+    assert chaos_stream(7, 1, 0) != chaos_stream(7, 1, 1)
+    assert chaos_stream(7, 3, 2) == chaos_stream(7, 3, 2)
+    # Determinism + 64-bit wrap discipline: the same stream replays, and
+    # raw outputs stay within u64.
+    a = fault_schedule(cfg | {"seed": 77}, shard=1, generation=0, epochs=64)
+    b = fault_schedule(cfg | {"seed": 77}, shard=1, generation=0, epochs=64)
+    assert a == b
+    rng = Xoshiro256pp(2**63 + 12345)
+    assert all(0 <= rng.next_u64() <= MASK for _ in range(1000))
+    # f64 draws live in [0, 1).
+    rng = Xoshiro256pp(3)
+    assert all(0.0 <= rng.f64() < 1.0 for _ in range(10000))
+    print("chaos_mirror selftest: OK")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shard", type=int, default=0)
+    ap.add_argument("--generation", type=int, default=0)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--panic", type=float, default=0.0)
+    ap.add_argument("--stall", type=float, default=0.0)
+    ap.add_argument("--error", type=float, default=0.0)
+    ap.add_argument("--kv-fail", type=float, default=0.0)
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        selftest()
+        return
+    cfg = config(args.seed, args.panic, args.stall, args.error, args.kv_fail)
+    sched = fault_schedule(cfg, args.shard, args.generation, args.epochs)
+    for e, fault in enumerate(sched):
+        print(f"epoch {e:4d}  {fault}")
+
+
+if __name__ == "__main__":
+    main()

@@ -134,6 +134,42 @@ class MultiFileGate(unittest.TestCase):
         ])
         self.assertEqual(rc, 1, "regression in the --gate pair must fail")
 
+    def test_all_failing_keys_reported_together(self):
+        # A dftsp regression AND two engine regressions in one invocation:
+        # the gate must report every failing key across every gated pair,
+        # not stop at the first — a partial report hides how broken a
+        # change really is.
+        import contextlib
+        import io
+
+        err = io.StringIO()
+        with contextlib.redirect_stderr(err):
+            rc = bench_gate.main(self.gate_args(1500, 6000, 3))
+        self.assertEqual(rc, 1)
+        msgs = err.getvalue()
+        self.assertIn("nodes_visited", msgs)
+        self.assertIn("flops_per_call", msgs)
+        self.assertIn("allocs_per_step", msgs)
+
+    def test_zero_invariant_keys_gate_exactly(self):
+        # The chaos baseline pins its invariant columns at 0 (accounting
+        # gap, leaked connections/permits, parked shards): any nonzero
+        # fresh value must fail regardless of tolerance — tolerance is
+        # relative and 0 has no scale.
+        def rows(gap):
+            return [{"scenario": "chaos/quick", "accounting_gap": gap,
+                     "leaked_connections": 0, "leaked_permits": 0,
+                     "parked": 0, "wall_p95_s": None}]
+
+        keys = "accounting_gap,leaked_connections,leaked_permits,parked"
+        base = write_baseline(self.dir, "cb.json", rows(0))
+        ok = write_baseline(self.dir, "cf_ok.json", rows(0))
+        bad = write_baseline(self.dir, "cf_bad.json", rows(1))
+        self.assertEqual(
+            bench_gate.main(["--tol", "10.0", "--gate", base, ok, keys]), 0)
+        self.assertEqual(
+            bench_gate.main(["--tol", "10.0", "--gate", base, bad, keys]), 1)
+
     def test_no_inputs_is_a_usage_error(self):
         self.assertEqual(bench_gate.main([]), 2)
 

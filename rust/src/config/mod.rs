@@ -121,6 +121,28 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
     let partition =
         PartitionPolicy::parse(&doc.str_or("cluster.partition_policy", "load-proportional"))?;
 
+    // `[chaos]`: deterministic fault injection for the supervised sharded
+    // path. All probabilities default to 0.0 — an absent section leaves
+    // chaos disabled and the run byte-identical to an unsupervised one.
+    let chaos = crate::driver::ChaosConfig {
+        seed: doc.u64_or("chaos.seed", base.chaos.seed),
+        panic_prob: doc.f64_or("chaos.panic_prob", base.chaos.panic_prob),
+        stall_prob: doc.f64_or("chaos.stall_prob", base.chaos.stall_prob),
+        stall_ms: doc.u64_or("chaos.stall_ms", base.chaos.stall_ms),
+        error_prob: doc.f64_or("chaos.error_prob", base.chaos.error_prob),
+        kv_fail_prob: doc.f64_or("chaos.kv_fail_prob", base.chaos.kv_fail_prob),
+    };
+    for (key, p) in [
+        ("chaos.panic_prob", chaos.panic_prob),
+        ("chaos.stall_prob", chaos.stall_prob),
+        ("chaos.error_prob", chaos.error_prob),
+        ("chaos.kv_fail_prob", chaos.kv_fail_prob),
+    ] {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("{key} = {p} must be within [0, 1]"));
+        }
+    }
+
     Ok(SimConfig {
         model,
         quant,
@@ -136,6 +158,7 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         scheduler,
         shards,
         partition,
+        chaos,
     })
 }
 
@@ -239,6 +262,28 @@ s_pad = 256
         assert!(sim_config_from_doc(&doc).is_err());
         // Unknown policies are a config error, not a silent fallback.
         let doc = toml::parse("[cluster]\npartition_policy = \"fair\"\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn chaos_section_parses_and_validates() {
+        let doc = toml::parse(
+            "[chaos]\nseed = 42\npanic_prob = 0.05\nstall_prob = 0.1\nstall_ms = 20\nerror_prob = 0.02\nkv_fail_prob = 0.01\n",
+        )
+        .unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.chaos.seed, 42);
+        assert_eq!(cfg.chaos.panic_prob, 0.05);
+        assert_eq!(cfg.chaos.stall_prob, 0.1);
+        assert_eq!(cfg.chaos.stall_ms, 20);
+        assert_eq!(cfg.chaos.error_prob, 0.02);
+        assert_eq!(cfg.chaos.kv_fail_prob, 0.01);
+        assert!(cfg.chaos.enabled());
+        // Absent section leaves chaos disabled (all-zero probabilities).
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert!(!cfg.chaos.enabled());
+        // Probabilities outside [0, 1] are a config error, not a clamp.
+        let doc = toml::parse("[chaos]\npanic_prob = 1.5\n").unwrap();
         assert!(sim_config_from_doc(&doc).is_err());
     }
 

@@ -35,6 +35,18 @@ pub enum RejectReason {
     Inadmissible,
     /// The run ended with the request still queued.
     Shutdown,
+    /// Shed by the degradation ladder: the shard is sustainedly overrunning
+    /// its epoch budget and drops its loosest-deadline arrivals to recover
+    /// instead of falling behind unboundedly.
+    Overloaded,
+    /// The execution step failed transiently (chaos-injected or a real
+    /// engine error); the batch's requests get a typed rejection instead of
+    /// taking the shard down.
+    Execution,
+    /// KV-cache admission failed: the backend could not reserve cache for
+    /// the request (chaos-injected admission failure, or a genuinely full
+    /// ledger surfacing as a typed drop).
+    KvFull,
 }
 
 /// Everything a backend may need about the epoch being executed.
@@ -136,11 +148,14 @@ impl ExecutionBackend for AnalyticBackend {
         metrics: &mut Metrics,
     ) {
         for &(id, t_compute) in &schedule.per_request_compute {
-            let req = ctx
-                .annotated
-                .iter()
-                .find(|r| r.id() == id)
-                .expect("scheduler returned unknown request id");
+            // An id the annotation pass never saw was never queued, so it
+            // was never pulled into `batch` either — skipping it records
+            // nothing and conservation still closes. A panic here would cost
+            // the whole shard for what is a scheduler bug, not an engine bug.
+            let Some(req) = ctx.annotated.iter().find(|r| r.id() == id) else {
+                debug_assert!(false, "scheduler returned unknown request id");
+                continue;
+            };
             let (t_up, t_down) = ctx.comm_times(id);
             let completion = ctx.now + t_up + t_compute + t_down;
             let latency = completion - req.req.arrival;

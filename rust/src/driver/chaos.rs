@@ -1,0 +1,443 @@
+//! Deterministic chaos injection — the fault harness that proves the
+//! supervision layer.
+//!
+//! [`ChaosBackend`] decorates any [`ExecutionBackend`] and injects faults at
+//! the `execute` seam from its own seeded RNG stream:
+//!
+//! - **panic** — `panic!` mid-step, exactly what a poisoned request or an
+//!   engine bug looks like to the supervisor (`catch_unwind` catches it,
+//!   marks the shard degraded, redispatches its queue and restarts it);
+//! - **stall** — sleep past the epoch budget before executing, driving the
+//!   epoch watchdog and the degradation ladder;
+//! - **error** — a transient step failure: the whole batch gets a typed
+//!   [`RejectReason::Execution`] rejection instead of outcomes (conservation
+//!   still closes — one terminal event per scheduled request);
+//! - **kv-fail** — one admission failure: the first scheduled request is
+//!   rejected [`RejectReason::KvFull`], the rest of the batch executes.
+//!
+//! ## Determinism contract
+//!
+//! `EpochDriver::step_epoch` calls `execute` unconditionally every epoch, so
+//! the decorator draws **exactly one** uniform per epoch when enabled (and
+//! none when disabled — a disabled `ChaosBackend` is bit-identical to the
+//! bare backend). The fault schedule is therefore a pure function of
+//! `(chaos seed, shard, restart generation, epoch index)`: independent of
+//! traffic, of wall time, and of the other shards. The same chaos seed
+//! reproduces the same crashes, stalls, errors and merged fault counters
+//! bit-for-bit (`tests/proptest_chaos.rs`), and the Python mirror
+//! (`python/chaos_mirror.py`) predicts every fault from the seed alone.
+//!
+//! Restarted shards resume with a fresh stream split by generation
+//! ([`chaos_stream`]) so the post-restart schedule is just as deterministic:
+//! which generation a shard is in at epoch e is itself a function of the
+//! fault schedule, closing the loop.
+
+use crate::coordinator::Schedule;
+use crate::driver::backend::{EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
+use crate::metrics::Metrics;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Fault probabilities and the chaos seed, as parsed from `[chaos]` scenario
+/// TOML or the `--chaos-*` CLI flags. All probabilities are per-epoch (one
+/// roll per `execute`); cumulative thresholds are taken in the order panic,
+/// stall, error, kv-fail, so earlier faults shadow later ones when the sum
+/// exceeds 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Chaos stream seed — independent of the run seed, so enabling chaos
+    /// never perturbs workload or channel randomness.
+    pub seed: u64,
+    /// P(panic mid-execute) per epoch.
+    pub panic_prob: f64,
+    /// P(stall before executing) per epoch.
+    pub stall_prob: f64,
+    /// Stall length in milliseconds of real sleep (wall-clock faults only
+    /// make sense against the wall clock; the sim clock just records them).
+    pub stall_ms: u64,
+    /// P(transient step error → whole batch rejected `Execution`) per epoch.
+    pub error_prob: f64,
+    /// P(one KV-admission failure → first scheduled request rejected
+    /// `KvFull`) per epoch.
+    pub kv_fail_prob: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            panic_prob: 0.0,
+            stall_prob: 0.0,
+            stall_ms: 0,
+            error_prob: 0.0,
+            kv_fail_prob: 0.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// True when any fault can fire. A disabled config never draws from the
+    /// chaos stream (bit-identical passthrough).
+    pub fn enabled(&self) -> bool {
+        self.panic_prob > 0.0
+            || self.stall_prob > 0.0
+            || self.error_prob > 0.0
+            || self.kv_fail_prob > 0.0
+    }
+}
+
+/// Per-(shard, restart-generation) chaos stream seed. Generation 0 of shard
+/// 0 keeps the chaos seed verbatim, mirroring the run-RNG split rule;
+/// every other (shard, generation) pair gets an independent
+/// SplitMix64-derived stream.
+pub fn chaos_stream(seed: u64, shard: u64, generation: u64) -> u64 {
+    if shard == 0 && generation == 0 {
+        return seed;
+    }
+    let mut s = seed
+        ^ shard.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ generation.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    splitmix64(&mut s)
+}
+
+/// Restart backoff in epochs for the sharded driver's supervisor: 1, 2, 4,
+/// 8, 8, ... — the accept-loop shape (capped doubling), denominated in
+/// epochs because the driver world has no wall clock.
+pub fn backoff_epochs(consecutive_failures: u32) -> u64 {
+    (1u64 << consecutive_failures.min(4)).min(8)
+}
+
+/// Restart backoff in milliseconds for the serving supervisor — the same
+/// capped doubling the accept loop uses (`serving::net`): 1, 2, 4, ...,
+/// capped at 500 ms.
+pub fn restart_backoff_ms(consecutive_failures: u32) -> u64 {
+    (1u64 << consecutive_failures.min(9)).min(500)
+}
+
+/// What the single per-epoch roll resolved to (exposed for tests and the
+/// Python mirror's fault-schedule cross-check).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    Panic,
+    Stall,
+    Error,
+    KvFail,
+}
+
+/// Resolve one uniform draw against the cumulative fault thresholds — the
+/// single decision rule shared by [`ChaosBackend::execute`], the unit tests
+/// and (re-implemented bit-for-bit) `python/chaos_mirror.py`.
+pub fn resolve_fault(cfg: &ChaosConfig, u: f64) -> Fault {
+    let mut edge = cfg.panic_prob;
+    if u < edge {
+        return Fault::Panic;
+    }
+    edge += cfg.stall_prob;
+    if u < edge {
+        return Fault::Stall;
+    }
+    edge += cfg.error_prob;
+    if u < edge {
+        return Fault::Error;
+    }
+    edge += cfg.kv_fail_prob;
+    if u < edge {
+        return Fault::KvFail;
+    }
+    Fault::None
+}
+
+/// The decorator. Wraps any backend; when disabled it is a zero-cost
+/// passthrough (no RNG draw, no behavior change).
+pub struct ChaosBackend<B> {
+    inner: B,
+    cfg: ChaosConfig,
+    rng: Rng,
+    enabled: bool,
+}
+
+impl<B> ChaosBackend<B> {
+    /// Wrap `inner` with the fault stream for `(shard, generation)`. Pass
+    /// the same config with `generation + 1` when rebuilding a crashed
+    /// shard's backend.
+    pub fn new(inner: B, cfg: ChaosConfig, shard: u64, generation: u64) -> Self {
+        let enabled = cfg.enabled();
+        ChaosBackend {
+            inner,
+            cfg,
+            rng: Rng::new(chaos_stream(cfg.seed, shard, generation)),
+            enabled,
+        }
+    }
+
+    /// A disabled wrapper (identity decoration) — lets call sites hold a
+    /// `ChaosBackend<B>` unconditionally.
+    pub fn passthrough(inner: B) -> Self {
+        Self::new(inner, ChaosConfig::default(), 0, 0)
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+}
+
+impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
+    type Payload = B::Payload;
+
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        schedule: &Schedule,
+        mut batch: Vec<QueuedRequest<B::Payload>>,
+        metrics: &mut Metrics,
+    ) {
+        if !self.enabled {
+            return self.inner.execute(ctx, schedule, batch, metrics);
+        }
+        match resolve_fault(&self.cfg, self.rng.f64()) {
+            Fault::None => self.inner.execute(ctx, schedule, batch, metrics),
+            Fault::Panic => {
+                panic!("chaos: injected panic at epoch {}", ctx.epoch_idx);
+            }
+            Fault::Stall => {
+                if self.cfg.stall_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(self.cfg.stall_ms));
+                }
+                self.inner.execute(ctx, schedule, batch, metrics);
+            }
+            Fault::Error => {
+                // The whole step fails transiently: every scheduled request
+                // gets exactly one typed rejection, nothing executes.
+                for entry in batch {
+                    self.inner
+                        .reject(entry, RejectReason::Execution, metrics);
+                }
+            }
+            Fault::KvFail => {
+                // One admission failure: the first scheduled request is
+                // bounced, the rest of the batch executes normally. The
+                // victim must leave *both* the batch and the schedule, or a
+                // schedule-driven inner backend would record a second
+                // outcome for it.
+                if batch.is_empty() {
+                    return self.inner.execute(ctx, schedule, batch, metrics);
+                }
+                let victim = batch.remove(0);
+                let victim_id = victim.req.id;
+                self.inner
+                    .reject(victim, RejectReason::KvFull, metrics);
+                let mut filtered = schedule.clone();
+                filtered.scheduled.retain(|&id| id != victim_id);
+                filtered
+                    .per_request_compute
+                    .retain(|&(id, _)| id != victim_id);
+                self.inner.execute(ctx, &filtered, batch, metrics);
+            }
+        }
+    }
+
+    fn reject(
+        &mut self,
+        entry: QueuedRequest<B::Payload>,
+        reason: RejectReason,
+        metrics: &mut Metrics,
+    ) {
+        self.inner.reject(entry, reason, metrics);
+    }
+
+    fn finish(&mut self, horizon: f64, metrics: &mut Metrics) {
+        self.inner.finish(horizon, metrics);
+    }
+
+    fn min_gpus_for_inflight(&self) -> usize {
+        self.inner.min_gpus_for_inflight()
+    }
+
+    fn cluster_resized(&mut self, cluster: &crate::cluster::ClusterSpec) {
+        self.inner.cluster_resized(cluster);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::{Dftsp, EpochParams};
+    use crate::driver::{
+        AnalyticBackend, DriverPolicy, EpochDriver, InstanceTemplate, SPadPolicy, StalePolicy,
+    };
+    use crate::model::{CostModel, LlmSpec};
+    use crate::quant;
+    use crate::request::RequestBuilder;
+    use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
+
+    fn driver() -> EpochDriver<()> {
+        EpochDriver::new(
+            InstanceTemplate {
+                cost: CostModel::new(LlmSpec::bloom_3b()),
+                quant: quant::default_quant(),
+                cluster: ClusterSpec::paper_default(),
+                epoch: EpochParams::default(),
+            },
+            DriverPolicy {
+                stale: StalePolicy::BestCaseInfeasible,
+                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                allocation: AllocationPolicy::MinOnly,
+            },
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(42),
+        )
+    }
+
+    fn run(chaos: Option<ChaosConfig>) -> Metrics {
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut backend = match chaos {
+            Some(cfg) => ChaosBackend::new(AnalyticBackend, cfg, 0, 0),
+            None => ChaosBackend::passthrough(AnalyticBackend),
+        };
+        let mut b = RequestBuilder::new();
+        for e in 0..6u64 {
+            let now = e as f64 * 2.0;
+            for _ in 0..4 {
+                d.offer(b.build(now, 128, 128, 1.8, 0.3), ());
+            }
+            d.step_epoch(&mut sched, &mut backend, now);
+        }
+        d.finish(&mut backend, 12.0);
+        d.into_metrics()
+    }
+
+    #[test]
+    fn disabled_wrapper_is_bit_identical_to_bare_backend() {
+        let mut d = driver();
+        let mut sched = Dftsp::new();
+        let mut bare = AnalyticBackend;
+        let mut b = RequestBuilder::new();
+        for e in 0..6u64 {
+            let now = e as f64 * 2.0;
+            for _ in 0..4 {
+                d.offer(b.build(now, 128, 128, 1.8, 0.3), ());
+            }
+            d.step_epoch(&mut sched, &mut bare, now);
+        }
+        d.finish(&mut bare, 12.0);
+        assert_eq!(d.into_metrics(), run(None));
+    }
+
+    #[test]
+    fn resolve_fault_thresholds_are_cumulative() {
+        let cfg = ChaosConfig {
+            seed: 0,
+            panic_prob: 0.1,
+            stall_prob: 0.2,
+            stall_ms: 0,
+            error_prob: 0.3,
+            kv_fail_prob: 0.2,
+        };
+        assert_eq!(resolve_fault(&cfg, 0.05), Fault::Panic);
+        assert_eq!(resolve_fault(&cfg, 0.1), Fault::Stall);
+        assert_eq!(resolve_fault(&cfg, 0.29), Fault::Stall);
+        // The edges are accumulated f64 sums (0.1 + 0.2 ≠ exactly 0.3);
+        // the mirror reproduces the same rounding, so the boundary draw
+        // lands identically on both sides.
+        assert_eq!(resolve_fault(&cfg, 0.35), Fault::Error);
+        assert_eq!(resolve_fault(&cfg, 0.65), Fault::KvFail);
+        assert_eq!(resolve_fault(&cfg, 0.85), Fault::None);
+        // Disabled config: every draw is a no-op.
+        assert_eq!(resolve_fault(&ChaosConfig::default(), 0.0), Fault::None);
+    }
+
+    #[test]
+    fn error_fault_rejects_whole_batch_and_conserves() {
+        let cfg = ChaosConfig {
+            seed: 11,
+            error_prob: 1.0,
+            ..ChaosConfig::default()
+        };
+        let m = run(Some(cfg));
+        assert_eq!(m.offered, 24);
+        assert_eq!(m.completed_in_deadline + m.completed_late, 0);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "every request still gets exactly one terminal event"
+        );
+    }
+
+    #[test]
+    fn kv_fault_bounces_one_request_per_epoch_and_conserves() {
+        let cfg = ChaosConfig {
+            seed: 11,
+            kv_fail_prob: 1.0,
+            ..ChaosConfig::default()
+        };
+        let m = run(Some(cfg));
+        assert_eq!(m.offered, 24);
+        assert!(m.completed_in_deadline + m.completed_late > 0, "rest of batch executes");
+        assert!(m.dropped > 0, "one victim per non-empty epoch");
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+    }
+
+    #[test]
+    fn panic_fault_panics_deterministically() {
+        let cfg = ChaosConfig {
+            seed: 5,
+            panic_prob: 1.0,
+            ..ChaosConfig::default()
+        };
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(Some(cfg))));
+        assert!(boom.is_err(), "p=1 panic fires on the first epoch");
+    }
+
+    #[test]
+    fn same_seed_same_faults_different_seed_different_faults() {
+        let cfg = ChaosConfig {
+            seed: 99,
+            error_prob: 0.5,
+            ..ChaosConfig::default()
+        };
+        let a = run(Some(cfg));
+        let b = run(Some(cfg));
+        assert_eq!(a, b, "same chaos seed → bit-identical metrics");
+        let c = run(Some(ChaosConfig { seed: 100, ..cfg }));
+        assert_ne!(
+            (a.completed_in_deadline, a.dropped),
+            (c.completed_in_deadline, c.dropped),
+            "different chaos seed → different fault schedule (with these probs)"
+        );
+    }
+
+    #[test]
+    fn chaos_streams_split_by_shard_and_generation() {
+        assert_eq!(chaos_stream(7, 0, 0), 7, "shard 0 gen 0 keeps the seed");
+        assert_ne!(chaos_stream(7, 0, 0), chaos_stream(7, 0, 1));
+        assert_ne!(chaos_stream(7, 1, 0), chaos_stream(7, 2, 0));
+        assert_ne!(chaos_stream(7, 1, 0), chaos_stream(7, 1, 1));
+        assert_eq!(chaos_stream(7, 3, 2), chaos_stream(7, 3, 2));
+    }
+
+    #[test]
+    fn backoff_shapes_are_capped_doubling() {
+        assert_eq!(
+            (0..7).map(backoff_epochs).collect::<Vec<_>>(),
+            vec![1, 2, 4, 8, 8, 8, 8]
+        );
+        assert_eq!(restart_backoff_ms(0), 1);
+        assert_eq!(restart_backoff_ms(8), 256);
+        assert_eq!(restart_backoff_ms(9), 500);
+        assert_eq!(restart_backoff_ms(40), 500);
+    }
+}

@@ -42,14 +42,20 @@
 //! deterministic stepping.
 
 pub mod backend;
+pub mod chaos;
 pub mod clock;
 pub mod continuous;
 pub mod sharded;
 
 pub use backend::{AnalyticBackend, EpochContext, ExecutionBackend, QueuedRequest, RejectReason};
+pub use chaos::{
+    backoff_epochs, chaos_stream, restart_backoff_ms, ChaosBackend, ChaosConfig, Fault,
+};
 pub use clock::{Clock, SimClock, WallClock};
 pub use continuous::{BatchingMode, ContinuousBackend, KvLedger};
-pub use sharded::{pick_least_loaded, Shard, ShardedConfig, ShardedDriver};
+pub use sharded::{
+    pick_least_loaded, Shard, ShardHealth, ShardedConfig, ShardedDriver, PARK_AFTER_QUICK_CRASHES,
+};
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::{EpochParams, ProblemInstance, Scheduler};
@@ -128,8 +134,22 @@ pub struct EpochDriver<P> {
     rng: Rng,
     queue: Vec<QueuedRequest<P>>,
     epoch_idx: u64,
+    /// Consecutive-ish epoch-stall pressure (incremented on an overrun step,
+    /// decremented on a healthy one) — drives the degradation ladder. Always
+    /// 0 under the simulated clock, whose steps take microseconds of wall
+    /// time against multi-millisecond epoch durations.
+    stall_streak: u32,
     pub metrics: Metrics,
 }
+
+/// Degradation-ladder thresholds (see `step_epoch`): level 1 halves the
+/// scheduler's candidate pool after this many net stalls...
+const LADDER_CAP_STREAK: u32 = 2;
+/// ...and level 2 additionally sheds the loosest-deadline quarter of the
+/// queue after this many.
+const LADDER_SHED_STREAK: u32 = 4;
+/// Level 1 never shrinks the candidate pool below this.
+const LADDER_MIN_POOL: usize = 8;
 
 impl<P> EpochDriver<P> {
     pub fn new(
@@ -147,6 +167,7 @@ impl<P> EpochDriver<P> {
             rng,
             queue: Vec::new(),
             epoch_idx: 0,
+            stall_streak: 0,
             metrics: Metrics::new(),
         }
     }
@@ -192,6 +213,23 @@ impl<P> EpochDriver<P> {
         self.metrics
     }
 
+    /// Pull every queued (not-yet-admitted) request out of the driver — the
+    /// supervisor's redispatch hook after a crash. Queue entries hold no KV
+    /// state, so they are the only work that may migrate to another shard
+    /// (the sharded module's KV-safety rule); anything the backend had in
+    /// flight is accounted by conservation instead.
+    pub fn drain_queue(&mut self) -> Vec<QueuedRequest<P>> {
+        std::mem::take(&mut self.queue)
+    }
+
+    /// Put previously drained entries back into the queue *without*
+    /// re-counting them as offered — the supervisor's restart hook: a
+    /// rebuilt shard inherits whatever queued on it while it was down (those
+    /// arrivals were counted `offered` when first admitted).
+    pub fn requeue(&mut self, entries: Vec<QueuedRequest<P>>) {
+        self.queue.extend(entries);
+    }
+
     fn is_stale(&self, r: &Request, now: f64) -> bool {
         match self.policy.stale {
             StalePolicy::BestCaseInfeasible => {
@@ -205,10 +243,54 @@ impl<P> EpochDriver<P> {
     }
 
     /// One full round of the Fig. 2 protocol at epoch boundary `now`.
+    ///
+    /// A wall-clock watchdog brackets the step: when the step's own work
+    /// exceeds the configured epoch duration it counts an
+    /// [`Metrics::epoch_stalls`] and raises the stall streak; under
+    /// sustained pressure a two-level degradation ladder kicks in (shrink
+    /// the scheduler's candidate pool, then shed the loosest-deadline
+    /// arrivals with typed [`RejectReason::Overloaded`] rejections) so the
+    /// shard degrades gracefully instead of falling behind unboundedly.
+    /// Ladder behavior is wall-dependent by design and never fires under
+    /// the simulated clock (steps take microseconds), so it is excluded
+    /// from the bit-determinism contracts.
     pub fn step_epoch<B>(&mut self, scheduler: &mut dyn Scheduler, backend: &mut B, now: f64)
     where
         B: ExecutionBackend<Payload = P>,
     {
+        let step_start = std::time::Instant::now();
+
+        // 0. Degradation ladder, level 2: under sustained stalls, shed the
+        //    loosest-deadline quarter of the queue (ties to the lowest id)
+        //    with a typed overloaded rejection — the requests most likely to
+        //    still make their SLO elsewhere, and the cheapest way to get the
+        //    step back under its budget.
+        if self.stall_streak >= LADDER_SHED_STREAK && !self.queue.is_empty() {
+            let mut order: Vec<(f64, RequestId)> = self
+                .queue
+                .iter()
+                .map(|e| (e.req.latency_req, e.req.id))
+                .collect();
+            order.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let shed: Vec<RequestId> = order[..(order.len() / 4).max(1)]
+                .iter()
+                .map(|&(_, id)| id)
+                .collect();
+            let queue = std::mem::take(&mut self.queue);
+            for entry in queue {
+                if shed.contains(&entry.req.id) {
+                    self.metrics.shed_overloaded += 1;
+                    backend.reject(entry, RejectReason::Overloaded, &mut self.metrics);
+                } else {
+                    self.queue.push(entry);
+                }
+            }
+        }
+
         // 1. Stale policy: drop queued requests that can no longer be served.
         let queue = std::mem::take(&mut self.queue);
         for entry in queue {
@@ -268,6 +350,30 @@ impl<P> EpochDriver<P> {
             annotated.retain(|r| !inadmissible.contains(&r.id()));
         }
 
+        // 4b. Degradation ladder, level 1: under stall pressure, halve the
+        //     scheduler's candidate pool to the earliest-deadline half (the
+        //     DFTSP search is the dominant step cost and superlinear in the
+        //     pool size). Excess requests simply stay queued for the next
+        //     epoch — no outcome is recorded for them. The channel draws in
+        //     step 3 already happened for the whole queue, so the RNG stream
+        //     advances identically whether or not the ladder engages.
+        if self.stall_streak >= LADDER_CAP_STREAK && annotated.len() > LADDER_MIN_POOL {
+            let cap = (annotated.len() / 2).max(LADDER_MIN_POOL);
+            if annotated.len() > cap {
+                let mut order: Vec<(f64, RequestId)> = annotated
+                    .iter()
+                    .map(|r| (r.req.arrival + r.req.latency_req, r.id()))
+                    .collect();
+                order.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                });
+                let keep: Vec<RequestId> = order[..cap].iter().map(|&(_, id)| id).collect();
+                annotated.retain(|r| keep.contains(&r.id()));
+            }
+        }
+
         // 5. Schedule and account the search effort, stamping wall time here
         //    so every Scheduler gets timed identically (the counters stay
         //    bit-deterministic; SearchStats::PartialEq ignores wall time).
@@ -307,6 +413,17 @@ impl<P> EpochDriver<P> {
         };
         backend.execute(&ctx, &schedule, batch, &mut self.metrics);
         self.epoch_idx += 1;
+
+        // 9. Epoch watchdog: charge a stall when this step's own work blew
+        //    the epoch budget, and track net pressure for the ladder. The
+        //    streak decays one level per healthy epoch so a transient blip
+        //    never triggers degradation, but sustained overload does.
+        if step_start.elapsed().as_secs_f64() > self.template.epoch.duration {
+            self.metrics.epoch_stalls += 1;
+            self.stall_streak += 1;
+        } else {
+            self.stall_streak = self.stall_streak.saturating_sub(1);
+        }
     }
 
     /// Close the run: whatever still waits is unserved, then the backend
@@ -485,6 +602,105 @@ mod tests {
         let mut clock2 = SimClock::new();
         run_epochs(&mut d2, &mut sched, &mut backend, &mut clock2, 4, |_, _, _| {});
         assert_eq!(d2.metrics.epoch_overruns, 0);
+    }
+
+    /// Scheduler stub that records how many candidates it was shown and
+    /// schedules nothing — isolates the ladder's pool capping.
+    struct CountPool {
+        seen: Vec<usize>,
+    }
+    impl Scheduler for CountPool {
+        fn name(&self) -> &'static str {
+            "count-pool"
+        }
+        fn schedule(
+            &mut self,
+            _inst: &ProblemInstance,
+            c: &[EpochRequest],
+        ) -> crate::coordinator::Schedule {
+            self.seen.push(c.len());
+            crate::coordinator::Schedule::empty()
+        }
+    }
+
+    #[test]
+    fn watchdog_counts_stalls_when_step_exceeds_epoch_budget() {
+        let mut t = paper_template();
+        t.epoch.duration = 0.0; // any step overruns a zero budget
+        let mut d: EpochDriver<()> = EpochDriver::new(
+            t,
+            sim_policy(),
+            RadioParams::default(),
+            ChannelParams::default(),
+            Rng::new(3),
+        );
+        let mut sched = Dftsp::new();
+        let mut backend = AnalyticBackend;
+        for e in 0..3 {
+            d.step_epoch(&mut sched, &mut backend, e as f64);
+        }
+        assert_eq!(d.metrics.epoch_stalls, 3);
+        assert_eq!(d.stall_streak, 3);
+
+        // A sane budget: sim steps take microseconds, stalls never fire and
+        // the streak decays back to zero.
+        let mut d2 = driver(sim_policy());
+        d2.stall_streak = 2;
+        d2.step_epoch(&mut sched, &mut backend, 0.0);
+        assert_eq!(d2.metrics.epoch_stalls, 0);
+        assert_eq!(d2.stall_streak, 1);
+    }
+
+    #[test]
+    fn ladder_level1_halves_the_candidate_pool() {
+        let mut d = driver(sim_policy());
+        let mut sched = CountPool { seen: Vec::new() };
+        let mut backend = AnalyticBackend;
+        let mut b = RequestBuilder::new();
+        for _ in 0..20 {
+            d.offer(b.build(0.0, 128, 128, 1000.0, 0.01), ());
+        }
+        d.stall_streak = LADDER_CAP_STREAK;
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        assert_eq!(sched.seen, vec![10], "pool halved under stall pressure");
+        assert_eq!(d.queue_len(), 20, "excess candidates stay queued, not dropped");
+
+        // No pressure: the full pool is offered.
+        let mut d2 = driver(sim_policy());
+        let mut b2 = RequestBuilder::new();
+        for _ in 0..20 {
+            d2.offer(b2.build(0.0, 128, 128, 1000.0, 0.01), ());
+        }
+        let mut sched2 = CountPool { seen: Vec::new() };
+        d2.step_epoch(&mut sched2, &mut backend, 0.0);
+        assert_eq!(sched2.seen, vec![20]);
+    }
+
+    #[test]
+    fn ladder_level2_sheds_loosest_deadline_quarter() {
+        let mut d = driver(sim_policy());
+        let mut sched = CountPool { seen: Vec::new() };
+        let mut backend = AnalyticBackend;
+        let mut b = RequestBuilder::new();
+        // Four tight deadlines, four loose: the loose ones are shed first.
+        for i in 0..8u32 {
+            let slack = if i % 2 == 0 { 1000.0 } else { 2000.0 };
+            d.offer(b.build(0.0, 128, 128, slack, 0.01), ());
+        }
+        d.stall_streak = LADDER_SHED_STREAK;
+        d.step_epoch(&mut sched, &mut backend, 0.0);
+        assert_eq!(d.metrics.shed_overloaded, 2, "8/4 loosest shed");
+        assert_eq!(d.metrics.dropped, 2, "sheds record a Dropped outcome");
+        assert_eq!(d.queue_len(), 6);
+        assert!(
+            d.queued_requests().filter(|r| r.latency_req > 1500.0).count() == 2,
+            "the loosest-deadline requests were preferred for shedding"
+        );
+        assert_eq!(
+            d.metrics.offered,
+            d.metrics.dropped + d.queue_len() as u64,
+            "conservation through the shed"
+        );
     }
 
     #[test]

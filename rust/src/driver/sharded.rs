@@ -47,10 +47,36 @@
 //! driver — `tests/sharded_e2e.rs`), shards share no mutable state during a
 //! step, and metrics merge in fixed shard-index order.
 
+//! ## Supervision (opt-in, [`ShardedDriver::with_supervision`])
+//!
+//! A supervised driver wraps every shard step in `catch_unwind` and runs a
+//! per-shard state machine `Healthy → Degraded → Restarting → Healthy`
+//! (or `→ Parked` after repeated crash-loops):
+//!
+//! - **crash**: the panic is caught, the shard turns `Degraded`, its lost
+//!   in-flight work is accounted by conservation subtraction into
+//!   [`Metrics::shard_failed`], and its *queued-but-not-admitted* requests
+//!   are redispatched to surviving same-deployment shards through the same
+//!   affinity/least-loaded rule as arrivals (KV-safe: in-flight work never
+//!   migrates — it is failed, not moved);
+//! - **restart**: after a capped-doubling backoff in epochs
+//!   ([`crate::driver::chaos::backoff_epochs`]) the shard is rebuilt — fresh
+//!   backend and scheduler from the stored factories, fresh driver with its
+//!   RNG stream split by restart generation — and its metrics carry over;
+//! - **park**: three consecutive *quick* crashes (an incarnation that died
+//!   within its first two epochs) trip the circuit breaker; the shard stays
+//!   down and routing permanently avoids it. A sparse random fault schedule
+//!   never parks (survival between faults resets the counter); a genuine
+//!   crash-loop does.
+//!
+//! Unsupervised drivers take none of these paths — not even the
+//! `catch_unwind` — so the bit-parity contracts above are untouched.
+
 use crate::cluster::{ClusterSpec, GpuSpec};
 use crate::coordinator::{
     partition_gpus_by_load, Deployment, EpochParams, PartitionError, PartitionPolicy, Scheduler,
 };
+use crate::driver::chaos::{backoff_epochs, chaos_stream};
 use crate::driver::{DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate};
 use crate::metrics::Metrics;
 use crate::model::CostModel;
@@ -118,6 +144,47 @@ impl<P, B: ExecutionBackend<Payload = P>> Shard<P, B> {
     }
 }
 
+/// Supervisor view of one shard (module docs §Supervision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving: routed to and stepped.
+    Healthy,
+    /// Crashed this epoch; the supervisor schedules its restart next epoch.
+    Degraded,
+    /// Waiting out its restart backoff; rebuilt when `at_epoch` is reached.
+    Restarting { at_epoch: u64 },
+    /// Circuit breaker tripped: crash-looped, permanently out of rotation.
+    Parked,
+}
+
+/// Consecutive quick crashes (incarnation died within its first two epochs)
+/// that park a shard. Shared with the live serving supervisor
+/// ([`crate::serving::serve_sharded`]) so both layers trip at the same
+/// crash-loop threshold.
+pub const PARK_AFTER_QUICK_CRASHES: u32 = 3;
+
+/// Everything a supervised driver needs to rebuild a crashed shard: the
+/// boxed factories plus the per-shard construction parameters `new` would
+/// otherwise have consumed.
+struct Supervision<B> {
+    make_backend: Box<dyn FnMut(&InstanceTemplate, usize, u64) -> B>,
+    make_scheduler: Box<dyn FnMut(usize) -> Box<dyn Scheduler + Send>>,
+    policy: DriverPolicy,
+    epoch: EpochParams,
+    radio: RadioParams,
+    channel: ChannelParams,
+    seed: u64,
+    health: Vec<ShardHealth>,
+    /// Restart generation per shard (0 = the original incarnation); splits
+    /// the rebuilt driver's RNG stream so replays stay deterministic.
+    generation: Vec<u64>,
+    /// Consecutive quick-crash count per shard (reset by an incarnation
+    /// that survives past its second epoch).
+    quick_crashes: Vec<u32>,
+    /// Global epoch index at which the current incarnation started.
+    born_epoch: Vec<u64>,
+}
+
 /// The dispatch layer: owns one [`EpochDriver`] per GPU partition, routes
 /// arrivals, re-partitions headroom between epochs and steps the shards in
 /// parallel (module docs).
@@ -128,6 +195,7 @@ pub struct ShardedDriver<P, B> {
     partition: PartitionPolicy,
     gpus: Vec<usize>,
     epoch_idx: u64,
+    supervise: Option<Supervision<B>>,
 }
 
 /// Raise every below-floor entry to its floor by taking GPUs from the
@@ -159,6 +227,54 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         mut make_backend: impl FnMut(&InstanceTemplate) -> B,
         mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send>,
     ) -> Result<Self, PartitionError> {
+        let mut mb = |t: &InstanceTemplate, _shard: usize, _gen: u64| make_backend(t);
+        Self::construct(cfg, &mut mb, &mut make_scheduler, false)
+    }
+
+    /// Like [`ShardedDriver::new`], but with the supervision layer armed
+    /// (module docs §Supervision): shard steps run under `catch_unwind`, a
+    /// crashed shard's queue is redispatched and the shard is rebuilt from
+    /// the given factories under backoff. The factories take `'static`
+    /// ownership because they outlive construction; `make_backend`
+    /// additionally receives the shard index and restart generation so
+    /// chaos-wrapped backends can split their fault streams
+    /// ([`crate::driver::chaos::chaos_stream`]).
+    pub fn with_supervision(
+        cfg: ShardedConfig,
+        mut make_backend: impl FnMut(&InstanceTemplate, usize, u64) -> B + 'static,
+        mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
+    ) -> Result<Self, PartitionError> {
+        let (policy, epoch, radio, channel, seed) = (
+            cfg.policy,
+            cfg.epoch.clone(),
+            cfg.radio.clone(),
+            cfg.channel.clone(),
+            cfg.seed,
+        );
+        let mut sd = Self::construct(cfg, &mut make_backend, &mut make_scheduler, true)?;
+        let k = sd.shards.len();
+        sd.supervise = Some(Supervision {
+            make_backend: Box::new(make_backend),
+            make_scheduler: Box::new(make_scheduler),
+            policy,
+            epoch,
+            radio,
+            channel,
+            seed,
+            health: vec![ShardHealth::Healthy; k],
+            generation: vec![0; k],
+            quick_crashes: vec![0; k],
+            born_epoch: vec![0; k],
+        });
+        Ok(sd)
+    }
+
+    fn construct(
+        cfg: ShardedConfig,
+        make_backend: &mut dyn FnMut(&InstanceTemplate, usize, u64) -> B,
+        make_scheduler: &mut dyn FnMut(usize) -> Box<dyn Scheduler + Send>,
+        _supervised: bool,
+    ) -> Result<Self, PartitionError> {
         let k = cfg.deployments.len();
         let gpus = partition_gpus_by_load(&vec![0.0; k], cfg.cluster.num_gpus, cfg.partition)?;
         let mut shards = Vec::with_capacity(k);
@@ -169,7 +285,7 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
                 cluster: ClusterSpec::new(cfg.cluster.gpu.clone(), gpus[i]),
                 epoch: cfg.epoch.clone(),
             };
-            let backend = make_backend(&template);
+            let backend = make_backend(&template, i, 0);
             let driver = EpochDriver::new(
                 template,
                 cfg.policy,
@@ -191,6 +307,7 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
             partition: cfg.partition,
             gpus,
             epoch_idx: 0,
+            supervise: None,
         })
     }
 
@@ -211,11 +328,25 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         self.epoch_idx
     }
 
+    /// Is shard `i` in rotation? Unsupervised drivers have no health state
+    /// — every shard always is.
+    fn shard_is_healthy(&self, i: usize) -> bool {
+        match &self.supervise {
+            Some(sup) => sup.health[i] == ShardHealth::Healthy,
+            None => true,
+        }
+    }
+
     /// Pick the shard an arrival should land on (module docs: affinity
     /// first, least-loaded within the deployment, accuracy-feasible
     /// spill-over, affinity fallback so rejection is still accounted).
+    /// Under supervision, non-`Healthy` shards are skipped; when no healthy
+    /// shard admits the request, any healthy shard takes it (its driver
+    /// rejects it typed and accounting closes), and only with *every* shard
+    /// down does the affinity shard queue it until a restart.
     fn route(&self, req: &Request, affinity: usize) -> usize {
         let aff = affinity.min(self.shards.len() - 1);
+        let healthy = |i: usize| self.shard_is_healthy(i);
         let admits = |i: usize| {
             let d = &self.shards[i].deployment;
             d.quant.satisfies_accuracy(&d.model.name, req.accuracy_req)
@@ -223,12 +354,24 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         let load = |i: usize| self.shards[i].driver.queue_len();
         let target = &self.shards[aff].deployment;
         let same = (0..self.shards.len())
-            .filter(|&i| admits(i) && self.shards[i].deployment.same_as(target));
+            .filter(|&i| healthy(i) && admits(i) && self.shards[i].deployment.same_as(target));
         if let Some(i) = pick_least_loaded(same, load) {
             return i;
         }
-        let feasible = (0..self.shards.len()).filter(|&i| admits(i));
-        pick_least_loaded(feasible, load).unwrap_or(aff)
+        let feasible = (0..self.shards.len()).filter(|&i| healthy(i) && admits(i));
+        if let Some(i) = pick_least_loaded(feasible, load) {
+            return i;
+        }
+        if self.supervise.is_some() {
+            // Supervised-only fallback: an unhealthy affinity shard must not
+            // black-hole requests another shard could at least answer with a
+            // typed rejection.
+            let any = (0..self.shards.len()).filter(|&i| healthy(i));
+            if let Some(i) = pick_least_loaded(any, load) {
+                return i;
+            }
+        }
+        aff
     }
 
     /// Admit a request: route it to exactly one shard's queue. `affinity`
@@ -261,10 +404,24 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         let Ok(desired) = partition_gpus_by_load(&loads, self.total_gpus, self.partition) else {
             return; // pool shrank below min-1 — unreachable once constructed
         };
+        let healthy: Vec<bool> = (0..self.shards.len())
+            .map(|i| self.shard_is_healthy(i))
+            .collect();
         let floors: Vec<usize> = self
             .shards
             .iter()
-            .map(|s| s.backend.min_gpus_for_inflight().clamp(1, self.total_gpus))
+            .enumerate()
+            .map(|(i, s)| {
+                // A crashed shard's backend is gone with its KV state (its
+                // in-flight work was failed, not preserved): pin nothing
+                // beyond the min-1 guarantee and let survivors take the
+                // headroom.
+                if healthy[i] {
+                    s.backend.min_gpus_for_inflight().clamp(1, self.total_gpus)
+                } else {
+                    1
+                }
+            })
             .collect();
         if floors.iter().sum::<usize>() > self.total_gpus {
             return; // every GPU pinned by in-flight work: no safe handoff
@@ -277,7 +434,11 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
             if alloc[i] != self.gpus[i] {
                 let cluster = ClusterSpec::new(self.gpu.clone(), alloc[i]);
                 shard.driver.set_cluster(cluster.clone());
-                shard.backend.cluster_resized(&cluster);
+                // A dead backend is never poked; its replacement is built
+                // against the current partition at restart.
+                if healthy[i] {
+                    shard.backend.cluster_resized(&cluster);
+                }
             }
         }
         self.gpus = alloc;
@@ -287,14 +448,30 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
     /// step all shards in parallel. Deterministic regardless of thread
     /// interleaving — shards are fully independent within a step and all
     /// cross-shard decisions (routing, re-partitioning) happen before the
-    /// fan-out.
+    /// fan-out. Supervised drivers additionally advance the supervisor
+    /// state machine at the boundary (restarts due, parks), step only
+    /// `Healthy` shards under `catch_unwind`, and handle any crashes in
+    /// shard order after the fan-out (module docs §Supervision).
     pub fn step_epoch(&mut self, now: f64)
     where
         P: Send,
         B: Send,
     {
+        if self.supervise.is_some() {
+            self.supervisor_pre_step();
+        }
         self.repartition();
-        if self.shards.len() == 1 {
+        if self.supervise.is_some() {
+            let crashed = self.step_supervised(now);
+            // Mark every crash before redispatching anything: two shards
+            // dying in the same epoch must not redispatch onto each other.
+            for &i in &crashed {
+                self.mark_crashed(i);
+            }
+            for &i in &crashed {
+                self.fail_and_redispatch(i);
+            }
+        } else if self.shards.len() == 1 {
             self.shards[0].step(now);
         } else {
             let shards = &mut self.shards;
@@ -307,14 +484,216 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         self.epoch_idx += 1;
     }
 
+    /// Advance the supervisor state machine at an epoch boundary: last
+    /// epoch's crashes either trip the circuit breaker (`Parked`) or get a
+    /// restart scheduled under capped-doubling backoff, and shards whose
+    /// backoff has elapsed are rebuilt.
+    fn supervisor_pre_step(&mut self) {
+        let epoch = self.epoch_idx;
+        for i in 0..self.shards.len() {
+            let state = match &self.supervise {
+                Some(sup) => sup.health[i],
+                None => return,
+            };
+            match state {
+                ShardHealth::Degraded => {
+                    if let Some(sup) = self.supervise.as_mut() {
+                        if sup.quick_crashes[i] >= PARK_AFTER_QUICK_CRASHES {
+                            sup.health[i] = ShardHealth::Parked;
+                            self.shards[i].driver.metrics.shards_parked += 1;
+                        } else {
+                            sup.health[i] = ShardHealth::Restarting {
+                                at_epoch: epoch + backoff_epochs(sup.quick_crashes[i]),
+                            };
+                        }
+                    }
+                }
+                ShardHealth::Restarting { at_epoch } if epoch >= at_epoch => {
+                    self.rebuild_shard(i);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Step every `Healthy` shard under `catch_unwind`; returns the indices
+    /// that panicked, in shard order (so crash handling is deterministic).
+    fn step_supervised(&mut self, now: f64) -> Vec<usize>
+    where
+        P: Send,
+        B: Send,
+    {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let healthy: Vec<bool> = (0..self.shards.len())
+            .map(|i| self.shard_is_healthy(i))
+            .collect();
+        let live = healthy.iter().filter(|&&h| h).count();
+        let shards = &mut self.shards;
+        let mut crashed = Vec::new();
+        if live <= 1 {
+            for (i, shard) in shards.iter_mut().enumerate() {
+                if healthy[i] && catch_unwind(AssertUnwindSafe(|| shard.step(now))).is_err() {
+                    crashed.push(i);
+                }
+            }
+            return crashed;
+        }
+        std::thread::scope(|scope| {
+            let mut joins = Vec::with_capacity(live);
+            for (i, shard) in shards.iter_mut().enumerate() {
+                if !healthy[i] {
+                    continue;
+                }
+                let join =
+                    scope.spawn(move || catch_unwind(AssertUnwindSafe(|| shard.step(now))).is_err());
+                joins.push((i, join));
+            }
+            for (i, join) in joins {
+                // `join` only errs when the wrapper itself panicked, which
+                // `catch_unwind` prevents; treat it as a crash if it ever
+                // does rather than tearing down the supervisor.
+                if join.join().unwrap_or(true) {
+                    crashed.push(i);
+                }
+            }
+        });
+        crashed
+    }
+
+    /// A shard panicked mid-step: record the crash and mark it `Degraded`
+    /// (module docs §Supervision).
+    fn mark_crashed(&mut self, i: usize) {
+        let epoch = self.epoch_idx;
+        if let Some(sup) = self.supervise.as_mut() {
+            // A quick crash is an incarnation that died within its first two
+            // epochs; surviving longer resets the crash-loop streak (this
+            // crash then counts 0 — it proved the shard can serve).
+            sup.quick_crashes[i] = if epoch.saturating_sub(sup.born_epoch[i]) < 2 {
+                sup.quick_crashes[i] + 1
+            } else {
+                0
+            };
+            sup.health[i] = ShardHealth::Degraded;
+        }
+        self.shards[i].driver.metrics.shard_crashes += 1;
+    }
+
+    /// Close a crashed shard's books and move its queue off it.
+    fn fail_and_redispatch(&mut self, i: usize) {
+        // Everything offered to this shard that has neither a recorded
+        // outcome nor a queue slot was in flight when the panic hit — it is
+        // lost with the backend (KV state and all) and closed out as
+        // `shard_failed` by conservation subtraction.
+        let drained = self.shards[i].driver.drain_queue();
+        {
+            let m = &mut self.shards[i].driver.metrics;
+            let accounted =
+                m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed;
+            m.shard_failed += m.offered.saturating_sub(accounted + drained.len() as u64);
+        }
+        // Queued-but-not-admitted requests hold no KV state: they are the
+        // only work allowed to migrate (the KV-safety rule). Each one moves
+        // to a surviving shard and stays counted in `offered` exactly once
+        // (decrement here, increment in the survivor's `offer`); with every
+        // shard down they terminate typed as `shard_failed` instead.
+        for entry in drained {
+            let j = self.route(&entry.req, i);
+            if j != i && self.shard_is_healthy(j) {
+                let m = &mut self.shards[i].driver.metrics;
+                m.offered = m.offered.saturating_sub(1);
+                m.requests_redispatched += 1;
+                self.shards[j].driver.offer(entry.req, entry.payload);
+            } else {
+                self.shards[i].driver.metrics.shard_failed += 1;
+            }
+        }
+    }
+
+    /// Rebuild a crashed shard: fresh backend and scheduler from the stored
+    /// factories, fresh driver with its RNG stream split by restart
+    /// generation ([`chaos_stream`] — at generation 0 it reproduces
+    /// [`shard_stream`] bit-for-bit, so the split rule is one function, not
+    /// two). Metrics and anything queued while the shard was down carry
+    /// over; the new incarnation is built against the current partition.
+    fn rebuild_shard(&mut self, i: usize) {
+        let Some(sup) = self.supervise.as_mut() else {
+            return;
+        };
+        sup.generation[i] += 1;
+        let generation = sup.generation[i];
+        sup.health[i] = ShardHealth::Healthy;
+        sup.born_epoch[i] = self.epoch_idx;
+        let deployment = self.shards[i].deployment.clone();
+        let template = InstanceTemplate {
+            cost: CostModel::new(deployment.model.clone()),
+            quant: deployment.quant.clone(),
+            cluster: ClusterSpec::new(self.gpu.clone(), self.gpus[i]),
+            epoch: sup.epoch.clone(),
+        };
+        let backend = (sup.make_backend)(&template, i, generation);
+        let driver = EpochDriver::new(
+            template,
+            sup.policy,
+            sup.radio.clone(),
+            sup.channel.clone(),
+            Rng::new(chaos_stream(sup.seed, i as u64, generation)),
+        );
+        let scheduler = (sup.make_scheduler)(i);
+        let fresh = Shard {
+            deployment,
+            driver,
+            backend,
+            scheduler,
+        };
+        let old = std::mem::replace(&mut self.shards[i], fresh);
+        let mut old_driver = old.driver;
+        let parked_queue = old_driver.drain_queue();
+        let mut metrics = old_driver.into_metrics();
+        metrics.shard_restarts += 1;
+        self.shards[i].driver.metrics = metrics;
+        self.shards[i].driver.requeue(parked_queue);
+    }
+
+    /// Per-shard supervisor health, in shard order (all `Healthy` for an
+    /// unsupervised driver).
+    pub fn health(&self) -> Vec<ShardHealth> {
+        match &self.supervise {
+            Some(sup) => sup.health.clone(),
+            None => vec![ShardHealth::Healthy; self.shards.len()],
+        }
+    }
+
     /// Close the run on every shard (queue leftovers rejected, in-flight
-    /// work drained — see [`EpochDriver::finish`]).
+    /// work drained — see [`EpochDriver::finish`]). Supervised drivers
+    /// cannot trust a down shard's backend to flush: its books are closed
+    /// by the same conservation subtraction as a crash, and a panic inside
+    /// a healthy shard's own `finish` is caught and closed the same way.
     pub fn finish(&mut self, horizon: f64) {
-        for shard in &mut self.shards {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let supervised = self.supervise.is_some();
+        for i in 0..self.shards.len() {
+            let healthy = self.shard_is_healthy(i);
             let Shard {
                 driver, backend, ..
-            } = shard;
-            driver.finish(backend, horizon);
+            } = &mut self.shards[i];
+            if !supervised {
+                driver.finish(backend, horizon);
+                continue;
+            }
+            let clean = healthy
+                && catch_unwind(AssertUnwindSafe(|| driver.finish(backend, horizon))).is_ok();
+            if clean {
+                continue;
+            }
+            if healthy {
+                driver.metrics.shard_crashes += 1;
+            }
+            drop(driver.drain_queue());
+            let m = &mut driver.metrics;
+            let accounted =
+                m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed;
+            m.shard_failed += m.offered.saturating_sub(accounted);
+            m.horizon = horizon;
         }
     }
 
@@ -560,5 +939,238 @@ mod tests {
         assert_ne!(shard_stream(42, 1), shard_stream(42, 2));
         assert_eq!(shard_stream(42, 1), shard_stream(42, 1));
         assert_ne!(shard_stream(42, 1), shard_stream(43, 1));
+        // Generation 0 of the restart split reproduces the construction
+        // split exactly — one split rule, not two.
+        for shard in 0..4u64 {
+            assert_eq!(chaos_stream(42, shard, 0), shard_stream(42, shard));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Supervision (module docs §Supervision)
+    // ------------------------------------------------------------------
+
+    use crate::coordinator::{ProblemInstance, Schedule};
+    use crate::request::EpochRequest;
+
+    /// Scheduler that never schedules anything — everything it is shown
+    /// stays queued, which makes redispatch counts exact.
+    struct Never;
+    impl Scheduler for Never {
+        fn name(&self) -> &'static str {
+            "never"
+        }
+        fn schedule(&mut self, _inst: &ProblemInstance, _c: &[EpochRequest]) -> Schedule {
+            Schedule::empty()
+        }
+    }
+
+    fn same_dep_config(seed: u64) -> ShardedConfig {
+        let dep = Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        };
+        ShardedConfig {
+            deployments: vec![dep.clone(), dep],
+            cluster: ClusterSpec::paper_default(),
+            partition: PartitionPolicy::Equal,
+            policy: policy(),
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            seed,
+        }
+    }
+
+    type ChaosSharded = ShardedDriver<(), ChaosBackend<AnalyticBackend>>;
+
+    #[test]
+    fn supervised_without_faults_matches_unsupervised() {
+        let run = |supervised: bool| {
+            let cfg = two_quant_config();
+            let mut sd: ChaosSharded = if supervised {
+                ShardedDriver::with_supervision(
+                    cfg,
+                    |_, _, _| ChaosBackend::passthrough(AnalyticBackend),
+                    |_| Box::new(Dftsp::new()),
+                )
+                .unwrap()
+            } else {
+                ShardedDriver::new(
+                    cfg,
+                    |_| ChaosBackend::passthrough(AnalyticBackend),
+                    |_| Box::new(Dftsp::new()),
+                )
+                .unwrap()
+            };
+            let mut b = RequestBuilder::new();
+            for e in 0..4u64 {
+                let now = e as f64 * 2.0;
+                for i in 0..12 {
+                    sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), (i % 2) as usize);
+                }
+                sd.step_epoch(now);
+            }
+            sd.finish(8.0);
+            (
+                sd.merged_metrics(),
+                sd.shard_metrics(0).clone(),
+                sd.shard_metrics(1).clone(),
+            )
+        };
+        assert_eq!(
+            run(true),
+            run(false),
+            "armed-but-fault-free supervision is bit-identical"
+        );
+    }
+
+    #[test]
+    fn crashed_shard_redispatches_queue_then_restarts() {
+        // Shard 1 panics in its first incarnation only; its scheduler never
+        // schedules, so its whole queue is still queued at crash time and
+        // the redispatch count is exact.
+        let mut sd: ChaosSharded = ShardedDriver::with_supervision(
+            same_dep_config(7),
+            |_, shard, generation| {
+                let cfg = if shard == 1 && generation == 0 {
+                    ChaosConfig {
+                        seed: 1,
+                        panic_prob: 1.0,
+                        ..ChaosConfig::default()
+                    }
+                } else {
+                    ChaosConfig::default()
+                };
+                ChaosBackend::new(AnalyticBackend, cfg, shard as u64, generation)
+            },
+            |shard| -> Box<dyn Scheduler + Send> {
+                if shard == 1 {
+                    Box::new(Never)
+                } else {
+                    Box::new(Dftsp::new())
+                }
+            },
+        )
+        .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..3 {
+            sd.offer(b.build(0.0, 128, 128, 1.9, 0.05), (), 0);
+            sd.offer(b.build(0.0, 128, 128, 1.9, 0.05), (), 1);
+        }
+        assert_eq!(sd.shards()[1].driver.queue_len(), 3);
+        sd.step_epoch(0.0);
+        assert_eq!(sd.health()[1], ShardHealth::Degraded, "panic caught");
+        let m1 = sd.shard_metrics(1);
+        assert_eq!(m1.shard_crashes, 1);
+        assert_eq!(m1.requests_redispatched, 3, "queued work moved off");
+        assert_eq!(m1.offered, 0, "moved requests leave the crashed count");
+        assert_eq!(sd.shard_metrics(0).offered, 6, "survivor took them");
+        // While down, routing avoids the shard entirely.
+        assert_eq!(sd.offer(b.build(2.0, 128, 128, 1.9, 0.05), (), 1), 0);
+        sd.step_epoch(2.0);
+        assert!(
+            matches!(sd.health()[1], ShardHealth::Restarting { .. }),
+            "restart scheduled under backoff"
+        );
+        sd.step_epoch(4.0);
+        sd.step_epoch(6.0); // backoff elapsed: rebuilt at this boundary
+        assert_eq!(sd.health()[1], ShardHealth::Healthy, "back in rotation");
+        assert_eq!(sd.shard_metrics(1).shard_restarts, 1);
+        sd.finish(8.0);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 7);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed,
+            "conservation closes through the crash"
+        );
+    }
+
+    #[test]
+    fn crash_loop_parks_the_shard_and_routing_avoids_it() {
+        // Shard 1 panics in every incarnation: a genuine crash loop. Three
+        // quick crashes trip the circuit breaker.
+        let mut sd: ChaosSharded = ShardedDriver::with_supervision(
+            same_dep_config(11),
+            |_, shard, generation| {
+                let cfg = if shard == 1 {
+                    ChaosConfig {
+                        seed: 2,
+                        panic_prob: 1.0,
+                        ..ChaosConfig::default()
+                    }
+                } else {
+                    ChaosConfig::default()
+                };
+                ChaosBackend::new(AnalyticBackend, cfg, shard as u64, generation)
+            },
+            |_| Box::new(Dftsp::new()),
+        )
+        .unwrap();
+        let mut b = RequestBuilder::new();
+        for e in 0..12u64 {
+            let now = e as f64 * 2.0;
+            sd.offer(b.build(now, 128, 128, 1.9, 0.05), (), 0);
+            sd.offer(b.build(now, 128, 128, 1.9, 0.05), (), 1);
+            sd.step_epoch(now);
+        }
+        assert_eq!(sd.health()[1], ShardHealth::Parked, "circuit breaker");
+        let m1 = sd.shard_metrics(1);
+        assert_eq!(m1.shard_crashes, 3, "crash, restart, crash, …, park");
+        assert_eq!(m1.shard_restarts, 2, "a parked shard never restarts");
+        assert_eq!(m1.shards_parked, 1);
+        // Parked: the affinity shard is permanently out of rotation.
+        assert_eq!(sd.offer(b.build(24.0, 128, 128, 1.9, 0.05), (), 1), 0);
+        sd.finish(26.0);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 25);
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed
+        );
+        assert!(m.shard_failed > 0, "in-flight work died with the shard");
+    }
+
+    #[test]
+    fn seeded_chaos_is_deterministic_and_conserves() {
+        let chaos = ChaosConfig {
+            seed: 33,
+            panic_prob: 0.25,
+            error_prob: 0.25,
+            kv_fail_prob: 0.25,
+            ..ChaosConfig::default()
+        };
+        let run = || {
+            let mut sd: ChaosSharded = ShardedDriver::with_supervision(
+                same_dep_config(9),
+                move |_, shard, generation| {
+                    ChaosBackend::new(AnalyticBackend, chaos, shard as u64, generation)
+                },
+                |_| Box::new(Dftsp::new()),
+            )
+            .unwrap();
+            let mut b = RequestBuilder::new();
+            for e in 0..10u64 {
+                let now = e as f64 * 2.0;
+                for i in 0..4 {
+                    sd.offer(b.build(now, 128, 128, 1.9, 0.05), (), (i % 2) as usize);
+                }
+                sd.step_epoch(now);
+            }
+            sd.finish(20.0);
+            (sd.merged_metrics(), sd.health())
+        };
+        let (a, ha) = run();
+        let (c, hc) = run();
+        assert_eq!(a, c, "same chaos seed → bit-identical merged metrics");
+        assert_eq!(ha, hc, "… and the same final health states");
+        assert_eq!(a.offered, 40);
+        assert_eq!(
+            a.offered,
+            a.completed_in_deadline + a.completed_late + a.dropped + a.shard_failed,
+            "every request gets exactly one terminal outcome through chaos"
+        );
+        assert!(a.shard_crashes > 0, "the schedule did inject panics");
     }
 }

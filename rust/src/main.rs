@@ -37,7 +37,9 @@ fn main() {
                  [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
                  [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
                  [--workers N] [--shards N] [--partition equal|load-proportional] [--stats] \
-                 [--listen ADDR] [--pending-cap N] [--clients N] [--quick] [--json]"
+                 [--listen ADDR] [--pending-cap N] [--clients N] [--quick] [--json] \
+                 [--chaos] [--chaos-seed S] [--chaos-panic P] [--chaos-stall P] \
+                 [--chaos-stall-ms MS] [--chaos-error P] [--chaos-kv-fail P]"
             );
             2
         }
@@ -86,6 +88,27 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     if let Some(p) = args.get("partition") {
         cfg.partition = edgellm::coordinator::PartitionPolicy::parse(p)?;
     }
+    // Chaos flags mirror the `[chaos]` TOML section; CLI wins over the file.
+    fn chaos_prob(args: &Args, flag: &str, current: f64) -> Result<f64, String> {
+        let Some(v) = args.get(flag) else {
+            return Ok(current);
+        };
+        let p: f64 = v.parse().map_err(|_| format!("bad --{flag}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("--{flag} must be within [0, 1]"));
+        }
+        Ok(p)
+    }
+    if let Some(v) = args.get("chaos-seed") {
+        cfg.chaos.seed = v.parse().map_err(|_| "bad --chaos-seed")?;
+    }
+    if let Some(v) = args.get("chaos-stall-ms") {
+        cfg.chaos.stall_ms = v.parse().map_err(|_| "bad --chaos-stall-ms")?;
+    }
+    cfg.chaos.panic_prob = chaos_prob(args, "chaos-panic", cfg.chaos.panic_prob)?;
+    cfg.chaos.stall_prob = chaos_prob(args, "chaos-stall", cfg.chaos.stall_prob)?;
+    cfg.chaos.error_prob = chaos_prob(args, "chaos-error", cfg.chaos.error_prob)?;
+    cfg.chaos.kv_fail_prob = chaos_prob(args, "chaos-kv-fail", cfg.chaos.kv_fail_prob)?;
     Ok(cfg)
 }
 
@@ -113,6 +136,29 @@ fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler 
         "brute" => Ok(Box::new(BruteForce::default())),
         other => Err(format!("unknown scheduler `{other}`")),
     }
+}
+
+/// Injected chaos panics are expected control flow — the shard supervisor
+/// catches every one — so suppress their default stderr spew (payloads all
+/// carry the "chaos: injected" marker) while forwarding real panics to the
+/// original hook untouched.
+fn silence_injected_panics() {
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let payload = info.payload();
+        let injected = payload
+            .downcast_ref::<&str>()
+            .map(|m| m.contains("chaos: injected"))
+            .or_else(|| {
+                payload
+                    .downcast_ref::<String>()
+                    .map(|m| m.contains("chaos: injected"))
+            })
+            .unwrap_or(false);
+        if !injected {
+            default_hook(info);
+        }
+    }));
 }
 
 fn cmd_simulate(args: &Args) -> i32 {
@@ -148,7 +194,26 @@ fn cmd_simulate(args: &Args) -> i32 {
             String::new()
         }
     );
-    let m = if cfg.shards > 1 {
+    let m = if cfg.chaos.enabled() {
+        println!(
+            "chaos: seed {}  panic {}  stall {} ({} ms)  error {}  kv-fail {}",
+            cfg.chaos.seed,
+            cfg.chaos.panic_prob,
+            cfg.chaos.stall_prob,
+            cfg.chaos.stall_ms,
+            cfg.chaos.error_prob,
+            cfg.chaos.kv_fail_prob
+        );
+        silence_injected_panics();
+        // Fault injection runs the supervised sharded path even at
+        // --shards 1 (one supervised shard): crash isolation and restart
+        // accounting need the supervisor in the loop.
+        let sched_name = sched_name.clone();
+        let sched_cfg = cfg.scheduler;
+        sim::run_chaos(&cfg, move |_| {
+            make_scheduler(&sched_name, sched_cfg).expect("scheduler name already validated")
+        })
+    } else if cfg.shards > 1 {
         // One fresh scheduler per shard (validated above).
         sim::run_sharded(&cfg, |_| {
             make_scheduler(&sched_name, cfg.scheduler).expect("scheduler name already validated")
@@ -528,6 +593,17 @@ fn cmd_loadtest(args: &Args) -> i32 {
     let epochs = args.u64_or("epochs", if quick { 60 } else { 300 });
     let submit_threads = args.usize_or("client-threads", 32).clamp(1, clients.max(1));
     let write_json = args.flag("json");
+    // --chaos: panic-inject the shard schedulers so the run crosses real
+    // crash/restart cycles, then hold the same accounting invariants the
+    // clean run holds. The serving stack has no backend seam to wrap (the
+    // engine is built inside `EpochServer`), so the scheduler — which runs
+    // inside the supervisor's catch_unwind scope — is the injection point.
+    let chaos_mode = args.flag("chaos");
+    let chaos_seed = args.u64_or("chaos-seed", 1105);
+    let chaos_panic = args.f64_or("chaos-panic", 0.03);
+    if chaos_mode {
+        silence_injected_panics();
+    }
     let net_cfg = edgellm::serving::NetConfig {
         pending_cap,
         ..Default::default()
@@ -540,6 +616,35 @@ fn cmd_loadtest(args: &Args) -> i32 {
          (cap {pending_cap}/shard, {epochs} epochs)"
     );
 
+    /// DFTSP that panics pseudo-randomly at epoch boundaries. Seeded per
+    /// (shard, incarnation) from the same `chaos_stream` the simulator's
+    /// `ChaosBackend` uses, so a given incarnation's crash epoch is a pure
+    /// function of `--chaos-seed`.
+    struct ChaosScheduler {
+        rng: edgellm::util::rng::Rng,
+        panic_prob: f64,
+        inner: Dftsp,
+    }
+    impl Scheduler for ChaosScheduler {
+        fn name(&self) -> &'static str {
+            "chaos-dftsp"
+        }
+        fn schedule(
+            &mut self,
+            inst: &edgellm::coordinator::ProblemInstance,
+            c: &[edgellm::request::EpochRequest],
+        ) -> edgellm::coordinator::Schedule {
+            if self.rng.uniform(0.0, 1.0) < self.panic_prob {
+                panic!("chaos: injected scheduler panic");
+            }
+            self.inner.schedule(inst, c)
+        }
+    }
+
+    // Incarnation counter per shard: each rebuild advances the chaos stream
+    // so a restarted shard does not replay its predecessor's crash epoch.
+    let generations: Vec<std::sync::atomic::AtomicU64> =
+        (0..shards).map(|_| Default::default()).collect();
     let mut outcome = None;
     let per_shard = edgellm::serving::serve_sharded(
         shards,
@@ -558,7 +663,22 @@ fn cmd_loadtest(args: &Args) -> i32 {
                 seed: 7 + shard as u64,
                 ..Default::default()
             };
-            EpochServer::new(engine, cfg, Box::new(Dftsp::new()))
+            let scheduler: Box<dyn Scheduler> = if chaos_mode {
+                let generation =
+                    generations[shard].fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                Box::new(ChaosScheduler {
+                    rng: edgellm::util::rng::Rng::new(edgellm::driver::chaos_stream(
+                        chaos_seed,
+                        shard as u64,
+                        generation,
+                    )),
+                    panic_prob: chaos_panic,
+                    inner: Dftsp::new(),
+                })
+            } else {
+                Box::new(Dftsp::new())
+            };
+            EpochServer::new(engine, cfg, scheduler)
         },
         |handles| {
             let router = edgellm::serving::Router::new(
@@ -675,12 +795,16 @@ fn cmd_loadtest(args: &Args) -> i32 {
             // Every client socket is closed; handlers must all exit.
             let drained = listener.wait_drained(Duration::from_secs(20));
             let leaked = if drained { 0 } else { listener.open_connections() };
+            // Permits are RAII-scoped to handlers, so after a drain every
+            // gate depth must be back at zero — even when handlers died
+            // with crashed shards mid-reply.
+            let leaked_permits: usize = listener.gate_depths().iter().sum();
             let net = listener.net_metrics();
             listener.shutdown();
-            outcome = Some((tally, probe_alive, leaked, net));
+            outcome = Some((tally, probe_alive, leaked, leaked_permits, net));
         },
     );
-    let (tally, probe_alive, leaked, net) = outcome.expect("drive ran");
+    let (tally, probe_alive, leaked, leaked_permits, net) = outcome.expect("drive ran");
     // Every attempted connection must resolve to exactly one reply or one
     // IO error — a nonzero gap means a reply was lost in the stack.
     let accounting_gap = clients as i64 - tally.replies() as i64 - tally.io_errors as i64;
@@ -709,9 +833,20 @@ fn cmd_loadtest(args: &Args) -> i32 {
     t.row(&["bad requests (server)".into(), net.bad_requests.to_string()]);
     t.row(&["accounting gap".into(), accounting_gap.to_string()]);
     t.row(&["leaked connections".into(), leaked.to_string()]);
+    t.row(&["leaked permits".into(), leaked_permits.to_string()]);
     t.row(&["accept loop deaths".into(), accept_loop_deaths.to_string()]);
-    print!("{}", t.render());
     let merged = edgellm::serving::merge_shard_metrics(&per_shard);
+    if chaos_mode {
+        t.row(&["shard crashes".into(), merged.shard_crashes.to_string()]);
+        t.row(&["shard restarts".into(), merged.shard_restarts.to_string()]);
+        t.row(&["shards parked".into(), merged.shards_parked.to_string()]);
+        t.row(&["shard failed (server)".into(), merged.shard_failed.to_string()]);
+        t.row(&[
+            "shard failed replies (net)".into(),
+            net.net_shard_failures.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
     println!(
         "server side: offered {} completed {}+{} dropped {} | wire histogram n={} p99={:.4}s",
         merged.offered,
@@ -724,16 +859,34 @@ fn cmd_loadtest(args: &Args) -> i32 {
 
     if write_json {
         let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
-        let row = Json::obj(vec![
-            (
-                "scenario",
-                Json::Str(if quick { "net/quick" } else { "net/full" }.to_string()),
-            ),
+        let scenario = match (chaos_mode, quick) {
+            (true, true) => "chaos/quick",
+            (true, false) => "chaos/full",
+            (false, true) => "net/quick",
+            (false, false) => "net/full",
+        };
+        let mut fields = vec![
+            ("scenario", Json::Str(scenario.to_string())),
             ("sent", Json::Num(tally.sent as f64)),
             ("bad_requests", Json::Num(net.bad_requests as f64)),
             ("accounting_gap", Json::Num(accounting_gap as f64)),
             ("leaked_connections", Json::Num(leaked as f64)),
             ("accept_loop_deaths", Json::Num(accept_loop_deaths as f64)),
+        ];
+        if chaos_mode {
+            // The invariant columns the chaos gate pins at zero, plus the
+            // crash/restart counters (wall-dependent — how many faults fire
+            // depends on how many epochs elapse — so informational only).
+            fields.push(("leaked_permits", Json::Num(leaked_permits as f64)));
+            fields.push(("parked", Json::Num(merged.shards_parked as f64)));
+            fields.push(("crashes", num_or_null(merged.shard_crashes as f64)));
+            fields.push(("restarts", num_or_null(merged.shard_restarts as f64)));
+            fields.push((
+                "shard_failed_replies",
+                num_or_null(net.net_shard_failures as f64),
+            ));
+        }
+        fields.extend([
             ("served", num_or_null((tally.completed + tally.late) as f64)),
             ("shed", num_or_null(tally.shed as f64)),
             ("shed_rate", num_or_null(shed_rate)),
@@ -741,18 +894,28 @@ fn cmd_loadtest(args: &Args) -> i32 {
             ("wall_p95_s", num_or_null(p95)),
             ("wall_p99_s", num_or_null(p99)),
         ]);
+        let row = Json::obj(fields);
+        let bench_name = if chaos_mode {
+            "BENCH_chaos.json"
+        } else {
+            "BENCH_net.json"
+        };
+        let provenance = if chaos_mode {
+            "cargo run --release -- loadtest --chaos --quick --json"
+        } else {
+            "cargo run --release -- loadtest --quick --json"
+        };
         let doc = Json::obj(vec![
-            (
-                "provenance",
-                Json::Str("cargo run --release -- loadtest --quick --json".to_string()),
-            ),
+            ("provenance", Json::Str(provenance.to_string())),
             ("rows", Json::Arr(vec![row])),
         ]);
-        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_net.json");
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(bench_name);
         match std::fs::write(&path, format!("{doc}\n")) {
             Ok(()) => println!("wrote {}", path.display()),
             Err(e) => {
-                eprintln!("write BENCH_net.json failed: {e}");
+                eprintln!("write {bench_name} failed: {e}");
                 return 1;
             }
         }
@@ -760,6 +923,8 @@ fn cmd_loadtest(args: &Args) -> i32 {
 
     let ok = accounting_gap == 0
         && leaked == 0
+        && leaked_permits == 0
+        && merged.shards_parked == 0
         && accept_loop_deaths == 0
         && net.bad_requests == 0
         && tally.sent as usize == clients;

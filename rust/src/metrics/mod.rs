@@ -52,9 +52,11 @@ pub struct Metrics {
     /// In-flight batch size observed at each decode step (continuous
     /// backends only).
     pub inflight_occupancy: OnlineStats,
-    /// Requests shed at the TCP ingress gate before reaching the server
-    /// (typed `overloaded` wire rejections). Only the front-end records
-    /// these — a shed request never becomes `offered`.
+    /// Requests shed with a typed `overloaded` rejection: at the TCP
+    /// ingress gate before reaching the server (never counted `offered`),
+    /// or by the driver's degradation ladder under sustained epoch stalls
+    /// (already `offered`; the shed also records a `Dropped` outcome, so
+    /// conservation closes either way).
     pub shed_overloaded: u64,
     /// Malformed wire requests answered with a typed `bad_request` reply.
     pub bad_requests: u64,
@@ -64,6 +66,12 @@ pub struct Metrics {
     /// Requests whose reply wait expired at the front-end (typed `timeout`
     /// replies; the server may still finish them, but the client is gone).
     pub net_timeouts: u64,
+    /// Requests whose reply channel dropped unanswered — the shard crashed
+    /// with the request in flight; the client got a typed `shard_failed`
+    /// reply. The client-visible twin of the servers' `shard_failed`
+    /// (which already counts the lost request via the conservation
+    /// subtraction), so the two are never summed into one number.
+    pub net_shard_failures: u64,
     /// TCP connections accepted by the front-end.
     pub net_connections: u64,
     /// Front-end wire latency: request line parsed → reply line written,
@@ -71,6 +79,30 @@ pub struct Metrics {
     /// from `latency`, which the driver records for in-deadline completions
     /// only; mergeable across shards/listeners like every histogram here.
     pub wire_latency: LatencyHistogram,
+    /// Shard panics caught by a supervisor (`ShardedDriver` supervision or
+    /// `serve_sharded`'s per-shard restart loop).
+    pub shard_crashes: u64,
+    /// Successful shard restarts (fresh driver/backend after a caught
+    /// panic; a parked shard never counts another restart).
+    pub shard_restarts: u64,
+    /// Queued-but-not-admitted requests moved off a crashed shard onto a
+    /// surviving same-deployment shard. Redispatched requests are counted in
+    /// `offered` exactly once (the crashed shard's count is decremented when
+    /// the survivor's is incremented).
+    pub requests_redispatched: u64,
+    /// Requests that lost their shard mid-flight: offered but terminated by
+    /// a crash instead of an outcome. Closes the conservation identity
+    /// `offered == completed_in_deadline + completed_late + dropped +
+    /// shard_failed` through crashes.
+    pub shard_failed: u64,
+    /// `step_epoch` invocations whose wall time exceeded the configured
+    /// epoch duration (the epoch watchdog; feeds the degradation ladder).
+    /// Wall-dependent, so excluded from bit-determinism claims — always 0
+    /// under the simulated clock.
+    pub epoch_stalls: u64,
+    /// Shards parked by the crash-loop circuit breaker (crashed again
+    /// immediately after too many consecutive restarts).
+    pub shards_parked: u64,
 }
 
 impl Metrics {
@@ -150,8 +182,15 @@ impl Metrics {
         self.bad_requests += other.bad_requests;
         self.accept_errors += other.accept_errors;
         self.net_timeouts += other.net_timeouts;
+        self.net_shard_failures += other.net_shard_failures;
         self.net_connections += other.net_connections;
         self.wire_latency.merge(&other.wire_latency);
+        self.shard_crashes += other.shard_crashes;
+        self.shard_restarts += other.shard_restarts;
+        self.requests_redispatched += other.requests_redispatched;
+        self.shard_failed += other.shard_failed;
+        self.epoch_stalls += other.epoch_stalls;
+        self.shards_parked += other.shards_parked;
     }
 
     /// Mean scheduler wall time per `schedule` call in seconds (0 when the
@@ -204,6 +243,7 @@ impl Metrics {
             ("bad_requests", num(self.bad_requests as f64)),
             ("accept_errors", num(self.accept_errors as f64)),
             ("net_timeouts", num(self.net_timeouts as f64)),
+            ("net_shard_failures", num(self.net_shard_failures as f64)),
             ("net_connections", num(self.net_connections as f64)),
             ("wire_latency_count", num(self.wire_latency.count() as f64)),
             ("wire_latency_p50", num(finite(self.wire_latency.quantile(0.50)))),
@@ -227,6 +267,14 @@ impl Metrics {
             // (tests/golden_metrics.rs) skips this key.
             ("schedule_wall_s", num(finite(self.search.schedule_wall_s))),
             ("epoch_overruns", num(self.epoch_overruns as f64)),
+            ("shard_crashes", num(self.shard_crashes as f64)),
+            ("shard_restarts", num(self.shard_restarts as f64)),
+            ("requests_redispatched", num(self.requests_redispatched as f64)),
+            ("shard_failed", num(self.shard_failed as f64)),
+            // Wall-dependent like schedule_wall_s: the watchdog compares
+            // real elapsed time against the epoch duration.
+            ("epoch_stalls", num(self.epoch_stalls as f64)),
+            ("shards_parked", num(self.shards_parked as f64)),
             ("horizon", num(self.horizon)),
         ])
     }
@@ -261,12 +309,24 @@ impl Metrics {
         }
         if self.net_connections > 0 || self.shed_overloaded > 0 || self.bad_requests > 0 {
             s.push_str(&format!(
-                "net: {} connections  shed {}  bad requests {}  timeouts {}  accept retries {}\n",
+                "net: {} connections  shed {}  bad requests {}  timeouts {}  shard failures {}  accept retries {}\n",
                 self.net_connections,
                 self.shed_overloaded,
                 self.bad_requests,
                 self.net_timeouts,
+                self.net_shard_failures,
                 self.accept_errors,
+            ));
+        }
+        if self.shard_crashes > 0 || self.shards_parked > 0 || self.epoch_stalls > 0 {
+            s.push_str(&format!(
+                "faults: {} crashes  {} restarts  {} redispatched  {} shard-failed  {} stalls  {} parked\n",
+                self.shard_crashes,
+                self.shard_restarts,
+                self.requests_redispatched,
+                self.shard_failed,
+                self.epoch_stalls,
+                self.shards_parked,
             ));
         }
         if self.wire_latency.count() > 0 {
@@ -484,6 +544,42 @@ mod tests {
         assert!(r.contains("shed 4"));
         assert!(r.contains("wire latency"));
         // Merging an empty Metrics stays the identity with net counters too.
+        let snapshot = a.clone();
+        a.merge(&Metrics::new());
+        assert_eq!(a, snapshot);
+    }
+
+    #[test]
+    fn fault_counters_merge_and_serialize() {
+        let mut a = Metrics::new();
+        a.shard_crashes = 2;
+        a.shard_restarts = 2;
+        a.requests_redispatched = 5;
+        a.shard_failed = 3;
+        let mut b = Metrics::new();
+        b.shard_crashes = 1;
+        b.epoch_stalls = 4;
+        b.shards_parked = 1;
+        a.merge(&b);
+        assert_eq!(a.shard_crashes, 3);
+        assert_eq!(a.shard_restarts, 2);
+        assert_eq!(a.requests_redispatched, 5);
+        assert_eq!(a.shard_failed, 3);
+        assert_eq!(a.epoch_stalls, 4);
+        assert_eq!(a.shards_parked, 1);
+        let j = a.to_json();
+        assert_eq!(j.req_f64("shard_crashes").unwrap(), 3.0);
+        assert_eq!(j.req_f64("shard_restarts").unwrap(), 2.0);
+        assert_eq!(j.req_f64("requests_redispatched").unwrap(), 5.0);
+        assert_eq!(j.req_f64("shard_failed").unwrap(), 3.0);
+        assert_eq!(j.req_f64("epoch_stalls").unwrap(), 4.0);
+        assert_eq!(j.req_f64("shards_parked").unwrap(), 1.0);
+        let r = a.report("faulty");
+        assert!(r.contains("3 crashes"));
+        assert!(r.contains("1 parked"));
+        // A clean run prints no fault line at all.
+        assert!(!Metrics::new().report("clean").contains("faults:"));
+        // Merging an empty Metrics stays the identity with fault counters.
         let snapshot = a.clone();
         a.merge(&Metrics::new());
         assert_eq!(a, snapshot);

@@ -9,7 +9,8 @@
 //!   ← {"token": 17}                                  (per token, stream only)
 //!   ← {"outcome": "completed" | "late" | "rejected",
 //!      "reason": "overloaded" | "kv_full" | "bad_request" | "inadmissible"
-//!                | "timeout" | "shutdown" | "execution",   (rejected only)
+//!                | "timeout" | "shutdown" | "execution"
+//!                | "shard_failed",                         (rejected only)
 //!      "ids": [..], "text": "...", "latency": 0.31, "epoch": 4}
 //!
 //! `model` and `stream` are optional; `latency_req`/`accuracy_req` default
@@ -40,7 +41,7 @@
 
 use crate::driver::pick_least_loaded;
 use crate::metrics::Metrics;
-use crate::serving::{ServeHandle, ServeOutcome, ServeRequest, ServeResponse};
+use crate::serving::{RejectCause, ServeHandle, ServeOutcome, ServeRequest, ServeResponse};
 use crate::tokenizer::Bpe;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
@@ -397,6 +398,11 @@ struct NetStats {
     bad_requests: AtomicU64,
     accept_errors: AtomicU64,
     timeouts: AtomicU64,
+    /// Requests whose reply channel dropped unanswered (shard crash with
+    /// the request in flight). Kept separate from the servers'
+    /// `shard_failed` — the supervisor's conservation subtraction already
+    /// counts the lost request there; this is the *client-visible* side.
+    shard_failures: AtomicU64,
     wire_latency: Mutex<LatencyHistogram>,
 }
 
@@ -410,7 +416,15 @@ impl NetStats {
         m.bad_requests = self.bad_requests.load(Ordering::Acquire);
         m.accept_errors = self.accept_errors.load(Ordering::Acquire);
         m.net_timeouts = self.timeouts.load(Ordering::Acquire);
-        m.wire_latency = self.wire_latency.lock().expect("wire histogram").clone();
+        m.net_shard_failures = self.shard_failures.load(Ordering::Acquire);
+        // Poison-tolerant: a handler that panicked while recording left a
+        // structurally intact histogram (record() is a counter bump), and
+        // the snapshot must not cascade that panic into the caller.
+        m.wire_latency = self
+            .wire_latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
         m
     }
 }
@@ -589,16 +603,32 @@ fn serve_one(line: &str, ctx: &ConnCtx, writer: &mut TcpStream) -> bool {
     match rrx.recv_timeout(ctx.cfg.reply_timeout) {
         Ok(resp) => {
             if resp.outcome != ServeOutcome::Rejected {
+                // Poison-tolerant (see NetStats::to_metrics): one handler's
+                // panic must not take every later reply down with it.
                 ctx.stats
                     .wire_latency
                     .lock()
-                    .expect("wire histogram")
+                    .unwrap_or_else(|e| e.into_inner())
                     .record(t0.elapsed().as_secs_f64());
             }
             drop(permit);
             writeln!(writer, "{}", render_response_line(&resp, ctx.bpe.as_ref())).is_ok()
         }
-        Err(_) => {
+        Err(RecvTimeoutError::Disconnected) => {
+            // The serving side dropped the reply channel without answering
+            // — the shard crashed with this request in flight. Typed
+            // `shard_failed`, not `timeout`: the request may have partially
+            // executed, so the client decides whether a retry is safe.
+            ctx.stats.shard_failures.fetch_add(1, Ordering::AcqRel);
+            let _ = writeln!(
+                writer,
+                "{}",
+                render_rejection_line(RejectCause::ShardFailed.as_wire_str(), None)
+            );
+            drop(permit);
+            false
+        }
+        Err(RecvTimeoutError::Timeout) => {
             // Reply-wait liveness: release the slot (a wedged epoch must not
             // leak gate capacity) and close — a late reply on a reused line
             // would desync the protocol.
@@ -677,6 +707,15 @@ impl Listener {
             std::thread::sleep(Duration::from_millis(2));
         }
         true
+    }
+
+    /// Per-shard admission-gate depths. Every permit is RAII-scoped to its
+    /// connection handler, so once `wait_drained` reports true these must
+    /// all be zero — a nonzero depth here is a leaked permit, which would
+    /// permanently shrink that shard's admission capacity. The chaos load
+    /// harness gates on exactly this.
+    pub fn gate_depths(&self) -> Vec<usize> {
+        self.ctx.router.depths()
     }
 
     /// Front-end counters as a [`Metrics`] snapshot — merge it with the

@@ -43,6 +43,7 @@ use crate::runtime::{argmax, Engine, KvCache};
 use crate::util::rng::Rng;
 use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A client request: a prompt plus the paper's ⟨n, τ, a⟩ requirements.
@@ -86,6 +87,10 @@ pub enum RejectCause {
     Shutdown,
     /// Engine execution failed mid-flight.
     Execution,
+    /// The shard serving this request crashed before producing an outcome.
+    /// Terminal for the client (the request may have partially executed, so
+    /// a blind retry is not idempotent — the caller decides).
+    ShardFailed,
 }
 
 impl RejectCause {
@@ -98,6 +103,7 @@ impl RejectCause {
             RejectCause::KvFull => "kv_full",
             RejectCause::Shutdown => "shutdown",
             RejectCause::Execution => "execution",
+            RejectCause::ShardFailed => "shard_failed",
         }
     }
 }
@@ -137,19 +143,64 @@ struct Stamped {
 /// Clonable ingest handle. `send` stamps the submission instant, so the
 /// server's view of a request's arrival is the client's send, not the
 /// boundary drain that happens to pick it up.
+///
+/// The sender lives behind a shared slot so the sharded supervisor can
+/// [`redirect`](ServeHandle::redirect) every outstanding clone — the TCP
+/// router's included — at a restarted shard's fresh ingress channel without
+/// re-plumbing the front-end.
 #[derive(Clone)]
 pub struct ServeHandle {
-    tx: Sender<Stamped>,
+    tx: Arc<Mutex<Sender<Stamped>>>,
 }
 
 impl ServeHandle {
+    fn from_sender(tx: Sender<Stamped>) -> ServeHandle {
+        ServeHandle {
+            tx: Arc::new(Mutex::new(tx)),
+        }
+    }
+
+    /// A handle whose sends always fail — what a shard that never came up
+    /// (first build panicked through its retry budget) hands the router, so
+    /// the fleet degrades to typed rejections instead of aborting.
+    pub(crate) fn dead() -> ServeHandle {
+        let (tx, _rx) = channel();
+        ServeHandle::from_sender(tx)
+    }
+
+    /// Point every clone of this handle at `replacement`'s current channel.
+    /// Called by the shard supervisor after a restart; in-flight sends
+    /// racing the swap fail cleanly (dead old channel) rather than block.
+    pub(crate) fn redirect(&self, replacement: &ServeHandle) {
+        let fresh = {
+            let guard = match replacement.tx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.clone()
+        };
+        match self.tx.lock() {
+            Ok(mut g) => *g = fresh,
+            Err(poisoned) => *poisoned.into_inner() = fresh,
+        }
+    }
+
     pub fn send(&self, req: ServeRequest) -> Result<(), SendError<ServeRequest>> {
-        self.tx
-            .send(Stamped {
-                req,
-                submitted: Instant::now(),
-            })
-            .map_err(|SendError(stamped)| SendError(stamped.req))
+        let tx = {
+            // Clone out of the slot instead of sending under the lock: a
+            // poisoned mutex (a peer panicked mid-swap) degrades to the
+            // stored sender, never to a handler-thread panic.
+            let guard = match self.tx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.clone()
+        };
+        tx.send(Stamped {
+            req,
+            submitted: Instant::now(),
+        })
+        .map_err(|SendError(stamped)| SendError(stamped.req))
     }
 }
 
@@ -453,8 +504,7 @@ impl EngineBackend {
             // batch restarts from empty.
             self.cache = None;
         }
-        let logits = if self.cache.is_some() {
-            let cache = self.cache.as_mut().unwrap();
+        let logits = if let Some(cache) = self.cache.as_mut() {
             self.engine.prefill_into(&entry.payload.prompt, cache)
         } else {
             match self
@@ -642,7 +692,18 @@ impl EngineBackend {
             return;
         }
         let tokens: Vec<i32> = self.flights.iter().map(|f| f.next).collect();
-        let cache = self.cache.as_mut().expect("in-flight sequences imply a cache");
+        let Some(cache) = self.cache.as_mut() else {
+            // In-flight sequences imply a cache; losing it is an engine bug.
+            // Fail the flights with typed rejects instead of killing the
+            // shard — the supervisor would only see a panic where clients
+            // can instead see terminal answers.
+            debug_assert!(false, "in-flight sequences imply a cache");
+            for f in self.flights.drain(..) {
+                Self::respond_rejected(&f.entry, Some(f.epoch), RejectCause::Execution);
+                metrics.record_outcome(Outcome::Dropped, 0.0);
+            }
+            return;
+        };
         match self.engine.decode_into(&tokens, cache, &mut self.logits) {
             Ok(n) => {
                 let vocab = self.engine.meta.vocab;
@@ -742,6 +803,9 @@ impl ExecutionBackend for EngineBackend {
             RejectReason::Stale => RejectCause::Overloaded,
             RejectReason::Inadmissible => RejectCause::Inadmissible,
             RejectReason::Shutdown => RejectCause::Shutdown,
+            RejectReason::Overloaded => RejectCause::Overloaded,
+            RejectReason::Execution => RejectCause::Execution,
+            RejectReason::KvFull => RejectCause::KvFull,
         };
         Self::respond_rejected(&entry, None, cause);
     }
@@ -917,9 +981,13 @@ impl EpochServer {
 
     /// Clonable ingest handle for client threads (stamps submission time).
     pub fn handle(&self) -> ServeHandle {
-        ServeHandle {
-            tx: self.ingress_tx.clone(),
-        }
+        ServeHandle::from_sender(self.ingress_tx.clone())
+    }
+
+    /// Epoch duration in seconds (the supervisor's unit for "how many
+    /// epochs did this incarnation consume before crashing").
+    pub fn epoch_duration(&self) -> f64 {
+        self.driver.epoch_duration()
     }
 
     /// Name of the model this server's engine is serving — the routing key

@@ -11,11 +11,41 @@
 //! thread — PJRT handles are not `Send`, and the host engine's arenas stay
 //! disjoint by construction (nothing is shared but the process).
 //!
-//! Per-shard [`Metrics`] are returned in shard order; merge them with
+//! ## Supervision
+//!
+//! Every shard thread is a supervisor, not a bare server: each incarnation
+//! runs under `catch_unwind`, so a panic anywhere in the epoch loop —
+//! scheduler, engine, backend — kills that shard's incarnation, never the
+//! fleet. The supervisor then
+//!
+//! 1. closes the dead incarnation's books (offered requests without an
+//!    outcome become `shard_failed` via the same conservation subtraction
+//!    as [`ShardedDriver`](crate::driver::ShardedDriver); clients waiting
+//!    on the lost requests see their reply channels drop, which the TCP
+//!    front-end surfaces as a typed `shard_failed` rejection),
+//! 2. sleeps the capped exponential
+//!    [`restart_backoff_ms`](crate::driver::restart_backoff_ms),
+//! 3. rebuilds a fresh server via `make_server` (a panicking rebuild is a
+//!    crash like any other), and
+//! 4. [`redirect`](ServeHandle)s every outstanding handle clone — the
+//!    router's included — at the new incarnation's ingress channel.
+//!
+//! An incarnation that dies within its first two epochs is a *quick* crash;
+//! [`PARK_AFTER_QUICK_CRASHES`] consecutive quick crashes trip the circuit
+//! breaker and park the shard (counted in `Metrics::shards_parked`), after
+//! which its handle rejects all sends and the fleet runs on degraded. A
+//! fault-free run takes the exact same path as the pre-supervision code —
+//! one build, one `run_for`, identical metrics.
+//!
+//! Per-shard [`Metrics`] are returned in shard order (a restarted shard's
+//! entry is the merge of all its incarnations); merge them with
 //! [`Metrics::merge`] for the cross-shard aggregate.
 
+use crate::driver::{restart_backoff_ms, PARK_AFTER_QUICK_CRASHES};
 use crate::metrics::Metrics;
 use crate::serving::server::{EpochServer, ServeHandle};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
 
 /// A shard's ingest handle plus the model name its engine serves — the
 /// affinity key the TCP front-end's [`Router`](crate::serving::Router)
@@ -24,23 +54,28 @@ use crate::serving::server::{EpochServer, ServeHandle};
 pub struct ShardHandle {
     /// Shard index (position in the `serve_sharded` fleet).
     pub shard: usize,
-    /// `engine.meta.model_name` of this shard's deployment.
+    /// `engine.meta.model_name` of this shard's deployment (empty for a
+    /// shard that never came up — its handle rejects all sends).
     pub model: String,
     /// Ingest handle for submitting [`ServeRequest`](crate::serving::ServeRequest)s.
     pub handle: ServeHandle,
 }
 
-/// Run `shards` epoch servers for `epochs` epochs each, concurrently.
+/// Run `shards` supervised epoch servers for `epochs` epochs each,
+/// concurrently.
 ///
-/// `make_server` is called once per shard *on that shard's thread* (build
-/// the engine there; it never crosses threads). Once every shard is up,
-/// `drive` receives the shard handles (index = shard) on the calling thread
-/// — submit client traffic through them however you route it (round-robin,
-/// per-model affinity via [`ShardHandle::model`], …); the call returns when
-/// `drive` has returned and every shard finished its run.
+/// `make_server` is called *on the shard's thread* (build the engine there;
+/// it never crosses threads) — once at startup and again after every crash,
+/// so it must produce a fresh, independent server each call. Once every
+/// shard is up, `drive` receives the shard handles (index = shard) on the
+/// calling thread — submit client traffic through them however you route it
+/// (round-robin, per-model affinity via [`ShardHandle::model`], …); the
+/// call returns when `drive` has returned and every shard finished or
+/// parked.
 ///
-/// Panics in a shard thread propagate: a dead shard is a failed run, not a
-/// silent capacity loss.
+/// Panics in shard code do **not** propagate (module docs): a crashed shard
+/// restarts under backoff, a crash-looping shard parks, and either way the
+/// survivors keep serving.
 pub fn serve_sharded<F, C>(shards: usize, epochs: u64, make_server: F, drive: C) -> Vec<Metrics>
 where
     F: Fn(usize) -> EpochServer + Sync,
@@ -54,19 +89,7 @@ where
         let joins: Vec<_> = (0..shards)
             .map(|i| {
                 let handle_tx = handle_tx.clone();
-                scope.spawn(move || {
-                    let mut server = make(i);
-                    handle_tx
-                        .send(ShardHandle {
-                            shard: i,
-                            model: server.model_name().to_string(),
-                            handle: server.handle(),
-                        })
-                        .expect("collector outlives shard startup");
-                    drop(handle_tx);
-                    server.run_for(epochs);
-                    server.metrics().clone()
-                })
+                scope.spawn(move || supervise_shard(i, epochs, make, handle_tx))
             })
             .collect();
         drop(handle_tx);
@@ -77,13 +100,149 @@ where
         // Handles drop here; shards finish their remaining epochs and drain.
         drop(handles);
         for (i, join) in joins.into_iter().enumerate() {
-            per_shard[i] = Some(join.join().expect("shard server thread panicked"));
+            per_shard[i] = Some(match join.join() {
+                Ok(m) => m,
+                // Unreachable short of a panic in the supervisor's own
+                // bookkeeping (every incarnation panic is caught): record
+                // the shard as crashed-and-parked rather than aborting.
+                Err(_) => {
+                    let mut m = Metrics::new();
+                    m.shard_crashes = 1;
+                    m.shards_parked = 1;
+                    m
+                }
+            });
         }
     });
     per_shard
         .into_iter()
-        .map(|m| m.expect("every shard reports metrics"))
+        .map(|m| m.unwrap_or_else(Metrics::new))
         .collect()
+}
+
+/// One shard's supervisor loop (module docs): build-with-retry, announce
+/// the handle, then run incarnations under `catch_unwind` with backoff
+/// restarts until the epoch budget is spent or the circuit breaker parks
+/// the shard. Returns the merge of every incarnation's metrics.
+fn supervise_shard<F>(
+    i: usize,
+    epochs: u64,
+    make: &F,
+    handle_tx: std::sync::mpsc::Sender<ShardHandle>,
+) -> Metrics
+where
+    F: Fn(usize) -> EpochServer + Sync,
+{
+    let mut total = Metrics::new();
+    let mut quick = 0u32; // consecutive quick crashes (park counter)
+    let mut consecutive = 0u32; // crashes since startup (backoff index)
+
+    // First build, with the same retry/park budget as a run crash: the
+    // fleet must come up degraded, not abort, when one shard's engine
+    // cannot load.
+    let mut built = None;
+    while built.is_none() {
+        match catch_unwind(AssertUnwindSafe(|| make(i))) {
+            Ok(s) => {
+                if quick > 0 {
+                    total.shard_restarts += 1;
+                }
+                built = Some(s);
+            }
+            Err(_) => {
+                total.shard_crashes += 1;
+                quick += 1;
+                if quick >= PARK_AFTER_QUICK_CRASHES {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(restart_backoff_ms(consecutive)));
+                consecutive = consecutive.saturating_add(1);
+            }
+        }
+    }
+    let Some(mut server) = built else {
+        total.shards_parked += 1;
+        let _ = handle_tx.send(ShardHandle {
+            shard: i,
+            model: String::new(),
+            handle: ServeHandle::dead(),
+        });
+        return total;
+    };
+    let outward = server.handle();
+    let _ = handle_tx.send(ShardHandle {
+        shard: i,
+        model: server.model_name().to_string(),
+        handle: outward.clone(),
+    });
+    drop(handle_tx);
+
+    let duration = server.epoch_duration();
+    let t0 = Instant::now();
+    loop {
+        let born = Instant::now();
+        // Epochs are a wall-clock budget: a restarted incarnation serves
+        // what is left of the original span, it does not extend the run.
+        let remaining = epochs.saturating_sub((t0.elapsed().as_secs_f64() / duration) as u64);
+        let crashed = catch_unwind(AssertUnwindSafe(|| {
+            if remaining > 0 {
+                server.run_for(remaining);
+            }
+        }))
+        .is_err();
+        let mut m = server.metrics().clone();
+        if !crashed {
+            total.merge(&m);
+            return total;
+        }
+        // Close the dead incarnation's books: offered requests without an
+        // outcome are terminally lost (their reply channels drop with the
+        // server; the front-end answers those clients `shard_failed`), so
+        // the conservation subtraction moves exactly that count into
+        // `shard_failed` and `offered == completed + dropped + shard_failed`
+        // keeps holding through the crash.
+        m.shard_crashes += 1;
+        let accounted = m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed;
+        m.shard_failed += m.offered.saturating_sub(accounted);
+        total.merge(&m);
+        quick = if born.elapsed().as_secs_f64() < 2.0 * duration {
+            quick + 1
+        } else {
+            0
+        };
+        if quick >= PARK_AFTER_QUICK_CRASHES {
+            total.shards_parked += 1;
+            return total;
+        }
+        let rebuilt = loop {
+            std::thread::sleep(Duration::from_millis(restart_backoff_ms(consecutive)));
+            consecutive = consecutive.saturating_add(1);
+            match catch_unwind(AssertUnwindSafe(|| make(i))) {
+                Ok(s) => break Some(s),
+                Err(_) => {
+                    total.shard_crashes += 1;
+                    quick += 1;
+                    if quick >= PARK_AFTER_QUICK_CRASHES {
+                        break None;
+                    }
+                }
+            }
+        };
+        match rebuilt {
+            Some(s) => {
+                // Dropping the old incarnation here unblocks any client
+                // still waiting on it; the redirect points every handle
+                // clone (router included) at the fresh ingress channel.
+                server = s;
+                total.shard_restarts += 1;
+                outward.redirect(&server.handle());
+            }
+            None => {
+                total.shards_parked += 1;
+                return total;
+            }
+        }
+    }
 }
 
 /// Merge per-shard metrics in shard order (sums counters exactly, maxes the
@@ -100,10 +259,24 @@ pub fn merge_shard_metrics(per_shard: &[Metrics]) -> Metrics {
 #[cfg(all(test, not(feature = "pjrt")))]
 mod tests {
     use super::*;
-    use crate::coordinator::{Dftsp, EpochParams};
+    use crate::coordinator::{Dftsp, EpochParams, ProblemInstance, Schedule, Scheduler};
+    use crate::request::EpochRequest;
     use crate::runtime::host::test_engine;
     use crate::serving::server::{ServeOutcome, ServeRequest, ServerConfig};
+    use std::sync::atomic::{AtomicU32, Ordering};
     use std::sync::mpsc::channel;
+
+    fn test_config(seed: u64) -> ServerConfig {
+        ServerConfig {
+            epoch: EpochParams {
+                duration: 0.1,
+                t_u: 0.01,
+                t_d: 0.01,
+            },
+            seed,
+            ..Default::default()
+        }
+    }
 
     #[test]
     fn two_shards_serve_concurrently_with_disjoint_engines() {
@@ -112,16 +285,11 @@ mod tests {
             .unwrap()[0]
             .clone();
         let make = |i: usize| {
-            let cfg = ServerConfig {
-                epoch: EpochParams {
-                    duration: 0.1,
-                    t_u: 0.01,
-                    t_d: 0.01,
-                },
-                seed: 7 + i as u64,
-                ..Default::default()
-            };
-            EpochServer::new(test_engine(), cfg, Box::new(Dftsp::new()))
+            EpochServer::new(
+                test_engine(),
+                test_config(7 + i as u64),
+                Box::new(Dftsp::new()),
+            )
         };
         let responses = std::sync::Mutex::new(Vec::new());
         // Generous epoch budget: the requests are served in the first
@@ -170,7 +338,165 @@ mod tests {
             merged.completed_in_deadline + merged.completed_late + merged.dropped
         );
         assert_eq!(merged.completed_in_deadline, 2);
+        // Fault-free supervision is invisible in the counters.
+        assert_eq!(merged.shard_crashes, 0);
+        assert_eq!(merged.shard_restarts, 0);
+        assert_eq!(merged.shards_parked, 0);
         // Each shard saw exactly one request — the router split the load.
         assert!(per_shard.iter().all(|m| m.offered == 1));
+    }
+
+    /// A scheduler that panics the first time it sees a non-empty queue,
+    /// then (in later incarnations — `make_server` builds a fresh one whose
+    /// `armed` flag is pre-cleared) behaves like DFTSP. Drives a genuine
+    /// mid-`run_for` panic through the whole epoch loop.
+    struct PanicOnce {
+        armed: bool,
+        inner: Dftsp,
+    }
+    impl Scheduler for PanicOnce {
+        fn name(&self) -> &'static str {
+            "panic-once"
+        }
+        fn schedule(&mut self, inst: &ProblemInstance, c: &[EpochRequest]) -> Schedule {
+            if self.armed && !c.is_empty() {
+                panic!("test: injected scheduler panic");
+            }
+            self.inner.schedule(inst, c)
+        }
+    }
+
+    /// Tentpole: a shard that panics mid-epoch restarts with a fresh server
+    /// and keeps serving through the *same* outward handle; the lost
+    /// request is accounted as `shard_failed` and its client unblocks.
+    #[test]
+    fn crashed_shard_restarts_and_serves_through_the_same_handle() {
+        let builds = AtomicU32::new(0);
+        let make = |i: usize| {
+            let armed = i == 1 && builds.fetch_add(1, Ordering::SeqCst) == 0;
+            let scheduler: Box<dyn Scheduler> = Box::new(PanicOnce {
+                armed,
+                inner: Dftsp::new(),
+            });
+            EpochServer::new(test_engine(), test_config(11 + i as u64), scheduler)
+        };
+        let victim_reply = std::sync::Mutex::new(None);
+        let retry_reply = std::sync::Mutex::new(None);
+        // 60 epochs x 0.1 s: room for the crash, the backoff sleeps and the
+        // rebuilt incarnation to serve the retry on slow CI machines.
+        let per_shard = serve_sharded(2, 60, &make, |handles| {
+            let send = |req_tokens: Vec<i32>| {
+                let (rtx, rrx) = channel();
+                let sent = handles[1].handle.send(ServeRequest {
+                    prompt: req_tokens,
+                    output_tokens: 4,
+                    latency_req: 10.0,
+                    accuracy_req: 0.2,
+                    respond: rtx,
+                    stream: None,
+                });
+                (sent, rrx)
+            };
+            // First request: drained into the doomed incarnation, whose
+            // scheduler panics on it. The reply channel must *drop*, not
+            // hang — that is what the front-end turns into `shard_failed`.
+            let (sent, rrx) = send(vec![5, 6, 7]);
+            assert!(sent.is_ok(), "incarnation 0 accepts the request");
+            *victim_reply.lock().unwrap() = Some(rrx.recv());
+            // Retry until the rebuilt incarnation answers through the same
+            // outward handle (sends fail while the shard is down/backoff).
+            let deadline = std::time::Instant::now() + Duration::from_secs(20);
+            loop {
+                let (sent, rrx) = send(vec![5, 6, 7]);
+                if sent.is_ok() {
+                    if let Ok(resp) = rrx.recv() {
+                        *retry_reply.lock().unwrap() = Some(resp);
+                        break;
+                    }
+                }
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "restarted shard never answered"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        // The victim's reply channel dropped with the dead incarnation.
+        assert!(
+            victim_reply.lock().unwrap().take().expect("recv ran").is_err(),
+            "the lost request's client unblocks via channel drop"
+        );
+        let retry = retry_reply.lock().unwrap().take().expect("retry answered");
+        assert_eq!(retry.outcome, ServeOutcome::Completed);
+        // Shard 1 crashed exactly once, restarted exactly once, and the
+        // lost request is conserved as shard_failed.
+        let m1 = &per_shard[1];
+        assert_eq!(m1.shard_crashes, 1);
+        assert_eq!(m1.shard_restarts, 1);
+        assert_eq!(m1.shard_failed, 1);
+        assert_eq!(m1.shards_parked, 0);
+        assert!(builds.load(Ordering::SeqCst) >= 2, "make ran for the restart");
+        // Shard 0 never noticed.
+        assert_eq!(per_shard[0].shard_crashes, 0);
+        let merged = merge_shard_metrics(&per_shard);
+        assert_eq!(
+            merged.offered,
+            merged.completed_in_deadline
+                + merged.completed_late
+                + merged.dropped
+                + merged.shard_failed,
+            "conservation holds through the crash"
+        );
+    }
+
+    /// Circuit breaker: a shard whose builds panic forever parks after the
+    /// shared threshold and hands the router a dead handle; the fleet comes
+    /// up degraded instead of aborting.
+    #[test]
+    fn crash_looping_build_parks_the_shard() {
+        let make = |i: usize| {
+            if i == 1 {
+                panic!("test: shard 1 engine cannot load");
+            }
+            EpochServer::new(test_engine(), test_config(23), Box::new(Dftsp::new()))
+        };
+        let per_shard = serve_sharded(2, 10, &make, |handles| {
+            assert_eq!(handles.len(), 2, "parked shard still announces itself");
+            assert!(handles[1].model.is_empty());
+            // Sends to the parked shard fail cleanly.
+            let (rtx, _rrx) = channel();
+            assert!(handles[1]
+                .handle
+                .send(ServeRequest {
+                    prompt: vec![1],
+                    output_tokens: 2,
+                    latency_req: 10.0,
+                    accuracy_req: 0.0,
+                    respond: rtx,
+                    stream: None,
+                })
+                .is_err());
+            // The healthy shard still serves.
+            let (rtx, rrx) = channel();
+            handles[0]
+                .handle
+                .send(ServeRequest {
+                    prompt: vec![5, 6, 7],
+                    output_tokens: 4,
+                    latency_req: 10.0,
+                    accuracy_req: 0.2,
+                    respond: rtx,
+                    stream: None,
+                })
+                .expect("healthy shard accepts work");
+            let resp = rrx.recv().expect("healthy shard answers");
+            assert_eq!(resp.outcome, ServeOutcome::Completed);
+        });
+        let m1 = &per_shard[1];
+        assert_eq!(m1.shards_parked, 1);
+        assert_eq!(m1.shard_crashes, PARK_AFTER_QUICK_CRASHES as u64);
+        assert_eq!(m1.shard_restarts, 0);
+        assert_eq!(m1.offered, 0);
+        assert_eq!(per_shard[0].shards_parked, 0);
     }
 }

@@ -15,8 +15,9 @@
 use crate::cluster::ClusterSpec;
 use crate::coordinator::{Deployment, EpochParams, PartitionPolicy, Scheduler, SchedulerConfig};
 use crate::driver::{
-    run_epochs, AnalyticBackend, BatchingMode, ContinuousBackend, DriverPolicy, EpochDriver,
-    InstanceTemplate, SPadPolicy, ShardedConfig, ShardedDriver, SimClock, StalePolicy,
+    run_epochs, AnalyticBackend, BatchingMode, ChaosBackend, ChaosConfig, ContinuousBackend,
+    DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate, SPadPolicy, ShardedConfig,
+    ShardedDriver, SimClock, StalePolicy,
 };
 use crate::metrics::Metrics;
 use crate::model::{CostModel, LlmSpec};
@@ -55,6 +56,13 @@ pub struct SimConfig {
     /// (`[cluster] partition_policy`, CLI `--partition`). Ignored at
     /// `shards = 1`.
     pub partition: PartitionPolicy,
+    /// Deterministic fault injection (`[chaos]` TOML, `--chaos-*` CLI).
+    /// Disabled by default; when any fault probability is non-zero the CLI
+    /// routes the run through [`run_chaos`] — the supervised sharded driver
+    /// with [`ChaosBackend`]-wrapped backends. The chaos stream is seeded
+    /// independently of the run seed, so enabling it never perturbs
+    /// workload or channel randomness.
+    pub chaos: ChaosConfig,
 }
 
 impl SimConfig {
@@ -75,6 +83,7 @@ impl SimConfig {
             scheduler: SchedulerConfig::default(),
             shards: 1,
             partition: PartitionPolicy::LoadProportional,
+            chaos: ChaosConfig::default(),
         }
     }
 }
@@ -241,51 +250,123 @@ pub fn run_sharded(
 ) -> Metrics {
     let shards = config.shards.max(1);
     let scfg = sharded_config_for(config, shards);
-    let duration = config.epoch.duration;
-    let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
-    let affinity = |id: u64| (id % shards as u64) as usize;
     match config.batching {
         BatchingMode::Epoch => {
             let mut sd: ShardedDriver<(), AnalyticBackend> =
                 ShardedDriver::new(scfg, |_| AnalyticBackend, &mut make_scheduler)
                     .expect("shards <= GPUs (validated by the scenario loader)");
-            // Fig. 2 aggregation: epoch e's window is offered at e+1.
-            let mut window_start = 0.0;
-            for e in 0..config.epochs as u64 {
-                let now = e as f64 * duration;
-                for r in gen.arrivals_between(window_start, now) {
-                    let aff = affinity(r.id);
-                    sd.offer(r, (), aff);
-                }
-                window_start = now;
-                sd.step_epoch(now);
-            }
-            if config.epochs > 0 {
-                let last_boundary = (config.epochs - 1) as f64 * duration;
-                for r in gen.arrivals_between(window_start, last_boundary + duration) {
-                    let aff = affinity(r.id);
-                    sd.offer(r, (), aff);
-                }
-            }
-            sd.finish(config.epochs as f64 * duration);
-            sd.merged_metrics()
+            drive_sharded_epoch_mode(config, &mut sd)
         }
         BatchingMode::Continuous => {
             let mut sd: ShardedDriver<(), ContinuousBackend> =
                 ShardedDriver::new(scfg, ContinuousBackend::new, &mut make_scheduler)
                     .expect("shards <= GPUs (validated by the scenario loader)");
-            for e in 0..config.epochs as u64 {
-                let now = e as f64 * duration;
-                for r in gen.arrivals_between(now, now + duration) {
-                    let aff = affinity(r.id);
-                    sd.offer(r, (), aff);
-                }
-                sd.step_epoch(now);
-            }
-            sd.finish(config.epochs as f64 * duration);
-            sd.merged_metrics()
+            drive_sharded_continuous(config, &mut sd)
         }
     }
+}
+
+/// Run one scenario through the *supervised* sharded dispatch layer with
+/// [`ChaosBackend`]-wrapped backends injecting `config.chaos`'s fault mix.
+/// Intake is byte-for-byte [`run_sharded`]'s (the shared drive helpers), so
+/// every delta against a chaos-free run is attributable to injected faults
+/// and the supervisor's response — and two runs with the same seeds produce
+/// the same fault schedule and the same metrics (wall-dependent
+/// `epoch_stalls` excepted when stall faults are enabled).
+///
+/// The factories take `'static` ownership because the supervisor keeps them
+/// for crash-time rebuilds (fresh backend and scheduler, next chaos
+/// generation).
+pub fn run_chaos(
+    config: &SimConfig,
+    make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
+) -> Metrics {
+    let shards = config.shards.max(1);
+    let scfg = sharded_config_for(config, shards);
+    let chaos = config.chaos;
+    match config.batching {
+        BatchingMode::Epoch => {
+            let mut sd: ShardedDriver<(), ChaosBackend<AnalyticBackend>> =
+                ShardedDriver::with_supervision(
+                    scfg,
+                    move |_t, shard, generation| {
+                        ChaosBackend::new(AnalyticBackend, chaos, shard as u64, generation)
+                    },
+                    make_scheduler,
+                )
+                .expect("shards <= GPUs (validated by the scenario loader)");
+            drive_sharded_epoch_mode(config, &mut sd)
+        }
+        BatchingMode::Continuous => {
+            let mut sd: ShardedDriver<(), ChaosBackend<ContinuousBackend>> =
+                ShardedDriver::with_supervision(
+                    scfg,
+                    move |t, shard, generation| {
+                        ChaosBackend::new(ContinuousBackend::new(t), chaos, shard as u64, generation)
+                    },
+                    make_scheduler,
+                )
+                .expect("shards <= GPUs (validated by the scenario loader)");
+            drive_sharded_continuous(config, &mut sd)
+        }
+    }
+}
+
+/// Fig. 2 intake over a sharded driver: epoch e's arrival window is offered
+/// at the boundary of e+1 with a deployment affinity of `id % shards`.
+/// Shared verbatim by [`run_sharded`] and [`run_chaos`], so the two paths
+/// cannot drift.
+fn drive_sharded_epoch_mode<B>(config: &SimConfig, sd: &mut ShardedDriver<(), B>) -> Metrics
+where
+    B: ExecutionBackend<Payload = ()> + Send,
+{
+    let shards = config.shards.max(1);
+    let duration = config.epoch.duration;
+    let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
+    let affinity = |id: u64| (id % shards as u64) as usize;
+    // Fig. 2 aggregation: epoch e's window is offered at e+1.
+    let mut window_start = 0.0;
+    for e in 0..config.epochs as u64 {
+        let now = e as f64 * duration;
+        for r in gen.arrivals_between(window_start, now) {
+            let aff = affinity(r.id);
+            sd.offer(r, (), aff);
+        }
+        window_start = now;
+        sd.step_epoch(now);
+    }
+    if config.epochs > 0 {
+        let last_boundary = (config.epochs - 1) as f64 * duration;
+        for r in gen.arrivals_between(window_start, last_boundary + duration) {
+            let aff = affinity(r.id);
+            sd.offer(r, (), aff);
+        }
+    }
+    sd.finish(config.epochs as f64 * duration);
+    sd.merged_metrics()
+}
+
+/// Continuous-mode intake over a sharded driver (window offered at its own
+/// start; see [`run_continuous`]'s modeling note). Shared by [`run_sharded`]
+/// and [`run_chaos`].
+fn drive_sharded_continuous<B>(config: &SimConfig, sd: &mut ShardedDriver<(), B>) -> Metrics
+where
+    B: ExecutionBackend<Payload = ()> + Send,
+{
+    let shards = config.shards.max(1);
+    let duration = config.epoch.duration;
+    let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
+    let affinity = |id: u64| (id % shards as u64) as usize;
+    for e in 0..config.epochs as u64 {
+        let now = e as f64 * duration;
+        for r in gen.arrivals_between(now, now + duration) {
+            let aff = affinity(r.id);
+            sd.offer(r, (), aff);
+        }
+        sd.step_epoch(now);
+    }
+    sd.finish(config.epochs as f64 * duration);
+    sd.merged_metrics()
 }
 
 /// Convenience: run the same scenario under several schedulers (fresh
@@ -468,6 +549,53 @@ mod tests {
             let solo = run(&cfg, &mut Dftsp::new());
             assert_eq!(solo.offered, a.offered, "{batching:?}: identical arrivals");
         }
+    }
+
+    #[test]
+    fn chaos_disabled_supervised_run_matches_run_sharded_bit_exactly() {
+        // Acceptance gate: with every fault probability at zero, the
+        // supervised chaos path (catch_unwind, health bookkeeping,
+        // passthrough ChaosBackend) is bit-identical to the plain sharded
+        // run — at shards = 1 this chains with
+        // `sharded_one_shard_matches_unsharded_bit_exactly` to pin the full
+        // tower sim == sharded == supervised.
+        for shards in [1usize, 3] {
+            let mut cfg = quick_config(35.0, 8);
+            cfg.shards = shards;
+            let plain = run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+            let chaos = run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+            assert_eq!(plain, chaos, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn seeded_chaos_run_is_reproducible_and_conserves() {
+        let mut cfg = quick_config(40.0, 12);
+        cfg.shards = 3;
+        // Panic/error/kv-fail only: stall faults are wall-dependent
+        // (epoch_stalls), which would break the bit-equality assertion.
+        cfg.chaos = crate::driver::ChaosConfig {
+            seed: 77,
+            panic_prob: 0.2,
+            error_prob: 0.15,
+            kv_fail_prob: 0.15,
+            ..Default::default()
+        };
+        let a = run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        let b = run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(a, b, "same seeds, same fault schedule, same metrics");
+        assert!(a.shard_crashes > 0, "the fault mix actually fired");
+        assert_eq!(
+            a.offered,
+            a.completed_in_deadline + a.completed_late + a.dropped + a.shard_failed,
+            "conservation holds through injected crashes"
+        );
+        // A different chaos seed yields a different schedule without
+        // touching the workload.
+        let mut cfg2 = cfg.clone();
+        cfg2.chaos.seed = 78;
+        let c = run_chaos(&cfg2, |_| Box::new(Dftsp::new()));
+        assert_eq!(a.offered, c.offered, "workload stream untouched by chaos seed");
     }
 
     #[test]

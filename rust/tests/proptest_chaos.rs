@@ -1,0 +1,164 @@
+//! Property tests of the chaos-injection harness and crash conservation.
+//!
+//! Seeded-case harness (no proptest crate offline): `PROPTEST_CASES`
+//! controls the case count (CI pins it to 64); failures report the
+//! offending seed for replay.
+
+use edgellm::driver::{BatchingMode, ChaosConfig};
+use edgellm::coordinator::Dftsp;
+use edgellm::sim::{self, SimConfig};
+use edgellm::util::rng::Rng;
+use edgellm::workload::WorkloadParams;
+
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Injected panics are caught by the shard supervisor, but the default
+/// panic hook still prints each one — suppress the expected spew so a
+/// 64-case run does not bury real failures in noise.
+fn silence_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let injected = payload
+                .downcast_ref::<&str>()
+                .map(|m| m.contains("chaos: injected"))
+                .or_else(|| {
+                    payload
+                        .downcast_ref::<String>()
+                        .map(|m| m.contains("chaos: injected"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+    });
+}
+
+fn random_scenario(rng: &mut Rng, seed: u64) -> SimConfig {
+    SimConfig {
+        workload: WorkloadParams {
+            arrival_rate: rng.uniform(5.0, 60.0),
+            ..Default::default()
+        },
+        epochs: rng.int_range(2, 7) as usize,
+        seed,
+        batching: if rng.below(2) == 0 {
+            BatchingMode::Epoch
+        } else {
+            BatchingMode::Continuous
+        },
+        shards: rng.int_range(1, 4) as usize,
+        ..SimConfig::paper_default()
+    }
+}
+
+/// Stall-free fault mix: stalls burn real wall time and only move the
+/// wall-dependent counters `Metrics` equality already ignores, so the
+/// properties here exercise the schedule-visible faults.
+fn random_chaos(rng: &mut Rng, seed: u64) -> ChaosConfig {
+    ChaosConfig {
+        seed: seed ^ 0xC4A05,
+        panic_prob: rng.uniform(0.0, 0.35),
+        error_prob: rng.uniform(0.0, 0.3),
+        kv_fail_prob: rng.uniform(0.0, 0.3),
+        ..ChaosConfig::default()
+    }
+}
+
+/// PROPERTY: request conservation survives injected crashes. Across random
+/// scenarios and fault mixes, every offered request ends in exactly one
+/// terminal bucket — `offered == completed_in_deadline + completed_late +
+/// dropped + shard_failed` — and the fault schedule never invents or
+/// duplicates work: `offered` matches the fault-free run bit-exactly
+/// (intake is chaos-independent) and redispatched requests are not counted
+/// twice.
+#[test]
+fn prop_crash_conservation_under_random_fault_mixes() {
+    silence_injected_panics();
+    for seed in 0..cases(64).min(32) {
+        let mut rng = Rng::new(0xC4A05_0 + seed);
+        let cfg = SimConfig {
+            chaos: random_chaos(&mut rng, seed),
+            ..random_scenario(&mut rng, seed)
+        };
+        let clean = SimConfig {
+            chaos: ChaosConfig::default(),
+            ..cfg.clone()
+        };
+        let m = sim::run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        let baseline = sim::run_sharded(&clean, |_| Box::new(Dftsp::new()));
+        assert_eq!(
+            m.offered, baseline.offered,
+            "seed {seed}: intake must be chaos-independent"
+        );
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped + m.shard_failed,
+            "seed {seed}: conservation must close through {} crashes",
+            m.shard_crashes
+        );
+        // Crashes without restarts can only come from parking; restarts
+        // never exceed crashes.
+        assert!(
+            m.shard_restarts <= m.shard_crashes,
+            "seed {seed}: restarts {} > crashes {}",
+            m.shard_restarts,
+            m.shard_crashes
+        );
+        if m.shard_failed > 0 {
+            assert!(
+                m.shard_crashes > 0,
+                "seed {seed}: shard_failed implies at least one crash"
+            );
+        }
+    }
+}
+
+/// PROPERTY: the fault schedule is a pure function of the chaos seed — the
+/// same scenario run twice is bit-identical, crashes included.
+#[test]
+fn prop_seeded_chaos_is_bit_reproducible() {
+    silence_injected_panics();
+    for seed in 0..cases(64).min(16) {
+        let mut rng = Rng::new(0xC4A05_1 + seed);
+        let cfg = SimConfig {
+            chaos: random_chaos(&mut rng, seed),
+            ..random_scenario(&mut rng, seed)
+        };
+        let a = sim::run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        let b = sim::run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(
+            a, b,
+            "seed {seed}: same chaos seed must replay the same run ({} crashes)",
+            a.shard_crashes
+        );
+    }
+}
+
+/// PROPERTY: chaos disabled is free — the supervised path with an all-zero
+/// fault mix is bit-identical to the unsupervised sharded run on every
+/// random scenario and both batching modes.
+#[test]
+fn prop_disabled_chaos_is_bit_identical_to_unsupervised() {
+    for seed in 0..cases(64).min(24) {
+        let mut rng = Rng::new(0xC4A05_2 + seed);
+        let cfg = random_scenario(&mut rng, seed);
+        assert!(!cfg.chaos.enabled(), "paper default has chaos off");
+        let supervised = sim::run_chaos(&cfg, |_| Box::new(Dftsp::new()));
+        let plain = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(
+            supervised, plain,
+            "seed {seed} ({:?}): disabled chaos must cost nothing",
+            cfg.batching
+        );
+    }
+}

@@ -170,6 +170,35 @@ class MultiFileGate(unittest.TestCase):
         self.assertEqual(
             bench_gate.main(["--tol", "10.0", "--gate", base, bad, keys]), 1)
 
+    def test_two_io_model_rowsets_in_one_file_gate_independently(self):
+        # BENCH_net.json carries one row per io model (net/quick and
+        # net/quick-evented) in the SAME file, regenerated by two loadtest
+        # runs that merge by scenario. One gate invocation must hold both
+        # rows to the zero-invariants: a regression in either row fails,
+        # and a clean pair passes.
+        def rows(threaded_gap, evented_gap):
+            def row(scenario, io_model, gap):
+                return {"scenario": scenario, "io_model": io_model,
+                        "sent": 200, "bad_requests": 0,
+                        "accounting_gap": gap, "leaked_connections": 0,
+                        "accept_loop_deaths": 0, "peak_threads": None,
+                        "wall_p999_s": None}
+            return [row("net/quick", "threaded", threaded_gap),
+                    row("net/quick-evented", "evented", evented_gap)]
+
+        keys = ("sent,bad_requests,accounting_gap,leaked_connections,"
+                "accept_loop_deaths")
+        base = write_baseline(self.dir, "nb.json", rows(0, 0))
+        clean = write_baseline(self.dir, "nf_ok.json", rows(0, 0))
+        evented_bad = write_baseline(self.dir, "nf_ev.json", rows(0, 2))
+        threaded_bad = write_baseline(self.dir, "nf_th.json", rows(1, 0))
+        self.assertEqual(
+            bench_gate.main(["--gate", base, clean, keys]), 0)
+        self.assertEqual(
+            bench_gate.main(["--gate", base, evented_bad, keys]), 1)
+        self.assertEqual(
+            bench_gate.main(["--gate", base, threaded_bad, keys]), 1)
+
     def test_no_inputs_is_a_usage_error(self):
         self.assertEqual(bench_gate.main([]), 2)
 

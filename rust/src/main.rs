@@ -38,6 +38,7 @@ fn main() {
                  [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
                  [--workers N] [--shards N] [--partition equal|load-proportional] [--stats] \
                  [--listen ADDR] [--pending-cap N] [--clients N] [--quick] [--json] \
+                 [--io-model threaded|evented] [--event-threads N] [--max-conns-per-peer N] \
                  [--chaos] [--chaos-seed S] [--chaos-panic P] [--chaos-stall P] \
                  [--chaos-stall-ms MS] [--chaos-error P] [--chaos-kv-fail P]"
             );
@@ -113,9 +114,13 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
 }
 
 /// Front-end knobs shared by `serve --listen` and `loadtest`.
-fn net_config(args: &Args) -> edgellm::serving::NetConfig {
+fn net_config(args: &Args) -> Result<edgellm::serving::NetConfig, String> {
     let base = edgellm::serving::NetConfig::default();
-    edgellm::serving::NetConfig {
+    let io_model = match args.get("io-model") {
+        Some(s) => edgellm::serving::IoModel::parse(s)?,
+        None => base.io_model,
+    };
+    Ok(edgellm::serving::NetConfig {
         max_output_tokens: args.u64_or("max-output-tokens", base.max_output_tokens as u64) as u32,
         pending_cap: args.usize_or("pending-cap", base.pending_cap),
         idle_timeout: std::time::Duration::from_secs_f64(
@@ -125,7 +130,10 @@ fn net_config(args: &Args) -> edgellm::serving::NetConfig {
             args.f64_or("reply-timeout-s", base.reply_timeout.as_secs_f64()),
         ),
         max_line_bytes: base.max_line_bytes,
-    }
+        io_model,
+        event_threads: args.usize_or("event-threads", base.event_threads),
+        max_conns_per_peer: args.usize_or("max-conns-per-peer", base.max_conns_per_peer),
+    })
 }
 
 fn make_scheduler(name: &str, cfg: SchedulerConfig) -> Result<Box<dyn Scheduler + Send>, String> {
@@ -298,6 +306,13 @@ fn cmd_serve(args: &Args) -> i32 {
     let clients = args.u64_or("clients", 4);
     let rate = args.f64_or("rate", 4.0);
     let seed = args.u64_or("seed", 7);
+    let net_cfg = match net_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
 
     let engine = match Engine::load(Path::new(&artifacts), &quant_label) {
         Ok(e) => e,
@@ -347,7 +362,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let horizon = epochs as f64 * epoch_s;
         let base_cfg = server_cfg.clone();
         let artifacts_dir = artifacts.clone();
-        let net_cfg = net_config(args);
+        let net_cfg = net_cfg.clone();
         // Net counters escape the drive closure so they merge into the
         // cross-shard report below.
         let mut net_metrics: Option<edgellm::metrics::Metrics> = None;
@@ -381,9 +396,10 @@ fn cmd_serve(args: &Args) -> i32 {
                     match edgellm::serving::spawn_listener(addr, router, bpe, net_cfg.clone()) {
                         Ok(l) => {
                             println!(
-                                "listening on {} ({} shards, model-name routing)",
+                                "listening on {} ({} shards, model-name routing, io model {})",
                                 l.addr(),
-                                handles.len()
+                                handles.len(),
+                                l.io_model()
                             );
                             Some(l)
                         }
@@ -443,14 +459,15 @@ fn cmd_serve(args: &Args) -> i32 {
     // admission gate and typed replies) as `--shards N`.
     let listener = args.get("listen").and_then(|addr| {
         let bpe = edgellm::tokenizer::Bpe::load(&Path::new(&artifacts).join("bpe.json")).ok();
-        let net_cfg = net_config(args);
+        let net_cfg = net_cfg.clone();
         let router =
             edgellm::serving::Router::single(server.model_name(), handle.clone(), net_cfg.pending_cap);
         match edgellm::serving::spawn_listener(addr, router, bpe, net_cfg) {
             Ok(l) => {
                 println!(
-                    "listening on {} (JSON lines; text prompts via BPE)",
-                    l.addr()
+                    "listening on {} (JSON lines; text prompts via BPE; io model {})",
+                    l.addr(),
+                    l.io_model()
                 );
                 Some(l)
             }
@@ -579,6 +596,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
     use edgellm::coordinator::EpochParams;
     use edgellm::quant::Precision;
     use edgellm::runtime::SyntheticSpec;
+    use edgellm::serving::IoModel;
     use edgellm::util::json::Json;
     use edgellm::util::stats::percentile;
     use std::io::{BufRead, BufReader, Write};
@@ -593,6 +611,33 @@ fn cmd_loadtest(args: &Args) -> i32 {
     let epochs = args.u64_or("epochs", if quick { 60 } else { 300 });
     let submit_threads = args.usize_or("client-threads", 32).clamp(1, clients.max(1));
     let write_json = args.flag("json");
+    let io_model = match args.get("io-model").map(IoModel::parse) {
+        Some(Ok(m)) => m,
+        Some(Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+        None => IoModel::Threaded,
+    };
+
+    /// Numeric field (`Threads:`, `VmHWM:`) from `/proc/self/status`.
+    /// Linux-only introspection, `None` elsewhere; the columns it feeds are
+    /// informational, never gated.
+    fn proc_status_field(key: &str) -> Option<u64> {
+        #[cfg(target_os = "linux")]
+        {
+            std::fs::read_to_string("/proc/self/status")
+                .ok()?
+                .lines()
+                .find_map(|line| line.strip_prefix(key))
+                .and_then(|rest| rest.split_whitespace().next()?.parse().ok())
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = key;
+            None
+        }
+    }
     // --chaos: panic-inject the shard schedulers so the run crosses real
     // crash/restart cycles, then hold the same accounting invariants the
     // clean run holds. The serving stack has no backend seam to wrap (the
@@ -606,6 +651,9 @@ fn cmd_loadtest(args: &Args) -> i32 {
     }
     let net_cfg = edgellm::serving::NetConfig {
         pending_cap,
+        io_model,
+        event_threads: args.usize_or("event-threads", 0),
+        max_conns_per_peer: args.usize_or("max-conns-per-peer", 0),
         ..Default::default()
     };
     // Distinct model names across shards so the router's affinity path is
@@ -613,7 +661,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
     let model_variants = shards.min(2);
     println!(
         "loadtest: {clients} connections over {submit_threads} threads → {shards} shards \
-         (cap {pending_cap}/shard, {epochs} epochs)"
+         (cap {pending_cap}/shard, {epochs} epochs, io model {io_model})"
     );
 
     /// DFTSP that panics pseudo-randomly at epoch boundaries. Seeded per
@@ -695,7 +743,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
             // All submit threads connect + write, meet at the barrier (every
             // accepted connection is now simultaneously open), then read.
             let barrier = Barrier::new(submit_threads + 1);
-            let tally = std::thread::scope(|scope| {
+            let (tally, peak_threads) = std::thread::scope(|scope| {
                 let joins: Vec<_> = (0..submit_threads)
                     .map(|t| {
                         let barrier = &barrier;
@@ -771,6 +819,10 @@ fn cmd_loadtest(args: &Args) -> i32 {
                 // Every write landed and nothing has been read back yet:
                 // the fleet of connections is concurrently open right now.
                 let peak_open = listener.open_connections();
+                // Thread count at the same instant: the threaded model pays
+                // one handler thread per open connection here; the evented
+                // model stays at event-threads + pump + shards + harness.
+                let peak_threads = proc_status_field("Threads:");
                 let mut tally = LoadTally::default();
                 for j in joins {
                     tally.absorb(j.join().expect("submit thread"));
@@ -779,7 +831,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
                     "peak open connections at barrier: {peak_open} (accepted {})",
                     listener.accepted()
                 );
-                tally
+                (tally, peak_threads)
             });
             // Liveness probe: the accept loop must still answer after the
             // storm (the pre-hardening loop died on its first accept error).
@@ -801,22 +853,28 @@ fn cmd_loadtest(args: &Args) -> i32 {
             let leaked_permits: usize = listener.gate_depths().iter().sum();
             let net = listener.net_metrics();
             listener.shutdown();
-            outcome = Some((tally, probe_alive, leaked, leaked_permits, net));
+            outcome = Some((tally, peak_threads, probe_alive, leaked, leaked_permits, net));
         },
     );
-    let (tally, probe_alive, leaked, leaked_permits, net) = outcome.expect("drive ran");
+    let (tally, peak_threads, probe_alive, leaked, leaked_permits, net) =
+        outcome.expect("drive ran");
+    // VmHWM is the process-lifetime RSS peak, so sampling after shutdown
+    // still captures the storm; dominated by per-thread stacks under the
+    // threaded model.
+    let vm_hwm_kb = proc_status_field("VmHWM:");
     // Every attempted connection must resolve to exactly one reply or one
     // IO error — a nonzero gap means a reply was lost in the stack.
     let accounting_gap = clients as i64 - tally.replies() as i64 - tally.io_errors as i64;
     let accept_loop_deaths = if probe_alive { 0 } else { 1 };
     let shed_rate = tally.shed as f64 / tally.sent.max(1) as f64;
-    let (p50, p95, p99) = if tally.latencies.is_empty() {
-        (f64::NAN, f64::NAN, f64::NAN)
+    let (p50, p95, p99, p999) = if tally.latencies.is_empty() {
+        (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
     } else {
         (
             percentile(&tally.latencies, 50.0),
             percentile(&tally.latencies, 95.0),
             percentile(&tally.latencies, 99.0),
+            percentile(&tally.latencies, 99.9),
         )
     };
     let mut t = Table::new(&["metric", "value"]);
@@ -830,11 +888,20 @@ fn cmd_loadtest(args: &Args) -> i32 {
     t.row(&["wire p50 (s)".into(), format!("{p50:.4}")]);
     t.row(&["wire p95 (s)".into(), format!("{p95:.4}")]);
     t.row(&["wire p99 (s)".into(), format!("{p99:.4}")]);
+    t.row(&["wire p99.9 (s)".into(), format!("{p999:.4}")]);
     t.row(&["bad requests (server)".into(), net.bad_requests.to_string()]);
     t.row(&["accounting gap".into(), accounting_gap.to_string()]);
     t.row(&["leaked connections".into(), leaked.to_string()]);
     t.row(&["leaked permits".into(), leaked_permits.to_string()]);
     t.row(&["accept loop deaths".into(), accept_loop_deaths.to_string()]);
+    t.row(&[
+        "peak threads (barrier)".into(),
+        peak_threads.map_or_else(|| "n/a".to_string(), |n| n.to_string()),
+    ]);
+    t.row(&[
+        "peak RSS VmHWM (kB)".into(),
+        vm_hwm_kb.map_or_else(|| "n/a".to_string(), |n| n.to_string()),
+    ]);
     let merged = edgellm::serving::merge_shard_metrics(&per_shard);
     if chaos_mode {
         t.row(&["shard crashes".into(), merged.shard_crashes.to_string()]);
@@ -856,17 +923,32 @@ fn cmd_loadtest(args: &Args) -> i32 {
         net.wire_latency.count(),
         net.wire_latency.quantile(0.99),
     );
+    println!(
+        "io model {io_model}: peak threads {} at barrier, VmHWM {} kB \
+         (evented bound: event-threads + pump + shards + harness)",
+        peak_threads.map_or_else(|| "n/a".to_string(), |n| n.to_string()),
+        vm_hwm_kb.map_or_else(|| "n/a".to_string(), |n| n.to_string()),
+    );
 
     if write_json {
         let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
-        let scenario = match (chaos_mode, quick) {
+        let count_or_null = |v: Option<u64>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        let mut scenario = match (chaos_mode, quick) {
             (true, true) => "chaos/quick",
             (true, false) => "chaos/full",
             (false, true) => "net/quick",
             (false, false) => "net/full",
-        };
+        }
+        .to_string();
+        if io_model == IoModel::Evented {
+            scenario.push_str("-evented");
+        }
         let mut fields = vec![
-            ("scenario", Json::Str(scenario.to_string())),
+            ("scenario", Json::Str(scenario.clone())),
+            ("io_model", Json::Str(io_model.as_str().to_string())),
             ("sent", Json::Num(tally.sent as f64)),
             ("bad_requests", Json::Num(net.bad_requests as f64)),
             ("accounting_gap", Json::Num(accounting_gap as f64)),
@@ -893,6 +975,9 @@ fn cmd_loadtest(args: &Args) -> i32 {
             ("wall_p50_s", num_or_null(p50)),
             ("wall_p95_s", num_or_null(p95)),
             ("wall_p99_s", num_or_null(p99)),
+            ("wall_p999_s", num_or_null(p999)),
+            ("peak_threads", count_or_null(peak_threads)),
+            ("vm_hwm_kb", count_or_null(vm_hwm_kb)),
         ]);
         let row = Json::obj(fields);
         let bench_name = if chaos_mode {
@@ -901,19 +986,37 @@ fn cmd_loadtest(args: &Args) -> i32 {
             "BENCH_net.json"
         };
         let provenance = if chaos_mode {
-            "cargo run --release -- loadtest --chaos --quick --json"
+            "cargo run --release -- loadtest --chaos --quick --json (one row per scenario; \
+             --io-model evented adds the -evented rows)"
         } else {
-            "cargo run --release -- loadtest --quick --json"
+            "cargo run --release -- loadtest --quick --json (one row per scenario; \
+             --io-model evented adds the -evented rows)"
         };
-        let doc = Json::obj(vec![
-            ("provenance", Json::Str(provenance.to_string())),
-            ("rows", Json::Arr(vec![row])),
-        ]);
         let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("..")
             .join(bench_name);
+        // Merge by scenario rather than overwrite: CI regenerates this file
+        // once per io model, and the second run must not clobber the first
+        // run's row (the bench gate compares every baseline scenario).
+        let mut rows: Vec<Json> = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(text.trim()).ok())
+            .and_then(|doc| doc.get("rows").and_then(|r| r.as_arr().map(<[Json]>::to_vec)))
+            .unwrap_or_default();
+        if let Some(slot) = rows
+            .iter_mut()
+            .find(|r| r.get("scenario").and_then(Json::as_str) == Some(scenario.as_str()))
+        {
+            *slot = row;
+        } else {
+            rows.push(row);
+        }
+        let doc = Json::obj(vec![
+            ("provenance", Json::Str(provenance.to_string())),
+            ("rows", Json::Arr(rows)),
+        ]);
         match std::fs::write(&path, format!("{doc}\n")) {
-            Ok(()) => println!("wrote {}", path.display()),
+            Ok(()) => println!("wrote {} ({scenario} row merged)", path.display()),
             Err(e) => {
                 eprintln!("write {bench_name} failed: {e}");
                 return 1;

@@ -58,6 +58,11 @@ pub struct Metrics {
     /// (already `offered`; the shed also records a `Dropped` outcome, so
     /// conservation closes either way).
     pub shed_overloaded: u64,
+    /// Connections rejected at accept with a typed `per_peer_limit` reply
+    /// because their remote IP was already at `--max-conns-per-peer`.
+    /// Counted per connection (the request line is never read), unlike
+    /// `shed_overloaded`, which counts requests.
+    pub shed_per_peer: u64,
     /// Malformed wire requests answered with a typed `bad_request` reply.
     pub bad_requests: u64,
     /// Transient accept-loop errors survived by backoff-and-retry (the
@@ -179,6 +184,7 @@ impl Metrics {
         self.admission_latency.merge(&other.admission_latency);
         self.inflight_occupancy.merge(&other.inflight_occupancy);
         self.shed_overloaded += other.shed_overloaded;
+        self.shed_per_peer += other.shed_per_peer;
         self.bad_requests += other.bad_requests;
         self.accept_errors += other.accept_errors;
         self.net_timeouts += other.net_timeouts;
@@ -238,8 +244,10 @@ impl Metrics {
             ("latency_p50", num(finite(self.latency.quantile(0.50)))),
             ("latency_p95", num(finite(self.latency.quantile(0.95)))),
             ("latency_p99", num(finite(self.latency.quantile(0.99)))),
+            ("latency_p999", num(finite(self.latency.quantile(0.999)))),
             ("latency_max", num(finite(self.latency.max()))),
             ("shed_overloaded", num(self.shed_overloaded as f64)),
+            ("shed_per_peer", num(self.shed_per_peer as f64)),
             ("bad_requests", num(self.bad_requests as f64)),
             ("accept_errors", num(self.accept_errors as f64)),
             ("net_timeouts", num(self.net_timeouts as f64)),
@@ -249,6 +257,7 @@ impl Metrics {
             ("wire_latency_p50", num(finite(self.wire_latency.quantile(0.50)))),
             ("wire_latency_p95", num(finite(self.wire_latency.quantile(0.95)))),
             ("wire_latency_p99", num(finite(self.wire_latency.quantile(0.99)))),
+            ("wire_latency_p999", num(finite(self.wire_latency.quantile(0.999)))),
             ("batch_size_mean", num(finite(self.batch_sizes.mean()))),
             ("queue_depth_mean", num(finite(self.queue_depth.mean()))),
             ("admission_count", num(self.admission_latency.count() as f64)),
@@ -309,9 +318,10 @@ impl Metrics {
         }
         if self.net_connections > 0 || self.shed_overloaded > 0 || self.bad_requests > 0 {
             s.push_str(&format!(
-                "net: {} connections  shed {}  bad requests {}  timeouts {}  shard failures {}  accept retries {}\n",
+                "net: {} connections  shed {}  per-peer shed {}  bad requests {}  timeouts {}  shard failures {}  accept retries {}\n",
                 self.net_connections,
                 self.shed_overloaded,
+                self.shed_per_peer,
                 self.bad_requests,
                 self.net_timeouts,
                 self.net_shard_failures,
@@ -331,19 +341,21 @@ impl Metrics {
         }
         if self.wire_latency.count() > 0 {
             s.push_str(&format!(
-                "wire latency p50 {}  p95 {}  p99 {}  max {}\n",
+                "wire latency p50 {}  p95 {}  p99 {}  p999 {}  max {}\n",
                 fmt::duration(self.wire_latency.quantile(0.50)),
                 fmt::duration(self.wire_latency.quantile(0.95)),
                 fmt::duration(self.wire_latency.quantile(0.99)),
+                fmt::duration(self.wire_latency.quantile(0.999)),
                 fmt::duration(self.wire_latency.max()),
             ));
         }
         if self.latency.count() > 0 {
             s.push_str(&format!(
-                "latency p50 {}  p95 {}  p99 {}  max {}\n",
+                "latency p50 {}  p95 {}  p99 {}  p999 {}  max {}\n",
                 fmt::duration(self.latency.quantile(0.50)),
                 fmt::duration(self.latency.quantile(0.95)),
                 fmt::duration(self.latency.quantile(0.99)),
+                fmt::duration(self.latency.quantile(0.999)),
                 fmt::duration(self.latency.max()),
             ));
         }
@@ -518,17 +530,20 @@ mod tests {
     fn net_counters_merge_and_serialize() {
         let mut a = Metrics::new();
         a.shed_overloaded = 3;
+        a.shed_per_peer = 2;
         a.bad_requests = 2;
         a.net_connections = 10;
         a.wire_latency.record(0.010);
         let mut b = Metrics::new();
         b.shed_overloaded = 1;
+        b.shed_per_peer = 1;
         b.accept_errors = 4;
         b.net_timeouts = 2;
         b.net_connections = 5;
         b.wire_latency.record(0.020);
         a.merge(&b);
         assert_eq!(a.shed_overloaded, 4);
+        assert_eq!(a.shed_per_peer, 3);
         assert_eq!(a.bad_requests, 2);
         assert_eq!(a.accept_errors, 4);
         assert_eq!(a.net_timeouts, 2);
@@ -536,12 +551,20 @@ mod tests {
         assert_eq!(a.wire_latency.count(), 2);
         let j = a.to_json();
         assert_eq!(j.req_f64("shed_overloaded").unwrap(), 4.0);
+        assert_eq!(j.req_f64("shed_per_peer").unwrap(), 3.0);
         assert_eq!(j.req_f64("net_connections").unwrap(), 15.0);
         assert_eq!(j.req_f64("wire_latency_count").unwrap(), 2.0);
         assert!(j.req_f64("wire_latency_p99").unwrap() > 0.0);
+        // The tail quantile is monotone in the quantile level.
+        assert!(
+            j.req_f64("wire_latency_p999").unwrap() >= j.req_f64("wire_latency_p99").unwrap()
+        );
         assert!(j.req_f64("latency_p99").unwrap() == 0.0, "no driver latency recorded");
+        assert!(j.req_f64("latency_p999").unwrap() == 0.0);
         let r = a.report("net");
         assert!(r.contains("shed 4"));
+        assert!(r.contains("per-peer shed 3"));
+        assert!(r.contains("p999"));
         assert!(r.contains("wire latency"));
         // Merging an empty Metrics stays the identity with net counters too.
         let snapshot = a.clone();

@@ -1,0 +1,1403 @@
+//! Evented TCP front-end: a fixed pool of epoll readiness loops replaces
+//! thread-per-connection, so 10k idle clients cost slab entries instead of
+//! 10k stacks. Linux-only (gated at the module declaration); the wire
+//! protocol, typed rejections, counters, and conservation invariants are
+//! identical to the threaded model in [`net`](crate::serving::net), which
+//! remains the behavioral oracle.
+//!
+//! ## Architecture
+//!
+//! - **Event threads** (`NetConfig::event_threads`, default `min(4, cores)`):
+//!   each owns one epoll instance, a generational [`Slab`] of connection
+//!   state machines, and a coarse [`TimerWheel`] ticked from `epoll_wait`'s
+//!   timeout. Thread 0 additionally owns the nonblocking listener and hands
+//!   accepted sockets round-robin to the pool through per-thread inboxes.
+//! - **Connection state machine**: `ReadingLine` (bounded line assembly,
+//!   same 1 MiB cap as the threaded path) → `Dispatched` (holds the RAII
+//!   [`GatePermit`]; read interest is dropped so pipelined bytes queue in
+//!   the kernel exactly like the threaded model's blocking handler) → back
+//!   to `ReadingLine` after the reply. Writing/streaming is the out-buffer
+//!   facet of any state: partial writes park in `Conn::out` and re-arm
+//!   `EPOLLOUT` until drained.
+//! - **Reply pump**: std mpsc has no `select`, so one pump thread owns
+//!   every in-flight reply/stream receiver, polls them on a sub-millisecond
+//!   cadence (blocking outright when nothing is in flight), and forwards
+//!   completions to the owning event thread's queue + eventfd. This keeps
+//!   the thread count at `event_threads + 1 + shards`, independent of the
+//!   connection count — the bound the load harness reports.
+//! - **Timers**: idle reap and reply-wait deadlines are wheel entries that
+//!   validate against the live connection on fire (no cancel API); the
+//!   generation in the payload makes entries for closed connections inert.
+//!
+//! Everything below the accept path reuses the threaded front-end's
+//! building blocks unchanged: `parse_request_line`, the render helpers,
+//! `Router::admit`/`send_to` (and through them the supervisor's
+//! `redirect()`/`dead()` swap), `IngressGate`, and `NetStats`.
+
+use crate::serving::net::{
+    accept_backoff, is_fatal_accept_error, parse_request_line, reject_over_peer_cap,
+    render_rejection_line, render_response_line, render_token_line, ConnCtx, GatePermit, PeerSlot,
+    PeerTable, RouteError,
+};
+use crate::serving::{RejectCause, ServeOutcome, ServeRequest, ServeResponse};
+use crate::util::slab::{Slab, SlabKey};
+use crate::util::timer::TimerWheel;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Raw epoll/eventfd bindings (std-only: no libc crate offline)
+// ---------------------------------------------------------------------
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EPOLL_CLOEXEC: c_int = 0x80000; // O_CLOEXEC
+const EFD_CLOEXEC: c_int = 0x80000;
+const EFD_NONBLOCK: c_int = 0x800; // O_NONBLOCK
+
+/// Kernel `struct epoll_event`. Packed on x86_64 only — that quirk *is*
+/// the ABI (the unpadded 32-bit layout was kept when x86_64 was added).
+/// Fields must be read by value-copy, never by reference.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+}
+
+/// Owned epoll instance.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: RawFd) -> io::Result<()> {
+        // The event argument is ignored for DEL but must be non-null on
+        // pre-2.6.9 kernels; passing one costs nothing.
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness; retries EINTR, `timeout_ms < 0` blocks forever.
+    fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe {
+                epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.fd) };
+    }
+}
+
+/// eventfd-backed wakeup: any thread can interrupt an `epoll_wait`.
+struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    fn new() -> io::Result<Waker> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+
+    fn wake(&self) {
+        let one: u64 = 1;
+        let _ = unsafe { write(self.fd, &one as *const u64 as *const c_void, 8) };
+    }
+
+    /// Reset the counter so level-triggered EPOLLIN stops firing.
+    fn drain(&self) {
+        let mut count: u64 = 0;
+        // One read zeroes the counter; the loop only spins again if a
+        // concurrent wake lands between read and return, which is fine.
+        while unsafe { read(self.fd, &mut count as *mut u64 as *mut c_void, 8) } > 0 {}
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.fd) };
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tokens: epoll data and timer payloads carry a generational SlabKey
+// ---------------------------------------------------------------------
+
+const TOKEN_WAKE: u64 = u64::MAX;
+const TOKEN_LISTENER: u64 = u64::MAX - 1;
+
+fn conn_token(key: SlabKey) -> u64 {
+    debug_assert!(
+        key.index < u32::MAX - 1,
+        "conn token collides with sentinels"
+    );
+    ((key.index as u64) << 32) | key.generation as u64
+}
+
+fn token_key(token: u64) -> SlabKey {
+    SlabKey {
+        index: (token >> 32) as u32,
+        generation: token as u32,
+    }
+}
+
+const TIMER_IDLE: u64 = 0;
+const TIMER_REPLY: u64 = 1;
+const TIMER_ACCEPT_RESUME: u64 = 2;
+
+fn timer_payload(kind: u64, key: SlabKey) -> u64 {
+    debug_assert!(
+        key.index < 1 << 30,
+        "slab index exceeds timer payload width"
+    );
+    (kind << 62) | (((key.index as u64) & 0x3FFF_FFFF) << 32) | key.generation as u64
+}
+
+fn timer_kind(payload: u64) -> u64 {
+    payload >> 62
+}
+
+fn timer_key(payload: u64) -> SlabKey {
+    SlabKey {
+        index: ((payload >> 32) & 0x3FFF_FFFF) as u32,
+        generation: payload as u32,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-thread plumbing: reply pump and per-thread inboxes
+// ---------------------------------------------------------------------
+
+/// What the pump delivers back to an event thread. `Tokens` always precedes
+/// the `Reply` for the same token (the pump drains the stream receiver
+/// first, and the server queues the final reply before dropping the stream
+/// sender), so the wire ordering matches the threaded path byte for byte.
+enum Completion {
+    Tokens(u64, Vec<i32>),
+    Reply(u64, Box<ServeResponse>),
+    ShardFailed(u64),
+}
+
+enum PumpMsg {
+    Watch {
+        thread: usize,
+        token: u64,
+        reply: Receiver<ServeResponse>,
+        stream: Option<Receiver<i32>>,
+    },
+    Unwatch {
+        thread: usize,
+        token: u64,
+    },
+    Shutdown,
+}
+
+#[derive(Default)]
+struct ThreadQueue {
+    new_conns: Vec<(TcpStream, PeerSlot)>,
+    completions: Vec<Completion>,
+}
+
+/// One event thread's cross-thread surface: its wakeup eventfd and the
+/// queue other threads (accept handoff, reply pump) push into.
+struct ThreadShared {
+    waker: Waker,
+    queue: Mutex<ThreadQueue>,
+}
+
+impl ThreadShared {
+    fn new() -> io::Result<Arc<ThreadShared>> {
+        Ok(Arc::new(ThreadShared {
+            waker: Waker::new()?,
+            queue: Mutex::new(ThreadQueue::default()),
+        }))
+    }
+}
+
+fn push_completion(shared: &ThreadShared, completion: Completion) {
+    shared
+        .queue
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .completions
+        .push(completion);
+}
+
+struct WatchEntry {
+    thread: usize,
+    token: u64,
+    reply: Receiver<ServeResponse>,
+    stream: Option<Receiver<i32>>,
+}
+
+/// The shared reply pump: owns every in-flight receiver (std mpsc has no
+/// select), blocks on its inbox when nothing is in flight, and otherwise
+/// scans watched receivers on a sub-millisecond cadence. Completions go to
+/// the owning event thread's queue; its eventfd turns them into epoll
+/// wakeups.
+fn reply_pump(inbox: Receiver<PumpMsg>, threads: Vec<Arc<ThreadShared>>) {
+    let mut watching: Vec<WatchEntry> = Vec::new();
+    let mut draining = false;
+    loop {
+        let first = if watching.is_empty() {
+            if draining {
+                return;
+            }
+            match inbox.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            }
+        } else {
+            match inbox.recv_timeout(Duration::from_micros(500)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                // Every event thread (each holds a sender) is gone: nobody
+                // is left to consume completions.
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        let mut pending = Vec::new();
+        if let Some(m) = first {
+            pending.push(m);
+        }
+        while let Ok(m) = inbox.try_recv() {
+            pending.push(m);
+        }
+        for msg in pending {
+            match msg {
+                PumpMsg::Watch {
+                    thread,
+                    token,
+                    reply,
+                    stream,
+                } => watching.push(WatchEntry {
+                    thread,
+                    token,
+                    reply,
+                    stream,
+                }),
+                PumpMsg::Unwatch { thread, token } => {
+                    watching.retain(|w| !(w.thread == thread && w.token == token))
+                }
+                PumpMsg::Shutdown => draining = true,
+            }
+        }
+        let mut dirty = vec![false; threads.len()];
+        watching.retain_mut(|w| {
+            let mut tokens = Vec::new();
+            if let Some(srx) = &w.stream {
+                loop {
+                    match srx.try_recv() {
+                        Ok(t) => tokens.push(t),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            w.stream = None;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !tokens.is_empty() {
+                push_completion(&threads[w.thread], Completion::Tokens(w.token, tokens));
+                dirty[w.thread] = true;
+            }
+            match w.reply.try_recv() {
+                Ok(resp) => {
+                    push_completion(
+                        &threads[w.thread],
+                        Completion::Reply(w.token, Box::new(resp)),
+                    );
+                    dirty[w.thread] = true;
+                    false
+                }
+                Err(TryRecvError::Empty) => true,
+                Err(TryRecvError::Disconnected) => {
+                    // Reply channel dropped unanswered: the shard crashed
+                    // with this request in flight (same classification as
+                    // the threaded path's recv Disconnected arm).
+                    push_completion(&threads[w.thread], Completion::ShardFailed(w.token));
+                    dirty[w.thread] = true;
+                    false
+                }
+            }
+        });
+        for (i, is_dirty) in dirty.iter().enumerate() {
+            if *is_dirty {
+                threads[i].waker.wake();
+            }
+        }
+        if draining && watching.is_empty() {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection state machine
+// ---------------------------------------------------------------------
+
+enum ConnState {
+    /// Assembling the next request line (bounded by `max_line_bytes`).
+    ReadingLine,
+    /// A request is in flight on a shard; read interest is dropped so
+    /// pipelined bytes back-pressure in the kernel socket buffer, exactly
+    /// like the threaded handler that simply isn't reading.
+    Dispatched {
+        permit: GatePermit,
+        t0: Instant,
+        streaming: bool,
+    },
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    /// RAII per-peer slot; released when the connection drops.
+    _peer_slot: PeerSlot,
+    /// Unconsumed read bytes (at most one partial line plus whatever a
+    /// pipelining client burst before dispatch dropped read interest).
+    buf: Vec<u8>,
+    /// Pending write bytes with a partial-write cursor; non-empty arms
+    /// EPOLLOUT (the Writing/Streaming facet of the state machine).
+    out: Vec<u8>,
+    out_pos: usize,
+    state: ConnState,
+    read_eof: bool,
+    close_after_flush: bool,
+    last_activity: Instant,
+    /// Dispatch or last stream token: the reply-wait deadline resets on
+    /// stream progress, matching the threaded per-token `recv_timeout`.
+    last_progress: Instant,
+    interest: u32,
+    registered: bool,
+    idle_timer_live: bool,
+    reply_timer_live: bool,
+}
+
+enum FlushStatus {
+    Drained,
+    Pending,
+}
+
+/// Write as much of `out[*pos..]` as the writer takes without blocking.
+/// Generic over `Write` so the partial-write/EPOLLOUT re-arm logic is unit
+/// testable with a throttled mock writer.
+fn write_pending<W: Write>(w: &mut W, out: &[u8], pos: &mut usize) -> io::Result<FlushStatus> {
+    while *pos < out.len() {
+        match w.write(&out[*pos..]) {
+            Ok(0) => return Err(io::Error::new(ErrorKind::WriteZero, "write returned 0")),
+            Ok(n) => *pos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(FlushStatus::Pending),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FlushStatus::Drained)
+}
+
+// ---------------------------------------------------------------------
+// Event thread
+// ---------------------------------------------------------------------
+
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(10);
+const WHEEL_SLOTS: usize = 1024;
+const READ_CHUNK: usize = 8 * 1024;
+const MAX_EVENTS: usize = 256;
+
+struct EventThread {
+    tid: usize,
+    ctx: Arc<ConnCtx>,
+    stop: Arc<AtomicBool>,
+    epoll: Epoll,
+    /// All threads' shared surfaces; `shared[tid]` is ours.
+    shared: Vec<Arc<ThreadShared>>,
+    pump_tx: Sender<PumpMsg>,
+    conns: Slab<Conn>,
+    wheel: TimerWheel,
+    epoch: Instant,
+    /// Thread 0 only: the nonblocking listener and its accept state.
+    listener: Option<TcpListener>,
+    listener_registered: bool,
+    accept_errors_streak: u32,
+    next_thread: usize,
+}
+
+impl EventThread {
+    fn tick_now(&self) -> u64 {
+        (self.epoch.elapsed().as_nanos() / self.wheel.granularity().as_nanos()) as u64
+    }
+
+    fn run(mut self) {
+        let mut events = vec![
+            EpollEvent {
+                events: 0,
+                data: 0
+            };
+            MAX_EVENTS
+        ];
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                // Stop: deregister the listener (a level-triggered backlog
+                // would spin the loop), process anything already queued,
+                // then force-close the remaining connections. The threaded
+                // model's handler threads outlive shutdown detached; an
+                // event thread must exit instead, so it closes — RAII
+                // releases every permit and peer slot, and the counters
+                // stay in matched pairs.
+                self.deregister_listener();
+                self.drain_shared_queue();
+                for key in self.conns.keys() {
+                    self.close_conn(key);
+                }
+                return;
+            }
+            // Every live connection keeps at least its idle timer armed, so
+            // a blocking wait here only happens when the slab is empty (the
+            // eventfd still interrupts it for handoffs and shutdown).
+            let timeout_ms = if self.wheel.is_empty() {
+                -1
+            } else {
+                self.wheel.granularity().as_millis() as i32
+            };
+            let n = self.epoll.wait(&mut events, timeout_ms).unwrap_or(0);
+            for payload in self.wheel.advance_to(self.tick_now()) {
+                self.on_timer(payload);
+            }
+            for ev in events.iter().take(n) {
+                let ev = *ev;
+                match ev.data {
+                    TOKEN_WAKE => {
+                        self.shared[self.tid].waker.drain();
+                        self.drain_shared_queue();
+                    }
+                    TOKEN_LISTENER => self.accept_burst(),
+                    token => self.on_conn_event(token_key(token), ev.events),
+                }
+            }
+        }
+    }
+
+    // -- cross-thread queue ------------------------------------------------
+
+    fn drain_shared_queue(&mut self) {
+        let drained = {
+            let mut q = self.shared[self.tid]
+                .queue
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *q)
+        };
+        for (stream, peer_slot) in drained.new_conns {
+            self.register_conn(stream, peer_slot);
+        }
+        for completion in drained.completions {
+            self.on_completion(completion);
+        }
+    }
+
+    // -- accept path (thread 0) --------------------------------------------
+
+    fn deregister_listener(&mut self) {
+        if self.listener_registered {
+            if let Some(l) = &self.listener {
+                let _ = self.epoll.del(l.as_raw_fd());
+            }
+            self.listener_registered = false;
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        if self.listener.is_none() {
+            return;
+        }
+        while !self.stop.load(Ordering::Acquire) {
+            let accepted = self.listener.as_ref().unwrap().accept();
+            match accepted {
+                Ok((stream, peer)) => {
+                    self.accept_errors_streak = 0;
+                    self.admit_new_conn(stream, peer);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.ctx.stats.accept_errors.fetch_add(1, Ordering::AcqRel);
+                    // Deregister either way — a level-triggered error
+                    // condition would spin the loop. Transient errors
+                    // (EMFILE bursts) re-register on the same capped
+                    // backoff schedule as the threaded accept loop; fatal
+                    // ones leave accepting off while live connections keep
+                    // serving.
+                    self.deregister_listener();
+                    if is_fatal_accept_error(e.kind()) {
+                        eprintln!("listener: fatal accept error: {e}");
+                    } else {
+                        self.wheel.schedule_after(
+                            timer_payload(
+                                TIMER_ACCEPT_RESUME,
+                                SlabKey {
+                                    index: 0,
+                                    generation: 0,
+                                },
+                            ),
+                            accept_backoff(self.accept_errors_streak),
+                        );
+                        self.accept_errors_streak = self.accept_errors_streak.saturating_add(1);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn resume_accept(&mut self) {
+        if self.stop.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some(l) = &self.listener {
+            if !self.listener_registered
+                && self
+                    .epoll
+                    .add(l.as_raw_fd(), TOKEN_LISTENER, EPOLLIN)
+                    .is_ok()
+            {
+                self.listener_registered = true;
+            }
+        }
+        self.accept_burst();
+    }
+
+    fn admit_new_conn(&mut self, stream: TcpStream, peer: SocketAddr) {
+        let Some(peer_slot) = PeerTable::try_admit(&self.ctx.peers, peer.ip()) else {
+            // Still blocking here (fresh accept), so the one-line typed
+            // rejection needs no out-buffer; identical to the threaded path.
+            reject_over_peer_cap(stream, &self.ctx.stats);
+            return;
+        };
+        self.ctx.stats.connections.fetch_add(1, Ordering::AcqRel);
+        let target = self.next_thread % self.shared.len();
+        self.next_thread = self.next_thread.wrapping_add(1);
+        if target == self.tid {
+            self.register_conn(stream, peer_slot);
+        } else {
+            self.shared[target]
+                .queue
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .new_conns
+                .push((stream, peer_slot));
+            self.shared[target].waker.wake();
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream, peer_slot: PeerSlot) {
+        if self.stop.load(Ordering::Acquire) || stream.set_nonblocking(true).is_err() {
+            // Shutting down (or the socket is already dead): the accept
+            // was counted, so count the close to keep the pairs matched.
+            drop(peer_slot);
+            self.ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
+            return;
+        }
+        let fd = stream.as_raw_fd();
+        let now = Instant::now();
+        let key = self.conns.insert(Conn {
+            stream,
+            fd,
+            _peer_slot: peer_slot,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            state: ConnState::ReadingLine,
+            read_eof: false,
+            close_after_flush: false,
+            last_activity: now,
+            last_progress: now,
+            interest: EPOLLIN | EPOLLRDHUP,
+            registered: true,
+            idle_timer_live: false,
+            reply_timer_live: false,
+        });
+        if self
+            .epoll
+            .add(fd, conn_token(key), EPOLLIN | EPOLLRDHUP)
+            .is_err()
+        {
+            self.conns.remove(key);
+            self.ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
+            return;
+        }
+        self.arm_idle_timer(key, self.ctx.cfg.idle_timeout);
+    }
+
+    // -- timers ------------------------------------------------------------
+
+    fn arm_idle_timer(&mut self, key: SlabKey, delay: Duration) {
+        if let Some(conn) = self.conns.get_mut(key) {
+            if !conn.idle_timer_live {
+                conn.idle_timer_live = true;
+                self.wheel
+                    .schedule_after(timer_payload(TIMER_IDLE, key), delay);
+            }
+        }
+    }
+
+    fn arm_reply_timer(&mut self, key: SlabKey, delay: Duration) {
+        if let Some(conn) = self.conns.get_mut(key) {
+            if !conn.reply_timer_live {
+                conn.reply_timer_live = true;
+                self.wheel
+                    .schedule_after(timer_payload(TIMER_REPLY, key), delay);
+            }
+        }
+    }
+
+    fn on_timer(&mut self, payload: u64) {
+        match timer_kind(payload) {
+            TIMER_ACCEPT_RESUME => self.resume_accept(),
+            TIMER_IDLE => {
+                let key = timer_key(payload);
+                let Some(conn) = self.conns.get_mut(key) else {
+                    return;
+                };
+                conn.idle_timer_live = false;
+                if matches!(conn.state, ConnState::Dispatched { .. }) {
+                    // The reply timer owns liveness while a request is in
+                    // flight; keep the idle timer armed for afterwards.
+                    self.arm_idle_timer(key, self.ctx.cfg.idle_timeout);
+                    return;
+                }
+                let idle = conn.last_activity.elapsed();
+                if idle >= self.ctx.cfg.idle_timeout {
+                    // Silent reap, exactly like the threaded read timeout
+                    // (also covers a wedged flush: writes bump
+                    // last_activity, so a stalled one eventually lands
+                    // here).
+                    self.close_conn(key);
+                } else {
+                    self.arm_idle_timer(key, self.ctx.cfg.idle_timeout - idle);
+                }
+            }
+            TIMER_REPLY => {
+                let key = timer_key(payload);
+                let Some(conn) = self.conns.get_mut(key) else {
+                    return;
+                };
+                conn.reply_timer_live = false;
+                if !matches!(conn.state, ConnState::Dispatched { .. }) {
+                    return;
+                }
+                let since_progress = conn.last_progress.elapsed();
+                if since_progress < self.ctx.cfg.reply_timeout {
+                    self.arm_reply_timer(key, self.ctx.cfg.reply_timeout - since_progress);
+                    return;
+                }
+                // Reply-wait liveness: typed timeout, release the permit (a
+                // wedged epoch must not leak gate capacity), close after
+                // the reply flushes — a late reply on a reused line would
+                // desync the protocol. Mirrors serve_one's Timeout arms.
+                let released = std::mem::replace(&mut conn.state, ConnState::ReadingLine);
+                conn.close_after_flush = true;
+                drop(released);
+                self.ctx.stats.timeouts.fetch_add(1, Ordering::AcqRel);
+                let _ = self.pump_tx.send(PumpMsg::Unwatch {
+                    thread: self.tid,
+                    token: conn_token(key),
+                });
+                self.queue_line(key, render_rejection_line("timeout", None));
+                self.flush_out(key);
+            }
+            _ => {}
+        }
+    }
+
+    // -- connection I/O ----------------------------------------------------
+
+    fn on_conn_event(&mut self, key: SlabKey, evs: u32) {
+        let Some(conn) = self.conns.get_mut(key) else {
+            return;
+        };
+        if evs & EPOLLERR != 0 {
+            self.close_conn(key);
+            return;
+        }
+        let reading = matches!(conn.state, ConnState::ReadingLine)
+            && !conn.close_after_flush
+            && !conn.read_eof;
+        if evs & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+            if reading {
+                self.do_read(key);
+            } else if evs & EPOLLHUP != 0 {
+                // Peer vanished while a request is in flight or a flush is
+                // pending. EPOLLHUP is unmaskable, so deregister the fd to
+                // keep the loop from spinning; the pending completion (or
+                // the failing flush below) tears the connection down.
+                if let Some(conn) = self.conns.get_mut(key) {
+                    conn.read_eof = true;
+                    if conn.registered {
+                        let _ = self.epoll.del(conn.fd);
+                        conn.registered = false;
+                        conn.interest = 0;
+                    }
+                }
+            }
+        }
+        if evs & (EPOLLOUT | EPOLLHUP) != 0 {
+            if let Some(conn) = self.conns.get(key) {
+                if conn.out_pos < conn.out.len() {
+                    self.flush_out(key);
+                }
+            }
+        }
+    }
+
+    fn do_read(&mut self, key: SlabKey) {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            let Some(conn) = self.conns.get_mut(key) else {
+                return;
+            };
+            match (&conn.stream).read(&mut chunk) {
+                Ok(0) => {
+                    conn.read_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.last_activity = Instant::now();
+                    conn.buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // Socket error: same silent close as a threaded read
+                    // error.
+                    self.close_conn(key);
+                    return;
+                }
+            }
+        }
+        self.advance_conn(key);
+    }
+
+    /// Pump buffered lines through the request path while the connection is
+    /// in `ReadingLine` — the single place the state machine moves forward
+    /// off the read path (also re-entered after each reply for pipelined
+    /// lines, and on EOF for the final unterminated line).
+    fn advance_conn(&mut self, key: SlabKey) {
+        loop {
+            let max_line = self.ctx.cfg.max_line_bytes;
+            let Some(conn) = self.conns.get_mut(key) else {
+                return;
+            };
+            if conn.close_after_flush || !matches!(conn.state, ConnState::ReadingLine) {
+                break;
+            }
+            let newline = conn.buf.iter().position(|&b| b == b'\n');
+            let mut line_bytes = match newline {
+                Some(i) => {
+                    if i + 1 > max_line {
+                        self.oversize(key);
+                        break;
+                    }
+                    let rest = conn.buf.split_off(i + 1);
+                    std::mem::replace(&mut conn.buf, rest)
+                }
+                None => {
+                    if conn.buf.len() > max_line {
+                        self.oversize(key);
+                        break;
+                    }
+                    if !conn.read_eof {
+                        break;
+                    }
+                    if conn.buf.is_empty() {
+                        // Clean EOF: close once any queued reply drains.
+                        if conn.out_pos < conn.out.len() {
+                            conn.close_after_flush = true;
+                            break;
+                        }
+                        self.close_conn(key);
+                        return;
+                    }
+                    // EOF terminates a final unterminated line, matching
+                    // read_line_bounded.
+                    std::mem::take(&mut conn.buf)
+                }
+            };
+            while matches!(line_bytes.last(), Some(b'\n') | Some(b'\r')) {
+                line_bytes.pop();
+            }
+            let line = String::from_utf8_lossy(&line_bytes).into_owned();
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let trimmed = trimmed.to_string();
+            self.dispatch_line(key, &trimmed);
+        }
+        self.flush_out(key);
+    }
+
+    fn oversize(&mut self, key: SlabKey) {
+        self.ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+        self.queue_line(
+            key,
+            render_rejection_line("bad_request", Some("request line exceeds the size cap")),
+        );
+        if let Some(conn) = self.conns.get_mut(key) {
+            conn.close_after_flush = true;
+        }
+    }
+
+    /// The evented twin of `serve_one`'s front half: parse, admit, submit.
+    /// Instead of blocking on the reply it parks the connection in
+    /// `Dispatched` and registers the receivers with the reply pump.
+    fn dispatch_line(&mut self, key: SlabKey, line: &str) {
+        let ctx = Arc::clone(&self.ctx);
+        let parsed = match parse_request_line(line, ctx.bpe.as_ref(), ctx.cfg.max_output_tokens) {
+            Ok(p) => p,
+            Err(e) => {
+                // Typed reply, connection stays open: a malformed request
+                // is the client's bug, not a transport failure.
+                ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+                self.queue_line(key, render_rejection_line("bad_request", Some(&e)));
+                return;
+            }
+        };
+        let (shard, permit) = match ctx.router.admit(parsed.model.as_deref()) {
+            Ok(x) => x,
+            Err(RouteError::UnknownModel(name)) => {
+                ctx.stats.bad_requests.fetch_add(1, Ordering::AcqRel);
+                let detail = format!("no shard serves model `{name}`");
+                self.queue_line(key, render_rejection_line("bad_request", Some(&detail)));
+                return;
+            }
+            Err(RouteError::Overloaded) => {
+                // Admission control: shed, never queue without bound.
+                ctx.stats.shed_overloaded.fetch_add(1, Ordering::AcqRel);
+                self.queue_line(key, render_rejection_line("overloaded", None));
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let (rtx, rrx) = channel();
+        let (stx, srx) = if parsed.stream {
+            let (a, b) = channel();
+            (Some(a), Some(b))
+        } else {
+            (None, None)
+        };
+        let submitted = ctx.router.send_to(
+            shard,
+            ServeRequest {
+                prompt: parsed.prompt,
+                output_tokens: parsed.output_tokens,
+                latency_req: parsed.latency_req,
+                accuracy_req: parsed.accuracy_req,
+                respond: rtx,
+                stream: stx,
+            },
+        );
+        if submitted.is_err() {
+            drop(permit);
+            self.queue_line(key, render_rejection_line("shutdown", None));
+            if let Some(conn) = self.conns.get_mut(key) {
+                conn.close_after_flush = true;
+            }
+            return;
+        }
+        if let Some(conn) = self.conns.get_mut(key) {
+            conn.state = ConnState::Dispatched {
+                permit,
+                t0,
+                streaming: parsed.stream,
+            };
+            conn.last_progress = Instant::now();
+        }
+        let _ = self.pump_tx.send(PumpMsg::Watch {
+            thread: self.tid,
+            token: conn_token(key),
+            reply: rrx,
+            stream: srx,
+        });
+        self.arm_reply_timer(key, self.ctx.cfg.reply_timeout);
+    }
+
+    fn on_completion(&mut self, completion: Completion) {
+        match completion {
+            Completion::Tokens(token, tokens) => {
+                let key = token_key(token);
+                let Some(conn) = self.conns.get_mut(key) else {
+                    return;
+                };
+                if !matches!(conn.state, ConnState::Dispatched { streaming: true, .. }) {
+                    return;
+                }
+                conn.last_progress = Instant::now();
+                for t in tokens {
+                    conn.out.extend_from_slice(render_token_line(t).as_bytes());
+                    conn.out.push(b'\n');
+                }
+                self.flush_out(key);
+            }
+            Completion::Reply(token, resp) => {
+                let key = token_key(token);
+                let Some(conn) = self.conns.get_mut(key) else {
+                    return;
+                };
+                if !matches!(conn.state, ConnState::Dispatched { .. }) {
+                    // Already timed out (typed reply sent, permit released,
+                    // the pump's Unwatch racing this completion): drop it.
+                    return;
+                }
+                let prev = std::mem::replace(&mut conn.state, ConnState::ReadingLine);
+                let ConnState::Dispatched { permit, t0, .. } = prev else {
+                    unreachable!("state checked above");
+                };
+                if resp.outcome != ServeOutcome::Rejected {
+                    self.ctx
+                        .stats
+                        .record_wire_latency(t0.elapsed().as_secs_f64());
+                }
+                drop(permit);
+                let line = render_response_line(&resp, self.ctx.bpe.as_ref());
+                self.queue_line(key, line);
+                self.flush_out(key);
+                // Pipelined next line, or EOF teardown, now that the
+                // connection is back in ReadingLine.
+                self.advance_conn(key);
+            }
+            Completion::ShardFailed(token) => {
+                let key = token_key(token);
+                let Some(conn) = self.conns.get_mut(key) else {
+                    return;
+                };
+                if !matches!(conn.state, ConnState::Dispatched { .. }) {
+                    return;
+                }
+                // Typed `shard_failed`, not `timeout`: the request may have
+                // partially executed, so the client decides whether a retry
+                // is safe. Mirrors serve_one's Disconnected arm.
+                let released = std::mem::replace(&mut conn.state, ConnState::ReadingLine);
+                conn.close_after_flush = true;
+                drop(released);
+                self.ctx.stats.shard_failures.fetch_add(1, Ordering::AcqRel);
+                self.queue_line(
+                    key,
+                    render_rejection_line(RejectCause::ShardFailed.as_wire_str(), None),
+                );
+                self.flush_out(key);
+            }
+        }
+    }
+
+    fn queue_line(&mut self, key: SlabKey, line: String) {
+        if let Some(conn) = self.conns.get_mut(key) {
+            conn.out.extend_from_slice(line.as_bytes());
+            conn.out.push(b'\n');
+        }
+    }
+
+    fn flush_out(&mut self, key: SlabKey) {
+        let Some(conn) = self.conns.get_mut(key) else {
+            return;
+        };
+        if conn.out_pos < conn.out.len() {
+            let mut writer = &conn.stream;
+            match write_pending(&mut writer, &conn.out, &mut conn.out_pos) {
+                Ok(FlushStatus::Drained) => {
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    conn.last_activity = Instant::now();
+                    if conn.close_after_flush {
+                        self.close_conn(key);
+                        return;
+                    }
+                }
+                Ok(FlushStatus::Pending) => {
+                    conn.last_activity = Instant::now();
+                }
+                Err(_) => {
+                    // Write failure (peer gone mid-write): close; the
+                    // permit — if a request is still in flight — releases
+                    // with the connection.
+                    self.close_conn(key);
+                    return;
+                }
+            }
+        } else if conn.close_after_flush {
+            self.close_conn(key);
+            return;
+        }
+        self.update_interest(key);
+    }
+
+    fn update_interest(&mut self, key: SlabKey) {
+        let Some(conn) = self.conns.get_mut(key) else {
+            return;
+        };
+        if !conn.registered {
+            return;
+        }
+        let mut want = 0u32;
+        if matches!(conn.state, ConnState::ReadingLine)
+            && !conn.close_after_flush
+            && !conn.read_eof
+        {
+            want |= EPOLLIN | EPOLLRDHUP;
+        }
+        if conn.out_pos < conn.out.len() {
+            want |= EPOLLOUT;
+        }
+        // An empty mask while Dispatched is intentional: ERR/HUP are still
+        // delivered unmasked, and everything else waits for the reply.
+        if want != conn.interest {
+            if self.epoll.modify(conn.fd, conn_token(key), want).is_ok() {
+                conn.interest = want;
+            } else {
+                self.close_conn(key);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, key: SlabKey) {
+        let Some(conn) = self.conns.remove(key) else {
+            return;
+        };
+        if conn.registered {
+            let _ = self.epoll.del(conn.fd);
+        }
+        if matches!(conn.state, ConnState::Dispatched { .. }) {
+            let _ = self.pump_tx.send(PumpMsg::Unwatch {
+                thread: self.tid,
+                token: conn_token(key),
+            });
+        }
+        self.ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
+        // Dropping `conn` releases the gate permit (if dispatched) and the
+        // per-peer slot; stale timer entries miss on the generation.
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spawn / shutdown
+// ---------------------------------------------------------------------
+
+/// Join handles and wakeup surfaces for a running evented front-end, held
+/// by the [`Listener`](crate::serving::net::Listener).
+pub(crate) struct EventedHandles {
+    ctx: Arc<ConnCtx>,
+    shared: Vec<Arc<ThreadShared>>,
+    joins: Vec<JoinHandle<()>>,
+    pump_tx: Sender<PumpMsg>,
+    pump_join: Option<JoinHandle<()>>,
+}
+
+impl EventedHandles {
+    /// Interrupt every `epoll_wait` and tell the pump to drain (the stop
+    /// flag itself is set by the listener before calling this).
+    pub(crate) fn wake_all(&self) {
+        let _ = self.pump_tx.send(PumpMsg::Shutdown);
+        for s in &self.shared {
+            s.waker.wake();
+        }
+    }
+
+    /// Wake and join everything; event threads close their remaining
+    /// connections on the way out, then the pump exits once its watch list
+    /// is empty.
+    pub(crate) fn join(mut self) {
+        self.wake_all();
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+        if let Some(pump) = self.pump_join.take() {
+            let _ = pump.join();
+        }
+        // A handoff pushed after its target's final queue drain would be a
+        // counted-open, never-closed connection; with every event thread
+        // joined, whatever is left in the inboxes is exactly that set.
+        for shared in &self.shared {
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for (stream, peer_slot) in q.new_conns.drain(..) {
+                drop(stream);
+                drop(peer_slot);
+                self.ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+/// Create one event thread: its epoll instance (waker and, for thread 0,
+/// the listener pre-registered) and the OS thread running its loop.
+fn spawn_event_thread(
+    tid: usize,
+    ctx: Arc<ConnCtx>,
+    stop: Arc<AtomicBool>,
+    shared: Vec<Arc<ThreadShared>>,
+    pump_tx: Sender<PumpMsg>,
+    listener: Option<TcpListener>,
+) -> io::Result<JoinHandle<()>> {
+    let epoll = Epoll::new()?;
+    epoll.add(shared[tid].waker.fd, TOKEN_WAKE, EPOLLIN)?;
+    let mut listener_registered = false;
+    if let Some(l) = &listener {
+        epoll.add(l.as_raw_fd(), TOKEN_LISTENER, EPOLLIN)?;
+        listener_registered = true;
+    }
+    let thread = EventThread {
+        tid,
+        ctx,
+        stop,
+        epoll,
+        shared,
+        pump_tx,
+        conns: Slab::new(),
+        wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS),
+        epoch: Instant::now(),
+        listener,
+        listener_registered,
+        accept_errors_streak: 0,
+        next_thread: tid,
+    };
+    std::thread::Builder::new()
+        .name(format!("net-evt-{tid}"))
+        .spawn(move || thread.run())
+}
+
+/// Start the evented front-end on an already-bound listener: N event
+/// threads (thread 0 owns the accept path) plus the shared reply pump.
+pub(crate) fn spawn_evented(
+    listener: TcpListener,
+    ctx: Arc<ConnCtx>,
+    stop: Arc<AtomicBool>,
+) -> io::Result<EventedHandles> {
+    listener.set_nonblocking(true)?;
+    let n_threads = ctx.cfg.resolved_event_threads();
+    let mut shared = Vec::with_capacity(n_threads);
+    for _ in 0..n_threads {
+        shared.push(ThreadShared::new()?);
+    }
+    let (pump_tx, pump_rx) = channel();
+    let pump_shared = shared.clone();
+    let pump_join = std::thread::Builder::new()
+        .name("net-pump".to_string())
+        .spawn(move || reply_pump(pump_rx, pump_shared))?;
+    let mut joins = Vec::with_capacity(n_threads);
+    let mut listener = Some(listener);
+    for tid in 0..n_threads {
+        let thread_listener = if tid == 0 { listener.take() } else { None };
+        match spawn_event_thread(
+            tid,
+            Arc::clone(&ctx),
+            Arc::clone(&stop),
+            shared.clone(),
+            pump_tx.clone(),
+            thread_listener,
+        ) {
+            Ok(join) => joins.push(join),
+            Err(e) => {
+                // Partial startup: stop and join what already runs so no
+                // event thread outlives the failed spawn.
+                stop.store(true, Ordering::Release);
+                let _ = pump_tx.send(PumpMsg::Shutdown);
+                for s in &shared {
+                    s.waker.wake();
+                }
+                for join in joins {
+                    let _ = join.join();
+                }
+                let _ = pump_join.join();
+                return Err(e);
+            }
+        }
+    }
+    Ok(EventedHandles {
+        ctx,
+        shared,
+        joins,
+        pump_tx,
+        pump_join: Some(pump_join),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_and_timer_tokens_roundtrip() {
+        let key = SlabKey {
+            index: 123_456,
+            generation: 7,
+        };
+        assert_eq!(token_key(conn_token(key)), key);
+        for kind in [TIMER_IDLE, TIMER_REPLY, TIMER_ACCEPT_RESUME] {
+            let payload = timer_payload(kind, key);
+            assert_eq!(timer_kind(payload), kind);
+            assert_eq!(timer_key(payload), key);
+        }
+    }
+
+    /// A writer that accepts a fixed number of bytes per call until its
+    /// budget runs out, then WouldBlock — the shape of a full socket send
+    /// buffer.
+    struct Throttled {
+        accepted: Vec<u8>,
+        per_call: usize,
+        budget: usize,
+    }
+
+    impl Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.budget == 0 {
+                return Err(io::Error::new(ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.per_call).min(self.budget);
+            self.accepted.extend_from_slice(&buf[..n]);
+            self.budget -= n;
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_pending_parks_partial_writes_and_resumes() {
+        let out = b"hello evented world\n".to_vec();
+        let mut w = Throttled {
+            accepted: Vec::new(),
+            per_call: 4,
+            budget: 9,
+        };
+        let mut pos = 0;
+        // First flush: 9 bytes land (in 4+4+1 chunks), then WouldBlock.
+        assert!(matches!(
+            write_pending(&mut w, &out, &mut pos).unwrap(),
+            FlushStatus::Pending
+        ));
+        assert_eq!(pos, 9);
+        assert_eq!(&w.accepted, &out[..9]);
+        // "EPOLLOUT fires": budget restored, the rest drains from pos.
+        w.budget = usize::MAX;
+        assert!(matches!(
+            write_pending(&mut w, &out, &mut pos).unwrap(),
+            FlushStatus::Drained
+        ));
+        assert_eq!(pos, out.len());
+        assert_eq!(w.accepted, out);
+    }
+
+    #[test]
+    fn write_pending_surfaces_hard_errors() {
+        struct Broken;
+        impl Write for Broken {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Err(io::Error::new(ErrorKind::BrokenPipe, "peer gone"))
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut pos = 0;
+        let err = write_pending(&mut Broken, b"x", &mut pos).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn eventfd_waker_wakes_epoll_and_drains() {
+        let epoll = Epoll::new().expect("epoll_create1");
+        let waker = Waker::new().expect("eventfd");
+        epoll.add(waker.fd, TOKEN_WAKE, EPOLLIN).expect("add");
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 4];
+        // Nothing pending: times out empty.
+        assert_eq!(epoll.wait(&mut events, 0).unwrap(), 0);
+        waker.wake();
+        waker.wake(); // coalesces in the eventfd counter
+        let n = epoll.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        // Copy out of the (possibly packed) struct before asserting.
+        let data = events[0].data;
+        let evs = events[0].events;
+        assert_eq!(data, TOKEN_WAKE);
+        assert_ne!(evs & EPOLLIN, 0);
+        waker.drain();
+        // Drained: level-triggered EPOLLIN stops firing.
+        assert_eq!(epoll.wait(&mut events, 0).unwrap(), 0);
+    }
+}

@@ -12,13 +12,16 @@
 //! through an mpsc handle from any thread and receive their generated tokens
 //! on a per-request reply channel.
 
+#[cfg(target_os = "linux")]
+pub mod event_loop;
 pub mod net;
 pub mod server;
 pub mod sharded;
 
 pub use net::{
-    parse_request_line, render_rejection_line, render_response_line, spawn_listener, GatePermit,
-    IngressGate, Listener, NetConfig, ParsedRequest, RouteError, Router,
+    effective_io_model, parse_request_line, render_rejection_line, render_response_line,
+    spawn_listener, GatePermit, IngressGate, IoModel, Listener, NetConfig, ParsedRequest,
+    RouteError, Router,
 };
 pub use server::{
     EpochServer, RejectCause, ServeHandle, ServeOutcome, ServeRequest, ServeResponse, ServerConfig,

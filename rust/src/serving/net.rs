@@ -31,13 +31,23 @@
 //!
 //! ## Liveness
 //!
-//! Connections are plain threads (std-only, no tokio offline), but every
-//! blocking edge is bounded: an idle read times out
+//! Every blocking edge is bounded: an idle read times out
 //! ([`NetConfig::idle_timeout`]), a reply wait times out
 //! ([`NetConfig::reply_timeout`], releasing the gate permit so a wedged
 //! epoch cannot leak admission slots), the accept loop survives transient
 //! errors (EMFILE bursts) with capped exponential backoff, and
 //! [`Listener::shutdown`] stops accepting deterministically.
+//!
+//! ## I/O models
+//!
+//! Two interchangeable connection engines sit behind one wire protocol
+//! ([`IoModel`]): `threaded` runs one 128 KiB-stack handler thread per
+//! connection (simple, portable, the behavioral oracle), `evented` runs a
+//! fixed pool of epoll readiness loops
+//! ([`event_loop`](crate::serving::event_loop), Linux only) whose thread
+//! count is independent of the connection count. Replies, typed rejections,
+//! counters, and conservation invariants are identical across both — the
+//! parameterized `net_e2e` suite holds them byte-for-byte.
 
 use crate::driver::pick_least_loaded;
 use crate::metrics::Metrics;
@@ -45,12 +55,66 @@ use crate::serving::{RejectCause, ServeHandle, ServeOutcome, ServeRequest, Serve
 use crate::tokenizer::Bpe;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
+use std::collections::HashMap;
 use std::io::{self, BufRead, BufReader, ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Connection engine behind the wire protocol. Both models speak identical
+/// bytes; they differ in how many OS threads a connection costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoModel {
+    /// One bounded-liveness handler thread per connection (portable).
+    Threaded,
+    /// Fixed pool of epoll readiness loops (Linux; falls back to threaded
+    /// elsewhere with a warning — see [`effective_io_model`]).
+    Evented,
+}
+
+impl IoModel {
+    pub fn parse(s: &str) -> Result<IoModel, String> {
+        match s {
+            "threaded" => Ok(IoModel::Threaded),
+            "evented" => Ok(IoModel::Evented),
+            other => Err(format!(
+                "unknown io model `{other}` (expected `threaded` or `evented`)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoModel::Threaded => "threaded",
+            IoModel::Evented => "evented",
+        }
+    }
+}
+
+impl std::fmt::Display for IoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The io model a listener will actually run: `evented` needs epoll, so off
+/// Linux it degrades to `threaded` with a typed warning instead of failing
+/// the bind.
+pub fn effective_io_model(requested: IoModel) -> IoModel {
+    #[cfg(target_os = "linux")]
+    {
+        requested
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        if requested == IoModel::Evented {
+            eprintln!("listener: io model `evented` requires Linux epoll; using `threaded`");
+        }
+        IoModel::Threaded
+    }
+}
 
 /// Front-end configuration (per listener; every connection shares it).
 #[derive(Debug, Clone)]
@@ -72,6 +136,15 @@ pub struct NetConfig {
     /// `bad_request` and the connection closes — there is no safe resync
     /// point inside an oversize line).
     pub max_line_bytes: usize,
+    /// Which connection engine to run (`threaded` unless asked otherwise).
+    pub io_model: IoModel,
+    /// Event-loop threads for the evented model; 0 means auto
+    /// (`min(4, cores)`). Ignored by the threaded model.
+    pub event_threads: usize,
+    /// Max concurrent connections per remote IP; 0 means unlimited.
+    /// Over-cap connections get a typed `per_peer_limit` rejection and
+    /// close, identically in both io models.
+    pub max_conns_per_peer: usize,
 }
 
 impl Default for NetConfig {
@@ -82,7 +155,24 @@ impl Default for NetConfig {
             idle_timeout: Duration::from_secs(60),
             reply_timeout: Duration::from_secs(30),
             max_line_bytes: 1 << 20,
+            io_model: IoModel::Threaded,
+            event_threads: 0,
+            max_conns_per_peer: 0,
         }
+    }
+}
+
+impl NetConfig {
+    /// Event-thread count with the `0 = min(4, cores)` default applied.
+    pub fn resolved_event_threads(&self) -> usize {
+        if self.event_threads > 0 {
+            return self.event_threads;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(4)
+            .max(1)
     }
 }
 
@@ -228,7 +318,7 @@ pub fn render_rejection_line(reason: &str, detail: Option<&str>) -> String {
 }
 
 /// Render one streamed token event.
-fn render_token_line(token: i32) -> String {
+pub(crate) fn render_token_line(token: i32) -> String {
     Json::obj(vec![("token", Json::Num(token as f64))]).to_string()
 }
 
@@ -391,19 +481,20 @@ impl Router {
 // ---------------------------------------------------------------------
 
 #[derive(Default)]
-struct NetStats {
-    connections: AtomicU64,
-    closed: AtomicU64,
-    shed_overloaded: AtomicU64,
-    bad_requests: AtomicU64,
-    accept_errors: AtomicU64,
-    timeouts: AtomicU64,
+pub(crate) struct NetStats {
+    pub(crate) connections: AtomicU64,
+    pub(crate) closed: AtomicU64,
+    pub(crate) shed_overloaded: AtomicU64,
+    pub(crate) shed_per_peer: AtomicU64,
+    pub(crate) bad_requests: AtomicU64,
+    pub(crate) accept_errors: AtomicU64,
+    pub(crate) timeouts: AtomicU64,
     /// Requests whose reply channel dropped unanswered (shard crash with
     /// the request in flight). Kept separate from the servers'
     /// `shard_failed` — the supervisor's conservation subtraction already
     /// counts the lost request there; this is the *client-visible* side.
-    shard_failures: AtomicU64,
-    wire_latency: Mutex<LatencyHistogram>,
+    pub(crate) shard_failures: AtomicU64,
+    pub(crate) wire_latency: Mutex<LatencyHistogram>,
 }
 
 impl NetStats {
@@ -413,6 +504,7 @@ impl NetStats {
         let mut m = Metrics::new();
         m.net_connections = self.connections.load(Ordering::Acquire);
         m.shed_overloaded = self.shed_overloaded.load(Ordering::Acquire);
+        m.shed_per_peer = self.shed_per_peer.load(Ordering::Acquire);
         m.bad_requests = self.bad_requests.load(Ordering::Acquire);
         m.accept_errors = self.accept_errors.load(Ordering::Acquire);
         m.net_timeouts = self.timeouts.load(Ordering::Acquire);
@@ -427,17 +519,102 @@ impl NetStats {
             .clone();
         m
     }
+
+    /// Record a wire latency sample (poison-tolerant, see `to_metrics`).
+    pub(crate) fn record_wire_latency(&self, seconds: f64) {
+        self.wire_latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record(seconds);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-peer connection accounting
+// ---------------------------------------------------------------------
+
+/// Concurrent-connection count per remote IP, shared by the accept path of
+/// both io models. `cap == 0` disables tracking entirely (the default), so
+/// the unlimited case costs one branch, not a map lookup per accept.
+pub(crate) struct PeerTable {
+    cap: usize,
+    counts: Mutex<HashMap<IpAddr, usize>>,
+}
+
+impl PeerTable {
+    pub(crate) fn new(cap: usize) -> Arc<PeerTable> {
+        Arc::new(PeerTable {
+            cap,
+            counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Claim a per-peer slot, or `None` when the peer is at its cap. The
+    /// returned guard releases the slot on drop — tie it to the connection
+    /// so every exit path (reply, timeout, reap, handler death) decrements.
+    pub(crate) fn try_admit(table: &Arc<PeerTable>, ip: IpAddr) -> Option<PeerSlot> {
+        if table.cap == 0 {
+            return Some(PeerSlot { table: None, ip });
+        }
+        let mut counts = table.counts.lock().unwrap_or_else(|e| e.into_inner());
+        let n = counts.entry(ip).or_insert(0);
+        if *n >= table.cap {
+            return None;
+        }
+        *n += 1;
+        Some(PeerSlot {
+            table: Some(Arc::clone(table)),
+            ip,
+        })
+    }
+}
+
+/// RAII per-peer connection slot (no-op when the cap is disabled).
+pub(crate) struct PeerSlot {
+    table: Option<Arc<PeerTable>>,
+    ip: IpAddr,
+}
+
+impl Drop for PeerSlot {
+    fn drop(&mut self) {
+        if let Some(table) = &self.table {
+            let mut counts = table.counts.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(n) = counts.get_mut(&self.ip) {
+                *n -= 1;
+                if *n == 0 {
+                    counts.remove(&self.ip);
+                }
+            }
+        }
+    }
+}
+
+/// Typed rejection + close for an over-cap peer, shared by both accept
+/// paths. The socket is still blocking here (freshly accepted), so the
+/// one-line write needs no buffering; failures just mean the peer is
+/// already gone. Counts `connections`/`closed` in matched pairs, so
+/// `open_connections` and the drain invariants are unaffected.
+pub(crate) fn reject_over_peer_cap(mut stream: TcpStream, stats: &NetStats) {
+    stats.connections.fetch_add(1, Ordering::AcqRel);
+    stats.shed_per_peer.fetch_add(1, Ordering::AcqRel);
+    let _ = writeln!(
+        stream,
+        "{}",
+        render_rejection_line(RejectCause::PerPeerLimit.as_wire_str(), None)
+    );
+    stats.closed.fetch_add(1, Ordering::AcqRel);
 }
 
 // ---------------------------------------------------------------------
 // Connection handler
 // ---------------------------------------------------------------------
 
-struct ConnCtx {
-    router: Router,
-    bpe: Option<Bpe>,
-    cfg: NetConfig,
-    stats: NetStats,
+pub(crate) struct ConnCtx {
+    pub(crate) router: Router,
+    pub(crate) bpe: Option<Bpe>,
+    pub(crate) cfg: NetConfig,
+    pub(crate) stats: NetStats,
+    pub(crate) peers: Arc<PeerTable>,
 }
 
 enum LineEvent {
@@ -649,7 +826,7 @@ fn serve_one(line: &str, ctx: &ConnCtx, writer: &mut TcpStream) -> bool {
 /// on Linux), peers vanishing between `accept` and the handshake, timeouts —
 /// are retried with backoff; only errors that mean the listener socket
 /// itself is gone are fatal.
-fn is_fatal_accept_error(kind: ErrorKind) -> bool {
+pub(crate) fn is_fatal_accept_error(kind: ErrorKind) -> bool {
     !matches!(
         kind,
         ErrorKind::ConnectionAborted
@@ -666,21 +843,32 @@ fn is_fatal_accept_error(kind: ErrorKind) -> bool {
 /// Exponential accept backoff: 1 ms doubling to a 500 ms cap, so a
 /// sustained EMFILE storm throttles the loop instead of spinning it, and a
 /// single hiccup costs almost nothing.
-fn accept_backoff(consecutive_errors: u32) -> Duration {
+pub(crate) fn accept_backoff(consecutive_errors: u32) -> Duration {
     Duration::from_millis((1u64 << consecutive_errors.min(9)).min(500))
 }
 
 /// A live front-end: bound address, counters, and deterministic shutdown.
+/// One of `accept_join` (threaded) or `evented` (epoll pool) is populated,
+/// depending on the effective io model.
 pub struct Listener {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     ctx: Arc<ConnCtx>,
+    io_model: IoModel,
     accept_join: Option<std::thread::JoinHandle<()>>,
+    #[cfg(target_os = "linux")]
+    evented: Option<crate::serving::event_loop::EventedHandles>,
 }
 
 impl Listener {
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The io model this listener actually runs (after the non-Linux
+    /// `evented → threaded` fallback).
+    pub fn io_model(&self) -> IoModel {
+        self.io_model
     }
 
     /// Connections accepted so far.
@@ -724,13 +912,19 @@ impl Listener {
         self.ctx.stats.to_metrics()
     }
 
-    /// Stop accepting and join the accept thread. Connections already
-    /// handed to handlers run to completion (bounded by their own idle and
-    /// reply timeouts).
+    /// Stop accepting and join the I/O threads. Threaded handler threads
+    /// outlive this call detached (their connections finish on their own
+    /// liveness timeouts); evented threads close their remaining
+    /// connections on the way out so the join stays bounded — in both
+    /// models callers that care drain clients first (`wait_drained`).
     pub fn shutdown(mut self) {
         self.request_stop();
         if let Some(join) = self.accept_join.take() {
             let _ = join.join();
+        }
+        #[cfg(target_os = "linux")]
+        if let Some(evented) = self.evented.take() {
+            evented.join();
         }
     }
 
@@ -738,8 +932,19 @@ impl Listener {
         if self.shutdown.swap(true, Ordering::AcqRel) {
             return;
         }
-        // Unblock the accept call with a throwaway local connection.
-        let _ = TcpStream::connect(self.addr);
+        match self.io_model {
+            IoModel::Threaded => {
+                // Unblock the accept call with a throwaway local connection.
+                let _ = TcpStream::connect(self.addr);
+            }
+            IoModel::Evented => {
+                // Event threads block in epoll_wait; poke their eventfds.
+                #[cfg(target_os = "linux")]
+                if let Some(evented) = &self.evented {
+                    evented.wake_all();
+                }
+            }
+        }
     }
 }
 
@@ -749,8 +954,9 @@ impl Drop for Listener {
     }
 }
 
-/// Bind and start the accept loop: one bounded-liveness handler thread per
-/// connection, requests routed through `router`. Returns the [`Listener`]
+/// Bind and start the front-end with the configured io model: threaded
+/// (one bounded-liveness handler thread per connection) or evented (fixed
+/// epoll pool), requests routed through `router`. Returns the [`Listener`]
 /// handle (address, counters, shutdown).
 pub fn spawn_listener(
     addr: &str,
@@ -761,12 +967,31 @@ pub fn spawn_listener(
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
+    let io_model = effective_io_model(cfg.io_model);
+    let peers = PeerTable::new(cfg.max_conns_per_peer);
     let ctx = Arc::new(ConnCtx {
         router,
         bpe,
         cfg,
         stats: NetStats::default(),
+        peers,
     });
+    #[cfg(target_os = "linux")]
+    if io_model == IoModel::Evented {
+        let handles = crate::serving::event_loop::spawn_evented(
+            listener,
+            Arc::clone(&ctx),
+            Arc::clone(&shutdown),
+        )?;
+        return Ok(Listener {
+            addr: local,
+            shutdown,
+            ctx,
+            io_model,
+            accept_join: None,
+            evented: Some(handles),
+        });
+    }
     let accept_ctx = Arc::clone(&ctx);
     let accept_stop = Arc::clone(&shutdown);
     let accept_join = std::thread::Builder::new()
@@ -779,9 +1004,13 @@ pub fn spawn_listener(
                     break;
                 }
                 match accepted {
-                    Ok((stream, _peer)) => {
+                    Ok((stream, peer)) => {
                         consecutive_errors = 0;
                         let ctx = Arc::clone(&accept_ctx);
+                        let Some(peer_slot) = PeerTable::try_admit(&ctx.peers, peer.ip()) else {
+                            reject_over_peer_cap(stream, &ctx.stats);
+                            continue;
+                        };
                         ctx.stats.connections.fetch_add(1, Ordering::AcqRel);
                         // Small stacks: O(10k) concurrent handlers reserve
                         // ~1 GiB of *virtual* address space instead of 80.
@@ -789,13 +1018,15 @@ pub fn spawn_listener(
                             .name("net-conn".to_string())
                             .stack_size(128 * 1024)
                             .spawn(move || {
+                                let _peer_slot = peer_slot;
                                 handle_conn(stream, &ctx);
                                 ctx.stats.closed.fetch_add(1, Ordering::AcqRel);
                             });
                         if spawned.is_err() {
                             // Thread exhaustion is admission pressure too:
-                            // count the shed and the close (the socket
-                            // dropped with the failed spawn's closure).
+                            // count the shed and the close (the socket — and
+                            // the peer slot — dropped with the failed
+                            // spawn's closure).
                             let s = &accept_ctx.stats;
                             s.shed_overloaded.fetch_add(1, Ordering::AcqRel);
                             s.closed.fetch_add(1, Ordering::AcqRel);
@@ -820,7 +1051,10 @@ pub fn spawn_listener(
         addr: local,
         shutdown,
         ctx,
+        io_model,
         accept_join: Some(accept_join),
+        #[cfg(target_os = "linux")]
+        evented: None,
     })
 }
 
@@ -1082,5 +1316,43 @@ mod tests {
             read_line_bounded(&mut r, &mut buf, 64).unwrap(),
             LineEvent::Eof
         ));
+    }
+
+    #[test]
+    fn io_model_parses_and_rejects() {
+        assert_eq!(IoModel::parse("threaded").unwrap(), IoModel::Threaded);
+        assert_eq!(IoModel::parse("evented").unwrap(), IoModel::Evented);
+        assert!(IoModel::parse("async").is_err());
+        assert_eq!(IoModel::Evented.to_string(), "evented");
+    }
+
+    #[test]
+    fn peer_table_caps_per_ip_and_releases_on_drop() {
+        let ip_a: IpAddr = "10.0.0.1".parse().unwrap();
+        let ip_b: IpAddr = "10.0.0.2".parse().unwrap();
+        let table = PeerTable::new(2);
+        let a1 = PeerTable::try_admit(&table, ip_a).expect("slot 1");
+        let _a2 = PeerTable::try_admit(&table, ip_a).expect("slot 2");
+        assert!(
+            PeerTable::try_admit(&table, ip_a).is_none(),
+            "cap reached for ip_a"
+        );
+        // Caps are per peer, not global.
+        let _b1 = PeerTable::try_admit(&table, ip_b).expect("other peer unaffected");
+        drop(a1);
+        assert!(
+            PeerTable::try_admit(&table, ip_a).is_some(),
+            "released slot is reusable"
+        );
+    }
+
+    #[test]
+    fn peer_table_unlimited_when_cap_is_zero() {
+        let ip: IpAddr = "127.0.0.1".parse().unwrap();
+        let table = PeerTable::new(0);
+        let slots: Vec<_> = (0..64)
+            .map(|_| PeerTable::try_admit(&table, ip).unwrap())
+            .collect();
+        assert_eq!(slots.len(), 64);
     }
 }

@@ -91,6 +91,9 @@ pub enum RejectCause {
     /// Terminal for the client (the request may have partially executed, so
     /// a blind retry is not idempotent — the caller decides).
     ShardFailed,
+    /// The remote IP is already at its concurrent-connection cap
+    /// (`--max-conns-per-peer`); rejected at accept, before any parsing.
+    PerPeerLimit,
 }
 
 impl RejectCause {
@@ -104,6 +107,7 @@ impl RejectCause {
             RejectCause::Shutdown => "shutdown",
             RejectCause::Execution => "execution",
             RejectCause::ShardFailed => "shard_failed",
+            RejectCause::PerPeerLimit => "per_peer_limit",
         }
     }
 }

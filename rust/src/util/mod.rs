@@ -1,10 +1,13 @@
 //! Cross-cutting utilities built from scratch for the offline environment:
-//! deterministic RNG, JSON, CLI parsing, formatting, statistics, and a
-//! micro-benchmark harness.
+//! deterministic RNG, JSON, CLI parsing, formatting, statistics, a
+//! micro-benchmark harness, and the slab/timer-wheel pair backing the
+//! evented front-end.
 
 pub mod bench;
 pub mod cli;
 pub mod fmt;
 pub mod json;
 pub mod rng;
+pub mod slab;
 pub mod stats;
+pub mod timer;

@@ -1,0 +1,185 @@
+//! Generational slab: dense storage with stable, ABA-safe keys.
+//!
+//! The evented front-end keeps one state machine per live connection and
+//! refers to it from epoll tokens and timer-wheel payloads — both of which
+//! can outlive the connection (a timer entry is never cancelled, an epoll
+//! event can already be queued when the fd is closed). A plain `Vec` index
+//! would let a stale token resolve to a *new* connection that recycled the
+//! slot; the generation counter makes such lookups miss instead.
+//!
+//! Capacity grows on demand and freed slots are recycled LIFO, so a steady
+//! churn of N concurrent connections touches only N slots regardless of how
+//! many connections have come and gone.
+
+/// Key into a [`Slab`]: slot index plus the generation the slot had when the
+/// value was inserted. Lookups with a stale generation return `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlabKey {
+    pub index: u32,
+    pub generation: u32,
+}
+
+enum Entry<T> {
+    /// Free slot; `next_generation` is what the next occupant will stamp.
+    Vacant { next_generation: u32 },
+    Occupied { generation: u32, value: T },
+}
+
+pub struct Slab<T> {
+    entries: Vec<Entry<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab {
+            entries: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn insert(&mut self, value: T) -> SlabKey {
+        self.live += 1;
+        if let Some(index) = self.free.pop() {
+            let generation = match self.entries[index as usize] {
+                Entry::Vacant { next_generation } => next_generation,
+                Entry::Occupied { .. } => unreachable!("free list points at occupied slot"),
+            };
+            self.entries[index as usize] = Entry::Occupied { generation, value };
+            return SlabKey { index, generation };
+        }
+        let index = u32::try_from(self.entries.len()).expect("slab capacity exceeds u32");
+        self.entries.push(Entry::Occupied {
+            generation: 0,
+            value,
+        });
+        SlabKey {
+            index,
+            generation: 0,
+        }
+    }
+
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.entries.get(key.index as usize) {
+            Some(Entry::Occupied { generation, value }) if *generation == key.generation => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.entries.get_mut(key.index as usize) {
+            Some(Entry::Occupied { generation, value }) if *generation == key.generation => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    /// Removes and returns the value, or `None` if the key is stale.
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        let slot = self.entries.get_mut(key.index as usize)?;
+        match slot {
+            Entry::Occupied { generation, .. } if *generation == key.generation => {
+                let next_generation = generation.wrapping_add(1);
+                let old = std::mem::replace(slot, Entry::Vacant { next_generation });
+                self.free.push(key.index);
+                self.live -= 1;
+                match old {
+                    Entry::Occupied { value, .. } => Some(value),
+                    Entry::Vacant { .. } => unreachable!(),
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Keys of every live entry, in slot order. Collected (rather than
+    /// borrowed) so the caller can mutate the slab while walking them.
+    pub fn keys(&self) -> Vec<SlabKey> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| match e {
+                Entry::Occupied { generation, .. } => Some(SlabKey {
+                    index: i as u32,
+                    generation: *generation,
+                }),
+                Entry::Vacant { .. } => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut slab = Slab::new();
+        let a = slab.insert("a");
+        let b = slab.insert("b");
+        assert_eq!(slab.len(), 2);
+        assert_eq!(slab.get(a), Some(&"a"));
+        assert_eq!(slab.get(b), Some(&"b"));
+        assert_eq!(slab.remove(a), Some("a"));
+        assert_eq!(slab.get(a), None);
+        assert_eq!(slab.len(), 1);
+    }
+
+    #[test]
+    fn stale_keys_miss_after_slot_reuse() {
+        let mut slab = Slab::new();
+        let a = slab.insert(1u32);
+        slab.remove(a);
+        let b = slab.insert(2u32);
+        // Same slot, new generation: the stale key must not alias.
+        assert_eq!(b.index, a.index);
+        assert_ne!(b.generation, a.generation);
+        assert_eq!(slab.get(a), None);
+        assert_eq!(slab.remove(a), None);
+        assert_eq!(slab.get(b), Some(&2));
+    }
+
+    #[test]
+    fn keys_walks_only_live_entries() {
+        let mut slab = Slab::new();
+        let a = slab.insert(10);
+        let b = slab.insert(20);
+        let c = slab.insert(30);
+        slab.remove(b);
+        let keys = slab.keys();
+        assert_eq!(keys, vec![a, c]);
+        let sum: i32 = keys.iter().map(|&k| *slab.get(k).unwrap()).sum();
+        assert_eq!(sum, 40);
+    }
+
+    #[test]
+    fn churn_recycles_slots() {
+        let mut slab = Slab::new();
+        for round in 0..100u32 {
+            let k = slab.insert(round);
+            assert!(k.index < 1, "steady churn of one value must reuse slot 0");
+            assert_eq!(slab.remove(k), Some(round));
+        }
+        assert!(slab.is_empty());
+    }
+}

@@ -1,0 +1,169 @@
+//! Coarse lazy timer wheel for the evented front-end.
+//!
+//! Connection deadlines (idle reap, reply wait) need thousands of cheap
+//! timers with ~10 ms precision, not a heap of exact ones. The wheel hashes
+//! each entry into `slots[due_tick % slots]` and fires it lazily: entries
+//! are only examined when their slot is visited, and an entry whose due tick
+//! lies one or more laps ahead simply stays in the slot until the clock
+//! actually reaches it. There is no cancel operation — payloads are
+//! validated by the caller when they fire (the event loop checks the
+//! generational [`SlabKey`](crate::util::slab::SlabKey) packed into the
+//! payload), which keeps arm/disarm O(1) and allocation-free on the hot
+//! path.
+//!
+//! The wheel has no thread of its own: the owner calls
+//! [`TimerWheel::advance_to`] with the current tick (derived from a
+//! monotonic clock) whenever it wakes up — in the event loop, from
+//! `epoll_wait`'s timeout.
+
+use std::time::Duration;
+
+pub struct TimerWheel {
+    /// `slots[t % slots.len()]` holds entries due at tick `t` (or `t + k·laps`).
+    slots: Vec<Vec<TimerEntry>>,
+    granularity: Duration,
+    /// Last tick fully processed by `advance_to`.
+    now: u64,
+    len: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TimerEntry {
+    payload: u64,
+    due_tick: u64,
+}
+
+impl TimerWheel {
+    /// `granularity` is the tick length; `slots` bounds how many ticks fit
+    /// in one lap (longer delays are fine — they just wait extra laps).
+    pub fn new(granularity: Duration, slots: usize) -> Self {
+        assert!(slots > 0, "timer wheel needs at least one slot");
+        assert!(
+            granularity > Duration::ZERO,
+            "timer wheel granularity must be positive"
+        );
+        TimerWheel {
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            granularity,
+            now: 0,
+            len: 0,
+        }
+    }
+
+    pub fn granularity(&self) -> Duration {
+        self.granularity
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn now_tick(&self) -> u64 {
+        self.now
+    }
+
+    /// Converts an elapsed wall duration into a tick count (ceiling, so a
+    /// deadline never fires early; minimum one tick so `schedule_after`
+    /// never lands in the past).
+    pub fn ticks_for(&self, delay: Duration) -> u64 {
+        let g = self.granularity.as_nanos();
+        let d = delay.as_nanos();
+        (d.div_ceil(g).max(1)) as u64
+    }
+
+    /// Schedules `payload` to fire once the wheel advances past `delay`.
+    pub fn schedule_after(&mut self, payload: u64, delay: Duration) {
+        let due_tick = self.now + self.ticks_for(delay);
+        let slot = (due_tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push(TimerEntry { payload, due_tick });
+        self.len += 1;
+    }
+
+    /// Advances the wheel to `tick`, returning every payload whose deadline
+    /// has passed. Visits at most one full lap of slots, which covers any
+    /// jump size; entries due beyond `tick` stay put for a later lap.
+    pub fn advance_to(&mut self, tick: u64) -> Vec<u64> {
+        let mut fired = Vec::new();
+        if tick <= self.now || self.len == 0 {
+            self.now = self.now.max(tick);
+            return fired;
+        }
+        let nslots = self.slots.len() as u64;
+        let steps = (tick - self.now).min(nslots);
+        for i in 1..=steps {
+            let slot = ((self.now + i) % nslots) as usize;
+            let entries = &mut self.slots[slot];
+            let mut j = 0;
+            while j < entries.len() {
+                if entries[j].due_tick <= tick {
+                    fired.push(entries.swap_remove(j).payload);
+                    self.len -= 1;
+                } else {
+                    j += 1;
+                }
+            }
+        }
+        self.now = tick;
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wheel() -> TimerWheel {
+        TimerWheel::new(Duration::from_millis(10), 8)
+    }
+
+    #[test]
+    fn fires_at_or_after_the_due_tick_never_before() {
+        let mut w = wheel();
+        w.schedule_after(7, Duration::from_millis(30)); // due tick 3
+        assert!(w.advance_to(2).is_empty());
+        assert_eq!(w.advance_to(3), vec![7]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn sub_granularity_delay_rounds_up_to_one_tick() {
+        let mut w = wheel();
+        w.schedule_after(1, Duration::from_millis(1));
+        assert_eq!(w.advance_to(1), vec![1]);
+    }
+
+    #[test]
+    fn multi_lap_entries_wait_for_their_lap() {
+        let mut w = wheel(); // 8 slots: due tick 10 shares a slot with tick 2
+        w.schedule_after(42, Duration::from_millis(100)); // due tick 10
+        assert!(w.advance_to(2).is_empty(), "slot visited, entry not yet due");
+        assert!(w.advance_to(9).is_empty());
+        assert_eq!(w.advance_to(10), vec![42]);
+    }
+
+    #[test]
+    fn large_jump_fires_everything_due() {
+        let mut w = wheel();
+        w.schedule_after(1, Duration::from_millis(20));
+        w.schedule_after(2, Duration::from_millis(50));
+        w.schedule_after(3, Duration::from_millis(500)); // due tick 50, beyond jump
+        let mut fired = w.advance_to(30); // > one lap past both deadlines
+        fired.sort_unstable();
+        assert_eq!(fired, vec![1, 2]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.advance_to(50), vec![3]);
+    }
+
+    #[test]
+    fn advancing_backwards_is_a_no_op() {
+        let mut w = wheel();
+        w.schedule_after(9, Duration::from_millis(10));
+        assert_eq!(w.advance_to(5), vec![9]);
+        assert!(w.advance_to(3).is_empty());
+        assert_eq!(w.now_tick(), 5);
+    }
+}

@@ -2,18 +2,43 @@
 //! rejections, connection reuse after errors, deterministic shed under a
 //! full admission gate, model-name routing across shards, streaming, and
 //! liveness timeouts. Synthetic host engines only — no artifacts needed.
+//!
+//! Every scenario runs against both io models (threaded and, on Linux,
+//! evented): the threaded path is the behavioral oracle, and the evented
+//! path must be byte-identical on the wire. Evented-specific regressions
+//! (slowloris, slow stream readers, mid-flight disconnects) are at the
+//! bottom.
 #![cfg(not(feature = "pjrt"))]
 
 use edgellm::coordinator::{Dftsp, EpochParams};
 use edgellm::quant::Precision;
 use edgellm::runtime::{Engine, SyntheticSpec};
 use edgellm::serving::{
-    serve_sharded, spawn_listener, EpochServer, NetConfig, Router, ServerConfig,
+    serve_sharded, spawn_listener, EpochServer, IoModel, NetConfig, Router, ServerConfig,
 };
 use edgellm::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// The io models this platform can run: both on Linux, threaded elsewhere.
+fn io_models() -> Vec<IoModel> {
+    #[cfg(target_os = "linux")]
+    {
+        vec![IoModel::Threaded, IoModel::Evented]
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        vec![IoModel::Threaded]
+    }
+}
+
+fn net_cfg(io: IoModel) -> NetConfig {
+    NetConfig {
+        io_model: io,
+        ..Default::default()
+    }
+}
 
 fn tiny_server() -> EpochServer {
     let cfg = ServerConfig {
@@ -50,283 +75,532 @@ fn read_reply(reader: &mut BufReader<TcpStream>) -> Json {
 
 #[test]
 fn well_formed_ids_request_completes_and_matches_direct_engine() {
-    let mut server = tiny_server();
-    let router = Router::single(server.model_name(), server.handle(), 64);
-    let listener =
-        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
-    let addr = listener.addr();
-    // The served tokens must equal the engine's direct greedy decode — the
-    // wire adds transport, not nondeterminism. This also pins the single
-    // shard `--listen` path to the unsharded reply content.
-    let want = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16)
-        .generate_greedy(&[vec![1, 2, 3]], 4, None)
-        .unwrap()[0]
-        .clone();
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
+        // The served tokens must equal the engine's direct greedy decode —
+        // the wire adds transport, not nondeterminism. This also pins the
+        // single shard `--listen` path to the unsharded reply content.
+        let want = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16)
+            .generate_greedy(&[vec![1, 2, 3]], 4, None)
+            .unwrap()[0]
+            .clone();
 
-    let client = std::thread::spawn(move || {
-        let mut s = connect(addr);
-        send_line(
-            &mut s,
-            r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0}"#,
-        );
-        let mut reader = BufReader::new(s);
-        read_reply(&mut reader)
-    });
-    server.run_for(20);
-    let j = client.join().unwrap();
-    assert_eq!(j.req_str("outcome").unwrap(), "completed");
-    let ids: Vec<i32> = j
-        .get("ids")
-        .and_then(|v| v.as_arr())
-        .unwrap()
-        .iter()
-        .map(|x| x.as_f64().unwrap() as i32)
-        .collect();
-    assert_eq!(ids, want);
-    assert!(listener.wait_drained(Duration::from_secs(10)));
-    assert_eq!(listener.net_metrics().net_connections, 1);
-    listener.shutdown();
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            send_line(
+                &mut s,
+                r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0}"#,
+            );
+            let mut reader = BufReader::new(s);
+            read_reply(&mut reader)
+        });
+        server.run_for(20);
+        let j = client.join().unwrap();
+        assert_eq!(j.req_str("outcome").unwrap(), "completed", "{io}");
+        let ids: Vec<i32> = j
+            .get("ids")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(ids, want, "{io}");
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        assert_eq!(listener.net_metrics().net_connections, 1, "{io}");
+        listener.shutdown();
+    }
 }
 
 #[test]
 fn malformed_requests_get_typed_errors_and_connection_survives() {
-    let mut server = tiny_server();
-    let router = Router::single(server.model_name(), server.handle(), 64);
-    let listener =
-        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
-    let addr = listener.addr();
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
 
-    let client = std::thread::spawn(move || {
-        let mut s = connect(addr);
-        let mut reader = BufReader::new(s.try_clone().unwrap());
-        // Every malformed class gets a typed `bad_request` on the SAME
-        // connection — a client bug must not kill the transport.
-        let malformed = [
-            "not json at all",
-            r#"{"output_tokens": 4}"#,
-            r#"{"ids": [], "output_tokens": 4}"#,
-            r#"{"ids": [1.5], "output_tokens": 4}"#,
-            r#"{"ids": [1], "output_tokens": 0}"#,
-            r#"{"ids": [1], "output_tokens": -5}"#,
-            r#"{"ids": [1], "output_tokens": 3.5}"#,
-            r#"{"ids": [1], "output_tokens": 1e400}"#,
-            r#"{"ids": [1], "output_tokens": 1e12}"#,
-            r#"{"ids": [1], "output_tokens": 4, "latency_req": "2.0"}"#,
-            r#"{"ids": [1], "output_tokens": 4, "accuracy_req": true}"#,
-            r#"{"ids": [1], "output_tokens": 4, "model": 7}"#,
-            r#"{"ids": [1], "output_tokens": 4, "stream": "yes"}"#,
-            r#"{"ids": [1], "output_tokens": 4, "model": "no-such-deployment"}"#,
-        ];
-        for line in malformed {
-            send_line(&mut s, line);
-            let j = read_reply(&mut reader);
-            assert_eq!(j.req_str("outcome").unwrap(), "rejected", "{line}");
-            assert_eq!(j.req_str("reason").unwrap(), "bad_request", "{line}");
-        }
-        // The connection is still usable for a good request afterwards.
-        send_line(
-            &mut s,
-            r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
-        );
-        read_reply(&mut reader)
-    });
-    server.run_for(20);
-    let j = client.join().unwrap();
-    assert_eq!(j.req_str("outcome").unwrap(), "completed");
-    let net = listener.net_metrics();
-    assert_eq!(net.bad_requests, 14, "every malformed line counted");
-    assert!(listener.wait_drained(Duration::from_secs(10)));
-    listener.shutdown();
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            // Every malformed class gets a typed `bad_request` on the SAME
+            // connection — a client bug must not kill the transport.
+            let malformed = [
+                "not json at all",
+                r#"{"output_tokens": 4}"#,
+                r#"{"ids": [], "output_tokens": 4}"#,
+                r#"{"ids": [1.5], "output_tokens": 4}"#,
+                r#"{"ids": [1], "output_tokens": 0}"#,
+                r#"{"ids": [1], "output_tokens": -5}"#,
+                r#"{"ids": [1], "output_tokens": 3.5}"#,
+                r#"{"ids": [1], "output_tokens": 1e400}"#,
+                r#"{"ids": [1], "output_tokens": 1e12}"#,
+                r#"{"ids": [1], "output_tokens": 4, "latency_req": "2.0"}"#,
+                r#"{"ids": [1], "output_tokens": 4, "accuracy_req": true}"#,
+                r#"{"ids": [1], "output_tokens": 4, "model": 7}"#,
+                r#"{"ids": [1], "output_tokens": 4, "stream": "yes"}"#,
+                r#"{"ids": [1], "output_tokens": 4, "model": "no-such-deployment"}"#,
+            ];
+            for line in malformed {
+                send_line(&mut s, line);
+                let j = read_reply(&mut reader);
+                assert_eq!(j.req_str("outcome").unwrap(), "rejected", "{line}");
+                assert_eq!(j.req_str("reason").unwrap(), "bad_request", "{line}");
+            }
+            // The connection is still usable for a good request afterwards.
+            send_line(
+                &mut s,
+                r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
+            );
+            read_reply(&mut reader)
+        });
+        server.run_for(20);
+        let j = client.join().unwrap();
+        assert_eq!(j.req_str("outcome").unwrap(), "completed", "{io}");
+        let net = listener.net_metrics();
+        assert_eq!(net.bad_requests, 14, "every malformed line counted ({io})");
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        listener.shutdown();
+    }
 }
 
 #[test]
 fn full_gate_sheds_with_typed_overloaded_reply() {
-    let mut server = tiny_server();
-    // cap = 1: with the epoch loop not yet running, the first admitted
-    // request parks on its reply and holds the only permit; the other is
-    // shed immediately with a typed `overloaded`. Exactly one of each,
-    // whatever the arrival order.
-    let router = Router::single(server.model_name(), server.handle(), 1);
-    let listener =
-        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
-    let addr = listener.addr();
+    for io in io_models() {
+        let mut server = tiny_server();
+        // cap = 1: with the epoch loop not yet running, the first admitted
+        // request parks on its reply and holds the only permit; the other
+        // is shed immediately with a typed `overloaded`. Exactly one of
+        // each, whatever the arrival order.
+        let router = Router::single(server.model_name(), server.handle(), 1);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
 
-    let mut a = connect(addr);
-    send_line(
-        &mut a,
-        r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
-    );
-    // Give A's handler time to take the permit before B arrives (the
-    // assertion below holds for either winner; this just makes the common
-    // path deterministic).
-    std::thread::sleep(Duration::from_millis(300));
-    let mut b = connect(addr);
-    send_line(
-        &mut b,
-        r#"{"ids": [3, 4], "output_tokens": 2, "latency_req": 30.0}"#,
-    );
-    std::thread::sleep(Duration::from_millis(300));
+        let mut a = connect(addr);
+        send_line(
+            &mut a,
+            r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
+        );
+        // Give A's request time to take the permit before B arrives (the
+        // assertion below holds for either winner; this just makes the
+        // common path deterministic).
+        std::thread::sleep(Duration::from_millis(300));
+        let mut b = connect(addr);
+        send_line(
+            &mut b,
+            r#"{"ids": [3, 4], "output_tokens": 2, "latency_req": 30.0}"#,
+        );
+        std::thread::sleep(Duration::from_millis(300));
 
-    // Only now does the server start serving: the shed happened under a
-    // genuinely full gate, not a race with completions.
-    server.run_for(20);
-    let mut ra = BufReader::new(a);
-    let mut rb = BufReader::new(b);
-    let ja = read_reply(&mut ra);
-    let jb = read_reply(&mut rb);
-    let outcomes = [
-        ja.req_str("outcome").unwrap().to_string(),
-        jb.req_str("outcome").unwrap().to_string(),
-    ];
-    assert!(
-        outcomes.contains(&"completed".to_string()),
-        "the permit holder completes: {outcomes:?}"
-    );
-    assert!(
-        outcomes.contains(&"rejected".to_string()),
-        "the other is shed: {outcomes:?}"
-    );
-    let shed = if outcomes[0] == "rejected" { &ja } else { &jb };
-    assert_eq!(shed.req_str("reason").unwrap(), "overloaded");
-    assert_eq!(listener.net_metrics().shed_overloaded, 1);
-    drop(ra);
-    drop(rb);
-    assert!(listener.wait_drained(Duration::from_secs(10)));
-    listener.shutdown();
+        // Only now does the server start serving: the shed happened under a
+        // genuinely full gate, not a race with completions.
+        server.run_for(20);
+        let mut ra = BufReader::new(a);
+        let mut rb = BufReader::new(b);
+        let ja = read_reply(&mut ra);
+        let jb = read_reply(&mut rb);
+        let outcomes = [
+            ja.req_str("outcome").unwrap().to_string(),
+            jb.req_str("outcome").unwrap().to_string(),
+        ];
+        assert!(
+            outcomes.contains(&"completed".to_string()),
+            "the permit holder completes ({io}): {outcomes:?}"
+        );
+        assert!(
+            outcomes.contains(&"rejected".to_string()),
+            "the other is shed ({io}): {outcomes:?}"
+        );
+        let shed = if outcomes[0] == "rejected" { &ja } else { &jb };
+        assert_eq!(shed.req_str("reason").unwrap(), "overloaded", "{io}");
+        assert_eq!(listener.net_metrics().shed_overloaded, 1, "{io}");
+        drop(ra);
+        drop(rb);
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        listener.shutdown();
+    }
 }
 
 #[test]
 fn model_name_routes_to_the_matching_shard() {
-    let make = |shard: usize| {
-        let mut engine = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16);
-        engine.meta.model_name = format!("m{shard}");
-        let cfg = ServerConfig {
-            epoch: EpochParams {
-                duration: 0.05,
-                t_u: 0.005,
-                t_d: 0.005,
-            },
-            seed: 7 + shard as u64,
-            ..Default::default()
+    for io in io_models() {
+        let make = |shard: usize| {
+            let mut engine = Engine::synthetic(&SyntheticSpec::tiny(), Precision::W16A16);
+            engine.meta.model_name = format!("m{shard}");
+            let cfg = ServerConfig {
+                epoch: EpochParams {
+                    duration: 0.05,
+                    t_u: 0.005,
+                    t_d: 0.005,
+                },
+                seed: 7 + shard as u64,
+                ..Default::default()
+            };
+            EpochServer::new(engine, cfg, Box::new(Dftsp::new()))
         };
-        EpochServer::new(engine, cfg, Box::new(Dftsp::new()))
-    };
-    let per_shard = serve_sharded(2, 40, make, |handles| {
-        assert_eq!(handles[0].model, "m0");
-        assert_eq!(handles[1].model, "m1");
-        let router = Router::new(
-            handles
-                .iter()
-                .map(|h| (h.model.clone(), h.handle.clone()))
-                .collect(),
-            64,
-        );
-        let listener =
-            spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
-        let addr = listener.addr();
-        // One request per model name, both over the same wire endpoint.
-        for model in ["m0", "m1"] {
-            let mut s = connect(addr);
-            send_line(
-                &mut s,
-                &format!(
-                    r#"{{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0, "model": "{model}"}}"#
-                ),
+        let per_shard = serve_sharded(2, 40, make, |handles| {
+            assert_eq!(handles[0].model, "m0");
+            assert_eq!(handles[1].model, "m1");
+            let router = Router::new(
+                handles
+                    .iter()
+                    .map(|h| (h.model.clone(), h.handle.clone()))
+                    .collect(),
+                64,
             );
-            let j = read_reply(&mut BufReader::new(s));
-            assert_eq!(j.req_str("outcome").unwrap(), "completed", "{model}");
-        }
-        assert!(listener.wait_drained(Duration::from_secs(10)));
-        listener.shutdown();
-    });
-    // Affinity, not load, decided the shard: one request landed on each.
-    assert_eq!(per_shard[0].offered, 1, "m0 went to shard 0");
-    assert_eq!(per_shard[1].offered, 1, "m1 went to shard 1");
+            let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+            let addr = listener.addr();
+            // One request per model name, both over the same wire endpoint.
+            for model in ["m0", "m1"] {
+                let mut s = connect(addr);
+                send_line(
+                    &mut s,
+                    &format!(
+                        r#"{{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0, "model": "{model}"}}"#
+                    ),
+                );
+                let j = read_reply(&mut BufReader::new(s));
+                assert_eq!(j.req_str("outcome").unwrap(), "completed", "{model} ({io})");
+            }
+            assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+            listener.shutdown();
+        });
+        // Affinity, not load, decided the shard: one request landed on each.
+        assert_eq!(per_shard[0].offered, 1, "m0 went to shard 0 ({io})");
+        assert_eq!(per_shard[1].offered, 1, "m1 went to shard 1 ({io})");
+    }
 }
 
 #[test]
 fn streamed_tokens_arrive_before_and_match_the_final_reply() {
-    let mut server = tiny_server();
-    let router = Router::single(server.model_name(), server.handle(), 64);
-    let listener =
-        spawn_listener("127.0.0.1:0", router, None, NetConfig::default()).expect("bind");
-    let addr = listener.addr();
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
 
-    let client = std::thread::spawn(move || {
-        let mut s = connect(addr);
-        send_line(
-            &mut s,
-            r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0, "stream": true}"#,
-        );
-        let mut reader = BufReader::new(s);
-        let mut streamed: Vec<i32> = Vec::new();
-        loop {
-            let j = read_reply(&mut reader);
-            if let Some(tok) = j.get("token") {
-                streamed.push(tok.as_f64().unwrap() as i32);
-            } else {
-                return (streamed, j);
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            send_line(
+                &mut s,
+                r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0, "stream": true}"#,
+            );
+            let mut reader = BufReader::new(s);
+            let mut streamed: Vec<i32> = Vec::new();
+            loop {
+                let j = read_reply(&mut reader);
+                if let Some(tok) = j.get("token") {
+                    streamed.push(tok.as_f64().unwrap() as i32);
+                } else {
+                    return (streamed, j);
+                }
             }
-        }
-    });
-    server.run_for(20);
-    let (streamed, fin) = client.join().unwrap();
-    assert_eq!(fin.req_str("outcome").unwrap(), "completed");
-    let ids: Vec<i32> = fin
-        .get("ids")
-        .and_then(|v| v.as_arr())
-        .unwrap()
-        .iter()
-        .map(|x| x.as_f64().unwrap() as i32)
-        .collect();
-    assert_eq!(streamed.len(), 4, "one event per generated token");
-    assert_eq!(streamed, ids, "stream and final reply agree");
-    listener.shutdown();
+        });
+        server.run_for(20);
+        let (streamed, fin) = client.join().unwrap();
+        assert_eq!(fin.req_str("outcome").unwrap(), "completed", "{io}");
+        let ids: Vec<i32> = fin
+            .get("ids")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(streamed.len(), 4, "one event per generated token ({io})");
+        assert_eq!(streamed, ids, "stream and final reply agree ({io})");
+        listener.shutdown();
+    }
 }
 
 #[test]
 fn reply_timeout_is_typed_and_releases_the_connection() {
-    let server = tiny_server(); // never run: every reply wait times out
-    let cfg = NetConfig {
-        reply_timeout: Duration::from_millis(200),
-        ..Default::default()
-    };
-    let router = Router::single(server.model_name(), server.handle(), 4);
-    let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
-    let mut s = connect(listener.addr());
-    send_line(
-        &mut s,
-        r#"{"ids": [1], "output_tokens": 1, "latency_req": 30.0}"#,
-    );
-    let mut reader = BufReader::new(s);
-    let j = read_reply(&mut reader);
-    assert_eq!(j.req_str("outcome").unwrap(), "rejected");
-    assert_eq!(j.req_str("reason").unwrap(), "timeout");
-    // The server closes after a timeout (a late reply would desync the
-    // line protocol): the next read sees EOF, and the handler exits.
-    let mut rest = String::new();
-    assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
-    assert!(listener.wait_drained(Duration::from_secs(10)));
-    assert_eq!(listener.net_metrics().net_timeouts, 1);
-    listener.shutdown();
+    for io in io_models() {
+        let server = tiny_server(); // never run: every reply wait times out
+        let cfg = NetConfig {
+            reply_timeout: Duration::from_millis(200),
+            ..net_cfg(io)
+        };
+        let router = Router::single(server.model_name(), server.handle(), 4);
+        let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
+        let mut s = connect(listener.addr());
+        send_line(
+            &mut s,
+            r#"{"ids": [1], "output_tokens": 1, "latency_req": 30.0}"#,
+        );
+        let mut reader = BufReader::new(s);
+        let j = read_reply(&mut reader);
+        assert_eq!(j.req_str("outcome").unwrap(), "rejected", "{io}");
+        assert_eq!(j.req_str("reason").unwrap(), "timeout", "{io}");
+        // The server closes after a timeout (a late reply would desync the
+        // line protocol): the next read sees EOF, and the handler exits.
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "{io}");
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        assert_eq!(listener.net_metrics().net_timeouts, 1, "{io}");
+        listener.shutdown();
+    }
 }
 
 #[test]
 fn idle_connections_are_reaped_not_leaked() {
-    let server = tiny_server(); // never run; nothing is ever submitted
-    let cfg = NetConfig {
-        idle_timeout: Duration::from_millis(200),
-        ..Default::default()
-    };
-    let router = Router::single(server.model_name(), server.handle(), 4);
-    let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
-    let s = connect(listener.addr());
-    // Send nothing: the server must hang up on us, not park a thread
-    // forever on a silent connection.
-    let mut reader = BufReader::new(s);
-    let mut line = String::new();
-    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server hangs up");
-    assert!(listener.wait_drained(Duration::from_secs(10)));
-    assert_eq!(listener.open_connections(), 0);
-    listener.shutdown();
+    for io in io_models() {
+        let server = tiny_server(); // never run; nothing is ever submitted
+        let cfg = NetConfig {
+            idle_timeout: Duration::from_millis(200),
+            ..net_cfg(io)
+        };
+        let router = Router::single(server.model_name(), server.handle(), 4);
+        let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
+        let s = connect(listener.addr());
+        // Send nothing: the server must hang up on us, not park a thread
+        // forever on a silent connection.
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        assert_eq!(
+            reader.read_line(&mut line).unwrap(),
+            0,
+            "server hangs up ({io})"
+        );
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        assert_eq!(listener.open_connections(), 0, "{io}");
+        listener.shutdown();
+    }
+}
+
+#[test]
+fn per_peer_cap_rejects_with_typed_reply_and_frees_the_slot() {
+    for io in io_models() {
+        let server = tiny_server(); // never run; the cap check is at accept
+        let cfg = NetConfig {
+            max_conns_per_peer: 2,
+            ..net_cfg(io)
+        };
+        let router = Router::single(server.model_name(), server.handle(), 4);
+        let listener = spawn_listener("127.0.0.1:0", router, None, cfg).expect("bind");
+        let addr = listener.addr();
+        let a = connect(addr);
+        let b = connect(addr);
+        // Accepts are sequential in both io models, so by the time the
+        // third connection from this peer IP is accepted, the first two
+        // hold both slots: typed `per_peer_limit` reject, then close —
+        // without ever reading a request line.
+        let c = connect(addr);
+        let mut rc = BufReader::new(c);
+        let j = read_reply(&mut rc);
+        assert_eq!(j.req_str("outcome").unwrap(), "rejected", "{io}");
+        assert_eq!(j.req_str("reason").unwrap(), "per_peer_limit", "{io}");
+        let mut rest = String::new();
+        assert_eq!(
+            rc.read_line(&mut rest).unwrap(),
+            0,
+            "closed after the typed reject ({io})"
+        );
+        // Releasing one in-cap connection frees its slot for a newcomer.
+        drop(a);
+        std::thread::sleep(Duration::from_millis(300));
+        let d = connect(addr);
+        let mut rd = BufReader::new(d);
+        rd.get_ref()
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        let mut line = String::new();
+        // No typed reject arrives: the read times out (or the idle reap
+        // eventually EOFs) instead of returning a `per_peer_limit` line.
+        if rd.read_line(&mut line).is_ok() && !line.is_empty() {
+            let j = Json::parse(line.trim()).unwrap();
+            assert_ne!(
+                j.req_str("reason").ok(),
+                Some("per_peer_limit"),
+                "slot was freed ({io})"
+            );
+        }
+        drop(b);
+        drop(rd);
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        let net = listener.net_metrics();
+        assert_eq!(net.shed_per_peer, 1, "{io}");
+        // The rejected connection is never counted as accepted, identically
+        // in both models.
+        assert_eq!(net.net_connections, 3, "{io}");
+        listener.shutdown();
+    }
+}
+
+/// A byte-at-a-time client (the classic slowloris shape) must still get a
+/// complete reply: line assembly is incremental, bounded, and per-connection
+/// — one slow writer cannot stall anyone else.
+#[test]
+fn slowloris_byte_at_a_time_request_still_completes() {
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            let line = "{\"ids\": [1, 2], \"output_tokens\": 2, \"latency_req\": 30.0}\n";
+            for b in line.as_bytes() {
+                s.write_all(std::slice::from_ref(b)).expect("write byte");
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            read_reply(&mut BufReader::new(s))
+        });
+        server.run_for(40);
+        let j = client.join().unwrap();
+        assert_eq!(j.req_str("outcome").unwrap(), "completed", "{io}");
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        listener.shutdown();
+    }
+}
+
+/// A streaming client that stops reading mid-generation must still receive
+/// every token line, in order, before the final reply — queued writes park
+/// in the out buffer (evented: re-armed on EPOLLOUT) instead of being
+/// dropped or reordered.
+#[test]
+fn slow_stream_reader_still_gets_every_token_in_order() {
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            send_line(
+                &mut s,
+                r#"{"ids": [1, 2, 3], "output_tokens": 8, "latency_req": 30.0, "stream": true}"#,
+            );
+            // Let the whole generation finish before reading a single byte:
+            // every token event is queued server-side by now.
+            std::thread::sleep(Duration::from_millis(1500));
+            let mut reader = BufReader::new(s);
+            let mut streamed: Vec<i32> = Vec::new();
+            loop {
+                let j = read_reply(&mut reader);
+                if let Some(tok) = j.get("token") {
+                    streamed.push(tok.as_f64().unwrap() as i32);
+                } else {
+                    return (streamed, j);
+                }
+            }
+        });
+        server.run_for(40);
+        let (streamed, fin) = client.join().unwrap();
+        assert_eq!(fin.req_str("outcome").unwrap(), "completed", "{io}");
+        let ids: Vec<i32> = fin
+            .get("ids")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(streamed, ids, "late reader sees the full stream ({io})");
+        listener.shutdown();
+    }
+}
+
+/// A client that vanishes with its request in flight must not leak the gate
+/// permit or the connection slot: the eventual reply hits a dead socket and
+/// the teardown releases everything.
+#[test]
+fn disconnect_mid_flight_releases_permit_and_connection() {
+    for io in io_models() {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 1);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
+        {
+            let mut s = connect(addr);
+            send_line(
+                &mut s,
+                r#"{"ids": [1, 2], "output_tokens": 2, "latency_req": 30.0}"#,
+            );
+            // Dropped here: the client is gone before its reply exists.
+        }
+        server.run_for(20);
+        assert!(listener.wait_drained(Duration::from_secs(10)), "{io}");
+        assert_eq!(
+            listener.gate_depths().iter().sum::<usize>(),
+            0,
+            "permit released ({io})"
+        );
+        assert_eq!(listener.open_connections(), 0, "{io}");
+        listener.shutdown();
+    }
+}
+
+/// The evented model must produce byte-identical wire traffic to the
+/// threaded oracle across completions, typed rejections, and streaming —
+/// after dropping the two wall-clock fields (`latency`, `epoch`) that are
+/// nondeterministic run to run even within one io model.
+#[cfg(target_os = "linux")]
+#[test]
+fn replies_are_byte_identical_across_io_models() {
+    fn session(io: IoModel) -> Vec<String> {
+        let mut server = tiny_server();
+        let router = Router::single(server.model_name(), server.handle(), 64);
+        let listener = spawn_listener("127.0.0.1:0", router, None, net_cfg(io)).expect("bind");
+        let addr = listener.addr();
+        let client = std::thread::spawn(move || {
+            let mut s = connect(addr);
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let script = [
+                r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0}"#,
+                "not json at all",
+                r#"{"ids": [1], "output_tokens": 0}"#,
+                r#"{"ids": [1], "output_tokens": 4, "model": "no-such-deployment"}"#,
+                r#"{"ids": [1, 2, 3], "output_tokens": 4, "latency_req": 30.0, "stream": true}"#,
+            ];
+            let mut lines = Vec::new();
+            for line in script {
+                send_line(&mut s, line);
+                // Collect every raw wire line up to and including the final
+                // reply for this request (stream events have no "outcome").
+                loop {
+                    let mut reply = String::new();
+                    let n = reader.read_line(&mut reply).expect("read");
+                    assert!(n > 0, "connection closed mid-script");
+                    let done = Json::parse(reply.trim())
+                        .expect("well-formed")
+                        .get("outcome")
+                        .is_some();
+                    lines.push(reply.trim_end().to_string());
+                    if done {
+                        break;
+                    }
+                }
+            }
+            lines
+        });
+        server.run_for(40);
+        let lines = client.join().unwrap();
+        assert!(listener.wait_drained(Duration::from_secs(10)));
+        listener.shutdown();
+        lines
+    }
+
+    fn normalize(lines: &[String]) -> Vec<String> {
+        lines
+            .iter()
+            .map(|l| {
+                let mut j = Json::parse(l).expect("wire line parses");
+                if let Json::Obj(m) = &mut j {
+                    m.remove("latency");
+                    m.remove("epoch");
+                }
+                j.to_string()
+            })
+            .collect()
+    }
+
+    let threaded = session(IoModel::Threaded);
+    let evented = session(IoModel::Evented);
+    assert_eq!(
+        normalize(&threaded),
+        normalize(&evented),
+        "wire replies diverge between io models"
+    );
 }

@@ -244,9 +244,12 @@ fn timer_key(payload: u64) -> SlabKey {
 // ---------------------------------------------------------------------
 
 /// What the pump delivers back to an event thread. `Tokens` always precedes
-/// the `Reply` for the same token (the pump drains the stream receiver
-/// first, and the server queues the final reply before dropping the stream
-/// sender), so the wire ordering matches the threaded path byte for byte.
+/// the `Reply`/`ShardFailed` for the same token: the pump drains the stream
+/// receiver before polling the reply, and drains it once more after the
+/// reply (or a disconnect) lands — the shard queues every token before the
+/// final reply, so that second drain is guaranteed to see any tokens that
+/// raced the first one, and the wire ordering matches the threaded path
+/// byte for byte.
 enum Completion {
     Tokens(u64, Vec<i32>),
     Reply(u64, Box<ServeResponse>),
@@ -305,6 +308,25 @@ struct WatchEntry {
     stream: Option<Receiver<i32>>,
 }
 
+/// Drain every buffered stream token; a disconnected sender just ends the
+/// stream (the reply channel, not the stream channel, classifies failure).
+fn drain_stream(w: &mut WatchEntry) -> Vec<i32> {
+    let mut tokens = Vec::new();
+    if let Some(srx) = &w.stream {
+        loop {
+            match srx.try_recv() {
+                Ok(t) => tokens.push(t),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    w.stream = None;
+                    break;
+                }
+            }
+        }
+    }
+    tokens
+}
+
 /// The shared reply pump: owns every in-flight receiver (std mpsc has no
 /// select), blocks on its inbox when nothing is in flight, and otherwise
 /// scans watched receivers on a sub-millisecond cadence. Completions go to
@@ -359,25 +381,22 @@ fn reply_pump(inbox: Receiver<PumpMsg>, threads: Vec<Arc<ThreadShared>>) {
         }
         let mut dirty = vec![false; threads.len()];
         watching.retain_mut(|w| {
-            let mut tokens = Vec::new();
-            if let Some(srx) = &w.stream {
-                loop {
-                    match srx.try_recv() {
-                        Ok(t) => tokens.push(t),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            w.stream = None;
-                            break;
-                        }
-                    }
-                }
-            }
+            let tokens = drain_stream(w);
             if !tokens.is_empty() {
                 push_completion(&threads[w.thread], Completion::Tokens(w.token, tokens));
                 dirty[w.thread] = true;
             }
             match w.reply.try_recv() {
                 Ok(resp) => {
+                    // The shard may have queued trailing stream tokens
+                    // between the drain above and this recv; receiving the
+                    // reply synchronizes with every send the shard made
+                    // before it, so one more drain sees them all and the
+                    // wire keeps tokens-before-reply byte parity.
+                    let trailing = drain_stream(w);
+                    if !trailing.is_empty() {
+                        push_completion(&threads[w.thread], Completion::Tokens(w.token, trailing));
+                    }
                     push_completion(
                         &threads[w.thread],
                         Completion::Reply(w.token, Box::new(resp)),
@@ -389,7 +408,14 @@ fn reply_pump(inbox: Receiver<PumpMsg>, threads: Vec<Arc<ThreadShared>>) {
                 Err(TryRecvError::Disconnected) => {
                     // Reply channel dropped unanswered: the shard crashed
                     // with this request in flight (same classification as
-                    // the threaded path's recv Disconnected arm).
+                    // the threaded path's recv Disconnected arm). Flush any
+                    // tokens it produced before dying first — the threaded
+                    // path reads the stream to disconnect before the reply,
+                    // and crash parity keeps that order.
+                    let trailing = drain_stream(w);
+                    if !trailing.is_empty() {
+                        push_completion(&threads[w.thread], Completion::Tokens(w.token, trailing));
+                    }
                     push_completion(&threads[w.thread], Completion::ShardFailed(w.token));
                     dirty[w.thread] = true;
                     false
@@ -534,7 +560,23 @@ impl EventThread {
             } else {
                 self.wheel.granularity().as_millis() as i32
             };
-            let n = self.epoll.wait(&mut events, timeout_ms).unwrap_or(0);
+            let n = match self.epoll.wait(&mut events, timeout_ms) {
+                Ok(n) => n,
+                Err(e) => {
+                    // wait() already retries EINTR, so this is a persistent
+                    // failure (e.g. EBADF): retrying would spin at 100%
+                    // CPU on an instant error return. Exit like shutdown —
+                    // close everything so RAII releases permits and peer
+                    // slots and the open/closed counters stay paired.
+                    eprintln!("net-evt-{}: epoll_wait failed, closing: {e}", self.tid);
+                    self.deregister_listener();
+                    self.drain_shared_queue();
+                    for key in self.conns.keys() {
+                        self.close_conn(key);
+                    }
+                    return;
+                }
+            };
             for payload in self.wheel.advance_to(self.tick_now()) {
                 self.on_timer(payload);
             }
@@ -825,6 +867,7 @@ impl EventThread {
     }
 
     fn do_read(&mut self, key: SlabKey) {
+        let max_line = self.ctx.cfg.max_line_bytes;
         let mut chunk = [0u8; READ_CHUNK];
         loop {
             let Some(conn) = self.conns.get_mut(key) else {
@@ -838,6 +881,16 @@ impl EventThread {
                 Ok(n) => {
                     conn.last_activity = Instant::now();
                     conn.buf.extend_from_slice(&chunk[..n]);
+                    // Cap buffer growth and per-event work: once a full
+                    // line cap's worth is buffered, stop reading and let
+                    // advance_conn consume complete lines or reject the
+                    // oversize one — an endless unterminated line can't
+                    // grow `buf` past max_line + one chunk or starve the
+                    // other connections on this thread (level-triggered
+                    // EPOLLIN re-fires for whatever is still unread).
+                    if conn.buf.len() > max_line {
+                        break;
+                    }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
@@ -1310,6 +1363,82 @@ mod tests {
             assert_eq!(timer_kind(payload), kind);
             assert_eq!(timer_key(payload), key);
         }
+    }
+
+    #[test]
+    fn pump_emits_tokens_before_terminal_completion() {
+        let shared = ThreadShared::new().expect("eventfd");
+        let (tx, rx) = channel();
+        let pump_shared = vec![Arc::clone(&shared)];
+        let pump = std::thread::spawn(move || reply_pump(rx, pump_shared));
+
+        let wait_completions = |n: usize| -> Vec<Completion> {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                {
+                    let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                    if q.completions.len() >= n {
+                        return std::mem::take(&mut q.completions);
+                    }
+                }
+                assert!(
+                    Instant::now() < deadline,
+                    "pump never delivered {n} completions"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        };
+
+        // Normal completion: stream tokens queued, then the final reply —
+        // every token must be forwarded, strictly before the Reply.
+        let (rtx, rrx) = channel();
+        let (stx, srx) = channel();
+        for t in [1, 2, 3] {
+            stx.send(t).unwrap();
+        }
+        rtx.send(ServeResponse {
+            outcome: ServeOutcome::Completed,
+            tokens: vec![1, 2, 3],
+            latency: 0.0,
+            epoch: Some(0),
+            reason: None,
+        })
+        .unwrap();
+        drop(stx);
+        tx.send(PumpMsg::Watch {
+            thread: 0,
+            token: 7,
+            reply: rrx,
+            stream: Some(srx),
+        })
+        .unwrap();
+        let completions = wait_completions(2);
+        assert!(matches!(&completions[0], Completion::Tokens(7, t) if *t == vec![1, 2, 3]));
+        assert!(matches!(&completions[1], Completion::Reply(7, _)));
+
+        // Shard crash: tokens queued, then the reply sender dropped
+        // unanswered — buffered tokens still precede the typed failure,
+        // matching the threaded path's stream-to-disconnect-then-reply
+        // order.
+        let (rtx2, rrx2) = channel::<ServeResponse>();
+        let (stx2, srx2) = channel();
+        stx2.send(9).unwrap();
+        drop(rtx2);
+        tx.send(PumpMsg::Watch {
+            thread: 0,
+            token: 8,
+            reply: rrx2,
+            stream: Some(srx2),
+        })
+        .unwrap();
+        let completions = wait_completions(2);
+        assert!(matches!(&completions[0], Completion::Tokens(8, t) if *t == vec![9]));
+        assert!(matches!(&completions[1], Completion::ShardFailed(8)));
+        drop(stx2);
+
+        tx.send(PumpMsg::Shutdown).unwrap();
+        drop(tx);
+        pump.join().unwrap();
     }
 
     /// A writer that accepts a fixed number of bytes per call until its

@@ -129,6 +129,102 @@ impl ClusterSpec {
     }
 }
 
+/// One shard's slice of a (possibly heterogeneous) edge fleet: the GPU
+/// model its partition is built from and how many of those GPUs the shard's
+/// *group* contributes to the pool. Shards sharing an identical [`GpuSpec`]
+/// form a migration group — the sharded driver's between-epoch
+/// re-partitioning moves headroom freely inside a group (the devices are
+/// interchangeable) and never across groups (a TX2 cannot become an Orin).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSpec {
+    pub gpu: GpuSpec,
+    /// GPUs this shard contributes to its migration group's pool. Explicit
+    /// (TOML/builder) topologies require ≥ 1 ([`ClusterTopology::validate`]);
+    /// the homogeneous shim may emit 0 for a shard when the pool is smaller
+    /// than the shard count — the driver then reports `InsufficientGpus`.
+    pub num_gpus: usize,
+}
+
+/// The typed shard-configuration surface: one [`ShardSpec`] per shard, in
+/// shard order. This is the single source the CLI (`--shards`, `--topology`
+/// via scenario files), scenario TOML (`[[cluster.shard]]` tables) and
+/// [`DriverBuilder`](crate::driver::DriverBuilder) all reduce to — the
+/// legacy `--shards N` / `[cluster] shards` knobs are documented shims that
+/// expand to [`ClusterTopology::homogeneous`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ClusterTopology {
+    /// The legacy shim: `shards` identical partitions carved out of one
+    /// homogeneous [`ClusterSpec`] pool. Per-shard counts are only group
+    /// bookkeeping here (all shards share one migration group whose pool is
+    /// `cluster.num_gpus`), so the near-equal split below is cosmetic — the
+    /// driver's apportionment over the group total decides actual counts,
+    /// exactly as the pre-topology code did. The split is *exact*: totals
+    /// are never rounded up, so an undersized pool (fewer GPUs than shards)
+    /// still surfaces as the driver's typed `InsufficientGpus` error rather
+    /// than silently growing.
+    pub fn homogeneous(cluster: ClusterSpec, shards: usize) -> Self {
+        assert!(shards >= 1, "a topology needs at least one shard");
+        let base = cluster.num_gpus / shards;
+        let extra = cluster.num_gpus % shards;
+        ClusterTopology {
+            shards: (0..shards)
+                .map(|i| ShardSpec {
+                    gpu: cluster.gpu.clone(),
+                    num_gpus: base + usize::from(i < extra),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total GPUs across every shard (the whole pool).
+    pub fn total_gpus(&self) -> usize {
+        self.shards.iter().map(|s| s.num_gpus).sum()
+    }
+
+    /// Migration groups: shard indices partitioned by [`GpuSpec`] equality,
+    /// in first-occurrence order, members in shard-index order. One group
+    /// for a homogeneous topology — where group-wise apportionment reduces
+    /// bit-for-bit to the single global apportionment.
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let mut groups: Vec<(GpuSpec, Vec<usize>)> = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            match groups.iter_mut().find(|(g, _)| *g == s.gpu) {
+                Some((_, members)) => members.push(i),
+                None => groups.push((s.gpu.clone(), vec![i])),
+            }
+        }
+        groups.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Structural validation shared by every entry point: at least one
+    /// shard, and at least one GPU per shard entry.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards.is_empty() {
+            return Err("topology has no shards".into());
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.num_gpus == 0 {
+                return Err(format!("topology shard {i} has zero GPUs"));
+            }
+            if !(s.gpu.flops.is_finite() && s.gpu.flops > 0.0) {
+                return Err(format!("topology shard {i} has non-positive FLOPs"));
+            }
+            if s.gpu.mem_bytes == 0 {
+                return Err(format!("topology shard {i} has zero memory"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Per-GPU execution state for the NoB (no-batching) baseline: each GPU
 /// accepts one request when idle.
 #[derive(Debug, Clone)]
@@ -269,6 +365,57 @@ mod tests {
             }
         }
         assert!(!prev_fit, "10k huge requests must eventually overflow");
+    }
+
+    #[test]
+    fn homogeneous_topology_expands_the_shards_shim() {
+        let t = ClusterTopology::homogeneous(ClusterSpec::paper_default(), 3);
+        assert_eq!(t.shard_count(), 3);
+        assert_eq!(t.total_gpus(), 20);
+        assert_eq!(t.groups(), vec![vec![0, 1, 2]], "one migration group");
+        assert!(t.validate().is_ok());
+        // One shard = the unsharded pool.
+        let one = ClusterTopology::homogeneous(ClusterSpec::paper_default(), 1);
+        assert_eq!(one.shards[0].num_gpus, 20);
+    }
+
+    #[test]
+    fn heterogeneous_topology_groups_by_gpu_spec() {
+        let fast = GpuSpec {
+            name: "orin".into(),
+            flops: 5.32e12,
+            mem_bytes: 64 * (1 << 30),
+        };
+        let t = ClusterTopology {
+            shards: vec![
+                ShardSpec {
+                    gpu: fast.clone(),
+                    num_gpus: 4,
+                },
+                ShardSpec {
+                    gpu: GpuSpec::jetson_tx2(),
+                    num_gpus: 10,
+                },
+                ShardSpec {
+                    gpu: fast.clone(),
+                    num_gpus: 2,
+                },
+            ],
+        };
+        assert_eq!(t.total_gpus(), 16);
+        assert_eq!(t.groups(), vec![vec![0, 2], vec![1]]);
+        assert!(t.validate().is_ok());
+        // Zero-GPU and degenerate-spec entries are typed config errors.
+        let mut bad = t.clone();
+        bad.shards[1].num_gpus = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = t.clone();
+        bad.shards[0].gpu.flops = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = t;
+        bad.shards[2].gpu.mem_bytes = 0;
+        assert!(bad.validate().is_err());
+        assert!(ClusterTopology { shards: vec![] }.validate().is_err());
     }
 
     #[test]

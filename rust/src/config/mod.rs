@@ -6,9 +6,9 @@
 
 pub mod toml;
 
-use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::cluster::{ClusterSpec, ClusterTopology, GpuSpec, ShardSpec};
 use crate::coordinator::{EpochParams, PartitionPolicy};
-use crate::driver::BatchingMode;
+use crate::driver::{AutoscalePolicy, BatchingMode, ElasticPolicy, EpochTunePolicy};
 use crate::model::LlmSpec;
 use crate::quant::{self, QuantSpec};
 use crate::sim::SimConfig;
@@ -103,23 +103,122 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         workers: doc.u64_or("scheduler.workers", 0) as usize,
     };
 
+    // `[[cluster.shard]]` tables: the explicit (possibly heterogeneous)
+    // shard layout. Each table carves out its own partition — `gpu_name`,
+    // `gpu_flops` and `gpu_mem_bytes` default to the `[cluster]` GPU model,
+    // `num_gpus` to 1 — and overrides both `cluster` and `shards` for the
+    // sharded paths.
+    let shard_tables = doc.array_table_len("cluster.shard");
+    let topology = if shard_tables > 0 {
+        let mut specs = Vec::with_capacity(shard_tables);
+        for i in 0..shard_tables {
+            let key = |k: &str| format!("cluster.shard.{i}.{k}");
+            specs.push(ShardSpec {
+                gpu: GpuSpec {
+                    name: doc.str_or(&key("gpu_name"), &cluster.gpu.name),
+                    flops: doc.f64_or(&key("gpu_flops"), cluster.gpu.flops),
+                    mem_bytes: doc.u64_or(&key("gpu_mem_bytes"), cluster.gpu.mem_bytes),
+                },
+                num_gpus: doc.u64_or(&key("num_gpus"), 1) as usize,
+            });
+        }
+        let t = ClusterTopology { shards: specs };
+        t.validate().map_err(|e| format!("[[cluster.shard]]: {e}"))?;
+        Some(t)
+    } else {
+        None
+    };
+
     // `[cluster] shards = N` + `[cluster] partition_policy`: split the GPU
     // pool into N partitions behind the sharded dispatch layer. Validated
     // here so the min-1-GPU-per-shard guarantee fails at load time with a
-    // config error, not mid-run.
+    // config error, not mid-run. The legacy shim must agree with an
+    // explicit topology when both are present.
     let shards = doc.u64_or("cluster.shards", 1) as usize;
     if shards == 0 {
         return Err("cluster.shards must be >= 1".into());
     }
-    if shards > cluster.num_gpus {
-        return Err(format!(
-            "cluster.shards = {shards} exceeds cluster.num_gpus = {} \
-             (every shard needs at least one GPU)",
-            cluster.num_gpus
-        ));
-    }
+    let shards = match &topology {
+        Some(t) => {
+            if doc.get("cluster.shards").is_some() && shards != t.shard_count() {
+                return Err(format!(
+                    "cluster.shards = {shards} disagrees with {} [[cluster.shard]] tables \
+                     (drop the shim or make them match)",
+                    t.shard_count()
+                ));
+            }
+            t.shard_count()
+        }
+        None => {
+            if shards > cluster.num_gpus {
+                return Err(format!(
+                    "cluster.shards = {shards} exceeds cluster.num_gpus = {} \
+                     (every shard needs at least one GPU)",
+                    cluster.num_gpus
+                ));
+            }
+            shards
+        }
+    };
     let partition =
         PartitionPolicy::parse(&doc.str_or("cluster.partition_policy", "load-proportional"))?;
+
+    // `[elastic]`: opt-in elastic behaviours for the sharded paths. An
+    // absent section leaves everything off — which is what keeps fixed-count
+    // runs bit-identical to earlier revisions. Autoscaling arms when either
+    // bound is given; epoch tuning arms when either duration bound is given.
+    let autoscale = if doc.get("elastic.autoscale_min").is_some()
+        || doc.get("elastic.autoscale_max").is_some()
+    {
+        let min = doc.u64_or("elastic.autoscale_min", 1) as usize;
+        let max = doc.u64_or("elastic.autoscale_max", min.max(shards) as u64) as usize;
+        if min == 0 || max < min {
+            return Err(format!(
+                "elastic.autoscale bounds [{min}, {max}] must satisfy 1 <= min <= max"
+            ));
+        }
+        let mut p = AutoscalePolicy::new(min, max);
+        p.scale_up_ratio = doc.f64_or("elastic.scale_up_ratio", p.scale_up_ratio);
+        p.scale_down_ratio = doc.f64_or("elastic.scale_down_ratio", p.scale_down_ratio);
+        if !(p.scale_up_ratio > 0.0) || !(p.scale_down_ratio >= 0.0) {
+            return Err("elastic scale ratios must be positive".into());
+        }
+        Some(p)
+    } else {
+        None
+    };
+    let tune_epoch = if doc.get("elastic.tune_epoch_min").is_some()
+        || doc.get("elastic.tune_epoch_max").is_some()
+    {
+        let min = doc.f64_or("elastic.tune_epoch_min", epoch.duration);
+        let max = doc.f64_or("elastic.tune_epoch_max", min.max(epoch.duration));
+        if !(min > 0.0 && max >= min) {
+            return Err(format!(
+                "elastic.tune_epoch bounds [{min}, {max}] must satisfy 0 < min <= max"
+            ));
+        }
+        let mut p = EpochTunePolicy::new(min, max);
+        p.grow = doc.f64_or("elastic.tune_grow", p.grow);
+        p.shrink = doc.f64_or("elastic.tune_shrink", p.shrink);
+        p.calm_epochs = doc.u64_or("elastic.tune_calm_epochs", p.calm_epochs);
+        if !(p.grow >= 1.0) || !(p.shrink > 0.0 && p.shrink <= 1.0) || p.calm_epochs == 0 {
+            return Err(
+                "elastic.tune_grow must be >= 1, tune_shrink in (0, 1], tune_calm_epochs >= 1"
+                    .into(),
+            );
+        }
+        Some(p)
+    } else {
+        None
+    };
+    let elastic = ElasticPolicy {
+        stealing: doc
+            .get("elastic.stealing")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+        autoscale,
+        tune_epoch,
+    };
 
     // `[chaos]`: deterministic fault injection for the supervised sharded
     // path. All probabilities default to 0.0 — an absent section leaves
@@ -142,6 +241,14 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
             return Err(format!("{key} = {p} must be within [0, 1]"));
         }
     }
+    // The supervised (chaos) path indexes health state by a fixed shard
+    // count; autoscaling changes it. Reject the combination at load time
+    // rather than tripping the driver's assertion mid-run.
+    if chaos.enabled() && elastic.autoscale.is_some() {
+        return Err("[chaos] fault injection and [elastic] autoscaling are \
+                    mutually exclusive (supervision needs a fixed shard set)"
+            .into());
+    }
 
     Ok(SimConfig {
         model,
@@ -158,6 +265,8 @@ pub fn sim_config_from_doc(doc: &toml::TomlDoc) -> Result<SimConfig, String> {
         scheduler,
         shards,
         partition,
+        topology,
+        elastic,
         chaos,
     })
 }
@@ -284,6 +393,89 @@ s_pad = 256
         assert!(!cfg.chaos.enabled());
         // Probabilities outside [0, 1] are a config error, not a clamp.
         let doc = toml::parse("[chaos]\npanic_prob = 1.5\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn shard_tables_build_a_heterogeneous_topology() {
+        let doc = toml::parse(
+            r#"
+[cluster]
+gpu_flops = 1.33e12
+gpu_mem_bytes = 8_000_000_000
+[[cluster.shard]]
+num_gpus = 12
+[[cluster.shard]]
+gpu_name = "agx-orin"
+gpu_flops = 5.0e12
+gpu_mem_bytes = 32_000_000_000
+num_gpus = 4
+"#,
+        )
+        .unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        let t = cfg.topology.expect("tables produce a topology");
+        assert_eq!(t.shard_count(), 2);
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.shard_count(), 2);
+        // First table inherits the [cluster] GPU model; second overrides it.
+        assert_eq!(t.shards[0].gpu.flops, 1.33e12);
+        assert_eq!(t.shards[0].num_gpus, 12);
+        assert_eq!(t.shards[1].gpu.name, "agx-orin");
+        assert_eq!(t.shards[1].gpu.flops, 5.0e12);
+        assert_eq!(t.shards[1].num_gpus, 4);
+        assert_eq!(t.groups().len(), 2);
+        // No tables → no topology; the shim path is untouched.
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert!(cfg.topology.is_none());
+        // The shim must agree with an explicit topology when both appear.
+        let doc = toml::parse("[cluster]\nshards = 3\n[[cluster.shard]]\nnum_gpus = 2\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+        let doc = toml::parse("[cluster]\nshards = 1\n[[cluster.shard]]\nnum_gpus = 2\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_ok());
+        // Zero-GPU shard entries are a load-time error.
+        let doc = toml::parse("[[cluster.shard]]\nnum_gpus = 0\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn elastic_section_parses_and_validates() {
+        let doc = toml::parse(
+            r#"
+[cluster]
+shards = 2
+[elastic]
+stealing = true
+autoscale_min = 1
+autoscale_max = 6
+scale_down_ratio = 0.1
+tune_epoch_min = 1.0
+tune_epoch_max = 8.0
+tune_calm_epochs = 2
+"#,
+        )
+        .unwrap();
+        let cfg = sim_config_from_doc(&doc).unwrap();
+        assert!(cfg.elastic.stealing);
+        let a = cfg.elastic.autoscale.expect("bounds arm the autoscaler");
+        assert_eq!((a.min_shards, a.max_shards), (1, 6));
+        assert_eq!(a.scale_up_ratio, 1.0, "default preserved");
+        assert_eq!(a.scale_down_ratio, 0.1);
+        let t = cfg.elastic.tune_epoch.expect("bounds arm the tuner");
+        assert_eq!((t.min_duration, t.max_duration), (1.0, 8.0));
+        assert_eq!(t.calm_epochs, 2);
+        // Absent section: everything off (the bit-parity default).
+        let cfg = sim_config_from_doc(&toml::parse("").unwrap()).unwrap();
+        assert!(!cfg.elastic.stealing);
+        assert!(cfg.elastic.autoscale.is_none());
+        assert!(cfg.elastic.tune_epoch.is_none());
+        // Inverted bounds are a config error.
+        let doc = toml::parse("[elastic]\nautoscale_min = 4\nautoscale_max = 2\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+        let doc = toml::parse("[elastic]\ntune_epoch_min = 5.0\ntune_epoch_max = 1.0\n").unwrap();
+        assert!(sim_config_from_doc(&doc).is_err());
+        // Autoscaling and chaos are mutually exclusive.
+        let doc = toml::parse("[elastic]\nautoscale_max = 4\n[chaos]\npanic_prob = 0.1\n").unwrap();
         assert!(sim_config_from_doc(&doc).is_err());
     }
 

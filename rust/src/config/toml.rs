@@ -1,9 +1,13 @@
 //! Minimal TOML-subset parser for scenario files (no `toml` crate offline).
 //!
 //! Supported grammar — everything the scenario schema needs:
-//! `[section]` and `[section.sub]` headers, `key = value` pairs with string,
-//! integer, float, boolean and homogeneous-array values, `#` comments, and
-//! blank lines. Keys are flattened to `section.sub.key` paths.
+//! `[section]` and `[section.sub]` headers, `[[section.sub]]` array-of-tables
+//! headers, `key = value` pairs with string, integer, float, boolean and
+//! homogeneous-array values, `#` comments, and blank lines. Keys are flattened
+//! to `section.sub.key` paths; the i-th `[[section.sub]]` table flattens to
+//! `section.sub.<i>.key` (zero-based), so `[[cluster.shard]]` entries read back
+//! as `cluster.shard.0.num_gpus`, `cluster.shard.1.num_gpus`, … and
+//! [`TomlDoc::array_table_len`] reports how many tables were declared.
 
 use std::collections::BTreeMap;
 
@@ -92,6 +96,29 @@ impl TomlDoc {
                 .collect()
         })
     }
+
+    /// Number of `[[prefix]]` array-of-tables entries in the document.
+    ///
+    /// Tables flatten to `prefix.<i>.key`, so this scans for the smallest
+    /// index with no keys under it. An empty `[[prefix]]` table (header with
+    /// no keys) is invisible here — every schema that uses array tables
+    /// requires at least one key per entry, so this is not a practical loss.
+    pub fn array_table_len(&self, prefix: &str) -> usize {
+        let mut n = 0;
+        loop {
+            let needle = format!("{prefix}.{n}.");
+            let found = self
+                .entries
+                .range(needle.clone()..)
+                .next()
+                .map(|(k, _)| k.starts_with(&needle))
+                .unwrap_or(false);
+            if !found {
+                return n;
+            }
+            n += 1;
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -112,10 +139,30 @@ impl std::error::Error for TomlError {}
 pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
     let mut doc = TomlDoc::default();
     let mut section = String::new();
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
     for (idx, raw) in src.lines().enumerate() {
         let lineno = idx + 1;
         let line = strip_comment(raw).trim().to_string();
         if line.is_empty() {
+            continue;
+        }
+        if line.starts_with("[[") {
+            if !line.ends_with("]]") {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "unterminated array-of-tables header".into(),
+                });
+            }
+            let name = line[2..line.len() - 2].trim().to_string();
+            if name.is_empty() {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "empty array-of-tables name".into(),
+                });
+            }
+            let index = array_counts.entry(name.clone()).or_insert(0);
+            section = format!("{name}.{index}");
+            *index += 1;
             continue;
         }
         if line.starts_with('[') {
@@ -276,5 +323,41 @@ flops = 1.33e12
     fn underscored_ints() {
         let doc = parse("big = 1_000_000\n").unwrap();
         assert_eq!(doc.u64_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn array_of_tables_flatten_to_indexed_paths() {
+        let doc = parse(
+            r#"
+[cluster]
+partition_policy = "load"
+[[cluster.shard]]
+gpu_name = "jetson-tx2"
+num_gpus = 12
+[[cluster.shard]]
+gpu_name = "agx-orin"
+gpu_flops = 5.0e12
+num_gpus = 8
+[workload]
+epochs = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.array_table_len("cluster.shard"), 2);
+        assert_eq!(doc.str_or("cluster.shard.0.gpu_name", ""), "jetson-tx2");
+        assert_eq!(doc.u64_or("cluster.shard.0.num_gpus", 0), 12);
+        assert_eq!(doc.str_or("cluster.shard.1.gpu_name", ""), "agx-orin");
+        assert_eq!(doc.f64_or("cluster.shard.1.gpu_flops", 0.0), 5.0e12);
+        assert_eq!(doc.u64_or("cluster.shard.1.num_gpus", 0), 8);
+        // A later plain section ends the array table scope.
+        assert_eq!(doc.u64_or("workload.epochs", 0), 3);
+        // Independent array names keep independent counters.
+        assert_eq!(doc.array_table_len("workload"), 0);
+    }
+
+    #[test]
+    fn array_of_tables_header_errors() {
+        assert!(parse("[[unterminated\n").is_err());
+        assert!(parse("[[ ]]\nx = 1\n").is_err());
     }
 }

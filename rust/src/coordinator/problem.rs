@@ -41,6 +41,13 @@ impl EpochParams {
 }
 
 /// Everything constant during one scheduling decision.
+///
+/// `cluster` is the *partition* this decision schedules against, not the
+/// whole edge fleet: under heterogeneous sharding each shard's
+/// `ProblemInstance` carries its own per-GPU FLOPs/memory
+/// (`cluster.gpu`), so constraints (1b)–(1d) — compute-time feasibility
+/// and the KV memory bound — are evaluated against the shard's real
+/// capacity, never a fleet-wide average.
 #[derive(Debug, Clone)]
 pub struct ProblemInstance {
     pub cost: CostModel,

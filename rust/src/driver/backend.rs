@@ -131,6 +131,26 @@ pub trait ExecutionBackend {
     fn cluster_resized(&mut self, cluster: &crate::cluster::ClusterSpec) {
         let _ = cluster;
     }
+
+    /// Could this backend *ever* admit `req` — the thief-side KV gate of
+    /// elastic work stealing. The sharded driver only migrates a queued
+    /// request onto another shard when that shard's backend answers yes, so
+    /// a steal never parks work behind an admission gate that can never
+    /// open. Epoch backends hold no admission state: always yes. The
+    /// continuous backend answers from its KV ledger (`fits_alone`).
+    fn can_admit(&self, req: &Request) -> bool {
+        let _ = req;
+        true
+    }
+
+    /// Does this backend hold no in-flight or gate-pending work at all —
+    /// the autoscaler's KV-safe retirement check (a shard is only drained
+    /// and retired when both its driver queue and its backend are empty, so
+    /// scale-down can never strand admitted work). Epoch backends complete
+    /// everything inside `execute`: always idle between epochs.
+    fn is_idle(&self) -> bool {
+        true
+    }
 }
 
 /// Cost-model execution: the testbed stand-in used by the simulator.

@@ -527,6 +527,20 @@ impl ExecutionBackend for ContinuousBackend {
         self.template.cluster = cluster.clone();
         self.ledger.set_num_gpus(cluster.num_gpus);
     }
+
+    /// Thief-side KV gate for elastic work stealing: only accept a stolen
+    /// request this shard's ledger could ever admit on its own (the same
+    /// hopelessness screen `admit_due` applies), so a steal never parks work
+    /// behind a gate that cannot open.
+    fn can_admit(&self, req: &Request) -> bool {
+        self.ledger.fits_alone(self.kv_bytes(req))
+    }
+
+    /// Idle means nothing decoding and nothing waiting at the admission
+    /// gate — the autoscaler's KV-safe retirement condition.
+    fn is_idle(&self) -> bool {
+        self.flights.is_empty() && self.pending.is_empty()
+    }
 }
 
 #[cfg(test)]

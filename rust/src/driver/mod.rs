@@ -54,7 +54,8 @@ pub use chaos::{
 pub use clock::{Clock, SimClock, WallClock};
 pub use continuous::{BatchingMode, ContinuousBackend, KvLedger};
 pub use sharded::{
-    pick_least_loaded, Shard, ShardHealth, ShardedConfig, ShardedDriver, PARK_AFTER_QUICK_CRASHES,
+    pick_least_loaded, AutoscalePolicy, DriverBuilder, ElasticPolicy, EpochTunePolicy, Shard,
+    ShardHealth, ShardedConfig, ShardedDriver, PARK_AFTER_QUICK_CRASHES,
 };
 
 use crate::cluster::ClusterSpec;
@@ -196,6 +197,14 @@ impl<P> EpochDriver<P> {
         self.template.cluster = cluster;
     }
 
+    /// Retarget the epoch length. Called by the sharded driver's
+    /// epoch-duration auto-tuner between epochs; like `set_cluster`, the
+    /// change is frozen into the next `ProblemInstance`, never a running one.
+    pub fn set_epoch_duration(&mut self, duration: f64) {
+        debug_assert!(duration.is_finite() && duration > 0.0);
+        self.template.epoch.duration = duration;
+    }
+
     /// The queued requests in queue order — the sharded driver's demand
     /// feedback signal for load-proportional re-partitioning.
     pub fn queued_requests(&self) -> impl Iterator<Item = &Request> + '_ {
@@ -228,6 +237,23 @@ impl<P> EpochDriver<P> {
     /// arrivals were counted `offered` when first admitted).
     pub fn requeue(&mut self, entries: Vec<QueuedRequest<P>>) {
         self.queue.extend(entries);
+    }
+
+    /// The newest queued request, if any — what a steal would take. The
+    /// elastic steal pass inspects this before committing so the thief's
+    /// KV gate and the imbalance rule are checked against the actual entry.
+    pub fn back_request(&self) -> Option<&Request> {
+        self.queue.last().map(|e| &e.req)
+    }
+
+    /// Pop the most-recently queued entry — elastic work stealing's donor
+    /// hook. Taking from the back preserves strict FCFS among the donor's
+    /// remaining waiters and migrates the arrival with the most deadline
+    /// slack left. Metrics are untouched here: the caller moves the
+    /// `offered` count together with the request (decrement on the donor,
+    /// re-count through the thief's `offer`), exactly the redispatch rule.
+    pub fn steal_from_back(&mut self) -> Option<QueuedRequest<P>> {
+        self.queue.pop()
     }
 
     fn is_stale(&self, r: &Request, now: f64) -> bool {

@@ -72,27 +72,70 @@
 //! Unsupervised drivers take none of these paths — not even the
 //! `catch_unwind` — so the bit-parity contracts above are untouched.
 
-use crate::cluster::{ClusterSpec, GpuSpec};
+//! ## Elasticity (opt-in, [`ElasticPolicy`] via [`DriverBuilder`])
+//!
+//! Three independent mechanisms, all off by default (an elastic-off driver
+//! at fixed shard count is bit-identical to the pre-elastic module):
+//!
+//! - **Heterogeneous topologies** ([`ClusterTopology`]): each shard carries
+//!   its own [`GpuSpec`], so the cost model, DFTSP feasibility and the KV
+//!   ledger all see the shard's real per-GPU FLOPs/memory. Shards with an
+//!   identical spec form a *migration group*; re-partitioning apportions
+//!   headroom group-wise (a TX2 never becomes an Orin). A homogeneous
+//!   topology is one group — group-wise apportionment then reduces
+//!   bit-for-bit to the old single-pool apportionment.
+//! - **Work stealing** ([`ElasticPolicy::stealing`]): after re-partitioning
+//!   and before the fan-out, under-loaded shards pull *queued* (never
+//!   in-flight) requests from overloaded same-deployment shards. Donor
+//!   choice is deterministic (deepest queue, ties to the lowest index), the
+//!   moved entry is the donor's newest arrival (strict FCFS among its
+//!   remaining waiters), a steal must strictly reduce FLOPs-normalized
+//!   imbalance, and the thief's backend must pass its KV gate
+//!   ([`ExecutionBackend::can_admit`]) — stolen work is never parked behind
+//!   an admission gate that cannot open. `offered` moves with the request
+//!   (donor decrements, thief's `offer` re-counts) so conservation closes.
+//! - **Autoscaling + epoch tuning** ([`AutoscalePolicy`],
+//!   [`EpochTunePolicy`]): one scaling action per epoch tick (the
+//!   psyche-style phase-tick rule). When queued demand exceeds what the
+//!   fleet clears in an epoch, the most-loaded shard is cloned (same
+//!   deployment and spec, bootstrap GPU borrowed inside its migration
+//!   group); when demand collapses, the least-loaded *idle* shard (empty
+//!   queue, idle backend — KV-safe) retires and its GPUs return to the
+//!   group. Retired metrics are preserved and merged first. The epoch tuner
+//!   watches `Metrics::epoch_overruns`: overruns grow the epoch, a calm
+//!   streak shrinks it, both clamped. Autoscaling is incompatible with
+//!   supervision (health state is indexed per shard) — the builder rejects
+//!   the combination.
+
+use crate::cluster::{ClusterSpec, ClusterTopology, GpuSpec};
 use crate::coordinator::{
     partition_gpus_by_load, Deployment, EpochParams, PartitionError, PartitionPolicy, Scheduler,
 };
 use crate::driver::chaos::{backoff_epochs, chaos_stream};
-use crate::driver::{DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate};
+use crate::driver::{
+    DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate, SPadPolicy, StalePolicy,
+};
 use crate::metrics::Metrics;
 use crate::model::CostModel;
 use crate::request::Request;
 use crate::util::rng::{splitmix64, Rng};
-use crate::wireless::{ChannelParams, RadioParams};
+use crate::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 
-/// Everything the dispatch layer needs to stand up its shards.
+/// Everything the dispatch layer needs to stand up its shards. Assembled
+/// by [`DriverBuilder`] — call sites should go through the builder rather
+/// than filling this struct positionally.
 #[derive(Debug, Clone)]
 pub struct ShardedConfig {
     /// One entry per shard: the (model, quantization) pair it serves.
     /// Several shards may host the same deployment (pure data-parallel
     /// scale-out); routing then balances across them.
     pub deployments: Vec<Deployment>,
-    /// The total GPU pool being partitioned.
-    pub cluster: ClusterSpec,
+    /// The GPU pool being partitioned, one
+    /// [`ShardSpec`](crate::cluster::ShardSpec) per shard (same
+    /// order and length as `deployments`). Use
+    /// [`ClusterTopology::homogeneous`] for the legacy single-`ClusterSpec`
+    /// shape.
+    pub topology: ClusterTopology,
     pub partition: PartitionPolicy,
     /// Per-shard epoch-protocol policy (stale rule, s', allocation).
     pub policy: DriverPolicy,
@@ -102,6 +145,77 @@ pub struct ShardedConfig {
     /// Run seed; shard i draws from a stream split off it (shard 0 keeps
     /// the run stream itself — the 1-shard parity contract).
     pub seed: u64,
+    /// Work stealing / autoscaling / epoch tuning (module docs §Elastic).
+    /// All off by [`Default`]. Note `autoscale` needs shard factories and
+    /// is therefore armed only through [`DriverBuilder::build`] — a config
+    /// handed straight to [`ShardedDriver::new`] runs with stealing and
+    /// epoch tuning only.
+    pub elastic: ElasticPolicy,
+}
+
+/// Opt-in elastic behaviors (module docs §Elastic). `Default` turns every
+/// mechanism off, which is the bit-parity configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticPolicy {
+    /// Cross-shard work stealing at the epoch boundary.
+    pub stealing: bool,
+    /// Between-epoch shard autoscaling ([`DriverBuilder`] only).
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Epoch-duration auto-tuning from observed `epoch_overruns`.
+    pub tune_epoch: Option<EpochTunePolicy>,
+}
+
+/// Shard-count autoscaling bounds and thresholds. Utilization is queued
+/// β-weighted FLOPs over the FLOPs the fleet's partitions deliver in one
+/// epoch (demand the next epoch cannot clear ⇒ > 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalePolicy {
+    pub min_shards: usize,
+    pub max_shards: usize,
+    /// Scale up when fleet utilization exceeds this (default 1.0 — more
+    /// than one epoch's worth of work is queued).
+    pub scale_up_ratio: f64,
+    /// Scale down when fleet utilization falls below this (default 0.25).
+    pub scale_down_ratio: f64,
+}
+
+impl AutoscalePolicy {
+    pub fn new(min_shards: usize, max_shards: usize) -> Self {
+        AutoscalePolicy {
+            min_shards: min_shards.max(1),
+            max_shards: max_shards.max(min_shards.max(1)),
+            scale_up_ratio: 1.0,
+            scale_down_ratio: 0.25,
+        }
+    }
+}
+
+/// Epoch-duration auto-tuning: grow on observed overruns, shrink after a
+/// calm streak, clamped to `[min_duration, max_duration]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochTunePolicy {
+    pub min_duration: f64,
+    pub max_duration: f64,
+    /// Multiplier applied when the last epoch overran (default 1.25).
+    pub grow: f64,
+    /// Multiplier applied after `calm_epochs` overrun-free epochs
+    /// (default 0.9).
+    pub shrink: f64,
+    /// Overrun-free epochs before the duration shrinks (default 4).
+    pub calm_epochs: u64,
+}
+
+impl EpochTunePolicy {
+    pub fn new(min_duration: f64, max_duration: f64) -> Self {
+        assert!(min_duration > 0.0 && max_duration >= min_duration);
+        EpochTunePolicy {
+            min_duration,
+            max_duration,
+            grow: 1.25,
+            shrink: 0.9,
+            calm_epochs: 4,
+        }
+    }
 }
 
 /// Least-loaded pick among candidate shard indices: minimum load, ties to
@@ -185,17 +299,55 @@ struct Supervision<B> {
     born_epoch: Vec<u64>,
 }
 
+/// Everything the autoscaler needs to stand up a *new* shard between
+/// epochs: the boxed factories plus the driver construction parameters
+/// (the spawned shard's deployment, [`GpuSpec`] and epoch params are cloned
+/// from the shard it scales out — so it inherits a tuned epoch duration).
+struct Autoscaler<B> {
+    policy: AutoscalePolicy,
+    make_backend: Box<dyn FnMut(&InstanceTemplate) -> B>,
+    make_scheduler: Box<dyn FnMut(usize) -> Box<dyn Scheduler + Send>>,
+    driver_policy: DriverPolicy,
+    radio: RadioParams,
+    channel: ChannelParams,
+    seed: u64,
+    /// Next per-shard RNG stream id ([`shard_stream`]); starts at the
+    /// initial shard count, so spawned shards draw fresh deterministic
+    /// streams that never collide with the founding shards'.
+    next_stream: u64,
+}
+
+/// Epoch-duration tuner state (module docs §Elastic).
+struct EpochTuner {
+    policy: EpochTunePolicy,
+    duration: f64,
+    /// Fleet-total `epoch_overruns` at the last tick (retired shards
+    /// included, so retirement never fakes a delta).
+    last_overruns: u64,
+    calm: u64,
+}
+
 /// The dispatch layer: owns one [`EpochDriver`] per GPU partition, routes
 /// arrivals, re-partitions headroom between epochs and steps the shards in
 /// parallel (module docs).
 pub struct ShardedDriver<P, B> {
     shards: Vec<Shard<P, B>>,
-    gpu: GpuSpec,
+    /// Per-shard GPU model (same length/order as `shards`); equal specs
+    /// form a migration group.
+    gpu_specs: Vec<GpuSpec>,
     total_gpus: usize,
     partition: PartitionPolicy,
     gpus: Vec<usize>,
     epoch_idx: u64,
     supervise: Option<Supervision<B>>,
+    /// Elastic mechanisms (module docs §Elastic); all dormant by default.
+    stealing: bool,
+    autoscale: Option<Autoscaler<B>>,
+    tuner: Option<EpochTuner>,
+    /// Frozen metrics of autoscale-retired shards, in retirement order;
+    /// merged ahead of live shards so no served request ever disappears
+    /// from the aggregate.
+    retired: Vec<Metrics>,
 }
 
 /// Raise every below-floor entry to its floor by taking GPUs from the
@@ -244,6 +396,10 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         mut make_backend: impl FnMut(&InstanceTemplate, usize, u64) -> B + 'static,
         mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
     ) -> Result<Self, PartitionError> {
+        assert!(
+            cfg.elastic.autoscale.is_none(),
+            "autoscaling is incompatible with supervision (health state is indexed per shard)"
+        );
         let (policy, epoch, radio, channel, seed) = (
             cfg.policy,
             cfg.epoch.clone(),
@@ -276,13 +432,48 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         _supervised: bool,
     ) -> Result<Self, PartitionError> {
         let k = cfg.deployments.len();
-        let gpus = partition_gpus_by_load(&vec![0.0; k], cfg.cluster.num_gpus, cfg.partition)?;
+        assert_eq!(
+            cfg.topology.shard_count(),
+            k,
+            "one topology entry per deployment (shard)"
+        );
+        for (i, s) in cfg.topology.shards.iter().enumerate() {
+            assert!(
+                s.gpu.flops.is_finite() && s.gpu.flops > 0.0 && s.gpu.mem_bytes > 0,
+                "topology shard {i} has a degenerate GpuSpec"
+            );
+        }
+        // Initial apportionment: zero observed demand (near-equal), one
+        // migration group at a time. A homogeneous topology is a single
+        // group over the whole pool — bit-identical to the pre-topology
+        // global apportionment. An undersized group (fewer GPUs than
+        // members) surfaces as the group-local `InsufficientGpus`.
+        let total_gpus = cfg.topology.total_gpus();
+        let mut gpus = vec![0usize; k];
+        for group in cfg.topology.groups() {
+            let group_total: usize = group
+                .iter()
+                .map(|&i| cfg.topology.shards[i].num_gpus)
+                .sum();
+            let alloc =
+                partition_gpus_by_load(&vec![0.0; group.len()], group_total, cfg.partition)?;
+            for (slot, &i) in group.iter().enumerate() {
+                gpus[i] = alloc[slot];
+            }
+        }
+        let gpu_specs: Vec<GpuSpec> = cfg
+            .topology
+            .shards
+            .iter()
+            .map(|s| s.gpu.clone())
+            .collect();
+        let epoch_duration = cfg.epoch.duration;
         let mut shards = Vec::with_capacity(k);
         for (i, dep) in cfg.deployments.into_iter().enumerate() {
             let template = InstanceTemplate {
                 cost: CostModel::new(dep.model.clone()),
                 quant: dep.quant.clone(),
-                cluster: ClusterSpec::new(cfg.cluster.gpu.clone(), gpus[i]),
+                cluster: ClusterSpec::new(gpu_specs[i].clone(), gpus[i]),
                 epoch: cfg.epoch.clone(),
             };
             let backend = make_backend(&template, i, 0);
@@ -302,12 +493,21 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         }
         Ok(ShardedDriver {
             shards,
-            gpu: cfg.cluster.gpu,
-            total_gpus: cfg.cluster.num_gpus,
+            gpu_specs,
+            total_gpus,
             partition: cfg.partition,
             gpus,
             epoch_idx: 0,
             supervise: None,
+            stealing: cfg.elastic.stealing,
+            autoscale: None,
+            tuner: cfg.elastic.tune_epoch.map(|p| EpochTuner {
+                policy: p,
+                duration: epoch_duration.clamp(p.min_duration, p.max_duration),
+                last_overruns: 0,
+                calm: 0,
+            }),
+            retired: Vec::new(),
         })
     }
 
@@ -318,6 +518,22 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
     /// Current GPU counts, by shard index (always sums to the pool size).
     pub fn partition(&self) -> &[usize] {
         &self.gpus
+    }
+
+    /// Per-shard GPU models, by shard index (equal specs = one migration
+    /// group).
+    pub fn gpu_specs(&self) -> &[GpuSpec] {
+        &self.gpu_specs
+    }
+
+    /// The current epoch length — the configured duration, or the tuner's
+    /// latest choice. Callers driving wall-clock loops must advance `now`
+    /// by this (re-read every epoch) rather than a fixed constant.
+    pub fn epoch_duration(&self) -> f64 {
+        match &self.tuner {
+            Some(t) => t.duration,
+            None => self.shards[0].driver.epoch_duration(),
+        }
     }
 
     pub fn shards(&self) -> &[Shard<P, B>] {
@@ -383,16 +599,10 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         shard
     }
 
-    /// Re-apportion the GPU pool from observed queued demand, clamped to
-    /// each backend's KV-safety floor. No-ops for a single shard, when
-    /// every GPU is pinned by in-flight work, or when the apportionment is
-    /// unchanged.
-    fn repartition(&mut self) {
-        if self.shards.len() <= 1 {
-            return;
-        }
-        let loads: Vec<f64> = self
-            .shards
+    /// Queued β-weighted FLOPs per shard — the demand signal shared by
+    /// re-partitioning, work stealing and the autoscaler.
+    fn queued_weights(&self) -> Vec<f64> {
+        self.shards
             .iter()
             .map(|s| {
                 s.driver
@@ -400,10 +610,33 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
                     .map(|r| s.deployment.req_weight(r.prompt_tokens, r.output_tokens))
                     .sum()
             })
-            .collect();
-        let Ok(desired) = partition_gpus_by_load(&loads, self.total_gpus, self.partition) else {
-            return; // pool shrank below min-1 — unreachable once constructed
-        };
+            .collect()
+    }
+
+    /// Shard indices partitioned by [`GpuSpec`] equality (first-occurrence
+    /// order, members ascending) — recomputed per boundary because
+    /// autoscaling changes the shard set.
+    fn migration_groups(&self) -> Vec<Vec<usize>> {
+        let mut groups: Vec<(&GpuSpec, Vec<usize>)> = Vec::new();
+        for (i, spec) in self.gpu_specs.iter().enumerate() {
+            match groups.iter_mut().find(|(g, _)| *g == spec) {
+                Some((_, members)) => members.push(i),
+                None => groups.push((spec, vec![i])),
+            }
+        }
+        groups.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Re-apportion each migration group's GPUs from observed queued
+    /// demand, clamped to each backend's KV-safety floor. GPUs never cross
+    /// groups (the devices are not interchangeable). No-ops for a
+    /// single-shard group, when every GPU in a group is pinned by in-flight
+    /// work, or when the apportionment is unchanged.
+    fn repartition(&mut self) {
+        if self.shards.len() <= 1 {
+            return;
+        }
+        let loads = self.queued_weights();
         let healthy: Vec<bool> = (0..self.shards.len())
             .map(|i| self.shard_is_healthy(i))
             .collect();
@@ -423,16 +656,32 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
                 }
             })
             .collect();
-        if floors.iter().sum::<usize>() > self.total_gpus {
-            return; // every GPU pinned by in-flight work: no safe handoff
+        let mut alloc = self.gpus.clone();
+        for group in self.migration_groups() {
+            if group.len() <= 1 {
+                continue;
+            }
+            let group_total: usize = group.iter().map(|&i| self.gpus[i]).sum();
+            let g_loads: Vec<f64> = group.iter().map(|&i| loads[i]).collect();
+            let Ok(desired) = partition_gpus_by_load(&g_loads, group_total, self.partition)
+            else {
+                continue; // group shrank below min-1 — cannot happen once up
+            };
+            let g_floors: Vec<usize> = group.iter().map(|&i| floors[i]).collect();
+            if g_floors.iter().sum::<usize>() > group_total {
+                continue; // every group GPU pinned in flight: no safe handoff
+            }
+            let g_alloc = apply_floors(desired, &g_floors);
+            for (slot, &i) in group.iter().enumerate() {
+                alloc[i] = g_alloc[slot];
+            }
         }
-        let alloc = apply_floors(desired, &floors);
         if alloc == self.gpus {
             return;
         }
         for (i, shard) in self.shards.iter_mut().enumerate() {
             if alloc[i] != self.gpus[i] {
-                let cluster = ClusterSpec::new(self.gpu.clone(), alloc[i]);
+                let cluster = ClusterSpec::new(self.gpu_specs[i].clone(), alloc[i]);
                 shard.driver.set_cluster(cluster.clone());
                 // A dead backend is never poked; its replacement is built
                 // against the current partition at restart.
@@ -444,23 +693,31 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         self.gpus = alloc;
     }
 
-    /// One epoch across every shard: re-partition from current demand, then
-    /// step all shards in parallel. Deterministic regardless of thread
-    /// interleaving — shards are fully independent within a step and all
-    /// cross-shard decisions (routing, re-partitioning) happen before the
-    /// fan-out. Supervised drivers additionally advance the supervisor
-    /// state machine at the boundary (restarts due, parks), step only
-    /// `Healthy` shards under `catch_unwind`, and handle any crashes in
-    /// shard order after the fan-out (module docs §Supervision).
+    /// One epoch across every shard: autoscale (one action per tick),
+    /// re-partition from current demand, steal queued work onto idle
+    /// shards, then step all shards in parallel and let the epoch tuner
+    /// react to overruns. Deterministic regardless of thread interleaving —
+    /// shards are fully independent within a step and all cross-shard
+    /// decisions (routing, autoscaling, re-partitioning, stealing) happen
+    /// before the fan-out. Supervised drivers additionally advance the
+    /// supervisor state machine at the boundary (restarts due, parks), step
+    /// only `Healthy` shards under `catch_unwind`, and handle any crashes
+    /// in shard order after the fan-out (module docs §Supervision). With
+    /// every elastic mechanism off this reduces exactly to
+    /// pre-step → repartition → fan-out, the bit-parity path.
     pub fn step_epoch(&mut self, now: f64)
     where
         P: Send,
         B: Send,
     {
+        self.autoscale_tick();
         if self.supervise.is_some() {
             self.supervisor_pre_step();
         }
         self.repartition();
+        if self.stealing {
+            self.steal_pass();
+        }
         if self.supervise.is_some() {
             let crashed = self.step_supervised(now);
             // Mark every crash before redispatching anything: two shards
@@ -481,7 +738,250 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
                 }
             });
         }
+        self.tune_epoch_tick();
         self.epoch_idx += 1;
+    }
+
+    /// Cross-shard work stealing (module docs §Elastic). Runs after
+    /// re-partitioning, before the fan-out; purely deterministic. Each
+    /// healthy thief (ascending index) repeatedly takes the newest queued
+    /// entry from the deepest-queued healthy same-deployment donor (ties to
+    /// the lowest index) while the move strictly reduces FLOPs-normalized
+    /// imbalance and the thief's backend KV gate admits the request. Only
+    /// queued entries move — in-flight work never migrates (the KV-safety
+    /// rule) — and `offered` travels with the request, so per-shard and
+    /// merged conservation both keep closing.
+    fn steal_pass(&mut self) {
+        let k = self.shards.len();
+        if k <= 1 {
+            return;
+        }
+        let cap: Vec<f64> = (0..k)
+            .map(|i| self.gpus[i] as f64 * self.gpu_specs[i].flops)
+            .collect();
+        let mut weight = self.queued_weights();
+        for t in 0..k {
+            if !self.shard_is_healthy(t) {
+                continue;
+            }
+            loop {
+                let donor = (0..k)
+                    .filter(|&d| {
+                        d != t
+                            && self.shard_is_healthy(d)
+                            && self.shards[d].driver.queue_len() > 0
+                            && self.shards[d]
+                                .deployment
+                                .same_as(&self.shards[t].deployment)
+                    })
+                    .max_by_key(|&d| (self.shards[d].driver.queue_len(), usize::MAX - d));
+                let Some(d) = donor else {
+                    break;
+                };
+                let Some(req) = self.shards[d].driver.back_request() else {
+                    break;
+                };
+                let w = self.shards[d]
+                    .deployment
+                    .req_weight(req.prompt_tokens, req.output_tokens);
+                // Strict-improvement rule: after the move the thief must
+                // still be less loaded (per FLOP of its partition) than the
+                // donor is now — this both targets genuinely idle capacity
+                // and guarantees termination.
+                if (weight[t] + w) / cap[t] >= weight[d] / cap[d] {
+                    break;
+                }
+                if !self.shards[t].backend.can_admit(req) {
+                    break;
+                }
+                let Some(entry) = self.shards[d].driver.steal_from_back() else {
+                    break;
+                };
+                let dm = &mut self.shards[d].driver.metrics;
+                dm.offered = dm.offered.saturating_sub(1);
+                self.shards[t].driver.offer(entry.req, entry.payload);
+                self.shards[t].driver.metrics.requests_stolen += 1;
+                weight[d] -= w;
+                weight[t] += w;
+            }
+        }
+    }
+
+    /// One autoscaling action per epoch tick (module docs §Elastic): scale
+    /// out the most-loaded shard when queued demand exceeds what the fleet
+    /// clears in an epoch, or retire the least-loaded *idle* shard when
+    /// demand collapses. Armed only through [`DriverBuilder`].
+    fn autoscale_tick(&mut self) {
+        let Some(policy) = self.autoscale.as_ref().map(|a| a.policy) else {
+            return;
+        };
+        let k = self.shards.len();
+        let weight = self.queued_weights();
+        let cap: Vec<f64> = (0..k)
+            .map(|i| {
+                self.gpus[i] as f64
+                    * self.gpu_specs[i].flops
+                    * self.shards[i].driver.epoch_duration()
+            })
+            .collect();
+        let total_cap: f64 = cap.iter().sum();
+        let util = weight.iter().sum::<f64>() / total_cap.max(f64::MIN_POSITIVE);
+        if util > policy.scale_up_ratio && k < policy.max_shards {
+            // Source = most-utilized shard; its bootstrap GPU comes from
+            // the same migration group's largest above-floor surplus (the
+            // source itself qualifies), so the spawn is KV-safe. No donor →
+            // every group GPU pinned → no action this tick.
+            let mut order: Vec<usize> = (0..k).collect();
+            order.sort_by(|&a, &b| {
+                (weight[b] / cap[b].max(f64::MIN_POSITIVE))
+                    .total_cmp(&(weight[a] / cap[a].max(f64::MIN_POSITIVE)))
+                    .then(a.cmp(&b))
+            });
+            for src in order {
+                if let Some(donor) = self.bootstrap_donor(src) {
+                    self.spawn_shard(src, donor);
+                    return;
+                }
+            }
+        } else if util < policy.scale_down_ratio && k > policy.min_shards.max(1) {
+            // Victim = least-utilized shard that is fully idle (empty
+            // queue, idle backend — KV-safe), leaves its deployment served
+            // and has a same-group heir for its GPUs. Ties retire the
+            // highest index (latest spawn) to minimize index churn.
+            let victim = (0..k)
+                .filter(|&i| {
+                    self.shards[i].driver.queue_len() == 0
+                        && self.shards[i].backend.is_idle()
+                        && (0..k).any(|j| {
+                            j != i && self.shards[j].deployment.same_as(&self.shards[i].deployment)
+                        })
+                        && (0..k).any(|j| j != i && self.gpu_specs[j] == self.gpu_specs[i])
+                })
+                .min_by(|&a, &b| {
+                    (weight[a] / cap[a].max(f64::MIN_POSITIVE))
+                        .total_cmp(&(weight[b] / cap[b].max(f64::MIN_POSITIVE)))
+                        .then(b.cmp(&a))
+                });
+            if let Some(v) = victim {
+                self.retire_shard(v);
+            }
+        }
+    }
+
+    /// The same-group donor for a spawned shard's bootstrap GPU: largest
+    /// above-floor surplus with at least 2 GPUs, ties to the lowest index
+    /// (the source shard itself qualifies).
+    fn bootstrap_donor(&self, src: usize) -> Option<usize> {
+        (0..self.shards.len())
+            .filter(|&d| {
+                self.gpu_specs[d] == self.gpu_specs[src] && self.gpus[d] >= 2 && {
+                    let floor = self.shards[d].backend.min_gpus_for_inflight().max(1);
+                    self.gpus[d] > floor
+                }
+            })
+            .max_by_key(|&d| {
+                let floor = self.shards[d].backend.min_gpus_for_inflight().max(1);
+                (self.gpus[d] - floor, usize::MAX - d)
+            })
+    }
+
+    /// Stand up a clone of shard `src` (same deployment, spec and epoch
+    /// params — a tuned epoch duration carries over) with one GPU borrowed
+    /// from `donor`; the next repartition rebalances the group properly.
+    fn spawn_shard(&mut self, src: usize, donor: usize) {
+        let Some(auto) = self.autoscale.as_mut() else {
+            return;
+        };
+        let stream = auto.next_stream;
+        auto.next_stream += 1;
+        let deployment = self.shards[src].deployment.clone();
+        let spec = self.gpu_specs[src].clone();
+        let template = InstanceTemplate {
+            cost: CostModel::new(deployment.model.clone()),
+            quant: deployment.quant.clone(),
+            cluster: ClusterSpec::new(spec.clone(), 1),
+            epoch: self.shards[src].driver.template().epoch.clone(),
+        };
+        let backend = (auto.make_backend)(&template);
+        let driver = EpochDriver::new(
+            template,
+            auto.driver_policy,
+            auto.radio.clone(),
+            auto.channel.clone(),
+            Rng::new(shard_stream(auto.seed, stream)),
+        );
+        let scheduler = (auto.make_scheduler)(self.shards.len());
+        let donor_cluster = ClusterSpec::new(self.gpu_specs[donor].clone(), self.gpus[donor] - 1);
+        self.gpus[donor] -= 1;
+        self.shards[donor].driver.set_cluster(donor_cluster.clone());
+        self.shards[donor].backend.cluster_resized(&donor_cluster);
+        let mut shard = Shard {
+            deployment,
+            driver,
+            backend,
+            scheduler,
+        };
+        shard.driver.metrics.shards_spawned += 1;
+        self.shards.push(shard);
+        self.gpus.push(1);
+        self.gpu_specs.push(spec);
+    }
+
+    /// Retire a fully idle shard: its GPUs go to the lowest-index
+    /// same-group survivor and its metrics freeze into `retired` (merged
+    /// ahead of live shards), so nothing it ever served disappears.
+    fn retire_shard(&mut self, victim: usize) {
+        debug_assert!(self.shards[victim].driver.queue_len() == 0);
+        debug_assert!(self.shards[victim].backend.is_idle());
+        let heir = (0..self.shards.len())
+            .find(|&i| i != victim && self.gpu_specs[i] == self.gpu_specs[victim])
+            .expect("retire requires a same-group survivor");
+        self.gpus[heir] += self.gpus[victim];
+        let cluster = ClusterSpec::new(self.gpu_specs[heir].clone(), self.gpus[heir]);
+        self.shards[heir].driver.set_cluster(cluster.clone());
+        self.shards[heir].backend.cluster_resized(&cluster);
+        let shard = self.shards.remove(victim);
+        self.gpus.remove(victim);
+        self.gpu_specs.remove(victim);
+        let mut metrics = shard.driver.into_metrics();
+        metrics.shards_retired += 1;
+        self.retired.push(metrics);
+    }
+
+    /// Epoch-duration tuning tick, run after the fan-out: any new overrun
+    /// grows the next epoch, a calm streak shrinks it, both clamped
+    /// (module docs §Elastic).
+    fn tune_epoch_tick(&mut self) {
+        if self.tuner.is_none() {
+            return;
+        }
+        let total: u64 = self
+            .retired
+            .iter()
+            .map(|m| m.epoch_overruns)
+            .sum::<u64>()
+            + self
+                .shards
+                .iter()
+                .map(|s| s.driver.metrics.epoch_overruns)
+                .sum::<u64>();
+        let t = self.tuner.as_mut().expect("guarded above");
+        let overran = total > t.last_overruns;
+        t.last_overruns = total;
+        if overran {
+            t.duration = (t.duration * t.policy.grow).min(t.policy.max_duration);
+            t.calm = 0;
+        } else {
+            t.calm += 1;
+            if t.calm >= t.policy.calm_epochs {
+                t.duration = (t.duration * t.policy.shrink).max(t.policy.min_duration);
+                t.calm = 0;
+            }
+        }
+        let d = t.duration;
+        for s in &mut self.shards {
+            s.driver.set_epoch_duration(d);
+        }
     }
 
     /// Advance the supervisor state machine at an epoch boundary: last
@@ -627,7 +1127,7 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         let template = InstanceTemplate {
             cost: CostModel::new(deployment.model.clone()),
             quant: deployment.quant.clone(),
-            cluster: ClusterSpec::new(self.gpu.clone(), self.gpus[i]),
+            cluster: ClusterSpec::new(self.gpu_specs[i].clone(), self.gpus[i]),
             epoch: sup.epoch.clone(),
         };
         let backend = (sup.make_backend)(&template, i, generation);
@@ -702,14 +1202,187 @@ impl<P, B: ExecutionBackend<Payload = P>> ShardedDriver<P, B> {
         &self.shards[shard].driver.metrics
     }
 
-    /// Cross-shard aggregate, merged in fixed shard-index order
+    /// Cross-shard aggregate: autoscale-retired shards first (retirement
+    /// order), then live shards in fixed shard-index order
     /// ([`Metrics::merge`]: counters sum exactly, horizon takes the max).
     pub fn merged_metrics(&self) -> Metrics {
         let mut merged = Metrics::new();
+        for m in &self.retired {
+            merged.merge(m);
+        }
         for shard in &self.shards {
             merged.merge(&shard.driver.metrics);
         }
         merged
+    }
+}
+
+/// Fluent construction for [`ShardedDriver`] — the single place the shard
+/// configuration surface (deployments, topology, partition policy, epoch
+/// protocol, elasticity, supervision) comes together, replacing the old
+/// positional-argument sprawl. Defaults follow the paper's protocol:
+/// best-case-infeasible staleness, longest-queued s' with a 512 fallback,
+/// min-only allocation, load-proportional partitioning, paper
+/// epoch/radio/channel parameters, seed 0, every elastic mechanism off.
+pub struct DriverBuilder {
+    deployments: Vec<Deployment>,
+    topology: ClusterTopology,
+    partition: PartitionPolicy,
+    policy: DriverPolicy,
+    epoch: EpochParams,
+    radio: RadioParams,
+    channel: ChannelParams,
+    seed: u64,
+    elastic: ElasticPolicy,
+}
+
+impl DriverBuilder {
+    /// One deployment per topology entry, in shard order.
+    pub fn new(deployments: Vec<Deployment>, topology: ClusterTopology) -> Self {
+        DriverBuilder {
+            deployments,
+            topology,
+            partition: PartitionPolicy::LoadProportional,
+            policy: DriverPolicy {
+                stale: StalePolicy::BestCaseInfeasible,
+                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
+                allocation: AllocationPolicy::MinOnly,
+            },
+            epoch: EpochParams::default(),
+            radio: RadioParams::default(),
+            channel: ChannelParams::default(),
+            seed: 0,
+            elastic: ElasticPolicy::default(),
+        }
+    }
+
+    /// The `--shards N` shim: `deployments.len()` identical partitions
+    /// carved out of one homogeneous pool
+    /// ([`ClusterTopology::homogeneous`]).
+    pub fn homogeneous(deployments: Vec<Deployment>, cluster: ClusterSpec) -> Self {
+        let shards = deployments.len().max(1);
+        Self::new(deployments, ClusterTopology::homogeneous(cluster, shards))
+    }
+
+    pub fn partition(mut self, partition: PartitionPolicy) -> Self {
+        self.partition = partition;
+        self
+    }
+
+    pub fn policy(mut self, policy: DriverPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn epoch(mut self, epoch: EpochParams) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    pub fn radio(mut self, radio: RadioParams) -> Self {
+        self.radio = radio;
+        self
+    }
+
+    pub fn channel(mut self, channel: ChannelParams) -> Self {
+        self.channel = channel;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the whole elastic policy at once (see also the
+    /// [`stealing`](Self::stealing) / [`autoscale`](Self::autoscale) /
+    /// [`tune_epoch`](Self::tune_epoch) shorthands).
+    pub fn elastic(mut self, elastic: ElasticPolicy) -> Self {
+        self.elastic = elastic;
+        self
+    }
+
+    pub fn stealing(mut self, on: bool) -> Self {
+        self.elastic.stealing = on;
+        self
+    }
+
+    pub fn autoscale(mut self, policy: AutoscalePolicy) -> Self {
+        self.elastic.autoscale = Some(policy);
+        self
+    }
+
+    pub fn tune_epoch(mut self, policy: EpochTunePolicy) -> Self {
+        self.elastic.tune_epoch = Some(policy);
+        self
+    }
+
+    /// The assembled [`ShardedConfig`] (what `build` hands the driver) —
+    /// exposed for call sites that still need the plain config, e.g. to
+    /// feed [`ShardedDriver::new`] in generic test plumbing.
+    pub fn into_config(self) -> ShardedConfig {
+        ShardedConfig {
+            deployments: self.deployments,
+            topology: self.topology,
+            partition: self.partition,
+            policy: self.policy,
+            epoch: self.epoch,
+            radio: self.radio,
+            channel: self.channel,
+            seed: self.seed,
+            elastic: self.elastic,
+        }
+    }
+
+    /// Stand the driver up unsupervised. The factories are `'static`
+    /// because autoscaling (when enabled) keeps them to build future
+    /// shards; with autoscaling off they are dropped after construction.
+    pub fn build<B: ExecutionBackend>(
+        self,
+        make_backend: impl FnMut(&InstanceTemplate) -> B + 'static,
+        make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
+    ) -> Result<ShardedDriver<B::Payload, B>, PartitionError> {
+        let cfg = self.into_config();
+        let autoscale = cfg.elastic.autoscale;
+        let (driver_policy, radio, channel, seed) = (
+            cfg.policy,
+            cfg.radio.clone(),
+            cfg.channel.clone(),
+            cfg.seed,
+        );
+        let next_stream = cfg.topology.shard_count() as u64;
+        let mut mb: Box<dyn FnMut(&InstanceTemplate) -> B> = Box::new(make_backend);
+        let mut ms: Box<dyn FnMut(usize) -> Box<dyn Scheduler + Send>> =
+            Box::new(make_scheduler);
+        let mut sd = {
+            let mut wrap = |t: &InstanceTemplate, _shard: usize, _gen: u64| (mb)(t);
+            ShardedDriver::construct(cfg, &mut wrap, &mut *ms, false)?
+        };
+        if let Some(policy) = autoscale {
+            sd.autoscale = Some(Autoscaler {
+                policy,
+                make_backend: mb,
+                make_scheduler: ms,
+                driver_policy,
+                radio,
+                channel,
+                seed,
+                next_stream,
+            });
+        }
+        Ok(sd)
+    }
+
+    /// Stand the driver up with the supervision layer armed
+    /// ([`ShardedDriver::with_supervision`]). Panics if autoscaling was
+    /// requested — supervision indexes health state per shard and cannot
+    /// follow a changing shard set.
+    pub fn build_supervised<B: ExecutionBackend>(
+        self,
+        make_backend: impl FnMut(&InstanceTemplate, usize, u64) -> B + 'static,
+        make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
+    ) -> Result<ShardedDriver<B::Payload, B>, PartitionError> {
+        ShardedDriver::with_supervision(self.into_config(), make_backend, make_scheduler)
     }
 }
 
@@ -746,13 +1419,14 @@ mod tests {
                         .unwrap(),
                 },
             ],
-            cluster: ClusterSpec::paper_default(),
+            topology: ClusterTopology::homogeneous(ClusterSpec::paper_default(), 2),
             partition: PartitionPolicy::LoadProportional,
             policy: policy(),
             epoch: EpochParams::default(),
             radio: RadioParams::default(),
             channel: ChannelParams::default(),
             seed: 7,
+            elastic: ElasticPolicy::default(),
         }
     }
 
@@ -763,7 +1437,8 @@ mod tests {
     #[test]
     fn new_rejects_more_deployments_than_gpus() {
         let mut cfg = two_quant_config();
-        cfg.cluster = ClusterSpec::new(cfg.cluster.gpu.clone(), 1);
+        cfg.topology =
+            ClusterTopology::homogeneous(ClusterSpec::new(GpuSpec::jetson_tx2(), 1), 2);
         let err = ShardedDriver::<(), _>::new(cfg, |_| AnalyticBackend, |_| {
             Box::new(Dftsp::new()) as Box<dyn Scheduler + Send>
         })
@@ -825,13 +1500,14 @@ mod tests {
         };
         let cfg = ShardedConfig {
             deployments: vec![dep.clone(), dep.clone(), dep],
-            cluster: ClusterSpec::paper_default(),
+            topology: ClusterTopology::homogeneous(ClusterSpec::paper_default(), 3),
             partition: PartitionPolicy::Equal,
             policy: policy(),
             epoch: EpochParams::default(),
             radio: RadioParams::default(),
             channel: ChannelParams::default(),
             seed: 3,
+            elastic: ElasticPolicy::default(),
         };
         let mut sd = analytic(cfg);
         let mut b = RequestBuilder::new();
@@ -951,6 +1627,7 @@ mod tests {
     // ------------------------------------------------------------------
 
     use crate::coordinator::{ProblemInstance, Schedule};
+    use crate::driver::{ChaosBackend, ChaosConfig};
     use crate::request::EpochRequest;
 
     /// Scheduler that never schedules anything — everything it is shown
@@ -972,13 +1649,14 @@ mod tests {
         };
         ShardedConfig {
             deployments: vec![dep.clone(), dep],
-            cluster: ClusterSpec::paper_default(),
+            topology: ClusterTopology::homogeneous(ClusterSpec::paper_default(), 2),
             partition: PartitionPolicy::Equal,
             policy: policy(),
             epoch: EpochParams::default(),
             radio: RadioParams::default(),
             channel: ChannelParams::default(),
             seed,
+            elastic: ElasticPolicy::default(),
         }
     }
 
@@ -1172,5 +1850,251 @@ mod tests {
             "every request gets exactly one terminal outcome through chaos"
         );
         assert!(a.shard_crashes > 0, "the schedule did inject panics");
+    }
+
+    // ------------------------------------------------------------------
+    // Elasticity (module docs §Elastic)
+    // ------------------------------------------------------------------
+
+    use crate::cluster::ShardSpec;
+    use crate::driver::{EpochContext, QueuedRequest};
+
+    /// Fast+slow replica pair of one deployment: two distinct GpuSpecs, so
+    /// two single-member migration groups (no GPU ever crosses them).
+    fn fast_slow_topology() -> ClusterTopology {
+        let fast = GpuSpec {
+            name: "fast-edge".into(),
+            flops: 8.0 * 1.33e12,
+            mem_bytes: 32 * (1 << 30),
+        };
+        ClusterTopology {
+            shards: vec![
+                ShardSpec {
+                    gpu: fast,
+                    num_gpus: 1,
+                },
+                ShardSpec {
+                    gpu: GpuSpec::jetson_tx2(),
+                    num_gpus: 1,
+                },
+            ],
+        }
+    }
+
+    fn one_deployment() -> Deployment {
+        Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        }
+    }
+
+    #[test]
+    fn builder_matches_positional_constructor_bit_for_bit() {
+        let workload = |mut sd: ShardedDriver<(), AnalyticBackend>| {
+            let mut b = RequestBuilder::new();
+            for e in 0..4u64 {
+                let now = e as f64 * 2.0;
+                for i in 0..12 {
+                    sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), (i % 2) as usize);
+                }
+                sd.step_epoch(now);
+            }
+            sd.finish(8.0);
+            (sd.merged_metrics(), sd.shard_metrics(0).clone())
+        };
+        let old = workload(analytic(two_quant_config()));
+        let cfg = two_quant_config();
+        let new = workload(
+            DriverBuilder::new(cfg.deployments, cfg.topology)
+                .partition(PartitionPolicy::LoadProportional)
+                .policy(policy())
+                .seed(7)
+                .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+                    Box::new(Dftsp::new())
+                })
+                .unwrap(),
+        );
+        assert_eq!(old, new, "builder path is bit-identical to positional");
+    }
+
+    #[test]
+    fn steal_moves_queued_work_toward_the_fast_replica() {
+        // Queue-depth routing splits 10 arrivals 5/5, but shard 0 has 8×
+        // the FLOPs: the steal pass pulls donor-back entries until the
+        // FLOPs-normalized imbalance rule stops improving — 4 steals
+        // ((5+n+1)/8 < 5-n holds for n=0..3).
+        let dep = one_deployment();
+        let mut sd = DriverBuilder::new(vec![dep.clone(), dep], fast_slow_topology())
+            .policy(policy())
+            .seed(5)
+            .stealing(true)
+            .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+                Box::new(Never)
+            })
+            .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..10 {
+            sd.offer(b.build(0.0, 256, 256, 1000.0, 0.05), (), 0);
+        }
+        assert_eq!(sd.shards()[0].driver.queue_len(), 5);
+        assert_eq!(sd.shards()[1].driver.queue_len(), 5);
+        sd.step_epoch(0.0);
+        assert_eq!(sd.shards()[0].driver.queue_len(), 9, "thief holds 9");
+        assert_eq!(sd.shards()[1].driver.queue_len(), 1, "donor keeps 1");
+        assert_eq!(sd.shard_metrics(0).requests_stolen, 4);
+        assert_eq!(sd.shard_metrics(0).offered, 9);
+        assert_eq!(sd.shard_metrics(1).offered, 1);
+        let m = sd.merged_metrics();
+        assert_eq!(m.offered, 10, "offered conserved across steals");
+        assert_eq!(m.requests_stolen, 4);
+        // Determinism: the identical run steals identically.
+        let dep = one_deployment();
+        let mut sd2 = DriverBuilder::new(vec![dep.clone(), dep], fast_slow_topology())
+            .policy(policy())
+            .seed(5)
+            .stealing(true)
+            .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+                Box::new(Never)
+            })
+            .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..10 {
+            sd2.offer(b.build(0.0, 256, 256, 1000.0, 0.05), (), 0);
+        }
+        sd2.step_epoch(0.0);
+        assert_eq!(sd2.shard_metrics(0).requests_stolen, 4);
+    }
+
+    /// Analytic execution behind a permanently closed admission gate.
+    struct Gated(AnalyticBackend);
+    impl ExecutionBackend for Gated {
+        type Payload = ();
+        fn execute(
+            &mut self,
+            ctx: &EpochContext<'_>,
+            schedule: &Schedule,
+            batch: Vec<QueuedRequest<()>>,
+            metrics: &mut Metrics,
+        ) {
+            self.0.execute(ctx, schedule, batch, metrics);
+        }
+        fn can_admit(&self, _req: &Request) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn steal_respects_the_thief_kv_gate() {
+        // Identical setup to the stealing test, but the thief's backend
+        // refuses every admission: not a single request may move.
+        let dep = one_deployment();
+        let mut sd = DriverBuilder::new(vec![dep.clone(), dep], fast_slow_topology())
+            .policy(policy())
+            .seed(5)
+            .stealing(true)
+            .build(
+                |_| Gated(AnalyticBackend),
+                |_| -> Box<dyn Scheduler + Send> { Box::new(Never) },
+            )
+            .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..10 {
+            sd.offer(b.build(0.0, 256, 256, 1000.0, 0.05), (), 0);
+        }
+        sd.step_epoch(0.0);
+        assert_eq!(sd.shards()[0].driver.queue_len(), 5, "gate held");
+        assert_eq!(sd.shards()[1].driver.queue_len(), 5);
+        assert_eq!(sd.merged_metrics().requests_stolen, 0);
+    }
+
+    #[test]
+    fn stealing_off_leaves_queues_untouched() {
+        let dep = one_deployment();
+        let mut sd = DriverBuilder::new(vec![dep.clone(), dep], fast_slow_topology())
+            .policy(policy())
+            .seed(5)
+            .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+                Box::new(Never)
+            })
+            .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..10 {
+            sd.offer(b.build(0.0, 256, 256, 1000.0, 0.05), (), 0);
+        }
+        sd.step_epoch(0.0);
+        assert_eq!(sd.shards()[0].driver.queue_len(), 5);
+        assert_eq!(sd.shards()[1].driver.queue_len(), 5);
+        assert_eq!(sd.merged_metrics().requests_stolen, 0);
+    }
+
+    #[test]
+    fn autoscaler_spawns_under_load_and_retires_idle_shards() {
+        let mut sd = DriverBuilder::new(
+            vec![one_deployment()],
+            ClusterTopology::homogeneous(ClusterSpec::paper_default(), 1),
+        )
+        .policy(policy())
+        .seed(13)
+        .autoscale(AutoscalePolicy {
+            min_shards: 1,
+            max_shards: 2,
+            scale_up_ratio: 0.05,
+            scale_down_ratio: 0.02,
+        })
+        .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+            Box::new(Dftsp::new())
+        })
+        .unwrap();
+        let mut b = RequestBuilder::new();
+        for _ in 0..24 {
+            sd.offer(b.build(0.0, 128, 128, 1000.0, 0.05), (), 0);
+        }
+        sd.step_epoch(0.0);
+        assert_eq!(sd.shard_count(), 2, "burst spawned a replica");
+        assert_eq!(sd.partition().iter().sum::<usize>(), 20, "pool conserved");
+        for e in 1..8u64 {
+            sd.step_epoch(e as f64 * 2.0);
+        }
+        assert_eq!(sd.shard_count(), 1, "idle fleet scaled back down");
+        assert_eq!(sd.partition(), &[20], "GPUs returned to the survivor");
+        sd.finish(16.0);
+        let m = sd.merged_metrics();
+        assert!(m.shards_spawned >= 1, "the burst spawned at least once");
+        assert_eq!(m.shards_retired, m.shards_spawned, "fleet returned to 1");
+        assert_eq!(m.offered, 24, "retired metrics stay in the aggregate");
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped
+        );
+    }
+
+    #[test]
+    fn epoch_tuner_grows_on_overruns_and_shrinks_when_calm() {
+        let mut sd = DriverBuilder::new(
+            vec![one_deployment()],
+            ClusterTopology::homogeneous(ClusterSpec::paper_default(), 1),
+        )
+        .policy(policy())
+        .tune_epoch(EpochTunePolicy {
+            min_duration: 1.0,
+            max_duration: 8.0,
+            grow: 2.0,
+            shrink: 0.5,
+            calm_epochs: 2,
+        })
+        .build(|_| AnalyticBackend, |_| -> Box<dyn Scheduler + Send> {
+            Box::new(Dftsp::new())
+        })
+        .unwrap();
+        assert_eq!(sd.epoch_duration(), 2.0, "paper default to start");
+        // Fake an overrun: the tuner reads the counter, not wall clocks.
+        sd.shards[0].driver.metrics.epoch_overruns = 1;
+        sd.step_epoch(0.0);
+        assert_eq!(sd.epoch_duration(), 4.0, "overrun grew the epoch");
+        assert_eq!(sd.shards()[0].driver.epoch_duration(), 4.0, "propagated");
+        sd.step_epoch(2.0);
+        assert_eq!(sd.epoch_duration(), 4.0, "one calm epoch: no change yet");
+        sd.step_epoch(6.0);
+        assert_eq!(sd.epoch_duration(), 2.0, "two calm epochs: shrank");
     }
 }

@@ -1,11 +1,12 @@
 //! `edgellm` — CLI launcher for the edge-LLM serving stack.
 //!
 //! Subcommands:
-//!   simulate   run the discrete-event simulator (paper §IV testbed)
-//!   compare    run all batching policies on one scenario and tabulate
-//!   serve      serve the tiny real model through PJRT with DFTSP batching
-//!   loadtest   loopback TCP load harness against synthetic engines
-//!   catalog    print the model and quantization catalogs
+//!   simulate      run the discrete-event simulator (paper §IV testbed)
+//!   compare       run all batching policies on one scenario and tabulate
+//!   serve         serve the tiny real model through PJRT with DFTSP batching
+//!   loadtest      loopback TCP load harness against synthetic engines
+//!   elastic-bench sharded skewed-fleet benchmark, work stealing off vs on
+//!   catalog       print the model and quantization catalogs
 //!
 //! Scenario files are TOML (see `config` module docs); every flag falls back
 //! to the paper's §IV defaults.
@@ -30,17 +31,22 @@ fn main() {
         Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadtest") => cmd_loadtest(&args),
+        Some("elastic-bench") => cmd_elastic_bench(&args),
         Some("catalog") => cmd_catalog(),
         _ => {
             eprintln!(
-                "usage: edgellm <simulate|compare|serve|loadtest|catalog> [--config FILE] \
+                "usage: edgellm <simulate|compare|serve|loadtest|elastic-bench|catalog> \
+                 [--config FILE] \
                  [--scheduler dftsp|stb|nob|brute] [--batching epoch|continuous] [--rate R] \
                  [--epochs N] [--model NAME] [--quant LABEL] [--seed S] \
-                 [--workers N] [--shards N] [--partition equal|load-proportional] [--stats] \
+                 [--workers N] [--shards N] [--partition equal|load-proportional] \
+                 [--steal] [--autoscale MIN:MAX] [--tune-epoch MIN:MAX] [--stats] \
                  [--listen ADDR] [--pending-cap N] [--clients N] [--quick] [--json] \
                  [--io-model threaded|evented] [--event-threads N] [--max-conns-per-peer N] \
                  [--chaos] [--chaos-seed S] [--chaos-panic P] [--chaos-stall P] \
-                 [--chaos-stall-ms MS] [--chaos-error P] [--chaos-kv-fail P]"
+                 [--chaos-stall-ms MS] [--chaos-error P] [--chaos-kv-fail P]\n\
+                 (`--shards N` is the homogeneous shim for the `[[cluster.shard]]` \
+                 topology tables; see the config module docs)"
             );
             2
         }
@@ -79,7 +85,17 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
         if cfg.shards == 0 {
             return Err("--shards must be >= 1".into());
         }
-        if cfg.shards > cfg.cluster.num_gpus {
+        if let Some(t) = &cfg.topology {
+            // The scenario file pinned an explicit [[cluster.shard]] layout;
+            // the homogeneous shim cannot override it, only agree with it.
+            if cfg.shards != t.shard_count() {
+                return Err(format!(
+                    "--shards {} disagrees with the scenario's {}-shard topology",
+                    cfg.shards,
+                    t.shard_count()
+                ));
+            }
+        } else if cfg.shards > cfg.cluster.num_gpus {
             return Err(format!(
                 "--shards {} exceeds the {}-GPU cluster (every shard needs a GPU)",
                 cfg.shards, cfg.cluster.num_gpus
@@ -88,6 +104,35 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     }
     if let Some(p) = args.get("partition") {
         cfg.partition = edgellm::coordinator::PartitionPolicy::parse(p)?;
+    }
+    // Elastic flags mirror the `[elastic]` TOML section; CLI wins.
+    fn parse_bounds(v: &str, flag: &str) -> Result<(f64, f64), String> {
+        let (lo, hi) = v
+            .split_once(':')
+            .ok_or_else(|| format!("--{flag} wants MIN:MAX"))?;
+        let lo: f64 = lo.parse().map_err(|_| format!("bad --{flag} MIN"))?;
+        let hi: f64 = hi.parse().map_err(|_| format!("bad --{flag} MAX"))?;
+        Ok((lo, hi))
+    }
+    if args.flag("steal") {
+        cfg.elastic.stealing = true;
+    }
+    if let Some(v) = args.get("autoscale") {
+        let (lo, hi) = parse_bounds(v, "autoscale")?;
+        if !(lo >= 1.0 && hi >= lo && lo.fract() == 0.0 && hi.fract() == 0.0) {
+            return Err("--autoscale wants integer bounds with 1 <= MIN <= MAX".into());
+        }
+        cfg.elastic.autoscale = Some(edgellm::driver::AutoscalePolicy::new(
+            lo as usize,
+            hi as usize,
+        ));
+    }
+    if let Some(v) = args.get("tune-epoch") {
+        let (lo, hi) = parse_bounds(v, "tune-epoch")?;
+        if !(lo > 0.0 && hi >= lo) {
+            return Err("--tune-epoch wants 0 < MIN <= MAX seconds".into());
+        }
+        cfg.elastic.tune_epoch = Some(edgellm::driver::EpochTunePolicy::new(lo, hi));
     }
     // Chaos flags mirror the `[chaos]` TOML section; CLI wins over the file.
     fn chaos_prob(args: &Args, flag: &str, current: f64) -> Result<f64, String> {
@@ -110,6 +155,14 @@ fn build_config(args: &Args) -> Result<sim::SimConfig, String> {
     cfg.chaos.stall_prob = chaos_prob(args, "chaos-stall", cfg.chaos.stall_prob)?;
     cfg.chaos.error_prob = chaos_prob(args, "chaos-error", cfg.chaos.error_prob)?;
     cfg.chaos.kv_fail_prob = chaos_prob(args, "chaos-kv-fail", cfg.chaos.kv_fail_prob)?;
+    // The supervised chaos path pins a fixed shard set; autoscaling moves
+    // it. (The scenario loader rejects the TOML combination; this catches
+    // the flag mix.)
+    if cfg.chaos.enabled() && cfg.elastic.autoscale.is_some() {
+        return Err("--autoscale and chaos fault injection are mutually exclusive \
+                    (supervision needs a fixed shard set)"
+            .into());
+    }
     Ok(cfg)
 }
 
@@ -196,12 +249,39 @@ fn cmd_simulate(args: &Args) -> i32 {
         cfg.cluster.num_gpus,
         cfg.cluster.gpu.name,
         cfg.batching,
-        if cfg.shards > 1 {
-            format!("  shards {} ({})", cfg.shards, cfg.partition)
+        if cfg.shard_count() > 1 {
+            format!("  shards {} ({})", cfg.shard_count(), cfg.partition)
         } else {
             String::new()
         }
     );
+    if let Some(t) = &cfg.topology {
+        let layout: Vec<String> = t
+            .shards
+            .iter()
+            .map(|s| format!("{}×{}", s.num_gpus, s.gpu.name))
+            .collect();
+        println!("topology: {}", layout.join(" + "));
+    }
+    if cfg.elastic.stealing || cfg.elastic.autoscale.is_some() || cfg.elastic.tune_epoch.is_some()
+    {
+        println!(
+            "elastic: stealing {}  autoscale {}  tune-epoch {}",
+            if cfg.elastic.stealing { "on" } else { "off" },
+            cfg.elastic
+                .autoscale
+                .map_or_else(|| "off".to_string(), |a| format!(
+                    "[{}, {}]",
+                    a.min_shards, a.max_shards
+                )),
+            cfg.elastic
+                .tune_epoch
+                .map_or_else(|| "off".to_string(), |t| format!(
+                    "[{} s, {} s]",
+                    t.min_duration, t.max_duration
+                )),
+        );
+    }
     let m = if cfg.chaos.enabled() {
         println!(
             "chaos: seed {}  panic {}  stall {} ({} ms)  error {}  kv-fail {}",
@@ -221,10 +301,13 @@ fn cmd_simulate(args: &Args) -> i32 {
         sim::run_chaos(&cfg, move |_| {
             make_scheduler(&sched_name, sched_cfg).expect("scheduler name already validated")
         })
-    } else if cfg.shards > 1 {
-        // One fresh scheduler per shard (validated above).
-        sim::run_sharded(&cfg, |_| {
-            make_scheduler(&sched_name, cfg.scheduler).expect("scheduler name already validated")
+    } else if cfg.wants_sharded() {
+        // One fresh scheduler per shard (validated above). The factory
+        // takes 'static ownership — the autoscaler may keep it for spawns.
+        let sched_name = sched_name.clone();
+        let sched_cfg = cfg.scheduler;
+        sim::run_sharded(&cfg, move |_| {
+            make_scheduler(&sched_name, sched_cfg).expect("scheduler name already validated")
         })
     } else {
         sim::run(&cfg, sched.as_mut())
@@ -245,20 +328,22 @@ fn cmd_compare(args: &Args) -> i32 {
         }
     };
     let show_stats = args.flag("stats");
-    let results = if cfg.shards > 1 {
+    let results = if cfg.wants_sharded() {
         // Sharded comparison: each policy gets one fresh scheduler per
         // shard, same seeded workload (run_sharded regenerates it).
         ["dftsp", "stb", "nob"]
             .iter()
             .map(|name| {
                 // One construction up front supplies the display name; the
-                // closure then builds the real per-shard instances.
+                // 'static closure then builds the real per-shard instances.
                 let display = make_scheduler(name, cfg.scheduler)
                     .expect("known scheduler names")
                     .name()
                     .to_string();
-                let m = sim::run_sharded(&cfg, |_| {
-                    make_scheduler(name, cfg.scheduler).expect("known scheduler names")
+                let name = *name;
+                let sched_cfg = cfg.scheduler;
+                let m = sim::run_sharded(&cfg, move |_| {
+                    make_scheduler(name, sched_cfg).expect("known scheduler names")
                 });
                 (display, m)
             })
@@ -1036,6 +1121,150 @@ fn cmd_loadtest(args: &Args) -> i32 {
         return 1;
     }
     println!("loadtest invariants hold");
+    0
+}
+
+/// Deterministic skewed-fleet benchmark for the elastic sharding layer: the
+/// paper deployment replicated over a fast and a slow migration group
+/// (unequal silicon, so queue-depth routing alone leaves the slow replica
+/// with a backlog the fast one could clear), run once with cross-shard work
+/// stealing off and once with it on. With --json the rows merge into
+/// BENCH_elastic.json (same merge-by-scenario writer as loadtest); CI's
+/// bench-smoke job gates the invariant columns — request conservation, and
+/// `steal_regression` (how many in-deadline completions stealing *lost*
+/// versus routing alone, pinned at 0).
+fn cmd_elastic_bench(args: &Args) -> i32 {
+    use edgellm::cluster::{ClusterTopology, GpuSpec, ShardSpec};
+    use edgellm::util::json::Json;
+
+    let write_json = args.flag("json");
+    let mut cfg = sim::SimConfig::paper_default();
+    cfg.epochs = args.u64_or("epochs", 24) as usize;
+    cfg.workload.arrival_rate = args.f64_or("rate", 50.0);
+    cfg.seed = args.u64_or("seed", 11);
+    // Half the paper fleet at full TX2 speed, half underclocked 4×: one
+    // deployment, two single-member migration groups, so GPUs never migrate
+    // between them and the only cross-shard remedy is stealing.
+    let fast = GpuSpec::jetson_tx2();
+    let slow = GpuSpec {
+        name: format!("{}-underclocked", fast.name),
+        flops: fast.flops / 4.0,
+        mem_bytes: fast.mem_bytes,
+    };
+    cfg.topology = Some(ClusterTopology {
+        shards: vec![
+            ShardSpec {
+                gpu: fast,
+                num_gpus: 10,
+            },
+            ShardSpec {
+                gpu: slow,
+                num_gpus: 10,
+            },
+        ],
+    });
+
+    let mut runs = Vec::new();
+    for stealing in [false, true] {
+        cfg.elastic.stealing = stealing;
+        let sched_cfg = cfg.scheduler;
+        let m = sim::run_sharded(&cfg, move |_| Box::new(Dftsp::with_config(sched_cfg)));
+        println!(
+            "steal={}: offered {}  in-deadline {}  late {}  dropped {}  stolen {}",
+            if stealing { "on" } else { "off" },
+            m.offered,
+            m.completed_in_deadline,
+            m.completed_late,
+            m.dropped,
+            m.requests_stolen,
+        );
+        runs.push((stealing, m));
+    }
+    let off = &runs[0].1;
+    let on = &runs[1].1;
+    let steal_gain = on.completed_in_deadline as i64 - off.completed_in_deadline as i64;
+    let steal_regression = (-steal_gain).max(0);
+    println!(
+        "stealing moved {} requests and changed in-deadline completions by {steal_gain:+}",
+        on.requests_stolen
+    );
+
+    if write_json {
+        let rows_new: Vec<Json> = runs
+            .iter()
+            .map(|(stealing, m)| {
+                let conservation_gap = m.offered as i64
+                    - (m.completed_in_deadline + m.completed_late + m.dropped) as i64;
+                let mut fields = vec![
+                    (
+                        "scenario",
+                        Json::Str(format!(
+                            "sharded/elastic/steal={}",
+                            if *stealing { "on" } else { "off" }
+                        )),
+                    ),
+                    ("stealing", Json::Bool(*stealing)),
+                    ("offered", Json::Num(m.offered as f64)),
+                    (
+                        "completed_in_deadline",
+                        Json::Num(m.completed_in_deadline as f64),
+                    ),
+                    ("completed_late", Json::Num(m.completed_late as f64)),
+                    ("dropped", Json::Num(m.dropped as f64)),
+                    ("requests_stolen", Json::Num(m.requests_stolen as f64)),
+                    ("conservation_gap", Json::Num(conservation_gap as f64)),
+                ];
+                if *stealing {
+                    fields.push(("steal_gain", Json::Num(steal_gain as f64)));
+                    fields.push(("steal_regression", Json::Num(steal_regression as f64)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let provenance = "Baseline of the elastic sharding benchmark: the paper deployment \
+             replicated over 10 full-speed and 10 4x-underclocked TX2s (two migration groups, \
+             LoadProportional partitioning), 24 epochs at 50 req/s, DFTSP per shard, work \
+             stealing off vs on. Regenerate with: cargo run --release -- elastic-bench --json \
+             (the writer merges by scenario). Every counter is bit-deterministic. The gated \
+             columns are invariants: conservation_gap (offered minus accounted outcomes) and \
+             steal_regression (in-deadline completions stealing lost versus queue-depth \
+             routing alone) are pinned at 0 — tests/sharded_e2e.rs asserts the strict version. \
+             Null counters here because this baseline was authored in a container without a \
+             Rust toolchain; the first CI run fills the regenerated artifact.";
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_elastic.json");
+        let mut rows: Vec<Json> = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(text.trim()).ok())
+            .and_then(|doc| doc.get("rows").and_then(|r| r.as_arr().map(<[Json]>::to_vec)))
+            .unwrap_or_default();
+        for row in rows_new {
+            let scenario = row.get("scenario").and_then(Json::as_str).map(str::to_string);
+            if let Some(slot) = rows.iter_mut().find(|r| {
+                r.get("scenario").and_then(Json::as_str) == scenario.as_deref()
+            }) {
+                *slot = row;
+            } else {
+                rows.push(row);
+            }
+        }
+        let doc = Json::obj(vec![
+            ("provenance", Json::Str(provenance.to_string())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&path, format!("{doc}\n")) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => {
+                eprintln!("write BENCH_elastic.json failed: {e}");
+                return 1;
+            }
+        }
+    }
+    if steal_regression > 0 {
+        eprintln!("elastic-bench: stealing LOST {steal_regression} in-deadline completions");
+        return 1;
+    }
     0
 }
 

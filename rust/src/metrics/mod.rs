@@ -108,6 +108,17 @@ pub struct Metrics {
     /// Shards parked by the crash-loop circuit breaker (crashed again
     /// immediately after too many consecutive restarts).
     pub shards_parked: u64,
+    /// Queued-but-not-admitted requests pulled by an underloaded shard from
+    /// an overloaded same-deployment shard (elastic work stealing). Stolen
+    /// requests are counted in `offered` exactly once — the donor's count is
+    /// decremented when the thief's is incremented — so the conservation
+    /// identity is untouched.
+    pub requests_stolen: u64,
+    /// Shards spun up by the between-epoch autoscaler.
+    pub shards_spawned: u64,
+    /// Empty shards drained and retired by the autoscaler (KV-safe: a shard
+    /// only retires with an empty queue and an idle backend).
+    pub shards_retired: u64,
 }
 
 impl Metrics {
@@ -197,6 +208,9 @@ impl Metrics {
         self.shard_failed += other.shard_failed;
         self.epoch_stalls += other.epoch_stalls;
         self.shards_parked += other.shards_parked;
+        self.requests_stolen += other.requests_stolen;
+        self.shards_spawned += other.shards_spawned;
+        self.shards_retired += other.shards_retired;
     }
 
     /// Mean scheduler wall time per `schedule` call in seconds (0 when the
@@ -284,6 +298,9 @@ impl Metrics {
             // real elapsed time against the epoch duration.
             ("epoch_stalls", num(self.epoch_stalls as f64)),
             ("shards_parked", num(self.shards_parked as f64)),
+            ("requests_stolen", num(self.requests_stolen as f64)),
+            ("shards_spawned", num(self.shards_spawned as f64)),
+            ("shards_retired", num(self.shards_retired as f64)),
             ("horizon", num(self.horizon)),
         ])
     }
@@ -337,6 +354,12 @@ impl Metrics {
                 self.shard_failed,
                 self.epoch_stalls,
                 self.shards_parked,
+            ));
+        }
+        if self.requests_stolen > 0 || self.shards_spawned > 0 || self.shards_retired > 0 {
+            s.push_str(&format!(
+                "elastic: {} stolen  {} shards spawned  {} shards retired\n",
+                self.requests_stolen, self.shards_spawned, self.shards_retired,
             ));
         }
         if self.wire_latency.count() > 0 {
@@ -603,6 +626,32 @@ mod tests {
         // A clean run prints no fault line at all.
         assert!(!Metrics::new().report("clean").contains("faults:"));
         // Merging an empty Metrics stays the identity with fault counters.
+        let snapshot = a.clone();
+        a.merge(&Metrics::new());
+        assert_eq!(a, snapshot);
+    }
+
+    #[test]
+    fn elastic_counters_merge_and_serialize() {
+        let mut a = Metrics::new();
+        a.requests_stolen = 4;
+        a.shards_spawned = 2;
+        let mut b = Metrics::new();
+        b.requests_stolen = 3;
+        b.shards_retired = 1;
+        a.merge(&b);
+        assert_eq!(a.requests_stolen, 7);
+        assert_eq!(a.shards_spawned, 2);
+        assert_eq!(a.shards_retired, 1);
+        let j = a.to_json();
+        assert_eq!(j.req_f64("requests_stolen").unwrap(), 7.0);
+        assert_eq!(j.req_f64("shards_spawned").unwrap(), 2.0);
+        assert_eq!(j.req_f64("shards_retired").unwrap(), 1.0);
+        let r = a.report("elastic");
+        assert!(r.contains("7 stolen"));
+        assert!(r.contains("2 shards spawned"));
+        // A static run prints no elastic line at all.
+        assert!(!Metrics::new().report("static").contains("elastic:"));
         let snapshot = a.clone();
         a.merge(&Metrics::new());
         assert_eq!(a, snapshot);

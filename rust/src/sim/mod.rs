@@ -12,12 +12,12 @@
 //! (overlapped) T_C and download during T_D. Completion within τ_i counts
 //! toward throughput — the paper's headline metric.
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, ClusterTopology};
 use crate::coordinator::{Deployment, EpochParams, PartitionPolicy, Scheduler, SchedulerConfig};
 use crate::driver::{
     run_epochs, AnalyticBackend, BatchingMode, ChaosBackend, ChaosConfig, ContinuousBackend,
-    DriverPolicy, EpochDriver, ExecutionBackend, InstanceTemplate, SPadPolicy, ShardedConfig,
-    ShardedDriver, SimClock, StalePolicy,
+    DriverBuilder, DriverPolicy, ElasticPolicy, EpochDriver, ExecutionBackend, InstanceTemplate,
+    SPadPolicy, ShardedDriver, SimClock, StalePolicy,
 };
 use crate::metrics::Metrics;
 use crate::model::{CostModel, LlmSpec};
@@ -56,6 +56,18 @@ pub struct SimConfig {
     /// (`[cluster] partition_policy`, CLI `--partition`). Ignored at
     /// `shards = 1`.
     pub partition: PartitionPolicy,
+    /// Explicit heterogeneous shard layout (`[[cluster.shard]]` TOML
+    /// tables). `None` — the common case — expands the `shards` shim into
+    /// `shards` near-equal slices of `cluster`
+    /// ([`ClusterTopology::homogeneous`]); `Some` overrides both `cluster`
+    /// and `shards` for the sharded paths, giving each shard its own GPU
+    /// model and pool size.
+    pub topology: Option<ClusterTopology>,
+    /// Elastic behaviour for the sharded paths (`[elastic]` TOML,
+    /// `--steal`/`--autoscale` CLI): cross-shard work stealing, shard
+    /// autoscaling and epoch-duration tuning. All off by default, which is
+    /// what keeps fixed-shard runs bit-identical to earlier revisions.
+    pub elastic: ElasticPolicy,
     /// Deterministic fault injection (`[chaos]` TOML, `--chaos-*` CLI).
     /// Disabled by default; when any fault probability is non-zero the CLI
     /// routes the run through [`run_chaos`] — the supervised sharded driver
@@ -83,8 +95,31 @@ impl SimConfig {
             scheduler: SchedulerConfig::default(),
             shards: 1,
             partition: PartitionPolicy::LoadProportional,
+            topology: None,
+            elastic: ElasticPolicy::default(),
             chaos: ChaosConfig::default(),
         }
+    }
+
+    /// The number of shards the sharded paths start with: the explicit
+    /// topology's entry count when one is given, else the `shards` shim
+    /// (floored at 1). Autoscaling may move the *live* count afterwards.
+    pub fn shard_count(&self) -> usize {
+        match &self.topology {
+            Some(t) => t.shard_count(),
+            None => self.shards.max(1),
+        }
+    }
+
+    /// Does this scenario need the sharded dispatch layer? More than one
+    /// shard, an explicit topology, or any elastic behaviour (stealing and
+    /// autoscaling only exist across shards; tuning rides the same path).
+    pub fn wants_sharded(&self) -> bool {
+        self.shard_count() > 1
+            || self.topology.is_some()
+            || self.elastic.stealing
+            || self.elastic.autoscale.is_some()
+            || self.elastic.tune_epoch.is_some()
     }
 }
 
@@ -206,61 +241,67 @@ pub fn run_continuous(config: &SimConfig, scheduler: &mut dyn Scheduler) -> Metr
 
 /// The shard layout a scenario maps to: one deployment per shard, all
 /// hosting the scenario's (model, quant) pair — pure data-parallel
-/// scale-out of the paper's single deployment. (Heterogeneous multi-model
-/// layouts construct [`ShardedDriver`] directly; see
-/// `tests/sharded_e2e.rs`.)
-fn sharded_config_for(config: &SimConfig, shards: usize) -> ShardedConfig {
-    ShardedConfig {
-        deployments: (0..shards)
-            .map(|_| Deployment {
-                model: config.model.clone(),
-                quant: config.quant.clone(),
-            })
-            .collect(),
-        cluster: config.cluster.clone(),
-        partition: config.partition,
-        policy: DriverPolicy {
+/// scale-out of the paper's single deployment over either the homogeneous
+/// `shards` shim or the scenario's explicit [`ClusterTopology`].
+/// (Heterogeneous multi-*model* layouts construct [`DriverBuilder`]
+/// directly; see `tests/sharded_e2e.rs`.)
+fn sharded_builder_for(config: &SimConfig) -> DriverBuilder {
+    let shards = config.shard_count();
+    let deployments = (0..shards)
+        .map(|_| Deployment {
+            model: config.model.clone(),
+            quant: config.quant.clone(),
+        })
+        .collect();
+    let topology = match &config.topology {
+        Some(t) => t.clone(),
+        None => ClusterTopology::homogeneous(config.cluster.clone(), shards),
+    };
+    DriverBuilder::new(deployments, topology)
+        .partition(config.partition)
+        .policy(DriverPolicy {
             stale: StalePolicy::BestCaseInfeasible,
             s_pad: match config.s_pad {
                 Some(s) => SPadPolicy::Fixed(s),
                 None => SPadPolicy::LongestQueued { fallback: 512 },
             },
             allocation: AllocationPolicy::MinOnly,
-        },
-        epoch: config.epoch.clone(),
-        radio: config.radio.clone(),
-        channel: config.channel.clone(),
+        })
+        .epoch(config.epoch.clone())
+        .radio(config.radio.clone())
+        .channel(config.channel.clone())
         // The same stream `driver_for` seeds: shard 0 inherits it verbatim,
         // which is what makes `shards = 1` bit-identical to `run`.
-        seed: config.seed ^ 0xC0FFEE,
-    }
+        .seed(config.seed ^ 0xC0FFEE)
+        .elastic(config.elastic.clone())
 }
 
-/// Run one scenario through the sharded dispatch layer (`config.shards`
-/// partitions, `config.partition` policy), one fresh scheduler per shard
-/// from `make_scheduler`. Intake mirrors [`run`] exactly — same seeded
-/// workload, same per-mode aggregation rule — and requests carry a
-/// deployment affinity of `id % shards` (deployments are identical here, so
-/// routing balances by queue depth regardless). With `shards = 1` the
-/// result is bit-identical to [`run`] (`tests/sharded_e2e.rs` pins this;
-/// `tests/proptest_sharded.rs` fuzzes it).
+/// Run one scenario through the sharded dispatch layer
+/// ([`SimConfig::shard_count`] partitions, `config.partition` policy,
+/// `config.elastic` behaviours), one fresh scheduler per shard from
+/// `make_scheduler`. Intake mirrors [`run`] exactly — same seeded workload,
+/// same per-mode aggregation rule — and requests carry a deployment affinity
+/// of `id % shards` (deployments are identical here, so routing balances by
+/// queue depth regardless). With `shards = 1` the result is bit-identical to
+/// [`run`] (`tests/sharded_e2e.rs` pins this; `tests/proptest_sharded.rs`
+/// fuzzes it). Construction goes through [`DriverBuilder`], so the factory
+/// takes `'static` ownership (the autoscaler keeps it for spawns).
 pub fn run_sharded(
     config: &SimConfig,
-    mut make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send>,
+    make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
 ) -> Metrics {
-    let shards = config.shards.max(1);
-    let scfg = sharded_config_for(config, shards);
+    let builder = sharded_builder_for(config);
     match config.batching {
         BatchingMode::Epoch => {
-            let mut sd: ShardedDriver<(), AnalyticBackend> =
-                ShardedDriver::new(scfg, |_| AnalyticBackend, &mut make_scheduler)
-                    .expect("shards <= GPUs (validated by the scenario loader)");
+            let mut sd: ShardedDriver<(), AnalyticBackend> = builder
+                .build(|_| AnalyticBackend, make_scheduler)
+                .expect("shards <= GPUs (validated by the scenario loader)");
             drive_sharded_epoch_mode(config, &mut sd)
         }
         BatchingMode::Continuous => {
-            let mut sd: ShardedDriver<(), ContinuousBackend> =
-                ShardedDriver::new(scfg, ContinuousBackend::new, &mut make_scheduler)
-                    .expect("shards <= GPUs (validated by the scenario loader)");
+            let mut sd: ShardedDriver<(), ContinuousBackend> = builder
+                .build(ContinuousBackend::new, make_scheduler)
+                .expect("shards <= GPUs (validated by the scenario loader)");
             drive_sharded_continuous(config, &mut sd)
         }
     }
@@ -281,15 +322,13 @@ pub fn run_chaos(
     config: &SimConfig,
     make_scheduler: impl FnMut(usize) -> Box<dyn Scheduler + Send> + 'static,
 ) -> Metrics {
-    let shards = config.shards.max(1);
-    let scfg = sharded_config_for(config, shards);
+    let builder = sharded_builder_for(config);
     let chaos = config.chaos;
     match config.batching {
         BatchingMode::Epoch => {
-            let mut sd: ShardedDriver<(), ChaosBackend<AnalyticBackend>> =
-                ShardedDriver::with_supervision(
-                    scfg,
-                    move |_t, shard, generation| {
+            let mut sd: ShardedDriver<(), ChaosBackend<AnalyticBackend>> = builder
+                .build_supervised(
+                    move |_t: &InstanceTemplate, shard, generation| {
                         ChaosBackend::new(AnalyticBackend, chaos, shard as u64, generation)
                     },
                     make_scheduler,
@@ -298,10 +337,9 @@ pub fn run_chaos(
             drive_sharded_epoch_mode(config, &mut sd)
         }
         BatchingMode::Continuous => {
-            let mut sd: ShardedDriver<(), ChaosBackend<ContinuousBackend>> =
-                ShardedDriver::with_supervision(
-                    scfg,
-                    move |t, shard, generation| {
+            let mut sd: ShardedDriver<(), ChaosBackend<ContinuousBackend>> = builder
+                .build_supervised(
+                    move |t: &InstanceTemplate, shard, generation| {
                         ChaosBackend::new(ContinuousBackend::new(t), chaos, shard as u64, generation)
                     },
                     make_scheduler,
@@ -320,29 +358,53 @@ fn drive_sharded_epoch_mode<B>(config: &SimConfig, sd: &mut ShardedDriver<(), B>
 where
     B: ExecutionBackend<Payload = ()> + Send,
 {
-    let shards = config.shards.max(1);
+    let shards = config.shard_count();
     let duration = config.epoch.duration;
+    // With the epoch tuner armed, boundaries follow the tuner's per-epoch
+    // durations (read back from the driver each tick). Without it, keep the
+    // exact `e * duration` arithmetic of earlier revisions — accumulation
+    // rounds differently for non-dyadic durations, and the fixed-count
+    // parity contract is bit-level.
+    let tuned = config.elastic.tune_epoch.is_some();
     let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
     let affinity = |id: u64| (id % shards as u64) as usize;
     // Fig. 2 aggregation: epoch e's window is offered at e+1.
     let mut window_start = 0.0;
+    let mut now = 0.0;
     for e in 0..config.epochs as u64 {
-        let now = e as f64 * duration;
+        if !tuned {
+            now = e as f64 * duration;
+        }
         for r in gen.arrivals_between(window_start, now) {
             let aff = affinity(r.id);
             sd.offer(r, (), aff);
         }
         window_start = now;
+        // The duration governing this epoch: the tuner adjusts at the *end*
+        // of a step, so read before stepping.
+        let d = if tuned { sd.epoch_duration() } else { duration };
         sd.step_epoch(now);
+        now += d;
     }
     if config.epochs > 0 {
-        let last_boundary = (config.epochs - 1) as f64 * duration;
-        for r in gen.arrivals_between(window_start, last_boundary + duration) {
+        // Untuned, this is `last_boundary + duration` — the exact expression
+        // (and rounding) the unsharded path uses, not `epochs * duration`.
+        let window_end = if tuned {
+            now
+        } else {
+            (config.epochs - 1) as f64 * duration + duration
+        };
+        for r in gen.arrivals_between(window_start, window_end) {
             let aff = affinity(r.id);
             sd.offer(r, (), aff);
         }
     }
-    sd.finish(config.epochs as f64 * duration);
+    let horizon = if tuned {
+        now
+    } else {
+        config.epochs as f64 * duration
+    };
+    sd.finish(horizon);
     sd.merged_metrics()
 }
 
@@ -353,19 +415,32 @@ fn drive_sharded_continuous<B>(config: &SimConfig, sd: &mut ShardedDriver<(), B>
 where
     B: ExecutionBackend<Payload = ()> + Send,
 {
-    let shards = config.shards.max(1);
+    let shards = config.shard_count();
     let duration = config.epoch.duration;
+    // See drive_sharded_epoch_mode: tuner-driven boundaries accumulate, the
+    // fixed schedule keeps the historical `e * duration` arithmetic.
+    let tuned = config.elastic.tune_epoch.is_some();
     let mut gen = WorkloadGenerator::new(config.workload.clone(), config.seed);
     let affinity = |id: u64| (id % shards as u64) as usize;
+    let mut now = 0.0;
     for e in 0..config.epochs as u64 {
-        let now = e as f64 * duration;
-        for r in gen.arrivals_between(now, now + duration) {
+        if !tuned {
+            now = e as f64 * duration;
+        }
+        let d = if tuned { sd.epoch_duration() } else { duration };
+        for r in gen.arrivals_between(now, now + d) {
             let aff = affinity(r.id);
             sd.offer(r, (), aff);
         }
         sd.step_epoch(now);
+        now += d;
     }
-    sd.finish(config.epochs as f64 * duration);
+    let horizon = if tuned {
+        now
+    } else {
+        config.epochs as f64 * duration
+    };
+    sd.finish(horizon);
     sd.merged_metrics()
 }
 

@@ -4,18 +4,18 @@
 //! controls the case count (CI pins it to 64); failures report the
 //! offending seed for replay.
 
-use edgellm::cluster::ClusterSpec;
-use edgellm::coordinator::{Deployment, Dftsp, EpochParams, PartitionPolicy};
+use edgellm::cluster::{ClusterSpec, ClusterTopology, GpuSpec, ShardSpec};
+use edgellm::coordinator::{Deployment, Dftsp, PartitionPolicy, Schedule};
 use edgellm::driver::{
-    AnalyticBackend, BatchingMode, DriverPolicy, SPadPolicy, ShardedConfig, ShardedDriver,
-    StalePolicy,
+    AnalyticBackend, BatchingMode, DriverBuilder, EpochContext, ExecutionBackend, QueuedRequest,
+    ShardedDriver,
 };
+use edgellm::metrics::Metrics;
 use edgellm::model::LlmSpec;
 use edgellm::quant;
-use edgellm::request::RequestBuilder;
+use edgellm::request::{Request, RequestBuilder};
 use edgellm::sim::{self, SimConfig};
 use edgellm::util::rng::Rng;
-use edgellm::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 use edgellm::workload::WorkloadParams;
 
 fn cases(default: u64) -> u64 {
@@ -44,26 +44,18 @@ fn prop_sharded_conservation_and_exact_merge() {
         let mut rng = Rng::new(0x5AA_2D + seed);
         let shards = rng.int_range(1, 4) as usize;
         let total_gpus = rng.int_range(shards as u64, 24) as usize;
-        let cfg = ShardedConfig {
-            deployments: (0..shards).map(|_| random_deployment(&mut rng)).collect(),
-            cluster: ClusterSpec::new(ClusterSpec::paper_default().gpu, total_gpus),
-            partition: if rng.below(2) == 0 {
-                PartitionPolicy::Equal
-            } else {
-                PartitionPolicy::LoadProportional
-            },
-            policy: DriverPolicy {
-                stale: StalePolicy::BestCaseInfeasible,
-                s_pad: SPadPolicy::LongestQueued { fallback: 512 },
-                allocation: AllocationPolicy::MinOnly,
-            },
-            epoch: EpochParams::default(),
-            radio: RadioParams::default(),
-            channel: ChannelParams::default(),
-            seed,
-        };
-        let mut sd: ShardedDriver<(), AnalyticBackend> =
-            ShardedDriver::new(cfg, |_| AnalyticBackend, |_| Box::new(Dftsp::new())).unwrap();
+        let mut sd: ShardedDriver<(), AnalyticBackend> = DriverBuilder::homogeneous(
+            (0..shards).map(|_| random_deployment(&mut rng)).collect(),
+            ClusterSpec::new(ClusterSpec::paper_default().gpu, total_gpus),
+        )
+        .partition(if rng.below(2) == 0 {
+            PartitionPolicy::Equal
+        } else {
+            PartitionPolicy::LoadProportional
+        })
+        .seed(seed)
+        .build(|_| AnalyticBackend, |_| Box::new(Dftsp::new()))
+        .unwrap();
         let mut b = RequestBuilder::new();
         let epochs = rng.int_range(2, 5);
         let levels = [128u32, 256, 512];
@@ -179,5 +171,334 @@ fn prop_one_shard_parity_with_unsharded_driver() {
             "seed {seed} ({:?}): one-shard dispatch must be bit-identical",
             cfg.batching
         );
+    }
+}
+
+/// A random fleet of same-deployment replicas on mixed silicon: full-speed
+/// TX2s next to quarter-speed ones, random per-shard GPU counts. The spec
+/// mix is what makes stealing reachable (distinct [`GpuSpec`]s are separate
+/// migration groups, so LoadProportional alone cannot rebalance them).
+fn random_mixed_topology(rng: &mut Rng, shards: usize) -> ClusterTopology {
+    let fast = GpuSpec::jetson_tx2();
+    let slow = GpuSpec {
+        name: "jetson-tx2-underclocked".into(),
+        flops: fast.flops / 4.0,
+        mem_bytes: fast.mem_bytes,
+    };
+    ClusterTopology {
+        shards: (0..shards)
+            .map(|_| ShardSpec {
+                gpu: if rng.below(2) == 0 {
+                    fast.clone()
+                } else {
+                    slow.clone()
+                },
+                num_gpus: rng.int_range(1, 8) as usize,
+            })
+            .collect(),
+    }
+}
+
+/// Group id per shard (first shard with an equal spec), and the per-group
+/// GPU sums of a partition — the pool-conservation invariant GPUs must
+/// never cross.
+fn group_sums(specs: &[GpuSpec], partition: &[usize]) -> Vec<usize> {
+    let mut sums = vec![0usize; specs.len()];
+    for (i, spec) in specs.iter().enumerate() {
+        let g = specs.iter().position(|s| s == spec).unwrap();
+        sums[g] += partition[i];
+    }
+    sums
+}
+
+/// Drive a sharded driver through a random trace (shared by the stealing
+/// and gating properties so gated-vs-plain runs see identical offers).
+fn drive_random<B>(sd: &mut ShardedDriver<(), B>, seed: u64) -> Metrics
+where
+    B: ExecutionBackend<Payload = ()> + Send,
+{
+    let mut rng = Rng::new(0xD21_7E + seed);
+    let shards = sd.shard_count();
+    let mut b = RequestBuilder::new();
+    let epochs = rng.int_range(2, 6);
+    let levels = [128u32, 256, 512];
+    for e in 0..epochs {
+        let now = e as f64 * 2.0;
+        for _ in 0..rng.int_range(0, 10) {
+            let req = b.build(
+                now,
+                levels[rng.below(3) as usize],
+                levels[rng.below(3) as usize],
+                rng.uniform(0.5, 3.0),
+                0.05,
+            );
+            sd.offer(req, (), rng.below(shards as u64) as usize);
+        }
+        sd.step_epoch(now);
+    }
+    sd.finish(epochs as f64 * 2.0);
+    sd.merged_metrics()
+}
+
+/// PROPERTY: with work stealing ON over random heterogeneous fleets, every
+/// conservation law the elastic-off layer obeys still holds — Σ per-shard
+/// offered equals the offer count (`offered` travels with a stolen
+/// request), the merge stays bit-exact counter by counter, request
+/// accounting closes, and GPUs never cross migration groups. Stealing must
+/// also actually fire somewhere in the sweep (non-vacuity).
+#[test]
+fn prop_stealing_preserves_conservation_and_exact_merge() {
+    let mut total_stolen = 0u64;
+    let n = cases(64);
+    for seed in 0..n {
+        let mut rng = Rng::new(0x57EA_1 + seed);
+        let shards = rng.int_range(2, 4) as usize;
+        let deployment = Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        };
+        let mut sd: ShardedDriver<(), AnalyticBackend> = DriverBuilder::new(
+            vec![deployment; shards],
+            random_mixed_topology(&mut rng, shards),
+        )
+        .seed(seed)
+        .stealing(true)
+        .build(|_| AnalyticBackend, |_| Box::new(Dftsp::new()))
+        .unwrap();
+        let specs = sd.gpu_specs().to_vec();
+        let pools = group_sums(&specs, sd.partition());
+
+        let mut b = RequestBuilder::new();
+        let epochs = rng.int_range(2, 6);
+        let mut offered = 0u64;
+        for e in 0..epochs {
+            let now = e as f64 * 2.0;
+            // Heavy same-size requests all aimed at shard 0: queue-depth
+            // routing splits them by count, so the slow shards back up and
+            // the fast ones have something worth stealing.
+            for _ in 0..rng.int_range(0, 12) {
+                sd.offer(b.build(now, 256, 256, rng.uniform(0.5, 3.0), 0.05), (), 0);
+                offered += 1;
+            }
+            sd.step_epoch(now);
+            assert!(
+                sd.partition().iter().all(|&g| g >= 1),
+                "seed {seed}: min-1 GPU per shard"
+            );
+            assert_eq!(
+                group_sums(&specs, sd.partition()),
+                pools,
+                "seed {seed}: stealing moves requests, never GPUs — group \
+                 pools are invariant"
+            );
+        }
+        sd.finish(epochs as f64 * 2.0);
+
+        let per_shard: Vec<_> = (0..shards).map(|i| sd.shard_metrics(i).clone()).collect();
+        assert_eq!(
+            per_shard.iter().map(|m| m.offered).sum::<u64>(),
+            offered,
+            "seed {seed}: `offered` travels with stolen requests — the \
+             per-shard sum still closes"
+        );
+        let merged = sd.merged_metrics();
+        assert_eq!(
+            merged.offered,
+            per_shard.iter().map(|m| m.offered).sum::<u64>(),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.requests_stolen,
+            per_shard.iter().map(|m| m.requests_stolen).sum::<u64>(),
+            "seed {seed}"
+        );
+        assert_eq!(
+            merged.offered,
+            merged.completed_in_deadline + merged.completed_late + merged.dropped,
+            "seed {seed}: accounting closes with stealing on"
+        );
+        total_stolen += merged.requests_stolen;
+    }
+    if n >= 16 {
+        assert!(
+            total_stolen > 0,
+            "the sweep never exercised a steal — the property is vacuous"
+        );
+    }
+}
+
+/// Analytic execution behind a permanently closed admission gate: the
+/// thief-side KV check must veto every steal.
+struct Gated(AnalyticBackend);
+
+impl ExecutionBackend for Gated {
+    type Payload = ();
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        schedule: &Schedule,
+        batch: Vec<QueuedRequest<()>>,
+        metrics: &mut Metrics,
+    ) {
+        self.0.execute(ctx, schedule, batch, metrics);
+    }
+    fn can_admit(&self, _req: &Request) -> bool {
+        false
+    }
+}
+
+/// PROPERTY: a fleet whose every backend refuses admission behaves — bit
+/// for bit — as if stealing were off: the KV gate is an absolute veto, not
+/// a heuristic. Checked across random heterogeneous fleets and traces.
+#[test]
+fn prop_closed_kv_gates_make_stealing_a_no_op() {
+    for seed in 0..cases(64).min(32) {
+        let mut rng = Rng::new(0x6A7E + seed);
+        let shards = rng.int_range(2, 4) as usize;
+        let topology = random_mixed_topology(&mut rng, shards);
+        let deployment = Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        };
+        let mut gated: ShardedDriver<(), Gated> =
+            DriverBuilder::new(vec![deployment.clone(); shards], topology.clone())
+                .seed(seed)
+                .stealing(true)
+                .build(|_| Gated(AnalyticBackend), |_| Box::new(Dftsp::new()))
+                .unwrap();
+        let with_gate = drive_random(&mut gated, seed);
+        let mut plain: ShardedDriver<(), AnalyticBackend> =
+            DriverBuilder::new(vec![deployment; shards], topology)
+                .seed(seed)
+                .build(|_| AnalyticBackend, |_| Box::new(Dftsp::new()))
+                .unwrap();
+        let without_stealing = drive_random(&mut plain, seed);
+        assert_eq!(with_gate.requests_stolen, 0, "seed {seed}: gate held");
+        assert_eq!(
+            with_gate, without_stealing,
+            "seed {seed}: stealing against closed gates must be bit-identical \
+             to stealing off"
+        );
+    }
+}
+
+/// Analytic execution that pins a fixed number of GPUs in flight — the
+/// integration-level stand-in for the continuous backend's KV floor.
+struct Floored {
+    inner: AnalyticBackend,
+    floor: usize,
+}
+
+impl ExecutionBackend for Floored {
+    type Payload = ();
+    fn execute(
+        &mut self,
+        ctx: &EpochContext<'_>,
+        schedule: &Schedule,
+        batch: Vec<QueuedRequest<()>>,
+        metrics: &mut Metrics,
+    ) {
+        self.inner.execute(ctx, schedule, batch, metrics);
+    }
+    fn min_gpus_for_inflight(&self) -> usize {
+        self.floor
+    }
+}
+
+/// PROPERTY: heterogeneous re-partitioning honors the backends' in-flight
+/// memory floors — however skewed the demand, no shard's partition drops
+/// below what its backend reports resident, GPUs stay inside their
+/// migration groups, and the pool total is conserved.
+#[test]
+fn prop_heterogeneous_partition_respects_memory_floors() {
+    for seed in 0..cases(64).min(32) {
+        let mut rng = Rng::new(0xF100_12 + seed);
+        let shards = rng.int_range(2, 4) as usize;
+        let floor = rng.int_range(1, 3) as usize;
+        // Every shard brings at least `floor` GPUs, so the floors are
+        // jointly satisfiable within every migration group.
+        let mut topology = random_mixed_topology(&mut rng, shards);
+        for s in &mut topology.shards {
+            s.num_gpus = rng.int_range(floor as u64, floor as u64 + 4) as usize;
+        }
+        let deployment = Deployment {
+            model: LlmSpec::bloom_3b(),
+            quant: quant::default_quant(),
+        };
+        let mut sd: ShardedDriver<(), Floored> =
+            DriverBuilder::new(vec![deployment; shards], topology)
+                .partition(PartitionPolicy::LoadProportional)
+                .seed(seed)
+                .build(
+                    move |_| Floored {
+                        inner: AnalyticBackend,
+                        floor,
+                    },
+                    |_| Box::new(Dftsp::new()),
+                )
+                .unwrap();
+        let specs = sd.gpu_specs().to_vec();
+        let pools = group_sums(&specs, sd.partition());
+        let mut b = RequestBuilder::new();
+        let epochs = rng.int_range(2, 6);
+        for e in 0..epochs {
+            let now = e as f64 * 2.0;
+            // All demand on one random shard: maximal pressure to strip
+            // the idle shards below their floors.
+            let hot = rng.below(shards as u64) as usize;
+            for _ in 0..rng.int_range(0, 20) {
+                sd.offer(b.build(now, 256, 256, rng.uniform(0.5, 3.0), 0.05), (), hot);
+            }
+            sd.step_epoch(now);
+            assert!(
+                sd.partition().iter().all(|&g| g >= floor),
+                "seed {seed}: partition {:?} dropped below the in-flight \
+                 floor {floor}",
+                sd.partition()
+            );
+            assert_eq!(
+                group_sums(&specs, sd.partition()),
+                pools,
+                "seed {seed}: GPUs never cross migration groups"
+            );
+        }
+        sd.finish(epochs as f64 * 2.0);
+        let m = sd.merged_metrics();
+        assert_eq!(
+            m.offered,
+            m.completed_in_deadline + m.completed_late + m.dropped,
+            "seed {seed}: accounting closes under floored re-partitioning"
+        );
+    }
+}
+
+/// PROPERTY: with every elastic behaviour off (the default), fixed-count
+/// sharded runs are bit-identical run to run at any shard count and in
+/// both batching modes — the determinism contract the elastic issue pins.
+#[test]
+fn prop_elastic_off_fixed_count_is_deterministic() {
+    for seed in 0..cases(64).min(16) {
+        let mut rng = Rng::new(0xDE7_E12 + seed);
+        let cfg = SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: rng.uniform(5.0, 60.0),
+                ..Default::default()
+            },
+            epochs: rng.int_range(2, 6) as usize,
+            seed,
+            batching: if rng.below(2) == 0 {
+                BatchingMode::Epoch
+            } else {
+                BatchingMode::Continuous
+            },
+            shards: rng.int_range(1, 4) as usize,
+            ..SimConfig::paper_default()
+        };
+        let a = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        let b = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(a, b, "seed {seed} ({:?}, {} shards)", cfg.batching, cfg.shards);
+        assert_eq!(a.requests_stolen, 0, "seed {seed}: elastic-off never steals");
+        assert_eq!(a.shards_spawned, 0, "seed {seed}");
+        assert_eq!(a.shards_retired, 0, "seed {seed}");
     }
 }

@@ -1,5 +1,5 @@
 //! End-to-end tests of the sharded dispatch layer (acceptance criteria of
-//! the sharding issue):
+//! the sharding and elastic-sharding issues):
 //!
 //! 1. `shards = 1` through `sim::run_sharded` is **bit-identical** to the
 //!    unsharded `EpochDriver` path (`sim::run`) in both batching modes.
@@ -10,22 +10,32 @@
 //!    shard serves ~9/epoch on its Equal half-pool vs ~17/epoch on the
 //!    ~19-GPU load-proportional partition, while the light shard's
 //!    1 req/epoch is served either way — a ~1.8× merged margin.)
+//! 3. On a heterogeneous fast/slow replica pair (two migration groups, so
+//!    GPUs cannot migrate between them), cross-shard work stealing strictly
+//!    beats queue-depth routing + LoadProportional alone on merged
+//!    in-deadline completions.
+//! 4. On a diurnal (alternating heavy/light) trace, between-epoch shard
+//!    autoscaling lands within 10% of the best *static* shard count — no
+//!    hand-picked fleet size required.
+//! 5. With every elastic behaviour off, fixed-count runs stay bit-identical
+//!    run to run (the determinism contract the parity tests pin against the
+//!    unsharded driver).
 
-use edgellm::cluster::ClusterSpec;
+use edgellm::cluster::{ClusterSpec, ClusterTopology, GpuSpec, ShardSpec};
 use edgellm::coordinator::{
-    Deployment, Dftsp, EpochParams, PartitionPolicy, Scheduler, SchedulerConfig,
+    Deployment, Dftsp, PartitionPolicy, Scheduler, SchedulerConfig,
 };
-use edgellm::driver::{
-    AnalyticBackend, BatchingMode, DriverPolicy, SPadPolicy, ShardedConfig, ShardedDriver,
-    StalePolicy,
-};
+use edgellm::driver::{AnalyticBackend, AutoscalePolicy, BatchingMode, DriverBuilder, ShardedDriver};
 use edgellm::metrics::Metrics;
 use edgellm::model::LlmSpec;
 use edgellm::quant;
 use edgellm::request::RequestBuilder;
 use edgellm::sim::{self, SimConfig};
-use edgellm::wireless::{AllocationPolicy, ChannelParams, RadioParams};
 use edgellm::workload::WorkloadParams;
+
+fn sequential(_: usize) -> Box<dyn Scheduler + Send> {
+    Box::new(Dftsp::with_config(SchedulerConfig { workers: 0 }))
+}
 
 #[test]
 fn one_shard_is_bit_identical_to_the_unsharded_driver() {
@@ -57,8 +67,8 @@ fn one_shard_is_bit_identical_to_the_unsharded_driver() {
 /// pool on.
 fn skewed_run(policy: PartitionPolicy) -> Metrics {
     let epochs = 8u64;
-    let cfg = ShardedConfig {
-        deployments: vec![
+    let mut sd: ShardedDriver<(), AnalyticBackend> = DriverBuilder::homogeneous(
+        vec![
             Deployment {
                 model: LlmSpec::bloom_3b(),
                 quant: quant::default_quant(), // W8A16/GPTQ
@@ -68,23 +78,12 @@ fn skewed_run(policy: PartitionPolicy) -> Metrics {
                 quant: quant::by_label(quant::Precision::W4A16, quant::QuantAlgo::Gptq).unwrap(),
             },
         ],
-        cluster: ClusterSpec::paper_default(),
-        partition: policy,
-        policy: DriverPolicy {
-            stale: StalePolicy::BestCaseInfeasible,
-            s_pad: SPadPolicy::LongestQueued { fallback: 512 },
-            allocation: AllocationPolicy::MinOnly,
-        },
-        epoch: EpochParams::default(),
-        radio: RadioParams::default(),
-        channel: ChannelParams::default(),
-        seed: 4242,
-    };
-    let sequential = |_: usize| {
-        Box::new(Dftsp::with_config(SchedulerConfig { workers: 0 })) as Box<dyn Scheduler + Send>
-    };
-    let mut sd: ShardedDriver<(), AnalyticBackend> =
-        ShardedDriver::new(cfg, |_| AnalyticBackend, sequential).unwrap();
+        ClusterSpec::paper_default(),
+    )
+    .partition(policy)
+    .seed(4242)
+    .build(|_| AnalyticBackend, sequential)
+    .unwrap();
     let mut b = RequestBuilder::new();
     for e in 0..epochs {
         let now = e as f64 * 2.0;
@@ -134,4 +133,177 @@ fn load_proportional_strictly_beats_equal_on_skewed_trace() {
     // starvation even when 97% of the load lives elsewhere.
     assert!(equal.completed_in_deadline >= 8);
     assert!(load.completed_in_deadline >= 8);
+}
+
+/// Two replicas of the paper deployment on unequal silicon: 10 full-speed
+/// TX2s next to 10 8×-underclocked ones. Distinct [`GpuSpec`]s mean two
+/// single-member migration groups — LoadProportional cannot move GPUs
+/// between them, and queue-depth routing splits arrivals by *count*, so the
+/// slow replica accumulates a backlog the fast one could clear. Work
+/// stealing is the only cross-shard remedy.
+fn fast_slow_run(stealing: bool) -> Metrics {
+    let epochs = 10u64;
+    let fast = GpuSpec::jetson_tx2();
+    let slow = GpuSpec {
+        name: "jetson-tx2-underclocked".into(),
+        flops: fast.flops / 8.0,
+        mem_bytes: fast.mem_bytes,
+    };
+    let deployment = Deployment {
+        model: LlmSpec::bloom_3b(),
+        quant: quant::default_quant(),
+    };
+    let mut sd: ShardedDriver<(), AnalyticBackend> = DriverBuilder::new(
+        vec![deployment.clone(), deployment],
+        ClusterTopology {
+            shards: vec![
+                ShardSpec {
+                    gpu: fast,
+                    num_gpus: 10,
+                },
+                ShardSpec {
+                    gpu: slow,
+                    num_gpus: 10,
+                },
+            ],
+        },
+    )
+    .seed(4242)
+    .stealing(stealing)
+    .build(|_| AnalyticBackend, sequential)
+    .unwrap();
+    let mut b = RequestBuilder::new();
+    for e in 0..epochs {
+        let now = e as f64 * 2.0;
+        // 8 heavy requests per epoch, affinity alternating; the deployments
+        // are identical, so routing balances them by queue depth anyway.
+        for i in 0..8 {
+            sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), (i % 2) as usize);
+        }
+        sd.step_epoch(now);
+    }
+    sd.finish(epochs as f64 * 2.0);
+    let m = sd.merged_metrics();
+    assert_eq!(m.offered, epochs * 8);
+    assert_eq!(
+        m.offered,
+        m.completed_in_deadline + m.completed_late + m.dropped,
+        "stealing={stealing}: conservation through the dispatch layer"
+    );
+    assert_eq!(
+        m.requests_stolen == 0,
+        !stealing,
+        "stealing={stealing}: the steal pass ran iff enabled \
+         (stole {})",
+        m.requests_stolen
+    );
+    m
+}
+
+#[test]
+fn work_stealing_strictly_beats_routing_alone_on_a_heterogeneous_fleet() {
+    let routed = fast_slow_run(false);
+    let stolen = fast_slow_run(true);
+    assert!(
+        stolen.completed_in_deadline > routed.completed_in_deadline,
+        "stealing ({} in-deadline, {} stolen) must strictly beat queue-depth \
+         routing + LoadProportional alone ({} in-deadline) when replicas are \
+         heterogeneous",
+        stolen.completed_in_deadline,
+        stolen.requests_stolen,
+        routed.completed_in_deadline
+    );
+}
+
+/// Diurnal trace driven through a fleet of `k` static shards — or, with
+/// `autoscale`, a fleet that starts at one shard and sizes itself between
+/// epochs (bounds [1, 4], one spawn/retire per boundary, GPUs bootstrapped
+/// from the same homogeneous migration group).
+fn diurnal_run(k: usize, autoscale: bool) -> Metrics {
+    let epochs = 24u64;
+    let deployment = Deployment {
+        model: LlmSpec::bloom_3b(),
+        quant: quant::default_quant(),
+    };
+    let mut builder = DriverBuilder::homogeneous(
+        vec![deployment; k],
+        ClusterSpec::paper_default(),
+    )
+    .seed(7);
+    if autoscale {
+        builder = builder.autoscale(AutoscalePolicy::new(1, 4));
+    }
+    let mut sd: ShardedDriver<(), AnalyticBackend> =
+        builder.build(|_| AnalyticBackend, sequential).unwrap();
+    let mut b = RequestBuilder::new();
+    for e in 0..epochs {
+        let now = e as f64 * 2.0;
+        // Six-epoch day/night blocks: 30 heavy requests at peak, 2 at
+        // trough.
+        let arrivals: usize = if (e / 6) % 2 == 0 { 30 } else { 2 };
+        for i in 0..arrivals {
+            sd.offer(b.build(now, 256, 256, 1.9, 0.05), (), i % k.max(1));
+        }
+        sd.step_epoch(now);
+        assert_eq!(
+            sd.partition().iter().sum::<usize>(),
+            20,
+            "autoscaling conserves the GPU pool"
+        );
+    }
+    sd.finish(epochs as f64 * 2.0);
+    let m = sd.merged_metrics();
+    assert_eq!(
+        m.offered,
+        m.completed_in_deadline + m.completed_late + m.dropped,
+        "k={k} autoscale={autoscale}: conservation"
+    );
+    m
+}
+
+#[test]
+fn autoscaling_lands_within_ten_percent_of_the_best_static_fleet() {
+    let best_static = [1usize, 2, 4]
+        .into_iter()
+        .map(|k| diurnal_run(k, false).completed_in_deadline)
+        .max()
+        .unwrap();
+    let auto = diurnal_run(1, true);
+    assert!(
+        auto.completed_in_deadline as f64 >= 0.9 * best_static as f64,
+        "autoscaled fleet served {} in-deadline vs best static {} — more than \
+         10% behind (spawned {}, retired {})",
+        auto.completed_in_deadline,
+        best_static,
+        auto.shards_spawned,
+        auto.shards_retired
+    );
+    assert!(auto.offered > 0);
+}
+
+#[test]
+fn elastic_off_fixed_count_runs_are_bit_identical() {
+    // The determinism contract: with every elastic behaviour off (the
+    // default), repeated fixed-count runs through the full sim intake are
+    // bit-identical — chaining with the shards=1 parity test, this pins the
+    // whole tower sim == sharded == elastic-off sharded.
+    for batching in [BatchingMode::Epoch, BatchingMode::Continuous] {
+        let cfg = SimConfig {
+            workload: WorkloadParams {
+                arrival_rate: 40.0,
+                ..Default::default()
+            },
+            epochs: 10,
+            seed: 7,
+            batching,
+            shards: 3,
+            ..SimConfig::paper_default()
+        };
+        let a = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        let b = sim::run_sharded(&cfg, |_| Box::new(Dftsp::new()));
+        assert_eq!(a, b, "{batching:?}");
+        assert_eq!(a.requests_stolen, 0);
+        assert_eq!(a.shards_spawned, 0);
+        assert_eq!(a.shards_retired, 0);
+    }
 }
